@@ -1,0 +1,67 @@
+//! Fault recovery on real transfers (§IV-A, Table III in miniature).
+//!
+//! Injects bit flips into the wire path of a real loopback transfer and
+//! compares FIVER's file-level vs chunk-level recovery: both must deliver
+//! bit-identical files, but chunk-level resends only the corrupted chunks.
+//!
+//! ```bash
+//! cargo run --release --example fault_recovery
+//! ```
+
+use std::sync::Arc;
+
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::{hex_digest, HashAlgorithm};
+use fiver::storage::{FsStorage, Storage};
+use fiver::util::fmt::{bytes, Table};
+use fiver::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let ds = Dataset::uniform("fr", 32 << 20, 6); // 6 x 32 MiB
+    let base = std::env::temp_dir().join(format!("fiver-faultrec-{}", std::process::id()));
+    ds.materialize(&base.join("src"), 3)?;
+    let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
+    println!("dataset: {} files, {}\n", ds.len(), bytes(ds.total_bytes()));
+
+    let mut table = Table::new(&[
+        "faults", "algorithm", "failures detected", "bytes resent", "delivered intact",
+    ]);
+    for fault_count in [0usize, 4, 12] {
+        let plan = FaultPlan::random(&ds, fault_count, 0xBEEF + fault_count as u64);
+        for alg in [RealAlgorithm::Fiver, RealAlgorithm::FiverChunk, RealAlgorithm::BlockLevelPpl] {
+            let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src"))?);
+            let dst_dir = base.join(format!("dst-{}-{}", alg.name(), fault_count));
+            let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&dst_dir)?);
+            let mut cfg = SessionConfig::new(alg, native_factory(HashAlgorithm::Fvr256));
+            cfg.block_size = 4 << 20; // 4 MiB chunks: a flip costs one chunk
+            let (report, _) = run_local_transfer(&names, src, dst, &cfg, &plan)?;
+
+            // Ground truth: every delivered file must be bit-identical.
+            let mut intact = true;
+            for f in &ds.files {
+                let a = std::fs::read(base.join("src").join(&f.name))?;
+                let b = std::fs::read(dst_dir.join(&f.name))?;
+                intact &= hex_digest(HashAlgorithm::Sha256, &a)
+                    == hex_digest(HashAlgorithm::Sha256, &b);
+            }
+            table.row(&[
+                fault_count.to_string(),
+                alg.name().to_string(),
+                report.failures_detected.to_string(),
+                bytes(report.bytes_resent),
+                if intact { "yes".into() } else { "NO".to_string() },
+            ]);
+            std::fs::remove_dir_all(&dst_dir).ok();
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "paper Table III: file-level FIVER resends whole files (time nearly\n\
+         doubles at 24 faults); chunk-level and block-level resend only the\n\
+         corrupted chunk/block, staying nearly flat."
+    );
+    std::fs::remove_dir_all(&base).ok();
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Simulated reproduction of the paper's headline experiment: the 165.5 GB
+//! ESNet mixed dataset over the WAN path (89 ms RTT), all five algorithms.
+//!
+//! This is Figs 7b + 8 + 9 in one run: Eq. 1 overheads, receiver cache
+//! hit-ratio traces, and the FIVER-Hybrid trade-off, simulated in
+//! milliseconds of wall time by the fluid engine.
+//!
+//! ```bash
+//! cargo run --release --example mixed_dataset_sim
+//! ```
+
+use fiver::config::{AlgoParams, Testbed};
+use fiver::faults::FaultPlan;
+use fiver::sim::algorithms::{run, Algorithm};
+use fiver::util::fmt::{bytes, pct, secs, Table};
+use fiver::workload::Dataset;
+
+fn main() {
+    let tb = Testbed::esnet_wan();
+    let ds = Dataset::esnet_mixed(42);
+    println!(
+        "{} on {}: {} files, {} (bandwidth {}, RTT {:.0} ms, MD5 {})\n",
+        ds.name,
+        tb.name,
+        ds.len(),
+        bytes(ds.total_bytes()),
+        fiver::util::fmt::rate_bps(tb.bandwidth * 8.0),
+        tb.rtt * 1e3,
+        fiver::util::fmt::rate_bps(tb.src.hash_md5 * 8.0),
+    );
+
+    let mut t = Table::new(&[
+        "algorithm", "virtual time", "overhead", "avg hit ratio", "misses", "tcp restarts",
+    ]);
+    for alg in [
+        Algorithm::Sequential,
+        Algorithm::FileLevelPpl,
+        Algorithm::BlockLevelPpl,
+        Algorithm::Fiver,
+        Algorithm::FiverHybrid,
+    ] {
+        let s = run(tb, AlgoParams::default(), &ds, &FaultPlan::none(), alg);
+        t.row(&[
+            s.algorithm.clone(),
+            secs(s.total_time),
+            pct(s.overhead()),
+            pct(s.dst_trace.average()),
+            bytes(s.dst_trace.total_misses()),
+            s.tcp_restarts.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper (Figs 7b/8/9): FIVER <5% overhead and ~100% hit ratio; block-level\n\
+         ~20%; file-level/sequential ~60% with hit-ratio dips below 10% on the\n\
+         files larger than free memory; FIVER-Hybrid ~20% faster than sequential\n\
+         at the same cache behaviour."
+    );
+}

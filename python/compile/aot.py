@@ -1,0 +1,129 @@
+"""AOT compile path: lower the L2 chunk-digest graph to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never executes on the
+request path. Emits, per variant in model.VARIANTS:
+
+    artifacts/fvr_hash_<name>.hlo.txt        Pallas-kernel pipeline
+    artifacts/fvr_hash_<name>_ref.hlo.txt    pure-jnp reference pipeline
+    artifacts/manifest.json                  geometry + calling convention
+    artifacts/test_vectors.json              cross-language vectors for Rust
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects with ``proto.id() <= INT_MAX``.
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import PyFvr256, fvr256_hex
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit_variant(out_dir: str, variant: model.Variant) -> dict:
+    entry = {
+        "name": variant.name,
+        "num_blocks": variant.num_blocks,
+        "words_per_block": variant.words_per_block,
+        "chunk_bytes": variant.chunk_bytes,
+        "params": ["u32[chunk_words]", "u32[1] length_bytes", "u32[1] chunk_index"],
+        "result": "tuple(u32[8])",
+    }
+    for use_pallas, suffix in ((True, ""), (False, "_ref")):
+        text = to_hlo_text(model.lower_variant(variant, use_pallas=use_pallas))
+        fname = f"fvr_hash_{variant.name}{suffix}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["artifact" if use_pallas else "artifact_ref"] = fname
+        print(f"  wrote {fname} ({len(text)} chars)")
+    return entry
+
+
+def emit_test_vectors(out_dir: str) -> None:
+    """Deterministic byte patterns -> FVR-256 digests, for the Rust port.
+
+    Patterns cover: empty, single byte, sub-word, exact word, exact block,
+    exact chunk, chunk+1, multi-chunk, and an LCG pseudo-random stream —
+    the boundary cases where a port most plausibly diverges.
+    """
+    def lcg_bytes(n: int, seed: int = 0x12345678) -> bytes:
+        out = bytearray()
+        s = seed
+        for _ in range(n):
+            s = (s * 1103515245 + 12345) & 0x7FFFFFFF
+            out.append(s & 0xFF)
+        return bytes(out)
+
+    geometries = [(16, 4096), (64, 4096)]
+    cases = []
+    for nb, wpb in geometries:
+        chunk_bytes = nb * wpb * 4
+        lengths = [0, 1, 3, 4, 64, wpb * 4, chunk_bytes,
+                   chunk_bytes + 1, chunk_bytes * 2 + 17]
+        for ln in lengths:
+            for pattern, data in (("zeros", bytes(ln)),
+                                  ("lcg", lcg_bytes(ln))):
+                cases.append({
+                    "num_blocks": nb,
+                    "words_per_block": wpb,
+                    "pattern": pattern,
+                    "length": ln,
+                    "hex": fvr256_hex(data, nb, wpb),
+                })
+    # Also pin raw chunk digests (pre-chain) so runtime::FvrHasher's artifact
+    # output can be checked in isolation.
+    chunk_cases = []
+    for nb, wpb in geometries:
+        h = PyFvr256(nb, wpb)
+        for ln in (0, 5, wpb * 4, nb * wpb * 4):
+            data = lcg_bytes(ln, seed=ln + 1)
+            chunk_cases.append({
+                "num_blocks": nb,
+                "words_per_block": wpb,
+                "length": ln,
+                "chunk_index": 3,
+                "seed": ln + 1,
+                "digest_words": h.chunk_digest(data, 3),
+            })
+    with open(os.path.join(out_dir, "test_vectors.json"), "w") as f:
+        json.dump({"streams": cases, "chunks": chunk_cases}, f, indent=1)
+    print(f"  wrote test_vectors.json ({len(cases)} streams, {len(chunk_cases)} chunks)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--variants", default=",".join(model.VARIANTS),
+                    help="comma-separated variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "hash": "FVR-256", "variants": []}
+    for name in args.variants.split(","):
+        print(f"lowering variant {name} ...")
+        manifest["variants"].append(emit_variant(args.out_dir, model.VARIANTS[name]))
+    emit_test_vectors(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("  wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Layer-1 Pallas kernel: FVR-256 block-parallel hash.
+
+The paper's compute hot-spot is checksum computation (sequential MD5/SHA at
+~3 Gbps/core — slower than the 40/100 Gbps links it verifies). MD5's serial
+dependency chain has no TPU parallelism, so per DESIGN.md
+§Hardware-Adaptation we restructure the insight the paper cites from fsum
+[32]: split the stream into independent blocks, hash blocks in parallel
+lanes, and tree-combine the block digests.
+
+FVR-256 specification (normative — the Rust port in rust/src/hashes/fvr256.rs
+must match bit-for-bit; cross-language vectors live in
+artifacts/test_vectors.json):
+
+  * Words are u32, packed little-endian from the byte stream.
+  * A *block* is W words (default W=4096, i.e. 16 KiB).
+  * A *chunk* is B blocks, hashed independently then tree-combined.
+  * State is 8 u32 words, initialised to IV (the SHA-256 IV constants).
+  * absorb8(state, m): the one round function, used everywhere —
+        s  = (state + C0) XOR rotl(m, 9)   (asymmetric in state vs message:
+                                            swapping siblings in the combine
+                                            tree must change the root; C0
+                                            also kills the all-zero fixed
+                                            point)
+        s  = s * M1                     (wrapping)
+        s  = rotl(s, 13)
+        s  = s + rotl(roll(s, -1), 7)   (lane diffusion; roll along the
+                                         8-lane axis, wrapping add)
+        s  = s * M2
+        s  = s XOR (s >> 16)
+    All element-wise over the 8 lanes -> maps directly onto the VPU.
+  * block_digest(block) = fold absorb8 over the W/8 groups of 8 words,
+    starting from IV.
+  * tree_combine(d[0..B]) = pairwise absorb8(d[2i], d[2i+1]) until one row
+    remains (B must be a power of two).
+  * chunk_digest = absorb8(root, [len_bytes, chunk_index, MAGIC_F, MAGIC_R,
+    B, W, 0, 0]) — the true (pre-padding) byte length and position bind the
+    digest to content, length and order.
+
+Pallas structure: grid over blocks; BlockSpec stages one (1, W) block per
+grid step into VMEM (16 KiB ≪ VMEM budget); the state vector lives in
+registers across a fori_loop over the W/8 groups. The IV is threaded in as a
+broadcast operand because Pallas kernels may not capture constants.
+interpret=True always — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated structurally in DESIGN.md §10.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# ARX constants: murmur3/xxhash-style odd multipliers (invertible mod 2^32)
+# and the SHA-256 IV for the initial state. Kept as numpy scalars so they
+# inline as jaxpr literals instead of captured constants (a Pallas
+# requirement).
+M1 = np.uint32(0x9E3779B1)
+M2 = np.uint32(0x85EBCA77)
+C0 = np.uint32(0x7F4A7C15)  # round constant: breaks zero fixed point + symmetry
+MAGIC_F = 0x46495645  # "FIVE"
+MAGIC_R = 0x52C3D2E1  # "R" + tail of SHA-1 h4
+
+IV = (
+    0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
+    0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19,
+)
+
+LANES = 8  # state width in u32 words
+
+
+def rotl(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Rotate-left each u32 lane by a static k."""
+    x = x.astype(jnp.uint32)
+    return (x << np.uint32(k)) | (x >> np.uint32(32 - k))
+
+
+def absorb8(state: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """The FVR-256 round function. state, m: (..., 8) u32 -> (..., 8) u32.
+
+    Element-wise over lanes except one neighbour-lane rotation (roll by -1
+    along the last axis) that diffuses across the state vector. Asymmetric
+    in (state, m) so sibling order in the combine tree is detectable.
+    """
+    s = (state.astype(jnp.uint32) + C0) ^ rotl(m, 9)
+    s = s * M1
+    s = rotl(s, 13)
+    s = s + rotl(jnp.roll(s, -1, axis=-1), 7)
+    s = s * M2
+    s = s ^ (s >> np.uint32(16))
+    return s
+
+
+def iv_vector() -> jnp.ndarray:
+    return jnp.array(IV, dtype=jnp.uint32)
+
+
+def _block_kernel(iv_ref, x_ref, o_ref, *, words_per_block: int):
+    """Pallas body: digest one (1, W) block staged into VMEM.
+
+    The W-word block is viewed as (W/8, 8) groups; a fori_loop folds absorb8
+    over groups with the 8-lane state carried in registers.
+    """
+    groups = words_per_block // LANES
+    block = x_ref[...].reshape(groups, LANES)
+
+    def body(i, state):
+        return absorb8(state, block[i])
+
+    state = jax.lax.fori_loop(0, groups, body, iv_ref[...].reshape(LANES))
+    o_ref[...] = state.reshape(1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("words_per_block",))
+def block_digests(chunk: jnp.ndarray, *, words_per_block: int = 4096) -> jnp.ndarray:
+    """Hash a (B, W) u32 chunk into (B, 8) u32 block digests via Pallas.
+
+    Grid = (B,): one grid step per block, one block resident in VMEM at a
+    time. The IV rides along as a (1, 8) operand mapped to every grid step.
+    interpret=True (see module docstring).
+    """
+    num_blocks, w = chunk.shape
+    if w != words_per_block:
+        raise ValueError(f"chunk width {w} != words_per_block {words_per_block}")
+    if w % LANES != 0:
+        raise ValueError(f"words_per_block {w} must be a multiple of {LANES}")
+    iv = iv_vector().reshape(1, LANES)
+    return pl.pallas_call(
+        functools.partial(_block_kernel, words_per_block=words_per_block),
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, words_per_block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, LANES), jnp.uint32),
+        interpret=True,
+    )(iv, chunk.astype(jnp.uint32))
+
+
+def tree_combine(digests: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise-reduce (B, 8) block digests to a single (8,) root digest.
+
+    B must be a power of two; the loop unrolls at trace time (log2 B levels,
+    each level fully data-parallel).
+    """
+    d = digests.astype(jnp.uint32)
+    b = d.shape[0]
+    if b & (b - 1):
+        raise ValueError(f"block count {b} must be a power of two")
+    while d.shape[0] > 1:
+        d = absorb8(d[0::2], d[1::2])
+    return d[0]
+
+
+def finalize_chunk(root: jnp.ndarray, length_bytes: jnp.ndarray,
+                   chunk_index: jnp.ndarray, num_blocks: int,
+                   words_per_block: int) -> jnp.ndarray:
+    """Bind the root digest to true byte length, chunk position and geometry."""
+    meta = jnp.stack([
+        jnp.asarray(length_bytes, jnp.uint32).reshape(()),
+        jnp.asarray(chunk_index, jnp.uint32).reshape(()),
+        jnp.uint32(MAGIC_F),
+        jnp.uint32(MAGIC_R),
+        jnp.uint32(num_blocks),
+        jnp.uint32(words_per_block),
+        jnp.uint32(0),
+        jnp.uint32(0),
+    ])
+    return absorb8(root, meta)

@@ -1,0 +1,148 @@
+"""Pure-jnp / pure-python oracle for FVR-256 — the CORE correctness signal.
+
+Two independent re-implementations of the spec in fvr_hash.py:
+
+  * ``block_digests_ref`` / ``chunk_digest_ref`` — pure jnp, no Pallas.
+    pytest asserts bit-identity against the Pallas kernel.
+  * ``PyFvr256`` — plain-python streaming implementation over ``bytes``
+    (no jax at all). Used to generate artifacts/test_vectors.json, which the
+    Rust port (rust/src/hashes/fvr256.rs) must reproduce bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax.numpy as jnp
+
+from .fvr_hash import (C0, IV, LANES, M1, M2, MAGIC_F, MAGIC_R, absorb8,
+                       finalize_chunk, iv_vector, tree_combine)
+
+MASK = 0xFFFFFFFF
+
+
+def block_digests_ref(chunk: jnp.ndarray, *, words_per_block: int = 4096) -> jnp.ndarray:
+    """(B, W) u32 -> (B, 8) u32 block digests, no Pallas.
+
+    Folds absorb8 over the (B, W/8, 8) group view with batched ops: every
+    block advances in lockstep, state shaped (B, 8).
+    """
+    num_blocks, w = chunk.shape
+    if w != words_per_block or w % LANES:
+        raise ValueError("bad chunk geometry")
+    groups = chunk.astype(jnp.uint32).reshape(num_blocks, w // LANES, LANES)
+    state = jnp.broadcast_to(iv_vector(), (num_blocks, LANES))
+    for g in range(w // LANES):
+        state = absorb8(state, groups[:, g, :])
+    return state
+
+
+def chunk_digest_ref(chunk: jnp.ndarray, length_bytes, chunk_index, *,
+                     words_per_block: int = 4096) -> jnp.ndarray:
+    """Full reference pipeline: block digests -> tree combine -> finalize."""
+    d = block_digests_ref(chunk, words_per_block=words_per_block)
+    root = tree_combine(d)
+    return finalize_chunk(root, jnp.uint32(length_bytes), jnp.uint32(chunk_index),
+                          chunk.shape[0], words_per_block)
+
+
+# ---------------------------------------------------------------------------
+# Plain-python streaming implementation (no jax) — the normative byte-level
+# behaviour the Rust port matches. Mirrors rust/src/hashes/fvr256.rs.
+# ---------------------------------------------------------------------------
+
+def _rotl(x: int, k: int) -> int:
+    x &= MASK
+    return ((x << k) | (x >> (32 - k))) & MASK
+
+
+def _absorb8(state: list[int], m: list[int]) -> list[int]:
+    s = [((a + int(C0)) & MASK) ^ _rotl(b, 9) for a, b in zip(state, m)]
+    s = [(x * int(M1)) & MASK for x in s]
+    s = [_rotl(x, 13) for x in s]
+    rolled = s[1:] + s[:1]  # roll(-1): lane i sees lane i+1
+    s = [(x + _rotl(r, 7)) & MASK for x, r in zip(s, rolled)]
+    s = [(x * int(M2)) & MASK for x in s]
+    s = [(x ^ (x >> 16)) & MASK for x in s]
+    return s
+
+
+class PyFvr256:
+    """Streaming FVR-256 over bytes: chunk -> blocks -> tree -> chain.
+
+    Chunking/chaining layout (mirrored by runtime::FvrHasher in Rust):
+      * the stream is cut into chunks of ``chunk_bytes`` (= B*W*4);
+      * a final partial chunk is zero-padded to full size, its digest
+        finalized with the *true* byte length;
+      * file digest = fold absorb8 over chunk digests starting from IV,
+        then absorb8 with [total_lo, total_hi, nchunks, MAGIC_F, MAGIC_R,
+        0, 0, 0].
+    """
+
+    def __init__(self, num_blocks: int = 64, words_per_block: int = 4096):
+        if num_blocks & (num_blocks - 1):
+            raise ValueError("num_blocks must be a power of two")
+        self.num_blocks = num_blocks
+        self.words_per_block = words_per_block
+        self.chunk_bytes = num_blocks * words_per_block * 4
+        self._buf = bytearray()
+        self._state = list(IV)
+        self._chunk_index = 0
+        self._total = 0
+
+    # -- chunk-level primitives (usable standalone for cross-checks) --------
+
+    def block_digest(self, words: list[int]) -> list[int]:
+        assert len(words) == self.words_per_block
+        state = list(IV)
+        for g in range(0, len(words), LANES):
+            state = _absorb8(state, words[g:g + LANES])
+        return state
+
+    def chunk_digest(self, data: bytes, chunk_index: int) -> list[int]:
+        """Digest one (possibly short) chunk. data is zero-padded to size."""
+        true_len = len(data)
+        assert true_len <= self.chunk_bytes
+        padded = data + b"\x00" * (self.chunk_bytes - true_len)
+        words = list(struct.unpack(f"<{len(padded) // 4}I", padded))
+        w = self.words_per_block
+        digests = [self.block_digest(words[i * w:(i + 1) * w])
+                   for i in range(self.num_blocks)]
+        while len(digests) > 1:
+            digests = [_absorb8(digests[i], digests[i + 1])
+                       for i in range(0, len(digests), 2)]
+        meta = [true_len & MASK, chunk_index & MASK, MAGIC_F, MAGIC_R,
+                self.num_blocks, self.words_per_block, 0, 0]
+        return _absorb8(digests[0], meta)
+
+    # -- streaming interface -------------------------------------------------
+
+    def update(self, data: bytes) -> None:
+        self._buf.extend(data)
+        self._total += len(data)
+        while len(self._buf) >= self.chunk_bytes:
+            chunk = bytes(self._buf[:self.chunk_bytes])
+            del self._buf[:self.chunk_bytes]
+            self._absorb_chunk(chunk)
+
+    def _absorb_chunk(self, chunk: bytes) -> None:
+        cd = self.chunk_digest(chunk, self._chunk_index)
+        self._state = _absorb8(self._state, cd)
+        self._chunk_index += 1
+
+    def digest_words(self) -> list[int]:
+        if self._buf:
+            self._absorb_chunk(bytes(self._buf))
+            self._buf.clear()
+        meta = [self._total & MASK, (self._total >> 32) & MASK,
+                self._chunk_index & MASK, MAGIC_F, MAGIC_R, 0, 0, 0]
+        return _absorb8(self._state, meta)
+
+    def hexdigest(self) -> str:
+        return "".join(f"{w:08x}" for w in self.digest_words())
+
+
+def fvr256_hex(data: bytes, num_blocks: int = 64, words_per_block: int = 4096) -> str:
+    h = PyFvr256(num_blocks, words_per_block)
+    h.update(data)
+    return h.hexdigest()

@@ -1,0 +1,82 @@
+"""Layer-2 JAX model: the FVR-256 chunk-digest compute graph.
+
+The paper's "model" is the integrity-verification compute path: a chunk of
+the byte stream in, a 256-bit digest out. The graph calls the Layer-1 Pallas
+kernel (block digests) and tree-combines + finalizes in plain jnp so the
+whole thing lowers into ONE fused HLO module per chunk-size variant.
+
+Variants (see VARIANTS) are fixed-shape: AOT lowering bakes (B, W) in, the
+Rust runtime picks the artifact matching its configured chunk size and zero-
+pads the final partial chunk (the true length is an input, so padding cannot
+collide).
+
+Inputs (per the artifact calling convention, relied on by rust/src/runtime):
+  param 0: u32[B*W]  chunk words, little-endian packed
+  param 1: u32[1]    true byte length of the chunk (pre-padding)
+  param 2: u32[1]    chunk index within the stream
+Output: 1-tuple of u32[8] (lowered with return_tuple=True).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fvr_hash
+from .kernels.fvr_hash import LANES
+
+
+@dataclass(frozen=True)
+class Variant:
+    """A fixed-geometry lowering of the chunk digest graph."""
+    name: str
+    num_blocks: int        # B — power of two
+    words_per_block: int   # W — multiple of 8
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.num_blocks * self.words_per_block * 4
+
+    @property
+    def chunk_words(self) -> int:
+        return self.num_blocks * self.words_per_block
+
+
+# 16 KiB blocks (one VMEM-resident block per grid step) at every size.
+VARIANTS = {
+    "256k": Variant("256k", num_blocks=16, words_per_block=4096),
+    "1m": Variant("1m", num_blocks=64, words_per_block=4096),
+    "4m": Variant("4m", num_blocks=256, words_per_block=4096),
+}
+
+
+def chunk_digest(chunk_words: jnp.ndarray, length_bytes: jnp.ndarray,
+                 chunk_index: jnp.ndarray, *, variant: Variant,
+                 use_pallas: bool = True):
+    """u32[B*W], u32[1], u32[1] -> (u32[8],): the full digest pipeline.
+
+    use_pallas=False swaps in the pure-jnp reference block hash — lowered as
+    a separate artifact (``*_ref``) for runtime A/B testing of the kernel.
+    """
+    v = variant
+    grid = chunk_words.astype(jnp.uint32).reshape(v.num_blocks, v.words_per_block)
+    if use_pallas:
+        digests = fvr_hash.block_digests(grid, words_per_block=v.words_per_block)
+    else:
+        from .kernels import ref
+        digests = ref.block_digests_ref(grid, words_per_block=v.words_per_block)
+    root = fvr_hash.tree_combine(digests)
+    final = fvr_hash.finalize_chunk(root, length_bytes[0], chunk_index[0],
+                                    v.num_blocks, v.words_per_block)
+    return (final,)
+
+
+def lower_variant(variant: Variant, *, use_pallas: bool = True):
+    """jax.jit().lower() the chunk digest graph at this variant's geometry."""
+    fn = functools.partial(chunk_digest, variant=variant, use_pallas=use_pallas)
+    chunk_spec = jax.ShapeDtypeStruct((variant.chunk_words,), jnp.uint32)
+    scalar_spec = jax.ShapeDtypeStruct((1,), jnp.uint32)
+    return jax.jit(fn).lower(chunk_spec, scalar_spec, scalar_spec)

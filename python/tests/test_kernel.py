@@ -1,0 +1,248 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle vs plain-python spec.
+
+The core signal of the whole stack: if these pass, the HLO artifacts the
+Rust runtime executes encode exactly the FVR-256 the Rust port computes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fvr_hash, ref
+from compile.kernels.fvr_hash import IV, LANES
+
+
+def rand_chunk(rng, num_blocks, wpb):
+    return rng.randint(0, 2**32, size=(num_blocks, wpb), dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# absorb8 round function
+# ---------------------------------------------------------------------------
+
+class TestAbsorb8:
+    def test_jnp_matches_python(self):
+        rng = np.random.RandomState(1)
+        s = rng.randint(0, 2**32, 8, dtype=np.uint32)
+        m = rng.randint(0, 2**32, 8, dtype=np.uint32)
+        out_jnp = np.asarray(fvr_hash.absorb8(jnp.asarray(s), jnp.asarray(m)))
+        out_py = ref._absorb8([int(x) for x in s], [int(x) for x in m])
+        assert [int(x) for x in out_jnp] == out_py
+
+    def test_batched_matches_rowwise(self):
+        rng = np.random.RandomState(2)
+        s = rng.randint(0, 2**32, (5, 8), dtype=np.uint32)
+        m = rng.randint(0, 2**32, (5, 8), dtype=np.uint32)
+        batched = np.asarray(fvr_hash.absorb8(jnp.asarray(s), jnp.asarray(m)))
+        for i in range(5):
+            row = np.asarray(fvr_hash.absorb8(jnp.asarray(s[i]), jnp.asarray(m[i])))
+            assert (batched[i] == row).all()
+
+    def test_not_identity(self):
+        z = jnp.zeros(8, jnp.uint32)
+        out = np.asarray(fvr_hash.absorb8(z, z))
+        assert not (out == 0).all()
+
+    def test_sensitive_to_single_bit(self):
+        s = jnp.asarray(np.arange(8, dtype=np.uint32))
+        m0 = jnp.zeros(8, jnp.uint32)
+        m1 = m0.at[3].set(1)
+        a = np.asarray(fvr_hash.absorb8(s, m0))
+        b = np.asarray(fvr_hash.absorb8(s, m1))
+        assert (a != b).any()
+
+    def test_lane_diffusion(self):
+        """A flip in one lane must affect a *different* lane (roll diffusion)."""
+        s = jnp.zeros(8, jnp.uint32)
+        m0 = jnp.zeros(8, jnp.uint32)
+        m1 = m0.at[4].set(0x80000000)
+        a = np.asarray(fvr_hash.absorb8(s, m0))
+        b = np.asarray(fvr_hash.absorb8(s, m1))
+        changed = {i for i in range(8) if a[i] != b[i]}
+        assert changed - {4}, f"only lane 4 changed: {changed}"
+
+    def test_rotl_wraps(self):
+        x = jnp.asarray(np.uint32(0x80000001))
+        assert int(fvr_hash.rotl(x, 1)) == 0x00000003
+
+    @given(st.lists(st.integers(0, 2**32 - 1), min_size=16, max_size=16))
+    @settings(max_examples=50, deadline=None)
+    def test_hypothesis_jnp_vs_python(self, words):
+        s, m = words[:8], words[8:]
+        out_jnp = np.asarray(fvr_hash.absorb8(
+            jnp.asarray(np.array(s, np.uint32)), jnp.asarray(np.array(m, np.uint32))))
+        assert [int(x) for x in out_jnp] == ref._absorb8(s, m)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs jnp reference
+# ---------------------------------------------------------------------------
+
+class TestBlockDigests:
+    @pytest.mark.parametrize("num_blocks", [1, 2, 4, 16])
+    @pytest.mark.parametrize("wpb", [8, 64, 4096])
+    def test_kernel_matches_ref(self, num_blocks, wpb):
+        chunk = rand_chunk(np.random.RandomState(num_blocks * wpb), num_blocks, wpb)
+        k = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=wpb))
+        r = np.asarray(ref.block_digests_ref(jnp.asarray(chunk), words_per_block=wpb))
+        assert (k == r).all()
+
+    def test_kernel_matches_python_block(self):
+        wpb = 64
+        chunk = rand_chunk(np.random.RandomState(7), 2, wpb)
+        k = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=wpb))
+        py = ref.PyFvr256(2, wpb)
+        for b in range(2):
+            expect = py.block_digest([int(x) for x in chunk[b]])
+            assert [int(x) for x in k[b]] == expect
+
+    def test_blocks_independent(self):
+        """Changing block j must not change digest of block i != j."""
+        wpb = 64
+        chunk = rand_chunk(np.random.RandomState(9), 4, wpb)
+        base = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=wpb))
+        chunk2 = chunk.copy()
+        chunk2[2, 10] ^= 0xFF
+        out = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk2), words_per_block=wpb))
+        assert (out[2] != base[2]).any()
+        for i in (0, 1, 3):
+            assert (out[i] == base[i]).all()
+
+    def test_deterministic(self):
+        chunk = rand_chunk(np.random.RandomState(3), 4, 64)
+        a = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=64))
+        b = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=64))
+        assert (a == b).all()
+
+    def test_rejects_bad_width(self):
+        with pytest.raises(ValueError):
+            fvr_hash.block_digests(jnp.zeros((2, 64), jnp.uint32), words_per_block=32)
+
+    def test_rejects_non_multiple_of_lanes(self):
+        with pytest.raises(ValueError):
+            fvr_hash.block_digests(jnp.zeros((2, 12), jnp.uint32), words_per_block=12)
+
+    @given(st.integers(0, 3), st.integers(1, 4), st.randoms(use_true_random=False))
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_shapes(self, log_blocks, groups, rnd):
+        num_blocks, wpb = 2 ** log_blocks, 8 * groups
+        rng = np.random.RandomState(rnd.randrange(2**31))
+        chunk = rand_chunk(rng, num_blocks, wpb)
+        k = np.asarray(fvr_hash.block_digests(jnp.asarray(chunk), words_per_block=wpb))
+        r = np.asarray(ref.block_digests_ref(jnp.asarray(chunk), words_per_block=wpb))
+        assert k.shape == (num_blocks, LANES) and (k == r).all()
+
+
+# ---------------------------------------------------------------------------
+# tree combine + finalize
+# ---------------------------------------------------------------------------
+
+class TestTreeCombine:
+    def test_matches_python(self):
+        rng = np.random.RandomState(11)
+        d = rng.randint(0, 2**32, (8, 8), dtype=np.uint32)
+        out = np.asarray(fvr_hash.tree_combine(jnp.asarray(d)))
+        digests = [[int(x) for x in row] for row in d]
+        while len(digests) > 1:
+            digests = [ref._absorb8(digests[i], digests[i + 1])
+                       for i in range(0, len(digests), 2)]
+        assert [int(x) for x in out] == digests[0]
+
+    def test_single_block_passthrough(self):
+        d = np.arange(8, dtype=np.uint32).reshape(1, 8)
+        out = np.asarray(fvr_hash.tree_combine(jnp.asarray(d)))
+        assert (out == d[0]).all()
+
+    def test_rejects_non_power_of_two(self):
+        with pytest.raises(ValueError):
+            fvr_hash.tree_combine(jnp.zeros((3, 8), jnp.uint32))
+
+    def test_order_sensitive(self):
+        rng = np.random.RandomState(13)
+        d = rng.randint(0, 2**32, (4, 8), dtype=np.uint32)
+        a = np.asarray(fvr_hash.tree_combine(jnp.asarray(d)))
+        b = np.asarray(fvr_hash.tree_combine(jnp.asarray(d[::-1].copy())))
+        assert (a != b).any()
+
+
+class TestFinalize:
+    def test_length_sensitive(self):
+        root = jnp.asarray(np.arange(8, dtype=np.uint32))
+        a = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(100), jnp.uint32(0), 4, 64))
+        b = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(101), jnp.uint32(0), 4, 64))
+        assert (a != b).any()
+
+    def test_index_sensitive(self):
+        root = jnp.asarray(np.arange(8, dtype=np.uint32))
+        a = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(100), jnp.uint32(0), 4, 64))
+        b = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(100), jnp.uint32(1), 4, 64))
+        assert (a != b).any()
+
+    def test_geometry_sensitive(self):
+        root = jnp.asarray(np.arange(8, dtype=np.uint32))
+        a = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(100), jnp.uint32(0), 4, 64))
+        b = np.asarray(fvr_hash.finalize_chunk(root, jnp.uint32(100), jnp.uint32(0), 8, 32))
+        assert (a != b).any()
+
+
+# ---------------------------------------------------------------------------
+# streaming python implementation
+# ---------------------------------------------------------------------------
+
+class TestPyFvr256:
+    GEOM = dict(num_blocks=2, words_per_block=8)  # 64-byte chunks: fast
+
+    def test_empty(self):
+        h = ref.PyFvr256(**self.GEOM)
+        assert len(h.hexdigest()) == 64
+
+    def test_update_split_invariance(self):
+        data = bytes(range(256)) * 3
+        whole = ref.PyFvr256(**self.GEOM)
+        whole.update(data)
+        parts = ref.PyFvr256(**self.GEOM)
+        for i in range(0, len(data), 7):
+            parts.update(data[i:i + 7])
+        assert whole.hexdigest() == parts.hexdigest()
+
+    def test_length_extension_distinct(self):
+        a = ref.fvr256_hex(b"\x00" * 64, **self.GEOM)
+        b = ref.fvr256_hex(b"\x00" * 65, **self.GEOM)
+        assert a != b
+
+    def test_single_bit_avalanche(self):
+        base = bytearray(range(200))
+        a = ref.fvr256_hex(bytes(base), **self.GEOM)
+        base[100] ^= 1
+        b = ref.fvr256_hex(bytes(base), **self.GEOM)
+        diff = sum(bin(int(a[i:i+8], 16) ^ int(b[i:i+8], 16)).count("1")
+                   for i in range(0, 64, 8))
+        assert diff > 64, f"weak avalanche: {diff}/256 bits flipped"
+
+    def test_rejects_non_power_of_two_blocks(self):
+        with pytest.raises(ValueError):
+            ref.PyFvr256(num_blocks=3)
+
+    @given(st.binary(max_size=300), st.integers(1, 20))
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_split_invariance(self, data, split):
+        whole = ref.PyFvr256(**self.GEOM)
+        whole.update(data)
+        parts = ref.PyFvr256(**self.GEOM)
+        for i in range(0, len(data), split):
+            parts.update(data[i:i + split])
+        assert whole.hexdigest() == parts.hexdigest()
+
+    @given(st.binary(min_size=1, max_size=200), st.integers(0, 199))
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_bitflip_changes_digest(self, data, pos):
+        pos = pos % len(data)
+        mutated = bytearray(data)
+        mutated[pos] ^= 0x01
+        assert ref.fvr256_hex(data, **self.GEOM) != \
+            ref.fvr256_hex(bytes(mutated), **self.GEOM)
+
+    def test_geometry_changes_digest(self):
+        data = bytes(range(128))
+        assert ref.fvr256_hex(data, 2, 8) != ref.fvr256_hex(data, 4, 8)

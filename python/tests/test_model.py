@@ -1,0 +1,145 @@
+"""L2 correctness: the chunk-digest graph, variants, and AOT lowering."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+SMALL = model.Variant("small", num_blocks=2, words_per_block=8)  # 64 B chunks
+
+
+def digest_bytes(data: bytes, variant, chunk_index=0, use_pallas=True):
+    """Pad-to-chunk + run the L2 graph, as the Rust runtime will."""
+    padded = data + b"\x00" * (variant.chunk_bytes - len(data))
+    words = jnp.asarray(np.frombuffer(padded, dtype="<u4"))
+    out = model.chunk_digest(
+        words,
+        jnp.array([len(data)], jnp.uint32),
+        jnp.array([chunk_index], jnp.uint32),
+        variant=variant, use_pallas=use_pallas,
+    )
+    return [int(x) for x in np.asarray(out[0])]
+
+
+class TestChunkDigest:
+    def test_matches_python_spec(self):
+        data = bytes(range(64))
+        got = digest_bytes(data, SMALL)
+        expect = ref.PyFvr256(2, 8).chunk_digest(data, 0)
+        assert got == expect
+
+    def test_partial_chunk_matches_python(self):
+        data = b"fiver" * 3
+        got = digest_bytes(data, SMALL)
+        expect = ref.PyFvr256(2, 8).chunk_digest(data, 0)
+        assert got == expect
+
+    def test_pallas_and_ref_paths_agree(self):
+        data = os.urandom(64)
+        assert digest_bytes(data, SMALL, use_pallas=True) == \
+            digest_bytes(data, SMALL, use_pallas=False)
+
+    def test_chunk_index_matters(self):
+        data = os.urandom(64)
+        assert digest_bytes(data, SMALL, chunk_index=0) != \
+            digest_bytes(data, SMALL, chunk_index=1)
+
+    def test_padding_not_colliding(self):
+        """'abc' and 'abc\\0' share padded words but differ in true length."""
+        assert digest_bytes(b"abc", SMALL) != digest_bytes(b"abc\x00", SMALL)
+
+    def test_output_shape_dtype(self):
+        v = SMALL
+        words = jnp.zeros((v.chunk_words,), jnp.uint32)
+        out = model.chunk_digest(words, jnp.array([0], jnp.uint32),
+                                 jnp.array([0], jnp.uint32), variant=v)
+        assert out[0].shape == (8,) and out[0].dtype == jnp.uint32
+
+    @given(st.binary(min_size=0, max_size=64), st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_matches_python(self, data, idx):
+        got = digest_bytes(data, SMALL, chunk_index=idx)
+        expect = ref.PyFvr256(2, 8).chunk_digest(data, idx)
+        assert got == expect
+
+
+class TestVariants:
+    def test_registry_geometries(self):
+        assert model.VARIANTS["256k"].chunk_bytes == 256 * 1024
+        assert model.VARIANTS["1m"].chunk_bytes == 1024 * 1024
+        assert model.VARIANTS["4m"].chunk_bytes == 4 * 1024 * 1024
+
+    @pytest.mark.parametrize("name", list(model.VARIANTS))
+    def test_power_of_two_blocks(self, name):
+        b = model.VARIANTS[name].num_blocks
+        assert b & (b - 1) == 0
+
+    def test_variant_chunks_give_distinct_digests(self):
+        """Geometry is bound into the digest: same bytes, different variant."""
+        data = os.urandom(64)
+        a = digest_bytes(data, SMALL)
+        b = digest_bytes(data, model.Variant("s2", 4, 8))
+        assert a != b
+
+
+class TestLowering:
+    def test_lower_small_variant(self):
+        lowered = model.lower_variant(SMALL)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "u32[16]" in text
+
+    def test_hlo_has_three_params_and_tuple_result(self):
+        text = aot.to_hlo_text(model.lower_variant(SMALL))
+        assert "parameter(0)" in text
+        assert "parameter(1)" in text
+        assert "parameter(2)" in text
+        assert "(u32[8]" in text  # tuple-wrapped result
+
+    def test_lowering_deterministic(self):
+        a = aot.to_hlo_text(model.lower_variant(SMALL))
+        b = aot.to_hlo_text(model.lower_variant(SMALL))
+        assert a == b
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestArtifacts:
+    def test_manifest_lists_all_variants(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            manifest = json.load(f)
+        names = {v["name"] for v in manifest["variants"]}
+        assert names == set(model.VARIANTS)
+        for v in manifest["variants"]:
+            assert os.path.exists(os.path.join(ART_DIR, v["artifact"]))
+            assert os.path.exists(os.path.join(ART_DIR, v["artifact_ref"]))
+
+    def test_artifact_is_hlo_text(self):
+        with open(os.path.join(ART_DIR, "fvr_hash_256k.hlo.txt")) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+
+    def test_test_vectors_well_formed(self):
+        with open(os.path.join(ART_DIR, "test_vectors.json")) as f:
+            vectors = json.load(f)
+        assert len(vectors["streams"]) >= 30
+        for c in vectors["streams"]:
+            assert len(c["hex"]) == 64
+        for c in vectors["chunks"]:
+            assert len(c["digest_words"]) == 8
+
+    def test_vectors_match_pyfvr(self):
+        """Re-derive a sample of the emitted vectors."""
+        with open(os.path.join(ART_DIR, "test_vectors.json")) as f:
+            vectors = json.load(f)
+        for c in vectors["streams"][:6]:
+            if c["pattern"] == "zeros":
+                data = bytes(c["length"])
+                assert ref.fvr256_hex(data, c["num_blocks"], c["words_per_block"]) == c["hex"]

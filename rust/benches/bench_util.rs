@@ -1,0 +1,77 @@
+//! Minimal benchmarking helper (criterion is unavailable offline):
+//! warmup + N timed iterations, reporting median / mean / min and derived
+//! throughput. Deterministic iteration counts keep `cargo bench` output
+//! stable enough for the before/after records in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+}
+
+#[allow(dead_code)]
+impl BenchResult {
+    /// Report with a throughput figure derived from `bytes` per iteration.
+    pub fn report_bytes(&self, bytes: u64) {
+        let gbps = bytes as f64 * 8.0 / self.median_secs / 1e9;
+        let mibs = bytes as f64 / self.median_secs / (1 << 20) as f64;
+        println!(
+            "{:<44} median {:>10.3} ms   {:>9.1} MiB/s ({:>6.2} Gbps)",
+            self.name,
+            self.median_secs * 1e3,
+            mibs,
+            gbps
+        );
+    }
+
+    /// Report with an ops/sec figure derived from `ops` per iteration.
+    pub fn report_ops(&self, ops: u64) {
+        println!(
+            "{:<44} median {:>10.3} ms   {:>12.0} ops/s",
+            self.name,
+            self.median_secs * 1e3,
+            ops as f64 / self.median_secs
+        );
+    }
+
+    /// Report raw time only.
+    pub fn report_time(&self) {
+        println!(
+            "{:<44} median {:>10.3} ms  (min {:.3} ms, mean {:.3} ms)",
+            self.name,
+            self.median_secs * 1e3,
+            self.min_secs * 1e3,
+            self.mean_secs * 1e3
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; returns timing stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_secs: samples[samples.len() / 2],
+        mean_secs: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_secs: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,120 @@
+//! Bench: the L3 coordinator hot path — queue handoff, frame
+//! encode/decode, and complete loopback transfers per algorithm (the
+//! real-mode counterpart of the paper's throughput claims).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{bench, black_box};
+use fiver::coordinator::queue::ByteQueue;
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::HashAlgorithm;
+use fiver::storage::MemStorage;
+use fiver::util::rng::SplitMix64;
+
+fn main() {
+    queue_bench();
+    protocol_bench();
+    transfer_bench();
+}
+
+/// The paper's Algorithm 1/2 queue: producer/consumer handoff rate.
+fn queue_bench() {
+    println!("== ByteQueue (64 MiB through an 8 MiB queue, 256 KiB buffers) ==");
+    let total = 64usize << 20;
+    let buf_size = 256 * 1024;
+    let r = bench("queue/produce+consume", 1, 5, || {
+        let q = ByteQueue::new(8 << 20);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            let buf = vec![0u8; buf_size];
+            for _ in 0..(total / buf_size) {
+                q2.add(buf.clone());
+            }
+            q2.close();
+        });
+        let mut consumed = 0usize;
+        while let Some(b) = q.remove() {
+            consumed += b.len();
+        }
+        producer.join().unwrap();
+        black_box(consumed);
+    });
+    r.report_bytes(total as u64);
+}
+
+fn protocol_bench() {
+    println!("\n== protocol framing (256 KiB Data frames) ==");
+    let payload = vec![0xABu8; 256 * 1024];
+    let frames = 256;
+    let r = bench("protocol/encode", 2, 10, || {
+        let mut out = Vec::with_capacity(frames * (payload.len() + 32));
+        for i in 0..frames {
+            protocol::write_data_frame(&mut out, 1, (i * payload.len()) as u64, &payload).unwrap();
+        }
+        black_box(out.len());
+    });
+    r.report_bytes((frames * payload.len()) as u64);
+
+    let mut encoded = Vec::new();
+    for i in 0..frames {
+        protocol::write_data_frame(&mut encoded, 1, (i * payload.len()) as u64, &payload).unwrap();
+    }
+    let r = bench("protocol/decode", 2, 10, || {
+        let mut cursor = &encoded[..];
+        let mut n = 0;
+        while let Some(f) = protocol::Frame::read_from(&mut cursor).unwrap() {
+            if let protocol::Frame::Data { payload, .. } = f {
+                n += payload.len();
+            }
+        }
+        black_box(n);
+    });
+    r.report_bytes((frames * payload.len()) as u64);
+}
+
+/// Complete loopback sessions: what a user of the system sees.
+fn transfer_bench() {
+    println!("\n== loopback transfer (16 x 4 MiB, MemStorage, fvr256) ==");
+    let sizes = vec![4usize << 20; 16];
+    let total: usize = sizes.iter().sum();
+    let src = MemStorage::new();
+    let mut rng = SplitMix64::new(3);
+    let mut names = Vec::new();
+    for (i, &s) in sizes.iter().enumerate() {
+        let mut data = vec![0u8; s];
+        rng.fill_bytes(&mut data);
+        let name = format!("b{i}");
+        src.put(&name, data);
+        names.push(name);
+    }
+    for alg in [
+        RealAlgorithm::TransferOnly,
+        RealAlgorithm::Sequential,
+        RealAlgorithm::FileLevelPpl,
+        RealAlgorithm::BlockLevelPpl,
+        RealAlgorithm::Fiver,
+        RealAlgorithm::FiverChunk,
+    ] {
+        let src = src.clone();
+        let names = names.clone();
+        let r = bench(&format!("transfer/{}", alg.name()), 1, 3, || {
+            let cfg = SessionConfig::new(alg, native_factory(HashAlgorithm::Fvr256));
+            let dst = MemStorage::new();
+            let (rep, _) = run_local_transfer(
+                &names,
+                Arc::new(src.clone()),
+                Arc::new(dst),
+                &cfg,
+                &FaultPlan::none(),
+            )
+            .unwrap();
+            black_box(rep.bytes_sent);
+        });
+        r.report_bytes(total as u64);
+    }
+}

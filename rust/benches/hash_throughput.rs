@@ -1,0 +1,64 @@
+//! Bench: hash throughput — the paper's central rate (its testbeds hash
+//! MD5 at ~3 Gbps/core; FIVER's benefit depends on where hashing sits
+//! relative to the network). Covers the from-scratch MD5/SHA-1/SHA-256,
+//! the native FVR-256 port, and FVR-256 through the XLA/PJRT artifact
+//! (Pallas-kernel and jnp-reference lowerings).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fiver::hashes::HashAlgorithm;
+use fiver::util::rng::SplitMix64;
+
+fn main() {
+    let mb = 1 << 20;
+    let size = 64 * mb;
+    let mut data = vec![0u8; size];
+    SplitMix64::new(1).fill_bytes(&mut data);
+
+    println!("== hash throughput ({} MiB buffer) ==", size / mb);
+    for alg in HashAlgorithm::all() {
+        let r = bench(&format!("native/{}", alg.name()), 1, 5, || {
+            let mut h = alg.hasher();
+            h.update(&data);
+            black_box(h.finalize());
+        });
+        r.report_bytes(size as u64);
+    }
+
+    // Streaming at transfer buffer granularity (the coordinator hot path).
+    println!("\n== streaming update granularity (fvr256, 64 MiB total) ==");
+    for buf in [64 * 1024, 256 * 1024, 1 << 20, 4 << 20] {
+        let r = bench(&format!("fvr256/update-{}KiB", buf / 1024), 1, 5, || {
+            let mut h = HashAlgorithm::Fvr256.hasher();
+            for part in data.chunks(buf) {
+                h.update(part);
+            }
+            black_box(h.finalize());
+        });
+        r.report_bytes(size as u64);
+    }
+
+    // XLA/PJRT path: per-chunk artifact execution (interpret-mode Pallas on
+    // CPU — correctness path; real-TPU perf is estimated structurally in
+    // DESIGN.md §10).
+    match fiver::runtime::find_artifacts_dir()
+        .and_then(|d| fiver::runtime::Manifest::load(&d))
+    {
+        Ok(manifest) => {
+            println!("\n== XLA/PJRT chunk digest (one 256 KiB chunk) ==");
+            for (variant, use_ref) in [("256k", false), ("256k", true)] {
+                let engine =
+                    fiver::runtime::XlaHashEngine::load(&manifest, variant, use_ref).unwrap();
+                let chunk = &data[..engine.geometry().chunk_bytes()];
+                let label = format!("xla/{}", engine.name());
+                let r = bench(&label, 1, 3, || {
+                    black_box(engine.chunk_digest_bytes(chunk, 0).unwrap());
+                });
+                r.report_bytes(chunk.len() as u64);
+            }
+        }
+        Err(_) => println!("\n(xla benches skipped: run `make artifacts`)"),
+    }
+}

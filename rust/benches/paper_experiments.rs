@@ -1,0 +1,48 @@
+//! Bench: regenerate every paper table/figure and time the simulation —
+//! one bench entry per experiment (the `cargo bench` face of
+//! `repro-experiments all`). Reports simulator wall time per figure; the
+//! figures' *contents* go to stdout via the repro-experiments binary and
+//! EXPERIMENTS.md.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, black_box};
+
+fn main() {
+    println!("== paper experiment regeneration (simulation wall time) ==");
+    for name in fiver::experiments::ALL {
+        let r = bench(&format!("experiment/{name}"), 0, 1, || {
+            black_box(fiver::experiments::run_by_name(name).unwrap().len());
+        });
+        r.report_time();
+    }
+
+    // Simulator micro-benchmark: fluid-engine event throughput.
+    println!("\n== fluid engine ==");
+    use fiver::config::{AlgoParams, Testbed, MB};
+    use fiver::faults::FaultPlan;
+    use fiver::sim::algorithms::{run, Algorithm};
+    use fiver::workload::Dataset;
+    let ds = Dataset::uniform("10M", 10 * MB, 500);
+    let r = bench("sim/sequential-500-files", 1, 3, || {
+        black_box(run(
+            Testbed::esnet_wan(),
+            AlgoParams::default(),
+            &ds,
+            &FaultPlan::none(),
+            Algorithm::Sequential,
+        ));
+    });
+    r.report_ops(500);
+    let r = bench("sim/fiver-500-files", 1, 3, || {
+        black_box(run(
+            Testbed::esnet_wan(),
+            AlgoParams::default(),
+            &ds,
+            &FaultPlan::none(),
+            Algorithm::Fiver,
+        ));
+    });
+    r.report_ops(500);
+}

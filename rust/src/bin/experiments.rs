@@ -1,0 +1,26 @@
+//! `repro-experiments` — regenerate every table and figure of the paper's
+//! evaluation (§IV) from the simulated testbeds.
+//!
+//! ```text
+//! repro-experiments all          # everything, paper order
+//! repro-experiments fig5 fig7    # specific figures
+//! repro-experiments list         # available experiment names
+//! ```
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "list" {
+        eprintln!("usage: repro-experiments <name...|all|list>");
+        eprintln!("experiments: {}", fiver::experiments::ALL.join(", "));
+        std::process::exit(if args.is_empty() { 2 } else { 0 });
+    }
+    for name in &args {
+        match fiver::experiments::run_by_name(name) {
+            Some(out) => println!("{out}\n"),
+            None => {
+                eprintln!("unknown experiment `{name}`; try: {}", fiver::experiments::ALL.join(", "));
+                std::process::exit(2);
+            }
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! The real-mode coordinator — the paper's system, over real sockets,
+//! threads and files.
+//!
+//! * [`queue`] — the fixed-size synchronized queue of Algorithms 1 & 2.
+//! * [`protocol`] — framed data + control channels (GridFTP-style split).
+//! * [`sender`] / [`receiver`] — Algorithm 1 (SEND + COMPUTECHECKSUM) and
+//!   Algorithm 2 (RECEIVE + COMPUTECHECKSUM), generalized so the same
+//!   machinery runs all five integrity-verification policies:
+//!
+//! | algorithm        | checksum source | verify unit | overlap             |
+//! |------------------|-----------------|-------------|---------------------|
+//! | Sequential       | file re-read    | file        | none                |
+//! | FileLevelPpl     | file re-read    | file        | prev file           |
+//! | BlockLevelPpl    | file re-read    | block       | prev block          |
+//! | FIVER            | shared queue    | file        | same file           |
+//! | FIVER-Chunk      | shared queue    | chunk       | same file           |
+//! | FIVER-Hybrid     | per-file: FIVER if it fits in memory, else Sequential |
+//!
+//! Verification failures recover in place: the sender re-reads the failed
+//! unit from source storage and sends `Fix` frames; the receiver rewrites
+//! the range, recomputes the digest from storage, and re-exchanges until
+//! digests match (§IV-A's efficient error recovery).
+
+pub mod protocol;
+pub mod queue;
+pub mod receiver;
+pub mod session;
+pub mod sender;
+
+use std::sync::Arc;
+
+use crate::hashes::Hasher;
+
+/// Real-mode algorithm selector (mirrors [`crate::sim::algorithms::Algorithm`]
+/// plus a transfer-only baseline for Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RealAlgorithm {
+    TransferOnly,
+    Sequential,
+    FileLevelPpl,
+    BlockLevelPpl,
+    Fiver,
+    FiverChunk,
+    FiverHybrid,
+}
+
+impl RealAlgorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealAlgorithm::TransferOnly => "TransferOnly",
+            RealAlgorithm::Sequential => "Sequential",
+            RealAlgorithm::FileLevelPpl => "FileLevelPpl",
+            RealAlgorithm::BlockLevelPpl => "BlockLevelPpl",
+            RealAlgorithm::Fiver => "FIVER",
+            RealAlgorithm::FiverChunk => "FIVER-Chunk",
+            RealAlgorithm::FiverHybrid => "FIVER-Hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RealAlgorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "transferonly" | "transfer-only" | "none" => Some(RealAlgorithm::TransferOnly),
+            "sequential" | "seq" => Some(RealAlgorithm::Sequential),
+            "filelevelppl" | "file" => Some(RealAlgorithm::FileLevelPpl),
+            "blocklevelppl" | "block" => Some(RealAlgorithm::BlockLevelPpl),
+            "fiver" => Some(RealAlgorithm::Fiver),
+            "fiver-chunk" | "fiverchunk" | "chunk" => Some(RealAlgorithm::FiverChunk),
+            "fiver-hybrid" | "fiverhybrid" | "hybrid" => Some(RealAlgorithm::FiverHybrid),
+            _ => None,
+        }
+    }
+
+    /// Does this algorithm feed the checksum from the shared queue
+    /// (FIVER's I/O sharing) rather than re-reading the file?
+    pub fn uses_queue(&self, file_size: u64, hybrid_threshold: u64) -> bool {
+        match self {
+            RealAlgorithm::Fiver | RealAlgorithm::FiverChunk => true,
+            RealAlgorithm::FiverHybrid => file_size < hybrid_threshold,
+            _ => false,
+        }
+    }
+
+    /// Verification unit size (None = whole file).
+    pub fn unit_size(&self, block_size: u64) -> Option<u64> {
+        match self {
+            RealAlgorithm::BlockLevelPpl | RealAlgorithm::FiverChunk => Some(block_size),
+            _ => None,
+        }
+    }
+}
+
+/// Factory producing fresh streaming hashers (native MD5/SHA/FVR or the
+/// XLA-backed [`crate::runtime::FvrHasher`]); shared across threads.
+pub type HasherFactory = Arc<dyn Fn() -> Box<dyn Hasher> + Send + Sync>;
+
+/// Make a factory from a named algorithm.
+pub fn native_factory(alg: crate::hashes::HashAlgorithm) -> HasherFactory {
+    Arc::new(move || alg.hasher())
+}
+
+/// Make a factory backed by the compiled XLA artifact.
+pub fn xla_factory(engine: crate::runtime::XlaHashEngine) -> HasherFactory {
+    Arc::new(move || Box::new(crate::runtime::FvrHasher::new(engine.clone())))
+}
+
+/// Session configuration shared by sender and receiver.
+#[derive(Clone)]
+pub struct SessionConfig {
+    pub algorithm: RealAlgorithm,
+    /// I/O buffer granularity for reads/sends (paper's `buffer`).
+    pub buf_size: usize,
+    /// Block/chunk size for block-level pipelining and FIVER-Chunk.
+    pub block_size: u64,
+    /// Queue capacity in bytes (Algorithm 1/2's fixed-size queue).
+    pub queue_capacity: usize,
+    /// FIVER-Hybrid threshold: files >= this use the Sequential path.
+    pub hybrid_threshold: u64,
+    pub hasher: HasherFactory,
+}
+
+impl SessionConfig {
+    pub fn new(algorithm: RealAlgorithm, hasher: HasherFactory) -> SessionConfig {
+        SessionConfig {
+            algorithm,
+            buf_size: 256 * 1024,
+            block_size: 4 << 20,
+            queue_capacity: 8 << 20,
+            hybrid_threshold: 64 << 20,
+            hasher,
+        }
+    }
+
+    /// Verification units of a file as `(unit_id, offset, len)`.
+    /// `unit_id == UNIT_FILE` means a single whole-file unit.
+    pub fn units_of(&self, file_size: u64, uses_queue: bool) -> Vec<(u64, u64, u64)> {
+        let unit_size = match self.algorithm {
+            RealAlgorithm::FiverHybrid if !uses_queue => None, // sequential path
+            _ => self.algorithm.unit_size(self.block_size),
+        };
+        match unit_size {
+            None => vec![(protocol::UNIT_FILE, 0, file_size)],
+            Some(us) => {
+                let mut units = Vec::new();
+                let mut off = 0;
+                let mut idx = 0u64;
+                loop {
+                    let len = us.min(file_size - off);
+                    units.push((idx, off, len));
+                    off += len;
+                    idx += 1;
+                    if off >= file_size {
+                        break;
+                    }
+                }
+                units
+            }
+        }
+    }
+}
+
+/// Outcome of a sender-side session.
+#[derive(Debug, Default, Clone)]
+pub struct TransferReport {
+    pub algorithm: String,
+    pub files: usize,
+    pub bytes_sent: u64,
+    /// Extra bytes sent for verification repairs.
+    pub bytes_resent: u64,
+    pub failures_detected: u64,
+    pub elapsed_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashes::HashAlgorithm;
+
+    #[test]
+    fn parse_roundtrip() {
+        for alg in [
+            RealAlgorithm::TransferOnly,
+            RealAlgorithm::Sequential,
+            RealAlgorithm::FileLevelPpl,
+            RealAlgorithm::BlockLevelPpl,
+            RealAlgorithm::Fiver,
+            RealAlgorithm::FiverChunk,
+            RealAlgorithm::FiverHybrid,
+        ] {
+            assert_eq!(RealAlgorithm::parse(alg.name()), Some(alg));
+        }
+    }
+
+    #[test]
+    fn units_whole_file() {
+        let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+        assert_eq!(cfg.units_of(100, true), vec![(protocol::UNIT_FILE, 0, 100)]);
+    }
+
+    #[test]
+    fn units_chunked() {
+        let mut cfg =
+            SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Md5));
+        cfg.block_size = 40;
+        assert_eq!(cfg.units_of(100, true), vec![(0, 0, 40), (1, 40, 40), (2, 80, 20)]);
+        // Exact multiple.
+        assert_eq!(cfg.units_of(80, true), vec![(0, 0, 40), (1, 40, 40)]);
+        // Empty file still has one (empty) unit.
+        assert_eq!(cfg.units_of(0, true), vec![(0, 0, 0)]);
+    }
+
+    #[test]
+    fn hybrid_unit_selection() {
+        let cfg = SessionConfig::new(RealAlgorithm::FiverHybrid, native_factory(HashAlgorithm::Md5));
+        // Small file -> FIVER path (queue, whole-file digest).
+        assert!(cfg.algorithm.uses_queue(1 << 20, cfg.hybrid_threshold));
+        // Large file -> sequential path.
+        assert!(!cfg.algorithm.uses_queue(1 << 30, cfg.hybrid_threshold));
+    }
+
+    #[test]
+    fn queue_usage_by_algorithm() {
+        assert!(RealAlgorithm::Fiver.uses_queue(1, 0));
+        assert!(!RealAlgorithm::Sequential.uses_queue(1, u64::MAX));
+        assert!(!RealAlgorithm::BlockLevelPpl.uses_queue(1, u64::MAX));
+    }
+}

@@ -1,0 +1,239 @@
+//! Wire protocol between the FIVER sender and receiver.
+//!
+//! Two TCP streams per session, mirroring GridFTP's split:
+//!
+//! * **data channel** (sender → receiver): file bytes and repair writes,
+//!   framed and self-describing so repairs of file *i* can interleave with
+//!   the stream of file *i+1* (FIVER's pipelined recovery).
+//! * **control channel** (bidirectional): digests from the receiver,
+//!   verdicts/completion from the sender.
+//!
+//! Frames are length-prefixed: `u8 tag, u32 file_idx, u64 a, u64 b,
+//! u32 payload_len, payload`. Fixed 25-byte header; integers little-endian.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Verification scope of a digest (whole file vs one chunk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DigestKind {
+    File,
+    Chunk,
+}
+
+/// Protocol frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Announce a file: `a` = size, `b` = attempt, payload = name.
+    FileStart { file_idx: u32, size: u64, attempt: u64, name: String },
+    /// File content in stream order: `a` = offset, payload = bytes.
+    Data { file_idx: u32, offset: u64, payload: Vec<u8> },
+    /// End of a file's stream.
+    FileEnd { file_idx: u32 },
+    /// Repair write into an already-received file: `a` = offset.
+    Fix { file_idx: u32, offset: u64, payload: Vec<u8> },
+    /// All repairs for a verification round sent; `a` = chunk index or
+    /// u64::MAX for whole-file.
+    FixEnd { file_idx: u32, unit: u64 },
+    /// Receiver -> sender digest: `a` = chunk index (u64::MAX = file
+    /// digest), payload = digest bytes.
+    Digest { file_idx: u32, unit: u64, digest: Vec<u8> },
+    /// Sender -> receiver verdict for a digest unit: `a` = unit,
+    /// `b` = 1 if ok (0 => expect repairs then a fresh digest).
+    Verdict { file_idx: u32, unit: u64, ok: bool },
+    /// Session end.
+    Done,
+}
+
+const TAG_FILE_START: u8 = 1;
+const TAG_DATA: u8 = 2;
+const TAG_FILE_END: u8 = 3;
+const TAG_FIX: u8 = 4;
+const TAG_FIX_END: u8 = 5;
+const TAG_DIGEST: u8 = 6;
+const TAG_VERDICT: u8 = 7;
+const TAG_DONE: u8 = 8;
+
+/// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
+pub const UNIT_FILE: u64 = u64::MAX;
+
+impl Frame {
+    /// Serialize to a writer. One syscall-ish write for the header plus one
+    /// for the payload; callers wrap sockets in BufWriter.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let (tag, idx, a, b, payload): (u8, u32, u64, u64, &[u8]) = match self {
+            Frame::FileStart { file_idx, size, attempt, name } => {
+                (TAG_FILE_START, *file_idx, *size, *attempt, name.as_bytes())
+            }
+            Frame::Data { file_idx, offset, payload } => {
+                (TAG_DATA, *file_idx, *offset, 0, payload)
+            }
+            Frame::FileEnd { file_idx } => (TAG_FILE_END, *file_idx, 0, 0, &[]),
+            Frame::Fix { file_idx, offset, payload } => (TAG_FIX, *file_idx, *offset, 0, payload),
+            Frame::FixEnd { file_idx, unit } => (TAG_FIX_END, *file_idx, *unit, 0, &[]),
+            Frame::Digest { file_idx, unit, digest } => {
+                (TAG_DIGEST, *file_idx, *unit, 0, digest)
+            }
+            Frame::Verdict { file_idx, unit, ok } => {
+                (TAG_VERDICT, *file_idx, *unit, u64::from(*ok), &[])
+            }
+            Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
+        };
+        let mut header = [0u8; 25];
+        header[0] = tag;
+        header[1..5].copy_from_slice(&idx.to_le_bytes());
+        header[5..13].copy_from_slice(&a.to_le_bytes());
+        header[13..21].copy_from_slice(&b.to_le_bytes());
+        header[21..25].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        w.write_all(&header)?;
+        w.write_all(payload)?;
+        Ok(())
+    }
+
+    /// Read one frame. `Ok(None)` on clean EOF at a frame boundary.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+        let mut header = [0u8; 25];
+        match read_exact_or_eof(r, &mut header)? {
+            false => return Ok(None),
+            true => {}
+        }
+        let tag = header[0];
+        let file_idx = u32::from_le_bytes(header[1..5].try_into().unwrap());
+        let a = u64::from_le_bytes(header[5..13].try_into().unwrap());
+        let b = u64::from_le_bytes(header[13..21].try_into().unwrap());
+        let len = u32::from_le_bytes(header[21..25].try_into().unwrap()) as usize;
+        const MAX_PAYLOAD: usize = 64 << 20;
+        if len > MAX_PAYLOAD {
+            bail!("frame payload {len} exceeds limit");
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).context("frame payload")?;
+        Ok(Some(match tag {
+            TAG_FILE_START => Frame::FileStart {
+                file_idx,
+                size: a,
+                attempt: b,
+                name: String::from_utf8(payload).context("file name utf8")?,
+            },
+            TAG_DATA => Frame::Data { file_idx, offset: a, payload },
+            TAG_FILE_END => Frame::FileEnd { file_idx },
+            TAG_FIX => Frame::Fix { file_idx, offset: a, payload },
+            TAG_FIX_END => Frame::FixEnd { file_idx, unit: a },
+            TAG_DIGEST => Frame::Digest { file_idx, unit: a, digest: payload },
+            TAG_VERDICT => Frame::Verdict { file_idx, unit: a, ok: b != 0 },
+            TAG_DONE => Frame::Done,
+            _ => bail!("unknown frame tag {tag}"),
+        }))
+    }
+}
+
+/// Write a `Data` frame from a borrowed slice — the hot path; avoids
+/// constructing a `Frame` (and its owned `Vec`) per buffer.
+pub fn write_data_frame<W: Write>(
+    w: &mut W,
+    file_idx: u32,
+    offset: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let mut header = [0u8; 25];
+    header[0] = TAG_DATA;
+    header[1..5].copy_from_slice(&file_idx.to_le_bytes());
+    header[5..13].copy_from_slice(&offset.to_le_bytes());
+    header[21..25].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// read_exact that distinguishes clean EOF (nothing read) from truncation.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(false);
+            }
+            bail!("truncated frame: {filled}/{} header bytes", buf.len());
+        }
+        filled += n;
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let mut cursor = &buf[..];
+        let back = Frame::read_from(&mut cursor).unwrap().unwrap();
+        assert_eq!(back, f);
+        // Stream fully consumed.
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Frame::FileStart {
+            file_idx: 7,
+            size: 1 << 40,
+            attempt: 2,
+            name: "dataset/file-0001".into(),
+        });
+        roundtrip(Frame::Data { file_idx: 1, offset: 12345, payload: vec![1, 2, 3] });
+        roundtrip(Frame::FileEnd { file_idx: 9 });
+        roundtrip(Frame::Fix { file_idx: 3, offset: 999, payload: vec![0xAA; 100] });
+        roundtrip(Frame::FixEnd { file_idx: 3, unit: UNIT_FILE });
+        roundtrip(Frame::Digest { file_idx: 2, unit: 5, digest: vec![0xCD; 32] });
+        roundtrip(Frame::Verdict { file_idx: 2, unit: UNIT_FILE, ok: true });
+        roundtrip(Frame::Verdict { file_idx: 2, unit: 0, ok: false });
+        roundtrip(Frame::Done);
+    }
+
+    #[test]
+    fn sequential_frames_in_one_stream() {
+        let mut buf = Vec::new();
+        let frames = vec![
+            Frame::FileStart { file_idx: 0, size: 3, attempt: 0, name: "a".into() },
+            Frame::Data { file_idx: 0, offset: 0, payload: vec![1, 2, 3] },
+            Frame::FileEnd { file_idx: 0 },
+            Frame::Done,
+        ];
+        for f in &frames {
+            f.write_to(&mut buf).unwrap();
+        }
+        let mut cursor = &buf[..];
+        for f in &frames {
+            assert_eq!(&Frame::read_from(&mut cursor).unwrap().unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let mut buf = Vec::new();
+        Frame::Data { file_idx: 0, offset: 0, payload: vec![9; 10] }.write_to(&mut buf).unwrap();
+        let mut cursor = &buf[..20]; // mid-header
+        assert!(Frame::read_from(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_errors() {
+        let mut buf = vec![0xFFu8; 25];
+        buf[21..25].copy_from_slice(&0u32.to_le_bytes());
+        let mut cursor = &buf[..];
+        assert!(Frame::read_from(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_payload_rejected() {
+        let mut header = [0u8; 25];
+        header[0] = TAG_DATA;
+        header[21..25].copy_from_slice(&(65u32 << 20).to_le_bytes());
+        let mut cursor = &header[..];
+        assert!(Frame::read_from(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! The fixed-size synchronized queue of Algorithms 1 & 2 — the mechanism
+//! that lets FIVER share one file read between the network thread and the
+//! checksum thread.
+//!
+//! Semantics match the paper exactly: `add` blocks when the queue is full
+//! (so a fast transfer backs off to checksum speed — "if transfer operation
+//! is faster and queue is filled, then transfer operations will need
+//! back-off [and] run at same speed as checksum computation"), `remove`
+//! blocks when empty (a fast checksum "will just wait for data to be
+//! available, so its total CPU time will not change").
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner {
+    buffers: VecDeque<Vec<u8>>,
+    bytes: usize,
+    closed: bool,
+    /// Blocked producers/consumers — lets the hot path skip the condvar
+    /// syscall entirely when the peer is running free (measured ~25% of
+    /// FIVER's end-to-end time on fast links; EXPERIMENTS.md §Perf).
+    waiting_add: usize,
+    waiting_remove: usize,
+}
+
+/// Bounded byte-buffer queue. Capacity is in *bytes*, not buffer count, so
+/// back-pressure is independent of the I/O buffer size in use.
+#[derive(Clone)]
+pub struct ByteQueue {
+    inner: Arc<(Mutex<Inner>, Condvar, Condvar)>,
+    capacity: usize,
+}
+
+impl ByteQueue {
+    pub fn new(capacity_bytes: usize) -> ByteQueue {
+        assert!(capacity_bytes > 0);
+        ByteQueue {
+            inner: Arc::new((
+                Mutex::new(Inner {
+                    buffers: VecDeque::new(),
+                    bytes: 0,
+                    closed: false,
+                    waiting_add: 0,
+                    waiting_remove: 0,
+                }),
+                Condvar::new(), // not_full
+                Condvar::new(), // not_empty
+            )),
+            capacity: capacity_bytes,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocking add (Algorithm 1 line 7). Returns `false` if the queue was
+    /// closed (consumer gone) — producers should stop.
+    pub fn add(&self, buf: Vec<u8>) -> bool {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        // A buffer larger than capacity is still accepted when empty,
+        // otherwise nothing could ever flow.
+        while !g.closed && g.bytes > 0 && g.bytes + buf.len() > self.capacity {
+            g.waiting_add += 1;
+            g = not_full.wait(g).unwrap();
+            g.waiting_add -= 1;
+        }
+        if g.closed {
+            return false;
+        }
+        g.bytes += buf.len();
+        g.buffers.push_back(buf);
+        if g.waiting_remove > 0 {
+            not_empty.notify_one();
+        }
+        true
+    }
+
+    /// Blocking remove (Algorithm 1 line 14). `None` once closed and
+    /// drained — the consumer's end-of-stream.
+    pub fn remove(&self) -> Option<Vec<u8>> {
+        let (lock, not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        loop {
+            if let Some(buf) = g.buffers.pop_front() {
+                g.bytes -= buf.len();
+                if g.waiting_add > 0 {
+                    not_full.notify_one();
+                }
+                return Some(buf);
+            }
+            if g.closed {
+                return None;
+            }
+            g.waiting_remove += 1;
+            g = not_empty.wait(g).unwrap();
+            g.waiting_remove -= 1;
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then get None.
+    pub fn close(&self) {
+        let (lock, not_full, not_empty) = &*self.inner;
+        lock.lock().unwrap().closed = true;
+        not_full.notify_all();
+        not_empty.notify_all();
+    }
+
+    /// Bytes currently queued.
+    pub fn len_bytes(&self) -> usize {
+        self.inner.0.lock().unwrap().bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = ByteQueue::new(1024);
+        q.add(vec![1]);
+        q.add(vec![2, 2]);
+        q.add(vec![3]);
+        assert_eq!(q.remove(), Some(vec![1]));
+        assert_eq!(q.remove(), Some(vec![2, 2]));
+        assert_eq!(q.remove(), Some(vec![3]));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = ByteQueue::new(1024);
+        q.add(vec![1]);
+        q.close();
+        assert_eq!(q.remove(), Some(vec![1]));
+        assert_eq!(q.remove(), None);
+    }
+
+    #[test]
+    fn add_after_close_rejected() {
+        let q = ByteQueue::new(1024);
+        q.close();
+        assert!(!q.add(vec![1]));
+    }
+
+    #[test]
+    fn producer_backs_off_when_full() {
+        let q = ByteQueue::new(10);
+        q.add(vec![0; 8]);
+        let q2 = q.clone();
+        let handle = thread::spawn(move || {
+            // Blocks until the consumer drains.
+            let start = std::time::Instant::now();
+            assert!(q2.add(vec![0; 8]));
+            start.elapsed()
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.remove().unwrap().len(), 8);
+        let waited = handle.join().unwrap();
+        assert!(waited >= Duration::from_millis(40), "producer should have blocked: {waited:?}");
+    }
+
+    #[test]
+    fn oversized_buffer_accepted_when_empty() {
+        let q = ByteQueue::new(4);
+        assert!(q.add(vec![0; 100]));
+        assert_eq!(q.remove().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn consumer_blocks_until_data() {
+        let q = ByteQueue::new(16);
+        let q2 = q.clone();
+        let handle = thread::spawn(move || q2.remove());
+        thread::sleep(Duration::from_millis(30));
+        q.add(vec![7; 3]);
+        assert_eq!(handle.join().unwrap(), Some(vec![7; 3]));
+    }
+
+    #[test]
+    fn concurrent_stream_integrity() {
+        // Pump 1 MB through a small queue; consumer must see every byte in
+        // order — the property FIVER's checksum correctness rests on.
+        let q = ByteQueue::new(8 * 1024);
+        let q2 = q.clone();
+        let producer = thread::spawn(move || {
+            let mut counter = 0u8;
+            for _ in 0..256 {
+                let buf: Vec<u8> = (0..4096)
+                    .map(|_| {
+                        counter = counter.wrapping_add(1);
+                        counter
+                    })
+                    .collect();
+                assert!(q2.add(buf));
+            }
+            q2.close();
+        });
+        let mut expect = 0u8;
+        let mut total = 0usize;
+        while let Some(buf) = q.remove() {
+            for b in buf {
+                expect = expect.wrapping_add(1);
+                assert_eq!(b, expect);
+                total += 1;
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(total, 256 * 4096);
+    }
+}

@@ -1,0 +1,475 @@
+//! Algorithm 2 — the FIVER receiver, generalized over all five policies.
+//!
+//! Three concurrent roles per session:
+//!
+//! * **data thread** (the caller's thread): reads frames off the data
+//!   channel, writes file bytes to storage, and — in queue mode — feeds the
+//!   shared [`ByteQueue`] so the checksum of the in-flight file proceeds
+//!   without any file I/O (Algorithm 2 lines 5-8).
+//! * **queue hash threads**: one per queue-mode file; consume the queue and
+//!   produce per-unit digests (Algorithm 2's COMPUTECHECKSUM).
+//! * **verify worker**: owns the control channel; sends digests, reads
+//!   verdicts, applies the repair/recompute loop for failed units, and for
+//!   re-read-mode files performs the checksum itself by reading storage
+//!   (the sequential / pipelined checksum station).
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::Frame;
+use super::queue::ByteQueue;
+use super::{RealAlgorithm, SessionConfig};
+use crate::storage::Storage;
+
+/// Receiver-side session summary.
+#[derive(Debug, Default, Clone)]
+pub struct ReceiverReport {
+    pub files_received: usize,
+    pub bytes_received: u64,
+    pub units_verified: u64,
+    /// Digest exchanges that failed (corruption caught).
+    pub units_failed: u64,
+    /// Bytes rewritten by repair frames.
+    pub bytes_repaired: u64,
+}
+
+/// One work item for the verify worker.
+enum Event {
+    /// Verify a unit. `digest` is pre-computed for queue-mode files; for
+    /// re-read mode the worker hashes `[offset, offset+len)` from storage.
+    Verify {
+        file_idx: u32,
+        name: String,
+        unit: u64,
+        offset: u64,
+        len: u64,
+        digest: Option<Vec<u8>>,
+    },
+    /// Repairs for (file_idx, unit) have been applied; recompute and
+    /// re-exchange.
+    Repaired { file_idx: u32, unit: u64 },
+}
+
+/// Serve one session on accepted data/control connections. Blocks until
+/// the sender's `Done` frame; returns the session report.
+pub fn serve_session(
+    data: TcpStream,
+    ctrl: TcpStream,
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+) -> Result<ReceiverReport> {
+    let mut data_in = BufReader::with_capacity(1 << 20, data);
+    let (tx, rx) = mpsc::channel::<Event>();
+
+    // Verify worker: owns both directions of the control channel.
+    let worker_storage = storage.clone();
+    let worker_cfg = cfg.clone();
+    let worker = std::thread::spawn(move || verify_worker(ctrl, worker_storage, &worker_cfg, rx));
+
+    let mut report = ReceiverReport::default();
+    let mut current: Option<FileState> = None;
+    let mut names: HashMap<u32, String> = HashMap::new();
+
+    loop {
+        let frame = Frame::read_from(&mut data_in)
+            .context("reading data frame")?
+            .context("data channel closed before Done")?;
+        match frame {
+            Frame::FileStart { file_idx, size, attempt: _, name } => {
+                anyhow::ensure!(current.is_none(), "nested FileStart");
+                names.insert(file_idx, name.clone());
+                current = Some(FileState::new(file_idx, &name, size, cfg, &storage, &tx)?);
+            }
+            Frame::Data { file_idx, offset, payload } => {
+                let st = current.as_mut().context("Data frame outside a file")?;
+                anyhow::ensure!(st.file_idx == file_idx, "Data for wrong file");
+                report.bytes_received += payload.len() as u64;
+                st.write(offset, payload)?;
+            }
+            Frame::FileEnd { file_idx } => {
+                let mut st = current.take().context("FileEnd outside a file")?;
+                anyhow::ensure!(st.file_idx == file_idx, "FileEnd for wrong file");
+                st.finish()?;
+                report.files_received += 1;
+            }
+            Frame::Fix { file_idx, offset, payload } => {
+                // Repairs may interleave with the next file's stream; route
+                // by the name recorded at FileStart.
+                let name = names
+                    .get(&file_idx)
+                    .with_context(|| format!("Fix for unknown file {file_idx}"))?;
+                let mut w = storage.open_update(name)?;
+                w.write_at(offset, &payload)?;
+                w.flush()?;
+                report.bytes_repaired += payload.len() as u64;
+            }
+            Frame::FixEnd { file_idx, unit } => {
+                tx.send(Event::Repaired { file_idx, unit }).ok();
+            }
+            Frame::Done => break,
+            other => bail!("unexpected frame on data channel: {other:?}"),
+        }
+    }
+    drop(tx);
+    drop(current);
+    let stats = worker.join().expect("verify worker panicked")?;
+    report.units_verified = stats.0;
+    report.units_failed = stats.1;
+    Ok(report)
+}
+
+/// Per-file receive state.
+struct FileState {
+    file_idx: u32,
+    name: String,
+    size: u64,
+    written: u64,
+    writer: Box<dyn crate::storage::WriteStream>,
+    /// Queue + hash thread for FIVER-mode files.
+    queue: Option<ByteQueue>,
+    hash_thread: Option<std::thread::JoinHandle<()>>,
+    /// Re-read mode: units pending emission as writes cross their end
+    /// offset (lets block-level checksums overlap the next block's data).
+    pending_units: Vec<(u64, u64, u64)>,
+    tx: mpsc::Sender<Event>,
+}
+
+impl FileState {
+    fn new(
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        cfg: &SessionConfig,
+        storage: &Arc<dyn Storage>,
+        tx: &mpsc::Sender<Event>,
+    ) -> Result<FileState> {
+        let writer = storage.open_write(name)?;
+        let uses_queue = cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
+        let units = cfg.units_of(size, uses_queue);
+        let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+
+        let (queue, hash_thread) = if uses_queue && verify {
+            let q = ByteQueue::new(cfg.queue_capacity);
+            let q2 = q.clone();
+            let hasher_factory = cfg.hasher.clone();
+            let units2 = units.clone();
+            let tx2 = tx.clone();
+            let name2 = name.to_string();
+            let handle = std::thread::spawn(move || {
+                queue_hash_units(q2, &units2, hasher_factory, |unit, offset, len, digest| {
+                    tx2.send(Event::Verify {
+                        file_idx,
+                        name: name2.clone(),
+                        unit,
+                        offset,
+                        len,
+                        digest: Some(digest),
+                    })
+                    .ok();
+                });
+            });
+            (Some(q), Some(handle))
+        } else {
+            (None, None)
+        };
+        Ok(FileState {
+            file_idx,
+            name: name.to_string(),
+            size,
+            written: 0,
+            writer,
+            queue,
+            hash_thread,
+            pending_units: if verify && !uses_queue { units } else { Vec::new() },
+            tx: tx.clone(),
+        })
+    }
+
+    fn write(&mut self, offset: u64, payload: Vec<u8>) -> Result<()> {
+        self.writer.write_at(offset, &payload)?;
+        self.written = self.written.max(offset + payload.len() as u64);
+        if let Some(q) = &self.queue {
+            // Algorithm 2 line 7: share the received buffer with the
+            // checksum thread — no re-read, no extra syscalls.
+            q.add(payload);
+        }
+        self.emit_completed_units(false);
+        Ok(())
+    }
+
+    /// Emit re-read-mode verification jobs for fully written units.
+    fn emit_completed_units(&mut self, at_eof: bool) {
+        while let Some(&(unit, offset, len)) = self.pending_units.first() {
+            let complete = self.written >= offset + len && (len > 0 || at_eof || self.size == 0);
+            if !complete {
+                break;
+            }
+            self.tx
+                .send(Event::Verify {
+                    file_idx: self.file_idx,
+                    name: self.name.clone(),
+                    unit,
+                    offset,
+                    len,
+                    digest: None,
+                })
+                .ok();
+            self.pending_units.remove(0);
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        if let Some(q) = self.queue.take() {
+            q.close();
+        }
+        if let Some(h) = self.hash_thread.take() {
+            h.join().expect("hash thread panicked");
+        }
+        self.emit_completed_units(true);
+        anyhow::ensure!(
+            self.pending_units.is_empty(),
+            "file {} ended short: {} bytes written of {}",
+            self.name,
+            self.written,
+            self.size
+        );
+        Ok(())
+    }
+}
+
+/// Consume a queue, cutting unit digests at the configured boundaries.
+/// `units` are (id, offset, len) in stream order, contiguous.
+pub(crate) fn queue_hash_units(
+    q: ByteQueue,
+    units: &[(u64, u64, u64)],
+    hasher_factory: super::HasherFactory,
+    mut emit: impl FnMut(u64, u64, u64, Vec<u8>),
+) {
+    let mut idx = 0usize;
+    let mut hasher = hasher_factory();
+    let mut consumed = 0u64;
+    // Zero-length units (empty files) need no data.
+    while idx < units.len() && units[idx].2 == 0 {
+        let (u, o, l) = units[idx];
+        emit(u, o, l, hasher.finalize());
+        hasher.reset();
+        idx += 1;
+    }
+    while idx < units.len() {
+        let Some(buf) = q.remove() else { break };
+        let mut slice = &buf[..];
+        while !slice.is_empty() && idx < units.len() {
+            let (unit, offset, len) = units[idx];
+            let take = ((len - consumed) as usize).min(slice.len());
+            hasher.update(&slice[..take]);
+            consumed += take as u64;
+            slice = &slice[take..];
+            if consumed == len {
+                emit(unit, offset, len, hasher.finalize());
+                hasher.reset();
+                consumed = 0;
+                idx += 1;
+            }
+        }
+    }
+    // Queue closed early (short stream): emit the partial unit so
+    // verification fails closed rather than hanging the session.
+    if idx < units.len() && consumed > 0 {
+        let (unit, offset, len) = units[idx];
+        emit(unit, offset, len, hasher.finalize());
+    }
+}
+
+/// The verify worker: digests out, verdicts in, repair loop.
+fn verify_worker(
+    ctrl: TcpStream,
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    rx: mpsc::Receiver<Event>,
+) -> Result<(u64, u64)> {
+    let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
+    let mut ctrl_out = BufWriter::new(ctrl);
+    let mut verified = 0u64;
+    let mut failed = 0u64;
+    let mut stash: std::collections::VecDeque<Event> = Default::default();
+
+    loop {
+        let ev = match stash.pop_front() {
+            Some(e) => e,
+            None => match rx.recv() {
+                Ok(e) => e,
+                Err(_) => break, // all senders dropped: session over
+            },
+        };
+        let Event::Verify { file_idx, name, unit, offset, len, digest } = ev else {
+            continue; // stray Repaired with no pending verification
+        };
+        // Compute (re-read mode) or take (queue mode) the digest.
+        let mut digest = match digest {
+            Some(d) => d,
+            None => hash_range(&storage, &name, offset, len, &cfg.hasher)?,
+        };
+        loop {
+            Frame::Digest { file_idx, unit, digest: digest.clone() }.write_to(&mut ctrl_out)?;
+            use std::io::Write;
+            ctrl_out.flush()?;
+            let verdict =
+                Frame::read_from(&mut ctrl_in)?.context("ctrl channel closed awaiting verdict")?;
+            match verdict {
+                Frame::Verdict { file_idx: fi, unit: u, ok } => {
+                    anyhow::ensure!(
+                        fi == file_idx && u == unit,
+                        "verdict for wrong unit ({fi},{u}) != ({file_idx},{unit})"
+                    );
+                    if ok {
+                        verified += 1;
+                        break;
+                    }
+                    failed += 1;
+                    // Wait for the repairs to land (FixEnd), stashing other
+                    // files' verification events that arrive meanwhile
+                    // (FIVER keeps streaming during recovery).
+                    loop {
+                        match rx.recv() {
+                            Ok(Event::Repaired { file_idx: fi, unit: u })
+                                if fi == file_idx && u == unit =>
+                            {
+                                break;
+                            }
+                            Ok(other) => stash.push_back(other),
+                            Err(_) => bail!("session ended mid-repair"),
+                        }
+                    }
+                    digest = hash_range(&storage, &name, offset, len, &cfg.hasher)?;
+                }
+                other => bail!("expected Verdict, got {other:?}"),
+            }
+        }
+    }
+    Ok((verified, failed))
+}
+
+/// Hash `[offset, offset+len)` of a stored file (checksum via the
+/// filesystem — the non-FIVER path, and the repair-recompute path).
+pub(crate) fn hash_range(
+    storage: &Arc<dyn Storage>,
+    name: &str,
+    offset: u64,
+    len: u64,
+    hasher_factory: &super::HasherFactory,
+) -> Result<Vec<u8>> {
+    let mut h = hasher_factory();
+    let mut r = storage.open_read(name)?;
+    let mut buf = vec![0u8; 256 * 1024];
+    let mut pos = offset;
+    let end = offset + len;
+    while pos < end {
+        let want = buf.len().min((end - pos) as usize);
+        let n = r.read_at(pos, &mut buf[..want])?;
+        anyhow::ensure!(n > 0, "short read hashing {name} at {pos}");
+        h.update(&buf[..n]);
+        pos += n as u64;
+    }
+    Ok(h.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native_factory;
+    use crate::coordinator::protocol::UNIT_FILE;
+    use crate::hashes::HashAlgorithm;
+    use crate::storage::MemStorage;
+
+    #[test]
+    fn queue_hash_single_unit_matches_oneshot() {
+        let q = ByteQueue::new(1024);
+        let data: Vec<u8> = (0u8..=255).cycle().take(1000).collect();
+        for part in data.chunks(100) {
+            q.add(part.to_vec());
+        }
+        q.close();
+        let mut out = Vec::new();
+        queue_hash_units(
+            q,
+            &[(UNIT_FILE, 0, 1000)],
+            native_factory(HashAlgorithm::Md5),
+            |u, o, l, d| out.push((u, o, l, d)),
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, UNIT_FILE);
+        let expect = crate::hashes::hex_digest(HashAlgorithm::Md5, &data);
+        assert_eq!(crate::util::hex::encode(&out[0].3), expect);
+    }
+
+    #[test]
+    fn queue_hash_chunked_boundaries() {
+        // Buffers deliberately misaligned with the 400-byte units.
+        let q = ByteQueue::new(4096);
+        let data: Vec<u8> = (0u8..=255).cycle().take(1000).collect();
+        for part in data.chunks(333) {
+            q.add(part.to_vec());
+        }
+        q.close();
+        let units = [(0u64, 0u64, 400u64), (1, 400, 400), (2, 800, 200)];
+        let mut out = Vec::new();
+        queue_hash_units(q, &units, native_factory(HashAlgorithm::Sha1), |u, o, l, d| {
+            out.push((u, o, l, d))
+        });
+        assert_eq!(out.len(), 3);
+        for (i, (u, o, l, d)) in out.iter().enumerate() {
+            assert_eq!(*u, i as u64);
+            let expect = crate::hashes::hex_digest(
+                HashAlgorithm::Sha1,
+                &data[*o as usize..(*o + *l) as usize],
+            );
+            assert_eq!(crate::util::hex::encode(d), expect, "unit {u}");
+        }
+    }
+
+    #[test]
+    fn queue_hash_empty_file() {
+        let q = ByteQueue::new(16);
+        q.close();
+        let mut out = Vec::new();
+        queue_hash_units(
+            q,
+            &[(UNIT_FILE, 0, 0)],
+            native_factory(HashAlgorithm::Md5),
+            |u, o, l, d| out.push((u, o, l, d)),
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(crate::util::hex::encode(&out[0].3), "d41d8cd98f00b204e9800998ecf8427e");
+    }
+
+    #[test]
+    fn queue_hash_early_close_emits_partial() {
+        let q = ByteQueue::new(64);
+        q.add(vec![1, 2, 3]);
+        q.close();
+        let mut out = Vec::new();
+        queue_hash_units(q, &[(UNIT_FILE, 0, 100)], native_factory(HashAlgorithm::Md5), |u, o, l, d| {
+            out.push((u, o, l, d))
+        });
+        assert_eq!(out.len(), 1, "partial unit must still emit (fail-closed)");
+    }
+
+    #[test]
+    fn hash_range_matches_slice() {
+        let mem = MemStorage::new();
+        mem.put("f", (0u8..200).collect());
+        let storage: Arc<dyn Storage> = Arc::new(mem);
+        let d = hash_range(&storage, "f", 50, 100, &native_factory(HashAlgorithm::Md5)).unwrap();
+        let expect = crate::hashes::hex_digest(
+            HashAlgorithm::Md5,
+            &(0u8..200).collect::<Vec<_>>()[50..150],
+        );
+        assert_eq!(crate::util::hex::encode(&d), expect);
+    }
+}

@@ -1,0 +1,430 @@
+//! Algorithm 1 — the FIVER sender, generalized over all five policies.
+//!
+//! Concurrent roles:
+//!
+//! * **main thread**: reads source files, streams `Data` frames, and feeds
+//!   the shared queue (Algorithm 1 lines 5-8). Pacing differs per policy:
+//!   Sequential waits for each file's verification; file-/block-level
+//!   pipelining hand re-read checksum jobs to a checksum worker in
+//!   lockstep; FIVER never waits (its checksum rides the queue).
+//! * **queue hash threads**: FIVER's COMPUTECHECKSUM — digest the exact
+//!   bytes that went to the socket, no second read.
+//! * **checksum worker**: the re-read checksum station for the baseline
+//!   policies (depth-1 job channel = the paper's "checksum of file i
+//!   overlaps transfer of file i+1").
+//! * **verifier thread**: owns the control channel; compares receiver
+//!   digests against local ones, issues verdicts, and repairs failed units
+//!   by re-reading the source range and sending `Fix` frames (§IV-A).
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::Frame;
+use super::queue::ByteQueue;
+use super::receiver::{hash_range, queue_hash_units};
+use super::{RealAlgorithm, SessionConfig, TransferReport};
+use crate::faults::{FaultInjector, FaultPlan};
+use crate::storage::Storage;
+
+/// Shared sender state between main, hash threads and the verifier.
+struct Shared {
+    /// Local digests by (file_idx, unit).
+    local: Mutex<HashMap<(u32, u64), Vec<u8>>>,
+    local_cv: Condvar,
+    /// Unverified unit counts per file (present once registered).
+    remaining: Mutex<HashMap<u32, usize>>,
+    remaining_cv: Condvar,
+    all_registered: AtomicBool,
+    failures: AtomicU64,
+    bytes_resent: AtomicU64,
+}
+
+impl Shared {
+    fn new() -> Arc<Shared> {
+        Arc::new(Shared {
+            local: Mutex::new(HashMap::new()),
+            local_cv: Condvar::new(),
+            remaining: Mutex::new(HashMap::new()),
+            remaining_cv: Condvar::new(),
+            all_registered: AtomicBool::new(false),
+            failures: AtomicU64::new(0),
+            bytes_resent: AtomicU64::new(0),
+        })
+    }
+
+    fn put_local(&self, file_idx: u32, unit: u64, digest: Vec<u8>) {
+        self.local.lock().unwrap().insert((file_idx, unit), digest);
+        self.local_cv.notify_all();
+    }
+
+    fn wait_local(&self, file_idx: u32, unit: u64) -> Vec<u8> {
+        let mut g = self.local.lock().unwrap();
+        loop {
+            if let Some(d) = g.get(&(file_idx, unit)) {
+                return d.clone();
+            }
+            g = self.local_cv.wait(g).unwrap();
+        }
+    }
+
+    fn register(&self, file_idx: u32, units: usize) {
+        self.remaining.lock().unwrap().insert(file_idx, units);
+        self.remaining_cv.notify_all();
+    }
+
+    fn unit_ok(&self, file_idx: u32) {
+        let mut g = self.remaining.lock().unwrap();
+        if let Some(n) = g.get_mut(&file_idx) {
+            *n = n.saturating_sub(1);
+        }
+        self.remaining_cv.notify_all();
+    }
+
+    fn wait_file_verified(&self, file_idx: u32) {
+        let mut g = self.remaining.lock().unwrap();
+        while g.get(&file_idx).copied().unwrap_or(0) > 0 {
+            g = self.remaining_cv.wait(g).unwrap();
+        }
+    }
+
+    fn wait_all_verified(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while g.values().any(|&n| n > 0) {
+            g = self.remaining_cv.wait(g).unwrap();
+        }
+    }
+
+    fn all_done(&self) -> bool {
+        self.all_registered.load(Ordering::SeqCst)
+            && self.remaining.lock().unwrap().values().all(|&n| n == 0)
+    }
+}
+
+/// A shareable, mutex-guarded frame writer for the data channel (main
+/// thread's stream + verifier's repair frames interleave at frame
+/// granularity).
+#[derive(Clone)]
+struct DataOut(Arc<Mutex<BufWriter<TcpStream>>>);
+
+impl DataOut {
+    fn send(&self, frame: &Frame) -> Result<()> {
+        let mut g = self.0.lock().unwrap();
+        frame.write_to(&mut *g)?;
+        Ok(())
+    }
+
+    /// Hot path: write a Data frame from a borrowed slice (no Vec built).
+    fn send_data(&self, file_idx: u32, offset: u64, payload: &[u8]) -> Result<()> {
+        let mut g = self.0.lock().unwrap();
+        super::protocol::write_data_frame(&mut *g, file_idx, offset, payload)
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.0.lock().unwrap().flush()?;
+        Ok(())
+    }
+}
+
+/// Run a sender session over connected data/control sockets. `files` are
+/// names resolvable in `storage`, transferred in order.
+pub fn run_sender(
+    data: TcpStream,
+    ctrl: TcpStream,
+    files: &[String],
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    faults: &FaultPlan,
+) -> Result<TransferReport> {
+    let start = Instant::now();
+    let shared = Shared::new();
+    let data_out = DataOut(Arc::new(Mutex::new(BufWriter::with_capacity(1 << 20, data))));
+    let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+
+    // Verifier thread (owns ctrl).
+    let verifier = if verify {
+        let shared2 = shared.clone();
+        let storage2 = storage.clone();
+        let data_out2 = data_out.clone();
+        let cfg2 = cfg.clone();
+        let names: Vec<String> = files.to_vec();
+        Some(std::thread::spawn(move || {
+            run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names)
+        }))
+    } else {
+        None
+    };
+
+    // Re-read checksum worker (the pipelined checksum station). Depth-1
+    // channel: sending the next job blocks until the previous one was
+    // *picked up* — checksum of unit i overlaps transfer of unit i+1 only.
+    let (ck_tx, ck_handle) = if verify {
+        let (tx, rx) = mpsc::sync_channel::<(u32, String, u64, u64, u64)>(1);
+        let shared2 = shared.clone();
+        let storage2 = storage.clone();
+        let hasher = cfg.hasher.clone();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            while let Ok((file_idx, name, unit, offset, len)) = rx.recv() {
+                let digest = hash_range(&storage2, &name, offset, len, &hasher)?;
+                shared2.put_local(file_idx, unit, digest);
+            }
+            Ok(())
+        });
+        (Some(tx), Some(handle))
+    } else {
+        (None, None)
+    };
+
+    let mut injector = FaultInjector::new(faults);
+    let mut report = TransferReport {
+        algorithm: cfg.algorithm.name().to_string(),
+        files: files.len(),
+        ..Default::default()
+    };
+    let mut hash_threads = Vec::new();
+
+    for (i, name) in files.iter().enumerate() {
+        let file_idx = i as u32;
+        let size = storage.size_of(name)?;
+        let uses_queue = cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
+        let units = cfg.units_of(size, uses_queue);
+        if verify {
+            shared.register(file_idx, units.len());
+        }
+        data_out.send(&Frame::FileStart {
+            file_idx,
+            size,
+            attempt: 0,
+            name: name.clone(),
+        })?;
+
+        // FIVER path: queue + hash thread digesting the shared buffers.
+        let queue = if uses_queue && verify {
+            let q = ByteQueue::new(cfg.queue_capacity);
+            let q2 = q.clone();
+            let hasher = cfg.hasher.clone();
+            let units2 = units.clone();
+            let shared2 = shared.clone();
+            hash_threads.push(std::thread::spawn(move || {
+                queue_hash_units(q2, &units2, hasher, |unit, _o, _l, digest| {
+                    shared2.put_local(file_idx, unit, digest);
+                });
+            }));
+            Some(q)
+        } else {
+            None
+        };
+
+        // Stream the file (Algorithm 1 lines 5-8).
+        injector.start_file(i, 0);
+        let mut reader = storage.open_read(name)?;
+        let mut offset = 0u64;
+        let mut unit_cursor = 0usize;
+        while offset < size {
+            let want = cfg.buf_size.min((size - offset) as usize);
+            let mut clean = vec![0u8; want];
+            let n = reader.read_next(&mut clean)?;
+            anyhow::ensure!(n > 0, "short read of {name} at {offset}");
+            clean.truncate(n);
+            // Corruption happens on the wire: flip bits, send, then flip
+            // back (XOR is self-inverse) so the local checksum hashes the
+            // true bytes while the receiver sees the corrupted ones.
+            let flips = injector.corrupt(&mut clean);
+            data_out.send_data(file_idx, offset, &clean)?;
+            for &(pos, bit) in &flips {
+                clean[pos] ^= 1 << bit;
+            }
+            report.bytes_sent += n as u64;
+            offset += n as u64;
+            if let Some(q) = &queue {
+                q.add(clean);
+            }
+            // Re-read-mode: emit checksum jobs for completed units
+            // (block-level overlap within the file).
+            if queue.is_none() && verify {
+                while unit_cursor < units.len() {
+                    let (unit, uoff, ulen) = units[unit_cursor];
+                    if offset >= uoff + ulen && ulen > 0 {
+                        ck_tx.as_ref().unwrap().send((
+                            file_idx,
+                            name.clone(),
+                            unit,
+                            uoff,
+                            ulen,
+                        ))?;
+                        unit_cursor += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        data_out.send(&Frame::FileEnd { file_idx })?;
+        data_out.flush()?;
+        if let Some(q) = queue {
+            q.close();
+        } else if verify {
+            // Remaining units (zero-length files).
+            while unit_cursor < units.len() {
+                let (unit, uoff, ulen) = units[unit_cursor];
+                ck_tx.as_ref().unwrap().send((file_idx, name.clone(), unit, uoff, ulen))?;
+                unit_cursor += 1;
+            }
+        }
+        // Pacing per policy.
+        if verify {
+            let sequential_pace = matches!(cfg.algorithm, RealAlgorithm::Sequential)
+                || (matches!(cfg.algorithm, RealAlgorithm::FiverHybrid) && !uses_queue);
+            if sequential_pace {
+                // Definitionally: verification completes before the next
+                // file starts.
+                shared.wait_file_verified(file_idx);
+            }
+            // File-/block-level pipelining pace through the depth-1 job
+            // channel (the send above blocks appropriately); FIVER doesn't
+            // pace at all.
+        }
+    }
+
+    if verify {
+        shared.all_registered.store(true, Ordering::SeqCst);
+        shared.wait_all_verified();
+    }
+    drop(ck_tx);
+    data_out.send(&Frame::Done)?;
+    data_out.flush()?;
+    for h in hash_threads {
+        h.join().expect("hash thread panicked");
+    }
+    if let Some(h) = ck_handle {
+        h.join().expect("checksum worker panicked")?;
+    }
+    if let Some(v) = verifier {
+        v.join().expect("verifier panicked")?;
+    }
+    report.failures_detected = shared.failures.load(Ordering::SeqCst);
+    report.bytes_resent = shared.bytes_resent.load(Ordering::SeqCst);
+    report.elapsed_secs = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Verifier: match receiver digests against local ones; repair mismatches
+/// by re-reading the source range and sending Fix frames.
+fn run_verifier(
+    ctrl: TcpStream,
+    shared: Arc<Shared>,
+    storage: Arc<dyn Storage>,
+    data_out: DataOut,
+    cfg: &SessionConfig,
+    names: &[String],
+) -> Result<()> {
+    let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
+    let mut ctrl_out = BufWriter::new(ctrl);
+    loop {
+        if shared.all_done() {
+            break;
+        }
+        let frame = match Frame::read_from(&mut ctrl_in)? {
+            Some(f) => f,
+            None => {
+                if shared.all_done() {
+                    break;
+                }
+                bail!("ctrl channel closed with unverified units");
+            }
+        };
+        let Frame::Digest { file_idx, unit, digest } = frame else {
+            bail!("expected Digest on ctrl, got {frame:?}");
+        };
+        let local = shared.wait_local(file_idx, unit);
+        let ok = local == digest;
+        Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
+        ctrl_out.flush()?;
+        if ok {
+            shared.unit_ok(file_idx);
+            continue;
+        }
+        // Mismatch: checksum verification failed — repair the unit
+        // (Algorithm 1 line 21 generalized to sub-file resolution).
+        shared.failures.fetch_add(1, Ordering::SeqCst);
+        let name = &names[file_idx as usize];
+        let size = storage.size_of(name)?;
+        let (offset, len) = unit_range(cfg, unit, size);
+        let mut r = storage.open_read(name)?;
+        let mut pos = offset;
+        let end = offset + len;
+        let mut buf = vec![0u8; cfg.buf_size];
+        while pos < end {
+            let want = buf.len().min((end - pos) as usize);
+            let n = r.read_at(pos, &mut buf[..want])?;
+            anyhow::ensure!(n > 0, "short repair read");
+            data_out.send(&Frame::Fix {
+                file_idx,
+                offset: pos,
+                payload: buf[..n].to_vec(),
+            })?;
+            shared.bytes_resent.fetch_add(n as u64, Ordering::SeqCst);
+            pos += n as u64;
+        }
+        data_out.send(&Frame::FixEnd { file_idx, unit })?;
+        data_out.flush()?;
+        // The receiver recomputes and sends a fresh Digest; handled on the
+        // next loop iteration.
+    }
+    Ok(())
+}
+
+/// Byte range of a verification unit.
+fn unit_range(cfg: &SessionConfig, unit: u64, file_size: u64) -> (u64, u64) {
+    if unit == super::protocol::UNIT_FILE {
+        (0, file_size)
+    } else {
+        let us = cfg.block_size;
+        let offset = unit * us;
+        (offset, us.min(file_size - offset))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native_factory;
+    use crate::hashes::HashAlgorithm;
+
+    #[test]
+    fn unit_range_math() {
+        let mut cfg = SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Md5));
+        cfg.block_size = 100;
+        assert_eq!(unit_range(&cfg, super::super::protocol::UNIT_FILE, 250), (0, 250));
+        assert_eq!(unit_range(&cfg, 0, 250), (0, 100));
+        assert_eq!(unit_range(&cfg, 2, 250), (200, 50));
+    }
+
+    #[test]
+    fn shared_local_digest_rendezvous() {
+        let shared = Shared::new();
+        let s2 = shared.clone();
+        let t = std::thread::spawn(move || s2.wait_local(3, 7));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        shared.put_local(3, 7, vec![0xAB]);
+        assert_eq!(t.join().unwrap(), vec![0xAB]);
+    }
+
+    #[test]
+    fn shared_remaining_tracking() {
+        let shared = Shared::new();
+        shared.register(0, 2);
+        assert!(!shared.all_done());
+        shared.unit_ok(0);
+        shared.unit_ok(0);
+        shared.all_registered.store(true, Ordering::SeqCst);
+        assert!(shared.all_done());
+        shared.wait_file_verified(0); // returns immediately
+        shared.wait_all_verified();
+    }
+}

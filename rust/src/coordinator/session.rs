@@ -1,0 +1,92 @@
+//! Session wiring: bind/connect the data + control channels and run a
+//! sender/receiver pair — the entrypoint examples, tests and the CLI use.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::receiver::{serve_session, ReceiverReport};
+use super::sender::run_sender;
+use super::{SessionConfig, TransferReport};
+use crate::faults::FaultPlan;
+use crate::storage::Storage;
+
+/// A listening receiver endpoint.
+pub struct ReceiverEndpoint {
+    data_listener: TcpListener,
+    ctrl_listener: TcpListener,
+}
+
+impl ReceiverEndpoint {
+    /// Bind on an ephemeral local port pair.
+    pub fn bind_local() -> Result<ReceiverEndpoint> {
+        Ok(ReceiverEndpoint {
+            data_listener: TcpListener::bind("127.0.0.1:0").context("bind data")?,
+            ctrl_listener: TcpListener::bind("127.0.0.1:0").context("bind ctrl")?,
+        })
+    }
+
+    /// Bind on explicit addresses (e.g. "0.0.0.0:7001"/"0.0.0.0:7002").
+    pub fn bind(data_addr: &str, ctrl_addr: &str) -> Result<ReceiverEndpoint> {
+        Ok(ReceiverEndpoint {
+            data_listener: TcpListener::bind(data_addr).context("bind data")?,
+            ctrl_listener: TcpListener::bind(ctrl_addr).context("bind ctrl")?,
+        })
+    }
+
+    /// (data, ctrl) addresses to hand to the sender.
+    pub fn addrs(&self) -> Result<(String, String)> {
+        Ok((
+            self.data_listener.local_addr()?.to_string(),
+            self.ctrl_listener.local_addr()?.to_string(),
+        ))
+    }
+
+    /// Accept one session and serve it to completion.
+    pub fn serve_one(
+        &self,
+        storage: Arc<dyn Storage>,
+        cfg: &SessionConfig,
+    ) -> Result<ReceiverReport> {
+        let (data, _) = self.data_listener.accept().context("accept data")?;
+        let (ctrl, _) = self.ctrl_listener.accept().context("accept ctrl")?;
+        data.set_nodelay(true).ok();
+        ctrl.set_nodelay(true).ok();
+        serve_session(data, ctrl, storage, cfg)
+    }
+}
+
+/// Connect to a receiver and run a sender session.
+pub fn connect_and_send(
+    data_addr: &str,
+    ctrl_addr: &str,
+    files: &[String],
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    faults: &FaultPlan,
+) -> Result<TransferReport> {
+    let data = TcpStream::connect(data_addr).context("connect data")?;
+    let ctrl = TcpStream::connect(ctrl_addr).context("connect ctrl")?;
+    data.set_nodelay(true).ok();
+    ctrl.set_nodelay(true).ok();
+    run_sender(data, ctrl, files, storage, cfg, faults)
+}
+
+/// Run a complete local transfer: receiver thread + sender on the calling
+/// thread, over loopback TCP. Returns both reports.
+pub fn run_local_transfer(
+    files: &[String],
+    src: Arc<dyn Storage>,
+    dst: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    faults: &FaultPlan,
+) -> Result<(TransferReport, ReceiverReport)> {
+    let endpoint = ReceiverEndpoint::bind_local()?;
+    let (data_addr, ctrl_addr) = endpoint.addrs()?;
+    let rcfg = cfg.clone();
+    let receiver = std::thread::spawn(move || endpoint.serve_one(dst, &rcfg));
+    let sender_report = connect_and_send(&data_addr, &ctrl_addr, files, src, cfg, faults)?;
+    let receiver_report = receiver.join().expect("receiver panicked")?;
+    Ok((sender_report, receiver_report))
+}

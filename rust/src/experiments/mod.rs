@@ -1,0 +1,134 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (§IV), regenerating the same rows/series from the simulated testbeds.
+//! See DESIGN.md §4 for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+//!
+//! Run via the `repro-experiments` binary: `repro-experiments fig5`,
+//! `repro-experiments all`, etc.
+
+pub mod ablations;
+pub mod faults_table;
+pub mod hash_fig;
+pub mod overheads;
+pub mod traces;
+
+use crate::config::{AlgoParams, Testbed, GB, MB};
+use crate::workload::Dataset;
+
+/// Render Tables I and II (testbed specifications as configured).
+pub fn tables() -> String {
+    let mut t = crate::util::fmt::Table::new(&[
+        "Testbed", "bandwidth", "RTT", "src disk R", "dst disk W", "MD5 rate", "free mem",
+    ]);
+    for tb in Testbed::all() {
+        t.row(&[
+            tb.name.to_string(),
+            crate::util::fmt::rate_bps(tb.bandwidth * 8.0),
+            format!("{:.1} ms", tb.rtt * 1e3),
+            crate::util::fmt::rate_bps(tb.src.disk_read * 8.0),
+            crate::util::fmt::rate_bps(tb.dst.disk_write * 8.0),
+            crate::util::fmt::rate_bps(tb.src.hash_md5 * 8.0),
+            crate::util::fmt::bytes(tb.src.free_mem),
+        ]);
+    }
+    format!(
+        "Tables I & II — testbed specifications (rates calibrated from the\n\
+         paper's reported achieved numbers, see config/mod.rs):\n{}",
+        t.render()
+    )
+}
+
+/// The uniform datasets used per testbed (file sizes representing "small
+/// and large files in each network", §IV).
+pub fn uniform_datasets(tb: &Testbed) -> Vec<Dataset> {
+    match tb.name {
+        "HPCLab-1G" | "HPCLab-40G" => vec![
+            Dataset::uniform("10M", 10 * MB, 1000),
+            Dataset::uniform("100M", 100 * MB, 100),
+            Dataset::uniform("1G", GB, 10),
+            Dataset::uniform("10G", 10 * GB, 1),
+        ],
+        _ => vec![
+            Dataset::uniform("100M", 100 * MB, 100),
+            Dataset::uniform("1G", GB, 10),
+            Dataset::uniform("10G", 10 * GB, 4),
+            Dataset::uniform("100G", 100 * GB, 1),
+        ],
+    }
+}
+
+/// The mixed datasets per testbed: Shuffled + Sorted-5M250M (§IV).
+pub fn mixed_datasets(tb: &Testbed) -> Vec<Dataset> {
+    let shuffled = match tb.name {
+        "HPCLab-1G" | "HPCLab-40G" => Dataset::hpclab_mixed(42),
+        _ => Dataset::esnet_mixed(42),
+    };
+    vec![shuffled, Dataset::sorted_5m250m(100)]
+}
+
+/// Default parameters (MD5, 256 MB blocks — the paper's configuration).
+pub fn params() -> AlgoParams {
+    AlgoParams::default()
+}
+
+/// Run an experiment by name; `all` runs the full set.
+pub fn run_by_name(name: &str) -> Option<String> {
+    Some(match name {
+        "tables" => tables(),
+        "fig1" => traces::fig1(),
+        "fig3" => overheads::figure(Testbed::hpclab_1g(), "Fig 3"),
+        "fig4" => traces::fig4(),
+        "fig5" => overheads::figure(Testbed::hpclab_40g(), "Fig 5"),
+        "fig6" => overheads::figure(Testbed::esnet_lan(), "Fig 6"),
+        "fig7" => overheads::figure(Testbed::esnet_wan(), "Fig 7"),
+        "fig8" => traces::fig8(),
+        "fig9" => traces::fig9(),
+        "fig10" => hash_fig::fig10(),
+        "table3" => faults_table::table3(),
+        "ablations" => ablations::ablations(),
+        "all" => {
+            let mut out = String::new();
+            for n in ALL {
+                out.push_str(&run_by_name(n).unwrap());
+                out.push_str("\n\n");
+            }
+            out
+        }
+        _ => return None,
+    })
+}
+
+/// All experiment names in paper order.
+pub const ALL: &[&str] = &[
+    "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
+    "ablations",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_by_name_covers_all() {
+        for n in ALL {
+            assert!(run_by_name(n).is_some() || *n == "all", "{n}");
+        }
+        assert!(run_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn tables_render() {
+        let s = tables();
+        assert!(s.contains("ESNet-WAN"));
+        assert!(s.contains("HPCLab-1G"));
+    }
+
+    #[test]
+    fn dataset_sets_per_testbed() {
+        assert_eq!(uniform_datasets(&Testbed::hpclab_1g()).len(), 4);
+        assert_eq!(uniform_datasets(&Testbed::esnet_lan()).len(), 4);
+        let mixed = mixed_datasets(&Testbed::esnet_wan());
+        assert_eq!(mixed.len(), 2);
+        assert_eq!(mixed[0].len(), 271);
+    }
+}

@@ -1,0 +1,140 @@
+//! Overhead bar-chart figures (Figs 3, 5, 6, 7): per testbed, Eq. 1
+//! overhead of Sequential / FileLevelPpl / BlockLevelPpl / FIVER over the
+//! uniform datasets (subfigure a) and the mixed datasets (subfigure b).
+
+use crate::config::Testbed;
+use crate::faults::FaultPlan;
+use crate::sim::algorithms::{run, Algorithm};
+use crate::util::fmt::{pct, secs, Table};
+use crate::workload::Dataset;
+
+/// The four algorithms the paper's overhead figures compare.
+pub const FIGURE_ALGS: [Algorithm; 4] = [
+    Algorithm::Sequential,
+    Algorithm::FileLevelPpl,
+    Algorithm::BlockLevelPpl,
+    Algorithm::Fiver,
+];
+
+/// Paper-reported overhead summaries quoted in §IV text, for side-by-side
+/// comparison in the rendered output.
+fn paper_note(tb: &Testbed) -> &'static str {
+    match tb.name {
+        "HPCLab-1G" => {
+            "paper: FIVER <3% uniform / <1% mixed; FileLevelPpl up to 25% large files;\n\
+             BlockLevelPpl ~FIVER uniform, 6% Shuffled, >20% Sorted-5M250M"
+        }
+        "HPCLab-40G" => {
+            "paper: FIVER <10% uniform, <5% mixed; BlockLevelPpl 13-16% uniform,\n\
+             20% Shuffled, ~60% Sorted; FileLevelPpl up to 70% single-file, 55-60% mixed"
+        }
+        "ESNet-LAN" => {
+            "paper: FIVER <10%; BlockLevelPpl <10% small files, ~15% large, 12%\n\
+             Shuffled, 38% Sorted; FileLevelPpl 52% Shuffled, 39% Sorted"
+        }
+        _ => {
+            "paper: FIVER <10% all types; BlockLevelPpl ~15% uniform, 20% Shuffled,\n\
+             ~61% Sorted; FileLevelPpl >60% mixed"
+        }
+    }
+}
+
+/// Render one overhead figure (both subfigures).
+pub fn figure(tb: Testbed, label: &str) -> String {
+    let mut out = format!(
+        "{label} — overhead (Eq. 1) in {} ({})\n{}\n\n",
+        tb.name,
+        match tb.name {
+            "HPCLab-1G" => "checksum faster than transfer",
+            _ => "transfer faster than checksum",
+        },
+        paper_note(&tb),
+    );
+    out.push_str(&subfigure(tb, &super::uniform_datasets(&tb), "a) uniform datasets"));
+    out.push('\n');
+    out.push_str(&subfigure(tb, &super::mixed_datasets(&tb), "b) mixed datasets"));
+    out
+}
+
+fn subfigure(tb: Testbed, datasets: &[Dataset], caption: &str) -> String {
+    let mut t = Table::new(&[
+        "dataset", "algorithm", "time", "t_transfer", "t_chksum", "overhead",
+    ]);
+    for ds in datasets {
+        for alg in FIGURE_ALGS {
+            let s = run(tb, super::params(), ds, &FaultPlan::none(), alg);
+            t.row(&[
+                ds.name.clone(),
+                s.algorithm.clone(),
+                secs(s.total_time),
+                secs(s.t_transfer_only),
+                secs(s.t_checksum_only),
+                pct(s.overhead()),
+            ]);
+        }
+    }
+    format!("{caption}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoParams, GB, MB};
+    use crate::metrics::RunSummary;
+
+    fn overhead_of(tb: Testbed, ds: &Dataset, alg: Algorithm) -> RunSummary {
+        run(tb, AlgoParams::default(), ds, &FaultPlan::none(), alg)
+    }
+
+    /// Fig 3a shape: in HPCLab-1G every algorithm is cheap for small
+    /// files; file-level pipelining pays ~25% on the single large file.
+    #[test]
+    fn fig3_shape() {
+        let tb = Testbed::hpclab_1g();
+        let small = Dataset::uniform("10M", 10 * MB, 50);
+        for alg in FIGURE_ALGS {
+            let o = overhead_of(tb, &small, alg).overhead();
+            assert!(o < 0.40, "{}: small-file overhead {o}", alg.name());
+        }
+        let large = Dataset::uniform("10G", 10 * GB, 1);
+        let file = overhead_of(tb, &large, Algorithm::FileLevelPpl).overhead();
+        let fiver = overhead_of(tb, &large, Algorithm::Fiver).overhead();
+        assert!(file > 0.15, "file-level on one large file: {file}");
+        assert!(fiver < 0.05, "FIVER on one large file: {fiver}");
+    }
+
+    /// Fig 5 shape: HPCLab-40G, block-level ~13-16% uniform, FIVER <10%.
+    #[test]
+    fn fig5_shape() {
+        let tb = Testbed::hpclab_40g();
+        let ds = Dataset::uniform("1G", GB, 10);
+        let block = overhead_of(tb, &ds, Algorithm::BlockLevelPpl).overhead();
+        let fiver = overhead_of(tb, &ds, Algorithm::Fiver).overhead();
+        assert!(fiver < 0.10, "FIVER {fiver}");
+        assert!(block > fiver, "block {block} > fiver {fiver}");
+        assert!((0.05..0.35).contains(&block), "block {block}");
+    }
+
+    /// Fig 6b/7b shape: Sorted-5M250M punishes block-level pipelining far
+    /// more than Shuffled, and WAN more than LAN.
+    #[test]
+    fn sorted_vs_shuffled_and_wan_amplification() {
+        let sorted = Dataset::sorted_5m250m(30);
+        let lan = overhead_of(Testbed::esnet_lan(), &sorted, Algorithm::BlockLevelPpl).overhead();
+        let wan = overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::BlockLevelPpl).overhead();
+        assert!(lan > 0.20, "LAN sorted block-level {lan}");
+        assert!(wan > lan, "WAN {wan} should exceed LAN {lan}");
+        let fiver_wan = overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::Fiver).overhead();
+        assert!(fiver_wan < 0.10, "FIVER sorted WAN {fiver_wan}");
+    }
+
+    #[test]
+    fn figure_renders() {
+        // Smoke the smallest figure end-to-end (trimmed datasets for speed).
+        let tb = Testbed::hpclab_40g();
+        let ds = [Dataset::uniform("100M", 100 * MB, 5)];
+        let s = subfigure(tb, &ds, "a) uniform");
+        assert!(s.contains("FIVER"));
+        assert!(s.contains("overhead"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Fault injection: silent data corruption on the wire path.
+//!
+//! The paper's Table III experiment "injected faults by flipping a random
+//! bit of randomly-chosen files during the transfer operation". This module
+//! provides the fault plan (which files/offsets corrupt, deterministic by
+//! seed) used by both the simulator and the real-mode coordinator (where
+//! a [`FaultInjector`] literally flips bits in the socket-bound buffers).
+
+use crate::util::rng::SplitMix64;
+use crate::workload::Dataset;
+
+/// One planned corruption: flip `bit` of byte `offset` in file `file_idx`
+/// on its `occurrence`-th transfer attempt (0 = first attempt; re-transfers
+/// of a repaired file are clean unless a later occurrence is planned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub file_idx: usize,
+    pub offset: u64,
+    pub bit: u8,
+    pub occurrence: u32,
+}
+
+/// A deterministic fault plan over a dataset.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// `count` faults on distinct random (file, offset) positions, all on
+    /// first-attempt transfers (the paper's Table III setup: 0 / 8 / 24).
+    /// Byte-position-weighted by file size, as random wire corruption is.
+    pub fn random(dataset: &Dataset, count: usize, seed: u64) -> FaultPlan {
+        let mut rng = SplitMix64::new(seed);
+        let total: u64 = dataset.total_bytes();
+        assert!(total > 0 || count == 0, "cannot corrupt an empty dataset");
+        let mut faults = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut pos = rng.below(total);
+            let mut file_idx = 0;
+            for (i, f) in dataset.files.iter().enumerate() {
+                if pos < f.size {
+                    file_idx = i;
+                    break;
+                }
+                pos -= f.size;
+            }
+            faults.push(Fault {
+                file_idx,
+                offset: pos,
+                bit: (rng.below(8)) as u8,
+                occurrence: 0,
+            });
+        }
+        faults.sort_by_key(|f| (f.file_idx, f.offset));
+        FaultPlan { faults }
+    }
+
+    /// Faults hitting a specific file (for targeted tests).
+    pub fn at(file_idx: usize, offset: u64, bit: u8) -> FaultPlan {
+        FaultPlan { faults: vec![Fault { file_idx, offset, bit, occurrence: 0 }] }
+    }
+
+    /// Faults planned for a given file + attempt.
+    pub fn for_attempt(&self, file_idx: usize, occurrence: u32) -> Vec<Fault> {
+        self.faults
+            .iter()
+            .filter(|f| f.file_idx == file_idx && f.occurrence == occurrence)
+            .copied()
+            .collect()
+    }
+
+    pub fn count(&self) -> usize {
+        self.faults.len()
+    }
+}
+
+/// Applies a fault plan to in-flight buffers (real mode). Tracks the byte
+/// window of the current file as it streams and flips planned bits.
+#[derive(Debug)]
+pub struct FaultInjector {
+    faults: Vec<Fault>,
+    /// Bytes of the current (file, attempt) streamed so far.
+    window_start: u64,
+    current_file: usize,
+    current_attempt: u32,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> FaultInjector {
+        FaultInjector {
+            faults: plan.faults.clone(),
+            window_start: 0,
+            current_file: usize::MAX,
+            current_attempt: 0,
+        }
+    }
+
+    /// Begin streaming `file_idx`, attempt `occurrence`.
+    pub fn start_file(&mut self, file_idx: usize, occurrence: u32) {
+        self.current_file = file_idx;
+        self.current_attempt = occurrence;
+        self.window_start = 0;
+    }
+
+    /// Corrupt `buf` (about to be sent at the current stream position).
+    /// Returns the applied flips as (index-in-buf, bit) — XOR is
+    /// self-inverse, so callers can restore the clean bytes for local
+    /// hashing after putting the corrupted copy on the wire.
+    pub fn corrupt(&mut self, buf: &mut [u8]) -> Vec<(usize, u8)> {
+        let lo = self.window_start;
+        let hi = lo + buf.len() as u64;
+        let mut flipped = Vec::new();
+        for f in &self.faults {
+            if f.file_idx == self.current_file
+                && f.occurrence == self.current_attempt
+                && f.offset >= lo
+                && f.offset < hi
+            {
+                buf[(f.offset - lo) as usize] ^= 1 << f.bit;
+                flipped.push(((f.offset - lo) as usize, f.bit));
+            }
+        }
+        self.window_start = hi;
+        flipped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+
+    fn dataset() -> Dataset {
+        Dataset::uniform("t", 10 * MB, 4)
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let d = dataset();
+        let a = FaultPlan::random(&d, 8, 42);
+        let b = FaultPlan::random(&d, 8, 42);
+        assert_eq!(a.faults, b.faults);
+        let c = FaultPlan::random(&d, 8, 43);
+        assert_ne!(a.faults, c.faults);
+    }
+
+    #[test]
+    fn plan_count_and_bounds() {
+        let d = dataset();
+        let p = FaultPlan::random(&d, 24, 1);
+        assert_eq!(p.count(), 24);
+        for f in &p.faults {
+            assert!(f.file_idx < d.len());
+            assert!(f.offset < d.files[f.file_idx].size);
+            assert!(f.bit < 8);
+        }
+    }
+
+    #[test]
+    fn for_attempt_filters() {
+        let p = FaultPlan::at(2, 100, 3);
+        assert_eq!(p.for_attempt(2, 0).len(), 1);
+        assert_eq!(p.for_attempt(2, 1).len(), 0);
+        assert_eq!(p.for_attempt(1, 0).len(), 0);
+    }
+
+    #[test]
+    fn injector_flips_exactly_planned_bit() {
+        let p = FaultPlan::at(0, 5, 7);
+        let mut inj = FaultInjector::new(&p);
+        inj.start_file(0, 0);
+        let mut buf = vec![0u8; 10];
+        let flipped = inj.corrupt(&mut buf);
+        assert_eq!(flipped, vec![(5, 7)]);
+        assert_eq!(buf[5], 0x80);
+        assert!(buf.iter().enumerate().all(|(i, &b)| i == 5 || b == 0));
+    }
+
+    #[test]
+    fn injector_windows_across_buffers() {
+        let p = FaultPlan::at(0, 15, 0);
+        let mut inj = FaultInjector::new(&p);
+        inj.start_file(0, 0);
+        let mut b1 = vec![0u8; 10];
+        let mut b2 = vec![0u8; 10];
+        assert!(inj.corrupt(&mut b1).is_empty());
+        assert_eq!(inj.corrupt(&mut b2), vec![(5, 0)]);
+        assert_eq!(b2[5], 0x01);
+    }
+
+    #[test]
+    fn retransfer_attempt_is_clean() {
+        let p = FaultPlan::at(0, 5, 0);
+        let mut inj = FaultInjector::new(&p);
+        inj.start_file(0, 1); // second attempt
+        let mut buf = vec![0u8; 10];
+        assert!(inj.corrupt(&mut buf).is_empty());
+    }
+
+    #[test]
+    fn zero_faults_touch_nothing() {
+        let mut inj = FaultInjector::new(&FaultPlan::none());
+        inj.start_file(0, 0);
+        let mut buf = vec![0xFFu8; 64];
+        assert!(inj.corrupt(&mut buf).is_empty());
+        assert!(buf.iter().all(|&b| b == 0xFF));
+    }
+}

@@ -1,0 +1,403 @@
+//! FVR-256 — native Rust port of the block-parallel hash whose normative
+//! definition is the Pallas kernel (`python/compile/kernels/fvr_hash.py`).
+//!
+//! Bit-exact with both the Pallas kernel (hence the AOT HLO artifacts) and
+//! the plain-python `PyFvr256`; cross-checked in tests against
+//! `artifacts/test_vectors.json`. The PJRT execution path
+//! ([`crate::runtime::FvrHasher`]) offloads the *chunk* digest to the
+//! compiled XLA artifact and chains chunk digests with [`absorb8`] exactly
+//! as this module does, so the two paths are interchangeable.
+//!
+//! Layout recap (see the kernel docstring for the rationale):
+//! stream -> chunks of `B*W*4` bytes -> B blocks of W u32 words (LE)
+//! -> per-block absorb8 fold from IV -> binary-tree combine
+//! -> chunk finalize (true length + chunk index + geometry)
+//! -> stream chain: state = absorb8(state, chunk_digest), then final
+//!    absorb8 with [total_lo, total_hi, nchunks, MAGIC_F, MAGIC_R, 0, 0, 0].
+
+use super::Hasher;
+
+pub const LANES: usize = 8;
+pub const M1: u32 = 0x9E3779B1;
+pub const M2: u32 = 0x85EBCA77;
+pub const C0: u32 = 0x7F4A7C15;
+pub const MAGIC_F: u32 = 0x46495645;
+pub const MAGIC_R: u32 = 0x52C3D2E1;
+
+pub const IV: [u32; 8] = [
+    0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
+    0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19,
+];
+
+/// The FVR-256 round function: absorb an 8-word message into an 8-word
+/// state. Must match `fvr_hash.absorb8` / `ref._absorb8` bit-for-bit.
+#[inline]
+pub fn absorb8(state: &[u32; 8], m: &[u32; 8]) -> [u32; 8] {
+    let mut s = [0u32; 8];
+    for i in 0..8 {
+        s[i] = state[i].wrapping_add(C0) ^ m[i].rotate_left(9);
+    }
+    for x in s.iter_mut() {
+        *x = x.wrapping_mul(M1).rotate_left(13);
+    }
+    let mut t = [0u32; 8];
+    for i in 0..8 {
+        // roll(-1): lane i sees lane (i+1) % 8
+        t[i] = s[i].wrapping_add(s[(i + 1) % 8].rotate_left(7));
+    }
+    for x in t.iter_mut() {
+        *x = x.wrapping_mul(M2);
+        *x ^= *x >> 16;
+    }
+    t
+}
+
+/// Hash geometry: how the stream is cut into chunks and blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    /// Blocks per chunk (power of two).
+    pub num_blocks: usize,
+    /// u32 words per block (multiple of 8).
+    pub words_per_block: usize,
+}
+
+impl Geometry {
+    pub const fn new(num_blocks: usize, words_per_block: usize) -> Geometry {
+        Geometry { num_blocks, words_per_block }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.num_blocks.is_power_of_two(), "num_blocks must be a power of two");
+        anyhow::ensure!(self.words_per_block % LANES == 0, "words_per_block must be a multiple of 8");
+        anyhow::ensure!(self.words_per_block > 0, "words_per_block must be positive");
+        Ok(())
+    }
+
+    pub const fn chunk_words(&self) -> usize {
+        self.num_blocks * self.words_per_block
+    }
+
+    pub const fn chunk_bytes(&self) -> usize {
+        self.chunk_words() * 4
+    }
+
+    /// The default 1 MiB geometry (matches artifact variant "1m").
+    pub const DEFAULT: Geometry = Geometry::new(64, 4096);
+    /// 256 KiB geometry (artifact variant "256k").
+    pub const SMALL: Geometry = Geometry::new(16, 4096);
+    /// 4 MiB geometry (artifact variant "4m").
+    pub const LARGE: Geometry = Geometry::new(256, 4096);
+    /// Tiny geometry for tests (64-byte chunks).
+    pub const TINY: Geometry = Geometry::new(2, 8);
+}
+
+/// Digest one block of `words_per_block` u32 words.
+pub fn block_digest(words: &[u32]) -> [u32; 8] {
+    debug_assert_eq!(words.len() % LANES, 0);
+    let mut state = IV;
+    for group in words.chunks_exact(LANES) {
+        state = absorb8(&state, group.try_into().unwrap());
+    }
+    state
+}
+
+/// Load one 32-byte group as 8 LE words (hot path; compiles to plain
+/// unaligned loads).
+#[inline]
+fn load_group(bytes: &[u8]) -> [u32; 8] {
+    let mut m = [0u32; 8];
+    for (i, w) in m.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    m
+}
+
+/// Digest one block directly from bytes (`len == words_per_block * 4`),
+/// avoiding the intermediate word buffer — the streaming hot path.
+pub fn block_digest_bytes(bytes: &[u8]) -> [u32; 8] {
+    debug_assert_eq!(bytes.len() % (LANES * 4), 0);
+    let mut state = IV;
+    for group in bytes.chunks_exact(LANES * 4) {
+        state = absorb8(&state, &load_group(group));
+    }
+    state
+}
+
+/// Digest a *full* chunk directly from bytes with no allocation:
+/// `data.len()` must equal `geo.chunk_bytes()`.
+pub fn chunk_digest_full(geo: Geometry, data: &[u8], chunk_index: u64) -> [u32; 8] {
+    assert_eq!(data.len(), geo.chunk_bytes(), "chunk_digest_full needs a full chunk");
+    let block_bytes = geo.words_per_block * 4;
+    let mut digests: Vec<[u32; 8]> = data
+        .chunks_exact(block_bytes)
+        .map(block_digest_bytes)
+        .collect();
+    while digests.len() > 1 {
+        digests = digests.chunks_exact(2).map(|p| absorb8(&p[0], &p[1])).collect();
+    }
+    let meta = [
+        data.len() as u32,
+        chunk_index as u32,
+        MAGIC_F,
+        MAGIC_R,
+        geo.num_blocks as u32,
+        geo.words_per_block as u32,
+        0,
+        0,
+    ];
+    absorb8(&digests[0], &meta)
+}
+
+/// Digest a full (padded) chunk given as words, binding the true byte
+/// length and stream position. `words.len()` must equal `geo.chunk_words()`.
+pub fn chunk_digest_words(geo: Geometry, words: &[u32], true_len: u64, chunk_index: u64) -> [u32; 8] {
+    assert_eq!(words.len(), geo.chunk_words(), "chunk word count mismatch");
+    let w = geo.words_per_block;
+    let mut digests: Vec<[u32; 8]> = (0..geo.num_blocks)
+        .map(|b| block_digest(&words[b * w..(b + 1) * w]))
+        .collect();
+    while digests.len() > 1 {
+        digests = digests.chunks_exact(2).map(|p| absorb8(&p[0], &p[1])).collect();
+    }
+    let meta = [
+        true_len as u32,
+        chunk_index as u32,
+        MAGIC_F,
+        MAGIC_R,
+        geo.num_blocks as u32,
+        geo.words_per_block as u32,
+        0,
+        0,
+    ];
+    absorb8(&digests[0], &meta)
+}
+
+/// Digest one (possibly short) chunk of bytes: zero-pad to chunk size, pack
+/// into LE words, and run [`chunk_digest_words`].
+pub fn chunk_digest_bytes(geo: Geometry, data: &[u8], chunk_index: u64) -> [u32; 8] {
+    assert!(data.len() <= geo.chunk_bytes(), "chunk too large for geometry");
+    let words = pack_words(geo, data);
+    chunk_digest_words(geo, &words, data.len() as u64, chunk_index)
+}
+
+/// Pack bytes into the chunk's u32 LE word array, zero-padded.
+pub fn pack_words(geo: Geometry, data: &[u8]) -> Vec<u32> {
+    let mut words = vec![0u32; geo.chunk_words()];
+    let mut iter = data.chunks_exact(4);
+    let mut i = 0;
+    for c in &mut iter {
+        words[i] = u32::from_le_bytes(c.try_into().unwrap());
+        i += 1;
+    }
+    let rem = iter.remainder();
+    if !rem.is_empty() {
+        let mut last = [0u8; 4];
+        last[..rem.len()].copy_from_slice(rem);
+        words[i] = u32::from_le_bytes(last);
+    }
+    words
+}
+
+/// Streaming FVR-256 hasher (native compute path).
+pub struct Fvr256 {
+    geo: Geometry,
+    buf: Vec<u8>,
+    state: [u32; 8],
+    chunk_index: u64,
+    total: u64,
+}
+
+impl Default for Fvr256 {
+    fn default() -> Self {
+        Self::new(Geometry::DEFAULT)
+    }
+}
+
+impl Fvr256 {
+    pub fn new(geo: Geometry) -> Self {
+        geo.validate().expect("invalid geometry");
+        Fvr256 { geo, buf: Vec::with_capacity(geo.chunk_bytes()), state: IV, chunk_index: 0, total: 0 }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geo
+    }
+
+    fn absorb_chunk(&mut self, data: &[u8]) {
+        // Full chunks take the allocation-free byte path; only the final
+        // partial chunk pays for padding/packing.
+        let cd = if data.len() == self.geo.chunk_bytes() {
+            chunk_digest_full(self.geo, data, self.chunk_index)
+        } else {
+            chunk_digest_bytes(self.geo, data, self.chunk_index)
+        };
+        self.state = absorb8(&self.state, &cd);
+        self.chunk_index += 1;
+    }
+
+    /// Final file digest as 8 u32 words (the convention the coordinator
+    /// exchanges over the control channel).
+    pub fn digest_words(&mut self) -> [u32; 8] {
+        if !self.buf.is_empty() {
+            let tail = std::mem::take(&mut self.buf);
+            self.absorb_chunk(&tail);
+        }
+        let meta = [
+            self.total as u32,
+            (self.total >> 32) as u32,
+            self.chunk_index as u32,
+            MAGIC_F,
+            MAGIC_R,
+            0,
+            0,
+            0,
+        ];
+        absorb8(&self.state, &meta)
+    }
+}
+
+impl Hasher for Fvr256 {
+    fn update(&mut self, mut data: &[u8]) {
+        self.total += data.len() as u64;
+        let cb = self.geo.chunk_bytes();
+        // Top up the staging buffer first (one memcpy for misaligned
+        // input), absorbing in place when it fills — no drain/realloc.
+        if !self.buf.is_empty() {
+            let need = cb - self.buf.len();
+            let take = need.min(data.len());
+            self.buf.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            if self.buf.len() == cb {
+                let buf = std::mem::take(&mut self.buf);
+                self.absorb_chunk(&buf);
+                self.buf = buf;
+                self.buf.clear();
+            }
+        }
+        // Full chunks straight from the input: zero staging copies.
+        while data.len() >= cb {
+            let (chunk, rest) = data.split_at(cb);
+            self.absorb_chunk(chunk);
+            data = rest;
+        }
+        self.buf.extend_from_slice(data);
+    }
+
+    fn finalize(&mut self) -> Vec<u8> {
+        let words = self.digest_words();
+        // Hex convention: each word rendered big-endian ("{w:08x}") — so the
+        // byte digest is the words in BE order.
+        words.iter().flat_map(|w| w.to_be_bytes()).collect()
+    }
+
+    fn digest_len(&self) -> usize {
+        32
+    }
+
+    fn reset(&mut self) {
+        let geo = self.geo;
+        *self = Fvr256::new(geo);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashes::Hasher;
+    use crate::util::hex;
+
+    fn fvr_hex(data: &[u8], geo: Geometry) -> String {
+        let mut h = Fvr256::new(geo);
+        h.update(data);
+        hex::encode(&h.finalize())
+    }
+
+    #[test]
+    fn absorb8_not_identity_on_zero() {
+        let out = absorb8(&[0; 8], &[0; 8]);
+        assert!(out.iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn absorb8_asymmetric() {
+        let a = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let b = [8u32, 7, 6, 5, 4, 3, 2, 1];
+        assert_ne!(absorb8(&a, &b), absorb8(&b, &a));
+    }
+
+    #[test]
+    fn tree_combine_order_sensitive() {
+        let geo = Geometry::TINY;
+        let mut a = vec![0u8; geo.chunk_bytes()];
+        a[0] = 1; // block 0 differs from block 1
+        let mut b = vec![0u8; geo.chunk_bytes()];
+        b[geo.words_per_block * 4] = 1; // mirrored into block 1
+        assert_ne!(chunk_digest_bytes(geo, &a, 0), chunk_digest_bytes(geo, &b, 0));
+    }
+
+    #[test]
+    fn padding_distinct_from_explicit_zero() {
+        let geo = Geometry::TINY;
+        assert_ne!(fvr_hex(b"abc", geo), fvr_hex(b"abc\x00", geo));
+    }
+
+    #[test]
+    fn split_update_invariance() {
+        let geo = Geometry::TINY;
+        let data: Vec<u8> = (0u8..=255).cycle().take(777).collect();
+        let whole = fvr_hex(&data, geo);
+        for split in [1usize, 7, 63, 64, 65, 128] {
+            let mut h = Fvr256::new(geo);
+            for part in data.chunks(split) {
+                h.update(part);
+            }
+            assert_eq!(hex::encode(&h.finalize()), whole, "split {split}");
+        }
+    }
+
+    #[test]
+    fn chunk_boundary_lengths() {
+        let geo = Geometry::TINY;
+        let cb = geo.chunk_bytes();
+        for n in [0, 1, cb - 1, cb, cb + 1, 2 * cb, 2 * cb + 17] {
+            let data = vec![0xA5u8; n];
+            let whole = fvr_hex(&data, geo);
+            let mut h = Fvr256::new(geo);
+            h.update(&data[..n / 3]);
+            h.update(&data[n / 3..]);
+            assert_eq!(hex::encode(&h.finalize()), whole, "len {n}");
+        }
+    }
+
+    #[test]
+    fn geometry_bound_into_digest() {
+        let data = vec![7u8; 256];
+        assert_ne!(fvr_hex(&data, Geometry::TINY), fvr_hex(&data, Geometry::new(4, 8)));
+    }
+
+    #[test]
+    fn pack_words_le() {
+        let geo = Geometry::TINY;
+        let words = pack_words(geo, &[0x01, 0x02, 0x03, 0x04, 0xAA]);
+        assert_eq!(words[0], 0x04030201);
+        assert_eq!(words[1], 0x000000AA);
+        assert_eq!(words[2], 0);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(Geometry::new(3, 8).validate().is_err());
+        assert!(Geometry::new(2, 12).validate().is_err());
+        assert!(Geometry::new(2, 0).validate().is_err());
+    }
+
+    /// Vector pinned from the python implementation:
+    /// `ref.fvr256_hex(b"hello world")` with default geometry.
+    #[test]
+    fn python_pinned_vector() {
+        assert_eq!(
+            fvr_hex(b"hello world", Geometry::DEFAULT),
+            "86a087538e0dd3bccffe9beb47a9df2872fc093a63e91ebe5cf7a05c314ff9e6"
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! # FIVER — Fast End-to-End Integrity Verification for High-Speed File Transfers
+//!
+//! Reproduction of Arslan & Alhussen (2018). The paper's contribution is a
+//! *coordination* scheme: run the network transfer and the checksum
+//! computation of the **same file** concurrently, sharing one file read
+//! between them through a fixed-size synchronized queue, so end-to-end
+//! integrity verification costs <10% instead of the ~60% imposed by
+//! sequential / file-level / block-level pipelining approaches.
+//!
+//! The crate is organised in the three-layer architecture described in
+//! `DESIGN.md`:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: [`coordinator`] implements
+//!   FIVER, FIVER-Hybrid and the three baseline algorithms over real sockets
+//!   and threads; [`sim`] re-runs the same scheduling policies inside a
+//!   discrete-event testbed model so the paper's 165 GB / 100 Gbps
+//!   experiments reproduce on a laptop.
+//! * **Layer 2/1 (build-time Python)** — the FVR-256 digest pipeline
+//!   (JAX graph + Pallas block-hash kernel), AOT-lowered to HLO text which
+//!   [`runtime`] loads and executes through the XLA PJRT CPU client.
+//!   Python never runs on the transfer path.
+//!
+//! Substrates built in-tree (offline environment, and per the reproduction
+//! mandate): from-scratch MD5/SHA-1/SHA-256 [`hashes`], an LRU page-cache
+//! model [`cache`], a TCP throughput model with slow-start idle reset
+//! [`net`], a discrete-event engine [`sim`], dataset generators
+//! [`workload`], fault injection [`faults`], and a minimal JSON parser
+//! [`util::json`] for the artifact manifest.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod faults;
+pub mod hashes;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

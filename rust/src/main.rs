@@ -1,0 +1,175 @@
+//! `fiver` — CLI for the FIVER integrity-verified transfer system.
+//!
+//! Subcommands:
+//!
+//! * `serve --data <addr> --ctrl <addr> --dir <path> [--alg A] [--hash H]`
+//!   — run a receiver endpoint, serving one session per invocation.
+//! * `send --data <addr> --ctrl <addr> --dir <path> [--alg A] [--hash H]
+//!   <file...>` — transfer files (paths relative to `--dir`) to a receiver.
+//! * `local --alg A --files N --size BYTES [--hash H] [--faults K]`
+//!   — loopback demo: generate a dataset, transfer it through 127.0.0.1,
+//!   verify, report throughput/overhead inputs.
+//! * `hash --hash H <path...>` — checksum files (XLA path with
+//!   `--hash fvr256-xla`).
+//! * `experiment <name>` — alias for the repro-experiments binary.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use fiver::coordinator::session::{connect_and_send, run_local_transfer, ReceiverEndpoint};
+use fiver::coordinator::{native_factory, xla_factory, HasherFactory, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::HashAlgorithm;
+use fiver::storage::{FsStorage, Storage};
+use fiver::util::cli::Args;
+use fiver::util::fmt;
+use fiver::workload::Dataset;
+
+fn hasher_factory(name: &str) -> Result<HasherFactory> {
+    if name.eq_ignore_ascii_case("fvr256-xla") {
+        let dir = fiver::runtime::find_artifacts_dir()?;
+        let manifest = fiver::runtime::Manifest::load(&dir)?;
+        let engine = fiver::runtime::XlaHashEngine::load(&manifest, "1m", false)?;
+        return Ok(xla_factory(engine));
+    }
+    let alg = HashAlgorithm::parse(name)
+        .with_context(|| format!("unknown hash `{name}` (md5|sha1|sha256|fvr256|fvr256-xla)"))?;
+    Ok(native_factory(alg))
+}
+
+fn session_config(args: &Args) -> Result<SessionConfig> {
+    let alg = RealAlgorithm::parse(args.opt_or("alg", "fiver"))
+        .context("unknown --alg (transfer-only|sequential|file|block|fiver|chunk|hybrid)")?;
+    let mut cfg = SessionConfig::new(alg, hasher_factory(args.opt_or("hash", "fvr256"))?);
+    cfg.buf_size = args.opt_u64("buf-size", cfg.buf_size as u64) as usize;
+    cfg.block_size = args.opt_u64("block-size", cfg.block_size);
+    cfg.queue_capacity = args.opt_u64("queue-capacity", cfg.queue_capacity as u64) as usize;
+    cfg.hybrid_threshold = args.opt_u64("hybrid-threshold", cfg.hybrid_threshold);
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[
+        "data", "ctrl", "dir", "alg", "hash", "buf-size", "block-size", "queue-capacity",
+        "hybrid-threshold", "files", "size", "faults", "seed",
+    ]);
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
+        std::process::exit(2);
+    };
+    match cmd {
+        "serve" => serve(&args),
+        "send" => send(&args),
+        "local" => local(&args),
+        "hash" => hash_cmd(&args),
+        "experiment" => {
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            match fiver::experiments::run_by_name(name) {
+                Some(out) => {
+                    println!("{out}");
+                    Ok(())
+                }
+                None => bail!("unknown experiment `{name}` (try: {})", fiver::experiments::ALL.join(", ")),
+            }
+        }
+        other => bail!("unknown subcommand `{other}`"),
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = session_config(args)?;
+    let dir = args.opt("dir").context("--dir required")?;
+    let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
+    let endpoint = ReceiverEndpoint::bind(
+        args.opt_or("data", "0.0.0.0:7001"),
+        args.opt_or("ctrl", "0.0.0.0:7002"),
+    )?;
+    let (d, c) = endpoint.addrs()?;
+    eprintln!("fiver receiver: data={d} ctrl={c} alg={}", cfg.algorithm.name());
+    let report = endpoint.serve_one(storage, &cfg)?;
+    println!(
+        "received {} files / {} ({} units verified, {} failures, {} repaired)",
+        report.files_received,
+        fmt::bytes(report.bytes_received),
+        report.units_verified,
+        report.units_failed,
+        fmt::bytes(report.bytes_repaired),
+    );
+    Ok(())
+}
+
+fn send(args: &Args) -> Result<()> {
+    let cfg = session_config(args)?;
+    let dir = args.opt("dir").context("--dir required")?;
+    let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
+    let files: Vec<String> = args.positional[1..].to_vec();
+    anyhow::ensure!(!files.is_empty(), "no files given");
+    let report = connect_and_send(
+        args.opt_or("data", "127.0.0.1:7001"),
+        args.opt_or("ctrl", "127.0.0.1:7002"),
+        &files,
+        storage,
+        &cfg,
+        &FaultPlan::none(),
+    )?;
+    print_report(&report);
+    Ok(())
+}
+
+fn local(args: &Args) -> Result<()> {
+    let cfg = session_config(args)?;
+    let count = args.opt_u64("files", 8) as usize;
+    let size = args.opt_u64("size", 16 << 20);
+    let fault_count = args.opt_u64("faults", 0) as usize;
+    let seed = args.opt_u64("seed", 42);
+
+    let base = std::env::temp_dir().join(format!("fiver-local-{}", std::process::id()));
+    let ds = Dataset::uniform("demo", size, count);
+    eprintln!(
+        "materializing {} x {} under {} ...",
+        count,
+        fmt::bytes(size),
+        base.display()
+    );
+    ds.materialize(&base.join("src"), seed)?;
+    let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src"))?);
+    let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst"))?);
+    let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
+    let faults = FaultPlan::random(&ds, fault_count, seed);
+    let (report, r) = run_local_transfer(&names, src, dst, &cfg, &faults)?;
+    print_report(&report);
+    println!(
+        "receiver: {} units verified, {} failed, {} repaired",
+        r.units_verified,
+        r.units_failed,
+        fmt::bytes(r.bytes_repaired)
+    );
+    std::fs::remove_dir_all(&base).ok();
+    Ok(())
+}
+
+fn hash_cmd(args: &Args) -> Result<()> {
+    let factory = hasher_factory(args.opt_or("hash", "fvr256-xla"))?;
+    for path in &args.positional[1..] {
+        let data = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let mut h = factory();
+        h.update(&data);
+        println!("{}  {}", fiver::util::hex::encode(&h.finalize()), path);
+    }
+    Ok(())
+}
+
+fn print_report(r: &fiver::coordinator::TransferReport) {
+    let throughput = r.bytes_sent as f64 * 8.0 / r.elapsed_secs;
+    println!(
+        "{}: {} files, {} in {} ({}); {} failures detected, {} resent",
+        r.algorithm,
+        r.files,
+        fmt::bytes(r.bytes_sent),
+        fmt::secs(r.elapsed_secs),
+        fmt::rate_bps(throughput),
+        r.failures_detected,
+        fmt::bytes(r.bytes_resent),
+    );
+}

@@ -1,0 +1,219 @@
+//! Metrics: the paper's Equation 1 overhead, hit-ratio timelines (Figs 1,
+//! 4, 8, 9) and run summaries.
+
+/// The paper's Eq. 1:
+/// `overhead = (t_algorithm - max(t_chksum, t_transfer)) / max(t_chksum, t_transfer)`.
+///
+/// Example from §IV: transfer 90 s, checksum 120 s, FIVER 130 s → 8.3 %.
+pub fn overhead(t_algorithm: f64, t_chksum: f64, t_transfer: f64) -> f64 {
+    let base = t_chksum.max(t_transfer);
+    assert!(base > 0.0, "baseline must be positive");
+    (t_algorithm - base) / base
+}
+
+/// A time-bucketed hit-ratio trace (receiver side unless noted), matching
+/// the paper's per-second cache statistics plots.
+#[derive(Debug, Clone, Default)]
+pub struct HitTrace {
+    /// Bucket width in (virtual) seconds.
+    pub bucket: f64,
+    /// Per-bucket (hit_bytes, miss_bytes).
+    pub samples: Vec<(u64, u64)>,
+}
+
+impl HitTrace {
+    pub fn new(bucket_secs: f64) -> HitTrace {
+        HitTrace { bucket: bucket_secs, samples: Vec::new() }
+    }
+
+    /// Record an access spanning `[t0, t1)` with the given byte counts,
+    /// spread uniformly over the interval's buckets.
+    pub fn record(&mut self, t0: f64, t1: f64, hit_bytes: u64, miss_bytes: u64) {
+        assert!(t1 >= t0);
+        let first = (t0 / self.bucket) as usize;
+        let last = ((t1 / self.bucket) as usize).max(first);
+        let n = last - first + 1;
+        while self.samples.len() <= last {
+            self.samples.push((0, 0));
+        }
+        for i in first..=last {
+            self.samples[i].0 += hit_bytes / n as u64;
+            self.samples[i].1 += miss_bytes / n as u64;
+        }
+        // Remainders to the first bucket (keeps totals exact).
+        self.samples[first].0 += hit_bytes % n as u64;
+        self.samples[first].1 += miss_bytes % n as u64;
+    }
+
+    /// Per-bucket hit ratios; buckets with no accesses yield `None`.
+    pub fn ratios(&self) -> Vec<Option<f64>> {
+        self.samples
+            .iter()
+            .map(|&(h, m)| {
+                if h + m == 0 {
+                    None
+                } else {
+                    Some(h as f64 / (h + m) as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Average hit ratio over all accesses (the paper's "84.1% average hit
+    /// ratio" style numbers).
+    pub fn average(&self) -> f64 {
+        let (h, m) = self
+            .samples
+            .iter()
+            .fold((0u64, 0u64), |(ah, am), &(h, m)| (ah + h, am + m));
+        if h + m == 0 {
+            1.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Mean of the per-bucket hit ratios (the paper's "average hit ratio"
+    /// is the time-average of its plotted per-second series — a long
+    /// low-hit period counts by its duration, not its bytes).
+    pub fn bucket_mean(&self) -> f64 {
+        let ratios: Vec<f64> = self.ratios().into_iter().flatten().collect();
+        if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        }
+    }
+
+    pub fn total_misses(&self) -> u64 {
+        self.samples.iter().map(|&(_, m)| m).sum()
+    }
+
+    /// Fraction of non-empty buckets whose hit ratio is below `threshold`
+    /// (the paper's "hit ratio falls below 10% during checksum of large
+    /// files" observations).
+    pub fn frac_below(&self, threshold: f64) -> f64 {
+        let ratios: Vec<f64> = self.ratios().into_iter().flatten().collect();
+        if ratios.is_empty() {
+            return 0.0;
+        }
+        ratios.iter().filter(|&&r| r < threshold).count() as f64 / ratios.len() as f64
+    }
+
+    /// Render a sparkline for terminal output.
+    pub fn sparkline(&self, width: usize) -> String {
+        const GLYPHS: [char; 9] = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let ratios = self.ratios();
+        if ratios.is_empty() {
+            return String::new();
+        }
+        let step = (ratios.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < ratios.len() && out.chars().count() < width {
+            let r = ratios[i as usize];
+            out.push(match r {
+                None => ' ',
+                Some(v) => GLYPHS[1 + ((v * 7.0).round() as usize).min(7)],
+            });
+            i += step;
+        }
+        out
+    }
+}
+
+/// Summary of one simulated or real run of an algorithm over a dataset.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub algorithm: String,
+    pub dataset: String,
+    pub testbed: String,
+    /// End-to-end wall/virtual time (s).
+    pub total_time: f64,
+    /// Baselines for Eq. 1.
+    pub t_transfer_only: f64,
+    pub t_checksum_only: f64,
+    /// Receiver-side hit trace.
+    pub dst_trace: HitTrace,
+    /// Sender-side hit trace.
+    pub src_trace: HitTrace,
+    /// TCP slow-start restarts incurred.
+    pub tcp_restarts: u64,
+    /// Bytes retransmitted due to verification failures.
+    pub bytes_resent: u64,
+    /// Verification failures detected (== faults caught).
+    pub failures_detected: u64,
+}
+
+impl RunSummary {
+    pub fn overhead(&self) -> f64 {
+        overhead(self.total_time, self.t_checksum_only, self.t_transfer_only)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_paper_example() {
+        // §IV: transfer 90 s, checksum 120 s, algorithm 130 s -> 8.3 %.
+        let o = overhead(130.0, 120.0, 90.0);
+        assert!((o - 0.0833).abs() < 1e-3, "{o}");
+    }
+
+    #[test]
+    fn eq1_can_be_negative() {
+        // An algorithm faster than the slower baseline is possible when the
+        // baseline itself pays I/O contention the algorithm avoids.
+        assert!(overhead(100.0, 120.0, 90.0) < 0.0);
+    }
+
+    #[test]
+    fn trace_records_and_averages() {
+        let mut t = HitTrace::new(1.0);
+        t.record(0.0, 2.0, 100, 100);
+        t.record(2.0, 3.0, 300, 0);
+        assert!((t.average() - 400.0 / 500.0).abs() < 1e-9);
+        assert_eq!(t.total_misses(), 100);
+    }
+
+    #[test]
+    fn trace_ratios_mark_idle_buckets() {
+        let mut t = HitTrace::new(1.0);
+        t.record(0.0, 0.5, 10, 0);
+        t.record(3.0, 3.5, 0, 10);
+        let r = t.ratios();
+        assert_eq!(r[0], Some(1.0));
+        assert_eq!(r[1], None);
+        assert_eq!(r[3], Some(0.0));
+    }
+
+    #[test]
+    fn frac_below_detects_low_periods() {
+        let mut t = HitTrace::new(1.0);
+        t.record(0.0, 1.0, 100, 0); // bucket 0+1: high
+        t.record(2.0, 2.5, 5, 95); // bucket 2: 5%
+        assert!(t.frac_below(0.10) > 0.0);
+    }
+
+    #[test]
+    fn totals_exact_under_spreading() {
+        let mut t = HitTrace::new(1.0);
+        t.record(0.0, 7.0, 1000003, 999999);
+        let (h, m) = t
+            .samples
+            .iter()
+            .fold((0u64, 0u64), |(ah, am), &(h, m)| (ah + h, am + m));
+        assert_eq!(h, 1000003);
+        assert_eq!(m, 999999);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let mut t = HitTrace::new(1.0);
+        t.record(0.0, 4.0, 50, 50);
+        let s = t.sparkline(10);
+        assert!(!s.is_empty());
+    }
+}

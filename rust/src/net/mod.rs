@@ -1,0 +1,244 @@
+//! TCP throughput model: slow start, congestion avoidance toward link
+//! rate, and the RFC 2581 idle restart the paper blames for block-level
+//! pipelining's WAN penalty ("dividing large files into smaller blocks
+//! could deteriorate transfer throughput ... which may trigger TCP window
+//! size reset for every block transfer").
+//!
+//! The model is deliberately a *rate envelope*, not a packet simulator:
+//! the fluid-flow engine ([`crate::sim`]) asks "what send rate does the
+//! connection sustain at time t, and when does that rate next change?" —
+//! enough to reproduce the paper's phenomena (per-block restarts, idle
+//! resets after checksum stalls, RTT-dominated small-file costs) without
+//! simulating 165 GB at MTU granularity.
+
+/// TCP connection parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TcpParams {
+    /// Link (bottleneck) bandwidth in bytes/sec.
+    pub bandwidth: f64,
+    /// Round-trip time in seconds.
+    pub rtt: f64,
+    /// Initial congestion window in bytes (RFC 6928: 10 * MSS).
+    pub init_cwnd: u64,
+    /// Retransmission timeout; idle longer than this resets cwnd
+    /// (RFC 2581 §4.1 restart window). Linux default minimum is 200 ms,
+    /// production RTO ~ max(1s, smoothed RTT); we use max(1s, 2*RTT).
+    pub rto: f64,
+}
+
+impl TcpParams {
+    pub fn new(bandwidth_bytes_per_sec: f64, rtt_secs: f64) -> TcpParams {
+        TcpParams {
+            bandwidth: bandwidth_bytes_per_sec,
+            rtt: rtt_secs,
+            init_cwnd: 10 * 1460,
+            rto: (2.0 * rtt_secs).max(1.0),
+        }
+    }
+
+    /// Bandwidth-delay product in bytes — the cwnd needed to fill the pipe.
+    pub fn bdp(&self) -> f64 {
+        (self.bandwidth * self.rtt).max(self.init_cwnd as f64)
+    }
+}
+
+/// Connection state: tracks cwnd growth and idle periods.
+///
+/// Usage from the fluid engine: call [`on_active`] when a flow (re)starts
+/// using the connection, then repeatedly query [`rate`] /
+/// [`next_rate_change`] as virtual time advances; call [`on_idle_start`]
+/// when the sender stops having data to send.
+#[derive(Debug, Clone)]
+pub struct TcpConn {
+    pub params: TcpParams,
+    /// cwnd in bytes.
+    cwnd: f64,
+    /// Time the connection last sent data (for idle-reset detection).
+    last_send: Option<f64>,
+    /// Number of slow-start restarts incurred (metrics: the paper's
+    /// "TCP window resets").
+    pub restarts: u64,
+}
+
+impl TcpConn {
+    pub fn new(params: TcpParams) -> TcpConn {
+        TcpConn { params, cwnd: params.init_cwnd as f64, last_send: None, restarts: 0 }
+    }
+
+    /// Mark the connection active at `now`. If it had been idle longer than
+    /// RTO, the congestion window collapses back to the restart window
+    /// (slow start restart) — the penalty block-level pipelining pays per
+    /// block when checksum is the bottleneck.
+    pub fn on_active(&mut self, now: f64) {
+        if let Some(last) = self.last_send {
+            if now - last > self.params.rto && self.cwnd > self.params.init_cwnd as f64 {
+                self.cwnd = self.params.init_cwnd as f64;
+                self.restarts += 1;
+            }
+        }
+        self.last_send = Some(now);
+    }
+
+    /// Record that data flowed up to time `now` (keeps idle detection
+    /// accurate) and grow cwnd for the elapsed active period: doubling per
+    /// RTT (slow start) until the BDP, then capped (the paper's fabrics are
+    /// loss-free at these utilizations, so we stay at the envelope).
+    pub fn advance(&mut self, from: f64, to: f64) {
+        debug_assert!(to >= from);
+        let bdp = self.params.bdp();
+        if self.cwnd < bdp {
+            let rtts = (to - from) / self.params.rtt;
+            self.cwnd = (self.cwnd * 2f64.powf(rtts)).min(bdp);
+        }
+        self.last_send = Some(to);
+    }
+
+    /// Instantaneous sustainable send rate (bytes/sec).
+    pub fn rate(&self) -> f64 {
+        (self.cwnd / self.params.rtt).min(self.params.bandwidth)
+    }
+
+    /// Time until the rate next changes materially (None if at link rate).
+    /// The engine uses this to bound its integration steps during slow
+    /// start; one RTT per step reproduces doubling behaviour.
+    pub fn next_rate_change(&self) -> Option<f64> {
+        if self.rate() >= self.params.bandwidth * 0.999 {
+            None
+        } else {
+            Some(self.params.rtt)
+        }
+    }
+
+    /// Called when the sender goes idle at `now` (e.g. sequential transfer
+    /// entering its checksum phase, or block pipelining stalling on the
+    /// checksum station).
+    pub fn on_idle_start(&mut self, now: f64) {
+        self.last_send = Some(now);
+    }
+
+    /// Seconds to move `bytes` through this connection starting at `now`,
+    /// assuming the connection is the only bottleneck (used for analytic
+    /// shortcuts and tests; the fluid engine integrates rate() instead).
+    pub fn transfer_time(&mut self, now: f64, bytes: u64) -> f64 {
+        self.on_active(now);
+        let mut t = 0.0;
+        let mut remaining = bytes as f64;
+        // Integrate slow start RTT by RTT, then finish at link rate.
+        loop {
+            let rate = self.rate();
+            if self.next_rate_change().is_none() {
+                t += remaining / rate;
+                self.advance(now + t, now + t);
+                self.last_send = Some(now + t);
+                return t;
+            }
+            let step = self.params.rtt;
+            let sent = rate * step;
+            if sent >= remaining {
+                t += remaining / rate;
+                self.last_send = Some(now + t);
+                return t;
+            }
+            remaining -= sent;
+            let from = now + t;
+            t += step;
+            self.advance(from, now + t);
+        }
+    }
+
+    /// Current congestion window (bytes), exposed for tests/metrics.
+    pub fn cwnd(&self) -> f64 {
+        self.cwnd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gbps(g: f64) -> f64 {
+        g * 1e9 / 8.0
+    }
+
+    #[test]
+    fn bdp_dominates_lan() {
+        // LAN: tiny RTT -> BDP ~ init window -> immediately at link rate.
+        let p = TcpParams::new(gbps(1.0), 0.0002);
+        let c = TcpConn::new(p);
+        assert!(c.rate() >= p.bandwidth * 0.5, "LAN connection starts near line rate");
+    }
+
+    #[test]
+    fn wan_slow_start_ramps() {
+        let p = TcpParams::new(gbps(40.0), 0.089);
+        let mut c = TcpConn::new(p);
+        c.on_active(0.0);
+        let r0 = c.rate();
+        c.advance(0.0, 5.0 * p.rtt);
+        assert!(c.rate() > 20.0 * r0, "five RTTs of doubling: {} -> {}", r0, c.rate());
+        assert!(c.rate() <= p.bandwidth);
+    }
+
+    #[test]
+    fn reaches_link_rate_eventually() {
+        let p = TcpParams::new(gbps(40.0), 0.089);
+        let mut c = TcpConn::new(p);
+        c.on_active(0.0);
+        c.advance(0.0, 100.0 * p.rtt);
+        assert!(c.rate() >= p.bandwidth * 0.999);
+        assert!(c.next_rate_change().is_none());
+    }
+
+    #[test]
+    fn idle_reset_collapses_cwnd() {
+        let p = TcpParams::new(gbps(40.0), 0.089);
+        let mut c = TcpConn::new(p);
+        c.on_active(0.0);
+        c.advance(0.0, 10.0); // fully ramped
+        let fast = c.rate();
+        c.on_idle_start(10.0);
+        c.on_active(20.0); // idle 10 s >> RTO
+        assert!(c.rate() < fast / 100.0, "cwnd should collapse after idle");
+        assert_eq!(c.restarts, 1);
+    }
+
+    #[test]
+    fn short_idle_does_not_reset() {
+        let p = TcpParams::new(gbps(40.0), 0.089);
+        let mut c = TcpConn::new(p);
+        c.on_active(0.0);
+        c.advance(0.0, 10.0);
+        let fast = c.rate();
+        c.on_idle_start(10.0);
+        c.on_active(10.0 + p.rto * 0.5);
+        assert_eq!(c.rate(), fast);
+        assert_eq!(c.restarts, 0);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let p = TcpParams::new(gbps(1.0), 0.03);
+        let t1 = TcpConn::new(p).transfer_time(0.0, 10 << 20);
+        let t2 = TcpConn::new(p).transfer_time(0.0, 100 << 20);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn transfer_time_close_to_ideal_for_large_files() {
+        let p = TcpParams::new(gbps(1.0), 0.0002);
+        let bytes = 1u64 << 30;
+        let t = TcpConn::new(p).transfer_time(0.0, bytes);
+        let ideal = bytes as f64 / p.bandwidth;
+        assert!(t >= ideal);
+        assert!(t < ideal * 1.1, "LAN large transfer within 10% of line rate: {t} vs {ideal}");
+    }
+
+    #[test]
+    fn small_file_wan_dominated_by_rampup() {
+        let p = TcpParams::new(gbps(40.0), 0.089);
+        let bytes = 10u64 << 20; // 10 MB
+        let t = TcpConn::new(p).transfer_time(0.0, bytes);
+        let ideal = bytes as f64 / p.bandwidth;
+        assert!(t > 5.0 * ideal, "WAN small file pays slow start: {t} vs {ideal}");
+    }
+}

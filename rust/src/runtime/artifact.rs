@@ -1,0 +1,154 @@
+//! Artifact manifest: discovers and describes the AOT-lowered HLO modules.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::hashes::fvr256::Geometry;
+use crate::util::json::Json;
+
+/// One lowered chunk-size variant from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub geometry: Geometry,
+    /// HLO text file of the Pallas-kernel pipeline.
+    pub artifact: String,
+    /// HLO text file of the pure-jnp reference pipeline (for A/B tests).
+    pub artifact_ref: String,
+}
+
+impl VariantInfo {
+    pub fn chunk_bytes(&self) -> usize {
+        self.geometry.chunk_bytes()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantInfo>,
+}
+
+impl Manifest {
+    /// Load the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = Vec::new();
+        for v in root
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing `variants`")?
+        {
+            let name = v.get("name").and_then(|j| j.as_str()).context("variant name")?;
+            let num_blocks =
+                v.get("num_blocks").and_then(|j| j.as_u64()).context("num_blocks")? as usize;
+            let wpb = v
+                .get("words_per_block")
+                .and_then(|j| j.as_u64())
+                .context("words_per_block")? as usize;
+            let geometry = Geometry::new(num_blocks, wpb);
+            geometry.validate()?;
+            variants.push(VariantInfo {
+                name: name.to_string(),
+                geometry,
+                artifact: v
+                    .get("artifact")
+                    .and_then(|j| j.as_str())
+                    .context("artifact")?
+                    .to_string(),
+                artifact_ref: v
+                    .get("artifact_ref")
+                    .and_then(|j| j.as_str())
+                    .context("artifact_ref")?
+                    .to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest lists no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Find a variant by name ("256k", "1m", "4m").
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("no artifact variant named `{name}`"))
+    }
+
+    /// Find the variant matching a geometry.
+    pub fn variant_for(&self, geo: Geometry) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| v.geometry == geo)
+            .with_context(|| format!("no artifact variant with geometry {geo:?}"))
+    }
+
+    /// Absolute path of a variant's HLO file.
+    pub fn hlo_path(&self, v: &VariantInfo, use_ref: bool) -> PathBuf {
+        self.dir.join(if use_ref { &v.artifact_ref } else { &v.artifact })
+    }
+}
+
+/// Locate the artifacts directory: `$FIVER_ARTIFACTS`, else `./artifacts`,
+/// else walking up from the current directory (so tests and examples work
+/// from any workspace subdirectory).
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("FIVER_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+        bail!("$FIVER_ARTIFACTS={} has no manifest.json", p.display());
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("artifacts/ not found (run `make artifacts` at the repo root)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        find_artifacts_dir().ok().and_then(|d| Manifest::load(&d).ok())
+    }
+
+    #[test]
+    fn loads_manifest_with_expected_variants() {
+        let Some(m) = manifest() else { return }; // skip if artifacts absent
+        let names: Vec<&str> = m.variants.iter().map(|v| v.name.as_str()).collect();
+        assert!(names.contains(&"1m"), "variants: {names:?}");
+        let v = m.variant("1m").unwrap();
+        assert_eq!(v.geometry, Geometry::DEFAULT);
+        assert_eq!(v.chunk_bytes(), 1 << 20);
+        assert!(m.hlo_path(v, false).exists());
+        assert!(m.hlo_path(v, true).exists());
+    }
+
+    #[test]
+    fn variant_lookup_by_geometry() {
+        let Some(m) = manifest() else { return };
+        assert!(m.variant_for(Geometry::SMALL).is_ok());
+        assert!(m.variant_for(Geometry::TINY).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some(m) = manifest() else { return };
+        assert!(m.variant("16m").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! PJRT execution engine for the FVR-256 chunk-digest artifacts.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{Manifest, VariantInfo};
+use crate::hashes::fvr256::Geometry;
+
+/// A compiled chunk-digest executable plus its geometry.
+struct Compiled {
+    geometry: Geometry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Executes AOT-compiled FVR-256 chunk digests through the PJRT CPU client.
+///
+/// Thread-safety: `PjRtClient` and `PjRtLoadedExecutable` are documented
+/// thread-safe in PJRT (concurrent `Execute` calls are part of the API
+/// contract); the `xla` crate wrapper is `!Send` only because it holds raw
+/// pointers. We assert `Send + Sync` on that basis and execute WITHOUT a
+/// lock — FIVER's whole point is that the sender-side and receiver-side
+/// checksum threads run concurrently, and serializing them through a mutex
+/// was measured to double end-to-end time (EXPERIMENTS.md §Perf). The
+/// engine is cheap to clone (`Arc` inside) so all threads share one
+/// compiled executable.
+#[derive(Clone)]
+pub struct XlaHashEngine {
+    inner: Arc<Compiled>,
+    name: String,
+}
+
+// SAFETY: the PJRT CPU client's compile/execute/transfer entry points are
+// thread-safe per the PJRT API contract; no interior mutation happens on
+// the Rust side after construction.
+unsafe impl Send for XlaHashEngine {}
+unsafe impl Sync for XlaHashEngine {}
+
+impl XlaHashEngine {
+    /// Compile the artifact for `variant` ("256k" | "1m" | "4m"). With
+    /// `use_ref` the pure-jnp reference lowering is compiled instead of the
+    /// Pallas-kernel lowering (for A/B testing).
+    pub fn load(manifest: &Manifest, variant: &str, use_ref: bool) -> Result<XlaHashEngine> {
+        let info = manifest.variant(variant)?;
+        Self::load_variant(manifest, info, use_ref)
+    }
+
+    pub fn load_variant(
+        manifest: &Manifest,
+        info: &VariantInfo,
+        use_ref: bool,
+    ) -> Result<XlaHashEngine> {
+        let path = manifest.hlo_path(info, use_ref);
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let exe = Self::compile(&client, &path)?;
+        Ok(XlaHashEngine {
+            inner: Arc::new(Compiled { geometry: info.geometry, exe }),
+            name: format!("{}{}", info.name, if use_ref { "-ref" } else { "" }),
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        // HLO *text* interchange: the 0.5.1 xla_extension rejects jax>=0.5
+        // serialized protos (64-bit instruction ids); the text parser
+        // reassigns ids. See /opt/xla-example/README.md.
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.inner.geometry
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute one chunk digest: `words` must be exactly `chunk_words()`
+    /// LE-packed u32s (zero-padded); `true_len` is the pre-padding byte
+    /// count; `chunk_index` the chunk's position in the stream.
+    pub fn chunk_digest_words(
+        &self,
+        words: &[u32],
+        true_len: u64,
+        chunk_index: u64,
+    ) -> Result<[u32; 8]> {
+        anyhow::ensure!(
+            words.len() == self.inner.geometry.chunk_words(),
+            "expected {} words, got {}",
+            self.inner.geometry.chunk_words(),
+            words.len()
+        );
+        let chunk = xla::Literal::vec1(words);
+        let len_lit = xla::Literal::vec1(&[true_len as u32]);
+        let idx_lit = xla::Literal::vec1(&[chunk_index as u32]);
+        let result = self
+            .inner
+            .exe
+            .execute::<xla::Literal>(&[chunk, len_lit, idx_lit])
+            .map_err(|e| anyhow::anyhow!("PJRT execute failed: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("device->host transfer failed: {e:?}"))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("expected 1-tuple result: {e:?}"))?;
+        let vec = out
+            .to_vec::<u32>()
+            .map_err(|e| anyhow::anyhow!("expected u32[8] digest: {e:?}"))?;
+        anyhow::ensure!(vec.len() == 8, "digest length {} != 8", vec.len());
+        let mut digest = [0u32; 8];
+        digest.copy_from_slice(&vec);
+        Ok(digest)
+    }
+
+    /// Digest a (possibly short) chunk of bytes: LE-pack + zero-pad + run.
+    pub fn chunk_digest_bytes(&self, data: &[u8], chunk_index: u64) -> Result<[u32; 8]> {
+        let geo = self.geometry();
+        anyhow::ensure!(data.len() <= geo.chunk_bytes(), "chunk larger than geometry");
+        let words = crate::hashes::fvr256::pack_words(geo, data);
+        self.chunk_digest_words(&words, data.len() as u64, chunk_index)
+    }
+}

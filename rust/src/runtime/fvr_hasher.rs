@@ -1,0 +1,122 @@
+//! Streaming FVR-256 hasher backed by the XLA/PJRT artifact.
+//!
+//! Chunk digests run on the compiled HLO module ([`XlaHashEngine`]); the
+//! cross-chunk chaining (absorb + final length binding) runs natively and
+//! is bit-exact with [`crate::hashes::fvr256::Fvr256`] — tests assert the
+//! two produce identical digests, which is the end-to-end proof that the
+//! Pallas kernel, the jnp reference, the python spec and the Rust port all
+//! agree.
+
+use crate::hashes::fvr256::{absorb8, IV, MAGIC_F, MAGIC_R};
+use crate::hashes::Hasher;
+
+use super::XlaHashEngine;
+
+/// Streaming hasher over the PJRT executable. Construct per file (or
+/// [`reset`](Hasher::reset) between files); clone the engine freely across
+/// threads.
+pub struct FvrHasher {
+    engine: XlaHashEngine,
+    buf: Vec<u8>,
+    state: [u32; 8],
+    chunk_index: u64,
+    total: u64,
+    /// Set if a PJRT execution failed; surfaced on finalize.
+    error: Option<String>,
+}
+
+impl FvrHasher {
+    pub fn new(engine: XlaHashEngine) -> FvrHasher {
+        let cap = engine.geometry().chunk_bytes();
+        FvrHasher {
+            engine,
+            buf: Vec::with_capacity(cap),
+            state: IV,
+            chunk_index: 0,
+            total: 0,
+            error: None,
+        }
+    }
+
+    fn absorb_chunk(&mut self, data: &[u8]) {
+        if self.error.is_some() {
+            return;
+        }
+        match self.engine.chunk_digest_bytes(data, self.chunk_index) {
+            Ok(cd) => {
+                self.state = absorb8(&self.state, &cd);
+                self.chunk_index += 1;
+            }
+            Err(e) => self.error = Some(e.to_string()),
+        }
+    }
+
+    /// Final digest as words; `Err` if any PJRT execution failed.
+    pub fn digest_words(&mut self) -> anyhow::Result<[u32; 8]> {
+        if !self.buf.is_empty() {
+            let tail = std::mem::take(&mut self.buf);
+            self.absorb_chunk(&tail);
+        }
+        if let Some(e) = &self.error {
+            anyhow::bail!("XLA hash execution failed: {e}");
+        }
+        let meta = [
+            self.total as u32,
+            (self.total >> 32) as u32,
+            self.chunk_index as u32,
+            MAGIC_F,
+            MAGIC_R,
+            0,
+            0,
+            0,
+        ];
+        Ok(absorb8(&self.state, &meta))
+    }
+}
+
+impl Hasher for FvrHasher {
+    fn update(&mut self, mut data: &[u8]) {
+        self.total += data.len() as u64;
+        let cb = self.engine.geometry().chunk_bytes();
+        if !self.buf.is_empty() {
+            let need = cb - self.buf.len();
+            let take = need.min(data.len());
+            self.buf.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            if self.buf.len() == cb {
+                let buf = std::mem::take(&mut self.buf);
+                self.absorb_chunk(&buf);
+                self.buf = buf;
+                self.buf.clear();
+            }
+        }
+        while data.len() >= cb {
+            let (chunk, rest) = data.split_at(cb);
+            self.absorb_chunk(chunk);
+            data = rest;
+        }
+        self.buf.extend_from_slice(data);
+    }
+
+    fn finalize(&mut self) -> Vec<u8> {
+        // Hasher's infallible interface: a PJRT failure yields an
+        // all-zero digest, which can never match a healthy peer digest,
+        // so verification fails closed. digest_words() exposes the error.
+        match self.digest_words() {
+            Ok(words) => words.iter().flat_map(|w| w.to_be_bytes()).collect(),
+            Err(_) => vec![0u8; 32],
+        }
+    }
+
+    fn digest_len(&self) -> usize {
+        32
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+        self.state = IV;
+        self.chunk_index = 0;
+        self.total = 0;
+        self.error = None;
+    }
+}

@@ -1,0 +1,27 @@
+//! XLA/PJRT runtime: loads the AOT-compiled FVR-256 chunk-digest artifacts
+//! (HLO text emitted by `python/compile/aot.py`) and executes them on the
+//! PJRT CPU client from the Rust transfer path.
+//!
+//! This is the boundary of the three-layer architecture: everything below
+//! this module is plain Rust; everything that produced `artifacts/` was
+//! build-time Python. The calling convention is pinned by
+//! `artifacts/manifest.json`:
+//!
+//! ```text
+//! params:  u32[B*W] chunk words (LE-packed), u32[1] true byte length,
+//!          u32[1] chunk index
+//! result:  1-tuple of u32[8]  (lowered with return_tuple=True)
+//! ```
+//!
+//! [`XlaHashEngine`] owns the compiled executables; [`FvrHasher`] is the
+//! streaming [`crate::hashes::Hasher`] that offloads chunk digests to the
+//! engine and chains them natively (bit-exact with
+//! [`crate::hashes::fvr256`]).
+
+mod artifact;
+mod engine;
+mod fvr_hasher;
+
+pub use artifact::{find_artifacts_dir, Manifest, VariantInfo};
+pub use engine::XlaHashEngine;
+pub use fvr_hasher::FvrHasher;

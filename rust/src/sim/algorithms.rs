@@ -1,0 +1,550 @@
+//! Simulated drivers for the five integrity-verification algorithms
+//! (paper §III/§IV, Fig 2): Sequential, file-level pipelining, block-level
+//! pipelining, FIVER (file- and chunk-level verification) and FIVER-Hybrid.
+//!
+//! Modeling decisions (calibrated against the paper's own reported numbers,
+//! see DESIGN.md §2 and EXPERIMENTS.md):
+//!
+//! * **Pipelined stations are lockstep**: "transfer of a file is overlapped
+//!   with checksum calculation of another file" — at any instant one unit
+//!   transfers while the *previous* unit checksums; a round ends when both
+//!   finish (this is what makes Sorted-5M250M adversarial: a 250 MB
+//!   checksum pairs with a 5 MB transfer and vice versa).
+//! * **Filesystem-fed checksums pay a read-path factor**
+//!   ([`crate::config::AlgoParams::fs_read_factor`], default 1.12): per the
+//!   paper, pipelined checksum processes "execute system calls to open and
+//!   read files ... which causes overhead because of context switching
+//!   between user and kernel modes", while FIVER's queue handoff does not.
+//! * **Transfer-station stalls cost a resume bubble** of 0.5 RTT (ACK-clock
+//!   restart) and, past the RTO, a full slow-start restart
+//!   ([`crate::net::TcpConn::on_active`]) — the WAN penalty the paper
+//!   ascribes to per-block idle periods.
+//! * **Control exchanges**: Sequential serializes one control RTT per file
+//!   (verify-before-next-file is its definition); the pipelined algorithms
+//!   and FIVER overlap digest exchange with subsequent data (FIVER's
+//!   checksum thread owns the control channel; Algorithm 1 line 19) and pay
+//!   one RTT at dataset end.
+
+use crate::config::{AlgoParams, Testbed};
+use crate::faults::FaultPlan;
+use crate::metrics::RunSummary;
+use crate::sim::testbed::{Side, SimEnv};
+use crate::workload::{Dataset, FileSpec};
+
+/// Algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Transfer file, then checksum it, then next file (Fig 2a).
+    Sequential,
+    /// Globus-style: checksum of file i overlaps transfer of file i+1.
+    FileLevelPpl,
+    /// Liu et al.: files split into blocks; checksum of block i overlaps
+    /// transfer of block i+1.
+    BlockLevelPpl,
+    /// FIVER with file-level verification (Algorithms 1 & 2).
+    Fiver,
+    /// FIVER with chunk-level verification (§IV-A, Table III).
+    FiverChunk,
+    /// FIVER for files smaller than free memory, Sequential otherwise
+    /// (§IV-B, Fig 9).
+    FiverHybrid,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Sequential => "Sequential",
+            Algorithm::FileLevelPpl => "FileLevelPpl",
+            Algorithm::BlockLevelPpl => "BlockLevelPpl",
+            Algorithm::Fiver => "FIVER",
+            Algorithm::FiverChunk => "FIVER-Chunk",
+            Algorithm::FiverHybrid => "FIVER-Hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Some(Algorithm::Sequential),
+            "filelevelppl" | "file" | "file-level" => Some(Algorithm::FileLevelPpl),
+            "blocklevelppl" | "block" | "block-level" => Some(Algorithm::BlockLevelPpl),
+            "fiver" => Some(Algorithm::Fiver),
+            "fiver-chunk" | "fiverchunk" | "chunk" => Some(Algorithm::FiverChunk),
+            "fiver-hybrid" | "fiverhybrid" | "hybrid" => Some(Algorithm::FiverHybrid),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Algorithm; 6] {
+        [
+            Algorithm::Sequential,
+            Algorithm::FileLevelPpl,
+            Algorithm::BlockLevelPpl,
+            Algorithm::Fiver,
+            Algorithm::FiverChunk,
+            Algorithm::FiverHybrid,
+        ]
+    }
+}
+
+/// A transfer/verify unit: a whole file or one block of it.
+#[derive(Debug, Clone)]
+struct Unit {
+    file_idx: usize,
+    offset: u64,
+    len: u64,
+    attempt: u32,
+}
+
+/// Baseline: dataset transfer with no integrity verification (Eq. 1's
+/// `t_transfer`). Back-to-back transfers on a persistent connection,
+/// pipelined control, one final RTT.
+pub fn transfer_only(tb: Testbed, params: AlgoParams, ds: &Dataset) -> f64 {
+    let mut env = SimEnv::new(tb, params);
+    for f in &ds.files {
+        let flow = env.start_transfer(f, 0, f.size);
+        env.pump_until(flow);
+    }
+    let t = env.start_timer(tb.rtt);
+    env.pump_until(t);
+    env.now()
+}
+
+/// Baseline: checksum of the dataset at both hosts with no transfer (Eq.
+/// 1's `t_chksum`): cold sequential reads from disk, one hash core per
+/// host, hosts in parallel — total is the slower host.
+pub fn checksum_only(tb: Testbed, params: AlgoParams, ds: &Dataset) -> f64 {
+    let mut env = SimEnv::new(tb, params);
+    let mut idx = [0usize; 2];
+    let mut cur: [Option<crate::sim::FlowId>; 2] = [None, None];
+    loop {
+        for (s, side) in [Side::Src, Side::Dst].into_iter().enumerate() {
+            if cur[s].is_none() && idx[s] < ds.files.len() {
+                let f = &ds.files[idx[s]];
+                // Baseline checksum is a dedicated cold read (md5sum-style):
+                // no pipelining interference, so no fs_read_factor.
+                cur[s] = Some(env.start_checksum(side, f, 0, f.size, false));
+                idx[s] += 1;
+            }
+        }
+        if cur.iter().all(|c| c.is_none()) {
+            break;
+        }
+        env.pump_step();
+        for c in cur.iter_mut() {
+            if let Some(flow) = *c {
+                if env.sim.is_done(flow) {
+                    *c = None;
+                }
+            }
+        }
+    }
+    env.now()
+}
+
+/// Simulate `alg` over `ds` with `faults`, producing the run summary
+/// (including Eq. 1 baselines computed in separate clean simulations).
+pub fn run(
+    tb: Testbed,
+    params: AlgoParams,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    alg: Algorithm,
+) -> RunSummary {
+    let mut env = SimEnv::new(tb, params);
+    let mut summary = RunSummary {
+        algorithm: alg.name().to_string(),
+        dataset: ds.name.clone(),
+        testbed: tb.name.to_string(),
+        ..Default::default()
+    };
+    match alg {
+        Algorithm::Sequential => run_sequential(&mut env, ds, faults, &mut summary, None),
+        Algorithm::FileLevelPpl => run_pipelined(&mut env, ds, faults, &mut summary, None),
+        Algorithm::BlockLevelPpl => {
+            run_pipelined(&mut env, ds, faults, &mut summary, Some(params.block_size))
+        }
+        Algorithm::Fiver => run_fiver(&mut env, ds, faults, &mut summary, false),
+        Algorithm::FiverChunk => run_fiver(&mut env, ds, faults, &mut summary, true),
+        Algorithm::FiverHybrid => run_hybrid(&mut env, ds, faults, &mut summary),
+    }
+    summary.total_time = env.now();
+    summary.tcp_restarts = env.tcp.restarts;
+    summary.src_trace = std::mem::take(&mut env.src_trace);
+    summary.dst_trace = std::mem::take(&mut env.dst_trace);
+    summary.t_transfer_only = transfer_only(tb, params, ds);
+    summary.t_checksum_only = checksum_only(tb, params, ds);
+    summary
+}
+
+/// Both-side checksum of a unit through the filesystem (the non-FIVER
+/// read path): hash weight includes the read-path factor.
+fn start_unit_checksums(env: &mut SimEnv, f: &FileSpec, u: &Unit) -> [crate::sim::FlowId; 2] {
+    let factor = env.params.fs_read_factor;
+    [
+        start_fs_checksum(env, Side::Src, f, u.offset, u.len, factor),
+        start_fs_checksum(env, Side::Dst, f, u.offset, u.len, factor),
+    ]
+}
+
+/// start_checksum with the filesystem read-path factor applied by
+/// stretching the flow length (equivalent to slowing the hash stage).
+fn start_fs_checksum(
+    env: &mut SimEnv,
+    side: Side,
+    f: &FileSpec,
+    offset: u64,
+    len: u64,
+    factor: f64,
+) -> crate::sim::FlowId {
+    let flow = env.start_checksum(side, f, offset, len, false);
+    // Stretch: remaining work scaled by factor (the cache/trace accounting
+    // already happened for `len` bytes).
+    let extra = (len as f64) * (factor - 1.0);
+    if extra > 0.0 {
+        env.sim.stretch_flow(flow, extra);
+    }
+    flow
+}
+
+fn run_sequential(
+    env: &mut SimEnv,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    summary: &mut RunSummary,
+    // For FIVER-Hybrid: restrict to these file indices (None = all).
+    only: Option<&[usize]>,
+) {
+    let indices: Vec<usize> = match only {
+        Some(list) => list.to_vec(),
+        None => (0..ds.files.len()).collect(),
+    };
+    let mut attempts = vec![0u32; ds.files.len()];
+    for &i in &indices {
+        loop {
+            let f = &ds.files[i];
+            let tr = env.start_transfer(f, 0, f.size);
+            env.pump_until(tr);
+            let u = Unit { file_idx: i, offset: 0, len: f.size, attempt: attempts[i] };
+            let cks = start_unit_checksums(env, f, &u);
+            env.pump_until_all(&cks);
+            // Serial verification: exchange digests before the next file.
+            let ctrl = env.start_timer(env.params.control_rtts * env.tb.rtt);
+            env.pump_until(ctrl);
+            if faults.for_attempt(i, attempts[i]).is_empty() {
+                break;
+            }
+            summary.failures_detected += 1;
+            summary.bytes_resent += f.size;
+            attempts[i] += 1;
+        }
+    }
+}
+
+/// Lockstep two-station pipeline shared by file-level (unit = file) and
+/// block-level (unit = block) pipelining: round k transfers unit k while
+/// unit k-1 checksums; the round ends when both finish.
+fn run_pipelined(
+    env: &mut SimEnv,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    summary: &mut RunSummary,
+    block_size: Option<u64>,
+) {
+    let mut queue: std::collections::VecDeque<Unit> = ds
+        .files
+        .iter()
+        .enumerate()
+        .flat_map(|(i, f)| split_units(i, f.size, block_size))
+        .collect();
+    let mut in_checksum: Option<Unit> = None;
+    let mut last_transfer_end = env.now();
+    loop {
+        let to_transfer = queue.pop_front();
+        if to_transfer.is_none() && in_checksum.is_none() {
+            break;
+        }
+        let mut flows = Vec::new();
+        let mut transferred: Option<Unit> = None;
+        if let Some(u) = to_transfer {
+            // Resume bubble: the transfer station sat idle since its last
+            // unit ended (checksum station was the round's long pole).
+            // Restarting costs ACK-clock rebuild time proportional to how
+            // much of the in-flight window drained during the stall,
+            // saturating at ~half an RTT once fully drained. This is the
+            // §III trade-off: tiny blocks stall often (many bubbles),
+            // large blocks pipeline poorly (misalignment) — see
+            // `experiments::ablations::ablation_block_size`.
+            let stall = env.now() - last_transfer_end;
+            if stall > 1e-9 {
+                let bubble = env.start_timer(0.5 * stall.min(env.tb.rtt));
+                env.pump_until(bubble);
+            }
+            let f = &ds.files[u.file_idx];
+            let flow = env.start_transfer(f, u.offset, u.len);
+            flows.push((flow, true, Some(u.clone())));
+            transferred = Some(u);
+        }
+        if let Some(u) = in_checksum.take() {
+            let f = &ds.files[u.file_idx];
+            let cks = start_unit_checksums(env, f, &u);
+            for c in cks {
+                flows.push((c, false, Some(u.clone())));
+            }
+            // Verification result handled after the round completes.
+            in_checksum = Some(u);
+        }
+        // Round barrier: wait for transfer + checksum to finish, tracking
+        // when the transfer station freed up (for stall detection).
+        for (flow, is_transfer, _) in &flows {
+            env.pump_until(*flow);
+            if *is_transfer {
+                last_transfer_end = env.now();
+            }
+        }
+        // Verify the checksummed unit (digest exchange overlaps the next
+        // round's data; only failures cost a re-queue).
+        if let Some(u) = in_checksum.take() {
+            let unit_faults = faults
+                .for_attempt(u.file_idx, u.attempt)
+                .into_iter()
+                .filter(|ft| ft.offset >= u.offset && ft.offset < u.offset + u.len)
+                .count();
+            if unit_faults > 0 {
+                summary.failures_detected += 1;
+                summary.bytes_resent += u.len;
+                queue.push_back(Unit { attempt: u.attempt + 1, ..u });
+            }
+        }
+        in_checksum = transferred;
+    }
+    let t = env.start_timer(env.params.control_rtts * env.tb.rtt);
+    env.pump_until(t);
+}
+
+fn split_units(file_idx: usize, size: u64, block_size: Option<u64>) -> Vec<Unit> {
+    match block_size {
+        None => vec![Unit { file_idx, offset: 0, len: size, attempt: 0 }],
+        Some(bs) => {
+            let mut units = Vec::new();
+            let mut off = 0;
+            while off < size {
+                let len = bs.min(size - off);
+                units.push(Unit { file_idx, offset: off, len, attempt: 0 });
+                off += len;
+            }
+            if units.is_empty() {
+                units.push(Unit { file_idx, offset: 0, len: 0, attempt: 0 });
+            }
+            units
+        }
+    }
+}
+
+fn run_fiver(
+    env: &mut SimEnv,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    summary: &mut RunSummary,
+    chunk_level: bool,
+) {
+    run_fiver_files(env, ds, faults, summary, &(0..ds.files.len()).collect::<Vec<_>>(), chunk_level);
+    let t = env.start_timer(env.params.control_rtts * env.tb.rtt);
+    env.pump_until(t);
+}
+
+fn run_fiver_files(
+    env: &mut SimEnv,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    summary: &mut RunSummary,
+    indices: &[usize],
+    chunk_level: bool,
+) {
+    for &i in indices {
+        let f = &ds.files[i];
+        let flow = env.start_fiver_flow(f, 0, f.size);
+        env.pump_until(flow);
+        // Digest exchange rides the control channel concurrently with the
+        // next file's data (Algorithm 1: checksum thread owns the socket
+        // exchange) — no serial cost here. Verification failures trigger
+        // recovery.
+        let file_faults = faults.for_attempt(i, 0);
+        if file_faults.is_empty() {
+            continue;
+        }
+        if chunk_level {
+            // §IV-A: only the chunks containing corruption are re-sent
+            // (sender "creates a new file with same metadata as the
+            // original file except offset and length").
+            let cs = env.params.chunk_size;
+            let mut bad_chunks: Vec<u64> =
+                file_faults.iter().map(|ft| ft.offset / cs).collect();
+            bad_chunks.sort_unstable();
+            bad_chunks.dedup();
+            summary.failures_detected += bad_chunks.len() as u64;
+            for c in bad_chunks {
+                let off = c * cs;
+                let len = cs.min(f.size - off);
+                summary.bytes_resent += len;
+                let refl = env.start_fiver_flow(f, off, len);
+                env.pump_until(refl);
+            }
+        } else {
+            // File-level verification: the whole file is transferred again
+            // (and re-verified; attempt 1 is clean unless planned).
+            summary.failures_detected += 1;
+            let mut attempt = 1u32;
+            loop {
+                summary.bytes_resent += f.size;
+                let refl = env.start_fiver_flow(f, 0, f.size);
+                env.pump_until(refl);
+                if faults.for_attempt(i, attempt).is_empty() {
+                    break;
+                }
+                summary.failures_detected += 1;
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// FIVER-Hybrid (§IV-B): FIVER for files smaller than free memory (their
+/// checksum re-read would be served from cache anyway), Sequential for
+/// larger files (so the checksum read truly exercises the disk and
+/// catches write-path corruption).
+fn run_hybrid(env: &mut SimEnv, ds: &Dataset, faults: &FaultPlan, summary: &mut RunSummary) {
+    let threshold = env.tb.dst.free_mem;
+    for i in 0..ds.files.len() {
+        let f = &ds.files[i];
+        if f.size < threshold {
+            run_fiver_files(env, ds, faults, summary, &[i], false);
+        } else {
+            run_sequential(env, ds, faults, summary, Some(&[i]));
+        }
+    }
+    let t = env.start_timer(env.params.control_rtts * env.tb.rtt);
+    env.pump_until(t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoParams, GB, MB};
+
+    fn quick_run(tb: Testbed, ds: &Dataset, alg: Algorithm) -> RunSummary {
+        run(tb, AlgoParams::default(), ds, &FaultPlan::none(), alg)
+    }
+
+    #[test]
+    fn fiver_beats_sequential() {
+        let ds = Dataset::uniform("1G", GB, 4);
+        let tb = Testbed::hpclab_40g();
+        let fiver = quick_run(tb, &ds, Algorithm::Fiver);
+        let seq = quick_run(tb, &ds, Algorithm::Sequential);
+        assert!(
+            fiver.total_time < seq.total_time,
+            "FIVER {} >= Sequential {}",
+            fiver.total_time,
+            seq.total_time
+        );
+        assert!(fiver.overhead() < 0.10, "FIVER overhead {}", fiver.overhead());
+        assert!(seq.overhead() > 0.25, "Sequential overhead {}", seq.overhead());
+    }
+
+    #[test]
+    fn fiver_under_10pct_everywhere() {
+        for tb in Testbed::all() {
+            let ds = Dataset::uniform("1G", GB, 4);
+            let s = quick_run(tb, &ds, Algorithm::Fiver);
+            assert!(
+                s.overhead() < 0.10,
+                "{}: FIVER overhead {}",
+                tb.name,
+                s.overhead()
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_dataset_punishes_pipelining() {
+        let ds = Dataset::sorted_5m250m(20);
+        let tb = Testbed::hpclab_40g();
+        let block = quick_run(tb, &ds, Algorithm::BlockLevelPpl);
+        let fiver = quick_run(tb, &ds, Algorithm::Fiver);
+        assert!(
+            block.overhead() > fiver.overhead() + 0.2,
+            "block {} should far exceed fiver {}",
+            block.overhead(),
+            fiver.overhead()
+        );
+    }
+
+    #[test]
+    fn block_better_than_file_on_large_files() {
+        let ds = Dataset::uniform("10G", 10 * GB, 2);
+        let tb = Testbed::esnet_lan();
+        let file = quick_run(tb, &ds, Algorithm::FileLevelPpl);
+        let block = quick_run(tb, &ds, Algorithm::BlockLevelPpl);
+        assert!(
+            block.total_time < file.total_time,
+            "block {} should beat file-level {}",
+            block.total_time,
+            file.total_time
+        );
+    }
+
+    #[test]
+    fn fault_recovery_chunk_cheaper_than_file() {
+        let ds = Dataset::uniform("4G", 4 * GB, 3);
+        let tb = Testbed::hpclab_40g();
+        let faults = FaultPlan::random(&ds, 6, 7);
+        let p = AlgoParams::default();
+        let file = run(tb, p, &ds, &faults, Algorithm::Fiver);
+        let chunk = run(tb, p, &ds, &faults, Algorithm::FiverChunk);
+        assert!(file.failures_detected > 0 && chunk.failures_detected > 0);
+        assert!(
+            chunk.bytes_resent < file.bytes_resent,
+            "chunk resends {} should be < file resends {}",
+            chunk.bytes_resent,
+            file.bytes_resent
+        );
+        assert!(chunk.total_time < file.total_time);
+    }
+
+    #[test]
+    fn hybrid_faster_than_sequential_same_misses() {
+        // Mixed dataset with some larger-than-memory files.
+        let ds = Dataset::mixed_shuffled("mix", &[(20, 100 * MB), (2, 16 * GB)], 3);
+        let tb = Testbed::hpclab_1g(); // free_mem = 14 GB < 16 GB files
+        let hybrid = quick_run(tb, &ds, Algorithm::FiverHybrid);
+        let seq = quick_run(tb, &ds, Algorithm::Sequential);
+        assert!(hybrid.total_time < seq.total_time);
+        // Same disk-exercising behaviour on the large files: both see misses.
+        assert!(hybrid.dst_trace.total_misses() > 0);
+        let ratio = hybrid.dst_trace.total_misses() as f64 / seq.dst_trace.total_misses() as f64;
+        assert!((0.5..=2.0).contains(&ratio), "miss counts comparable: {ratio}");
+    }
+
+    #[test]
+    fn all_algorithms_catch_all_faults() {
+        let ds = Dataset::uniform("512M", 512 * MB, 4);
+        let tb = Testbed::hpclab_40g();
+        let faults = FaultPlan::random(&ds, 5, 11);
+        for alg in Algorithm::all() {
+            let s = run(tb, AlgoParams::default(), &ds, &faults, alg);
+            assert!(
+                s.failures_detected > 0,
+                "{}: no failures detected",
+                alg.name()
+            );
+            assert!(s.bytes_resent > 0, "{}: nothing resent", alg.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for alg in Algorithm::all() {
+            assert_eq!(Algorithm::parse(alg.name()), Some(alg), "{}", alg.name());
+        }
+    }
+}

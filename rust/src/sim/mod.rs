@@ -1,0 +1,448 @@
+//! Discrete-event fluid-flow simulator.
+//!
+//! The paper's phenomena are *rate relationships*: transfer rate vs
+//! checksum rate vs disk rate decide which algorithm wins and by how much
+//! (repro band 0/5 — the real 100 Gbps testbeds are substituted per
+//! DESIGN.md §2). This engine models the testbed as shared **resources**
+//! (disk, NIC, hash cores, memory bus) with byte/sec capacities and
+//! **flows** (a transfer, a checksum computation) that consume them.
+//!
+//! Rates are allocated by *weighted max-min fairness* (progressive
+//! filling): all active flows rise together; a resource saturates when the
+//! weighted sum of its users' rates reaches capacity, freezing those users;
+//! per-flow caps (TCP congestion windows) freeze individual flows. This is
+//! the classic fluid approximation of TCP-fair sharing, exact enough for
+//! reproduction of end-to-end times while letting 165 GB datasets simulate
+//! in milliseconds.
+//!
+//! Submodules: [`testbed`] instantiates resources from a
+//! [`crate::config::Testbed`]; [`algorithms`] drives the five
+//! integrity-verification policies over the engine.
+
+pub mod algorithms;
+pub mod testbed;
+
+use std::collections::HashMap;
+
+/// Index of a resource in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(usize);
+
+/// Index of a flow in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(usize);
+
+#[derive(Debug)]
+struct Resource {
+    name: String,
+    capacity: f64, // bytes/sec; f64::INFINITY for unconstrained
+}
+
+#[derive(Debug)]
+struct FlowState {
+    /// Remaining bytes of work.
+    remaining: f64,
+    /// (resource, weight): this flow consumes `weight` resource-bytes per
+    /// flow-byte. E.g. a checksum flow with an 80% cache hit ratio uses
+    /// (mem_bus, 0.8) and (disk, 0.2) plus (hash, 1.0).
+    uses: Vec<(ResourceId, f64)>,
+    /// External rate cap in bytes/sec (TCP congestion window envelope).
+    cap: Option<f64>,
+    /// Current allocated rate (recomputed on every topology change).
+    rate: f64,
+    done: bool,
+}
+
+/// Outcome of one engine step.
+#[derive(Debug, Default)]
+pub struct Step {
+    /// Virtual seconds advanced.
+    pub dt: f64,
+    /// Flows that completed at the new time.
+    pub completed: Vec<FlowId>,
+}
+
+/// The fluid-flow engine.
+#[derive(Debug, Default)]
+pub struct FluidSim {
+    now: f64,
+    resources: Vec<Resource>,
+    flows: Vec<FlowState>,
+    rates_dirty: bool,
+}
+
+impl FluidSim {
+    pub fn new() -> FluidSim {
+        FluidSim::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn add_resource(&mut self, name: &str, capacity_bytes_per_sec: f64) -> ResourceId {
+        assert!(capacity_bytes_per_sec > 0.0, "capacity must be positive");
+        self.resources.push(Resource { name: name.to_string(), capacity: capacity_bytes_per_sec });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    pub fn resource_name(&self, r: ResourceId) -> &str {
+        &self.resources[r.0].name
+    }
+
+    /// Start a flow of `bytes` over weighted resources with an optional cap.
+    /// Zero-byte flows complete on the next step without consuming time.
+    pub fn start_flow(
+        &mut self,
+        bytes: f64,
+        uses: Vec<(ResourceId, f64)>,
+        cap: Option<f64>,
+    ) -> FlowId {
+        assert!(bytes >= 0.0);
+        for &(r, w) in &uses {
+            assert!(r.0 < self.resources.len(), "unknown resource");
+            assert!(w >= 0.0, "negative weight");
+        }
+        self.flows.push(FlowState { remaining: bytes, uses, cap, rate: 0.0, done: bytes <= 0.0 });
+        self.rates_dirty = true;
+        FlowId(self.flows.len() - 1)
+    }
+
+    /// Add `extra` bytes of work to an in-flight flow (used to model
+    /// per-byte cost factors, e.g. the filesystem read-path overhead of
+    /// non-FIVER checksums).
+    pub fn stretch_flow(&mut self, f: FlowId, extra: f64) {
+        assert!(extra >= 0.0);
+        let flow = &mut self.flows[f.0];
+        if extra > 0.0 {
+            flow.remaining += extra;
+            if flow.done {
+                flow.done = false;
+            }
+            self.rates_dirty = true;
+        }
+    }
+
+    /// Update a flow's rate cap (TCP window growth/reset).
+    pub fn set_cap(&mut self, f: FlowId, cap: Option<f64>) {
+        if self.flows[f.0].cap != cap {
+            self.flows[f.0].cap = cap;
+            self.rates_dirty = true;
+        }
+    }
+
+    pub fn is_done(&self, f: FlowId) -> bool {
+        self.flows[f.0].done
+    }
+
+    pub fn remaining(&self, f: FlowId) -> f64 {
+        self.flows[f.0].remaining
+    }
+
+    /// Currently allocated rate (valid after a step or [`recompute_rates`]).
+    pub fn rate(&self, f: FlowId) -> f64 {
+        self.flows[f.0].rate
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.iter().filter(|f| !f.done).count()
+    }
+
+    /// Weighted max-min fair (progressive-filling) rate allocation.
+    pub fn recompute_rates(&mut self) {
+        let n = self.flows.len();
+        let mut avail: Vec<f64> = self.resources.iter().map(|r| r.capacity).collect();
+        let mut frozen: Vec<bool> = self.flows.iter().map(|f| f.done).collect();
+        let mut lambda_cur = 0.0f64;
+        for f in self.flows.iter_mut() {
+            if f.done {
+                f.rate = 0.0;
+            }
+        }
+        loop {
+            // Weighted demand per resource from unfrozen flows.
+            let mut demand: HashMap<usize, f64> = HashMap::new();
+            for (i, f) in self.flows.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                for &(r, w) in &f.uses {
+                    if w > 0.0 {
+                        *demand.entry(r.0).or_insert(0.0) += w;
+                    }
+                }
+            }
+            let any_unfrozen = frozen.iter().enumerate().any(|(i, &fz)| !fz && i < n);
+            if !any_unfrozen {
+                break;
+            }
+            // Next event: a resource saturating or a cap being reached.
+            let mut next = f64::INFINITY;
+            for (&r, &d) in &demand {
+                if d > 0.0 && avail[r].is_finite() {
+                    next = next.min(avail[r] / d);
+                }
+            }
+            for (i, f) in self.flows.iter().enumerate() {
+                if !frozen[i] {
+                    if let Some(cap) = f.cap {
+                        next = next.min(cap - lambda_cur);
+                    }
+                }
+            }
+            if !next.is_finite() {
+                // Only unconstrained flows remain: give them a huge rate.
+                for (i, f) in self.flows.iter_mut().enumerate() {
+                    if !frozen[i] {
+                        f.rate = f64::MAX / 4.0;
+                        frozen[i] = true;
+                    }
+                }
+                break;
+            }
+            let step = next.max(0.0);
+            lambda_cur += step;
+            // Consume capacity for the step.
+            for (&r, &d) in &demand {
+                if avail[r].is_finite() {
+                    avail[r] -= step * d;
+                }
+            }
+            // Freeze flows: on saturated resources, or at their cap.
+            let mut newly_frozen = Vec::new();
+            for (i, f) in self.flows.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                let capped = f.cap.map(|c| lambda_cur >= c - 1e-12).unwrap_or(false);
+                let saturated = f.uses.iter().any(|&(r, w)| {
+                    w > 0.0 && avail[r.0].is_finite() && avail[r.0] <= 1e-9 * self.resources[r.0].capacity
+                });
+                if capped || saturated {
+                    newly_frozen.push(i);
+                }
+            }
+            if newly_frozen.is_empty() {
+                // Numerical safety: freeze everything at current level.
+                for (i, _) in self.flows.iter().enumerate() {
+                    if !frozen[i] {
+                        newly_frozen.push(i);
+                    }
+                }
+            }
+            for i in newly_frozen {
+                self.flows[i].rate = lambda_cur;
+                frozen[i] = true;
+            }
+        }
+        self.rates_dirty = false;
+    }
+
+    /// Advance time until the next flow completion, but at most `max_dt`
+    /// seconds (drivers bound steps by TCP rate-change events / timers).
+    /// Returns the elapsed time and any completed flows.
+    pub fn step(&mut self, max_dt: f64) -> Step {
+        assert!(max_dt > 0.0, "max_dt must be positive");
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        // Zero-length flows complete immediately.
+        let mut completed: Vec<FlowId> = Vec::new();
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if !f.done && f.remaining <= 1e-9 {
+                f.done = true;
+                f.rate = 0.0;
+                completed.push(FlowId(i));
+            }
+        }
+        if !completed.is_empty() {
+            self.rates_dirty = true;
+            return Step { dt: 0.0, completed };
+        }
+        // Time to the earliest completion at current rates.
+        let mut dt = max_dt;
+        for f in &self.flows {
+            if !f.done && f.rate > 0.0 {
+                dt = dt.min(f.remaining / f.rate);
+            }
+        }
+        // Advance all flows.
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if f.done {
+                continue;
+            }
+            f.remaining -= f.rate * dt;
+            if f.remaining <= 1e-6 {
+                f.remaining = 0.0;
+                f.done = true;
+                f.rate = 0.0;
+                completed.push(FlowId(i));
+            }
+        }
+        self.now += dt;
+        if !completed.is_empty() {
+            self.rates_dirty = true;
+        }
+        Step { dt, completed }
+    }
+
+    /// Run until `flow` completes; panics if no progress is possible.
+    /// Returns the completion time.
+    pub fn run_until_done(&mut self, flow: FlowId) -> f64 {
+        let mut guard = 0u64;
+        while !self.is_done(flow) {
+            let s = self.step(f64::INFINITY);
+            assert!(
+                s.dt > 0.0 || !s.completed.is_empty(),
+                "no progress: flow starved (rate 0, nothing completing)"
+            );
+            guard += 1;
+            assert!(guard < 10_000_000, "simulation runaway");
+        }
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_runs_at_capacity() {
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        let f = sim.start_flow(1000.0, vec![(disk, 1.0)], None);
+        let t = sim.run_until_done(f);
+        assert!((t - 10.0).abs() < 1e-6, "1000 bytes at 100 B/s = 10 s, got {t}");
+    }
+
+    #[test]
+    fn flow_rate_is_min_over_resources() {
+        let mut sim = FluidSim::new();
+        let fast = sim.add_resource("net", 1000.0);
+        let slow = sim.add_resource("disk", 50.0);
+        let f = sim.start_flow(500.0, vec![(fast, 1.0), (slow, 1.0)], None);
+        let t = sim.run_until_done(f);
+        assert!((t - 10.0).abs() < 1e-6, "bottleneck 50 B/s, got {t}");
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        let a = sim.start_flow(500.0, vec![(disk, 1.0)], None);
+        let b = sim.start_flow(500.0, vec![(disk, 1.0)], None);
+        sim.recompute_rates();
+        assert!((sim.rate(a) - 50.0).abs() < 1e-6);
+        assert!((sim.rate(b) - 50.0).abs() < 1e-6);
+        let t = sim.run_until_done(b);
+        assert!((t - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn released_capacity_speeds_up_survivor() {
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        let a = sim.start_flow(200.0, vec![(disk, 1.0)], None);
+        let b = sim.start_flow(600.0, vec![(disk, 1.0)], None);
+        sim.run_until_done(a); // a done at t=4 (both at 50 B/s)
+        let t = sim.run_until_done(b);
+        // b: 200 bytes by t=4, remaining 400 at 100 B/s -> t=8.
+        assert!((t - 8.0).abs() < 1e-6, "got {t}");
+    }
+
+    #[test]
+    fn cap_limits_flow_and_leaves_capacity() {
+        let mut sim = FluidSim::new();
+        let net = sim.add_resource("net", 100.0);
+        let a = sim.start_flow(100.0, vec![(net, 1.0)], Some(10.0));
+        let b = sim.start_flow(900.0, vec![(net, 1.0)], None);
+        sim.recompute_rates();
+        assert!((sim.rate(a) - 10.0).abs() < 1e-6, "capped at 10");
+        assert!((sim.rate(b) - 90.0).abs() < 1e-6, "uncapped gets the rest");
+    }
+
+    #[test]
+    fn weighted_flow_consumes_proportionally() {
+        // Checksum flow with 80% cache hits: disk weight 0.2.
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        let hash = sim.add_resource("hash", 400.0);
+        let f = sim.start_flow(1000.0, vec![(disk, 0.2), (hash, 1.0)], None);
+        sim.recompute_rates();
+        // Progress limited by hash at 400 B/s and disk at 100/0.2=500 B/s.
+        assert!((sim.rate(f) - 400.0).abs() < 1e-6, "rate {}", sim.rate(f));
+    }
+
+    #[test]
+    fn weighted_contention() {
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        // Transfer (weight 1) + checksum with 50% misses (weight 0.5).
+        let t = sim.start_flow(1e9, vec![(disk, 1.0)], None);
+        let c = sim.start_flow(1e9, vec![(disk, 0.5)], None);
+        sim.recompute_rates();
+        // Progressive filling: both rise to lambda where 1.0*l + 0.5*l = 100
+        // -> l = 66.67: both frozen when disk saturates.
+        assert!((sim.rate(t) - 200.0 / 3.0).abs() < 1e-3, "rate {}", sim.rate(t));
+        assert!((sim.rate(c) - 200.0 / 3.0).abs() < 1e-3, "rate {}", sim.rate(c));
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource("r", 10.0);
+        let f = sim.start_flow(0.0, vec![(r, 1.0)], None);
+        let t = sim.run_until_done(f);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn step_respects_max_dt() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource("r", 10.0);
+        let f = sim.start_flow(100.0, vec![(r, 1.0)], None);
+        let s = sim.step(2.0);
+        assert!((s.dt - 2.0).abs() < 1e-9);
+        assert!(!sim.is_done(f));
+        assert!((sim.remaining(f) - 80.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cap_change_mid_flight() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource("r", 100.0);
+        let f = sim.start_flow(100.0, vec![(r, 1.0)], Some(10.0));
+        sim.step(5.0); // 50 bytes at 10 B/s
+        assert!((sim.remaining(f) - 50.0).abs() < 1e-6);
+        sim.set_cap(f, None);
+        let t = sim.run_until_done(f);
+        assert!((t - 5.5).abs() < 1e-6, "remaining 50 at 100 B/s: t=5.5, got {t}");
+    }
+
+    #[test]
+    fn flow_with_no_resources_is_unbounded() {
+        let mut sim = FluidSim::new();
+        let f = sim.start_flow(1e12, vec![], None);
+        let t = sim.run_until_done(f);
+        assert!(t < 1e-3, "unconstrained flow finishes instantly");
+    }
+
+    #[test]
+    fn three_stage_pipeline_flow() {
+        // A FIVER-style coupled flow: disk -> net -> write + 2 hash cores.
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("src_disk", 750.0);
+        let net = sim.add_resource("net", 5000.0);
+        let write = sim.add_resource("dst_disk", 1500.0);
+        let h1 = sim.add_resource("src_hash", 375.0);
+        let h2 = sim.add_resource("dst_hash", 375.0);
+        let f = sim.start_flow(
+            3750.0,
+            vec![(disk, 1.0), (net, 1.0), (write, 1.0), (h1, 1.0), (h2, 1.0)],
+            None,
+        );
+        let t = sim.run_until_done(f);
+        assert!((t - 10.0).abs() < 1e-6, "hash-bound at 375 B/s, got {t}");
+    }
+}

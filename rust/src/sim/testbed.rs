@@ -1,0 +1,391 @@
+//! Simulated testbed: binds a [`crate::config::Testbed`] to fluid-engine
+//! resources, a TCP connection model, and per-host page caches, and
+//! provides the flow constructors the algorithm drivers compose.
+
+use crate::cache::PageCache;
+use crate::config::{AlgoParams, Testbed};
+use crate::metrics::HitTrace;
+use crate::net::TcpConn;
+use crate::sim::{FlowId, FluidSim, ResourceId};
+use crate::workload::FileSpec;
+
+/// Which endpoint a checksum/cache operation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Src,
+    Dst,
+}
+
+/// Fluid-engine resource handles for one src-dst pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Res {
+    /// Source disk (capacity = sequential read rate; writes are weighted).
+    pub src_disk: ResourceId,
+    /// Destination disk.
+    pub dst_disk: ResourceId,
+    /// Network path.
+    pub net: ResourceId,
+    /// Memory-bus read rate per host (cached checksum I/O).
+    pub src_mem: ResourceId,
+    pub dst_mem: ResourceId,
+    /// One checksum core per host (the paper's single-threaded hashing).
+    pub src_hash: ResourceId,
+    pub dst_hash: ResourceId,
+}
+
+/// A simulated testbed session.
+pub struct SimEnv {
+    pub sim: FluidSim,
+    pub tcp: TcpConn,
+    pub src_cache: PageCache,
+    pub dst_cache: PageCache,
+    pub tb: Testbed,
+    pub params: AlgoParams,
+    pub res: Res,
+    pub src_trace: HitTrace,
+    pub dst_trace: HitTrace,
+    /// Currently active network transfer flow (at most one at a time — the
+    /// transfer station); drives TCP cap management in [`pump_step`].
+    active_transfer: Option<FlowId>,
+    /// (flow, side, hit_bytes, miss_bytes, t_start): recorded into the
+    /// hit trace when the flow completes.
+    pending_traces: Vec<(FlowId, Side, u64, u64, f64)>,
+}
+
+impl SimEnv {
+    pub fn new(tb: Testbed, params: AlgoParams) -> SimEnv {
+        let mut sim = FluidSim::new();
+        let res = Res {
+            src_disk: sim.add_resource("src_disk", tb.src.disk_read),
+            dst_disk: sim.add_resource("dst_disk", tb.dst.disk_read.max(tb.dst.disk_write)),
+            net: sim.add_resource("net", tb.bandwidth),
+            src_mem: sim.add_resource("src_mem", tb.src.mem_read),
+            dst_mem: sim.add_resource("dst_mem", tb.dst.mem_read),
+            src_hash: sim.add_resource("src_hash", tb.src.hash_rate(params.hash)),
+            dst_hash: sim.add_resource("dst_hash", tb.dst.hash_rate(params.hash)),
+        };
+        SimEnv {
+            sim,
+            tcp: TcpConn::new(tb.tcp_params()),
+            src_cache: PageCache::new(tb.src.free_mem),
+            dst_cache: PageCache::new(tb.dst.free_mem),
+            tb,
+            params,
+            res,
+            src_trace: HitTrace::new(1.0),
+            dst_trace: HitTrace::new(1.0),
+            active_transfer: None,
+            pending_traces: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn cache(&mut self, side: Side) -> &mut PageCache {
+        match side {
+            Side::Src => &mut self.src_cache,
+            Side::Dst => &mut self.dst_cache,
+        }
+    }
+
+    /// Disk-write weight at the destination: writing is slower than the
+    /// resource capacity (= read rate), so each written byte consumes
+    /// proportionally more disk time.
+    fn write_weight(&self) -> f64 {
+        (self.tb.dst.disk_read.max(self.tb.dst.disk_write)) / self.tb.dst.disk_write
+    }
+
+    /// Simulate the page-cache effect of a sequential read of
+    /// `[offset, offset+len)`, stepping in cache granularity so
+    /// self-eviction of larger-than-memory files emerges. Returns
+    /// (hit_bytes, miss_bytes).
+    pub fn cache_read(&mut self, side: Side, file: &FileSpec, offset: u64, len: u64) -> (u64, u64) {
+        const STEP: u64 = 8 << 20;
+        let cache = self.cache(side);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut pos = offset;
+        let end = offset + len;
+        while pos < end {
+            let n = STEP.min(end - pos);
+            let acc = cache.read(file.id, pos, n);
+            hits += acc.hit_bytes;
+            misses += acc.miss_bytes;
+            pos += n;
+        }
+        (hits, misses)
+    }
+
+    /// Insert written data into the destination cache (streaming write).
+    pub fn cache_write(&mut self, side: Side, file: &FileSpec, offset: u64, len: u64) {
+        const STEP: u64 = 8 << 20;
+        let cache = self.cache(side);
+        let mut pos = offset;
+        let end = offset + len;
+        while pos < end {
+            let n = STEP.min(end - pos);
+            cache.write(file.id, pos, n);
+            pos += n;
+        }
+    }
+
+    /// Start a network transfer of `[offset, offset+len)` of `file`:
+    /// reads at the source (disk or cache depending on residency), crosses
+    /// the network under the TCP envelope, writes at the destination.
+    /// Accounts source-side cache reads and destination-side cache writes,
+    /// and records the source trace on completion.
+    pub fn start_transfer(&mut self, file: &FileSpec, offset: u64, len: u64) -> FlowId {
+        assert!(self.active_transfer.is_none(), "one transfer at a time (station discipline)");
+        let now = self.now();
+        self.tcp.on_active(now);
+        let (hits, misses) = self.cache_read(Side::Src, file, offset, len);
+        self.cache_write(Side::Dst, file, offset, len);
+        let miss_frac = if len == 0 { 0.0 } else { misses as f64 / len as f64 };
+        let hit_frac = 1.0 - miss_frac;
+        let w_write = self.write_weight();
+        let flow = self.sim.start_flow(
+            len as f64,
+            vec![
+                (self.res.src_disk, miss_frac),
+                (self.res.src_mem, hit_frac),
+                (self.res.net, 1.0),
+                (self.res.dst_disk, w_write),
+            ],
+            Some(self.tcp.rate()),
+        );
+        self.active_transfer = Some(flow);
+        self.pending_traces.push((flow, Side::Src, hits, misses, now));
+        flow
+    }
+
+    /// Start a checksum computation of `[offset, offset+len)` at `side`.
+    /// `from_queue=true` is FIVER's I/O sharing: no file reads at all —
+    /// bytes arrive via the in-memory queue (accounted as pure cache hits,
+    /// matching how the paper reports FIVER's ~100% hit ratio).
+    pub fn start_checksum(
+        &mut self,
+        side: Side,
+        file: &FileSpec,
+        offset: u64,
+        len: u64,
+        from_queue: bool,
+    ) -> FlowId {
+        let now = self.now();
+        let (hash_res, mem_res, disk_res) = match side {
+            Side::Src => (self.res.src_hash, self.res.src_mem, self.res.src_disk),
+            Side::Dst => (self.res.dst_hash, self.res.dst_mem, self.res.dst_disk),
+        };
+        let (uses, hits, misses) = if from_queue {
+            (vec![(hash_res, 1.0)], len, 0)
+        } else {
+            let (hits, misses) = self.cache_read(side, file, offset, len);
+            let miss_frac = if len == 0 { 0.0 } else { misses as f64 / len as f64 };
+            (
+                vec![(hash_res, 1.0), (mem_res, 1.0 - miss_frac), (disk_res, miss_frac)],
+                hits,
+                misses,
+            )
+        };
+        let flow = self.sim.start_flow(len as f64, uses, None);
+        self.pending_traces.push((flow, side, hits, misses, now));
+        flow
+    }
+
+    /// Start a FIVER coupled flow: one read feeds the socket and both
+    /// hash threads through the bounded queue, so the rate is the min of
+    /// every stage (Algorithm 1 & 2's back-pressure). Checksum bytes are
+    /// traced as pure hits on both sides.
+    pub fn start_fiver_flow(&mut self, file: &FileSpec, offset: u64, len: u64) -> FlowId {
+        assert!(self.active_transfer.is_none(), "one transfer at a time");
+        let now = self.now();
+        self.tcp.on_active(now);
+        let (hits, misses) = self.cache_read(Side::Src, file, offset, len);
+        self.cache_write(Side::Dst, file, offset, len);
+        let miss_frac = if len == 0 { 0.0 } else { misses as f64 / len as f64 };
+        let w_write = self.write_weight();
+        let flow = self.sim.start_flow(
+            len as f64,
+            vec![
+                (self.res.src_disk, miss_frac),
+                (self.res.src_mem, 1.0 - miss_frac),
+                (self.res.net, 1.0),
+                (self.res.dst_disk, w_write),
+                (self.res.src_hash, 1.0),
+                (self.res.dst_hash, 1.0),
+            ],
+            Some(self.tcp.rate()),
+        );
+        self.active_transfer = Some(flow);
+        // Source trace: the single shared read; checksum I/O on both sides
+        // is served from the queue (pure hits).
+        self.pending_traces.push((flow, Side::Src, hits + len, misses, now));
+        self.pending_traces.push((flow, Side::Dst, len, 0, now));
+        flow
+    }
+
+    /// A pure-delay flow of `secs` (control exchanges, pipeline bubbles).
+    pub fn start_timer(&mut self, secs: f64) -> FlowId {
+        self.sim.start_flow(secs.max(0.0), vec![], Some(1.0))
+    }
+
+    /// One engine step with TCP envelope management. Returns completed flows.
+    pub fn pump_step(&mut self) -> Vec<FlowId> {
+        let before = self.now();
+        let (max_dt, transfer) = match self.active_transfer {
+            Some(f) => {
+                self.sim.set_cap(f, Some(self.tcp.rate()));
+                (self.tcp.next_rate_change().unwrap_or(f64::INFINITY), Some(f))
+            }
+            None => (f64::INFINITY, None),
+        };
+        let step = self.sim.step(if max_dt.is_finite() { max_dt } else { 1e18 });
+        let now = self.now();
+        if let Some(f) = transfer {
+            self.tcp.advance(before, now);
+            if self.sim.is_done(f) {
+                self.active_transfer = None;
+                self.tcp.on_idle_start(now);
+            }
+        }
+        // Flush finished trace records.
+        let done: Vec<usize> = self
+            .pending_traces
+            .iter()
+            .enumerate()
+            .filter(|(_, (f, ..))| self.sim.is_done(*f))
+            .map(|(i, _)| i)
+            .collect();
+        for i in done.into_iter().rev() {
+            let (_, side, hits, misses, t0) = self.pending_traces.swap_remove(i);
+            let trace = match side {
+                Side::Src => &mut self.src_trace,
+                Side::Dst => &mut self.dst_trace,
+            };
+            trace.record(t0, now, hits, misses);
+        }
+        step.completed
+    }
+
+    /// Pump until `flow` is done.
+    pub fn pump_until(&mut self, flow: FlowId) {
+        let mut guard = 0u64;
+        while !self.sim.is_done(flow) {
+            self.pump_step();
+            guard += 1;
+            assert!(guard < 50_000_000, "simulation runaway");
+        }
+    }
+
+    /// Pump until all of `flows` are done.
+    pub fn pump_until_all(&mut self, flows: &[FlowId]) {
+        for &f in flows {
+            self.pump_until(f);
+        }
+    }
+
+    pub fn transfer_active(&self) -> bool {
+        self.active_transfer.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gbps, GB, MB};
+    use crate::workload::FileSpec;
+
+    fn file(id: u64, size: u64) -> FileSpec {
+        FileSpec { id, name: format!("f{id}"), size }
+    }
+
+    fn env() -> SimEnv {
+        SimEnv::new(Testbed::hpclab_1g(), AlgoParams::default())
+    }
+
+    #[test]
+    fn transfer_rate_bottlenecked_by_net() {
+        let mut e = env();
+        let f = file(0, GB);
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        let expect = GB as f64 / gbps(1.0); // 1 Gbps link is the bottleneck
+        let got = e.now();
+        assert!(
+            (got - expect) / expect < 0.10,
+            "1 GB over 1 Gbps ~ {expect:.1}s, got {got:.1}s"
+        );
+    }
+
+    #[test]
+    fn fiver_flow_bottlenecked_by_slowest_stage() {
+        // HPCLab-40G: hash (3 Gbps) is the slowest stage of the coupled flow.
+        let mut e = SimEnv::new(Testbed::hpclab_40g(), AlgoParams::default());
+        let f = file(0, 10 * GB);
+        let flow = e.start_fiver_flow(&f, 0, f.size);
+        e.pump_until(flow);
+        let expect = (10 * GB) as f64 / gbps(3.0);
+        let got = e.now();
+        assert!(
+            (got - expect).abs() / expect < 0.10,
+            "hash-bound: expect ~{expect:.1}s, got {got:.1}s"
+        );
+    }
+
+    #[test]
+    fn checksum_after_transfer_reads_cache() {
+        let mut e = env();
+        let f = file(0, 100 * MB); // well under free_mem
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        let t0 = e.now();
+        let ck = e.start_checksum(Side::Dst, &f, 0, f.size, false);
+        e.pump_until(ck);
+        // Cached: rate = min(mem, hash) = hash = 3.4 Gbps, not disk.
+        let dt = e.now() - t0;
+        let expect = (100 * MB) as f64 / gbps(3.4);
+        assert!((dt - expect).abs() / expect < 0.15, "expect {expect:.3}, got {dt:.3}");
+        assert!(e.dst_trace.average() > 0.99, "dst checksum should hit cache");
+    }
+
+    #[test]
+    fn large_file_checksum_misses_at_source() {
+        let mut e = env(); // free_mem = 14 GB
+        let f = file(0, 20 * GB);
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        let (hits, misses) = e.cache_read(Side::Src, &f, 0, f.size);
+        assert!(
+            misses as f64 / (hits + misses) as f64 > 0.9,
+            "20 GB > 14 GB free mem: checksum re-read should miss"
+        );
+    }
+
+    #[test]
+    fn timer_advances_clock() {
+        let mut e = env();
+        let t = e.start_timer(2.5);
+        e.pump_until(t);
+        assert!((e.now() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_checksum_traces_pure_hits() {
+        let mut e = env();
+        let f = file(0, 50 * MB);
+        let ck = e.start_checksum(Side::Dst, &f, 0, f.size, true);
+        e.pump_until(ck);
+        assert_eq!(e.dst_trace.total_misses(), 0);
+        assert!(e.dst_trace.average() >= 1.0);
+    }
+
+    #[test]
+    fn tcp_slow_start_visible_on_wan_small_file() {
+        let mut e = SimEnv::new(Testbed::esnet_wan(), AlgoParams::default());
+        let f = file(0, 10 * MB);
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        let ideal = (10 * MB) as f64 / gbps(5.75);
+        assert!(e.now() > 3.0 * ideal, "slow start should dominate: {} vs {ideal}", e.now());
+    }
+}

@@ -1,0 +1,311 @@
+//! Storage backends for the real-mode coordinator: buffered file I/O with
+//! the read/write patterns of the paper's Algorithms 1 & 2, plus an
+//! in-memory backend for deterministic tests and fault experiments that
+//! must not touch the disk.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// Abstract storage: open files for streaming read/write by name.
+pub trait Storage: Send + Sync {
+    fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>>;
+    /// Create (or truncate) a file for writing.
+    fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>>;
+    /// Open an existing file for in-place updates (repair writes) without
+    /// truncating it.
+    fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>>;
+    fn size_of(&self, name: &str) -> Result<u64>;
+}
+
+/// Streaming reader with range support (chunk re-reads for recovery).
+pub trait ReadStream: Send {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize>;
+    /// Sequential read from the current position.
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize>;
+}
+
+/// Streaming writer with range support.
+pub trait WriteStream: Send {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()>;
+    fn write_next(&mut self, data: &[u8]) -> Result<()>;
+    fn flush(&mut self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Filesystem backend
+// ---------------------------------------------------------------------------
+
+/// Real files under a root directory.
+pub struct FsStorage {
+    root: PathBuf,
+}
+
+impl FsStorage {
+    pub fn new(root: &Path) -> Result<FsStorage> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating storage root {}", root.display()))?;
+        Ok(FsStorage { root: root.to_path_buf() })
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+}
+
+impl Storage for FsStorage {
+    fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
+        let f = File::open(self.path(name))
+            .with_context(|| format!("opening {name} for read"))?;
+        Ok(Box::new(FsRead { f }))
+    }
+
+    fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let f = File::create(self.path(name))
+            .with_context(|| format!("opening {name} for write"))?;
+        Ok(Box::new(FsWrite { f }))
+    }
+
+    fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(self.path(name))
+            .with_context(|| format!("opening {name} for update"))?;
+        Ok(Box::new(FsWrite { f }))
+    }
+
+    fn size_of(&self, name: &str) -> Result<u64> {
+        Ok(std::fs::metadata(self.path(name))
+            .with_context(|| format!("stat {name}"))?
+            .len())
+    }
+}
+
+struct FsRead {
+    f: File,
+}
+
+impl ReadStream for FsRead {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.f.seek(SeekFrom::Start(offset))?;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = self.f.read(&mut buf[total..])?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        Ok(total)
+    }
+}
+
+struct FsWrite {
+    f: File,
+}
+
+impl WriteStream for FsWrite {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.f.seek(SeekFrom::Start(offset))?;
+        self.f.write_all(data)?;
+        self.f.seek(SeekFrom::End(0))?;
+        Ok(())
+    }
+
+    fn write_next(&mut self, data: &[u8]) -> Result<()> {
+        self.f.write_all(data)?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.f.flush()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory backend
+// ---------------------------------------------------------------------------
+
+type MemMap = Arc<Mutex<HashMap<String, Arc<Mutex<Vec<u8>>>>>>;
+
+/// In-memory storage shared between "hosts" in tests.
+#[derive(Clone, Default)]
+pub struct MemStorage {
+    files: MemMap,
+}
+
+impl MemStorage {
+    pub fn new() -> MemStorage {
+        MemStorage::default()
+    }
+
+    /// Preload a file.
+    pub fn put(&self, name: &str, data: Vec<u8>) {
+        self.files
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(Mutex::new(data)));
+    }
+
+    /// Snapshot a file's bytes.
+    pub fn get(&self, name: &str) -> Option<Vec<u8>> {
+        self.files.lock().unwrap().get(name).map(|v| v.lock().unwrap().clone())
+    }
+}
+
+impl Storage for MemStorage {
+    fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
+        let data = self
+            .files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no such mem file {name}"))?;
+        Ok(Box::new(MemStream { data, pos: 0 }))
+    }
+
+    fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let data = Arc::new(Mutex::new(Vec::new()));
+        self.files.lock().unwrap().insert(name.to_string(), data.clone());
+        Ok(Box::new(MemStream { data, pos: 0 }))
+    }
+
+    fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let data = self
+            .files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no such mem file {name}"))?;
+        Ok(Box::new(MemStream { data, pos: 0 }))
+    }
+
+    fn size_of(&self, name: &str) -> Result<u64> {
+        let files = self.files.lock().unwrap();
+        let f = files.get(name).with_context(|| format!("no such mem file {name}"))?;
+        let len = f.lock().unwrap().len() as u64;
+        Ok(len)
+    }
+}
+
+struct MemStream {
+    data: Arc<Mutex<Vec<u8>>>,
+    pos: u64,
+}
+
+impl ReadStream for MemStream {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let data = self.data.lock().unwrap();
+        let start = (self.pos as usize).min(data.len());
+        let n = buf.len().min(data.len() - start);
+        buf[..n].copy_from_slice(&data[start..start + n]);
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+impl WriteStream for MemStream {
+    fn write_at(&mut self, offset: u64, bytes: &[u8]) -> Result<()> {
+        let mut data = self.data.lock().unwrap();
+        let end = offset as usize + bytes.len();
+        if data.len() < end {
+            data.resize(end, 0);
+        }
+        data[offset as usize..end].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    fn write_next(&mut self, bytes: &[u8]) -> Result<()> {
+        let pos = self.pos;
+        self.write_at(pos, bytes)?;
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(storage: &dyn Storage) {
+        let data: Vec<u8> = (0u8..=255).cycle().take(10_000).collect();
+        {
+            let mut w = storage.open_write("f1").unwrap();
+            for part in data.chunks(777) {
+                w.write_next(part).unwrap();
+            }
+            w.flush().unwrap();
+        }
+        assert_eq!(storage.size_of("f1").unwrap(), 10_000);
+        let mut r = storage.open_read("f1").unwrap();
+        let mut back = vec![0u8; 10_000];
+        assert_eq!(r.read_next(&mut back).unwrap(), 10_000);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn mem_roundtrip() {
+        roundtrip(&MemStorage::new());
+    }
+
+    #[test]
+    fn fs_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fiver-storage-{}", std::process::id()));
+        let s = FsStorage::new(&dir).unwrap();
+        roundtrip(&s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ranged_rewrite_repairs_chunk() {
+        // The chunk-recovery pattern: overwrite a corrupted range in place.
+        let s = MemStorage::new();
+        {
+            let mut w = s.open_write("f").unwrap();
+            w.write_next(&[0xAA; 100]).unwrap();
+            w.write_at(40, &[0xBB; 10]).unwrap();
+        }
+        let data = s.get("f").unwrap();
+        assert_eq!(&data[39..42], &[0xAA, 0xBB, 0xBB]);
+        assert_eq!(data.len(), 100);
+    }
+
+    #[test]
+    fn read_at_offset() {
+        let s = MemStorage::new();
+        s.put("f", (0u8..100).collect());
+        let mut r = s.open_read("f").unwrap();
+        let mut buf = [0u8; 10];
+        assert_eq!(r.read_at(90, &mut buf).unwrap(), 10);
+        assert_eq!(buf[0], 90);
+        // Reading past EOF returns short.
+        assert_eq!(r.read_at(95, &mut buf).unwrap(), 5);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let s = MemStorage::new();
+        assert!(s.open_read("nope").is_err());
+        assert!(s.size_of("nope").is_err());
+    }
+}

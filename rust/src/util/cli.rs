@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Each binary declares its options by querying [`Args`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `value_opts` lists option names that consume a following value when
+    /// written as `--name value`.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    match iter.next() {
+                        Some(v) => {
+                            out.options.insert(body.to_string(), v);
+                        }
+                        None => {
+                            out.flags.push(body.to_string());
+                        }
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(value_opts: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).map(|v| v.parse().expect("float option")).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], value_opts: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), value_opts)
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--verbose", "file.txt"], &[]);
+        assert_eq!(a.positional, vec!["run", "file.txt"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["--size=100", "--name=x"], &[]);
+        assert_eq!(a.opt("size"), Some("100"));
+        assert_eq!(a.opt("name"), Some("x"));
+    }
+
+    #[test]
+    fn key_space_value() {
+        let a = parse(&["--size", "100", "pos"], &["size"]);
+        assert_eq!(a.opt("size"), Some("100"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n=5", "--x=1.5"], &[]);
+        assert_eq!(a.opt_u64("n", 0), 5);
+        assert_eq!(a.opt_f64("x", 0.0), 1.5);
+        assert_eq!(a.opt_u64("missing", 9), 9);
+        assert_eq!(a.opt_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,150 @@
+//! Human-readable formatting for sizes, rates and durations, plus a fixed
+//! ASCII table printer used by the experiment harness to emit paper-style
+//! rows.
+
+/// Format a byte count with binary units ("1.5 GiB").
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if v >= 100.0 {
+        format!("{v:.0} {}", UNITS[unit])
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format a throughput in bits/s with SI units ("40.0 Gbps").
+pub fn rate_bps(bits_per_sec: f64) -> String {
+    const UNITS: [&str; 5] = ["bps", "Kbps", "Mbps", "Gbps", "Tbps"];
+    let mut v = bits_per_sec;
+    let mut unit = 0;
+    while v >= 1000.0 && unit < UNITS.len() - 1 {
+        v /= 1000.0;
+        unit += 1;
+    }
+    format!("{v:.1} {}", UNITS[unit])
+}
+
+/// Format seconds as "1h02m03.4s" / "2m03.4s" / "3.4s".
+pub fn secs(t: f64) -> String {
+    if !t.is_finite() {
+        return format!("{t}");
+    }
+    let total = t.max(0.0);
+    let h = (total / 3600.0) as u64;
+    let m = ((total % 3600.0) / 60.0) as u64;
+    let s = total % 60.0;
+    if h > 0 {
+        format!("{h}h{m:02}m{s:04.1}s")
+    } else if m > 0 {
+        format!("{m}m{s:04.1}s")
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// Format a ratio as a percentage ("8.3%").
+pub fn pct(r: f64) -> String {
+    format!("{:.1}%", r * 100.0)
+}
+
+/// Fixed-width ASCII table builder for experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(10 * 1024 * 1024), "10.0 MiB");
+        assert_eq!(bytes(8 * 1024 * 1024 * 1024), "8.0 GiB");
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(rate_bps(1e9), "1.0 Gbps");
+        assert_eq!(rate_bps(40e9), "40.0 Gbps");
+        assert_eq!(rate_bps(999.0), "999.0 bps");
+    }
+
+    #[test]
+    fn secs_formats() {
+        assert_eq!(secs(3.42), "3.4s");
+        assert_eq!(secs(123.4), "2m03.4s");
+        assert_eq!(secs(3723.4), "1h02m03.4s");
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.083), "8.3%");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["alg", "time"]);
+        t.row(&["FIVER".into(), "130s".into()]);
+        t.row(&["Sequential".into(), "210s".into()]);
+        let out = t.render();
+        assert!(out.contains("| alg        | time |"));
+        assert!(out.contains("| FIVER      | 130s |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        Table::new(&["a"]).row(&["x".into(), "y".into()]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Hex encoding/decoding for digests.
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Decode a hex string; returns `None` on odd length or invalid digits.
+pub fn decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let digits: Vec<u8> = s
+        .chars()
+        .map(|c| c.to_digit(16).map(|d| d as u8))
+        .collect::<Option<_>>()?;
+    Some(digits.chunks(2).map(|p| (p[0] << 4) | p[1]).collect())
+}
+
+/// Encode a u32 word slice as the hex string convention used by FVR-256
+/// (each word rendered as 8 big-endian hex digits, matching python's
+/// `f"{w:08x}"`).
+pub fn encode_words(words: &[u32]) -> String {
+    words.iter().map(|w| format!("{w:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data = [0x00u8, 0x01, 0xab, 0xff, 0x7f];
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn encode_known() {
+        assert_eq!(encode(&[0xde, 0xad, 0xbe, 0xef]), "deadbeef");
+    }
+
+    #[test]
+    fn decode_rejects_odd_length() {
+        assert!(decode("abc").is_none());
+    }
+
+    #[test]
+    fn decode_rejects_bad_digit() {
+        assert!(decode("zz").is_none());
+    }
+
+    #[test]
+    fn words_match_python_format() {
+        assert_eq!(encode_words(&[0x1, 0xdeadbeef]), "00000001deadbeef");
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree utility substrates.
+//!
+//! The offline build environment ships no serde/rand/clap, so the small
+//! pieces this crate needs are implemented here: a JSON parser for the
+//! artifact manifest and cross-language test vectors ([`json`]), a
+//! deterministic PRNG for workload generation and property tests ([`rng`]),
+//! hex encoding ([`hex`]), human-readable byte/time formatting ([`fmt`]),
+//! and a tiny CLI argument parser ([`cli`]).
+
+pub mod cli;
+pub mod fmt;
+pub mod hex;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,235 @@
+//! Dataset generators: the uniform and mixed datasets of the paper's
+//! evaluation (§IV), both as *virtual* descriptors for the simulator and
+//! as *real* on-disk files for the real-mode coordinator.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{GB, MB};
+use crate::util::rng::SplitMix64;
+
+/// One file in a dataset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileSpec {
+    /// Stable id (also the cache-model FileId).
+    pub id: u64,
+    pub name: String,
+    pub size: u64,
+}
+
+/// A named dataset (ordered: transfer order matters for pipelining).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub files: Vec<FileSpec>,
+}
+
+impl Dataset {
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Uniform dataset: `count` files of `size` bytes (paper: "one or more
+    /// files in same size", e.g. 1000x10M, 100x100M, 10x1G, 1x10G).
+    pub fn uniform(name: &str, size: u64, count: usize) -> Dataset {
+        let files = (0..count)
+            .map(|i| FileSpec { id: i as u64, name: format!("{name}-{i:04}"), size })
+            .collect();
+        Dataset { name: name.to_string(), files }
+    }
+
+    /// From an explicit (count, size) spec list, shuffled with `seed`
+    /// (paper: "files are shuffled before the transfer to guarantee
+    /// randomness in the order").
+    pub fn mixed_shuffled(name: &str, groups: &[(usize, u64)], seed: u64) -> Dataset {
+        let mut files = Vec::new();
+        for &(count, size) in groups {
+            for _ in 0..count {
+                files.push(size);
+            }
+        }
+        let mut rng = SplitMix64::new(seed);
+        rng.shuffle(&mut files);
+        let files = files
+            .into_iter()
+            .enumerate()
+            .map(|(i, size)| FileSpec { id: i as u64, name: format!("{name}-{i:04}"), size })
+            .collect();
+        Dataset { name: name.to_string(), files }
+    }
+
+    /// Sorted-5M250M (paper §IV): equal numbers of 5 MB and 250 MB files
+    /// arranged so each 5 MB file is followed by a 250 MB file — the
+    /// adversarial ordering for file- and block-level pipelining.
+    pub fn sorted_5m250m(pairs: usize) -> Dataset {
+        let mut files = Vec::new();
+        for i in 0..pairs {
+            files.push(FileSpec {
+                id: (2 * i) as u64,
+                name: format!("sorted-5m-{i:04}"),
+                size: 5 * MB,
+            });
+            files.push(FileSpec {
+                id: (2 * i + 1) as u64,
+                name: format!("sorted-250m-{i:04}"),
+                size: 250 * MB,
+            });
+        }
+        Dataset { name: "Sorted-5M250M".to_string(), files }
+    }
+
+    /// The ESNet mixed dataset quoted verbatim in §IV: "100x10MB, 100x50MB,
+    /// 50x250MB, 10x2GB, 4x8GB, 4x10GB, 1x15GB, and 2x20GB; in total of 271
+    /// files with total size 165.5GB".
+    pub fn esnet_mixed(seed: u64) -> Dataset {
+        Dataset::mixed_shuffled(
+            "Shuffled",
+            &[
+                (100, 10 * MB),
+                (100, 50 * MB),
+                (50, 250 * MB),
+                (10, 2 * GB),
+                (4, 8 * GB),
+                (4, 10 * GB),
+                (1, 15 * GB),
+                (2, 20 * GB),
+            ],
+            seed,
+        )
+    }
+
+    /// The HPCLab mixed dataset (§IV analysis of Fig 3b/4: "Shuffled
+    /// dataset contains 10 MB and 500 MB files", and Fig 4's hit-ratio
+    /// analysis adds "five 20GB files that are larger than free memory
+    /// (16 GB)").
+    pub fn hpclab_mixed(seed: u64) -> Dataset {
+        Dataset::mixed_shuffled(
+            "Shuffled",
+            &[(100, 10 * MB), (100, 500 * MB), (5, 20 * GB)],
+            seed,
+        )
+    }
+
+    /// Table III fault-recovery dataset: "15 large files (10 of 1GB files
+    /// and 5 of 10GB files)".
+    pub fn table3_dataset() -> Dataset {
+        let mut files: Vec<FileSpec> = (0..10)
+            .map(|i| FileSpec { id: i, name: format!("t3-1g-{i:02}"), size: GB })
+            .collect();
+        for i in 0..5 {
+            files.push(FileSpec {
+                id: 10 + i,
+                name: format!("t3-10g-{i:02}"),
+                size: 10 * GB,
+            });
+        }
+        Dataset { name: "Table3-15files".to_string(), files }
+    }
+
+    /// Materialize the dataset as real files under `dir`, with
+    /// deterministic pseudo-random content (seeded per file id).
+    /// Returns the created paths in dataset order.
+    pub fn materialize(&self, dir: &Path, seed: u64) -> std::io::Result<Vec<PathBuf>> {
+        use std::io::Write;
+        std::fs::create_dir_all(dir)?;
+        let mut paths = Vec::with_capacity(self.files.len());
+        for f in &self.files {
+            let path = dir.join(&f.name);
+            let mut rng = SplitMix64::new(seed ^ f.id.wrapping_mul(0x9E3779B97F4A7C15));
+            let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+            let mut remaining = f.size as usize;
+            let mut buf = vec![0u8; (256 * 1024).min(remaining.max(1))];
+            while remaining > 0 {
+                let n = buf.len().min(remaining);
+                rng.fill_bytes(&mut buf[..n]);
+                out.write_all(&buf[..n])?;
+                remaining -= n;
+            }
+            out.flush()?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape() {
+        let d = Dataset::uniform("10M", 10 * MB, 1000);
+        assert_eq!(d.len(), 1000);
+        assert_eq!(d.total_bytes(), 10_000 * MB);
+        assert!(d.files.iter().all(|f| f.size == 10 * MB));
+    }
+
+    #[test]
+    fn esnet_mixed_matches_paper_inventory() {
+        let d = Dataset::esnet_mixed(42);
+        assert_eq!(d.len(), 271, "271 files");
+        let total_gb = d.total_bytes() as f64 / GB as f64;
+        assert!((total_gb - 165.5).abs() < 1.0, "165.5 GB total, got {total_gb}");
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_total_preserving() {
+        let a = Dataset::esnet_mixed(1);
+        let b = Dataset::esnet_mixed(1);
+        let c = Dataset::esnet_mixed(2);
+        assert_eq!(
+            a.files.iter().map(|f| f.size).collect::<Vec<_>>(),
+            b.files.iter().map(|f| f.size).collect::<Vec<_>>()
+        );
+        assert_eq!(a.total_bytes(), c.total_bytes());
+        assert_ne!(
+            a.files.iter().map(|f| f.size).collect::<Vec<_>>(),
+            c.files.iter().map(|f| f.size).collect::<Vec<_>>(),
+            "different seeds give different orders"
+        );
+    }
+
+    #[test]
+    fn sorted_alternates() {
+        let d = Dataset::sorted_5m250m(10);
+        assert_eq!(d.len(), 20);
+        for (i, f) in d.files.iter().enumerate() {
+            let expect = if i % 2 == 0 { 5 * MB } else { 250 * MB };
+            assert_eq!(f.size, expect, "position {i}");
+        }
+    }
+
+    #[test]
+    fn table3_inventory() {
+        let d = Dataset::table3_dataset();
+        assert_eq!(d.len(), 15);
+        assert_eq!(d.total_bytes(), 10 * GB + 50 * GB);
+    }
+
+    #[test]
+    fn materialize_writes_expected_sizes() {
+        let dir = std::env::temp_dir().join(format!("fiver-wl-test-{}", std::process::id()));
+        let d = Dataset::uniform("tiny", 10_000, 3);
+        let paths = d.materialize(&dir, 7).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            assert_eq!(std::fs::metadata(p).unwrap().len(), 10_000);
+        }
+        // Deterministic content.
+        let again = std::fs::read(&paths[0]).unwrap();
+        let d2 = Dataset::uniform("tiny", 10_000, 3);
+        let dir2 = dir.join("again");
+        let paths2 = d2.materialize(&dir2, 7).unwrap();
+        assert_eq!(std::fs::read(&paths2[0]).unwrap(), again);
+        // Distinct files differ.
+        assert_ne!(std::fs::read(&paths[1]).unwrap(), again);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration: real loopback transfers through the full coordinator
+//! stack (sockets, threads, queue, verification, recovery) for every
+//! algorithm, against both storage backends.
+
+use std::sync::Arc;
+
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::{hex_digest, HashAlgorithm};
+use fiver::storage::{MemStorage, Storage};
+use fiver::util::rng::SplitMix64;
+
+/// Build an in-memory source with `sizes` pseudo-random files.
+fn mem_src(sizes: &[usize], seed: u64) -> (MemStorage, Vec<String>, Vec<Vec<u8>>) {
+    let storage = MemStorage::new();
+    let mut rng = SplitMix64::new(seed);
+    let mut names = Vec::new();
+    let mut contents = Vec::new();
+    for (i, &size) in sizes.iter().enumerate() {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        let name = format!("f{i:03}");
+        storage.put(&name, data.clone());
+        names.push(name);
+        contents.push(data);
+    }
+    (storage, names, contents)
+}
+
+fn all_algorithms() -> [RealAlgorithm; 6] {
+    [
+        RealAlgorithm::Sequential,
+        RealAlgorithm::FileLevelPpl,
+        RealAlgorithm::BlockLevelPpl,
+        RealAlgorithm::Fiver,
+        RealAlgorithm::FiverChunk,
+        RealAlgorithm::FiverHybrid,
+    ]
+}
+
+fn transfer_and_check(
+    alg: RealAlgorithm,
+    sizes: &[usize],
+    faults: &FaultPlan,
+    hash: HashAlgorithm,
+) -> (fiver::coordinator::TransferReport, fiver::coordinator::receiver::ReceiverReport) {
+    let (src, names, contents) = mem_src(sizes, 0xA11CE);
+    let dst = MemStorage::new();
+    let mut cfg = SessionConfig::new(alg, native_factory(hash));
+    cfg.buf_size = 64 * 1024;
+    cfg.block_size = 256 * 1024;
+    cfg.queue_capacity = 512 * 1024;
+    cfg.hybrid_threshold = 1 << 20; // files >= 1 MiB take the sequential path
+    let (report, rreport) = run_local_transfer(
+        &names,
+        Arc::new(src),
+        Arc::new(dst.clone()),
+        &cfg,
+        faults,
+    )
+    .unwrap_or_else(|e| panic!("{} transfer failed: {e:#}", alg.name()));
+    // Ground truth: delivered bytes identical to source bytes.
+    for (name, expect) in names.iter().zip(&contents) {
+        let got = dst.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert_eq!(
+            hex_digest(HashAlgorithm::Sha256, &got),
+            hex_digest(HashAlgorithm::Sha256, expect),
+            "{}: content mismatch on {name}",
+            alg.name()
+        );
+    }
+    (report, rreport)
+}
+
+#[test]
+fn clean_transfer_all_algorithms() {
+    let sizes = [300_000usize, 1_500_000, 70_000, 0, 999_999];
+    for alg in all_algorithms() {
+        let (report, rreport) = transfer_and_check(alg, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+        assert_eq!(report.files, sizes.len(), "{}", alg.name());
+        assert_eq!(report.failures_detected, 0, "{}", alg.name());
+        assert_eq!(report.bytes_resent, 0, "{}", alg.name());
+        assert_eq!(rreport.files_received, sizes.len());
+        assert!(rreport.units_verified > 0, "{}", alg.name());
+    }
+}
+
+#[test]
+fn transfer_only_skips_verification() {
+    let sizes = [100_000usize, 50_000];
+    let (report, rreport) =
+        transfer_and_check(RealAlgorithm::TransferOnly, &sizes, &FaultPlan::none(), HashAlgorithm::Md5);
+    assert_eq!(report.failures_detected, 0);
+    assert_eq!(rreport.units_verified, 0, "transfer-only must not verify");
+}
+
+#[test]
+fn corruption_detected_and_repaired_every_algorithm() {
+    let sizes = [400_000usize, 900_000, 250_000];
+    // One fault in each file, mid-stream.
+    let mut faults = FaultPlan::none();
+    for (i, &s) in sizes.iter().enumerate() {
+        faults.faults.push(fiver::faults::Fault {
+            file_idx: i,
+            offset: (s / 2) as u64,
+            bit: 3,
+            occurrence: 0,
+        });
+    }
+    for alg in all_algorithms() {
+        let (report, rreport) = transfer_and_check(alg, &sizes, &faults, HashAlgorithm::Fvr256);
+        assert!(
+            report.failures_detected >= sizes.len() as u64,
+            "{}: detected {}",
+            alg.name(),
+            report.failures_detected
+        );
+        assert!(report.bytes_resent > 0, "{}", alg.name());
+        assert_eq!(rreport.units_failed, report.failures_detected);
+    }
+}
+
+#[test]
+fn chunk_recovery_resends_less_than_file_recovery() {
+    let sizes = [4_000_000usize];
+    let faults = FaultPlan::at(0, 1_000_000, 5);
+    let (file_rep, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &faults, HashAlgorithm::Fvr256);
+    let (chunk_rep, _) =
+        transfer_and_check(RealAlgorithm::FiverChunk, &sizes, &faults, HashAlgorithm::Fvr256);
+    assert_eq!(file_rep.bytes_resent, 4_000_000, "file-level resends everything");
+    assert!(
+        chunk_rep.bytes_resent <= 256 * 1024,
+        "chunk-level resends one 256 KiB chunk, got {}",
+        chunk_rep.bytes_resent
+    );
+}
+
+#[test]
+fn multiple_faults_in_one_file_converge() {
+    let sizes = [2_000_000usize];
+    let mut faults = FaultPlan::none();
+    for k in 0..5 {
+        faults.faults.push(fiver::faults::Fault {
+            file_idx: 0,
+            offset: 123_456 * (k as u64 + 1),
+            bit: (k % 8) as u8,
+            occurrence: 0,
+        });
+    }
+    for alg in [RealAlgorithm::Fiver, RealAlgorithm::FiverChunk, RealAlgorithm::Sequential] {
+        let (report, _) = transfer_and_check(alg, &sizes, &faults, HashAlgorithm::Fvr256);
+        assert!(report.failures_detected > 0, "{}", alg.name());
+    }
+}
+
+#[test]
+fn works_with_every_hash_algorithm() {
+    let sizes = [200_000usize, 123_457];
+    for hash in HashAlgorithm::all() {
+        let (report, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), hash);
+        assert_eq!(report.failures_detected, 0, "{}", hash.name());
+    }
+}
+
+#[test]
+fn fs_storage_end_to_end() {
+    use fiver::storage::FsStorage;
+    use fiver::workload::Dataset;
+    let base = std::env::temp_dir().join(format!("fiver-it-fs-{}", std::process::id()));
+    let ds = Dataset::uniform("it", 3 << 20, 4);
+    ds.materialize(&base.join("src"), 11).unwrap();
+    let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
+    let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src")).unwrap());
+    let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst")).unwrap());
+    let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+    let (report, rreport) = run_local_transfer(&names, src, dst, &cfg, &FaultPlan::none()).unwrap();
+    assert_eq!(report.files, 4);
+    assert_eq!(rreport.units_failed, 0);
+    for f in &ds.files {
+        let a = std::fs::read(base.join("src").join(&f.name)).unwrap();
+        let b = std::fs::read(base.join("dst").join(&f.name)).unwrap();
+        assert_eq!(a, b, "{}", f.name);
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn hybrid_mixes_paths_by_size() {
+    // Small files (queue path) + one large file (sequential path) in one
+    // session.
+    let sizes = [100_000usize, 5_000_000, 80_000];
+    let (report, rreport) =
+        transfer_and_check(RealAlgorithm::FiverHybrid, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+    assert_eq!(report.files, 3);
+    assert_eq!(rreport.units_verified, 3);
+}
+
+#[test]
+fn large_single_stream_through_small_queue() {
+    // Queue capacity (512 KiB) far below file size: back-pressure path.
+    let sizes = [6_000_000usize];
+    let (report, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), HashAlgorithm::Sha256);
+    assert_eq!(report.bytes_sent, 6_000_000);
+}

@@ -1,0 +1,189 @@
+//! Integration: simulated paper experiments — the qualitative claims of
+//! every figure hold in the reproduced testbeds (absolute numbers are
+//! calibrated in config/mod.rs; these tests pin the *shape*: who wins,
+//! roughly by how much, and where the crossovers are).
+
+use fiver::config::{AlgoParams, Testbed, GB, MB};
+use fiver::faults::FaultPlan;
+use fiver::metrics::RunSummary;
+use fiver::sim::algorithms::{checksum_only, run, transfer_only, Algorithm};
+use fiver::workload::Dataset;
+
+fn go(tb: Testbed, ds: &Dataset, alg: Algorithm) -> RunSummary {
+    run(tb, AlgoParams::default(), ds, &FaultPlan::none(), alg)
+}
+
+/// Paper abstract: "FIVER is able to bring down the cost from 60% by the
+/// state-of-the-art solutions to below 10%".
+#[test]
+fn headline_claim_fiver_under_10pct_sequential_near_60() {
+    let tb = Testbed::esnet_lan();
+    let ds = Dataset::uniform("10G", 10 * GB, 4);
+    let fiver = go(tb, &ds, Algorithm::Fiver);
+    let seq = go(tb, &ds, Algorithm::Sequential);
+    assert!(fiver.overhead() < 0.10, "FIVER {}", fiver.overhead());
+    assert!(
+        (0.40..0.90).contains(&seq.overhead()),
+        "Sequential ~60%: {}",
+        seq.overhead()
+    );
+}
+
+/// §III: "if checksum computation of a file takes 30 seconds and transfer
+/// takes 10, FIVER finishes both in around 30 seconds".
+#[test]
+fn fiver_time_close_to_slower_leg() {
+    for tb in [Testbed::esnet_lan(), Testbed::hpclab_40g(), Testbed::hpclab_1g()] {
+        let ds = Dataset::uniform("4G", 4 * GB, 3);
+        let s = go(tb, &ds, Algorithm::Fiver);
+        let slower = s.t_checksum_only.max(s.t_transfer_only);
+        assert!(
+            s.total_time < slower * 1.12,
+            "{}: FIVER {} vs slower leg {}",
+            tb.name,
+            s.total_time,
+            slower
+        );
+    }
+}
+
+/// Fig 3a: in HPCLab-1G (checksum faster than network) block-level
+/// pipelining imposes overhead similar to FIVER; file-level suffers on
+/// single large files.
+#[test]
+fn fig3_block_similar_to_fiver_when_checksum_fast() {
+    let tb = Testbed::hpclab_1g();
+    let ds = Dataset::uniform("10G", 10 * GB, 1);
+    let block = go(tb, &ds, Algorithm::BlockLevelPpl).overhead();
+    let fiver = go(tb, &ds, Algorithm::Fiver).overhead();
+    let file = go(tb, &ds, Algorithm::FileLevelPpl).overhead();
+    assert!((block - fiver).abs() < 0.08, "block {block} ~ fiver {fiver}");
+    assert!(file > block + 0.10, "file {file} >> block {block}");
+}
+
+/// Fig 5b vs Fig 6b vs Fig 7b: Sorted-5M250M block-level overhead is large
+/// everywhere the checksum is the bottleneck, and grows LAN -> WAN.
+#[test]
+fn sorted_block_overheads_by_testbed() {
+    let ds = Dataset::sorted_5m250m(50);
+    let b40 = go(Testbed::hpclab_40g(), &ds, Algorithm::BlockLevelPpl).overhead();
+    let lan = go(Testbed::esnet_lan(), &ds, Algorithm::BlockLevelPpl).overhead();
+    let wan = go(Testbed::esnet_wan(), &ds, Algorithm::BlockLevelPpl).overhead();
+    assert!(b40 > 0.35, "HPCLab-40G sorted (paper ~60%): {b40}");
+    assert!(lan > 0.25, "ESNet-LAN sorted (paper 38%): {lan}");
+    assert!(wan > lan, "WAN {wan} > LAN {lan} (paper 61% vs 38%)");
+}
+
+/// Fig 7a vs Fig 6a: WAN inflates overheads relative to LAN for the
+/// pipelined baselines but FIVER stays under 10%.
+#[test]
+fn wan_amplifies_baselines_not_fiver() {
+    let ds = Dataset::uniform("1G", GB, 10);
+    let fiver_wan = go(Testbed::esnet_wan(), &ds, Algorithm::Fiver).overhead();
+    assert!(fiver_wan < 0.10, "FIVER WAN {fiver_wan}");
+    let block_lan = go(Testbed::esnet_lan(), &ds, Algorithm::BlockLevelPpl).overhead();
+    let block_wan = go(Testbed::esnet_wan(), &ds, Algorithm::BlockLevelPpl).overhead();
+    assert!(block_wan >= block_lan, "WAN {block_wan} >= LAN {block_lan}");
+}
+
+/// Fig 8: average receiver hit ratios — FIVER/block ~100%, file-level and
+/// sequential meaningfully lower on the ESNet mixed dataset.
+#[test]
+fn fig8_hit_ratio_averages() {
+    let tb = Testbed::esnet_wan();
+    let ds = Dataset::esnet_mixed(42);
+    let fiver = go(tb, &ds, Algorithm::Fiver);
+    let block = go(tb, &ds, Algorithm::BlockLevelPpl);
+    let seq = go(tb, &ds, Algorithm::Sequential);
+    assert!(fiver.dst_trace.average() > 0.995, "FIVER {}", fiver.dst_trace.average());
+    assert!(block.dst_trace.average() > 0.97, "block {}", block.dst_trace.average());
+    assert!(
+        seq.dst_trace.average() < 0.93,
+        "sequential should dip (paper 77.8%): {}",
+        seq.dst_trace.average()
+    );
+    // FIVER finishes ahead of block-level (paper: 50 s earlier).
+    assert!(fiver.total_time < block.total_time);
+}
+
+/// Fig 9: FIVER-Hybrid reduces execution time ~20% vs sequential while
+/// matching its cache-miss volume (reliability equivalence).
+#[test]
+fn fig9_hybrid_tradeoff() {
+    let tb = Testbed::esnet_wan();
+    let ds = Dataset::esnet_mixed(42);
+    let hybrid = go(tb, &ds, Algorithm::FiverHybrid);
+    let seq = go(tb, &ds, Algorithm::Sequential);
+    let speedup = 1.0 - hybrid.total_time / seq.total_time;
+    assert!(
+        (0.08..0.45).contains(&speedup),
+        "paper ~20% reduction, got {:.1}%",
+        speedup * 100.0
+    );
+    let miss_ratio =
+        hybrid.dst_trace.total_misses() as f64 / seq.dst_trace.total_misses() as f64;
+    assert!((0.5..1.5).contains(&miss_ratio), "cache-miss parity: {miss_ratio}");
+}
+
+/// Eq. 1 baselines are self-consistent: algorithm times are never faster
+/// than the transfer-only baseline.
+#[test]
+fn baselines_bound_algorithms() {
+    let tb = Testbed::hpclab_40g();
+    let ds = Dataset::uniform("1G", GB, 5);
+    let p = AlgoParams::default();
+    let t_tx = transfer_only(tb, p, &ds);
+    let t_ck = checksum_only(tb, p, &ds);
+    assert!(t_tx > 0.0 && t_ck > 0.0);
+    for alg in Algorithm::all() {
+        let s = run(tb, p, &ds, &FaultPlan::none(), alg);
+        assert!(
+            s.total_time >= t_tx * 0.999,
+            "{}: {} < transfer-only {}",
+            alg.name(),
+            s.total_time,
+            t_tx
+        );
+    }
+}
+
+/// Table III trend at the simulation level: execution time of FIVER
+/// file-level verification grows steeply with faults; chunk-level barely.
+#[test]
+fn table3_trend() {
+    let tb = Testbed::hpclab_40g();
+    let ds = Dataset::table3_dataset();
+    let p = AlgoParams::default();
+    let base_file = run(tb, p, &ds, &FaultPlan::none(), Algorithm::Fiver).total_time;
+    let f24 = FaultPlan::random(&ds, 24, 5);
+    let file24 = run(tb, p, &ds, &f24, Algorithm::Fiver).total_time;
+    let chunk24 = run(tb, p, &ds, &f24, Algorithm::FiverChunk).total_time;
+    assert!(file24 / base_file > 1.30, "file 24-fault blowup {}", file24 / base_file);
+    assert!(chunk24 / base_file < 1.25, "chunk 24-fault blowup {}", chunk24 / base_file);
+}
+
+/// TCP restarts: sequential accumulates slow-start restarts on large-file
+/// datasets in the WAN (long checksum pauses exceed the RTO) while FIVER
+/// keeps the pipe continuously busy.
+#[test]
+fn tcp_restart_accounting() {
+    let tb = Testbed::esnet_wan();
+    let ds = Dataset::uniform("10G", 10 * GB, 4);
+    let seq = go(tb, &ds, Algorithm::Sequential);
+    let fiver = go(tb, &ds, Algorithm::Fiver);
+    assert!(seq.tcp_restarts >= 3, "sequential restarts {}", seq.tcp_restarts);
+    assert_eq!(fiver.tcp_restarts, 0, "FIVER should never idle the pipe");
+}
+
+/// Mixed datasets preserve total bytes across algorithms (no silent loss
+/// in the drivers).
+#[test]
+fn conservation_of_bytes() {
+    let tb = Testbed::hpclab_1g();
+    let ds = Dataset::mixed_shuffled("m", &[(10, 10 * MB), (3, 500 * MB)], 4);
+    for alg in Algorithm::all() {
+        let s = go(tb, &ds, alg);
+        assert!(s.total_time > 0.0, "{}", alg.name());
+        assert_eq!(s.bytes_resent, 0, "{}: clean run resends nothing", alg.name());
+    }
+}

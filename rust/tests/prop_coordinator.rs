@@ -1,0 +1,236 @@
+//! Property tests over coordinator invariants (in-tree generator — no
+//! proptest crate offline; see rust/src/util/rng.rs). Each property runs
+//! against dozens of seeded random configurations; failures print the seed
+//! for replay.
+
+use std::sync::Arc;
+
+use fiver::coordinator::queue::ByteQueue;
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
+use fiver::faults::{Fault, FaultPlan};
+use fiver::hashes::HashAlgorithm;
+use fiver::storage::MemStorage;
+use fiver::util::rng::SplitMix64;
+
+/// PROPERTY: any dataset + any fault set + any algorithm => every file is
+/// delivered bit-identical and every injected fault is detected.
+#[test]
+fn prop_recovery_completeness() {
+    for seed in 0..12u64 {
+        let mut rng = SplitMix64::new(seed * 7919 + 13);
+        let n_files = rng.range(1, 5) as usize;
+        let mut sizes = Vec::new();
+        for _ in 0..n_files {
+            // Mix of tiny and multi-chunk files.
+            let size = match rng.below(3) {
+                0 => rng.range(0, 1000),
+                1 => rng.range(1000, 300_000),
+                _ => rng.range(300_000, 1_500_000),
+            };
+            sizes.push(size as usize);
+        }
+        // Random faults over non-empty files.
+        let mut faults = FaultPlan::none();
+        let n_faults = rng.below(5) as usize;
+        for _ in 0..n_faults {
+            let fi = rng.below(n_files as u64) as usize;
+            if sizes[fi] == 0 {
+                continue;
+            }
+            faults.faults.push(Fault {
+                file_idx: fi,
+                offset: rng.below(sizes[fi] as u64),
+                bit: rng.below(8) as u8,
+                occurrence: 0,
+            });
+        }
+        let algs = [
+            RealAlgorithm::Sequential,
+            RealAlgorithm::FileLevelPpl,
+            RealAlgorithm::BlockLevelPpl,
+            RealAlgorithm::Fiver,
+            RealAlgorithm::FiverChunk,
+            RealAlgorithm::FiverHybrid,
+        ];
+        let alg = algs[rng.below(algs.len() as u64) as usize];
+
+        // Build source.
+        let src = MemStorage::new();
+        let mut names = Vec::new();
+        let mut contents = Vec::new();
+        for (i, &size) in sizes.iter().enumerate() {
+            let mut data = vec![0u8; size];
+            rng.fork().fill_bytes(&mut data);
+            let name = format!("p{i}");
+            src.put(&name, data.clone());
+            names.push(name);
+            contents.push(data);
+        }
+        let dst = MemStorage::new();
+        let mut cfg = SessionConfig::new(alg, native_factory(HashAlgorithm::Fvr256));
+        cfg.buf_size = rng.range(1000, 100_000) as usize;
+        cfg.block_size = rng.range(50_000, 400_000);
+        cfg.queue_capacity = rng.range(10_000, 500_000) as usize;
+        cfg.hybrid_threshold = rng.range(1000, 1_000_000);
+
+        let (report, _) = run_local_transfer(
+            &names,
+            Arc::new(src),
+            Arc::new(dst.clone()),
+            &cfg,
+            &faults,
+        )
+        .unwrap_or_else(|e| panic!("seed {seed} ({}) failed: {e:#}", alg.name()));
+
+        let effective_faults =
+            faults.faults.iter().filter(|f| sizes[f.file_idx] > 0).count() as u64;
+        assert!(
+            report.failures_detected >= effective_faults.min(1) * (effective_faults > 0) as u64,
+            "seed {seed}: {} faults, {} detected",
+            effective_faults,
+            report.failures_detected
+        );
+        for (name, expect) in names.iter().zip(&contents) {
+            let got = dst.get(name).unwrap_or_else(|| panic!("seed {seed}: missing {name}"));
+            assert_eq!(&got, expect, "seed {seed} {}: delivered bytes differ", alg.name());
+        }
+    }
+}
+
+/// PROPERTY: the queue preserves the exact byte stream (order + content)
+/// under arbitrary buffer-size interleavings and back-pressure.
+#[test]
+fn prop_queue_stream_integrity() {
+    for seed in 0..20u64 {
+        let mut rng = SplitMix64::new(seed + 0x9000);
+        let cap = rng.range(64, 8192) as usize;
+        let total = rng.range(1_000, 200_000) as usize;
+        let q = ByteQueue::new(cap);
+        let mut stream = vec![0u8; total];
+        rng.fill_bytes(&mut stream);
+        let expect = stream.clone();
+        let q2 = q.clone();
+        let mut chunk_rng = rng.fork();
+        let producer = std::thread::spawn(move || {
+            let mut pos = 0;
+            while pos < stream.len() {
+                let n = (chunk_rng.range(1, 4096) as usize).min(stream.len() - pos);
+                assert!(q2.add(stream[pos..pos + n].to_vec()));
+                pos += n;
+            }
+            q2.close();
+        });
+        let mut got = Vec::with_capacity(total);
+        while let Some(buf) = q.remove() {
+            got.extend_from_slice(&buf);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, expect, "seed {seed}");
+    }
+}
+
+/// PROPERTY: units_of always partitions [0, size) exactly: contiguous,
+/// non-overlapping, complete, and every unit except the last is full-size.
+#[test]
+fn prop_units_partition() {
+    for seed in 0..50u64 {
+        let mut rng = SplitMix64::new(seed + 0xBEE);
+        let mut cfg =
+            SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Md5));
+        cfg.block_size = rng.range(1, 1 << 20);
+        let size = rng.below(1 << 24);
+        let units = cfg.units_of(size, true);
+        assert!(!units.is_empty());
+        let mut expect_offset = 0u64;
+        for (i, &(id, offset, len)) in units.iter().enumerate() {
+            assert_eq!(id, i as u64, "seed {seed}");
+            assert_eq!(offset, expect_offset, "seed {seed}");
+            if i + 1 < units.len() {
+                assert_eq!(len, cfg.block_size, "seed {seed}: non-final unit full");
+            }
+            expect_offset += len;
+        }
+        assert_eq!(expect_offset, size, "seed {seed}: covers the file");
+    }
+}
+
+/// PROPERTY: whole-file modes always produce exactly one unit with the
+/// sentinel id.
+#[test]
+fn prop_whole_file_unit() {
+    for seed in 0..20u64 {
+        let mut rng = SplitMix64::new(seed);
+        let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+        let size = rng.below(1 << 30);
+        assert_eq!(cfg.units_of(size, true), vec![(protocol::UNIT_FILE, 0, size)]);
+    }
+}
+
+/// PROPERTY: protocol frames round-trip through a byte stream for random
+/// contents.
+#[test]
+fn prop_protocol_roundtrip() {
+    use protocol::Frame;
+    for seed in 0..30u64 {
+        let mut rng = SplitMix64::new(seed + 0x3C0);
+        let mut payload = vec![0u8; rng.below(10_000) as usize];
+        rng.fill_bytes(&mut payload);
+        let frames = vec![
+            Frame::FileStart {
+                file_idx: rng.next_u32(),
+                size: rng.next_u64(),
+                attempt: rng.below(5),
+                name: format!("n{}", rng.next_u32()),
+            },
+            Frame::Data { file_idx: rng.next_u32(), offset: rng.next_u64(), payload: payload.clone() },
+            Frame::Digest { file_idx: rng.next_u32(), unit: rng.next_u64(), digest: payload.clone() },
+            Frame::Verdict { file_idx: rng.next_u32(), unit: rng.next_u64(), ok: rng.below(2) == 1 },
+            Frame::Fix { file_idx: rng.next_u32(), offset: rng.next_u64(), payload },
+            Frame::Done,
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            f.write_to(&mut buf).unwrap();
+        }
+        let mut cursor = &buf[..];
+        for f in &frames {
+            let back = Frame::read_from(&mut cursor).unwrap().unwrap();
+            assert_eq!(&back, f, "seed {seed}");
+        }
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none());
+    }
+}
+
+/// PROPERTY: a fault on the wire NEVER survives into the destination file
+/// (fail-closed), across random single-fault positions including
+/// chunk-boundary-adjacent offsets.
+#[test]
+fn prop_single_fault_never_survives() {
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed + 0xFA17);
+        let size = 600_000usize;
+        let block = 200_000u64;
+        // Bias offsets toward unit boundaries (the risky spots).
+        let offset = match rng.below(4) {
+            0 => 0,
+            1 => block - 1,
+            2 => block,
+            _ => rng.below(size as u64),
+        };
+        let faults = FaultPlan::at(0, offset, rng.below(8) as u8);
+        let src = MemStorage::new();
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        src.put("f", data.clone());
+        let dst = MemStorage::new();
+        let mut cfg =
+            SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Fvr256));
+        cfg.block_size = block;
+        let (report, _) =
+            run_local_transfer(&["f".into()], Arc::new(src), Arc::new(dst.clone()), &cfg, &faults)
+                .unwrap();
+        assert_eq!(report.failures_detected, 1, "seed {seed} offset {offset}");
+        assert_eq!(dst.get("f").unwrap(), data, "seed {seed} offset {offset}");
+    }
+}

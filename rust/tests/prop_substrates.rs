@@ -1,0 +1,266 @@
+//! Property tests over the substrate modules: page cache, fluid engine,
+//! TCP model, hashes, JSON parser (in-tree seeded generators — no proptest
+//! crate offline).
+
+use fiver::cache::PageCache;
+use fiver::hashes::{hex_digest, HashAlgorithm};
+use fiver::net::{TcpConn, TcpParams};
+use fiver::sim::FluidSim;
+use fiver::util::json::Json;
+use fiver::util::rng::SplitMix64;
+
+/// PROPERTY: cache accounting — hits + misses == bytes requested; hit
+/// ratio in [0,1]; used() never exceeds capacity.
+#[test]
+fn prop_cache_accounting() {
+    for seed in 0..30u64 {
+        let mut rng = SplitMix64::new(seed + 1);
+        let capacity = rng.range(0, 64) * (1 << 20);
+        let mut c = PageCache::new(capacity);
+        let mut requested = 0u64;
+        for _ in 0..rng.range(5, 60) {
+            let file = rng.below(6);
+            let offset = rng.below(32 << 20);
+            let len = rng.range(1, 8 << 20);
+            if rng.below(2) == 0 {
+                let acc = c.read(file, offset, len);
+                assert_eq!(acc.total(), len, "seed {seed}");
+                requested += len;
+            } else {
+                c.write(file, offset, len);
+            }
+            assert!(c.used() <= capacity.max(1 << 20), "seed {seed}: used > capacity");
+        }
+        assert_eq!(c.total_hits + c.total_misses, requested, "seed {seed}");
+        let r = c.hit_ratio();
+        assert!((0.0..=1.0).contains(&r), "seed {seed}: {r}");
+    }
+}
+
+/// PROPERTY: immediately re-reading a just-read range of a small file is
+/// all hits (temporal locality), for any file that fits in capacity.
+#[test]
+fn prop_cache_reread_hits() {
+    for seed in 0..20u64 {
+        let mut rng = SplitMix64::new(seed + 77);
+        let mut c = PageCache::new(256 << 20);
+        let len = rng.range(1, 100 << 20);
+        c.read(1, 0, len);
+        let acc = c.read(1, 0, len);
+        assert_eq!(acc.hit_bytes, len, "seed {seed} len {len}");
+    }
+}
+
+/// PROPERTY: fluid engine conserves work — total bytes moved equals the
+/// sum of flow sizes, and completion times are consistent with capacity
+/// (never faster than bytes/capacity on a shared resource).
+#[test]
+fn prop_fluid_conservation() {
+    for seed in 0..25u64 {
+        let mut rng = SplitMix64::new(seed + 3);
+        let mut sim = FluidSim::new();
+        let capacity = rng.range(10, 10_000) as f64;
+        let r = sim.add_resource("r", capacity);
+        let n = rng.range(1, 6) as usize;
+        let mut total = 0.0;
+        let mut flows = Vec::new();
+        for _ in 0..n {
+            let bytes = rng.range(100, 100_000) as f64;
+            total += bytes;
+            flows.push(sim.start_flow(bytes, vec![(r, 1.0)], None));
+        }
+        let mut t_end = 0.0;
+        for f in &flows {
+            t_end = sim.run_until_done(*f).max(t_end);
+        }
+        let lower_bound = total / capacity;
+        assert!(
+            t_end >= lower_bound * 0.999,
+            "seed {seed}: finished {t_end} < bound {lower_bound}"
+        );
+        // With identical demands the resource is never idle: equality.
+        assert!(
+            t_end <= lower_bound * 1.001,
+            "seed {seed}: work-conserving bound violated: {t_end} vs {lower_bound}"
+        );
+    }
+}
+
+/// PROPERTY: max-min fairness — equal flows on one resource get equal
+/// rates; a capped flow never exceeds its cap; total allocation never
+/// exceeds capacity.
+#[test]
+fn prop_fluid_fairness_and_caps() {
+    for seed in 0..25u64 {
+        let mut rng = SplitMix64::new(seed + 5);
+        let mut sim = FluidSim::new();
+        let capacity = rng.range(100, 10_000) as f64;
+        let r = sim.add_resource("r", capacity);
+        let n = rng.range(2, 6) as usize;
+        let mut flows = Vec::new();
+        let mut caps = Vec::new();
+        for _ in 0..n {
+            let cap = if rng.below(2) == 0 {
+                Some(rng.range(1, capacity as u64) as f64)
+            } else {
+                None
+            };
+            caps.push(cap);
+            flows.push(sim.start_flow(1e12, vec![(r, 1.0)], cap));
+        }
+        sim.recompute_rates();
+        let rates: Vec<f64> = flows.iter().map(|&f| sim.rate(f)).collect();
+        let total: f64 = rates.iter().sum();
+        assert!(total <= capacity * 1.001, "seed {seed}: over-allocated {total}");
+        for (i, cap) in caps.iter().enumerate() {
+            if let Some(c) = cap {
+                assert!(rates[i] <= c * 1.001, "seed {seed}: cap violated");
+            }
+        }
+        // Uncapped flows all get the same (maximal) rate.
+        let uncapped: Vec<f64> = rates
+            .iter()
+            .zip(&caps)
+            .filter(|(_, c)| c.is_none())
+            .map(|(r, _)| *r)
+            .collect();
+        for w in uncapped.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6, "seed {seed}: unfair {w:?}");
+        }
+    }
+}
+
+/// PROPERTY: TCP model — cwnd is monotone during uninterrupted activity,
+/// rate never exceeds bandwidth, and transfer_time is monotone in bytes.
+#[test]
+fn prop_tcp_monotonicity() {
+    for seed in 0..25u64 {
+        let mut rng = SplitMix64::new(seed + 9);
+        let bw = rng.range(1_000_000, 12_500_000_000) as f64;
+        let rtt = rng.range(1, 200) as f64 / 1000.0;
+        let p = TcpParams::new(bw, rtt);
+        let mut conn = TcpConn::new(p);
+        conn.on_active(0.0);
+        let mut last = conn.cwnd();
+        let mut t = 0.0;
+        for _ in 0..50 {
+            let dt = rng.range(1, 1000) as f64 / 1000.0;
+            conn.advance(t, t + dt);
+            t += dt;
+            assert!(conn.cwnd() >= last * 0.999, "seed {seed}: cwnd shrank while active");
+            assert!(conn.rate() <= bw * 1.001, "seed {seed}: rate above bandwidth");
+            last = conn.cwnd();
+        }
+        let b1 = rng.range(1, 1 << 20);
+        let b2 = b1 + rng.range(1, 1 << 24);
+        let t1 = TcpConn::new(p).transfer_time(0.0, b1);
+        let t2 = TcpConn::new(p).transfer_time(0.0, b2);
+        assert!(t2 >= t1, "seed {seed}: transfer_time not monotone");
+    }
+}
+
+/// PROPERTY: all hash implementations are split-invariant (streaming
+/// equals one-shot) on random data and random split points.
+#[test]
+fn prop_hash_split_invariance() {
+    for seed in 0..15u64 {
+        let mut rng = SplitMix64::new(seed + 21);
+        let mut data = vec![0u8; rng.range(0, 10_000) as usize];
+        rng.fill_bytes(&mut data);
+        for alg in HashAlgorithm::all() {
+            let oneshot = hex_digest(alg, &data);
+            let mut h = alg.hasher();
+            let mut pos = 0;
+            while pos < data.len() {
+                let n = (rng.range(1, 777) as usize).min(data.len() - pos);
+                h.update(&data[pos..pos + n]);
+                pos += n;
+            }
+            assert_eq!(
+                fiver::util::hex::encode(&h.finalize()),
+                oneshot,
+                "seed {seed} {}",
+                alg.name()
+            );
+        }
+    }
+}
+
+/// PROPERTY: distinct random inputs give distinct digests (no trivial
+/// collisions across a few hundred samples).
+#[test]
+fn prop_hash_distinctness() {
+    let mut seen = std::collections::HashSet::new();
+    let mut rng = SplitMix64::new(0xD15);
+    for _ in 0..300 {
+        let mut data = vec![0u8; rng.range(1, 500) as usize];
+        rng.fill_bytes(&mut data);
+        for alg in HashAlgorithm::all() {
+            seen.insert(hex_digest(alg, &data));
+        }
+    }
+    assert_eq!(seen.len(), 300 * 4, "digest collision detected");
+}
+
+/// PROPERTY: the JSON parser accepts every value it can print (round-trip
+/// through a simple serializer) for randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut SplitMix64, depth: u32) -> (String, Json) {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => ("null".into(), Json::Null),
+            1 => ("true".into(), Json::Bool(true)),
+            2 => {
+                let n = rng.below(1_000_000) as f64;
+                (format!("{n}"), Json::Num(n))
+            }
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+                    .collect();
+                (format!("\"{s}\""), Json::Str(s))
+            }
+            4 => {
+                let n = rng.below(4) as usize;
+                let items: Vec<(String, Json)> = (0..n).map(|_| gen(rng, depth - 1)).collect();
+                let text = format!(
+                    "[{}]",
+                    items.iter().map(|(t, _)| t.clone()).collect::<Vec<_>>().join(",")
+                );
+                (text, Json::Arr(items.into_iter().map(|(_, v)| v).collect()))
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                let mut map = std::collections::BTreeMap::new();
+                let mut parts = Vec::new();
+                for i in 0..n {
+                    let (t, v) = gen(rng, depth - 1);
+                    let key = format!("k{i}");
+                    parts.push(format!("\"{key}\":{t}"));
+                    map.insert(key, v);
+                }
+                (format!("{{{}}}", parts.join(",")), Json::Obj(map))
+            }
+        }
+    }
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(seed + 31);
+        let (text, expect) = gen(&mut rng, 3);
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {text}: {e}"));
+        assert_eq!(parsed, expect, "seed {seed}: {text}");
+    }
+}
+
+/// PROPERTY: SplitMix64 sub-streams (fork) are independent enough that
+/// identical parents produce identical children, distinct parents distinct
+/// children.
+#[test]
+fn prop_rng_fork_determinism() {
+    for seed in 0..10u64 {
+        let mut a = SplitMix64::new(seed);
+        let mut b = SplitMix64::new(seed);
+        assert_eq!(a.fork().next_u64(), b.fork().next_u64());
+        let mut c = SplitMix64::new(seed + 1);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+}
