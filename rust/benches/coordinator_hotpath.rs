@@ -92,14 +92,8 @@ fn transfer_bench() {
         src.put(&name, data);
         names.push(name);
     }
-    for alg in [
-        RealAlgorithm::TransferOnly,
-        RealAlgorithm::Sequential,
-        RealAlgorithm::FileLevelPpl,
-        RealAlgorithm::BlockLevelPpl,
-        RealAlgorithm::Fiver,
-        RealAlgorithm::FiverChunk,
-    ] {
+    // FiverHybrid is skipped: at these sizes it is Fiver with extra setup.
+    for alg in RealAlgorithm::ALL.into_iter().filter(|a| *a != RealAlgorithm::FiverHybrid) {
         let src = src.clone();
         let names = names.clone();
         let r = bench(&format!("transfer/{}", alg.name()), 1, 3, || {

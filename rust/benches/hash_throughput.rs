@@ -18,7 +18,7 @@ fn main() {
     SplitMix64::new(1).fill_bytes(&mut data);
 
     println!("== hash throughput ({} MiB buffer) ==", size / mb);
-    for alg in HashAlgorithm::all() {
+    for alg in HashAlgorithm::ALL {
         let r = bench(&format!("native/{}", alg.name()), 1, 5, || {
             let mut h = alg.hasher();
             h.update(&data);

@@ -1,0 +1,59 @@
+//! Bench: Merkle tree-build overhead per GB against plain FIVER hashing.
+//!
+//! FIVER-Merkle folds leaf digests into a binary tree as the stream drains
+//! from the shared queue; the extra work over a single running digest is
+//! one finalize/reset per leaf plus ~2x leaf-count short combine hashes.
+//! Target: <2% throughput cost at 64 KiB leaves (the repair-granularity
+//! sweet spot — smaller leaves shrink repairs but add per-leaf overhead).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{bench, black_box};
+use fiver::hashes::HashAlgorithm;
+use fiver::merkle::MerkleBuilder;
+use fiver::util::rng::SplitMix64;
+
+fn main() {
+    let mb = 1usize << 20;
+    let size = 256 * mb; // scaled sample; per-GB figures derive linearly
+    let buf = 256 * 1024; // the coordinator's default I/O buffer
+    let mut data = vec![0u8; size];
+    SplitMix64::new(2).fill_bytes(&mut data);
+
+    for alg in [HashAlgorithm::Fvr256, HashAlgorithm::Md5] {
+        println!("== {} ({} MiB stream, {} KiB buffers) ==", alg.name(), size / mb, buf / 1024);
+
+        // Baseline: plain FIVER — one running digest over the stream.
+        let base = bench(&format!("{}/plain-fiver", alg.name()), 1, 5, || {
+            let mut h = alg.hasher();
+            for part in data.chunks(buf) {
+                h.update(part);
+            }
+            black_box(h.finalize());
+        });
+        base.report_bytes(size as u64);
+
+        // Tree builds across leaf sizes.
+        for leaf_kib in [16u64, 64, 256, 1024] {
+            let factory: fiver::merkle::DigestFactory = Arc::new(move || alg.hasher());
+            let r = bench(&format!("{}/merkle-{}KiB-leaves", alg.name(), leaf_kib), 1, 5, || {
+                let mut b = MerkleBuilder::new(leaf_kib << 10, factory.clone());
+                for part in data.chunks(buf) {
+                    b.update(part);
+                }
+                black_box(b.finish().root().to_vec());
+            });
+            r.report_bytes(size as u64);
+            let overhead = r.median_secs / base.median_secs - 1.0;
+            println!(
+                "    overhead vs plain: {:>6.2}% {}",
+                overhead * 100.0,
+                if leaf_kib == 64 && overhead > 0.02 { "(!! target <2% at 64 KiB)" } else { "" }
+            );
+        }
+        println!();
+    }
+}

@@ -152,6 +152,9 @@ pub struct AlgoParams {
     /// FIVER chunk size for chunk-level integrity verification
     /// (paper Table III: set equal to the block size).
     pub chunk_size: u64,
+    /// Merkle leaf span for FIVER-Merkle: repair granularity; a mismatch
+    /// costs O(log(size/leaf_size)) digest round trips to localize.
+    pub leaf_size: u64,
     /// Shared-queue capacity in bytes (Algorithm 1 & 2 "fixed size,
     /// synchronized queue"): bounds transfer/checksum decoupling.
     pub queue_capacity: u64,
@@ -172,6 +175,7 @@ impl Default for AlgoParams {
         AlgoParams {
             block_size: 256 * MB,
             chunk_size: 256 * MB,
+            leaf_size: 64 * KB,
             queue_capacity: 64 * MB,
             control_rtts: 1.0,
             hash: HashAlgorithm::Md5,
@@ -234,5 +238,6 @@ mod tests {
         let p = AlgoParams::default();
         assert_eq!(p.block_size, 256 * MB);
         assert_eq!(p.chunk_size, p.block_size);
+        assert_eq!(p.leaf_size, 64 * KB);
     }
 }

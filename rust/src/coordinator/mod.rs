@@ -29,8 +29,6 @@ pub mod sender;
 
 use std::sync::Arc;
 
-use crate::hashes::Hasher;
-
 /// Real-mode algorithm selector (mirrors [`crate::sim::algorithms::Algorithm`]
 /// plus a transfer-only baseline for Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,9 +40,26 @@ pub enum RealAlgorithm {
     Fiver,
     FiverChunk,
     FiverHybrid,
+    /// FIVER with a streaming Merkle digest tree (see [`crate::merkle`]):
+    /// corruption is localized by binary-searching the tree and only the
+    /// corrupted leaf ranges are re-read and re-sent.
+    FiverMerkle,
 }
 
 impl RealAlgorithm {
+    /// Every real-mode algorithm, in presentation order — the single
+    /// source of truth for tests, benches and CLI help.
+    pub const ALL: [RealAlgorithm; 8] = [
+        RealAlgorithm::TransferOnly,
+        RealAlgorithm::Sequential,
+        RealAlgorithm::FileLevelPpl,
+        RealAlgorithm::BlockLevelPpl,
+        RealAlgorithm::Fiver,
+        RealAlgorithm::FiverChunk,
+        RealAlgorithm::FiverHybrid,
+        RealAlgorithm::FiverMerkle,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             RealAlgorithm::TransferOnly => "TransferOnly",
@@ -54,6 +69,7 @@ impl RealAlgorithm {
             RealAlgorithm::Fiver => "FIVER",
             RealAlgorithm::FiverChunk => "FIVER-Chunk",
             RealAlgorithm::FiverHybrid => "FIVER-Hybrid",
+            RealAlgorithm::FiverMerkle => "FIVER-Merkle",
         }
     }
 
@@ -66,6 +82,7 @@ impl RealAlgorithm {
             "fiver" => Some(RealAlgorithm::Fiver),
             "fiver-chunk" | "fiverchunk" | "chunk" => Some(RealAlgorithm::FiverChunk),
             "fiver-hybrid" | "fiverhybrid" | "hybrid" => Some(RealAlgorithm::FiverHybrid),
+            "fiver-merkle" | "fivermerkle" | "merkle" | "tree" => Some(RealAlgorithm::FiverMerkle),
             _ => None,
         }
     }
@@ -74,7 +91,7 @@ impl RealAlgorithm {
     /// (FIVER's I/O sharing) rather than re-reading the file?
     pub fn uses_queue(&self, file_size: u64, hybrid_threshold: u64) -> bool {
         match self {
-            RealAlgorithm::Fiver | RealAlgorithm::FiverChunk => true,
+            RealAlgorithm::Fiver | RealAlgorithm::FiverChunk | RealAlgorithm::FiverMerkle => true,
             RealAlgorithm::FiverHybrid => file_size < hybrid_threshold,
             _ => false,
         }
@@ -91,7 +108,7 @@ impl RealAlgorithm {
 
 /// Factory producing fresh streaming hashers (native MD5/SHA/FVR or the
 /// XLA-backed [`crate::runtime::FvrHasher`]); shared across threads.
-pub type HasherFactory = Arc<dyn Fn() -> Box<dyn Hasher> + Send + Sync>;
+pub type HasherFactory = crate::hashes::DigestFactory;
 
 /// Make a factory from a named algorithm.
 pub fn native_factory(alg: crate::hashes::HashAlgorithm) -> HasherFactory {
@@ -115,6 +132,9 @@ pub struct SessionConfig {
     pub queue_capacity: usize,
     /// FIVER-Hybrid threshold: files >= this use the Sequential path.
     pub hybrid_threshold: u64,
+    /// Merkle leaf span for FIVER-Merkle (repair granularity; digest
+    /// exchange on a mismatch is O(log(size/leaf_size))).
+    pub leaf_size: u64,
     pub hasher: HasherFactory,
 }
 
@@ -126,6 +146,7 @@ impl SessionConfig {
             block_size: 4 << 20,
             queue_capacity: 8 << 20,
             hybrid_threshold: 64 << 20,
+            leaf_size: 64 << 10,
             hasher,
         }
     }
@@ -167,6 +188,13 @@ pub struct TransferReport {
     /// Extra bytes sent for verification repairs.
     pub bytes_resent: u64,
     pub failures_detected: u64,
+    /// Repair rounds executed (FixEnd batches sent).
+    pub repair_rounds: u64,
+    /// Bytes re-read from source storage for repairs.
+    pub bytes_reread: u64,
+    /// Control-channel round trips spent on verification (digest/root
+    /// exchanges plus tree node-range query rounds).
+    pub verify_rtts: u64,
     pub elapsed_secs: f64,
 }
 
@@ -177,15 +205,7 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for alg in [
-            RealAlgorithm::TransferOnly,
-            RealAlgorithm::Sequential,
-            RealAlgorithm::FileLevelPpl,
-            RealAlgorithm::BlockLevelPpl,
-            RealAlgorithm::Fiver,
-            RealAlgorithm::FiverChunk,
-            RealAlgorithm::FiverHybrid,
-        ] {
+        for alg in RealAlgorithm::ALL {
             assert_eq!(RealAlgorithm::parse(alg.name()), Some(alg));
         }
     }
@@ -220,7 +240,17 @@ mod tests {
     #[test]
     fn queue_usage_by_algorithm() {
         assert!(RealAlgorithm::Fiver.uses_queue(1, 0));
+        assert!(RealAlgorithm::FiverMerkle.uses_queue(1, 0));
         assert!(!RealAlgorithm::Sequential.uses_queue(1, u64::MAX));
         assert!(!RealAlgorithm::BlockLevelPpl.uses_queue(1, u64::MAX));
+    }
+
+    #[test]
+    fn merkle_is_a_whole_file_unit() {
+        // The tree refines verification *below* the unit level; the
+        // digest/verdict rendezvous still runs per file.
+        let cfg = SessionConfig::new(RealAlgorithm::FiverMerkle, native_factory(HashAlgorithm::Md5));
+        assert_eq!(cfg.units_of(1 << 20, true), vec![(protocol::UNIT_FILE, 0, 1 << 20)]);
+        assert_eq!(cfg.leaf_size, 64 << 10);
     }
 }

@@ -42,6 +42,20 @@ pub enum Frame {
     /// Sender -> receiver verdict for a digest unit: `a` = unit,
     /// `b` = 1 if ok (0 => expect repairs then a fresh digest).
     Verdict { file_idx: u32, unit: u64, ok: bool },
+    /// Receiver -> sender Merkle root (FIVER-Merkle): `a` = leaf count,
+    /// `b` = leaf size, payload = root digest.
+    TreeRoot { file_idx: u32, leaves: u64, leaf_size: u64, digest: Vec<u8> },
+    /// Sender -> receiver node-range query during tree descent: `a` =
+    /// level (0 = leaves), `b` = start index, payload = count (u64 LE).
+    TreeQuery { file_idx: u32, level: u64, start: u64, count: u64 },
+    /// Receiver -> sender node-range response: `a` = level, `b` = start,
+    /// payload = concatenated node digests (clipped to the level width).
+    TreeNodes { file_idx: u32, level: u64, start: u64, digests: Vec<u8> },
+    /// Sender -> receiver, after the repair Fixes of a descent round were
+    /// written to the data channel: `a` = repair round (1-based), `b` =
+    /// leaves repaired. The receiver then awaits the FixEnd on the data
+    /// channel, patches its tree, and answers with a fresh TreeRoot.
+    TreeRepairSent { file_idx: u32, round: u64, leaves_fixed: u64 },
     /// Session end.
     Done,
 }
@@ -54,6 +68,10 @@ const TAG_FIX_END: u8 = 5;
 const TAG_DIGEST: u8 = 6;
 const TAG_VERDICT: u8 = 7;
 const TAG_DONE: u8 = 8;
+const TAG_TREE_ROOT: u8 = 9;
+const TAG_TREE_QUERY: u8 = 10;
+const TAG_TREE_NODES: u8 = 11;
+const TAG_TREE_REPAIR_SENT: u8 = 12;
 
 /// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
 pub const UNIT_FILE: u64 = u64::MAX;
@@ -62,6 +80,7 @@ impl Frame {
     /// Serialize to a writer. One syscall-ish write for the header plus one
     /// for the payload; callers wrap sockets in BufWriter.
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let count_bytes;
         let (tag, idx, a, b, payload): (u8, u32, u64, u64, &[u8]) = match self {
             Frame::FileStart { file_idx, size, attempt, name } => {
                 (TAG_FILE_START, *file_idx, *size, *attempt, name.as_bytes())
@@ -77,6 +96,19 @@ impl Frame {
             }
             Frame::Verdict { file_idx, unit, ok } => {
                 (TAG_VERDICT, *file_idx, *unit, u64::from(*ok), &[])
+            }
+            Frame::TreeRoot { file_idx, leaves, leaf_size, digest } => {
+                (TAG_TREE_ROOT, *file_idx, *leaves, *leaf_size, digest)
+            }
+            Frame::TreeQuery { file_idx, level, start, count } => {
+                count_bytes = count.to_le_bytes();
+                (TAG_TREE_QUERY, *file_idx, *level, *start, &count_bytes)
+            }
+            Frame::TreeNodes { file_idx, level, start, digests } => {
+                (TAG_TREE_NODES, *file_idx, *level, *start, digests)
+            }
+            Frame::TreeRepairSent { file_idx, round, leaves_fixed } => {
+                (TAG_TREE_REPAIR_SENT, *file_idx, *round, *leaves_fixed, &[])
             }
             Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
         };
@@ -122,6 +154,19 @@ impl Frame {
             TAG_FIX_END => Frame::FixEnd { file_idx, unit: a },
             TAG_DIGEST => Frame::Digest { file_idx, unit: a, digest: payload },
             TAG_VERDICT => Frame::Verdict { file_idx, unit: a, ok: b != 0 },
+            TAG_TREE_ROOT => Frame::TreeRoot { file_idx, leaves: a, leaf_size: b, digest: payload },
+            TAG_TREE_QUERY => Frame::TreeQuery {
+                file_idx,
+                level: a,
+                start: b,
+                count: u64::from_le_bytes(
+                    payload.as_slice().try_into().context("tree query count")?,
+                ),
+            },
+            TAG_TREE_NODES => Frame::TreeNodes { file_idx, level: a, start: b, digests: payload },
+            TAG_TREE_REPAIR_SENT => {
+                Frame::TreeRepairSent { file_idx, round: a, leaves_fixed: b }
+            }
             TAG_DONE => Frame::Done,
             _ => bail!("unknown frame tag {tag}"),
         }))
@@ -191,6 +236,15 @@ mod tests {
         roundtrip(Frame::Digest { file_idx: 2, unit: 5, digest: vec![0xCD; 32] });
         roundtrip(Frame::Verdict { file_idx: 2, unit: UNIT_FILE, ok: true });
         roundtrip(Frame::Verdict { file_idx: 2, unit: 0, ok: false });
+        roundtrip(Frame::TreeRoot {
+            file_idx: 4,
+            leaves: 16384,
+            leaf_size: 64 << 10,
+            digest: vec![0x5A; 32],
+        });
+        roundtrip(Frame::TreeQuery { file_idx: 4, level: 7, start: 128, count: 2 });
+        roundtrip(Frame::TreeNodes { file_idx: 4, level: 7, start: 128, digests: vec![1; 64] });
+        roundtrip(Frame::TreeRepairSent { file_idx: 4, round: 1, leaves_fixed: 3 });
         roundtrip(Frame::Done);
     }
 

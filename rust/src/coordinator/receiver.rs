@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
 use super::{RealAlgorithm, SessionConfig};
+use crate::merkle::{MerkleBuilder, MerkleTree};
 use crate::storage::Storage;
 
 /// Receiver-side session summary.
@@ -50,9 +51,13 @@ enum Event {
         len: u64,
         digest: Option<Vec<u8>>,
     },
-    /// Repairs for (file_idx, unit) have been applied; recompute and
-    /// re-exchange.
-    Repaired { file_idx: u32, unit: u64 },
+    /// FIVER-Merkle: exchange this file's digest tree with the sender and
+    /// drive the leaf-repair loop until the roots match.
+    VerifyTree { file_idx: u32, name: String, tree: MerkleTree },
+    /// Repairs for (file_idx, unit) have been applied; `ranges` are the
+    /// byte spans the Fix frames rewrote (so tree mode recomputes only the
+    /// touched leaves). Recompute and re-exchange.
+    Repaired { file_idx: u32, unit: u64, ranges: Vec<(u64, u64)> },
 }
 
 /// Serve one session on accepted data/control connections. Blocks until
@@ -74,6 +79,11 @@ pub fn serve_session(
     let mut report = ReceiverReport::default();
     let mut current: Option<FileState> = None;
     let mut names: HashMap<u32, String> = HashMap::new();
+    // Byte spans rewritten by Fix frames since the last FixEnd, per file,
+    // plus one write handle kept open across the batch (opening and
+    // flushing per frame would pay a syscall pair per ~64 KiB of repair).
+    let mut fix_ranges: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
+    let mut fix_writers: HashMap<u32, Box<dyn crate::storage::WriteStream>> = HashMap::new();
 
     loop {
         let frame = Frame::read_from(&mut data_in)
@@ -103,13 +113,24 @@ pub fn serve_session(
                 let name = names
                     .get(&file_idx)
                     .with_context(|| format!("Fix for unknown file {file_idx}"))?;
-                let mut w = storage.open_update(name)?;
+                let w = match fix_writers.entry(file_idx) {
+                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(storage.open_update(name)?)
+                    }
+                };
                 w.write_at(offset, &payload)?;
-                w.flush()?;
                 report.bytes_repaired += payload.len() as u64;
+                fix_ranges.entry(file_idx).or_default().push((offset, payload.len() as u64));
             }
             Frame::FixEnd { file_idx, unit } => {
-                tx.send(Event::Repaired { file_idx, unit }).ok();
+                // Make the batch durable before the verify worker re-hashes
+                // the repaired ranges from storage.
+                if let Some(mut w) = fix_writers.remove(&file_idx) {
+                    w.flush()?;
+                }
+                let ranges = fix_ranges.remove(&file_idx).unwrap_or_default();
+                tx.send(Event::Repaired { file_idx, unit, ranges }).ok();
             }
             Frame::Done => break,
             other => bail!("unexpected frame on data channel: {other:?}"),
@@ -157,22 +178,33 @@ impl FileState {
             let q = ByteQueue::new(cfg.queue_capacity);
             let q2 = q.clone();
             let hasher_factory = cfg.hasher.clone();
-            let units2 = units.clone();
             let tx2 = tx.clone();
             let name2 = name.to_string();
-            let handle = std::thread::spawn(move || {
-                queue_hash_units(q2, &units2, hasher_factory, |unit, offset, len, digest| {
-                    tx2.send(Event::Verify {
-                        file_idx,
-                        name: name2.clone(),
-                        unit,
-                        offset,
-                        len,
-                        digest: Some(digest),
-                    })
-                    .ok();
-                });
-            });
+            let handle = if cfg.algorithm == RealAlgorithm::FiverMerkle {
+                // Fold the stream into a digest tree as it drains from the
+                // queue (Algorithm 2 line 7 with tree leaves instead of a
+                // single running digest) — still zero extra file I/O.
+                let leaf_size = cfg.leaf_size;
+                std::thread::spawn(move || {
+                    let tree = queue_build_tree(q2, leaf_size, hasher_factory);
+                    tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
+                })
+            } else {
+                let units2 = units.clone();
+                std::thread::spawn(move || {
+                    queue_hash_units(q2, &units2, hasher_factory, |unit, offset, len, digest| {
+                        tx2.send(Event::Verify {
+                            file_idx,
+                            name: name2.clone(),
+                            unit,
+                            offset,
+                            len,
+                            digest: Some(digest),
+                        })
+                        .ok();
+                    });
+                })
+            };
             (Some(q), Some(handle))
         } else {
             (None, None)
@@ -286,6 +318,21 @@ pub(crate) fn queue_hash_units(
     }
 }
 
+/// Consume a queue into a streaming Merkle builder — FIVER-Merkle's
+/// COMPUTECHECKSUM, the tree-shaped twin of [`queue_hash_units`]; both
+/// endpoints drain their queue through this.
+pub(crate) fn queue_build_tree(
+    q: ByteQueue,
+    leaf_size: u64,
+    hasher_factory: super::HasherFactory,
+) -> MerkleTree {
+    let mut builder = MerkleBuilder::new(leaf_size, hasher_factory);
+    while let Some(buf) = q.remove() {
+        builder.update(&buf);
+    }
+    builder.finish()
+}
+
 /// The verify worker: digests out, verdicts in, repair loop.
 fn verify_worker(
     ctrl: TcpStream,
@@ -307,8 +354,28 @@ fn verify_worker(
                 Err(_) => break, // all senders dropped: session over
             },
         };
-        let Event::Verify { file_idx, name, unit, offset, len, digest } = ev else {
-            continue; // stray Repaired with no pending verification
+        let (file_idx, name, unit, offset, len, digest) = match ev {
+            Event::Verify { file_idx, name, unit, offset, len, digest } => {
+                (file_idx, name, unit, offset, len, digest)
+            }
+            Event::VerifyTree { file_idx, name, tree } => {
+                let (v, f) = verify_tree_exchange(
+                    &mut ctrl_in,
+                    &mut ctrl_out,
+                    &storage,
+                    cfg,
+                    &rx,
+                    &mut stash,
+                    file_idx,
+                    &name,
+                    tree,
+                )?;
+                verified += v;
+                failed += f;
+                continue;
+            }
+            // Stray Repaired with no pending verification.
+            Event::Repaired { .. } => continue,
         };
         // Compute (re-read mode) or take (queue mode) the digest.
         let mut digest = match digest {
@@ -337,7 +404,7 @@ fn verify_worker(
                     // (FIVER keeps streaming during recovery).
                     loop {
                         match rx.recv() {
-                            Ok(Event::Repaired { file_idx: fi, unit: u })
+                            Ok(Event::Repaired { file_idx: fi, unit: u, ranges: _ })
                                 if fi == file_idx && u == unit =>
                             {
                                 break;
@@ -353,6 +420,94 @@ fn verify_worker(
         }
     }
     Ok((verified, failed))
+}
+
+/// FIVER-Merkle receiver loop: offer the tree root; on a mismatch verdict,
+/// answer the sender's node-range queries (its binary search down the
+/// tree), wait for the repair Fixes to land, patch only the touched leaves
+/// from storage (O(k) leaf hashes + O(k log n) combines), and re-offer the
+/// fresh root until the sender accepts it.
+#[allow(clippy::too_many_arguments)]
+fn verify_tree_exchange(
+    ctrl_in: &mut BufReader<TcpStream>,
+    ctrl_out: &mut BufWriter<TcpStream>,
+    storage: &Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    rx: &mpsc::Receiver<Event>,
+    stash: &mut std::collections::VecDeque<Event>,
+    file_idx: u32,
+    name: &str,
+    mut tree: MerkleTree,
+) -> Result<(u64, u64)> {
+    use std::io::Write;
+    let mut verified = 0u64;
+    let mut failed = 0u64;
+    loop {
+        Frame::TreeRoot {
+            file_idx,
+            leaves: tree.leaf_count() as u64,
+            leaf_size: tree.leaf_size(),
+            digest: tree.root().to_vec(),
+        }
+        .write_to(ctrl_out)?;
+        ctrl_out.flush()?;
+        let verdict =
+            Frame::read_from(ctrl_in)?.context("ctrl channel closed awaiting tree verdict")?;
+        let Frame::Verdict { file_idx: fi, unit: _, ok } = verdict else {
+            bail!("expected Verdict for tree root, got {verdict:?}");
+        };
+        anyhow::ensure!(fi == file_idx, "tree verdict for wrong file {fi} != {file_idx}");
+        if ok {
+            verified += 1;
+            return Ok((verified, failed));
+        }
+        failed += 1;
+        // Serve the descent queries until the sender announces repairs.
+        loop {
+            let frame = Frame::read_from(ctrl_in)?.context("ctrl channel closed mid-descent")?;
+            match frame {
+                Frame::TreeQuery { file_idx: fi, level, start, count } => {
+                    anyhow::ensure!(fi == file_idx, "tree query for wrong file");
+                    Frame::TreeNodes {
+                        file_idx,
+                        level,
+                        start,
+                        digests: tree.nodes_concat(
+                            level as usize,
+                            start as usize,
+                            count as usize,
+                        ),
+                    }
+                    .write_to(ctrl_out)?;
+                    ctrl_out.flush()?;
+                }
+                Frame::TreeRepairSent { .. } => break,
+                other => bail!("expected TreeQuery/TreeRepairSent, got {other:?}"),
+            }
+        }
+        // Await the data channel's FixEnd (repairs applied), stashing other
+        // files' verification events that arrive meanwhile.
+        let ranges = loop {
+            match rx.recv() {
+                Ok(Event::Repaired { file_idx: fi, unit: _, ranges }) if fi == file_idx => {
+                    break ranges;
+                }
+                Ok(other) => stash.push_back(other),
+                Err(_) => bail!("session ended mid-tree-repair"),
+            }
+        };
+        let mut dirty: Vec<usize> = Vec::new();
+        for (off, len) in ranges {
+            dirty.extend(tree.leaves_touching(off, len));
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        for &leaf in &dirty {
+            let (off, len) = tree.leaf_range(leaf);
+            tree.set_leaf(leaf, hash_range(storage, name, off, len, &cfg.hasher)?);
+        }
+        tree.recompute_paths(&dirty, &cfg.hasher);
+    }
 }
 
 /// Hash `[offset, offset+len)` of a stored file (checksum via the

@@ -27,9 +27,10 @@ use anyhow::{bail, Context, Result};
 
 use super::protocol::Frame;
 use super::queue::ByteQueue;
-use super::receiver::{hash_range, queue_hash_units};
+use super::receiver::{hash_range, queue_build_tree, queue_hash_units};
 use super::{RealAlgorithm, SessionConfig, TransferReport};
 use crate::faults::{FaultInjector, FaultPlan};
+use crate::merkle::MerkleTree;
 use crate::storage::Storage;
 
 /// Shared sender state between main, hash threads and the verifier.
@@ -37,12 +38,18 @@ struct Shared {
     /// Local digests by (file_idx, unit).
     local: Mutex<HashMap<(u32, u64), Vec<u8>>>,
     local_cv: Condvar,
+    /// Local digest trees per file (FIVER-Merkle); evicted once verified.
+    trees: Mutex<HashMap<u32, Arc<MerkleTree>>>,
+    trees_cv: Condvar,
     /// Unverified unit counts per file (present once registered).
     remaining: Mutex<HashMap<u32, usize>>,
     remaining_cv: Condvar,
     all_registered: AtomicBool,
     failures: AtomicU64,
     bytes_resent: AtomicU64,
+    repair_rounds: AtomicU64,
+    bytes_reread: AtomicU64,
+    verify_rtts: AtomicU64,
 }
 
 impl Shared {
@@ -50,11 +57,16 @@ impl Shared {
         Arc::new(Shared {
             local: Mutex::new(HashMap::new()),
             local_cv: Condvar::new(),
+            trees: Mutex::new(HashMap::new()),
+            trees_cv: Condvar::new(),
             remaining: Mutex::new(HashMap::new()),
             remaining_cv: Condvar::new(),
             all_registered: AtomicBool::new(false),
             failures: AtomicU64::new(0),
             bytes_resent: AtomicU64::new(0),
+            repair_rounds: AtomicU64::new(0),
+            bytes_reread: AtomicU64::new(0),
+            verify_rtts: AtomicU64::new(0),
         })
     }
 
@@ -71,6 +83,29 @@ impl Shared {
             }
             g = self.local_cv.wait(g).unwrap();
         }
+    }
+
+    fn put_tree(&self, file_idx: u32, tree: MerkleTree) {
+        self.trees.lock().unwrap().insert(file_idx, Arc::new(tree));
+        self.trees_cv.notify_all();
+    }
+
+    /// Cheap Arc clone — a 1 TB file's tree holds tens of millions of
+    /// digests; copying it per verification round would dwarf the repair.
+    fn wait_tree(&self, file_idx: u32) -> Arc<MerkleTree> {
+        let mut g = self.trees.lock().unwrap();
+        loop {
+            if let Some(t) = g.get(&file_idx) {
+                return t.clone();
+            }
+            g = self.trees_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Evict a verified file's tree (digests held for the session would
+    /// accumulate O(total_bytes / leaf_size) memory on big datasets).
+    fn drop_tree(&self, file_idx: u32) {
+        self.trees.lock().unwrap().remove(&file_idx);
     }
 
     fn register(&self, file_idx: u32, units: usize) {
@@ -153,8 +188,9 @@ pub fn run_sender(
         let data_out2 = data_out.clone();
         let cfg2 = cfg.clone();
         let names: Vec<String> = files.to_vec();
+        let faults2 = faults.clone();
         Some(std::thread::spawn(move || {
-            run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names)
+            run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2)
         }))
     } else {
         None
@@ -208,13 +244,22 @@ pub fn run_sender(
             let q = ByteQueue::new(cfg.queue_capacity);
             let q2 = q.clone();
             let hasher = cfg.hasher.clone();
-            let units2 = units.clone();
             let shared2 = shared.clone();
-            hash_threads.push(std::thread::spawn(move || {
-                queue_hash_units(q2, &units2, hasher, |unit, _o, _l, digest| {
-                    shared2.put_local(file_idx, unit, digest);
-                });
-            }));
+            if cfg.algorithm == RealAlgorithm::FiverMerkle {
+                // Fold the clean outbound stream into a digest tree as it
+                // drains from the queue (no second read of the source).
+                let leaf_size = cfg.leaf_size;
+                hash_threads.push(std::thread::spawn(move || {
+                    shared2.put_tree(file_idx, queue_build_tree(q2, leaf_size, hasher));
+                }));
+            } else {
+                let units2 = units.clone();
+                hash_threads.push(std::thread::spawn(move || {
+                    queue_hash_units(q2, &units2, hasher, |unit, _o, _l, digest| {
+                        shared2.put_local(file_idx, unit, digest);
+                    });
+                }));
+            }
             Some(q)
         } else {
             None
@@ -309,12 +354,17 @@ pub fn run_sender(
     }
     report.failures_detected = shared.failures.load(Ordering::SeqCst);
     report.bytes_resent = shared.bytes_resent.load(Ordering::SeqCst);
+    report.repair_rounds = shared.repair_rounds.load(Ordering::SeqCst);
+    report.bytes_reread = shared.bytes_reread.load(Ordering::SeqCst);
+    report.verify_rtts = shared.verify_rtts.load(Ordering::SeqCst);
     report.elapsed_secs = start.elapsed().as_secs_f64();
     Ok(report)
 }
 
-/// Verifier: match receiver digests against local ones; repair mismatches
-/// by re-reading the source range and sending Fix frames.
+/// Verifier: match receiver digests (or Merkle roots) against local ones;
+/// repair mismatches by re-reading the failed source range and sending Fix
+/// frames. FIVER-Merkle mismatches are binary-searched down the digest
+/// tree first, so only the corrupted leaf ranges are re-read and re-sent.
 fn run_verifier(
     ctrl: TcpStream,
     shared: Arc<Shared>,
@@ -322,9 +372,13 @@ fn run_verifier(
     data_out: DataOut,
     cfg: &SessionConfig,
     names: &[String],
+    faults: &FaultPlan,
 ) -> Result<()> {
     let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
     let mut ctrl_out = BufWriter::new(ctrl);
+    // Repair rounds per (file, unit): round n's re-sent bytes count as
+    // occurrence n for the fault plan (corruption strikes re-transfers too).
+    let mut attempts: HashMap<(u32, u64), u32> = HashMap::new();
     loop {
         if shared.all_done() {
             break;
@@ -338,45 +392,243 @@ fn run_verifier(
                 bail!("ctrl channel closed with unverified units");
             }
         };
-        let Frame::Digest { file_idx, unit, digest } = frame else {
-            bail!("expected Digest on ctrl, got {frame:?}");
-        };
-        let local = shared.wait_local(file_idx, unit);
-        let ok = local == digest;
-        Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
-        ctrl_out.flush()?;
-        if ok {
-            shared.unit_ok(file_idx);
-            continue;
+        match frame {
+            Frame::Digest { file_idx, unit, digest } => {
+                let local = shared.wait_local(file_idx, unit);
+                shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
+                let ok = local == digest;
+                Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
+                ctrl_out.flush()?;
+                if ok {
+                    shared.unit_ok(file_idx);
+                    continue;
+                }
+                // Mismatch: checksum verification failed — repair the unit
+                // (Algorithm 1 line 21 generalized to sub-file resolution).
+                shared.failures.fetch_add(1, Ordering::SeqCst);
+                let attempt = bump_attempt(&mut attempts, file_idx, unit);
+                let name = &names[file_idx as usize];
+                let size = storage.size_of(name)?;
+                let (offset, len) = unit_range(cfg, unit, size);
+                send_repair_range(
+                    &storage, &data_out, &shared, faults, cfg, file_idx, name, offset, len,
+                    attempt,
+                )?;
+                data_out.send(&Frame::FixEnd { file_idx, unit })?;
+                data_out.flush()?;
+                shared.repair_rounds.fetch_add(1, Ordering::SeqCst);
+                // The receiver recomputes and sends a fresh Digest; handled
+                // on the next loop iteration.
+            }
+            Frame::TreeRoot { file_idx, leaves, leaf_size, digest } => {
+                let tree = shared.wait_tree(file_idx);
+                // Geometry disagreements (leaf size or leaf count) are
+                // configuration/protocol errors, not wire corruption: leaf
+                // repairs can never change the remote tree's shape, so the
+                // loop could not converge — fail loudly instead.
+                anyhow::ensure!(
+                    leaf_size == tree.leaf_size(),
+                    "merkle leaf size mismatch: sender {} vs receiver {} — \
+                     both endpoints must agree on --leaf-size",
+                    tree.leaf_size(),
+                    leaf_size
+                );
+                anyhow::ensure!(
+                    leaves as usize == tree.leaf_count(),
+                    "merkle leaf count mismatch on file {file_idx}: sender {} vs receiver \
+                     {leaves} — stream length disagrees with the announced size",
+                    tree.leaf_count()
+                );
+                shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
+                let ok = tree.root() == &digest[..];
+                Frame::Verdict { file_idx, unit: super::protocol::UNIT_FILE, ok }
+                    .write_to(&mut ctrl_out)?;
+                ctrl_out.flush()?;
+                if ok {
+                    shared.unit_ok(file_idx);
+                    shared.drop_tree(file_idx);
+                    continue;
+                }
+                shared.failures.fetch_add(1, Ordering::SeqCst);
+                let attempt = bump_attempt(&mut attempts, file_idx, super::protocol::UNIT_FILE);
+                // Binary-search the mismatch down the tree — O(log n)
+                // node-range round trips — then re-send only bad leaves.
+                let bad_leaves: Vec<usize> =
+                    descend_tree(&mut ctrl_in, &mut ctrl_out, &shared, &tree, file_idx)?;
+                anyhow::ensure!(
+                    !bad_leaves.is_empty(),
+                    "tree root mismatch but no differing leaf found"
+                );
+                let name = &names[file_idx as usize];
+                for (first, last) in coalesce_runs(&bad_leaves) {
+                    let (off, _) = tree.leaf_range(first);
+                    let (last_off, last_len) = tree.leaf_range(last);
+                    send_repair_range(
+                        &storage,
+                        &data_out,
+                        &shared,
+                        faults,
+                        cfg,
+                        file_idx,
+                        name,
+                        off,
+                        last_off + last_len - off,
+                        attempt,
+                    )?;
+                }
+                data_out.send(&Frame::FixEnd { file_idx, unit: super::protocol::UNIT_FILE })?;
+                data_out.flush()?;
+                shared.repair_rounds.fetch_add(1, Ordering::SeqCst);
+                Frame::TreeRepairSent {
+                    file_idx,
+                    round: attempt as u64,
+                    leaves_fixed: bad_leaves.len() as u64,
+                }
+                .write_to(&mut ctrl_out)?;
+                ctrl_out.flush()?;
+                // The receiver patches the repaired leaves and answers with
+                // a fresh TreeRoot; handled on the next loop iteration.
+            }
+            other => bail!("expected Digest/TreeRoot on ctrl, got {other:?}"),
         }
-        // Mismatch: checksum verification failed — repair the unit
-        // (Algorithm 1 line 21 generalized to sub-file resolution).
-        shared.failures.fetch_add(1, Ordering::SeqCst);
-        let name = &names[file_idx as usize];
-        let size = storage.size_of(name)?;
-        let (offset, len) = unit_range(cfg, unit, size);
-        let mut r = storage.open_read(name)?;
-        let mut pos = offset;
-        let end = offset + len;
-        let mut buf = vec![0u8; cfg.buf_size];
-        while pos < end {
-            let want = buf.len().min((end - pos) as usize);
-            let n = r.read_at(pos, &mut buf[..want])?;
-            anyhow::ensure!(n > 0, "short repair read");
-            data_out.send(&Frame::Fix {
-                file_idx,
-                offset: pos,
-                payload: buf[..n].to_vec(),
-            })?;
-            shared.bytes_resent.fetch_add(n as u64, Ordering::SeqCst);
-            pos += n as u64;
-        }
-        data_out.send(&Frame::FixEnd { file_idx, unit })?;
-        data_out.flush()?;
-        // The receiver recomputes and sends a fresh Digest; handled on the
-        // next loop iteration.
     }
     Ok(())
+}
+
+/// Increment and return the repair-round counter for a (file, unit).
+fn bump_attempt(attempts: &mut HashMap<(u32, u64), u32>, file_idx: u32, unit: u64) -> u32 {
+    let a = attempts.entry((file_idx, unit)).or_insert(0);
+    *a += 1;
+    *a
+}
+
+/// Re-read `[offset, offset+len)` from the source and stream it as Fix
+/// frames, applying the fault plan's occurrence-`attempt` flips to the
+/// outbound copy only (local digests keep hashing clean source bytes).
+#[allow(clippy::too_many_arguments)]
+fn send_repair_range(
+    storage: &Arc<dyn Storage>,
+    data_out: &DataOut,
+    shared: &Shared,
+    faults: &FaultPlan,
+    cfg: &SessionConfig,
+    file_idx: u32,
+    name: &str,
+    offset: u64,
+    len: u64,
+    attempt: u32,
+) -> Result<()> {
+    let mut r = storage.open_read(name)?;
+    let mut pos = offset;
+    let end = offset + len;
+    let mut buf = vec![0u8; cfg.buf_size];
+    while pos < end {
+        let want = buf.len().min((end - pos) as usize);
+        let n = r.read_at(pos, &mut buf[..want])?;
+        anyhow::ensure!(n > 0, "short repair read");
+        faults.corrupt_in_place(file_idx as usize, attempt, pos, &mut buf[..n]);
+        data_out.send(&Frame::Fix { file_idx, offset: pos, payload: buf[..n].to_vec() })?;
+        shared.bytes_resent.fetch_add(n as u64, Ordering::SeqCst);
+        shared.bytes_reread.fetch_add(n as u64, Ordering::SeqCst);
+        pos += n as u64;
+    }
+    Ok(())
+}
+
+/// Top-down binary search of a root mismatch: one batched node-range
+/// query round per tree level, descending only into mismatched children.
+/// Returns the corrupted leaf indices; the wire carries O(k log n) digests
+/// for k corrupted leaves instead of the O(n) of a full leaf exchange.
+fn descend_tree(
+    ctrl_in: &mut BufReader<TcpStream>,
+    ctrl_out: &mut BufWriter<TcpStream>,
+    shared: &Shared,
+    tree: &MerkleTree,
+    file_idx: u32,
+) -> Result<Vec<usize>> {
+    if tree.height() == 1 {
+        return Ok(vec![0]); // the root *is* the only leaf
+    }
+    let dlen = tree.digest_len();
+    let mut suspects: Vec<usize> = vec![0]; // the root, at the top level
+    for level in (0..tree.height() - 1).rev() {
+        let width = tree.level_width(level);
+        let mut wanted: Vec<usize> = Vec::new();
+        for &p in &suspects {
+            for c in [2 * p, 2 * p + 1] {
+                if c < width {
+                    wanted.push(c);
+                }
+            }
+        }
+        // A coalesced run's TreeNodes reply must stay far below the 64 MiB
+        // frame payload cap even at 32-byte digests: split long runs.
+        const MAX_QUERY_NODES: usize = 4096; // 128 KiB of digests per reply
+        let queries: Vec<(usize, usize)> = coalesce_runs(&wanted)
+            .into_iter()
+            .flat_map(|(first, last)| {
+                (first..=last)
+                    .step_by(MAX_QUERY_NODES)
+                    .map(move |s| (s, last.min(s + MAX_QUERY_NODES - 1)))
+            })
+            .collect();
+        let mut mismatched: Vec<usize> = Vec::new();
+        // Bounded request window per flush: writing *every* query before
+        // reading any response can deadlock both TCP directions when
+        // corruption is massive (thousands of runs per level filling the
+        // receive buffers on both sides). 64 runs ≈ 2 KiB of queries,
+        // and the sender drains each reply as it arrives.
+        const QUERY_WINDOW: usize = 64;
+        for batch in queries.chunks(QUERY_WINDOW) {
+            for &(first, last) in batch {
+                Frame::TreeQuery {
+                    file_idx,
+                    level: level as u64,
+                    start: first as u64,
+                    count: (last - first + 1) as u64,
+                }
+                .write_to(ctrl_out)?;
+            }
+            ctrl_out.flush()?;
+            shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
+            for &(first, last) in batch {
+                let frame =
+                    Frame::read_from(ctrl_in)?.context("ctrl channel closed mid-descent")?;
+                let Frame::TreeNodes { file_idx: fi, level: lv, start, digests } = frame else {
+                    bail!("expected TreeNodes, got {frame:?}");
+                };
+                anyhow::ensure!(
+                    fi == file_idx && lv == level as u64 && start == first as u64,
+                    "tree nodes for wrong range ({fi},{lv},{start})"
+                );
+                for (i, idx) in (first..=last).enumerate() {
+                    // Absent or differing remote node => suspect.
+                    if digests.get(i * dlen..(i + 1) * dlen) != Some(tree.node(level, idx)) {
+                        mismatched.push(idx);
+                    }
+                }
+            }
+        }
+        suspects = mismatched;
+        anyhow::ensure!(
+            !suspects.is_empty(),
+            "tree level {level} matches but the level above did not"
+        );
+    }
+    Ok(suspects)
+}
+
+/// Coalesce sorted indices into inclusive `(first, last)` runs.
+fn coalesce_runs(sorted: &[usize]) -> Vec<(usize, usize)> {
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    for &i in sorted {
+        match runs.last_mut() {
+            Some((_, last)) if *last + 1 == i => *last = i,
+            Some((_, last)) if *last >= i => {} // duplicate
+            _ => runs.push((i, i)),
+        }
+    }
+    runs
 }
 
 /// Byte range of a verification unit.

@@ -22,11 +22,23 @@ pub fn table3() -> String {
         tb.name
     );
     let mut t = Table::new(&[
-        "faults", "algorithm", "time", "resent", "failures detected",
+        "faults",
+        "algorithm",
+        "time",
+        "resent",
+        "failures detected",
+        "repair rounds",
+        "reread",
+        "verify RTTs",
     ]);
     for count in [0usize, 8, 24] {
         let plan = FaultPlan::random(&ds, count, 0xF1BE5 + count as u64);
-        for alg in [Algorithm::Fiver, Algorithm::FiverChunk, Algorithm::BlockLevelPpl] {
+        for alg in [
+            Algorithm::Fiver,
+            Algorithm::FiverChunk,
+            Algorithm::FiverMerkle,
+            Algorithm::BlockLevelPpl,
+        ] {
             let s = run(tb, super::params(), &ds, &plan, alg);
             t.row(&[
                 count.to_string(),
@@ -34,6 +46,9 @@ pub fn table3() -> String {
                 secs(s.total_time),
                 bytes(s.bytes_resent),
                 s.failures_detected.to_string(),
+                s.repair_rounds.to_string(),
+                bytes(s.bytes_reread),
+                s.verify_rtts.to_string(),
             ]);
         }
     }
@@ -66,6 +81,29 @@ mod tests {
         assert!(chunk24.total_time < file24.total_time);
         // Resent data: chunk-level sends ~24 chunks, file-level whole files.
         assert!(chunk24.bytes_resent < file24.bytes_resent / 2);
+    }
+
+    /// Merkle repair cost stays flat in fault count and far below both
+    /// chunk- and file-level recovery (leaf resolution beats chunk
+    /// resolution by block_size/leaf_size).
+    #[test]
+    fn merkle_repair_flattens_table3() {
+        let tb = Testbed::hpclab_40g();
+        let ds = Dataset::table3_dataset();
+        let p = super::super::params();
+        let t0 = run(tb, p, &ds, &FaultPlan::none(), Algorithm::FiverMerkle).total_time;
+        let plan24 = FaultPlan::random(&ds, 24, 99);
+        let merkle24 = run(tb, p, &ds, &plan24, Algorithm::FiverMerkle);
+        let chunk24 = run(tb, p, &ds, &plan24, Algorithm::FiverChunk);
+        assert!(
+            merkle24.total_time / t0 < 1.08,
+            "merkle blowup {}",
+            merkle24.total_time / t0
+        );
+        // 24 faults repair with <= 24 leaves of 64 KiB, not 256 MB chunks.
+        assert!(merkle24.bytes_resent <= 24 * p.leaf_size);
+        assert!(merkle24.bytes_resent < chunk24.bytes_resent / 1000);
+        assert_eq!(merkle24.bytes_reread, merkle24.bytes_resent);
     }
 
     /// Chunk-level verification in the no-fault case costs about the same

@@ -78,6 +78,45 @@ impl FaultPlan {
     pub fn count(&self) -> usize {
         self.faults.len()
     }
+
+    /// Flip the bits planned for `(file_idx, occurrence)` that fall inside
+    /// the window `[window_start, window_start + buf.len())` of the file,
+    /// directly in `buf`. Returns the number of flips applied. This is the
+    /// repair-path twin of [`FaultInjector::corrupt`]: re-sent bytes (Fix
+    /// frames) count as occurrence `n` of the range they cover, so a fault
+    /// plan can corrupt a *re*-transfer attempt too.
+    pub fn corrupt_in_place(
+        &self,
+        file_idx: usize,
+        occurrence: u32,
+        window_start: u64,
+        buf: &mut [u8],
+    ) -> usize {
+        let hi = window_start + buf.len() as u64;
+        let mut applied = 0;
+        for f in &self.faults {
+            if f.file_idx == file_idx
+                && f.occurrence == occurrence
+                && f.offset >= window_start
+                && f.offset < hi
+            {
+                buf[(f.offset - window_start) as usize] ^= 1 << f.bit;
+                applied += 1;
+            }
+        }
+        applied
+    }
+
+    /// Highest planned occurrence for a file (0 when only first-attempt
+    /// faults exist). Repair loops converge once attempts exceed this.
+    pub fn max_occurrence(&self, file_idx: usize) -> u32 {
+        self.faults
+            .iter()
+            .filter(|f| f.file_idx == file_idx)
+            .map(|f| f.occurrence)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 /// Applies a fault plan to in-flight buffers (real mode). Tracks the byte
@@ -201,6 +240,29 @@ mod tests {
         inj.start_file(0, 1); // second attempt
         let mut buf = vec![0u8; 10];
         assert!(inj.corrupt(&mut buf).is_empty());
+    }
+
+    #[test]
+    fn corrupt_in_place_honors_occurrence_and_window() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault { file_idx: 1, offset: 105, bit: 0, occurrence: 1 },
+                Fault { file_idx: 1, offset: 105, bit: 1, occurrence: 2 },
+                Fault { file_idx: 0, offset: 105, bit: 2, occurrence: 1 },
+            ],
+        };
+        let mut buf = vec![0u8; 10];
+        // Wrong occurrence: untouched.
+        assert_eq!(plan.corrupt_in_place(1, 0, 100, &mut buf), 0);
+        assert!(buf.iter().all(|&b| b == 0));
+        // Occurrence 1 in-window: exactly the planned bit flips.
+        assert_eq!(plan.corrupt_in_place(1, 1, 100, &mut buf), 1);
+        assert_eq!(buf[5], 0x01);
+        // Out of window: untouched.
+        let mut buf2 = vec![0u8; 10];
+        assert_eq!(plan.corrupt_in_place(1, 1, 200, &mut buf2), 0);
+        assert_eq!(plan.max_occurrence(1), 2);
+        assert_eq!(plan.max_occurrence(9), 0);
     }
 
     #[test]

@@ -17,6 +17,11 @@ pub mod md5;
 pub mod sha1;
 pub mod sha256;
 
+/// Factory producing fresh streaming hashers; shared across threads. The
+/// single definition behind [`crate::coordinator::HasherFactory`] and
+/// [`crate::merkle::DigestFactory`].
+pub type DigestFactory = std::sync::Arc<dyn Fn() -> Box<dyn Hasher> + Send + Sync>;
+
 /// Streaming hash interface (mirrors `MessageDigest` in the paper's
 /// Algorithms 1 & 2: `update()` in the queue-consumer loop, `digest()` at
 /// file end).
@@ -43,6 +48,11 @@ pub enum HashAlgorithm {
 }
 
 impl HashAlgorithm {
+    /// Every hash backend, in registry order — the single source of truth
+    /// for tests, benches, experiment drivers and CLI help.
+    pub const ALL: [HashAlgorithm; 4] =
+        [HashAlgorithm::Md5, HashAlgorithm::Sha1, HashAlgorithm::Sha256, HashAlgorithm::Fvr256];
+
     pub fn name(&self) -> &'static str {
         match self {
             HashAlgorithm::Md5 => "md5",
@@ -86,8 +96,9 @@ impl HashAlgorithm {
         }
     }
 
-    pub fn all() -> [HashAlgorithm; 4] {
-        [HashAlgorithm::Md5, HashAlgorithm::Sha1, HashAlgorithm::Sha256, HashAlgorithm::Fvr256]
+    /// `"md5|sha1|sha256|fvr256"` — for CLI usage strings.
+    pub fn names_joined() -> String {
+        Self::ALL.map(|a| a.name()).join("|")
     }
 }
 
@@ -104,10 +115,11 @@ mod tests {
 
     #[test]
     fn registry_roundtrip() {
-        for alg in HashAlgorithm::all() {
+        for alg in HashAlgorithm::ALL {
             assert_eq!(HashAlgorithm::parse(alg.name()), Some(alg));
         }
         assert_eq!(HashAlgorithm::parse("nope"), None);
+        assert_eq!(HashAlgorithm::names_joined(), "md5|sha1|sha256|fvr256");
     }
 
     #[test]
@@ -127,7 +139,7 @@ mod tests {
     #[test]
     fn streaming_equals_oneshot() {
         let data: Vec<u8> = (0..=255).cycle().take(1000).collect();
-        for alg in HashAlgorithm::all() {
+        for alg in HashAlgorithm::ALL {
             let oneshot = hex_digest(alg, &data);
             let mut h = alg.hasher();
             for part in data.chunks(37) {
@@ -139,7 +151,7 @@ mod tests {
 
     #[test]
     fn reset_reuses_cleanly() {
-        for alg in HashAlgorithm::all() {
+        for alg in HashAlgorithm::ALL {
             let mut h = alg.hasher();
             h.update(b"garbage");
             let _ = h.finalize();

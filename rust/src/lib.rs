@@ -15,6 +15,17 @@
 //!   and threads; [`sim`] re-runs the same scheduling policies inside a
 //!   discrete-event testbed model so the paper's 165 GB / 100 Gbps
 //!   experiments reproduce on a laptop.
+//! * **Layer 3½ — Merkle verification** ([`merkle`]): a streaming digest
+//!   tree grown over the same shared-queue bytes FIVER already hashes
+//!   (zero extra file I/O). The `FiverMerkle` policy exchanges the O(1)
+//!   root instead of per-chunk digests; on a mismatch the sender
+//!   binary-searches the tree with node-range queries — O(log n) control
+//!   round trips, O(k log n) digest bytes for k corrupted leaves — and
+//!   re-reads/re-sends only the corrupted leaf ranges (O(k · leaf_size)
+//!   repair bytes vs FIVER-Chunk's O(k · block_size) and plain FIVER's
+//!   O(file)). Both real mode and the sim implement the same policy, so
+//!   Table III replays at 100 Gbps scale with repair-cost telemetry
+//!   (`repair_rounds`, `bytes_reread`, `verify_rtts`).
 //! * **Layer 2/1 (build-time Python)** — the FVR-256 digest pipeline
 //!   (JAX graph + Pallas block-hash kernel), AOT-lowered to HLO text which
 //!   [`runtime`] loads and executes through the XLA PJRT CPU client.
@@ -33,6 +44,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod faults;
 pub mod hashes;
+pub mod merkle;
 pub mod metrics;
 pub mod net;
 pub mod runtime;

@@ -12,6 +12,11 @@
 //! * `hash --hash H <path...>` — checksum files (XLA path with
 //!   `--hash fvr256-xla`).
 //! * `experiment <name>` — alias for the repro-experiments binary.
+//!
+//! `--verify-tree` selects FIVER-Merkle (streaming digest-tree
+//! verification with O(log n) corruption localization); `--leaf-size N`
+//! sets its repair granularity (default 64 KiB). Both endpoints must
+//! agree on the algorithm and leaf size.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -33,26 +38,34 @@ fn hasher_factory(name: &str) -> Result<HasherFactory> {
         let engine = fiver::runtime::XlaHashEngine::load(&manifest, "1m", false)?;
         return Ok(xla_factory(engine));
     }
-    let alg = HashAlgorithm::parse(name)
-        .with_context(|| format!("unknown hash `{name}` (md5|sha1|sha256|fvr256|fvr256-xla)"))?;
+    let alg = HashAlgorithm::parse(name).with_context(|| {
+        format!("unknown hash `{name}` ({}|fvr256-xla)", HashAlgorithm::names_joined())
+    })?;
     Ok(native_factory(alg))
 }
 
 fn session_config(args: &Args) -> Result<SessionConfig> {
-    let alg = RealAlgorithm::parse(args.opt_or("alg", "fiver"))
-        .context("unknown --alg (transfer-only|sequential|file|block|fiver|chunk|hybrid)")?;
+    // `--verify-tree` is shorthand for the Merkle policy; `--alg` wins if
+    // both are given explicitly.
+    let default_alg = if args.flag("verify-tree") { "fiver-merkle" } else { "fiver" };
+    let alg = RealAlgorithm::parse(args.opt_or("alg", default_alg)).with_context(|| {
+        let names: Vec<&str> = RealAlgorithm::ALL.iter().map(|a| a.name()).collect();
+        format!("unknown --alg ({})", names.join("|"))
+    })?;
     let mut cfg = SessionConfig::new(alg, hasher_factory(args.opt_or("hash", "fvr256"))?);
     cfg.buf_size = args.opt_u64("buf-size", cfg.buf_size as u64) as usize;
     cfg.block_size = args.opt_u64("block-size", cfg.block_size);
     cfg.queue_capacity = args.opt_u64("queue-capacity", cfg.queue_capacity as u64) as usize;
     cfg.hybrid_threshold = args.opt_u64("hybrid-threshold", cfg.hybrid_threshold);
+    cfg.leaf_size = args.opt_u64("leaf-size", cfg.leaf_size);
+    anyhow::ensure!(cfg.leaf_size > 0, "--leaf-size must be positive");
     Ok(cfg)
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "block-size", "queue-capacity",
-        "hybrid-threshold", "files", "size", "faults", "seed",
+        "hybrid-threshold", "leaf-size", "files", "size", "faults", "seed",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -171,5 +184,11 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
         fmt::rate_bps(throughput),
         r.failures_detected,
         fmt::bytes(r.bytes_resent),
+    );
+    println!(
+        "repair path: {} rounds, {} re-read from source, {} verification RTTs",
+        r.repair_rounds,
+        fmt::bytes(r.bytes_reread),
+        r.verify_rtts,
     );
 }

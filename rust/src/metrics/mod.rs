@@ -143,6 +143,13 @@ pub struct RunSummary {
     pub bytes_resent: u64,
     /// Verification failures detected (== faults caught).
     pub failures_detected: u64,
+    /// Repair rounds executed (re-transfer batches after a failed verify).
+    pub repair_rounds: u64,
+    /// Bytes re-read from source storage for repairs.
+    pub bytes_reread: u64,
+    /// Control-channel round trips spent on verification (digest/root
+    /// exchanges plus Merkle node-range query rounds).
+    pub verify_rtts: u64,
 }
 
 impl RunSummary {

@@ -48,9 +48,25 @@ pub enum Algorithm {
     /// FIVER for files smaller than free memory, Sequential otherwise
     /// (§IV-B, Fig 9).
     FiverHybrid,
+    /// FIVER with a streaming Merkle digest tree: O(log n) digest exchange
+    /// localizes corruption to leaves; only those are re-sent (see
+    /// [`crate::merkle`]).
+    FiverMerkle,
 }
 
 impl Algorithm {
+    /// Every simulated algorithm, in presentation order — the single
+    /// source of truth for tests and experiment drivers.
+    pub const ALL: [Algorithm; 7] = [
+        Algorithm::Sequential,
+        Algorithm::FileLevelPpl,
+        Algorithm::BlockLevelPpl,
+        Algorithm::Fiver,
+        Algorithm::FiverChunk,
+        Algorithm::FiverHybrid,
+        Algorithm::FiverMerkle,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Sequential => "Sequential",
@@ -59,6 +75,7 @@ impl Algorithm {
             Algorithm::Fiver => "FIVER",
             Algorithm::FiverChunk => "FIVER-Chunk",
             Algorithm::FiverHybrid => "FIVER-Hybrid",
+            Algorithm::FiverMerkle => "FIVER-Merkle",
         }
     }
 
@@ -70,19 +87,9 @@ impl Algorithm {
             "fiver" => Some(Algorithm::Fiver),
             "fiver-chunk" | "fiverchunk" | "chunk" => Some(Algorithm::FiverChunk),
             "fiver-hybrid" | "fiverhybrid" | "hybrid" => Some(Algorithm::FiverHybrid),
+            "fiver-merkle" | "fivermerkle" | "merkle" | "tree" => Some(Algorithm::FiverMerkle),
             _ => None,
         }
-    }
-
-    pub fn all() -> [Algorithm; 6] {
-        [
-            Algorithm::Sequential,
-            Algorithm::FileLevelPpl,
-            Algorithm::BlockLevelPpl,
-            Algorithm::Fiver,
-            Algorithm::FiverChunk,
-            Algorithm::FiverHybrid,
-        ]
     }
 }
 
@@ -166,6 +173,7 @@ pub fn run(
         Algorithm::Fiver => run_fiver(&mut env, ds, faults, &mut summary, false),
         Algorithm::FiverChunk => run_fiver(&mut env, ds, faults, &mut summary, true),
         Algorithm::FiverHybrid => run_hybrid(&mut env, ds, faults, &mut summary),
+        Algorithm::FiverMerkle => run_fiver_merkle(&mut env, ds, faults, &mut summary),
     }
     summary.total_time = env.now();
     summary.tcp_restarts = env.tcp.restarts;
@@ -230,11 +238,14 @@ fn run_sequential(
             // Serial verification: exchange digests before the next file.
             let ctrl = env.start_timer(env.params.control_rtts * env.tb.rtt);
             env.pump_until(ctrl);
+            summary.verify_rtts += 1;
             if faults.for_attempt(i, attempts[i]).is_empty() {
                 break;
             }
             summary.failures_detected += 1;
             summary.bytes_resent += f.size;
+            summary.bytes_reread += f.size;
+            summary.repair_rounds += 1;
             attempts[i] += 1;
         }
     }
@@ -304,6 +315,7 @@ fn run_pipelined(
         // Verify the checksummed unit (digest exchange overlaps the next
         // round's data; only failures cost a re-queue).
         if let Some(u) = in_checksum.take() {
+            summary.verify_rtts += 1;
             let unit_faults = faults
                 .for_attempt(u.file_idx, u.attempt)
                 .into_iter()
@@ -312,6 +324,8 @@ fn run_pipelined(
             if unit_faults > 0 {
                 summary.failures_detected += 1;
                 summary.bytes_resent += u.len;
+                summary.bytes_reread += u.len;
+                summary.repair_rounds += 1;
                 queue.push_back(Unit { attempt: u.attempt + 1, ..u });
             }
         }
@@ -368,6 +382,11 @@ fn run_fiver_files(
         // next file's data (Algorithm 1: checksum thread owns the socket
         // exchange) — no serial cost here. Verification failures trigger
         // recovery.
+        summary.verify_rtts += if chunk_level {
+            (f.size.div_ceil(env.params.chunk_size)).max(1)
+        } else {
+            1
+        };
         let file_faults = faults.for_attempt(i, 0);
         if file_faults.is_empty() {
             continue;
@@ -386,6 +405,9 @@ fn run_fiver_files(
                 let off = c * cs;
                 let len = cs.min(f.size - off);
                 summary.bytes_resent += len;
+                summary.bytes_reread += len;
+                summary.repair_rounds += 1;
+                summary.verify_rtts += 1; // fresh chunk digest exchange
                 let refl = env.start_fiver_flow(f, off, len);
                 env.pump_until(refl);
             }
@@ -396,6 +418,9 @@ fn run_fiver_files(
             let mut attempt = 1u32;
             loop {
                 summary.bytes_resent += f.size;
+                summary.bytes_reread += f.size;
+                summary.repair_rounds += 1;
+                summary.verify_rtts += 1; // fresh file digest exchange
                 let refl = env.start_fiver_flow(f, 0, f.size);
                 env.pump_until(refl);
                 if faults.for_attempt(i, attempt).is_empty() {
@@ -406,6 +431,73 @@ fn run_fiver_files(
             }
         }
     }
+}
+
+/// FIVER-Merkle: the stream folds into a digest tree as it drains from
+/// the shared queue (same transfer profile as FIVER), and a failed root
+/// exchange is binary-searched down the tree — `descent_rounds` control
+/// round trips — so only the corrupted leaves are re-read and re-sent.
+/// Faults planned at occurrence `n > 0` strike the `n`-th repair round's
+/// re-sent ranges, exercising repair-loop convergence.
+fn run_fiver_merkle(
+    env: &mut SimEnv,
+    ds: &Dataset,
+    faults: &FaultPlan,
+    summary: &mut RunSummary,
+) {
+    let leaf = env.params.leaf_size;
+    for i in 0..ds.files.len() {
+        let f = &ds.files[i];
+        let flow = env.start_fiver_flow(f, 0, f.size);
+        env.pump_until(flow);
+        // Root exchange overlaps the next file's data, like FIVER's digest.
+        summary.verify_rtts += 1;
+        let leaves = crate::merkle::leaf_count(f.size, leaf);
+        let mut attempt = 0u32;
+        // Repaired ranges of the previous round: occurrence-(n+1) faults
+        // only strike bytes actually re-sent in round n+1.
+        let mut resent: Option<Vec<(u64, u64)>> = None; // None = full stream
+        loop {
+            let round_faults: Vec<crate::faults::Fault> = faults
+                .for_attempt(i, attempt)
+                .into_iter()
+                .filter(|ft| match &resent {
+                    None => true,
+                    Some(ranges) => {
+                        ranges.iter().any(|&(o, l)| ft.offset >= o && ft.offset < o + l)
+                    }
+                })
+                .collect();
+            if round_faults.is_empty() {
+                break;
+            }
+            summary.failures_detected += 1; // one mismatched root exchange
+            let mut bad_leaves: Vec<u64> = round_faults.iter().map(|ft| ft.offset / leaf).collect();
+            bad_leaves.sort_unstable();
+            bad_leaves.dedup();
+            // Descent: one batched node-range query round per tree level,
+            // then a fresh root after the repairs land.
+            let rounds = crate::merkle::descent_rounds(leaves) as u64 + 1;
+            let t = env.start_timer(rounds as f64 * env.tb.rtt);
+            env.pump_until(t);
+            summary.verify_rtts += rounds;
+            let mut ranges = Vec::with_capacity(bad_leaves.len());
+            for l in bad_leaves {
+                let off = l * leaf;
+                let len = leaf.min(f.size - off);
+                summary.bytes_resent += len;
+                summary.bytes_reread += len;
+                let refl = env.start_fiver_flow(f, off, len);
+                env.pump_until(refl);
+                ranges.push((off, len));
+            }
+            summary.repair_rounds += 1;
+            resent = Some(ranges);
+            attempt += 1;
+        }
+    }
+    let t = env.start_timer(env.params.control_rtts * env.tb.rtt);
+    env.pump_until(t);
 }
 
 /// FIVER-Hybrid (§IV-B): FIVER for files smaller than free memory (their
@@ -530,7 +622,7 @@ mod tests {
         let ds = Dataset::uniform("512M", 512 * MB, 4);
         let tb = Testbed::hpclab_40g();
         let faults = FaultPlan::random(&ds, 5, 11);
-        for alg in Algorithm::all() {
+        for alg in Algorithm::ALL {
             let s = run(tb, AlgoParams::default(), &ds, &faults, alg);
             assert!(
                 s.failures_detected > 0,
@@ -543,8 +635,72 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for alg in Algorithm::all() {
+        for alg in Algorithm::ALL {
             assert_eq!(Algorithm::parse(alg.name()), Some(alg), "{}", alg.name());
         }
+    }
+
+    #[test]
+    fn merkle_repair_cheaper_than_chunk() {
+        let ds = Dataset::uniform("4G", 4 * GB, 3);
+        let tb = Testbed::hpclab_40g();
+        let faults = FaultPlan::random(&ds, 6, 7);
+        let p = AlgoParams::default();
+        let chunk = run(tb, p, &ds, &faults, Algorithm::FiverChunk);
+        let merkle = run(tb, p, &ds, &faults, Algorithm::FiverMerkle);
+        assert!(merkle.failures_detected > 0);
+        // Repair bytes: O(leaf) per fault vs O(chunk) per fault.
+        assert!(merkle.bytes_resent <= 6 * p.leaf_size, "{}", merkle.bytes_resent);
+        assert!(
+            merkle.bytes_resent < chunk.bytes_resent / 100,
+            "merkle {} vs chunk {}",
+            merkle.bytes_resent,
+            chunk.bytes_resent
+        );
+        // Descent round trips are the price of leaf resolution; they must
+        // not eat the repair-byte win (small slack for the tiny-flow ramp).
+        assert!(
+            merkle.total_time <= chunk.total_time * 1.05,
+            "merkle {} vs chunk {}",
+            merkle.total_time,
+            chunk.total_time
+        );
+        assert!(merkle.repair_rounds > 0 && merkle.verify_rtts > 0);
+    }
+
+    #[test]
+    fn merkle_converges_when_repairs_are_corrupted_too() {
+        use crate::faults::Fault;
+        let ds = Dataset::uniform("1G", GB, 1);
+        let tb = Testbed::hpclab_40g();
+        // Corrupt the stream, then corrupt the first repair of that range.
+        let faults = FaultPlan {
+            faults: vec![
+                Fault { file_idx: 0, offset: 12_345, bit: 0, occurrence: 0 },
+                Fault { file_idx: 0, offset: 12_345, bit: 1, occurrence: 1 },
+            ],
+        };
+        let p = AlgoParams::default();
+        let s = run(tb, p, &ds, &faults, Algorithm::FiverMerkle);
+        assert_eq!(s.repair_rounds, 2, "round 1 corrupted -> round 2 repairs it");
+        assert_eq!(s.failures_detected, 2);
+        assert!(s.bytes_resent <= 2 * p.leaf_size);
+    }
+
+    #[test]
+    fn merkle_retransfer_fault_outside_resent_range_is_moot() {
+        use crate::faults::Fault;
+        let ds = Dataset::uniform("1G", GB, 1);
+        let tb = Testbed::hpclab_40g();
+        // The occurrence-1 fault targets bytes that round 1 never re-sends
+        // (different leaf): it cannot strike, so one round suffices.
+        let faults = FaultPlan {
+            faults: vec![
+                Fault { file_idx: 0, offset: 12_345, bit: 0, occurrence: 0 },
+                Fault { file_idx: 0, offset: 500 << 20, bit: 1, occurrence: 1 },
+            ],
+        };
+        let s = run(tb, AlgoParams::default(), &ds, &faults, Algorithm::FiverMerkle);
+        assert_eq!(s.repair_rounds, 1);
     }
 }

@@ -28,15 +28,11 @@ fn mem_src(sizes: &[usize], seed: u64) -> (MemStorage, Vec<String>, Vec<Vec<u8>>
     (storage, names, contents)
 }
 
-fn all_algorithms() -> [RealAlgorithm; 6] {
-    [
-        RealAlgorithm::Sequential,
-        RealAlgorithm::FileLevelPpl,
-        RealAlgorithm::BlockLevelPpl,
-        RealAlgorithm::Fiver,
-        RealAlgorithm::FiverChunk,
-        RealAlgorithm::FiverHybrid,
-    ]
+fn all_algorithms() -> Vec<RealAlgorithm> {
+    RealAlgorithm::ALL
+        .into_iter()
+        .filter(|a| *a != RealAlgorithm::TransferOnly)
+        .collect()
 }
 
 fn transfer_and_check(
@@ -148,16 +144,81 @@ fn multiple_faults_in_one_file_converge() {
             occurrence: 0,
         });
     }
-    for alg in [RealAlgorithm::Fiver, RealAlgorithm::FiverChunk, RealAlgorithm::Sequential] {
+    for alg in [
+        RealAlgorithm::Fiver,
+        RealAlgorithm::FiverChunk,
+        RealAlgorithm::FiverMerkle,
+        RealAlgorithm::Sequential,
+    ] {
         let (report, _) = transfer_and_check(alg, &sizes, &faults, HashAlgorithm::Fvr256);
         assert!(report.failures_detected > 0, "{}", alg.name());
     }
 }
 
+/// Acceptance: with a fault plan corrupting k bytes of an N-byte file,
+/// FIVER-Merkle's repair cost is O(k · leaf_size) — not O(N) — and the
+/// destination digests match the source for every hash backend.
+#[test]
+fn merkle_repair_cost_is_leaf_local_for_all_hashes() {
+    let n: usize = 8 << 20; // 8 MiB file
+    let leaf: u64 = 64 << 10; // default 64 KiB leaves -> 128 leaves
+    // k = 3 corrupted bytes, scattered into distinct leaves.
+    let fault_offsets = [1_000_000u64, 3_500_000, 7_900_000];
+    let mut faults = FaultPlan::none();
+    for (k, &off) in fault_offsets.iter().enumerate() {
+        faults.faults.push(fiver::faults::Fault {
+            file_idx: 0,
+            offset: off,
+            bit: (k % 8) as u8,
+            occurrence: 0,
+        });
+    }
+    for hash in HashAlgorithm::ALL {
+        let (report, rreport) =
+            transfer_and_check(RealAlgorithm::FiverMerkle, &[n], &faults, hash);
+        let k = fault_offsets.len() as u64;
+        assert_eq!(report.failures_detected, 1, "{}: one root mismatch", hash.name());
+        assert_eq!(report.repair_rounds, 1, "{}", hash.name());
+        // O(k·leaf), with room for run coalescing — nowhere near O(N).
+        assert!(
+            report.bytes_resent + report.bytes_reread <= 4 * k * leaf,
+            "{}: repair cost {} + {} not leaf-local",
+            hash.name(),
+            report.bytes_resent,
+            report.bytes_reread
+        );
+        assert!(report.bytes_resent >= k * leaf - 2 * leaf, "{}", hash.name());
+        assert_eq!(rreport.bytes_repaired, report.bytes_resent, "{}", hash.name());
+        // Descent exchanges O(log n) node-range rounds, not O(n) digests:
+        // root + ~log2(128) levels + fresh root.
+        assert!(
+            (2u64..=12).contains(&report.verify_rtts),
+            "{}: verify_rtts {}",
+            hash.name(),
+            report.verify_rtts
+        );
+    }
+}
+
+/// A clean FIVER-Merkle session costs exactly one root exchange per file
+/// and no repair traffic.
+#[test]
+fn merkle_clean_run_is_one_rtt_per_file() {
+    let sizes = [300_000usize, 0, 1_234_567];
+    let (report, rreport) =
+        transfer_and_check(RealAlgorithm::FiverMerkle, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+    assert_eq!(report.failures_detected, 0);
+    assert_eq!(report.bytes_resent, 0);
+    assert_eq!(report.bytes_reread, 0);
+    assert_eq!(report.repair_rounds, 0);
+    assert_eq!(report.verify_rtts, sizes.len() as u64);
+    assert_eq!(rreport.units_verified, sizes.len() as u64);
+}
+
 #[test]
 fn works_with_every_hash_algorithm() {
     let sizes = [200_000usize, 123_457];
-    for hash in HashAlgorithm::all() {
+    for hash in HashAlgorithm::ALL {
         let (report, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), hash);
         assert_eq!(report.failures_detected, 0, "{}", hash.name());
     }

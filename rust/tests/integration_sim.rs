@@ -135,7 +135,7 @@ fn baselines_bound_algorithms() {
     let t_tx = transfer_only(tb, p, &ds);
     let t_ck = checksum_only(tb, p, &ds);
     assert!(t_tx > 0.0 && t_ck > 0.0);
-    for alg in Algorithm::all() {
+    for alg in Algorithm::ALL {
         let s = run(tb, p, &ds, &FaultPlan::none(), alg);
         assert!(
             s.total_time >= t_tx * 0.999,
@@ -181,7 +181,7 @@ fn tcp_restart_accounting() {
 fn conservation_of_bytes() {
     let tb = Testbed::hpclab_1g();
     let ds = Dataset::mixed_shuffled("m", &[(10, 10 * MB), (3, 500 * MB)], 4);
-    for alg in Algorithm::all() {
+    for alg in Algorithm::ALL {
         let s = go(tb, &ds, alg);
         assert!(s.total_time > 0.0, "{}", alg.name());
         assert_eq!(s.bytes_resent, 0, "{}: clean run resends nothing", alg.name());

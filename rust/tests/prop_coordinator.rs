@@ -45,14 +45,10 @@ fn prop_recovery_completeness() {
                 occurrence: 0,
             });
         }
-        let algs = [
-            RealAlgorithm::Sequential,
-            RealAlgorithm::FileLevelPpl,
-            RealAlgorithm::BlockLevelPpl,
-            RealAlgorithm::Fiver,
-            RealAlgorithm::FiverChunk,
-            RealAlgorithm::FiverHybrid,
-        ];
+        let algs: Vec<RealAlgorithm> = RealAlgorithm::ALL
+            .into_iter()
+            .filter(|a| *a != RealAlgorithm::TransferOnly)
+            .collect();
         let alg = algs[rng.below(algs.len() as u64) as usize];
 
         // Build source.
@@ -96,6 +92,122 @@ fn prop_recovery_completeness() {
             assert_eq!(&got, expect, "seed {seed} {}: delivered bytes differ", alg.name());
         }
     }
+}
+
+/// PROPERTY: fault plans that also corrupt *re*-transfer attempts
+/// (occurrence > 0) still converge — the repair loop never ping-pongs —
+/// and the repaired destination bytes always equal the source bytes, for
+/// every verifying algorithm including FIVER-Merkle.
+#[test]
+fn prop_retransfer_faults_converge() {
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed * 104_729 + 7);
+        let n_files = rng.range(1, 4) as usize;
+        let mut sizes = Vec::new();
+        for _ in 0..n_files {
+            sizes.push(rng.range(10_000, 900_000) as usize);
+        }
+        // Random faults on attempts 0..=2: occurrence-n faults strike the
+        // n-th repair round's re-sent bytes (if the round covers them).
+        let mut faults = FaultPlan::none();
+        for _ in 0..rng.range(1, 6) {
+            let fi = rng.below(n_files as u64) as usize;
+            faults.faults.push(Fault {
+                file_idx: fi,
+                offset: rng.below(sizes[fi] as u64),
+                bit: rng.below(8) as u8,
+                occurrence: rng.below(3) as u32,
+            });
+        }
+        let algs: Vec<RealAlgorithm> = RealAlgorithm::ALL
+            .into_iter()
+            .filter(|a| *a != RealAlgorithm::TransferOnly)
+            .collect();
+        let alg = algs[rng.below(algs.len() as u64) as usize];
+
+        let src = MemStorage::new();
+        let mut names = Vec::new();
+        let mut contents = Vec::new();
+        for (i, &size) in sizes.iter().enumerate() {
+            let mut data = vec![0u8; size];
+            rng.fork().fill_bytes(&mut data);
+            let name = format!("r{i}");
+            src.put(&name, data.clone());
+            names.push(name);
+            contents.push(data);
+        }
+        let dst = MemStorage::new();
+        let mut cfg = SessionConfig::new(alg, native_factory(HashAlgorithm::Fvr256));
+        cfg.buf_size = 32_768;
+        cfg.block_size = 131_072;
+        cfg.queue_capacity = 262_144;
+        cfg.leaf_size = 16_384;
+        cfg.hybrid_threshold = 400_000;
+        let (report, _) = run_local_transfer(
+            &names,
+            Arc::new(src),
+            Arc::new(dst.clone()),
+            &cfg,
+            &faults,
+        )
+        .unwrap_or_else(|e| panic!("seed {seed} ({}) failed: {e:#}", alg.name()));
+
+        let first_attempt_faults =
+            faults.faults.iter().filter(|f| f.occurrence == 0).count() as u64;
+        if first_attempt_faults > 0 {
+            assert!(
+                report.failures_detected > 0,
+                "seed {seed} {}: faults at occurrence 0 but none detected",
+                alg.name()
+            );
+        }
+        for (name, expect) in names.iter().zip(&contents) {
+            let got = dst.get(name).unwrap_or_else(|| panic!("seed {seed}: missing {name}"));
+            assert_eq!(&got, expect, "seed {seed} {}: delivered bytes differ", alg.name());
+        }
+    }
+}
+
+/// FIVER-Merkle repair-loop convergence when the repair itself is
+/// corrupted: round 1's re-sent leaf is struck again (occurrence 1), so a
+/// second round must repair it — no ping-pong, intact delivery.
+#[test]
+fn merkle_repair_loop_converges_on_corrupted_repair() {
+    let size = 500_000usize;
+    let offset = 200_000u64;
+    let faults = FaultPlan {
+        faults: vec![
+            Fault { file_idx: 0, offset, bit: 2, occurrence: 0 },
+            Fault { file_idx: 0, offset: offset + 10, bit: 5, occurrence: 1 },
+        ],
+    };
+    let src = MemStorage::new();
+    let mut data = vec![0u8; size];
+    SplitMix64::new(0xC0FFEE).fill_bytes(&mut data);
+    src.put("m", data.clone());
+    let dst = MemStorage::new();
+    let mut cfg =
+        SessionConfig::new(RealAlgorithm::FiverMerkle, native_factory(HashAlgorithm::Fvr256));
+    cfg.leaf_size = 32_768;
+    let (report, rreport) = run_local_transfer(
+        &["m".into()],
+        Arc::new(src),
+        Arc::new(dst.clone()),
+        &cfg,
+        &faults,
+    )
+    .unwrap();
+    assert_eq!(dst.get("m").unwrap(), data, "delivered bytes differ");
+    assert_eq!(report.repair_rounds, 2, "corrupted repair must trigger a second round");
+    assert_eq!(report.failures_detected, 2, "two mismatched root exchanges");
+    assert_eq!(rreport.units_failed, 2);
+    // Both rounds re-send one 32 KiB leaf, not the 500 KB file.
+    assert!(
+        report.bytes_resent <= 2 * cfg.leaf_size,
+        "bytes_resent {} should be <= 2 leaves",
+        report.bytes_resent
+    );
+    assert_eq!(report.bytes_reread, report.bytes_resent);
 }
 
 /// PROPERTY: the queue preserves the exact byte stream (order + content)

@@ -167,7 +167,7 @@ fn prop_hash_split_invariance() {
         let mut rng = SplitMix64::new(seed + 21);
         let mut data = vec![0u8; rng.range(0, 10_000) as usize];
         rng.fill_bytes(&mut data);
-        for alg in HashAlgorithm::all() {
+        for alg in HashAlgorithm::ALL {
             let oneshot = hex_digest(alg, &data);
             let mut h = alg.hasher();
             let mut pos = 0;
@@ -195,7 +195,7 @@ fn prop_hash_distinctness() {
     for _ in 0..300 {
         let mut data = vec![0u8; rng.range(1, 500) as usize];
         rng.fill_bytes(&mut data);
-        for alg in HashAlgorithm::all() {
+        for alg in HashAlgorithm::ALL {
             seen.insert(hex_digest(alg, &data));
         }
     }
