@@ -1,0 +1,11 @@
+"""Pytest wiring: make the ``compile`` package importable regardless of
+the invocation directory (`python -m pytest python/tests` from the repo
+root, or pytest from within python/)."""
+
+import sys
+from pathlib import Path
+
+# python/ — the directory holding the `compile` package.
+_PKG_ROOT = str(Path(__file__).resolve().parents[1])
+if _PKG_ROOT not in sys.path:
+    sys.path.insert(0, _PKG_ROOT)

@@ -2,8 +2,41 @@
 //! warmup + N timed iterations, reporting median / mean / min and derived
 //! throughput. Deterministic iteration counts keep `cargo bench` output
 //! stable enough for the before/after records in EXPERIMENTS.md §Perf.
+//!
+//! CI hooks: `BENCH_SMOKE=1` switches benches to quick mode (small sizes
+//! and iteration counts via [`pick`]) so the smoke job finishes fast, and
+//! `BENCH_JSON=<path>` appends one JSON object per reported result to
+//! that file (the workflow uploads it as an artifact).
 
 use std::time::Instant;
+
+/// Quick-mode switch for the CI smoke job.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` normally, `quick` under `BENCH_SMOKE=1`.
+#[allow(dead_code)]
+pub fn pick(full: usize, quick: usize) -> usize {
+    if smoke() {
+        quick
+    } else {
+        full
+    }
+}
+
+/// Append one JSON line to `$BENCH_JSON` (no-op when unset).
+fn append_json(line: &str) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        writeln!(f, "{line}").ok();
+    }
+}
 
 #[allow(dead_code)]
 pub struct BenchResult {
@@ -26,16 +59,19 @@ impl BenchResult {
             mibs,
             gbps
         );
+        self.emit_json(&format!(",\"bytes\":{bytes},\"gbps\":{gbps:.4}"));
     }
 
     /// Report with an ops/sec figure derived from `ops` per iteration.
     pub fn report_ops(&self, ops: u64) {
+        let ops_per_sec = ops as f64 / self.median_secs;
         println!(
             "{:<44} median {:>10.3} ms   {:>12.0} ops/s",
             self.name,
             self.median_secs * 1e3,
-            ops as f64 / self.median_secs
+            ops_per_sec
         );
+        self.emit_json(&format!(",\"ops\":{ops},\"ops_per_sec\":{ops_per_sec:.2}"));
     }
 
     /// Report raw time only.
@@ -47,6 +83,19 @@ impl BenchResult {
             self.min_secs * 1e3,
             self.mean_secs * 1e3
         );
+        self.emit_json("");
+    }
+
+    /// One JSON object per result; bench names are plain ASCII so no
+    /// escaping is needed.
+    fn emit_json(&self, extra: &str) {
+        append_json(&format!(
+            "{{\"name\":\"{}\",\"median_secs\":{:.9},\"mean_secs\":{:.9},\"min_secs\":{:.9}{extra}}}",
+            self.name,
+            self.median_secs,
+            self.mean_secs,
+            self.min_secs
+        ));
     }
 }
 

@@ -1,15 +1,17 @@
 //! Bench: the L3 coordinator hot path — queue handoff, frame
-//! encode/decode, and complete loopback transfers per algorithm (the
-//! real-mode counterpart of the paper's throughput claims).
+//! encode/decode, complete loopback transfers per algorithm, and the
+//! parallel engine (the real-mode counterpart of the paper's throughput
+//! claims plus the concurrency scale-out).
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use std::sync::Arc;
 
-use bench_util::{bench, black_box};
+use bench_util::{bench, black_box, pick};
 use fiver::coordinator::queue::ByteQueue;
-use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::scheduler::EngineConfig;
+use fiver::coordinator::session::{run_local_transfer, run_parallel_local_transfer};
 use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
 use fiver::faults::FaultPlan;
 use fiver::hashes::HashAlgorithm;
@@ -20,14 +22,15 @@ fn main() {
     queue_bench();
     protocol_bench();
     transfer_bench();
+    engine_bench();
 }
 
 /// The paper's Algorithm 1/2 queue: producer/consumer handoff rate.
 fn queue_bench() {
-    println!("== ByteQueue (64 MiB through an 8 MiB queue, 256 KiB buffers) ==");
-    let total = 64usize << 20;
+    let total = pick(64, 8) << 20;
+    println!("== ByteQueue ({} MiB through an 8 MiB queue, 256 KiB buffers) ==", total >> 20);
     let buf_size = 256 * 1024;
-    let r = bench("queue/produce+consume", 1, 5, || {
+    let r = bench("queue/produce+consume", 1, pick(5, 2), || {
         let q = ByteQueue::new(8 << 20);
         let q2 = q.clone();
         let producer = std::thread::spawn(move || {
@@ -50,8 +53,8 @@ fn queue_bench() {
 fn protocol_bench() {
     println!("\n== protocol framing (256 KiB Data frames) ==");
     let payload = vec![0xABu8; 256 * 1024];
-    let frames = 256;
-    let r = bench("protocol/encode", 2, 10, || {
+    let frames = pick(256, 32);
+    let r = bench("protocol/encode", 2, pick(10, 3), || {
         let mut out = Vec::with_capacity(frames * (payload.len() + 32));
         for i in 0..frames {
             protocol::write_data_frame(&mut out, 1, (i * payload.len()) as u64, &payload).unwrap();
@@ -64,7 +67,7 @@ fn protocol_bench() {
     for i in 0..frames {
         protocol::write_data_frame(&mut encoded, 1, (i * payload.len()) as u64, &payload).unwrap();
     }
-    let r = bench("protocol/decode", 2, 10, || {
+    let r = bench("protocol/decode", 2, pick(10, 3), || {
         let mut cursor = &encoded[..];
         let mut n = 0;
         while let Some(f) = protocol::Frame::read_from(&mut cursor).unwrap() {
@@ -79,9 +82,13 @@ fn protocol_bench() {
 
 /// Complete loopback sessions: what a user of the system sees.
 fn transfer_bench() {
-    println!("\n== loopback transfer (16 x 4 MiB, MemStorage, fvr256) ==");
-    let sizes = vec![4usize << 20; 16];
+    let sizes = vec![pick(4, 1) << 20; pick(16, 4)];
     let total: usize = sizes.iter().sum();
+    println!(
+        "\n== loopback transfer ({} x {} MiB, MemStorage, fvr256) ==",
+        sizes.len(),
+        sizes[0] >> 20
+    );
     let src = MemStorage::new();
     let mut rng = SplitMix64::new(3);
     let mut names = Vec::new();
@@ -96,7 +103,7 @@ fn transfer_bench() {
     for alg in RealAlgorithm::ALL.into_iter().filter(|a| *a != RealAlgorithm::FiverHybrid) {
         let src = src.clone();
         let names = names.clone();
-        let r = bench(&format!("transfer/{}", alg.name()), 1, 3, || {
+        let r = bench(&format!("transfer/{}", alg.name()), 1, pick(3, 1), || {
             let cfg = SessionConfig::new(alg, native_factory(HashAlgorithm::Fvr256));
             let dst = MemStorage::new();
             let (rep, _) = run_local_transfer(
@@ -110,5 +117,52 @@ fn transfer_bench() {
             black_box(rep.bytes_sent);
         });
         r.report_bytes(total as u64);
+    }
+}
+
+/// The tentpole scale-out: the same dataset through the parallel engine
+/// at increasing concurrency (shared hash pool sized to match).
+fn engine_bench() {
+    let count = pick(48, 12);
+    let size = 1usize << 20;
+    let total = (count * size) as u64;
+    println!("\n== parallel engine ({count} x 1 MiB, MemStorage, fvr256) ==");
+    let src = MemStorage::new();
+    let mut rng = SplitMix64::new(7);
+    let mut names = Vec::new();
+    for i in 0..count {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        let name = format!("p{i}");
+        src.put(&name, data);
+        names.push(name);
+    }
+    let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+    for concurrency in [1usize, 2, 4, 8] {
+        let src = src.clone();
+        let names = names.clone();
+        let cfg = cfg.clone();
+        let label = format!("engine/FIVER-c{concurrency}");
+        let r = bench(&label, 1, pick(3, 1), || {
+            let eng = EngineConfig {
+                concurrency,
+                parallel: 1,
+                hash_workers: concurrency.max(2),
+                batch_threshold: 0,
+                batch_bytes: 1,
+            };
+            let dst = MemStorage::new();
+            let (rep, _) = run_parallel_local_transfer(
+                &names,
+                Arc::new(src.clone()),
+                Arc::new(dst),
+                &cfg,
+                &eng,
+                &FaultPlan::none(),
+            )
+            .unwrap();
+            black_box(rep.aggregate().bytes_sent);
+        });
+        r.report_bytes(total);
     }
 }

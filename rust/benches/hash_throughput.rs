@@ -7,19 +7,20 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use bench_util::{bench, black_box};
+use bench_util::{bench, black_box, pick};
 use fiver::hashes::HashAlgorithm;
 use fiver::util::rng::SplitMix64;
 
 fn main() {
     let mb = 1 << 20;
-    let size = 64 * mb;
+    let size = pick(64, 4) * mb;
+    let iters = pick(5, 2);
     let mut data = vec![0u8; size];
     SplitMix64::new(1).fill_bytes(&mut data);
 
     println!("== hash throughput ({} MiB buffer) ==", size / mb);
     for alg in HashAlgorithm::ALL {
-        let r = bench(&format!("native/{}", alg.name()), 1, 5, || {
+        let r = bench(&format!("native/{}", alg.name()), 1, iters, || {
             let mut h = alg.hasher();
             h.update(&data);
             black_box(h.finalize());
@@ -28,9 +29,9 @@ fn main() {
     }
 
     // Streaming at transfer buffer granularity (the coordinator hot path).
-    println!("\n== streaming update granularity (fvr256, 64 MiB total) ==");
+    println!("\n== streaming update granularity (fvr256, {} MiB total) ==", size / mb);
     for buf in [64 * 1024, 256 * 1024, 1 << 20, 4 << 20] {
-        let r = bench(&format!("fvr256/update-{}KiB", buf / 1024), 1, 5, || {
+        let r = bench(&format!("fvr256/update-{}KiB", buf / 1024), 1, iters, || {
             let mut h = HashAlgorithm::Fvr256.hasher();
             for part in data.chunks(buf) {
                 h.update(part);

@@ -11,14 +11,15 @@ mod bench_util;
 
 use std::sync::Arc;
 
-use bench_util::{bench, black_box};
+use bench_util::{bench, black_box, pick};
 use fiver::hashes::HashAlgorithm;
 use fiver::merkle::MerkleBuilder;
 use fiver::util::rng::SplitMix64;
 
 fn main() {
     let mb = 1usize << 20;
-    let size = 256 * mb; // scaled sample; per-GB figures derive linearly
+    let size = pick(256, 32) * mb; // scaled sample; per-GB figures derive linearly
+    let iters = pick(5, 2);
     let buf = 256 * 1024; // the coordinator's default I/O buffer
     let mut data = vec![0u8; size];
     SplitMix64::new(2).fill_bytes(&mut data);
@@ -27,7 +28,7 @@ fn main() {
         println!("== {} ({} MiB stream, {} KiB buffers) ==", alg.name(), size / mb, buf / 1024);
 
         // Baseline: plain FIVER — one running digest over the stream.
-        let base = bench(&format!("{}/plain-fiver", alg.name()), 1, 5, || {
+        let base = bench(&format!("{}/plain-fiver", alg.name()), 1, iters, || {
             let mut h = alg.hasher();
             for part in data.chunks(buf) {
                 h.update(part);
@@ -39,7 +40,7 @@ fn main() {
         // Tree builds across leaf sizes.
         for leaf_kib in [16u64, 64, 256, 1024] {
             let factory: fiver::merkle::DigestFactory = Arc::new(move || alg.hasher());
-            let r = bench(&format!("{}/merkle-{}KiB-leaves", alg.name(), leaf_kib), 1, 5, || {
+            let r = bench(&format!("{}/merkle-{}KiB-leaves", alg.name(), leaf_kib), 1, iters, || {
                 let mut b = MerkleBuilder::new(leaf_kib << 10, factory.clone());
                 for part in data.chunks(buf) {
                     b.update(part);

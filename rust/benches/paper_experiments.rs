@@ -7,7 +7,7 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use bench_util::{bench, black_box};
+use bench_util::{bench, black_box, pick};
 
 fn main() {
     println!("== paper experiment regeneration (simulation wall time) ==");
@@ -24,8 +24,9 @@ fn main() {
     use fiver::faults::FaultPlan;
     use fiver::sim::algorithms::{run, Algorithm};
     use fiver::workload::Dataset;
-    let ds = Dataset::uniform("10M", 10 * MB, 500);
-    let r = bench("sim/sequential-500-files", 1, 3, || {
+    let files = pick(500, 100);
+    let ds = Dataset::uniform("10M", 10 * MB, files);
+    let r = bench(&format!("sim/sequential-{files}-files"), 1, pick(3, 1), || {
         black_box(run(
             Testbed::esnet_wan(),
             AlgoParams::default(),
@@ -34,8 +35,8 @@ fn main() {
             Algorithm::Sequential,
         ));
     });
-    r.report_ops(500);
-    let r = bench("sim/fiver-500-files", 1, 3, || {
+    r.report_ops(files as u64);
+    let r = bench(&format!("sim/fiver-{files}-files"), 1, pick(3, 1), || {
         black_box(run(
             Testbed::esnet_wan(),
             AlgoParams::default(),
@@ -44,5 +45,19 @@ fn main() {
             Algorithm::Fiver,
         ));
     });
-    r.report_ops(500);
+    r.report_ops(files as u64);
+
+    // The engine counterpart: the same dataset at concurrency 8.
+    let r = bench(&format!("sim/fiver-c8-{files}-files"), 1, pick(3, 1), || {
+        black_box(fiver::sim::algorithms::run_concurrent(
+            Testbed::esnet_wan(),
+            AlgoParams::default(),
+            &ds,
+            &FaultPlan::none(),
+            Algorithm::Fiver,
+            8,
+            8,
+        ));
+    });
+    r.report_ops(files as u64);
 }

@@ -18,7 +18,10 @@ fn main() {
         match fiver::experiments::run_by_name(name) {
             Some(out) => println!("{out}\n"),
             None => {
-                eprintln!("unknown experiment `{name}`; try: {}", fiver::experiments::ALL.join(", "));
+                eprintln!(
+                    "unknown experiment `{name}`; try: {}",
+                    fiver::experiments::ALL.join(", ")
+                );
                 std::process::exit(2);
             }
         }

@@ -168,6 +168,12 @@ pub struct AlgoParams {
     /// paper cites for block-/file-level pipelining); FIVER's queue handoff
     /// avoids it. Dimensionless multiplier on per-byte hash cost.
     pub fs_read_factor: f64,
+    /// Parallel engine: files smaller than this aggregate into batched
+    /// work items ([`crate::workload::plan_batches`]) so lots-of-small-
+    /// files datasets (1000×10M) schedule in amortized groups; 0 disables.
+    pub batch_threshold: u64,
+    /// Parallel engine: target payload per batched work item.
+    pub batch_bytes: u64,
 }
 
 impl Default for AlgoParams {
@@ -180,6 +186,8 @@ impl Default for AlgoParams {
             control_rtts: 1.0,
             hash: HashAlgorithm::Md5,
             fs_read_factor: 1.12,
+            batch_threshold: 16 * MB,
+            batch_bytes: 64 * MB,
         }
     }
 }

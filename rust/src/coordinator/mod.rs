@@ -1,11 +1,18 @@
 //! The real-mode coordinator — the paper's system, over real sockets,
-//! threads and files.
+//! threads and files, scaled out by a parallel multi-session engine.
 //!
 //! * [`queue`] — the fixed-size synchronized queue of Algorithms 1 & 2.
-//! * [`protocol`] — framed data + control channels (GridFTP-style split).
+//! * [`protocol`] — framed data + control channels (GridFTP-style split),
+//!   plus the engine's session-id/stripe `Hello` handshake.
+//! * [`scheduler`] — work items (small files batch, large files stand
+//!   alone), the work-stealing queue feeding N concurrent sessions, and
+//!   the engine configuration/report types.
+//! * [`pool`] — the shared hash worker pool: checksum compute decoupled
+//!   from per-session threads (one job per queue-mode file).
 //! * [`sender`] / [`receiver`] — Algorithm 1 (SEND + COMPUTECHECKSUM) and
-//!   Algorithm 2 (RECEIVE + COMPUTECHECKSUM), generalized so the same
-//!   machinery runs all five integrity-verification policies:
+//!   Algorithm 2 (RECEIVE + COMPUTECHECKSUM), engine-driven and
+//!   generalized so the same machinery runs all five
+//!   integrity-verification policies:
 //!
 //! | algorithm        | checksum source | verify unit | overlap             |
 //! |------------------|-----------------|-------------|---------------------|
@@ -21,9 +28,11 @@
 //! the range, recomputes the digest from storage, and re-exchanges until
 //! digests match (§IV-A's efficient error recovery).
 
+pub mod pool;
 pub mod protocol;
 pub mod queue;
 pub mod receiver;
+pub mod scheduler;
 pub mod session;
 pub mod sender;
 
@@ -230,7 +239,8 @@ mod tests {
 
     #[test]
     fn hybrid_unit_selection() {
-        let cfg = SessionConfig::new(RealAlgorithm::FiverHybrid, native_factory(HashAlgorithm::Md5));
+        let cfg =
+            SessionConfig::new(RealAlgorithm::FiverHybrid, native_factory(HashAlgorithm::Md5));
         // Small file -> FIVER path (queue, whole-file digest).
         assert!(cfg.algorithm.uses_queue(1 << 20, cfg.hybrid_threshold));
         // Large file -> sequential path.
@@ -249,7 +259,8 @@ mod tests {
     fn merkle_is_a_whole_file_unit() {
         // The tree refines verification *below* the unit level; the
         // digest/verdict rendezvous still runs per file.
-        let cfg = SessionConfig::new(RealAlgorithm::FiverMerkle, native_factory(HashAlgorithm::Md5));
+        let cfg =
+            SessionConfig::new(RealAlgorithm::FiverMerkle, native_factory(HashAlgorithm::Md5));
         assert_eq!(cfg.units_of(1 << 20, true), vec![(protocol::UNIT_FILE, 0, 1 << 20)]);
         assert_eq!(cfg.leaf_size, 64 << 10);
     }

@@ -1,0 +1,144 @@
+//! The shared hash worker pool — checksum compute decoupled from
+//! per-session threads.
+//!
+//! The original coordinator spawned one hash thread per queue-mode file,
+//! so a 1000-file dataset paid 1000 thread spawns per endpoint and a
+//! single slow hash could not borrow an idle core. The engine instead
+//! owns one [`HashPool`] per endpoint: sessions submit one job per
+//! queue-mode file (drain that file's [`super::queue::ByteQueue`] into a
+//! digest or digest tree), and a fixed set of workers executes them.
+//! FIVER's per-file queue sharing is untouched — the queue is still the
+//! rendezvous between the transfer thread and the checksum computation;
+//! only *who runs* the computation changed.
+//!
+//! Deadlock-freedom (any pool size >= 1): jobs run FIFO, so the earliest
+//! *unfinished* job is always occupying a worker. On the sender a session
+//! streams one file at a time, so that job's queue is either closed
+//! (finite drain) or the very queue its session thread is feeding —
+//! mutual progress through the queue's back-pressure. On the receiver,
+//! stripe skew can hold several files open per session, so the frame
+//! merger never blocks on a full queue mid-stream (it spills —
+//! [`super::queue::ByteQueue::try_add`]); its only blocking adds happen
+//! after end-of-stream, oldest file first, and the earliest unfinished
+//! job is exactly some session's oldest open file.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool for checksum jobs. Dropping the pool joins
+/// the workers after all outstanding [`PoolHandle`]s are gone.
+pub struct HashPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HashPool {
+    /// Spawn `workers` hash threads (clamped to at least 1).
+    pub fn new(workers: usize) -> HashPool {
+        let n = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("fiver-hash-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only for the dequeue, not the job.
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn hash worker")
+            })
+            .collect();
+        HashPool { tx: Some(tx), workers }
+    }
+
+    /// A submit handle for sessions. All handles must drop before the
+    /// pool's `Drop` can join its workers.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { tx: self.tx.as_ref().expect("pool already shut down").clone() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for HashPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers drain then exit
+        for w in self.workers.drain(..) {
+            w.join().expect("hash worker panicked");
+        }
+    }
+}
+
+/// Cloneable submission handle onto a [`HashPool`].
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl PoolHandle {
+    /// Enqueue a job. FIFO across all submitters.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Box::new(job)).expect("hash pool shut down with sessions active");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = HashPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let h = pool.handle();
+        for _ in 0..100 {
+            let c = counter.clone();
+            h.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(h);
+        drop(pool); // joins workers after the queue drains
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_of_one_still_progresses_under_queue_backpressure() {
+        use crate::coordinator::queue::ByteQueue;
+        // One worker, one open queue fed by this thread through a tiny
+        // capacity: the deadlock-freedom argument in the module docs.
+        let pool = HashPool::new(1);
+        let q = ByteQueue::new(64);
+        let q2 = q.clone();
+        let total = Arc::new(AtomicUsize::new(0));
+        let total2 = total.clone();
+        pool.handle().submit(move || {
+            while let Some(buf) = q2.remove() {
+                total2.fetch_add(buf.len(), Ordering::SeqCst);
+            }
+        });
+        for _ in 0..64 {
+            assert!(q.add(vec![0u8; 48])); // blocks unless the job drains
+        }
+        q.close();
+        drop(pool);
+        assert_eq!(total.load(Ordering::SeqCst), 64 * 48);
+    }
+
+    #[test]
+    fn clamps_to_one_worker() {
+        let pool = HashPool::new(0);
+        assert_eq!(pool.workers(), 1);
+    }
+}

@@ -56,6 +56,11 @@ pub enum Frame {
     /// leaves repaired. The receiver then awaits the FixEnd on the data
     /// channel, patches its tree, and answers with a fresh TreeRoot.
     TreeRepairSent { file_idx: u32, round: u64, leaves_fixed: u64 },
+    /// Engine handshake, first frame on every engine-mode connection:
+    /// `file_idx` = session id, `a` = stripe id (0 for the control
+    /// channel), `b` = stripe count. The accept loop uses it to route
+    /// freshly accepted sockets to their session.
+    Hello { session_id: u32, stripe_id: u64, stripes: u64 },
     /// Session end.
     Done,
 }
@@ -72,6 +77,7 @@ const TAG_TREE_ROOT: u8 = 9;
 const TAG_TREE_QUERY: u8 = 10;
 const TAG_TREE_NODES: u8 = 11;
 const TAG_TREE_REPAIR_SENT: u8 = 12;
+const TAG_HELLO: u8 = 13;
 
 /// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
 pub const UNIT_FILE: u64 = u64::MAX;
@@ -109,6 +115,9 @@ impl Frame {
             }
             Frame::TreeRepairSent { file_idx, round, leaves_fixed } => {
                 (TAG_TREE_REPAIR_SENT, *file_idx, *round, *leaves_fixed, &[])
+            }
+            Frame::Hello { session_id, stripe_id, stripes } => {
+                (TAG_HELLO, *session_id, *stripe_id, *stripes, &[])
             }
             Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
         };
@@ -167,6 +176,7 @@ impl Frame {
             TAG_TREE_REPAIR_SENT => {
                 Frame::TreeRepairSent { file_idx, round: a, leaves_fixed: b }
             }
+            TAG_HELLO => Frame::Hello { session_id: file_idx, stripe_id: a, stripes: b },
             TAG_DONE => Frame::Done,
             _ => bail!("unknown frame tag {tag}"),
         }))
@@ -245,6 +255,7 @@ mod tests {
         roundtrip(Frame::TreeQuery { file_idx: 4, level: 7, start: 128, count: 2 });
         roundtrip(Frame::TreeNodes { file_idx: 4, level: 7, start: 128, digests: vec![1; 64] });
         roundtrip(Frame::TreeRepairSent { file_idx: 4, round: 1, leaves_fixed: 3 });
+        roundtrip(Frame::Hello { session_id: 3, stripe_id: 1, stripes: 4 });
         roundtrip(Frame::Done);
     }
 

@@ -77,6 +77,28 @@ impl ByteQueue {
         true
     }
 
+    /// Non-blocking add: give the buffer back (`Err`) when the queue is
+    /// full so the caller can spill instead of blocking — the receiver's
+    /// frame merger must never block on a queue whose hash job may still
+    /// be waiting for a pool worker (see [`crate::coordinator::pool`]).
+    /// A closed queue accepts-and-drops (the consumer is gone).
+    pub fn try_add(&self, buf: Vec<u8>) -> Result<(), Vec<u8>> {
+        let (lock, _not_full, not_empty) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        if g.closed {
+            return Ok(());
+        }
+        if g.bytes > 0 && g.bytes + buf.len() > self.capacity {
+            return Err(buf);
+        }
+        g.bytes += buf.len();
+        g.buffers.push_back(buf);
+        if g.waiting_remove > 0 {
+            not_empty.notify_one();
+        }
+        Ok(())
+    }
+
     /// Blocking remove (Algorithm 1 line 14). `None` once closed and
     /// drained — the consumer's end-of-stream.
     pub fn remove(&self) -> Option<Vec<u8>> {
@@ -168,6 +190,21 @@ mod tests {
         let q = ByteQueue::new(4);
         assert!(q.add(vec![0; 100]));
         assert_eq!(q.remove().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn try_add_returns_buffer_when_full() {
+        let q = ByteQueue::new(10);
+        assert!(q.try_add(vec![1; 8]).is_ok());
+        let back = q.try_add(vec![2; 8]).unwrap_err();
+        assert_eq!(back, vec![2; 8], "full queue hands the buffer back");
+        assert_eq!(q.remove().unwrap(), vec![1; 8]);
+        assert!(q.try_add(vec![2; 8]).is_ok(), "accepted once drained");
+        // Closed queues accept-and-drop.
+        q.close();
+        assert!(q.try_add(vec![3; 3]).is_ok());
+        assert_eq!(q.remove().unwrap(), vec![2; 8]);
+        assert_eq!(q.remove(), None);
     }
 
     #[test]

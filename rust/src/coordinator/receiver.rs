@@ -1,19 +1,28 @@
-//! Algorithm 2 — the FIVER receiver, generalized over all five policies.
+//! Algorithm 2 — the FIVER receiver, generalized over all five policies
+//! and engine-driven: one session serves one control channel plus one or
+//! more striped data channels, and checksum compute runs on the shared
+//! [`super::pool::HashPool`] instead of per-file threads.
 //!
-//! Three concurrent roles per session:
+//! Concurrent roles per session:
 //!
-//! * **data thread** (the caller's thread): reads frames off the data
-//!   channel, writes file bytes to storage, and — in queue mode — feeds the
-//!   shared [`ByteQueue`] so the checksum of the in-flight file proceeds
-//!   without any file I/O (Algorithm 2 lines 5-8).
-//! * **queue hash threads**: one per queue-mode file; consume the queue and
-//!   produce per-unit digests (Algorithm 2's COMPUTECHECKSUM).
+//! * **stripe readers**: one per data socket; decode frames and forward
+//!   them (per-socket FIFO preserved) to the merger.
+//! * **merger** (the caller's thread): routes frames to per-file state,
+//!   writes file bytes to storage, and — in queue mode — feeds the shared
+//!   [`ByteQueue`] *in stream order* (an offset-keyed reorder stash
+//!   absorbs stripe skew), so the checksum of the in-flight file proceeds
+//!   without any file I/O (Algorithm 2 lines 5-8). The merger never
+//!   blocks on a full queue mid-stream — it spills and retries — which is
+//!   what keeps the shared pool deadlock-free (see [`super::pool`]).
+//! * **hash pool workers**: execute one job per queue-mode file; consume
+//!   the queue and produce per-unit digests or the digest tree
+//!   (Algorithm 2's COMPUTECHECKSUM).
 //! * **verify worker**: owns the control channel; sends digests, reads
-//!   verdicts, applies the repair/recompute loop for failed units, and for
-//!   re-read-mode files performs the checksum itself by reading storage
-//!   (the sequential / pipelined checksum station).
+//!   verdicts, applies the repair/recompute loop for failed units, and
+//!   for re-read-mode files performs the checksum itself by reading
+//!   storage (the sequential / pipelined checksum station).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 use std::sync::mpsc;
@@ -21,6 +30,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
 use super::{RealAlgorithm, SessionConfig};
@@ -37,6 +47,17 @@ pub struct ReceiverReport {
     pub units_failed: u64,
     /// Bytes rewritten by repair frames.
     pub bytes_repaired: u64,
+}
+
+impl ReceiverReport {
+    /// Sum another session's report into this one (engine aggregation).
+    pub fn merge(&mut self, other: &ReceiverReport) {
+        self.files_received += other.files_received;
+        self.bytes_received += other.bytes_received;
+        self.units_verified += other.units_verified;
+        self.units_failed += other.units_failed;
+        self.bytes_repaired += other.bytes_repaired;
+    }
 }
 
 /// One work item for the verify worker.
@@ -60,15 +81,30 @@ enum Event {
     Repaired { file_idx: u32, unit: u64, ranges: Vec<(u64, u64)> },
 }
 
-/// Serve one session on accepted data/control connections. Blocks until
-/// the sender's `Done` frame; returns the session report.
+/// Serve one single-stripe session on accepted data/control connections
+/// with a private two-worker hash pool. Blocks until the sender's `Done`
+/// frame; returns the session report.
 pub fn serve_session(
     data: TcpStream,
     ctrl: TcpStream,
     storage: Arc<dyn Storage>,
     cfg: &SessionConfig,
 ) -> Result<ReceiverReport> {
-    let mut data_in = BufReader::with_capacity(1 << 20, data);
+    let pool = HashPool::new(2);
+    serve_session_multi(vec![data], ctrl, storage, cfg, pool.handle())
+}
+
+/// Serve one engine session: `datas` are this session's stripe sockets
+/// (index = stripe id), `ctrl` its control channel, `pool` the endpoint's
+/// shared hash pool.
+pub fn serve_session_multi(
+    datas: Vec<TcpStream>,
+    ctrl: TcpStream,
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    pool: PoolHandle,
+) -> Result<ReceiverReport> {
+    anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
     let (tx, rx) = mpsc::channel::<Event>();
 
     // Verify worker: owns both directions of the control channel.
@@ -76,39 +112,165 @@ pub fn serve_session(
     let worker_cfg = cfg.clone();
     let worker = std::thread::spawn(move || verify_worker(ctrl, worker_storage, &worker_cfg, rx));
 
+    // Stripe readers: per-socket FIFO is preserved through the shared
+    // channel (std mpsc keeps each sender's sends in order).
+    let (ftx, frx) = mpsc::channel::<Result<Frame>>();
+    let mut readers = Vec::new();
+    for data in datas {
+        let ftx = ftx.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut input = BufReader::with_capacity(1 << 20, data);
+            loop {
+                match Frame::read_from(&mut input) {
+                    Ok(Some(frame)) => {
+                        if ftx.send(Ok(frame)).is_err() {
+                            break; // merger gone
+                        }
+                    }
+                    Ok(None) => break, // clean EOF
+                    Err(e) => {
+                        ftx.send(Err(e)).ok();
+                        break;
+                    }
+                }
+            }
+        }));
+    }
+    drop(ftx); // merger's recv ends once every reader is done
+
+    let merged = merge_frames(&frx, &storage, cfg, &pool, &tx);
+    drop(tx);
+    let mut report = match merged {
+        Ok(report) => {
+            // Clean end: every reader saw EOF, so the joins return.
+            for r in readers {
+                r.join().expect("stripe reader panicked");
+            }
+            report
+        }
+        // Error: don't join — readers exit once frx drops (their sends
+        // fail) and the verify worker exits when the sender's control
+        // socket dies; blocking here could hang a live peer's error path.
+        Err(e) => return Err(e),
+    };
+    let stats = worker.join().expect("verify worker panicked")?;
+    report.units_verified = stats.0;
+    report.units_failed = stats.1;
+    Ok(report)
+}
+
+/// Finalize a file if its data is fully in and its FileEnd was seen.
+fn maybe_finish(
+    open: &mut HashMap<u32, FileState>,
+    file_idx: u32,
+    report: &mut ReceiverReport,
+) -> Result<()> {
+    let complete = open.get(&file_idx).map(|st| st.complete()).unwrap_or(false);
+    if complete {
+        let mut st = open.remove(&file_idx).expect("checked above");
+        st.finish()?;
+        report.files_received += 1;
+    }
+    Ok(())
+}
+
+/// The merger: route frames from all stripes to per-file state until every
+/// reader hits EOF. Returns the partially-filled report (verify counters
+/// are added by the caller).
+fn merge_frames(
+    frx: &mpsc::Receiver<Result<Frame>>,
+    storage: &Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    pool: &PoolHandle,
+    tx: &mpsc::Sender<Event>,
+) -> Result<ReceiverReport> {
     let mut report = ReceiverReport::default();
-    let mut current: Option<FileState> = None;
+    let mut open: HashMap<u32, FileState> = HashMap::new();
+    // FileStart order — the blocking end-of-stream spill drain must run
+    // oldest-first (see the deadlock-freedom note below).
+    let mut start_order: Vec<u32> = Vec::new();
     let mut names: HashMap<u32, String> = HashMap::new();
+    // Data frames whose FileStart (stripe 0) has not arrived yet —
+    // bounded by stripe skew, drained on FileStart.
+    let mut early: HashMap<u32, Vec<(u64, Vec<u8>)>> = HashMap::new();
     // Byte spans rewritten by Fix frames since the last FixEnd, per file,
     // plus one write handle kept open across the batch (opening and
     // flushing per frame would pay a syscall pair per ~64 KiB of repair).
     let mut fix_ranges: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
     let mut fix_writers: HashMap<u32, Box<dyn crate::storage::WriteStream>> = HashMap::new();
+    let mut done_seen = false;
 
     loop {
-        let frame = Frame::read_from(&mut data_in)
-            .context("reading data frame")?
-            .context("data channel closed before Done")?;
-        match frame {
+        let next = match frx.try_recv() {
+            Ok(frame) => Some(frame),
+            Err(mpsc::TryRecvError::Empty) => {
+                // No frame ready. If the oldest open file has spilled
+                // queue feeds, this is the moment to push them — and it
+                // may be the *only* moment: after the last data frame the
+                // sender is waiting on our digests before it closes the
+                // sockets, so waiting for EOF here would deadlock. The
+                // blocking add is safe oldest-first (see the note below).
+                let oldest_spilled = start_order
+                    .iter()
+                    .copied()
+                    .find(|idx| open.contains_key(idx))
+                    .filter(|idx| {
+                        open.get(idx).map(|st| !st.spill.is_empty()).unwrap_or(false)
+                    });
+                if let Some(idx) = oldest_spilled {
+                    if let Some(st) = open.get_mut(&idx) {
+                        st.drain_spill_blocking();
+                    }
+                    maybe_finish(&mut open, idx, &mut report)?;
+                    continue;
+                }
+                match frx.recv() {
+                    Ok(frame) => Some(frame),
+                    Err(_) => None,
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => None,
+        };
+        let Some(frame) = next else { break };
+        match frame? {
             Frame::FileStart { file_idx, size, attempt: _, name } => {
-                anyhow::ensure!(current.is_none(), "nested FileStart");
+                anyhow::ensure!(
+                    !names.contains_key(&file_idx),
+                    "duplicate FileStart for file {file_idx}"
+                );
                 names.insert(file_idx, name.clone());
-                current = Some(FileState::new(file_idx, &name, size, cfg, &storage, &tx)?);
+                start_order.push(file_idx);
+                let mut st = FileState::new(file_idx, &name, size, cfg, storage, pool, tx)?;
+                for (offset, payload) in early.remove(&file_idx).unwrap_or_default() {
+                    st.write(offset, payload)?;
+                }
+                // Even a zero-size or fully-early file waits for FileEnd.
+                open.insert(file_idx, st);
             }
             Frame::Data { file_idx, offset, payload } => {
-                let st = current.as_mut().context("Data frame outside a file")?;
-                anyhow::ensure!(st.file_idx == file_idx, "Data for wrong file");
                 report.bytes_received += payload.len() as u64;
-                st.write(offset, payload)?;
+                if let Some(st) = open.get_mut(&file_idx) {
+                    st.write(offset, payload)?;
+                } else {
+                    // A stripe outran stripe 0's FileStart (or, worse,
+                    // trails a finished file — that means duplicate data
+                    // and must fail).
+                    anyhow::ensure!(
+                        !names.contains_key(&file_idx),
+                        "Data for already-finished file {file_idx}"
+                    );
+                    early.entry(file_idx).or_default().push((offset, payload));
+                }
+                maybe_finish(&mut open, file_idx, &mut report)?;
             }
             Frame::FileEnd { file_idx } => {
-                let mut st = current.take().context("FileEnd outside a file")?;
-                anyhow::ensure!(st.file_idx == file_idx, "FileEnd for wrong file");
-                st.finish()?;
-                report.files_received += 1;
+                open.get_mut(&file_idx)
+                    .with_context(|| format!("FileEnd for unknown file {file_idx}"))?
+                    .end_requested = true;
+                maybe_finish(&mut open, file_idx, &mut report)?;
             }
             Frame::Fix { file_idx, offset, payload } => {
-                // Repairs may interleave with the next file's stream; route
+                // Repairs may interleave with later files' streams; route
                 // by the name recorded at FileStart.
                 let name = names
                     .get(&file_idx)
@@ -132,31 +294,74 @@ pub fn serve_session(
                 let ranges = fix_ranges.remove(&file_idx).unwrap_or_default();
                 tx.send(Event::Repaired { file_idx, unit, ranges }).ok();
             }
-            Frame::Done => break,
+            Frame::Done => done_seen = true,
             other => bail!("unexpected frame on data channel: {other:?}"),
         }
+        // Retry spilled queue feeds — their pool job may have started
+        // draining since — and finalize anything that completed.
+        let spilled: Vec<u32> = open
+            .iter()
+            .filter(|(_, st)| !st.spill.is_empty())
+            .map(|(&idx, _)| idx)
+            .collect();
+        for idx in spilled {
+            if let Some(st) = open.get_mut(&idx) {
+                st.pump_spill();
+            }
+            maybe_finish(&mut open, idx, &mut report)?;
+        }
     }
-    drop(tx);
-    drop(current);
-    let stats = worker.join().expect("verify worker panicked")?;
-    report.units_verified = stats.0;
-    report.units_failed = stats.1;
+    anyhow::ensure!(done_seen, "data channels closed before Done");
+    anyhow::ensure!(early.is_empty(), "data for files that never started: {:?}", early.keys());
+    // End of stream: any still-open file either lost data (error) or has
+    // spilled queue feeds awaiting a pool worker. Draining those may
+    // block, which is safe *only* here and *only* oldest-first: the pool
+    // runs jobs FIFO, so the globally earliest unfinished hash job is
+    // always running, and it belongs to some session's oldest open file —
+    // exactly the queue that session's merger is draining.
+    for idx in start_order {
+        let Some(mut st) = open.remove(&idx) else { continue };
+        anyhow::ensure!(
+            st.end_requested && st.contiguous >= st.size,
+            "file {idx} ({}) ended short: {} contiguous bytes of {}",
+            st.name,
+            st.contiguous,
+            st.size
+        );
+        st.drain_spill_blocking();
+        st.finish()?;
+        report.files_received += 1;
+    }
     Ok(report)
 }
 
-/// Per-file receive state.
+/// Per-file receive state. Bytes may arrive out of order across stripes;
+/// storage writes go straight to their offset while the queue feed (and
+/// the completed-unit emission for re-read mode) follows the contiguous
+/// prefix.
 struct FileState {
     file_idx: u32,
     name: String,
     size: u64,
-    written: u64,
+    /// End of the contiguous prefix received so far.
+    contiguous: u64,
+    /// Out-of-order spans past the prefix: offset -> len.
+    spans: BTreeMap<u64, u64>,
+    /// Queue mode only: out-of-order payloads awaiting their turn.
+    stash: BTreeMap<u64, Vec<u8>>,
+    /// Queue mode only: in-order payloads the queue had no room for (its
+    /// hash job may still be waiting for a pool worker). The merger spills
+    /// instead of blocking — see the drain note in `merge_frames`.
+    spill: VecDeque<Vec<u8>>,
     writer: Box<dyn crate::storage::WriteStream>,
-    /// Queue + hash thread for FIVER-mode files.
+    /// Queue for FIVER-mode files; its hash job runs on the shared pool.
     queue: Option<ByteQueue>,
-    hash_thread: Option<std::thread::JoinHandle<()>>,
-    /// Re-read mode: units pending emission as writes cross their end
-    /// offset (lets block-level checksums overlap the next block's data).
+    /// Re-read mode: units pending emission as the contiguous prefix
+    /// crosses their end offset (lets block-level checksums overlap the
+    /// next block's data).
     pending_units: Vec<(u64, u64, u64)>,
+    /// FileEnd seen (data may still be in flight on other stripes).
+    end_requested: bool,
     tx: mpsc::Sender<Event>,
 }
 
@@ -167,6 +372,7 @@ impl FileState {
         size: u64,
         cfg: &SessionConfig,
         storage: &Arc<dyn Storage>,
+        pool: &PoolHandle,
         tx: &mpsc::Sender<Event>,
     ) -> Result<FileState> {
         let writer = storage.open_write(name)?;
@@ -174,24 +380,24 @@ impl FileState {
         let units = cfg.units_of(size, uses_queue);
         let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
 
-        let (queue, hash_thread) = if uses_queue && verify {
+        let queue = if uses_queue && verify {
             let q = ByteQueue::new(cfg.queue_capacity);
             let q2 = q.clone();
             let hasher_factory = cfg.hasher.clone();
             let tx2 = tx.clone();
             let name2 = name.to_string();
-            let handle = if cfg.algorithm == RealAlgorithm::FiverMerkle {
+            if cfg.algorithm == RealAlgorithm::FiverMerkle {
                 // Fold the stream into a digest tree as it drains from the
                 // queue (Algorithm 2 line 7 with tree leaves instead of a
                 // single running digest) — still zero extra file I/O.
                 let leaf_size = cfg.leaf_size;
-                std::thread::spawn(move || {
+                pool.submit(move || {
                     let tree = queue_build_tree(q2, leaf_size, hasher_factory);
                     tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
-                })
+                });
             } else {
                 let units2 = units.clone();
-                std::thread::spawn(move || {
+                pool.submit(move || {
                     queue_hash_units(q2, &units2, hasher_factory, |unit, offset, len, digest| {
                         tx2.send(Event::Verify {
                             file_idx,
@@ -203,42 +409,112 @@ impl FileState {
                         })
                         .ok();
                     });
-                })
-            };
-            (Some(q), Some(handle))
+                });
+            }
+            Some(q)
         } else {
-            (None, None)
+            None
         };
         Ok(FileState {
             file_idx,
             name: name.to_string(),
             size,
-            written: 0,
+            contiguous: 0,
+            spans: BTreeMap::new(),
+            stash: BTreeMap::new(),
+            spill: VecDeque::new(),
             writer,
             queue,
-            hash_thread,
             pending_units: if verify && !uses_queue { units } else { Vec::new() },
+            end_requested: false,
             tx: tx.clone(),
         })
     }
 
     fn write(&mut self, offset: u64, payload: Vec<u8>) -> Result<()> {
         self.writer.write_at(offset, &payload)?;
-        self.written = self.written.max(offset + payload.len() as u64);
-        if let Some(q) = &self.queue {
+        let len = payload.len() as u64;
+        if offset == self.contiguous {
             // Algorithm 2 line 7: share the received buffer with the
-            // checksum thread — no re-read, no extra syscalls.
-            q.add(payload);
+            // checksum job — no re-read, no extra syscalls.
+            self.feed(payload);
+            self.contiguous += len;
+            // Pull any stashed successors into the prefix.
+            loop {
+                let head = self.spans.iter().next().map(|(&o, &l)| (o, l));
+                let Some((o, l)) = head else { break };
+                if o != self.contiguous {
+                    break;
+                }
+                self.spans.remove(&o);
+                if let Some(buf) = self.stash.remove(&o) {
+                    self.feed(buf);
+                }
+                self.contiguous += l;
+            }
+        } else {
+            anyhow::ensure!(
+                offset > self.contiguous,
+                "overlapping data at {offset} (contiguous prefix {})",
+                self.contiguous
+            );
+            self.spans.insert(offset, len);
+            if self.queue.is_some() {
+                self.stash.insert(offset, payload);
+            }
         }
         self.emit_completed_units(false);
         Ok(())
     }
 
-    /// Emit re-read-mode verification jobs for fully written units.
+    /// Hand an in-order buffer to the checksum queue without ever
+    /// blocking the merger (spill on a full queue).
+    fn feed(&mut self, payload: Vec<u8>) {
+        let Some(q) = &self.queue else { return };
+        if self.spill.is_empty() {
+            if let Err(back) = q.try_add(payload) {
+                self.spill.push_back(back);
+            }
+        } else {
+            self.spill.push_back(payload);
+        }
+    }
+
+    /// Retry spilled feeds (non-blocking).
+    fn pump_spill(&mut self) {
+        let Some(q) = &self.queue else { return };
+        while let Some(front) = self.spill.pop_front() {
+            match q.try_add(front) {
+                Ok(()) => {}
+                Err(back) => {
+                    self.spill.push_front(back);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// End-of-stream drain: blocking adds are safe only in the merger's
+    /// oldest-first post-loop (see `merge_frames`).
+    fn drain_spill_blocking(&mut self) {
+        if let Some(q) = &self.queue {
+            for buf in self.spill.drain(..) {
+                q.add(buf);
+            }
+        }
+    }
+
+    /// All announced bytes received, the sender declared the end, and the
+    /// checksum queue has everything (no spill pending).
+    fn complete(&self) -> bool {
+        self.end_requested && self.contiguous >= self.size && self.spill.is_empty()
+    }
+
+    /// Emit re-read-mode verification jobs for fully received units.
     fn emit_completed_units(&mut self, at_eof: bool) {
         while let Some(&(unit, offset, len)) = self.pending_units.first() {
-            let complete = self.written >= offset + len && (len > 0 || at_eof || self.size == 0);
-            if !complete {
+            let done = self.contiguous >= offset + len && (len > 0 || at_eof || self.size == 0);
+            if !done {
                 break;
             }
             self.tx
@@ -260,18 +536,25 @@ impl FileState {
         if let Some(q) = self.queue.take() {
             q.close();
         }
-        if let Some(h) = self.hash_thread.take() {
-            h.join().expect("hash thread panicked");
-        }
         self.emit_completed_units(true);
         anyhow::ensure!(
-            self.pending_units.is_empty(),
-            "file {} ended short: {} bytes written of {}",
+            self.pending_units.is_empty() && self.spans.is_empty() && self.spill.is_empty(),
+            "file {} ended short: {} contiguous bytes of {}",
             self.name,
-            self.written,
+            self.contiguous,
             self.size
         );
         Ok(())
+    }
+}
+
+impl Drop for FileState {
+    fn drop(&mut self) {
+        // Error paths must not leave a pool worker blocked on an open
+        // queue forever (the pool's Drop joins its workers).
+        if let Some(q) = self.queue.take() {
+            q.close();
+        }
     }
 }
 
@@ -609,7 +892,8 @@ mod tests {
         q.add(vec![1, 2, 3]);
         q.close();
         let mut out = Vec::new();
-        queue_hash_units(q, &[(UNIT_FILE, 0, 100)], native_factory(HashAlgorithm::Md5), |u, o, l, d| {
+        let units = [(UNIT_FILE, 0, 100)];
+        queue_hash_units(q, &units, native_factory(HashAlgorithm::Md5), |u, o, l, d| {
             out.push((u, o, l, d))
         });
         assert_eq!(out.len(), 1, "partial unit must still emit (fail-closed)");
@@ -626,5 +910,81 @@ mod tests {
             &(0u8..200).collect::<Vec<_>>()[50..150],
         );
         assert_eq!(crate::util::hex::encode(&d), expect);
+    }
+
+    #[test]
+    fn file_state_spills_when_hash_job_is_starved() {
+        // A 1-worker pool held by a gate job: the file's hash job is
+        // queued, its tiny queue fills, and merger-side writes must spill
+        // rather than block (the deadlock-freedom invariant). Releasing
+        // the gate lets the end-of-stream drain feed the job.
+        let mem = MemStorage::new();
+        let storage: Arc<dyn Storage> = Arc::new(mem.clone());
+        let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+        cfg.queue_capacity = 4096;
+        let pool = HashPool::new(1);
+        let handle = pool.handle();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        handle.submit(move || {
+            gate_rx.recv().ok();
+        });
+        let (tx, rx) = mpsc::channel::<Event>();
+        let data: Vec<u8> = (0u8..=255).cycle().take(64 * 1024).collect();
+        let size = data.len() as u64;
+        let mut st = FileState::new(0, "f", size, &cfg, &storage, &handle, &tx).unwrap();
+        for (i, chunk) in data.chunks(8 * 1024).enumerate() {
+            st.write((i * 8 * 1024) as u64, chunk.to_vec()).unwrap();
+        }
+        assert!(!st.spill.is_empty(), "writes past queue capacity must spill, not block");
+        st.end_requested = true;
+        assert!(!st.complete(), "spilled feeds block completion");
+        gate_tx.send(()).unwrap();
+        st.drain_spill_blocking();
+        st.finish().unwrap();
+        drop(st);
+        drop(tx);
+        match rx.recv().expect("digest event") {
+            Event::Verify { digest: Some(d), .. } => {
+                let expect = crate::hashes::hex_digest(HashAlgorithm::Md5, &data);
+                assert_eq!(crate::util::hex::encode(&d), expect);
+            }
+            _ => panic!("expected queue-mode Verify event"),
+        }
+        assert_eq!(mem.get("f").unwrap(), data);
+    }
+
+    #[test]
+    fn file_state_reorders_stripe_skew_for_queue_feed() {
+        // Out-of-order arrival: the storage writes land at their offsets
+        // and the queue sees the bytes in stream order.
+        let mem = MemStorage::new();
+        let storage: Arc<dyn Storage> = Arc::new(mem.clone());
+        let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+        let pool = HashPool::new(1);
+        let handle = pool.handle();
+        let (tx, rx) = mpsc::channel::<Event>();
+        let data: Vec<u8> = (0u8..=255).cycle().take(900).collect();
+        let mut st = FileState::new(0, "f", 900, &cfg, &storage, &handle, &tx).unwrap();
+        // Stripe skew: chunks 300..600 and 600..900 before 0..300.
+        st.write(300, data[300..600].to_vec()).unwrap();
+        st.write(600, data[600..900].to_vec()).unwrap();
+        assert!(!st.complete());
+        st.write(0, data[0..300].to_vec()).unwrap();
+        st.end_requested = true;
+        assert!(st.complete());
+        st.finish().unwrap();
+        drop(st);
+        drop(tx);
+        // The pool job digests the in-order stream.
+        let ev = rx.recv().expect("digest event");
+        match ev {
+            Event::Verify { digest: Some(d), unit, .. } => {
+                assert_eq!(unit, UNIT_FILE);
+                let expect = crate::hashes::hex_digest(HashAlgorithm::Md5, &data);
+                assert_eq!(crate::util::hex::encode(&d), expect);
+            }
+            _ => panic!("expected queue-mode Verify event"),
+        }
+        assert_eq!(mem.get("f").unwrap(), data);
     }
 }

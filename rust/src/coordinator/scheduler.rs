@@ -1,0 +1,255 @@
+//! The parallel engine's file scheduler: work items, the work-stealing
+//! queue that feeds N concurrent sessions, and the engine configuration
+//! and aggregate report types.
+//!
+//! Scheduling policy (mirrored by the simulator in
+//! [`crate::sim::algorithms::run_concurrent`]):
+//!
+//! 1. [`crate::workload::plan_batches`] turns the file list into work
+//!    items — small files aggregate into tar-like batches, large files
+//!    stand alone — so per-file control exchanges amortize and no single
+//!    huge file serializes the tail.
+//! 2. Items are dealt round-robin onto per-session deques. Each session
+//!    pops from the *front* of its own deque; when empty it steals from
+//!    the *back* of the longest other deque. Front-pop keeps each
+//!    session's files in dataset order (sequential source reads); back-
+//!    steal takes the work its owner would reach last, minimizing
+//!    contention on the same region of the dataset.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::TransferReport;
+
+/// One schedulable unit: the dataset indices a session transfers
+/// back-to-back.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkItem {
+    pub files: Vec<usize>,
+}
+
+/// Parallel-engine knobs (the GridFTP-style concurrency/parallelism pair
+/// plus pool and batching tuning).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Concurrent sessions (GridFTP "concurrency"): each drives its own
+    /// sender/receiver pair over its own connection set.
+    pub concurrency: usize,
+    /// Data channels per session (GridFTP "parallelism"): each file's
+    /// Data frames round-robin across this many sockets.
+    pub parallel: usize,
+    /// Shared hash pool size per endpoint; 0 = `max(concurrency, 2)`.
+    pub hash_workers: usize,
+    /// Files smaller than this aggregate into batched work items
+    /// (0 disables batching).
+    pub batch_threshold: u64,
+    /// Target payload per batch.
+    pub batch_bytes: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        // Batching defaults match the simulator's
+        // (`crate::config::AlgoParams`), so a default real run and a
+        // default `run_concurrent` plan the same schedule.
+        EngineConfig {
+            concurrency: 1,
+            parallel: 1,
+            hash_workers: 0,
+            batch_threshold: 16 << 20,
+            batch_bytes: 64 << 20,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn with_concurrency(concurrency: usize) -> EngineConfig {
+        EngineConfig { concurrency: concurrency.max(1), ..Default::default() }
+    }
+
+    /// Effective hash pool size.
+    pub fn pool_workers(&self) -> usize {
+        if self.hash_workers > 0 {
+            self.hash_workers
+        } else {
+            self.concurrency.max(2)
+        }
+    }
+
+    /// Plan the work items for `sizes` under this configuration.
+    pub fn plan(&self, sizes: &[u64]) -> Vec<WorkItem> {
+        crate::workload::plan_batches(sizes, self.batch_threshold, self.batch_bytes)
+            .into_iter()
+            .map(|files| WorkItem { files })
+            .collect()
+    }
+}
+
+/// Per-session deques with stealing. All methods are safe to call from
+/// any session thread.
+pub struct WorkStealQueue {
+    deques: Vec<Mutex<VecDeque<WorkItem>>>,
+}
+
+impl WorkStealQueue {
+    /// Deal `items` round-robin across `sessions` deques.
+    pub fn new(items: Vec<WorkItem>, sessions: usize) -> WorkStealQueue {
+        let n = sessions.max(1);
+        let mut deques: Vec<VecDeque<WorkItem>> = (0..n).map(|_| VecDeque::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            deques[i % n].push_back(item);
+        }
+        WorkStealQueue { deques: deques.into_iter().map(Mutex::new).collect() }
+    }
+
+    /// Next item for `session`: own front, else steal from the back of
+    /// the currently longest other deque. `None` only when every deque is
+    /// empty at the moment of the scan.
+    pub fn next(&self, session: usize) -> Option<WorkItem> {
+        if let Some(item) = self.deques[session].lock().unwrap().pop_front() {
+            return Some(item);
+        }
+        // Steal from the victim with the most remaining work.
+        loop {
+            let mut victim: Option<(usize, usize)> = None; // (index, len)
+            for (i, d) in self.deques.iter().enumerate() {
+                if i == session {
+                    continue;
+                }
+                let len = d.lock().unwrap().len();
+                if len > 0 && victim.map(|(_, l)| len > l).unwrap_or(true) {
+                    victim = Some((i, len));
+                }
+            }
+            let Some((v, _)) = victim else { return None };
+            // The victim may have drained between the scan and the lock;
+            // rescan rather than give up.
+            if let Some(item) = self.deques[v].lock().unwrap().pop_back() {
+                return Some(item);
+            }
+        }
+    }
+
+    /// Remaining items across all deques (racy snapshot, for reporting).
+    pub fn remaining(&self) -> usize {
+        self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
+    }
+}
+
+/// Aggregate outcome of an engine run: one [`TransferReport`] per session
+/// plus the wall-clock of the whole fan-out.
+#[derive(Debug, Default, Clone)]
+pub struct EngineReport {
+    pub per_session: Vec<TransferReport>,
+    /// Wall-clock of the engine run (sessions overlap, so this is less
+    /// than the sum of per-session elapsed times whenever concurrency
+    /// helps).
+    pub elapsed_secs: f64,
+}
+
+impl EngineReport {
+    /// Sum the per-session reports into one dataset-level report.
+    /// `elapsed_secs` is the engine wall-clock, not the per-session sum.
+    pub fn aggregate(&self) -> TransferReport {
+        let mut total = TransferReport {
+            algorithm: self.per_session.first().map(|r| r.algorithm.clone()).unwrap_or_default(),
+            elapsed_secs: self.elapsed_secs,
+            ..Default::default()
+        };
+        for r in &self.per_session {
+            total.files += r.files;
+            total.bytes_sent += r.bytes_sent;
+            total.bytes_resent += r.bytes_resent;
+            total.failures_detected += r.failures_detected;
+            total.repair_rounds += r.repair_rounds;
+            total.bytes_reread += r.bytes_reread;
+            total.verify_rtts += r.verify_rtts;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(n: usize) -> Vec<WorkItem> {
+        (0..n).map(|i| WorkItem { files: vec![i] }).collect()
+    }
+
+    #[test]
+    fn own_deque_pops_in_order() {
+        let q = WorkStealQueue::new(items(6), 2);
+        // Session 0 got items 0, 2, 4 round-robin.
+        assert_eq!(q.next(0).unwrap().files, vec![0]);
+        assert_eq!(q.next(0).unwrap().files, vec![2]);
+        assert_eq!(q.next(0).unwrap().files, vec![4]);
+    }
+
+    #[test]
+    fn steals_from_back_when_empty() {
+        let q = WorkStealQueue::new(items(4), 2);
+        // Session 0: [0, 2]; session 1: [1, 3]. Drain 0's own work.
+        q.next(0).unwrap();
+        q.next(0).unwrap();
+        // Now steal: back of session 1's deque is item 3.
+        assert_eq!(q.next(0).unwrap().files, vec![3]);
+        assert_eq!(q.next(1).unwrap().files, vec![1]);
+        assert!(q.next(0).is_none());
+        assert_eq!(q.remaining(), 0);
+    }
+
+    #[test]
+    fn concurrent_drain_sees_every_item_once() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        let q = Arc::new(WorkStealQueue::new(items(200), 4));
+        let mut handles = Vec::new();
+        for s in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(item) = q.next(s) {
+                    got.push(item.files[0]);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), 200, "every item claimed exactly once");
+        let set: HashSet<usize> = all.into_iter().collect();
+        assert_eq!(set.len(), 200);
+    }
+
+    #[test]
+    fn engine_config_defaults() {
+        let e = EngineConfig::default();
+        assert_eq!(e.concurrency, 1);
+        assert_eq!(e.parallel, 1);
+        assert_eq!(e.pool_workers(), 2);
+        assert_eq!(EngineConfig::with_concurrency(8).pool_workers(), 8);
+    }
+
+    #[test]
+    fn aggregate_sums_sessions() {
+        let mut rep = EngineReport { elapsed_secs: 2.0, ..Default::default() };
+        for i in 0..3u64 {
+            rep.per_session.push(TransferReport {
+                algorithm: "FIVER".into(),
+                files: 2,
+                bytes_sent: 100 * (i + 1),
+                failures_detected: i,
+                ..Default::default()
+            });
+        }
+        let total = rep.aggregate();
+        assert_eq!(total.files, 6);
+        assert_eq!(total.bytes_sent, 600);
+        assert_eq!(total.failures_detected, 3);
+        assert_eq!(total.elapsed_secs, 2.0);
+        assert_eq!(total.algorithm, "FIVER");
+    }
+}

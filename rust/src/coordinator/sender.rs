@@ -1,14 +1,21 @@
-//! Algorithm 1 — the FIVER sender, generalized over all five policies.
+//! Algorithm 1 — the FIVER sender, generalized over all five policies
+//! and engine-driven: a [`SenderSession`] is handed files one at a time
+//! (by [`run_sender`] for a fixed list, or by the parallel engine's
+//! work-stealing scheduler), streams them over one or more striped data
+//! channels, and runs checksum compute on the shared
+//! [`super::pool::HashPool`].
 //!
-//! Concurrent roles:
+//! Concurrent roles per session:
 //!
-//! * **main thread**: reads source files, streams `Data` frames, and feeds
-//!   the shared queue (Algorithm 1 lines 5-8). Pacing differs per policy:
+//! * **session thread** (the caller): reads source files, stripes `Data`
+//!   frames round-robin across the data channels, and feeds the shared
+//!   queue (Algorithm 1 lines 5-8). Pacing differs per policy:
 //!   Sequential waits for each file's verification; file-/block-level
 //!   pipelining hand re-read checksum jobs to a checksum worker in
 //!   lockstep; FIVER never waits (its checksum rides the queue).
-//! * **queue hash threads**: FIVER's COMPUTECHECKSUM — digest the exact
-//!   bytes that went to the socket, no second read.
+//! * **hash pool workers**: FIVER's COMPUTECHECKSUM — digest the exact
+//!   bytes that went to the sockets, no second read; one job per
+//!   queue-mode file.
 //! * **checksum worker**: the re-read checksum station for the baseline
 //!   policies (depth-1 job channel = the paper's "checksum of file i
 //!   overlaps transfer of file i+1").
@@ -25,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
 use super::receiver::{hash_range, queue_build_tree, queue_hash_units};
@@ -33,7 +41,8 @@ use crate::faults::{FaultInjector, FaultPlan};
 use crate::merkle::MerkleTree;
 use crate::storage::Storage;
 
-/// Shared sender state between main, hash threads and the verifier.
+/// Shared sender state between the session thread, hash jobs and the
+/// verifier.
 struct Shared {
     /// Local digests by (file_idx, unit).
     local: Mutex<HashMap<(u32, u64), Vec<u8>>>,
@@ -141,9 +150,9 @@ impl Shared {
     }
 }
 
-/// A shareable, mutex-guarded frame writer for the data channel (main
-/// thread's stream + verifier's repair frames interleave at frame
-/// granularity).
+/// A shareable, mutex-guarded frame writer for one data channel (the
+/// session thread's stream + the verifier's repair frames interleave at
+/// frame granularity).
 #[derive(Clone)]
 struct DataOut(Arc<Mutex<BufWriter<TcpStream>>>);
 
@@ -166,112 +175,154 @@ impl DataOut {
     }
 }
 
-/// Run a sender session over connected data/control sockets. `files` are
-/// names resolvable in `storage`, transferred in order.
-pub fn run_sender(
-    data: TcpStream,
-    ctrl: TcpStream,
-    files: &[String],
+/// One sender session: owns its data channels, control channel (via the
+/// verifier thread), and per-session report. The engine drives it file by
+/// file; `file_idx` is always the *dataset-global* index so fault plans
+/// and receiver-side routing agree across sessions.
+pub struct SenderSession {
+    cfg: SessionConfig,
     storage: Arc<dyn Storage>,
-    cfg: &SessionConfig,
-    faults: &FaultPlan,
-) -> Result<TransferReport> {
-    let start = Instant::now();
-    let shared = Shared::new();
-    let data_out = DataOut(Arc::new(Mutex::new(BufWriter::with_capacity(1 << 20, data))));
-    let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+    shared: Arc<Shared>,
+    data_outs: Vec<DataOut>,
+    /// Round-robin stripe cursor for Data frames.
+    rr: usize,
+    pool: PoolHandle,
+    ck_tx: Option<mpsc::SyncSender<(u32, String, u64, u64, u64)>>,
+    ck_handle: Option<std::thread::JoinHandle<Result<()>>>,
+    verifier: Option<std::thread::JoinHandle<Result<()>>>,
+    injector: FaultInjector,
+    report: TransferReport,
+    start: Instant,
+    verify: bool,
+}
 
-    // Verifier thread (owns ctrl).
-    let verifier = if verify {
-        let shared2 = shared.clone();
-        let storage2 = storage.clone();
-        let data_out2 = data_out.clone();
-        let cfg2 = cfg.clone();
-        let names: Vec<String> = files.to_vec();
-        let faults2 = faults.clone();
-        Some(std::thread::spawn(move || {
-            run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2)
-        }))
-    } else {
-        None
-    };
+impl SenderSession {
+    /// Wire up a session over connected data stripes + control socket.
+    /// `names` is the full dataset name list (indexed by global file_idx —
+    /// the verifier re-reads failed ranges by name).
+    pub fn new(
+        datas: Vec<TcpStream>,
+        ctrl: TcpStream,
+        names: Arc<Vec<String>>,
+        storage: Arc<dyn Storage>,
+        cfg: SessionConfig,
+        faults: FaultPlan,
+        pool: PoolHandle,
+    ) -> Result<SenderSession> {
+        anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
+        let shared = Shared::new();
+        let data_outs: Vec<DataOut> = datas
+            .into_iter()
+            .map(|d| DataOut(Arc::new(Mutex::new(BufWriter::with_capacity(1 << 20, d)))))
+            .collect();
+        let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
 
-    // Re-read checksum worker (the pipelined checksum station). Depth-1
-    // channel: sending the next job blocks until the previous one was
-    // *picked up* — checksum of unit i overlaps transfer of unit i+1 only.
-    let (ck_tx, ck_handle) = if verify {
-        let (tx, rx) = mpsc::sync_channel::<(u32, String, u64, u64, u64)>(1);
-        let shared2 = shared.clone();
-        let storage2 = storage.clone();
-        let hasher = cfg.hasher.clone();
-        let handle = std::thread::spawn(move || -> Result<()> {
-            while let Ok((file_idx, name, unit, offset, len)) = rx.recv() {
-                let digest = hash_range(&storage2, &name, offset, len, &hasher)?;
-                shared2.put_local(file_idx, unit, digest);
-            }
-            Ok(())
-        });
-        (Some(tx), Some(handle))
-    } else {
-        (None, None)
-    };
+        // Verifier thread (owns ctrl). Repair Fix frames ride stripe 0.
+        let verifier = if verify {
+            let shared2 = shared.clone();
+            let storage2 = storage.clone();
+            let data_out2 = data_outs[0].clone();
+            let cfg2 = cfg.clone();
+            let faults2 = faults.clone();
+            Some(std::thread::spawn(move || {
+                run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2)
+            }))
+        } else {
+            None
+        };
 
-    let mut injector = FaultInjector::new(faults);
-    let mut report = TransferReport {
-        algorithm: cfg.algorithm.name().to_string(),
-        files: files.len(),
-        ..Default::default()
-    };
-    let mut hash_threads = Vec::new();
+        // Re-read checksum worker (the pipelined checksum station). Depth-1
+        // channel: sending the next job blocks until the previous one was
+        // *picked up* — checksum of unit i overlaps transfer of unit i+1
+        // only. This pacing is the definition of the baseline policies, so
+        // it stays a dedicated per-session thread rather than a pool job.
+        let (ck_tx, ck_handle) = if verify {
+            let (tx, rx) = mpsc::sync_channel::<(u32, String, u64, u64, u64)>(1);
+            let shared2 = shared.clone();
+            let storage2 = storage.clone();
+            let hasher = cfg.hasher.clone();
+            let handle = std::thread::spawn(move || -> Result<()> {
+                while let Ok((file_idx, name, unit, offset, len)) = rx.recv() {
+                    let digest = hash_range(&storage2, &name, offset, len, &hasher)?;
+                    shared2.put_local(file_idx, unit, digest);
+                }
+                Ok(())
+            });
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
 
-    for (i, name) in files.iter().enumerate() {
-        let file_idx = i as u32;
-        let size = storage.size_of(name)?;
-        let uses_queue = cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
-        let units = cfg.units_of(size, uses_queue);
-        if verify {
-            shared.register(file_idx, units.len());
+        let report = TransferReport {
+            algorithm: cfg.algorithm.name().to_string(),
+            ..Default::default()
+        };
+        Ok(SenderSession {
+            injector: FaultInjector::new(&faults),
+            cfg,
+            storage,
+            shared,
+            data_outs,
+            rr: 0,
+            pool,
+            ck_tx,
+            ck_handle,
+            verifier,
+            report,
+            start: Instant::now(),
+            verify,
+        })
+    }
+
+    /// Stream one file (Algorithm 1 lines 5-8) and arrange its
+    /// verification. Returns once the stream is on the wire (FIVER) or
+    /// once verified (Sequential pacing).
+    pub fn send_file(&mut self, file_idx: u32, name: &str) -> Result<()> {
+        let size = self.storage.size_of(name)?;
+        let uses_queue = self.cfg.algorithm.uses_queue(size, self.cfg.hybrid_threshold);
+        let units = self.cfg.units_of(size, uses_queue);
+        if self.verify {
+            self.shared.register(file_idx, units.len());
         }
-        data_out.send(&Frame::FileStart {
+        self.data_outs[0].send(&Frame::FileStart {
             file_idx,
             size,
             attempt: 0,
-            name: name.clone(),
+            name: name.to_string(),
         })?;
 
-        // FIVER path: queue + hash thread digesting the shared buffers.
-        let queue = if uses_queue && verify {
-            let q = ByteQueue::new(cfg.queue_capacity);
+        // FIVER path: queue + pool job digesting the shared buffers.
+        let queue = if uses_queue && self.verify {
+            let q = ByteQueue::new(self.cfg.queue_capacity);
             let q2 = q.clone();
-            let hasher = cfg.hasher.clone();
-            let shared2 = shared.clone();
-            if cfg.algorithm == RealAlgorithm::FiverMerkle {
+            let hasher = self.cfg.hasher.clone();
+            let shared2 = self.shared.clone();
+            if self.cfg.algorithm == RealAlgorithm::FiverMerkle {
                 // Fold the clean outbound stream into a digest tree as it
                 // drains from the queue (no second read of the source).
-                let leaf_size = cfg.leaf_size;
-                hash_threads.push(std::thread::spawn(move || {
+                let leaf_size = self.cfg.leaf_size;
+                self.pool.submit(move || {
                     shared2.put_tree(file_idx, queue_build_tree(q2, leaf_size, hasher));
-                }));
+                });
             } else {
                 let units2 = units.clone();
-                hash_threads.push(std::thread::spawn(move || {
+                self.pool.submit(move || {
                     queue_hash_units(q2, &units2, hasher, |unit, _o, _l, digest| {
                         shared2.put_local(file_idx, unit, digest);
                     });
-                }));
+                });
             }
             Some(q)
         } else {
             None
         };
 
-        // Stream the file (Algorithm 1 lines 5-8).
-        injector.start_file(i, 0);
-        let mut reader = storage.open_read(name)?;
+        self.injector.start_file(file_idx as usize, 0);
+        let mut reader = self.storage.open_read(name)?;
         let mut offset = 0u64;
         let mut unit_cursor = 0usize;
         while offset < size {
-            let want = cfg.buf_size.min((size - offset) as usize);
+            let want = self.cfg.buf_size.min((size - offset) as usize);
             let mut clean = vec![0u8; want];
             let n = reader.read_next(&mut clean)?;
             anyhow::ensure!(n > 0, "short read of {name} at {offset}");
@@ -279,25 +330,27 @@ pub fn run_sender(
             // Corruption happens on the wire: flip bits, send, then flip
             // back (XOR is self-inverse) so the local checksum hashes the
             // true bytes while the receiver sees the corrupted ones.
-            let flips = injector.corrupt(&mut clean);
-            data_out.send_data(file_idx, offset, &clean)?;
+            let flips = self.injector.corrupt(&mut clean);
+            let lane = self.rr % self.data_outs.len();
+            self.rr += 1;
+            self.data_outs[lane].send_data(file_idx, offset, &clean)?;
             for &(pos, bit) in &flips {
                 clean[pos] ^= 1 << bit;
             }
-            report.bytes_sent += n as u64;
+            self.report.bytes_sent += n as u64;
             offset += n as u64;
             if let Some(q) = &queue {
                 q.add(clean);
             }
             // Re-read-mode: emit checksum jobs for completed units
             // (block-level overlap within the file).
-            if queue.is_none() && verify {
+            if queue.is_none() && self.verify {
                 while unit_cursor < units.len() {
                     let (unit, uoff, ulen) = units[unit_cursor];
                     if offset >= uoff + ulen && ulen > 0 {
-                        ck_tx.as_ref().unwrap().send((
+                        self.ck_tx.as_ref().unwrap().send((
                             file_idx,
-                            name.clone(),
+                            name.to_string(),
                             unit,
                             uoff,
                             ulen,
@@ -309,56 +362,93 @@ pub fn run_sender(
                 }
             }
         }
-        data_out.send(&Frame::FileEnd { file_idx })?;
-        data_out.flush()?;
+        self.data_outs[0].send(&Frame::FileEnd { file_idx })?;
+        for out in &self.data_outs {
+            out.flush()?;
+        }
         if let Some(q) = queue {
             q.close();
-        } else if verify {
+        } else if self.verify {
             // Remaining units (zero-length files).
             while unit_cursor < units.len() {
                 let (unit, uoff, ulen) = units[unit_cursor];
-                ck_tx.as_ref().unwrap().send((file_idx, name.clone(), unit, uoff, ulen))?;
+                self.ck_tx.as_ref().unwrap().send((file_idx, name.to_string(), unit, uoff, ulen))?;
                 unit_cursor += 1;
             }
         }
         // Pacing per policy.
-        if verify {
-            let sequential_pace = matches!(cfg.algorithm, RealAlgorithm::Sequential)
-                || (matches!(cfg.algorithm, RealAlgorithm::FiverHybrid) && !uses_queue);
+        if self.verify {
+            let sequential_pace = matches!(self.cfg.algorithm, RealAlgorithm::Sequential)
+                || (matches!(self.cfg.algorithm, RealAlgorithm::FiverHybrid) && !uses_queue);
             if sequential_pace {
                 // Definitionally: verification completes before the next
                 // file starts.
-                shared.wait_file_verified(file_idx);
+                self.shared.wait_file_verified(file_idx);
             }
             // File-/block-level pipelining pace through the depth-1 job
-            // channel (the send above blocks appropriately); FIVER doesn't
+            // channel (the sends above block appropriately); FIVER doesn't
             // pace at all.
         }
+        self.report.files += 1;
+        Ok(())
     }
 
-    if verify {
-        shared.all_registered.store(true, Ordering::SeqCst);
-        shared.wait_all_verified();
+    /// Wait for every sent file to verify, close the session (`Done`), and
+    /// return the per-session report.
+    pub fn finish(mut self) -> Result<TransferReport> {
+        if self.verify {
+            self.shared.all_registered.store(true, Ordering::SeqCst);
+            self.shared.wait_all_verified();
+        }
+        drop(self.ck_tx.take()); // hang up the checksum worker
+        self.data_outs[0].send(&Frame::Done)?;
+        for out in &self.data_outs {
+            out.flush()?;
+        }
+        if let Some(h) = self.ck_handle.take() {
+            h.join().expect("checksum worker panicked")?;
+        }
+        if let Some(v) = self.verifier.take() {
+            v.join().expect("verifier panicked")?;
+        }
+        self.report.failures_detected = self.shared.failures.load(Ordering::SeqCst);
+        self.report.bytes_resent = self.shared.bytes_resent.load(Ordering::SeqCst);
+        self.report.repair_rounds = self.shared.repair_rounds.load(Ordering::SeqCst);
+        self.report.bytes_reread = self.shared.bytes_reread.load(Ordering::SeqCst);
+        self.report.verify_rtts = self.shared.verify_rtts.load(Ordering::SeqCst);
+        self.report.elapsed_secs = self.start.elapsed().as_secs_f64();
+        Ok(self.report)
+        // data_outs drop here: BufWriters flush (already flushed above)
+        // and the sockets close, which is the receiver readers' EOF.
     }
-    drop(ck_tx);
-    data_out.send(&Frame::Done)?;
-    data_out.flush()?;
-    for h in hash_threads {
-        h.join().expect("hash thread panicked");
+}
+
+/// Run a single-stripe sender session over connected data/control sockets
+/// with a private two-worker hash pool. `files` are names resolvable in
+/// `storage`, transferred in order.
+pub fn run_sender(
+    data: TcpStream,
+    ctrl: TcpStream,
+    files: &[String],
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    faults: &FaultPlan,
+) -> Result<TransferReport> {
+    let pool = HashPool::new(2);
+    let names: Arc<Vec<String>> = Arc::new(files.to_vec());
+    let mut session = SenderSession::new(
+        vec![data],
+        ctrl,
+        names.clone(),
+        storage,
+        cfg.clone(),
+        faults.clone(),
+        pool.handle(),
+    )?;
+    for (i, name) in names.iter().enumerate() {
+        session.send_file(i as u32, name)?;
     }
-    if let Some(h) = ck_handle {
-        h.join().expect("checksum worker panicked")?;
-    }
-    if let Some(v) = verifier {
-        v.join().expect("verifier panicked")?;
-    }
-    report.failures_detected = shared.failures.load(Ordering::SeqCst);
-    report.bytes_resent = shared.bytes_resent.load(Ordering::SeqCst);
-    report.repair_rounds = shared.repair_rounds.load(Ordering::SeqCst);
-    report.bytes_reread = shared.bytes_reread.load(Ordering::SeqCst);
-    report.verify_rtts = shared.verify_rtts.load(Ordering::SeqCst);
-    report.elapsed_secs = start.elapsed().as_secs_f64();
-    Ok(report)
+    session.finish()
 }
 
 /// Verifier: match receiver digests (or Merkle roots) against local ones;
@@ -650,7 +740,8 @@ mod tests {
 
     #[test]
     fn unit_range_math() {
-        let mut cfg = SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Md5));
+        let mut cfg =
+            SessionConfig::new(RealAlgorithm::FiverChunk, native_factory(HashAlgorithm::Md5));
         cfg.block_size = 100;
         assert_eq!(unit_range(&cfg, super::super::protocol::UNIT_FILE, 250), (0, 250));
         assert_eq!(unit_range(&cfg, 0, 250), (0, 100));

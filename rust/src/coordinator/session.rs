@@ -1,13 +1,19 @@
-//! Session wiring: bind/connect the data + control channels and run a
-//! sender/receiver pair — the entrypoint examples, tests and the CLI use.
+//! Session wiring: bind/connect the data + control channels and run
+//! sender/receiver pairs — both the classic single-session entrypoints
+//! and the parallel engine (N concurrent sessions × P data stripes,
+//! work-stealing file scheduler, shared hash pools).
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::receiver::{serve_session, ReceiverReport};
-use super::sender::run_sender;
+use super::pool::HashPool;
+use super::protocol::Frame;
+use super::receiver::{serve_session, serve_session_multi, ReceiverReport};
+use super::scheduler::{EngineConfig, EngineReport, WorkStealQueue};
+use super::sender::{run_sender, SenderSession};
 use super::{SessionConfig, TransferReport};
 use crate::faults::FaultPlan;
 use crate::storage::Storage;
@@ -19,7 +25,8 @@ pub struct ReceiverEndpoint {
 }
 
 impl ReceiverEndpoint {
-    /// Bind on an ephemeral local port pair.
+    /// Bind on an ephemeral local port pair (port 0: the OS assigns free
+    /// ports, so concurrent tests and sessions never collide).
     pub fn bind_local() -> Result<ReceiverEndpoint> {
         Ok(ReceiverEndpoint {
             data_listener: TcpListener::bind("127.0.0.1:0").context("bind data")?,
@@ -43,7 +50,8 @@ impl ReceiverEndpoint {
         ))
     }
 
-    /// Accept one session and serve it to completion.
+    /// Accept one classic (single-stripe, no-handshake) session and serve
+    /// it to completion.
     pub fn serve_one(
         &self,
         storage: Arc<dyn Storage>,
@@ -55,9 +63,81 @@ impl ReceiverEndpoint {
         ctrl.set_nodelay(true).ok();
         serve_session(data, ctrl, storage, cfg)
     }
+
+    /// Accept and serve a full engine run: `concurrency` sessions, each
+    /// one control connection plus `parallel` data stripes, routed by the
+    /// `Hello` handshake and served concurrently over one shared hash
+    /// pool. Returns the per-session reports in session-id order.
+    ///
+    /// The total connection count (`concurrency * (parallel + 1)`) must
+    /// stay within the listen backlog (128).
+    pub fn serve_engine(
+        &self,
+        storage: Arc<dyn Storage>,
+        cfg: &SessionConfig,
+        eng: &EngineConfig,
+    ) -> Result<Vec<ReceiverReport>> {
+        let n = eng.concurrency.max(1);
+        let p = eng.parallel.max(1);
+        anyhow::ensure!(n * (p + 1) <= 128, "connection count exceeds the listen backlog");
+
+        // Route control connections by their Hello.
+        let mut ctrls: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (mut c, _) = self.ctrl_listener.accept().context("accept ctrl")?;
+            c.set_nodelay(true).ok();
+            let hello = Frame::read_from(&mut c)?.context("ctrl closed before Hello")?;
+            let Frame::Hello { session_id, .. } = hello else {
+                bail!("expected Hello on ctrl, got {hello:?}");
+            };
+            let sid = session_id as usize;
+            anyhow::ensure!(sid < n, "session id {sid} out of range");
+            anyhow::ensure!(ctrls[sid].is_none(), "duplicate ctrl for session {sid}");
+            ctrls[sid] = Some(c);
+        }
+        // Route data connections by (session, stripe).
+        let mut datas: Vec<Vec<Option<TcpStream>>> =
+            (0..n).map(|_| (0..p).map(|_| None).collect()).collect();
+        for _ in 0..n * p {
+            let (mut d, _) = self.data_listener.accept().context("accept data")?;
+            d.set_nodelay(true).ok();
+            let hello = Frame::read_from(&mut d)?.context("data closed before Hello")?;
+            let Frame::Hello { session_id, stripe_id, stripes } = hello else {
+                bail!("expected Hello on data, got {hello:?}");
+            };
+            let (sid, stripe) = (session_id as usize, stripe_id as usize);
+            anyhow::ensure!(
+                stripes as usize == p,
+                "stripe count mismatch: sender {stripes} vs receiver {p} — \
+                 both endpoints must agree on --parallel"
+            );
+            anyhow::ensure!(sid < n && stripe < p, "stripe ({sid},{stripe}) out of range");
+            anyhow::ensure!(datas[sid][stripe].is_none(), "duplicate stripe ({sid},{stripe})");
+            datas[sid][stripe] = Some(d);
+        }
+
+        let pool = HashPool::new(eng.pool_workers());
+        let mut handles = Vec::new();
+        for sid in 0..n {
+            let ctrl = ctrls[sid].take().expect("routed above");
+            let stripes: Vec<TcpStream> =
+                datas[sid].iter_mut().map(|s| s.take().expect("routed above")).collect();
+            let storage2 = storage.clone();
+            let cfg2 = cfg.clone();
+            let handle = pool.handle();
+            handles.push(std::thread::spawn(move || {
+                serve_session_multi(stripes, ctrl, storage2, &cfg2, handle)
+            }));
+        }
+        let mut reports = Vec::with_capacity(n);
+        for h in handles {
+            reports.push(h.join().expect("receiver session panicked")?);
+        }
+        Ok(reports)
+    }
 }
 
-/// Connect to a receiver and run a sender session.
+/// Connect to a receiver and run a classic single sender session.
 pub fn connect_and_send(
     data_addr: &str,
     ctrl_addr: &str,
@@ -71,6 +151,74 @@ pub fn connect_and_send(
     data.set_nodelay(true).ok();
     ctrl.set_nodelay(true).ok();
     run_sender(data, ctrl, files, storage, cfg, faults)
+}
+
+/// Connect and drive a full engine run against a receiver serving
+/// [`ReceiverEndpoint::serve_engine`] with the same `eng` parameters:
+/// plan the work items, spawn one sender session per concurrency slot,
+/// and let the sessions steal work until the dataset drains.
+pub fn connect_and_send_engine(
+    data_addr: &str,
+    ctrl_addr: &str,
+    files: &[String],
+    storage: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    eng: &EngineConfig,
+    faults: &FaultPlan,
+) -> Result<EngineReport> {
+    let n = eng.concurrency.max(1);
+    let p = eng.parallel.max(1);
+    let names: Arc<Vec<String>> = Arc::new(files.to_vec());
+    let mut sizes = Vec::with_capacity(names.len());
+    for name in names.iter() {
+        sizes.push(storage.size_of(name)?);
+    }
+    let queue = Arc::new(WorkStealQueue::new(eng.plan(&sizes), n));
+    let pool = HashPool::new(eng.pool_workers());
+    let start = Instant::now();
+
+    let mut handles = Vec::new();
+    for sid in 0..n {
+        let queue = queue.clone();
+        let names = names.clone();
+        let storage = storage.clone();
+        let cfg = cfg.clone();
+        let faults = faults.clone();
+        let handle = pool.handle();
+        let data_addr = data_addr.to_string();
+        let ctrl_addr = ctrl_addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<TransferReport> {
+            let mut ctrl = TcpStream::connect(&ctrl_addr).context("connect ctrl")?;
+            ctrl.set_nodelay(true).ok();
+            Frame::Hello { session_id: sid as u32, stripe_id: 0, stripes: p as u64 }
+                .write_to(&mut ctrl)?;
+            let mut stripes = Vec::with_capacity(p);
+            for stripe in 0..p {
+                let mut d = TcpStream::connect(&data_addr).context("connect data")?;
+                d.set_nodelay(true).ok();
+                Frame::Hello {
+                    session_id: sid as u32,
+                    stripe_id: stripe as u64,
+                    stripes: p as u64,
+                }
+                .write_to(&mut d)?;
+                stripes.push(d);
+            }
+            let mut session =
+                SenderSession::new(stripes, ctrl, names.clone(), storage, cfg, faults, handle)?;
+            while let Some(item) = queue.next(sid) {
+                for &fi in &item.files {
+                    session.send_file(fi as u32, &names[fi])?;
+                }
+            }
+            session.finish()
+        }));
+    }
+    let mut per_session = Vec::with_capacity(n);
+    for h in handles {
+        per_session.push(h.join().expect("sender session panicked")?);
+    }
+    Ok(EngineReport { per_session, elapsed_secs: start.elapsed().as_secs_f64() })
 }
 
 /// Run a complete local transfer: receiver thread + sender on the calling
@@ -89,4 +237,26 @@ pub fn run_local_transfer(
     let sender_report = connect_and_send(&data_addr, &ctrl_addr, files, src, cfg, faults)?;
     let receiver_report = receiver.join().expect("receiver panicked")?;
     Ok((sender_report, receiver_report))
+}
+
+/// Run a complete local *engine* transfer over loopback TCP: a receiver
+/// engine thread serving N×P connections plus N work-stealing sender
+/// sessions. Returns the sender engine report and the per-session
+/// receiver reports.
+pub fn run_parallel_local_transfer(
+    files: &[String],
+    src: Arc<dyn Storage>,
+    dst: Arc<dyn Storage>,
+    cfg: &SessionConfig,
+    eng: &EngineConfig,
+    faults: &FaultPlan,
+) -> Result<(EngineReport, Vec<ReceiverReport>)> {
+    let endpoint = ReceiverEndpoint::bind_local()?;
+    let (data_addr, ctrl_addr) = endpoint.addrs()?;
+    let rcfg = cfg.clone();
+    let reng = *eng;
+    let receiver = std::thread::spawn(move || endpoint.serve_engine(dst, &rcfg, &reng));
+    let report = connect_and_send_engine(&data_addr, &ctrl_addr, files, src, cfg, eng, faults)?;
+    let rreports = receiver.join().expect("receiver engine panicked")?;
+    Ok((report, rreports))
 }

@@ -1,0 +1,136 @@
+//! Concurrency sweep — the parallel engine beyond the paper: the 1000×10M
+//! lots-of-small-files dataset driven by N concurrent sessions sharing a
+//! hash worker pool, in the simulated testbeds and over a real loopback
+//! engine run. The serial FIVER driver is latency/hash-core-bound on this
+//! workload; concurrency moves the bottleneck to the slowest shared
+//! resource (destination disk on HPCLab-40G).
+
+use std::sync::Arc;
+
+use crate::config::{AlgoParams, Testbed, MB};
+use crate::coordinator::scheduler::EngineConfig;
+use crate::coordinator::session::run_parallel_local_transfer;
+use crate::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+use crate::faults::FaultPlan;
+use crate::hashes::HashAlgorithm;
+use crate::sim::algorithms::{run_concurrent, Algorithm};
+use crate::storage::{MemStorage, Storage};
+use crate::util::fmt;
+use crate::util::rng::SplitMix64;
+use crate::workload::Dataset;
+
+/// Session counts swept (hash pool sized to match).
+pub const SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Run the sweep and render the report.
+pub fn concurrency_sweep() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Concurrency sweep — parallel engine on the 1000x10M dataset\n\
+         (FIVER, N concurrent sessions, shared hash pool of N workers,\n\
+         small files batched per the scheduler's aggregation plan):\n",
+    );
+    for tb in [Testbed::hpclab_40g(), Testbed::esnet_wan()] {
+        let ds = Dataset::uniform("10M", 10 * MB, 1000);
+        let mut table =
+            fmt::Table::new(&["N", "time", "speedup", "Eq.1 overhead", "min session util"]);
+        let mut base_time = 0.0;
+        for n in SWEEP {
+            let s = run_concurrent(
+                tb,
+                AlgoParams::default(),
+                &ds,
+                &FaultPlan::none(),
+                Algorithm::Fiver,
+                n,
+                n,
+            );
+            if n == 1 {
+                base_time = s.total_time;
+            }
+            let min_util = s
+                .per_session
+                .iter()
+                .map(|x| x.utilization(s.total_time))
+                .fold(1.0f64, f64::min);
+            table.row(&[
+                n.to_string(),
+                fmt::secs(s.total_time),
+                format!("{:.2}x", base_time / s.total_time),
+                format!("{:+.1}%", s.overhead() * 100.0),
+                fmt::pct(min_util),
+            ]);
+        }
+        out.push_str(&format!("\n{} — simulated:\n{}", tb.name, table.render()));
+    }
+    out.push_str(&real_mode_sweep());
+    out
+}
+
+/// A scaled-down real engine run over loopback TCP (the 1000×10M shape at
+/// 1/80 size so `repro-experiments all` stays quick): reports wall-clock
+/// at concurrency 1 vs 8 — measured, not asserted, because loopback
+/// wall-clock depends on the host.
+fn real_mode_sweep() -> String {
+    let files = 192usize;
+    let size = 128 * 1024usize;
+    let src = MemStorage::new();
+    let mut rng = SplitMix64::new(0xC0C0);
+    let mut names = Vec::with_capacity(files);
+    for i in 0..files {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        let name = format!("c{i:04}");
+        src.put(&name, data);
+        names.push(name);
+    }
+    let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+    let run = |concurrency: usize| -> f64 {
+        let eng = EngineConfig {
+            concurrency,
+            parallel: 1,
+            hash_workers: concurrency.max(2),
+            batch_threshold: 256 * 1024,
+            batch_bytes: 2 << 20,
+        };
+        let dst: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let (report, _receiver) = run_parallel_local_transfer(
+            &names,
+            Arc::new(src.clone()),
+            dst,
+            &cfg,
+            &eng,
+            &FaultPlan::none(),
+        )
+        .expect("real engine run");
+        assert_eq!(report.aggregate().bytes_sent, (files * size) as u64);
+        report.elapsed_secs
+    };
+    let t1 = run(1);
+    let t8 = run(8);
+    format!(
+        "\nreal mode (loopback, {files}x{}, MemStorage, fvr256):\n  \
+         concurrency 1: {}   concurrency 8: {}   ({:.2}x)\n",
+        fmt::bytes(size as u64),
+        fmt::secs(t1),
+        fmt::secs(t8),
+        t1 / t8
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_renders_all_rows() {
+        let out = concurrency_sweep();
+        assert!(out.contains("HPCLab-40G"));
+        assert!(out.contains("ESNet-WAN"));
+        assert!(out.contains("real mode"));
+        // One row per swept N per testbed.
+        for n in SWEEP {
+            assert!(out.lines().any(|l| l.trim_start().starts_with(&n.to_string())), "{n}");
+        }
+    }
+}

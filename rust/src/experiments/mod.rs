@@ -7,6 +7,7 @@
 //! `repro-experiments all`, etc.
 
 pub mod ablations;
+pub mod concurrency;
 pub mod faults_table;
 pub mod hash_fig;
 pub mod overheads;
@@ -86,6 +87,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
         "fig10" => hash_fig::fig10(),
         "table3" => faults_table::table3(),
         "ablations" => ablations::ablations(),
+        "concurrency" => concurrency::concurrency_sweep(),
         "all" => {
             let mut out = String::new();
             for n in ALL {
@@ -101,7 +103,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
 /// All experiment names in paper order.
 pub const ALL: &[&str] = &[
     "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
-    "ablations",
+    "ablations", "concurrency",
 ];
 
 #[cfg(test)]

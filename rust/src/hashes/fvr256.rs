@@ -68,7 +68,10 @@ impl Geometry {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.num_blocks.is_power_of_two(), "num_blocks must be a power of two");
-        anyhow::ensure!(self.words_per_block % LANES == 0, "words_per_block must be a multiple of 8");
+        anyhow::ensure!(
+            self.words_per_block % LANES == 0,
+            "words_per_block must be a multiple of 8"
+        );
         anyhow::ensure!(self.words_per_block > 0, "words_per_block must be positive");
         Ok(())
     }
@@ -150,7 +153,12 @@ pub fn chunk_digest_full(geo: Geometry, data: &[u8], chunk_index: u64) -> [u32; 
 
 /// Digest a full (padded) chunk given as words, binding the true byte
 /// length and stream position. `words.len()` must equal `geo.chunk_words()`.
-pub fn chunk_digest_words(geo: Geometry, words: &[u32], true_len: u64, chunk_index: u64) -> [u32; 8] {
+pub fn chunk_digest_words(
+    geo: Geometry,
+    words: &[u32],
+    true_len: u64,
+    chunk_index: u64,
+) -> [u32; 8] {
     assert_eq!(words.len(), geo.chunk_words(), "chunk word count mismatch");
     let w = geo.words_per_block;
     let mut digests: Vec<[u32; 8]> = (0..geo.num_blocks)
@@ -216,7 +224,13 @@ impl Default for Fvr256 {
 impl Fvr256 {
     pub fn new(geo: Geometry) -> Self {
         geo.validate().expect("invalid geometry");
-        Fvr256 { geo, buf: Vec::with_capacity(geo.chunk_bytes()), state: IV, chunk_index: 0, total: 0 }
+        Fvr256 {
+            geo,
+            buf: Vec::with_capacity(geo.chunk_bytes()),
+            state: IV,
+            chunk_index: 0,
+            total: 0,
+        }
     }
 
     pub fn geometry(&self) -> Geometry {

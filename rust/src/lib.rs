@@ -12,9 +12,16 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: [`coordinator`] implements
 //!   FIVER, FIVER-Hybrid and the three baseline algorithms over real sockets
-//!   and threads; [`sim`] re-runs the same scheduling policies inside a
-//!   discrete-event testbed model so the paper's 165 GB / 100 Gbps
-//!   experiments reproduce on a laptop.
+//!   and threads, scaled out by a **parallel transfer engine** — a
+//!   work-stealing file scheduler drives N concurrent sessions
+//!   (`--concurrency`), each optionally striping its data over P sockets
+//!   (`--parallel`), all feeding one shared hash worker pool per endpoint
+//!   ([`coordinator::scheduler`], [`coordinator::pool`]; small files
+//!   aggregate into batched work items so control exchanges amortize).
+//!   [`sim`] re-runs the same scheduling policies — including the engine,
+//!   via [`sim::algorithms::run_concurrent`] — inside a discrete-event
+//!   testbed model so the paper's 165 GB / 100 Gbps experiments (and
+//!   concurrency sweeps beyond them) reproduce on a laptop.
 //! * **Layer 3½ — Merkle verification** ([`merkle`]): a streaming digest
 //!   tree grown over the same shared-queue bytes FIVER already hashes
 //!   (zero extra file I/O). The `FiverMerkle` policy exchanges the O(1)

@@ -17,12 +17,28 @@
 //! verification with O(log n) corruption localization); `--leaf-size N`
 //! sets its repair granularity (default 64 KiB). Both endpoints must
 //! agree on the algorithm and leaf size.
+//!
+//! Parallel engine knobs (serve/send/local; both endpoints must agree on
+//! `--concurrency` and `--parallel`):
+//!
+//! * `--concurrency N` — N concurrent sessions fed by a work-stealing
+//!   file scheduler (GridFTP-style concurrency).
+//! * `--parallel P` — stripe each file's data over P sockets per session
+//!   (GridFTP-style parallelism).
+//! * `--hash-workers W` — shared hash pool size (default max(N, 2)).
+//! * `--batch-threshold B` / `--batch-bytes T` — files under B bytes
+//!   aggregate into work items of ~T bytes so small-file control
+//!   round-trips amortize.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
-use fiver::coordinator::session::{connect_and_send, run_local_transfer, ReceiverEndpoint};
+use fiver::coordinator::scheduler::EngineConfig;
+use fiver::coordinator::session::{
+    connect_and_send, connect_and_send_engine, run_local_transfer, run_parallel_local_transfer,
+    ReceiverEndpoint,
+};
 use fiver::coordinator::{native_factory, xla_factory, HasherFactory, RealAlgorithm, SessionConfig};
 use fiver::faults::FaultPlan;
 use fiver::hashes::HashAlgorithm;
@@ -62,10 +78,47 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     Ok(cfg)
 }
 
+/// Parallel-engine options (defaults are the classic single-session run).
+fn engine_config(args: &Args) -> EngineConfig {
+    let defaults = EngineConfig::default();
+    EngineConfig {
+        concurrency: args.opt_u64("concurrency", 1).max(1) as usize,
+        parallel: args.opt_u64("parallel", 1).max(1) as usize,
+        hash_workers: args.opt_u64("hash-workers", 0) as usize,
+        batch_threshold: args.opt_u64("batch-threshold", defaults.batch_threshold),
+        batch_bytes: args.opt_u64("batch-bytes", defaults.batch_bytes),
+    }
+}
+
+/// Does this invocation use the parallel engine (vs the classic
+/// single-session protocol without the Hello handshake)?
+fn uses_engine(eng: &EngineConfig) -> bool {
+    eng.concurrency > 1 || eng.parallel > 1
+}
+
+/// Engine-only tuning knobs do nothing on the classic path; warn instead
+/// of silently measuring a different configuration than requested. For
+/// `local` (where this process controls both endpoints) any engine flag
+/// promotes the run to the engine instead.
+fn engine_only_flags_given(args: &Args) -> bool {
+    ["hash-workers", "batch-threshold", "batch-bytes"]
+        .iter()
+        .any(|opt| args.opt(opt).is_some())
+}
+
+fn warn_unused_engine_flags(args: &Args) {
+    for opt in ["hash-workers", "batch-threshold", "batch-bytes"] {
+        if args.opt(opt).is_some() {
+            eprintln!("warning: --{opt} has no effect without --concurrency/--parallel > 1");
+        }
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "block-size", "queue-capacity",
-        "hybrid-threshold", "leaf-size", "files", "size", "faults", "seed",
+        "hybrid-threshold", "leaf-size", "files", "size", "faults", "seed", "concurrency",
+        "parallel", "hash-workers", "batch-threshold", "batch-bytes",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -83,7 +136,10 @@ fn main() -> Result<()> {
                     println!("{out}");
                     Ok(())
                 }
-                None => bail!("unknown experiment `{name}` (try: {})", fiver::experiments::ALL.join(", ")),
+                None => bail!(
+                    "unknown experiment `{name}` (try: {})",
+                    fiver::experiments::ALL.join(", ")
+                ),
             }
         }
         other => bail!("unknown subcommand `{other}`"),
@@ -92,6 +148,7 @@ fn main() -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
+    let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
     let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
     let endpoint = ReceiverEndpoint::bind(
@@ -99,8 +156,29 @@ fn serve(args: &Args) -> Result<()> {
         args.opt_or("ctrl", "0.0.0.0:7002"),
     )?;
     let (d, c) = endpoint.addrs()?;
-    eprintln!("fiver receiver: data={d} ctrl={c} alg={}", cfg.algorithm.name());
-    let report = endpoint.serve_one(storage, &cfg)?;
+    eprintln!(
+        "fiver receiver: data={d} ctrl={c} alg={} concurrency={} parallel={}",
+        cfg.algorithm.name(),
+        eng.concurrency,
+        eng.parallel,
+    );
+    let report = if uses_engine(&eng) {
+        let mut total = fiver::coordinator::receiver::ReceiverReport::default();
+        for (i, r) in endpoint.serve_engine(storage, &cfg, &eng)?.iter().enumerate() {
+            println!(
+                "session {i}: {} files / {} ({} units verified, {} failures)",
+                r.files_received,
+                fmt::bytes(r.bytes_received),
+                r.units_verified,
+                r.units_failed,
+            );
+            total.merge(r);
+        }
+        total
+    } else {
+        warn_unused_engine_flags(args);
+        endpoint.serve_one(storage, &cfg)?
+    };
     println!(
         "received {} files / {} ({} units verified, {} failures, {} repaired)",
         report.files_received,
@@ -114,51 +192,76 @@ fn serve(args: &Args) -> Result<()> {
 
 fn send(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
+    let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
     let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
     let files: Vec<String> = args.positional[1..].to_vec();
     anyhow::ensure!(!files.is_empty(), "no files given");
-    let report = connect_and_send(
-        args.opt_or("data", "127.0.0.1:7001"),
-        args.opt_or("ctrl", "127.0.0.1:7002"),
-        &files,
-        storage,
-        &cfg,
-        &FaultPlan::none(),
-    )?;
-    print_report(&report);
+    let data_addr = args.opt_or("data", "127.0.0.1:7001");
+    let ctrl_addr = args.opt_or("ctrl", "127.0.0.1:7002");
+    if uses_engine(&eng) {
+        let engine_report = connect_and_send_engine(
+            data_addr,
+            ctrl_addr,
+            &files,
+            storage,
+            &cfg,
+            &eng,
+            &FaultPlan::none(),
+        )?;
+        print_engine_report(&engine_report);
+    } else {
+        warn_unused_engine_flags(args);
+        let report =
+            connect_and_send(data_addr, ctrl_addr, &files, storage, &cfg, &FaultPlan::none())?;
+        print_report(&report);
+    }
     Ok(())
 }
 
 fn local(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
+    let eng = engine_config(args);
     let count = args.opt_u64("files", 8) as usize;
     let size = args.opt_u64("size", 16 << 20);
     let fault_count = args.opt_u64("faults", 0) as usize;
     let seed = args.opt_u64("seed", 42);
 
-    let base = std::env::temp_dir().join(format!("fiver-local-{}", std::process::id()));
+    let base = fiver::util::tmpdir::TempDir::create("fiver-local")?;
     let ds = Dataset::uniform("demo", size, count);
     eprintln!(
         "materializing {} x {} under {} ...",
         count,
         fmt::bytes(size),
-        base.display()
+        base.path().display()
     );
     ds.materialize(&base.join("src"), seed)?;
     let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src"))?);
     let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst"))?);
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
     let faults = FaultPlan::random(&ds, fault_count, seed);
-    let (report, r) = run_local_transfer(&names, src, dst, &cfg, &faults)?;
-    print_report(&report);
-    println!(
-        "receiver: {} units verified, {} failed, {} repaired",
-        r.units_verified,
-        r.units_failed,
-        fmt::bytes(r.bytes_repaired)
-    );
-    std::fs::remove_dir_all(&base).ok();
+    if uses_engine(&eng) || engine_only_flags_given(args) {
+        let (engine_report, rreports) =
+            run_parallel_local_transfer(&names, src, dst, &cfg, &eng, &faults)?;
+        print_engine_report(&engine_report);
+        for (i, r) in rreports.iter().enumerate() {
+            println!(
+                "receiver session {i}: {} units verified, {} failed, {} repaired",
+                r.units_verified,
+                r.units_failed,
+                fmt::bytes(r.bytes_repaired)
+            );
+        }
+    } else {
+        let (report, r) = run_local_transfer(&names, src, dst, &cfg, &faults)?;
+        print_report(&report);
+        println!(
+            "receiver: {} units verified, {} failed, {} repaired",
+            r.units_verified,
+            r.units_failed,
+            fmt::bytes(r.bytes_repaired)
+        );
+    }
     Ok(())
 }
 
@@ -171,6 +274,22 @@ fn hash_cmd(args: &Args) -> Result<()> {
         println!("{}  {}", fiver::util::hex::encode(&h.finalize()), path);
     }
     Ok(())
+}
+
+fn print_engine_report(e: &fiver::coordinator::scheduler::EngineReport) {
+    for (i, r) in e.per_session.iter().enumerate() {
+        println!(
+            "session {i}: {} files, {} in {} ({} failures, {} resent)",
+            r.files,
+            fmt::bytes(r.bytes_sent),
+            fmt::secs(r.elapsed_secs),
+            r.failures_detected,
+            fmt::bytes(r.bytes_resent),
+        );
+    }
+    // Aggregate throughput is computed over the engine wall-clock
+    // (EngineReport::aggregate carries it into elapsed_secs).
+    print_report(&e.aggregate());
 }
 
 fn print_report(r: &fiver::coordinator::TransferReport) {

@@ -122,6 +122,32 @@ impl HitTrace {
     }
 }
 
+/// Per-session accounting for a parallel engine run (real or simulated):
+/// what one concurrency slot moved and how long it was occupied.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    pub session: usize,
+    /// Files this session transferred (work-stealing makes this uneven by
+    /// design — slow sessions shed work).
+    pub files: usize,
+    /// Payload bytes this session streamed.
+    pub bytes: u64,
+    /// Virtual/wall seconds the session had a flow (or repair exchange)
+    /// in flight.
+    pub busy_secs: f64,
+}
+
+impl SessionStats {
+    /// Fraction of the run this session was busy.
+    pub fn utilization(&self, total_secs: f64) -> f64 {
+        if total_secs <= 0.0 {
+            0.0
+        } else {
+            (self.busy_secs / total_secs).min(1.0)
+        }
+    }
+}
+
 /// Summary of one simulated or real run of an algorithm over a dataset.
 #[derive(Debug, Clone, Default)]
 pub struct RunSummary {
@@ -150,6 +176,10 @@ pub struct RunSummary {
     /// Control-channel round trips spent on verification (digest/root
     /// exchanges plus Merkle node-range query rounds).
     pub verify_rtts: u64,
+    /// Concurrent sessions used (1 for the serial drivers).
+    pub concurrency: usize,
+    /// Per-session accounting (empty for the serial drivers).
+    pub per_session: Vec<SessionStats>,
 }
 
 impl RunSummary {
@@ -214,6 +244,14 @@ mod tests {
             .fold((0u64, 0u64), |(ah, am), &(h, m)| (ah + h, am + m));
         assert_eq!(h, 1000003);
         assert_eq!(m, 999999);
+    }
+
+    #[test]
+    fn session_utilization_bounds() {
+        let s = SessionStats { session: 0, files: 3, bytes: 100, busy_secs: 5.0 };
+        assert!((s.utilization(10.0) - 0.5).abs() < 1e-9);
+        assert_eq!(s.utilization(0.0), 0.0);
+        assert_eq!(s.utilization(1.0), 1.0, "clamped");
     }
 
     #[test]

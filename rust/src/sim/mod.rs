@@ -216,7 +216,9 @@ impl FluidSim {
                 }
                 let capped = f.cap.map(|c| lambda_cur >= c - 1e-12).unwrap_or(false);
                 let saturated = f.uses.iter().any(|&(r, w)| {
-                    w > 0.0 && avail[r.0].is_finite() && avail[r.0] <= 1e-9 * self.resources[r.0].capacity
+                    w > 0.0
+                        && avail[r.0].is_finite()
+                        && avail[r.0] <= 1e-9 * self.resources[r.0].capacity
                 });
                 if capped || saturated {
                     newly_frozen.push(i);

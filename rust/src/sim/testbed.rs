@@ -33,10 +33,14 @@ pub struct Res {
     pub dst_hash: ResourceId,
 }
 
-/// A simulated testbed session.
+/// A simulated testbed session set: one TCP connection and transfer
+/// station per session (the engine's GridFTP-style concurrency), one
+/// shared resource set. The single-session constructors/methods are the
+/// classic serial drivers' API; `*_on` variants address a session.
 pub struct SimEnv {
     pub sim: FluidSim,
-    pub tcp: TcpConn,
+    /// One connection envelope per session.
+    pub tcps: Vec<TcpConn>,
     pub src_cache: PageCache,
     pub dst_cache: PageCache,
     pub tb: Testbed,
@@ -44,9 +48,10 @@ pub struct SimEnv {
     pub res: Res,
     pub src_trace: HitTrace,
     pub dst_trace: HitTrace,
-    /// Currently active network transfer flow (at most one at a time — the
-    /// transfer station); drives TCP cap management in [`pump_step`].
-    active_transfer: Option<FlowId>,
+    /// Currently active network transfer flow per session (at most one at
+    /// a time per session — the station discipline); drives TCP cap
+    /// management in [`SimEnv::pump_step`].
+    active: Vec<Option<FlowId>>,
     /// (flow, side, hit_bytes, miss_bytes, t_start): recorded into the
     /// hit trace when the flow completes.
     pending_traces: Vec<(FlowId, Side, u64, u64, f64)>,
@@ -54,6 +59,21 @@ pub struct SimEnv {
 
 impl SimEnv {
     pub fn new(tb: Testbed, params: AlgoParams) -> SimEnv {
+        Self::new_parallel(tb, params, 1, 1)
+    }
+
+    /// A testbed with `sessions` concurrent transfer stations and a hash
+    /// pool of `hash_workers` cores per host (capacity scales linearly —
+    /// the shared-pool model of the real engine's
+    /// [`crate::coordinator::pool::HashPool`]).
+    pub fn new_parallel(
+        tb: Testbed,
+        params: AlgoParams,
+        sessions: usize,
+        hash_workers: usize,
+    ) -> SimEnv {
+        let n = sessions.max(1);
+        let w = hash_workers.max(1) as f64;
         let mut sim = FluidSim::new();
         let res = Res {
             src_disk: sim.add_resource("src_disk", tb.src.disk_read),
@@ -61,12 +81,12 @@ impl SimEnv {
             net: sim.add_resource("net", tb.bandwidth),
             src_mem: sim.add_resource("src_mem", tb.src.mem_read),
             dst_mem: sim.add_resource("dst_mem", tb.dst.mem_read),
-            src_hash: sim.add_resource("src_hash", tb.src.hash_rate(params.hash)),
-            dst_hash: sim.add_resource("dst_hash", tb.dst.hash_rate(params.hash)),
+            src_hash: sim.add_resource("src_hash", tb.src.hash_rate(params.hash) * w),
+            dst_hash: sim.add_resource("dst_hash", tb.dst.hash_rate(params.hash) * w),
         };
         SimEnv {
             sim,
-            tcp: TcpConn::new(tb.tcp_params()),
+            tcps: (0..n).map(|_| TcpConn::new(tb.tcp_params())).collect(),
             src_cache: PageCache::new(tb.src.free_mem),
             dst_cache: PageCache::new(tb.dst.free_mem),
             tb,
@@ -74,9 +94,19 @@ impl SimEnv {
             res,
             src_trace: HitTrace::new(1.0),
             dst_trace: HitTrace::new(1.0),
-            active_transfer: None,
+            active: vec![None; n],
             pending_traces: Vec::new(),
         }
+    }
+
+    /// Number of concurrent sessions.
+    pub fn sessions(&self) -> usize {
+        self.tcps.len()
+    }
+
+    /// Total TCP slow-start restarts across all sessions.
+    pub fn restarts(&self) -> u64 {
+        self.tcps.iter().map(|t| t.restarts).sum()
     }
 
     pub fn now(&self) -> f64 {
@@ -130,20 +160,33 @@ impl SimEnv {
         }
     }
 
-    /// Start a network transfer of `[offset, offset+len)` of `file`:
-    /// reads at the source (disk or cache depending on residency), crosses
-    /// the network under the TCP envelope, writes at the destination.
-    /// Accounts source-side cache reads and destination-side cache writes,
-    /// and records the source trace on completion.
+    /// Start a network transfer of `[offset, offset+len)` of `file` on
+    /// session 0: reads at the source (disk or cache depending on
+    /// residency), crosses the network under the TCP envelope, writes at
+    /// the destination. Accounts source-side cache reads and
+    /// destination-side cache writes, and records the source trace on
+    /// completion.
     pub fn start_transfer(&mut self, file: &FileSpec, offset: u64, len: u64) -> FlowId {
-        assert!(self.active_transfer.is_none(), "one transfer at a time (station discipline)");
+        self.start_transfer_on(0, file, offset, len)
+    }
+
+    /// [`SimEnv::start_transfer`] on an explicit session.
+    pub fn start_transfer_on(
+        &mut self,
+        session: usize,
+        file: &FileSpec,
+        offset: u64,
+        len: u64,
+    ) -> FlowId {
+        assert!(self.active[session].is_none(), "one transfer at a time (station discipline)");
         let now = self.now();
-        self.tcp.on_active(now);
+        self.tcps[session].on_active(now);
         let (hits, misses) = self.cache_read(Side::Src, file, offset, len);
         self.cache_write(Side::Dst, file, offset, len);
         let miss_frac = if len == 0 { 0.0 } else { misses as f64 / len as f64 };
         let hit_frac = 1.0 - miss_frac;
         let w_write = self.write_weight();
+        let cap = self.tcps[session].rate();
         let flow = self.sim.start_flow(
             len as f64,
             vec![
@@ -152,9 +195,14 @@ impl SimEnv {
                 (self.res.net, 1.0),
                 (self.res.dst_disk, w_write),
             ],
-            Some(self.tcp.rate()),
+            Some(cap),
         );
-        self.active_transfer = Some(flow);
+        // Zero-byte flows are done at birth: nothing for the TCP envelope
+        // to pace, so don't occupy the station (it is only released by
+        // pump_step, which callers may never reach for such flows).
+        if !self.sim.is_done(flow) {
+            self.active[session] = Some(flow);
+        }
         self.pending_traces.push((flow, Side::Src, hits, misses, now));
         flow
     }
@@ -192,18 +240,30 @@ impl SimEnv {
         flow
     }
 
-    /// Start a FIVER coupled flow: one read feeds the socket and both
-    /// hash threads through the bounded queue, so the rate is the min of
-    /// every stage (Algorithm 1 & 2's back-pressure). Checksum bytes are
-    /// traced as pure hits on both sides.
+    /// Start a FIVER coupled flow on session 0: one read feeds the socket
+    /// and both hash threads through the bounded queue, so the rate is
+    /// the min of every stage (Algorithm 1 & 2's back-pressure). Checksum
+    /// bytes are traced as pure hits on both sides.
     pub fn start_fiver_flow(&mut self, file: &FileSpec, offset: u64, len: u64) -> FlowId {
-        assert!(self.active_transfer.is_none(), "one transfer at a time");
+        self.start_fiver_flow_on(0, file, offset, len)
+    }
+
+    /// [`SimEnv::start_fiver_flow`] on an explicit session.
+    pub fn start_fiver_flow_on(
+        &mut self,
+        session: usize,
+        file: &FileSpec,
+        offset: u64,
+        len: u64,
+    ) -> FlowId {
+        assert!(self.active[session].is_none(), "one transfer at a time");
         let now = self.now();
-        self.tcp.on_active(now);
+        self.tcps[session].on_active(now);
         let (hits, misses) = self.cache_read(Side::Src, file, offset, len);
         self.cache_write(Side::Dst, file, offset, len);
         let miss_frac = if len == 0 { 0.0 } else { misses as f64 / len as f64 };
         let w_write = self.write_weight();
+        let cap = self.tcps[session].rate();
         let flow = self.sim.start_flow(
             len as f64,
             vec![
@@ -214,9 +274,13 @@ impl SimEnv {
                 (self.res.src_hash, 1.0),
                 (self.res.dst_hash, 1.0),
             ],
-            Some(self.tcp.rate()),
+            Some(cap),
         );
-        self.active_transfer = Some(flow);
+        // See start_transfer_on: a done-at-birth flow must not hold the
+        // station, or the next start on this session would assert.
+        if !self.sim.is_done(flow) {
+            self.active[session] = Some(flow);
+        }
         // Source trace: the single shared read; checksum I/O on both sides
         // is served from the queue (pure hits).
         self.pending_traces.push((flow, Side::Src, hits + len, misses, now));
@@ -229,23 +293,29 @@ impl SimEnv {
         self.sim.start_flow(secs.max(0.0), vec![], Some(1.0))
     }
 
-    /// One engine step with TCP envelope management. Returns completed flows.
+    /// One engine step with TCP envelope management across every active
+    /// session. Returns completed flows.
     pub fn pump_step(&mut self) -> Vec<FlowId> {
         let before = self.now();
-        let (max_dt, transfer) = match self.active_transfer {
-            Some(f) => {
-                self.sim.set_cap(f, Some(self.tcp.rate()));
-                (self.tcp.next_rate_change().unwrap_or(f64::INFINITY), Some(f))
+        let mut max_dt = f64::INFINITY;
+        for s in 0..self.active.len() {
+            if let Some(f) = self.active[s] {
+                let rate = self.tcps[s].rate();
+                self.sim.set_cap(f, Some(rate));
+                if let Some(dt) = self.tcps[s].next_rate_change() {
+                    max_dt = max_dt.min(dt);
+                }
             }
-            None => (f64::INFINITY, None),
-        };
+        }
         let step = self.sim.step(if max_dt.is_finite() { max_dt } else { 1e18 });
         let now = self.now();
-        if let Some(f) = transfer {
-            self.tcp.advance(before, now);
-            if self.sim.is_done(f) {
-                self.active_transfer = None;
-                self.tcp.on_idle_start(now);
+        for s in 0..self.active.len() {
+            if let Some(f) = self.active[s] {
+                self.tcps[s].advance(before, now);
+                if self.sim.is_done(f) {
+                    self.active[s] = None;
+                    self.tcps[s].on_idle_start(now);
+                }
             }
         }
         // Flush finished trace records.
@@ -285,7 +355,7 @@ impl SimEnv {
     }
 
     pub fn transfer_active(&self) -> bool {
-        self.active_transfer.is_some()
+        self.active.iter().any(|a| a.is_some())
     }
 }
 
@@ -377,6 +447,33 @@ mod tests {
         e.pump_until(ck);
         assert_eq!(e.dst_trace.total_misses(), 0);
         assert!(e.dst_trace.average() >= 1.0);
+    }
+
+    #[test]
+    fn two_sessions_double_throughput_with_pooled_hash() {
+        // Engine model: two concurrent FIVER flows with a 2-worker hash
+        // pool each run at the single-core hash rate (3 Gbps on
+        // HPCLab-40G), so both 10 GB files finish in the time one file
+        // took serially — aggregate throughput doubles.
+        let mut e = SimEnv::new_parallel(Testbed::hpclab_40g(), AlgoParams::default(), 2, 2);
+        let fa = file(0, 10 * GB);
+        let fb = file(1, 10 * GB);
+        let a = e.start_fiver_flow_on(0, &fa, 0, fa.size);
+        let b = e.start_fiver_flow_on(1, &fb, 0, fb.size);
+        let mut guard = 0;
+        while !e.sim.is_done(a) || !e.sim.is_done(b) {
+            e.pump_step();
+            guard += 1;
+            assert!(guard < 1_000_000, "runaway");
+        }
+        let expect = (10 * GB) as f64 / gbps(3.0);
+        let got = e.now();
+        assert!(
+            (got - expect).abs() / expect < 0.12,
+            "two pooled sessions: expect ~{expect:.1}s, got {got:.1}s"
+        );
+        assert_eq!(e.sessions(), 2);
+        assert!(!e.transfer_active());
     }
 
     #[test]

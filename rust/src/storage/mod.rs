@@ -270,7 +270,7 @@ mod tests {
 
     #[test]
     fn fs_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("fiver-storage-{}", std::process::id()));
+        let dir = crate::util::tmpdir::unique_dir("fiver-storage");
         let s = FsStorage::new(&dir).unwrap();
         roundtrip(&s);
         std::fs::remove_dir_all(&dir).unwrap();

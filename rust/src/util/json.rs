@@ -237,7 +237,9 @@ impl<'a> Parser<'a> {
                         _ => 4,
                     };
                     let end = (start + len).min(self.bytes.len());
-                    s.push_str(std::str::from_utf8(&self.bytes[start..end]).map_err(|_| self.err("bad utf8"))?);
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    s.push_str(chunk);
                     self.pos = end;
                 }
             }

@@ -5,10 +5,12 @@
 //! artifact manifest and cross-language test vectors ([`json`]), a
 //! deterministic PRNG for workload generation and property tests ([`rng`]),
 //! hex encoding ([`hex`]), human-readable byte/time formatting ([`fmt`]),
-//! and a tiny CLI argument parser ([`cli`]).
+//! a tiny CLI argument parser ([`cli`]), and collision-free scratch
+//! directories for parallel tests ([`tmpdir`]).
 
 pub mod cli;
 pub mod fmt;
 pub mod hex;
 pub mod json;
 pub mod rng;
+pub mod tmpdir;

@@ -1,0 +1,76 @@
+//! Unique scratch directories for tests, examples and the CLI demo.
+//!
+//! `cargo test` runs test functions in parallel threads and test binaries
+//! in parallel processes; a directory keyed on the process id alone can
+//! collide across threads of one binary, and a fixed name collides across
+//! runs that did not clean up. Keying on (pid, per-process counter,
+//! subsecond clock) makes every call unique with default test
+//! parallelism.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique (not yet created) path under the system temp directory.
+pub fn unique_dir(prefix: &str) -> PathBuf {
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    std::env::temp_dir().join(format!("{prefix}-{}-{n}-{nanos:x}", std::process::id()))
+}
+
+/// A scratch directory that removes itself (best-effort) on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh unique directory.
+    pub fn create(prefix: &str) -> std::io::Result<TempDir> {
+        let path = unique_dir(prefix);
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// A path inside the directory.
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.path).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_across_calls() {
+        let a = unique_dir("fiver-x");
+        let b = unique_dir("fiver-x");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tempdir_cleans_up() {
+        let kept;
+        {
+            let d = TempDir::create("fiver-td").unwrap();
+            kept = d.path().to_path_buf();
+            std::fs::write(d.join("f"), b"x").unwrap();
+            assert!(kept.exists());
+        }
+        assert!(!kept.exists(), "dropped TempDir removes its tree");
+    }
+}

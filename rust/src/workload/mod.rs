@@ -133,6 +133,12 @@ impl Dataset {
         Dataset { name: "Table3-15files".to_string(), files }
     }
 
+    /// Aggregation plan for the parallel engine: see [`plan_batches`].
+    pub fn batches(&self, batch_threshold: u64, batch_bytes: u64) -> Vec<Vec<usize>> {
+        let sizes: Vec<u64> = self.files.iter().map(|f| f.size).collect();
+        plan_batches(&sizes, batch_threshold, batch_bytes)
+    }
+
     /// Materialize the dataset as real files under `dir`, with
     /// deterministic pseudo-random content (seeded per file id).
     /// Returns the created paths in dataset order.
@@ -159,9 +165,77 @@ impl Dataset {
     }
 }
 
+/// Tar-like aggregation for the parallel engine's scheduler: files smaller
+/// than `batch_threshold` are grouped (in dataset order) into batches of up
+/// to `batch_bytes` payload, so one session drains a whole batch
+/// back-to-back and the per-file control round trips amortize; larger
+/// files are singleton work items. Both the real-mode scheduler
+/// ([`crate::coordinator::scheduler`]) and the simulated engine
+/// ([`crate::sim::algorithms::run_concurrent`]) plan with this function,
+/// so sim and real replay the same schedule.
+///
+/// A `batch_threshold` of 0 disables aggregation (every file is its own
+/// work item). Every returned batch is non-empty and the items cover all
+/// file indices exactly once, in order.
+pub fn plan_batches(sizes: &[u64], batch_threshold: u64, batch_bytes: u64) -> Vec<Vec<usize>> {
+    let mut items: Vec<Vec<usize>> = Vec::new();
+    let mut batch: Vec<usize> = Vec::new();
+    let mut batch_total = 0u64;
+    for (i, &size) in sizes.iter().enumerate() {
+        if size < batch_threshold {
+            batch.push(i);
+            batch_total += size;
+            if batch_total >= batch_bytes {
+                items.push(std::mem::take(&mut batch));
+                batch_total = 0;
+            }
+        } else {
+            items.push(vec![i]);
+        }
+    }
+    if !batch.is_empty() {
+        items.push(batch);
+    }
+    items
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn plan_batches_covers_all_files_once_in_order() {
+        let sizes = [10, 10, 5_000, 10, 10, 10, 9_999, 10];
+        let items = plan_batches(&sizes, 1_000, 25);
+        let flat: Vec<usize> = items.iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..sizes.len()).collect::<Vec<_>>());
+        assert!(items.iter().all(|it| !it.is_empty()));
+        // Large files are singletons; small files keep batching across
+        // them until the batch reaches batch_bytes.
+        assert!(items.contains(&vec![2]));
+        assert!(items.contains(&vec![6]));
+        assert!(items.contains(&vec![0, 1, 3]), "{items:?}");
+        assert!(items.contains(&vec![4, 5, 7]), "{items:?}");
+    }
+
+    #[test]
+    fn plan_batches_threshold_zero_disables_aggregation() {
+        let sizes = [1u64, 2, 3];
+        let items = plan_batches(&sizes, 0, 1 << 20);
+        assert_eq!(items, vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn plan_batches_seals_at_batch_bytes() {
+        let sizes = [10u64; 10];
+        let items = plan_batches(&sizes, 100, 30);
+        // 10+10+10 = 30 >= 30 seals each batch at three files.
+        assert_eq!(items.len(), 4);
+        assert_eq!(items[0], vec![0, 1, 2]);
+        assert_eq!(items[3], vec![9]);
+    }
 
     #[test]
     fn uniform_shape() {
@@ -215,7 +289,7 @@ mod tests {
 
     #[test]
     fn materialize_writes_expected_sizes() {
-        let dir = std::env::temp_dir().join(format!("fiver-wl-test-{}", std::process::id()));
+        let dir = crate::util::tmpdir::unique_dir("fiver-wl-test");
         let d = Dataset::uniform("tiny", 10_000, 3);
         let paths = d.materialize(&dir, 7).unwrap();
         assert_eq!(paths.len(), 3);

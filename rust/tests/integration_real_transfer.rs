@@ -73,7 +73,8 @@ fn transfer_and_check(
 fn clean_transfer_all_algorithms() {
     let sizes = [300_000usize, 1_500_000, 70_000, 0, 999_999];
     for alg in all_algorithms() {
-        let (report, rreport) = transfer_and_check(alg, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+        let (report, rreport) =
+            transfer_and_check(alg, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
         assert_eq!(report.files, sizes.len(), "{}", alg.name());
         assert_eq!(report.failures_detected, 0, "{}", alg.name());
         assert_eq!(report.bytes_resent, 0, "{}", alg.name());
@@ -85,8 +86,12 @@ fn clean_transfer_all_algorithms() {
 #[test]
 fn transfer_only_skips_verification() {
     let sizes = [100_000usize, 50_000];
-    let (report, rreport) =
-        transfer_and_check(RealAlgorithm::TransferOnly, &sizes, &FaultPlan::none(), HashAlgorithm::Md5);
+    let (report, rreport) = transfer_and_check(
+        RealAlgorithm::TransferOnly,
+        &sizes,
+        &FaultPlan::none(),
+        HashAlgorithm::Md5,
+    );
     assert_eq!(report.failures_detected, 0);
     assert_eq!(rreport.units_verified, 0, "transfer-only must not verify");
 }
@@ -121,7 +126,8 @@ fn corruption_detected_and_repaired_every_algorithm() {
 fn chunk_recovery_resends_less_than_file_recovery() {
     let sizes = [4_000_000usize];
     let faults = FaultPlan::at(0, 1_000_000, 5);
-    let (file_rep, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &faults, HashAlgorithm::Fvr256);
+    let (file_rep, _) =
+        transfer_and_check(RealAlgorithm::Fiver, &sizes, &faults, HashAlgorithm::Fvr256);
     let (chunk_rep, _) =
         transfer_and_check(RealAlgorithm::FiverChunk, &sizes, &faults, HashAlgorithm::Fvr256);
     assert_eq!(file_rep.bytes_resent, 4_000_000, "file-level resends everything");
@@ -205,8 +211,12 @@ fn merkle_repair_cost_is_leaf_local_for_all_hashes() {
 #[test]
 fn merkle_clean_run_is_one_rtt_per_file() {
     let sizes = [300_000usize, 0, 1_234_567];
-    let (report, rreport) =
-        transfer_and_check(RealAlgorithm::FiverMerkle, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+    let (report, rreport) = transfer_and_check(
+        RealAlgorithm::FiverMerkle,
+        &sizes,
+        &FaultPlan::none(),
+        HashAlgorithm::Fvr256,
+    );
     assert_eq!(report.failures_detected, 0);
     assert_eq!(report.bytes_resent, 0);
     assert_eq!(report.bytes_reread, 0);
@@ -219,7 +229,8 @@ fn merkle_clean_run_is_one_rtt_per_file() {
 fn works_with_every_hash_algorithm() {
     let sizes = [200_000usize, 123_457];
     for hash in HashAlgorithm::ALL {
-        let (report, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), hash);
+        let (report, _) =
+            transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), hash);
         assert_eq!(report.failures_detected, 0, "{}", hash.name());
     }
 }
@@ -227,8 +238,9 @@ fn works_with_every_hash_algorithm() {
 #[test]
 fn fs_storage_end_to_end() {
     use fiver::storage::FsStorage;
+    use fiver::util::tmpdir::TempDir;
     use fiver::workload::Dataset;
-    let base = std::env::temp_dir().join(format!("fiver-it-fs-{}", std::process::id()));
+    let base = TempDir::create("fiver-it-fs").unwrap();
     let ds = Dataset::uniform("it", 3 << 20, 4);
     ds.materialize(&base.join("src"), 11).unwrap();
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
@@ -243,7 +255,42 @@ fn fs_storage_end_to_end() {
         let b = std::fs::read(base.join("dst").join(&f.name)).unwrap();
         assert_eq!(a, b, "{}", f.name);
     }
-    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The engine over real files: concurrency + striping against FsStorage
+/// in a unique scratch dir (safe under default test parallelism).
+#[test]
+fn fs_storage_engine_end_to_end() {
+    use fiver::coordinator::scheduler::EngineConfig;
+    use fiver::coordinator::session::run_parallel_local_transfer;
+    use fiver::storage::FsStorage;
+    use fiver::util::tmpdir::TempDir;
+    use fiver::workload::Dataset;
+    let base = TempDir::create("fiver-it-fse").unwrap();
+    let ds = Dataset::uniform("ite", 1 << 20, 9);
+    ds.materialize(&base.join("src"), 13).unwrap();
+    let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
+    let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src")).unwrap());
+    let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst")).unwrap());
+    let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+    let eng = EngineConfig {
+        concurrency: 3,
+        parallel: 2,
+        hash_workers: 3,
+        batch_threshold: 0,
+        batch_bytes: 1,
+    };
+    let (report, rreports) =
+        run_parallel_local_transfer(&names, src, dst, &cfg, &eng, &FaultPlan::none()).unwrap();
+    let total = report.aggregate();
+    assert_eq!(total.files, 9);
+    assert_eq!(total.bytes_sent, 9 << 20);
+    assert_eq!(rreports.iter().map(|r| r.files_received).sum::<usize>(), 9);
+    for f in &ds.files {
+        let a = std::fs::read(base.join("src").join(&f.name)).unwrap();
+        let b = std::fs::read(base.join("dst").join(&f.name)).unwrap();
+        assert_eq!(a, b, "{}", f.name);
+    }
 }
 
 #[test]
@@ -251,8 +298,12 @@ fn hybrid_mixes_paths_by_size() {
     // Small files (queue path) + one large file (sequential path) in one
     // session.
     let sizes = [100_000usize, 5_000_000, 80_000];
-    let (report, rreport) =
-        transfer_and_check(RealAlgorithm::FiverHybrid, &sizes, &FaultPlan::none(), HashAlgorithm::Fvr256);
+    let (report, rreport) = transfer_and_check(
+        RealAlgorithm::FiverHybrid,
+        &sizes,
+        &FaultPlan::none(),
+        HashAlgorithm::Fvr256,
+    );
     assert_eq!(report.files, 3);
     assert_eq!(rreport.units_verified, 3);
 }
@@ -261,6 +312,7 @@ fn hybrid_mixes_paths_by_size() {
 fn large_single_stream_through_small_queue() {
     // Queue capacity (512 KiB) far below file size: back-pressure path.
     let sizes = [6_000_000usize];
-    let (report, _) = transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), HashAlgorithm::Sha256);
+    let (report, _) =
+        transfer_and_check(RealAlgorithm::Fiver, &sizes, &FaultPlan::none(), HashAlgorithm::Sha256);
     assert_eq!(report.bytes_sent, 6_000_000);
 }

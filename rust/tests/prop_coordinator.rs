@@ -295,9 +295,21 @@ fn prop_protocol_roundtrip() {
                 attempt: rng.below(5),
                 name: format!("n{}", rng.next_u32()),
             },
-            Frame::Data { file_idx: rng.next_u32(), offset: rng.next_u64(), payload: payload.clone() },
-            Frame::Digest { file_idx: rng.next_u32(), unit: rng.next_u64(), digest: payload.clone() },
-            Frame::Verdict { file_idx: rng.next_u32(), unit: rng.next_u64(), ok: rng.below(2) == 1 },
+            Frame::Data {
+                file_idx: rng.next_u32(),
+                offset: rng.next_u64(),
+                payload: payload.clone(),
+            },
+            Frame::Digest {
+                file_idx: rng.next_u32(),
+                unit: rng.next_u64(),
+                digest: payload.clone(),
+            },
+            Frame::Verdict {
+                file_idx: rng.next_u32(),
+                unit: rng.next_u64(),
+                ok: rng.below(2) == 1,
+            },
             Frame::Fix { file_idx: rng.next_u32(), offset: rng.next_u64(), payload },
             Frame::Done,
         ];
