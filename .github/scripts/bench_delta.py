@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Warn-only perf-delta table for the bench-smoke CI job.
+
+Downloads the bench-results.json artifact from the previous successful run
+of this workflow on main (via the `gh` CLI baked into GitHub runners),
+joins it with the current run's results by bench name, and renders a
+markdown delta table into the job summary. Never fails the job: any error
+degrades to a note in the summary.
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def read_results(path):
+    """bench-results.json is one JSON object per line."""
+    results = {}
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            name = obj.get("name")
+            if name:
+                results[name] = obj
+    return results
+
+
+def previous_results(repo, workflow, artifact):
+    """Fetch the artifact from the last successful main run, or None."""
+    runs = json.loads(
+        subprocess.check_output(
+            [
+                "gh", "run", "list",
+                "--repo", repo,
+                "--workflow", workflow,
+                "--branch", "main",
+                "--status", "success",
+                "--limit", "10",
+                "--json", "databaseId",
+            ],
+            text=True,
+        )
+    )
+    current = os.environ.get("GITHUB_RUN_ID")
+    for run in runs:
+        run_id = str(run["databaseId"])
+        if run_id == current:
+            continue
+        with tempfile.TemporaryDirectory() as tmp:
+            try:
+                subprocess.check_call(
+                    [
+                        "gh", "run", "download", run_id,
+                        "--repo", repo,
+                        "--name", artifact,
+                        "--dir", tmp,
+                    ],
+                    stdout=subprocess.DEVNULL,
+                    stderr=subprocess.DEVNULL,
+                )
+            except subprocess.CalledProcessError:
+                continue  # run without the artifact (e.g. older layout)
+            path = os.path.join(tmp, "bench-results.json")
+            if os.path.exists(path):
+                return run_id, read_results(path)
+    return None, None
+
+
+def metric_of(obj):
+    """(value, unit, higher_is_better) for one bench result."""
+    if "gbps" in obj:
+        return obj["gbps"], "Gbps", True
+    if "ops_per_sec" in obj:
+        return obj["ops_per_sec"], "ops/s", True
+    return obj.get("median_secs", 0.0) * 1e3, "ms", False
+
+
+def fmt_val(v, unit):
+    if unit == "ops/s" and v >= 1000:
+        return f"{v:,.0f} {unit}"
+    return f"{v:.3f} {unit}" if v < 100 else f"{v:.1f} {unit}"
+
+
+def render(current, previous, prev_run):
+    lines = [
+        "### Bench delta vs previous main run"
+        + (f" (run {prev_run})" if prev_run else ""),
+        "",
+        "_Warn-only: trends, not gates. Smoke-mode numbers are noisy._",
+        "",
+        "| bench | previous | current | delta |",
+        "|---|---:|---:|---:|",
+    ]
+    for name in sorted(current):
+        cur_v, unit, higher = metric_of(current[name])
+        prev = previous.get(name) if previous else None
+        if prev is None:
+            lines.append(f"| `{name}` | — | {fmt_val(cur_v, unit)} | new |")
+            continue
+        prev_v, _, _ = metric_of(prev)
+        if prev_v == 0:
+            delta = "n/a"
+        else:
+            pct = (cur_v - prev_v) / prev_v * 100.0
+            better = pct >= 0 if higher else pct <= 0
+            marker = "" if abs(pct) < 5 else (" :white_check_mark:" if better else " :warning:")
+            delta = f"{pct:+.1f}%{marker}"
+        lines.append(
+            f"| `{name}` | {fmt_val(prev_v, unit)} | {fmt_val(cur_v, unit)} | {delta} |"
+        )
+    if previous:
+        gone = sorted(set(previous) - set(current))
+        for name in gone:
+            lines.append(f"| `{name}` | {fmt_val(*metric_of(previous[name])[:2])} | — | removed |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True, help="this run's bench-results.json")
+    ap.add_argument("--repo", required=True)
+    ap.add_argument("--workflow", default="ci.yml")
+    ap.add_argument("--artifact", default="bench-results")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"))
+    args = ap.parse_args()
+
+    try:
+        current = read_results(args.current)
+        if not current:
+            raise RuntimeError(f"no results parsed from {args.current}")
+        prev_run, previous = previous_results(args.repo, args.workflow, args.artifact)
+        if previous is None:
+            out = (
+                "### Bench delta\n\nNo previous `bench-results` artifact found on main "
+                "— this run becomes the baseline.\n"
+            )
+        else:
+            out = render(current, previous, prev_run)
+    except Exception as e:  # warn-only by contract
+        out = f"### Bench delta\n\nComparison skipped: `{e}`\n"
+
+    print(out)
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as f:
+            f.write(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

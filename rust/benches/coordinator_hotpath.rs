@@ -9,6 +9,7 @@ mod bench_util;
 use std::sync::Arc;
 
 use bench_util::{bench, black_box, pick};
+use fiver::coordinator::bufpool::{BufferPool, SharedBuf};
 use fiver::coordinator::queue::ByteQueue;
 use fiver::coordinator::scheduler::EngineConfig;
 use fiver::coordinator::session::{run_local_transfer, run_parallel_local_transfer};
@@ -20,6 +21,7 @@ use fiver::util::rng::SplitMix64;
 
 fn main() {
     queue_bench();
+    queue_pool_bench();
     protocol_bench();
     transfer_bench();
     engine_bench();
@@ -36,7 +38,7 @@ fn queue_bench() {
         let producer = std::thread::spawn(move || {
             let buf = vec![0u8; buf_size];
             for _ in 0..(total / buf_size) {
-                q2.add(buf.clone());
+                q2.add(SharedBuf::from_vec(buf.clone()));
             }
             q2.close();
         });
@@ -48,6 +50,67 @@ fn queue_bench() {
         black_box(consumed);
     });
     r.report_bytes(total as u64);
+}
+
+/// Owned-Vec vs pooled buffers through the queue: the allocator cost the
+/// zero-copy data plane removes. "owned" allocates + fills a fresh Vec
+/// per buffer (the pre-pool hot path); "pooled" recycles `BufferPool`
+/// backings and shares them into the queue by refcount.
+fn queue_pool_bench() {
+    let total = pick(64, 8) << 20;
+    let buf_size = 256 * 1024;
+    let count = total / buf_size;
+    println!(
+        "\n== queue+pool ({} MiB, 256 KiB buffers, owned Vec vs pooled SharedBuf) ==",
+        total >> 20
+    );
+    let r = bench("queue/owned-vec", 1, pick(5, 2), || {
+        let q = ByteQueue::new(8 << 20);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..count {
+                // Fresh allocation + fill per buffer — the old data plane.
+                let mut buf = vec![0u8; buf_size];
+                buf[0] = i as u8;
+                q2.add(SharedBuf::from_vec(buf));
+            }
+            q2.close();
+        });
+        let mut consumed = 0usize;
+        while let Some(b) = q.remove() {
+            consumed += b.len();
+        }
+        producer.join().unwrap();
+        black_box(consumed);
+    });
+    r.report_bytes(total as u64);
+
+    let pool = BufferPool::new(buf_size, 48);
+    let r = bench("queue/pooled", 1, pick(5, 2), || {
+        let q = ByteQueue::new(8 << 20);
+        let q2 = q.clone();
+        let pool2 = pool.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..count {
+                let mut buf = pool2.get();
+                buf[0] = i as u8;
+                q2.add(buf.freeze(buf_size));
+            }
+            q2.close();
+        });
+        let mut consumed = 0usize;
+        while let Some(b) = q.remove() {
+            consumed += b.len();
+        }
+        producer.join().unwrap();
+        black_box(consumed);
+    });
+    r.report_bytes(total as u64);
+    println!(
+        "   pool steady state: {} backings allocated for {} buffer cycles",
+        pool.allocated(),
+        count * pick(5, 2).max(1)
+    );
 }
 
 fn protocol_bench() {
@@ -71,6 +134,21 @@ fn protocol_bench() {
         let mut cursor = &encoded[..];
         let mut n = 0;
         while let Some(f) = protocol::Frame::read_from(&mut cursor).unwrap() {
+            if let protocol::Frame::Data { payload, .. } = f {
+                n += payload.len();
+            }
+        }
+        black_box(n);
+    });
+    r.report_bytes((frames * payload.len()) as u64);
+
+    // Same stream decoded into recycled pool backings (the receiver's
+    // stripe-reader path): no per-frame payload allocation.
+    let pool = BufferPool::new(256 * 1024, 4);
+    let r = bench("protocol/decode-pooled", 2, pick(10, 3), || {
+        let mut cursor = &encoded[..];
+        let mut n = 0;
+        while let Some(f) = protocol::Frame::read_from_pooled(&mut cursor, &pool).unwrap() {
             if let protocol::Frame::Data { payload, .. } = f {
                 n += payload.len();
             }

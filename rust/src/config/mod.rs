@@ -174,6 +174,17 @@ pub struct AlgoParams {
     pub batch_threshold: u64,
     /// Parallel engine: target payload per batched work item.
     pub batch_bytes: u64,
+    /// Data-plane buffer pool size in buffers of `io_buf_size` bytes,
+    /// shared by every session at an endpoint (the real engine's
+    /// [`crate::coordinator::bufpool::BufferPool`]). 0 = unbounded: the
+    /// pool never throttles. A finite pool caps aggregate in-flight bytes;
+    /// sweeps shrink it to expose pool-starvation regimes
+    /// ([`crate::sim::testbed::SimEnv::new_parallel`] models the cap via
+    /// Little's law).
+    pub pool_buffers: u64,
+    /// I/O buffer granularity of the data plane (one pooled buffer per
+    /// read; the real engine's `SessionConfig::buf_size`).
+    pub io_buf_size: u64,
 }
 
 impl Default for AlgoParams {
@@ -188,6 +199,8 @@ impl Default for AlgoParams {
             fs_read_factor: 1.12,
             batch_threshold: 16 * MB,
             batch_bytes: 64 * MB,
+            pool_buffers: 0,
+            io_buf_size: 256 * KB,
         }
     }
 }

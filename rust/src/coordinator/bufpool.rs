@@ -1,0 +1,498 @@
+//! The zero-copy data plane: a refcounted, sliceable byte buffer
+//! ([`SharedBuf`]) and a fixed-size recycling pool ([`BufferPool`]).
+//!
+//! FIVER's whole advantage is that transfer and checksum share one file
+//! read — but an implementation that allocates a fresh `Vec<u8>` per I/O
+//! buffer and copies it at frame encode, frame decode, queue insertion and
+//! spill gives that advantage straight back to the allocator and `memcpy`.
+//! This module is the ownership substrate that removes those costs:
+//!
+//! * The sender fills **one** pooled buffer per read; the same bytes go to
+//!   the socket (borrowed, scatter/gather — see
+//!   [`super::protocol::write_data_frame_vectored`]) and to the hash queue
+//!   (a refcount, not a copy).
+//! * The receiver decodes frame payloads **directly into** pooled buffers
+//!   ([`super::protocol::Frame::read_from_pooled`]); the same buffer feeds
+//!   the storage write (borrowed) and the hash queue (refcount).
+//! * When the last reference drops, the backing storage returns to the
+//!   pool — steady state after warmup performs no *payload* allocation or
+//!   copy per buffer cycle (the residue is one constant-size refcount
+//!   block per [`PoolBuf::freeze`], ~100 B vs the 256 KiB zeroed `Vec`
+//!   the owned plane paid; `rust/tests/alloc_regression.rs` gates the
+//!   byte cost).
+//!
+//! Backpressure and liveness: [`BufferPool::get`] blocks once `capacity`
+//! buffers are outstanding, which bounds data-plane memory exactly like
+//! the paper's fixed-size queue bounds decoupling. Blocking on a shared
+//! pool can, however, interleave badly with the hash pool's FIFO progress
+//! argument (a starved session can hold buffers hostage in the queue of a
+//! not-yet-scheduled hash job — see DESIGN.md "Data plane & buffer
+//! ownership"). Hot paths therefore use [`BufferPool::get_or_alloc`]: wait
+//! for the backpressure grace period, then fall back to a one-off unpooled
+//! allocation and count it in [`BufferPool::fallback_allocs`]. A
+//! well-sized pool (the [`super::SessionConfig::pool_buffers_for`]
+//! default) never takes the fallback; the counter makes mis-sizing
+//! observable instead of deadlocking the transfer.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Default backpressure grace before a starved acquisition falls back to
+/// a one-off allocation instead of risking a sizing-dependent deadlock
+/// against the hash pool's FIFO argument (DESIGN.md "Data plane & buffer
+/// ownership"). Hot paths pass this to [`BufferPool::get_or_alloc`].
+pub const POOL_GRACE: Duration = Duration::from_millis(100);
+
+/// Pool bookkeeping behind the mutex.
+struct PoolState {
+    /// Recycled backings ready for reuse.
+    free: Vec<Box<[u8]>>,
+    /// Pooled backings currently alive (free + lent out). Lazily grown up
+    /// to `capacity`, so an idle pool costs nothing.
+    allocated: usize,
+    /// One-off unpooled allocations taken by [`BufferPool::get_or_alloc`]
+    /// after the grace period — zero in a well-sized steady state.
+    fallback_allocs: u64,
+    /// Set when a `get_or_alloc` grace period expired without a return
+    /// and cleared on the next return: while starved, further
+    /// `get_or_alloc` calls fall back immediately instead of repaying the
+    /// full grace wait per buffer (a persistently exhausted pool must
+    /// degrade to allocate-per-buffer speed, not to one buffer per grace
+    /// period).
+    starved: bool,
+}
+
+struct PoolCore {
+    buf_size: usize,
+    capacity: usize,
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+impl PoolCore {
+    /// Return a backing to the free list (called from the last-ref drop).
+    fn put_back(&self, data: Box<[u8]>) {
+        let mut g = self.state.lock().unwrap();
+        g.free.push(data);
+        g.starved = false; // buffers are flowing again
+        drop(g);
+        self.available.notify_one();
+    }
+}
+
+/// A fixed-capacity pool of `buf_size`-byte buffers. Cloning shares the
+/// pool (cheap `Arc` clone); buffers return on the last drop of any
+/// [`PoolBuf`]/[`SharedBuf`] referencing them, even if every `BufferPool`
+/// handle is gone by then.
+#[derive(Clone)]
+pub struct BufferPool {
+    core: Arc<PoolCore>,
+}
+
+impl BufferPool {
+    /// A pool of up to `capacity` buffers of `buf_size` bytes each.
+    /// Backings are allocated lazily on first use and recycled forever
+    /// after.
+    pub fn new(buf_size: usize, capacity: usize) -> BufferPool {
+        assert!(buf_size > 0, "buffer size must be positive");
+        let capacity = capacity.max(1);
+        BufferPool {
+            core: Arc::new(PoolCore {
+                buf_size,
+                capacity,
+                state: Mutex::new(PoolState {
+                    free: Vec::with_capacity(capacity),
+                    allocated: 0,
+                    fallback_allocs: 0,
+                    starved: false,
+                }),
+                available: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.core.buf_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.core.capacity
+    }
+
+    /// Pooled backings currently alive (free + lent out).
+    pub fn allocated(&self) -> usize {
+        self.core.state.lock().unwrap().allocated
+    }
+
+    /// Buffers on the free list right now.
+    pub fn free_buffers(&self) -> usize {
+        self.core.state.lock().unwrap().free.len()
+    }
+
+    /// Unpooled allocations taken by [`BufferPool::get_or_alloc`] because
+    /// the pool stayed exhausted past the grace period.
+    pub fn fallback_allocs(&self) -> u64 {
+        self.core.state.lock().unwrap().fallback_allocs
+    }
+
+    /// Blocking acquire: recycle a free backing, lazily allocate while
+    /// under capacity, else wait for a return (the capacity backpressure).
+    pub fn get(&self) -> PoolBuf {
+        let mut g = self.core.state.lock().unwrap();
+        loop {
+            if let Some(data) = g.free.pop() {
+                return self.wrap(data);
+            }
+            if g.allocated < self.core.capacity {
+                g.allocated += 1;
+                drop(g);
+                return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
+            }
+            g = self.core.available.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_get(&self) -> Option<PoolBuf> {
+        let mut g = self.core.state.lock().unwrap();
+        if let Some(data) = g.free.pop() {
+            return Some(self.wrap(data));
+        }
+        if g.allocated < self.core.capacity {
+            g.allocated += 1;
+            drop(g);
+            return Some(self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice()));
+        }
+        None
+    }
+
+    /// Acquire with bounded backpressure: wait up to `grace` for a pooled
+    /// buffer, then fall back to a one-off unpooled allocation (counted in
+    /// [`BufferPool::fallback_allocs`]) so data-plane liveness never
+    /// depends on pool sizing. See the module docs for why a hard block
+    /// here could defeat the hash pool's FIFO progress argument.
+    ///
+    /// The grace wait is paid only at the *edge* of exhaustion: once it
+    /// expires, the pool is marked starved and further calls fall back
+    /// immediately (degrading to allocate-per-buffer speed, not one
+    /// buffer per grace period) until a return clears the mark.
+    pub fn get_or_alloc(&self, grace: Duration) -> PoolBuf {
+        let mut g = self.core.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + grace;
+        loop {
+            if let Some(data) = g.free.pop() {
+                return self.wrap(data);
+            }
+            if g.allocated < self.core.capacity {
+                g.allocated += 1;
+                drop(g);
+                return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
+            }
+            let now = std::time::Instant::now();
+            if g.starved || now >= deadline {
+                g.starved = true;
+                g.fallback_allocs += 1;
+                drop(g);
+                return PoolBuf {
+                    data: Some(vec![0u8; self.core.buf_size].into_boxed_slice()),
+                    pool: None,
+                };
+            }
+            let (guard, _timeout) = self.core.available.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    fn wrap(&self, data: Box<[u8]>) -> PoolBuf {
+        PoolBuf { data: Some(data), pool: Some(self.core.clone()) }
+    }
+}
+
+/// A uniquely-owned, writable pool buffer (always `buf_size` bytes).
+/// Either [`PoolBuf::freeze`] it into an immutable [`SharedBuf`] for
+/// refcounted sharing, or drop it to return the backing immediately.
+pub struct PoolBuf {
+    data: Option<Box<[u8]>>,
+    /// `None` for grace-period fallback buffers: they free on drop instead
+    /// of returning to the pool.
+    pool: Option<Arc<PoolCore>>,
+}
+
+impl PoolBuf {
+    /// Seal the first `len` bytes as an immutable refcounted buffer. The
+    /// backing returns to its pool when the last [`SharedBuf`] clone (or
+    /// slice) drops.
+    pub fn freeze(mut self, len: usize) -> SharedBuf {
+        let data = self.data.take().expect("freeze after drop");
+        assert!(len <= data.len(), "freeze length {} exceeds buffer {}", len, data.len());
+        SharedBuf {
+            backing: Arc::new(Backing { data: Some(data), pool: self.pool.take() }),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Is this a pooled backing (vs a grace-period fallback allocation)?
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.data.as_ref().expect("deref after drop")
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        self.data.as_mut().expect("deref after drop")
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let (Some(data), Some(pool)) = (self.data.take(), self.pool.take()) {
+            pool.put_back(data);
+        }
+    }
+}
+
+/// The refcounted backing of one or more [`SharedBuf`] views.
+struct Backing {
+    data: Option<Box<[u8]>>,
+    pool: Option<Arc<PoolCore>>,
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        // Last reference gone: recycle pooled storage, free the rest.
+        if let (Some(data), Some(pool)) = (self.data.take(), self.pool.take()) {
+            pool.put_back(data);
+        }
+    }
+}
+
+/// An immutable, refcounted, sliceable view of a byte buffer — the unit of
+/// currency of the zero-copy data plane. Clones and slices share one
+/// backing; no byte is copied until someone explicitly asks for a `Vec`.
+#[derive(Clone)]
+pub struct SharedBuf {
+    backing: Arc<Backing>,
+    off: usize,
+    len: usize,
+}
+
+impl SharedBuf {
+    /// Wrap an owned `Vec` (unpooled backing; freed on last drop). The
+    /// escape hatch for cold paths and tests.
+    pub fn from_vec(v: Vec<u8>) -> SharedBuf {
+        let len = v.len();
+        SharedBuf {
+            backing: Arc::new(Backing { data: Some(v.into_boxed_slice()), pool: None }),
+            off: 0,
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// A sub-view of `[start, end)` sharing the same backing — no copy, no
+    /// allocation beyond the `Arc` refcount bump.
+    pub fn slice(&self, start: usize, end: usize) -> SharedBuf {
+        assert!(start <= end && end <= self.len, "slice [{start}, {end}) of {}", self.len);
+        SharedBuf { backing: self.backing.clone(), off: self.off + start, len: end - start }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        let data = self.backing.data.as_ref().expect("backing taken");
+        &data[self.off..self.off + self.len]
+    }
+
+    /// Strong references to the backing (tests / diagnostics).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.backing)
+    }
+}
+
+impl Deref for SharedBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for SharedBuf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for SharedBuf {
+    fn from(v: Vec<u8>) -> SharedBuf {
+        SharedBuf::from_vec(v)
+    }
+}
+
+impl std::fmt::Debug for SharedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Frames embed SharedBufs; dumping megabytes into error messages
+        // helps nobody.
+        if self.len <= 16 {
+            write!(f, "SharedBuf({:?})", self.as_slice())
+        } else {
+            write!(f, "SharedBuf(len={}, head={:?}…)", self.len, &self.as_slice()[..8])
+        }
+    }
+}
+
+impl PartialEq for SharedBuf {
+    fn eq(&self, other: &SharedBuf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedBuf {}
+
+impl PartialEq<[u8]> for SharedBuf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for SharedBuf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn freeze_and_read_back() {
+        let pool = BufferPool::new(64, 2);
+        let mut b = pool.get();
+        b[..4].copy_from_slice(&[1, 2, 3, 4]);
+        let s = b.freeze(4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(&s[..], &[1, 2, 3, 4]);
+        assert_eq!(s, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn returns_to_pool_on_last_drop() {
+        let pool = BufferPool::new(8, 1);
+        let s = pool.get().freeze(8);
+        let s2 = s.clone();
+        let sub = s.slice(2, 5);
+        assert!(pool.try_get().is_none(), "sole buffer is lent out");
+        drop(s);
+        drop(s2);
+        assert!(pool.try_get().is_none(), "slice still holds the backing");
+        drop(sub);
+        assert_eq!(pool.free_buffers(), 1);
+        assert!(pool.try_get().is_some(), "backing recycled after last ref");
+        assert_eq!(pool.allocated(), 1, "no second allocation");
+    }
+
+    #[test]
+    fn unused_poolbuf_drop_recycles_immediately() {
+        let pool = BufferPool::new(8, 1);
+        drop(pool.get());
+        assert_eq!(pool.free_buffers(), 1);
+    }
+
+    #[test]
+    fn slices_share_backing_without_copy() {
+        let s = SharedBuf::from_vec((0u8..100).collect());
+        let a = s.slice(10, 20);
+        let b = s.slice(15, 100);
+        assert_eq!(&a[..], &(10u8..20).collect::<Vec<u8>>()[..]);
+        assert_eq!(b.len(), 85);
+        assert_eq!(b[0], 15);
+        assert_eq!(s.ref_count(), 3);
+        // Sub-slicing a slice stays relative to the slice.
+        let c = b.slice(5, 7);
+        assert_eq!(&c[..], &[20, 21]);
+    }
+
+    #[test]
+    fn get_blocks_until_return() {
+        let pool = BufferPool::new(16, 1);
+        let held = pool.get().freeze(16);
+        let pool2 = pool.clone();
+        let t = thread::spawn(move || {
+            let start = std::time::Instant::now();
+            let b = pool2.get();
+            (start.elapsed(), b.len())
+        });
+        thread::sleep(Duration::from_millis(50));
+        drop(held);
+        let (waited, len) = t.join().unwrap();
+        assert_eq!(len, 16);
+        assert!(waited >= Duration::from_millis(40), "get should have blocked: {waited:?}");
+    }
+
+    #[test]
+    fn get_or_alloc_falls_back_after_grace() {
+        let pool = BufferPool::new(8, 1);
+        let held = pool.get();
+        let b = pool.get_or_alloc(Duration::from_millis(20));
+        assert!(!b.is_pooled(), "exhausted pool must fall back");
+        assert_eq!(pool.fallback_allocs(), 1);
+        drop(b);
+        assert_eq!(pool.free_buffers(), 0, "fallback buffers don't join the pool");
+        drop(held);
+        assert_eq!(pool.free_buffers(), 1);
+        assert!(pool.get_or_alloc(Duration::from_millis(20)).is_pooled());
+        assert_eq!(pool.fallback_allocs(), 1, "pooled grab doesn't count");
+    }
+
+    #[test]
+    fn starved_pool_falls_back_immediately_until_a_return() {
+        let pool = BufferPool::new(8, 1);
+        let held = pool.get();
+        // First miss pays the grace; once starved, further misses must
+        // not wait again.
+        let _ = pool.get_or_alloc(Duration::from_millis(10));
+        let start = std::time::Instant::now();
+        let b = pool.get_or_alloc(Duration::from_secs(60));
+        assert!(!b.is_pooled());
+        assert!(start.elapsed() < Duration::from_secs(10), "starved pool must not re-wait");
+        assert_eq!(pool.fallback_allocs(), 2);
+        // A return clears the starvation mark: the next acquisition is
+        // pooled again.
+        drop(held);
+        assert!(pool.get_or_alloc(Duration::from_millis(10)).is_pooled());
+    }
+
+    #[test]
+    fn buffers_outlive_pool_handle() {
+        let pool = BufferPool::new(8, 2);
+        let s = pool.get().freeze(8);
+        drop(pool);
+        assert_eq!(&s[..], &[0u8; 8]); // backing stays valid
+        drop(s); // returns to the (now unreachable) core without panicking
+    }
+
+    #[test]
+    fn from_vec_roundtrip_and_eq() {
+        let s: SharedBuf = vec![9u8, 8, 7].into();
+        assert_eq!(s, SharedBuf::from_vec(vec![9, 8, 7]));
+        assert!(!s.is_empty());
+        assert_eq!(format!("{s:?}"), "SharedBuf([9, 8, 7])");
+    }
+}

@@ -1,7 +1,12 @@
 //! The real-mode coordinator — the paper's system, over real sockets,
 //! threads and files, scaled out by a parallel multi-session engine.
 //!
-//! * [`queue`] — the fixed-size synchronized queue of Algorithms 1 & 2.
+//! * [`bufpool`] — the zero-copy data plane: refcounted sliceable buffers
+//!   ([`bufpool::SharedBuf`]) recycled through a fixed-size
+//!   [`bufpool::BufferPool`]; steady state performs no payload
+//!   allocation or copy per buffer cycle.
+//! * [`queue`] — the fixed-size synchronized queue of Algorithms 1 & 2,
+//!   carrying refcounted buffers (insertion is a refcount, not a copy).
 //! * [`protocol`] — framed data + control channels (GridFTP-style split),
 //!   plus the engine's session-id/stripe `Hello` handshake.
 //! * [`scheduler`] — work items (small files batch, large files stand
@@ -28,6 +33,7 @@
 //! the range, recomputes the digest from storage, and re-exchanges until
 //! digests match (§IV-A's efficient error recovery).
 
+pub mod bufpool;
 pub mod pool;
 pub mod protocol;
 pub mod queue;
@@ -144,6 +150,10 @@ pub struct SessionConfig {
     /// Merkle leaf span for FIVER-Merkle (repair granularity; digest
     /// exchange on a mismatch is O(log(size/leaf_size))).
     pub leaf_size: u64,
+    /// Data-plane buffer pool size in buffers of `buf_size` bytes
+    /// (0 = auto: sized so a full queue plus in-flight slack per session
+    /// never exhausts it — see [`SessionConfig::pool_buffers_for`]).
+    pub pool_buffers: usize,
     pub hasher: HasherFactory,
 }
 
@@ -156,8 +166,28 @@ impl SessionConfig {
             queue_capacity: 8 << 20,
             hybrid_threshold: 64 << 20,
             leaf_size: 64 << 10,
+            pool_buffers: 0,
             hasher,
         }
+    }
+
+    /// Effective buffer pool size for an endpoint running `sessions`
+    /// concurrent sessions. The auto default gives every session enough
+    /// buffers to fill its checksum queue (`queue_capacity / buf_size`)
+    /// plus slack for buffers in flight between socket, reorder stash and
+    /// spill, so the steady state never touches
+    /// [`bufpool::BufferPool::get_or_alloc`]'s fallback.
+    pub fn pool_buffers_for(&self, sessions: usize) -> usize {
+        if self.pool_buffers > 0 {
+            return self.pool_buffers;
+        }
+        let per_session = (self.queue_capacity / self.buf_size.max(1)).max(1) + 8;
+        sessions.max(1) * per_session + 8
+    }
+
+    /// Build the endpoint's data-plane buffer pool.
+    pub fn make_pool(&self, sessions: usize) -> bufpool::BufferPool {
+        bufpool::BufferPool::new(self.buf_size, self.pool_buffers_for(sessions))
     }
 
     /// Verification units of a file as `(unit_id, offset, len)`.
@@ -253,6 +283,21 @@ mod tests {
         assert!(RealAlgorithm::FiverMerkle.uses_queue(1, 0));
         assert!(!RealAlgorithm::Sequential.uses_queue(1, u64::MAX));
         assert!(!RealAlgorithm::BlockLevelPpl.uses_queue(1, u64::MAX));
+    }
+
+    #[test]
+    fn pool_sizing_covers_queue_plus_slack() {
+        let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+        // Default: queue (8 MiB / 256 KiB = 32) + 8 slack per session + 8.
+        assert_eq!(cfg.pool_buffers_for(1), 48);
+        assert_eq!(cfg.pool_buffers_for(4), 4 * 40 + 8);
+        // Explicit size wins regardless of session count.
+        cfg.pool_buffers = 7;
+        assert_eq!(cfg.pool_buffers_for(8), 7);
+        cfg.pool_buffers = 0;
+        let pool = cfg.make_pool(2);
+        assert_eq!(pool.buf_size(), cfg.buf_size);
+        assert_eq!(pool.capacity(), cfg.pool_buffers_for(2));
     }
 
     #[test]

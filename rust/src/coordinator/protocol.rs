@@ -10,10 +10,19 @@
 //!
 //! Frames are length-prefixed: `u8 tag, u32 file_idx, u64 a, u64 b,
 //! u32 payload_len, payload`. Fixed 25-byte header; integers little-endian.
+//!
+//! Zero-copy hot path: `Data`/`Fix` payloads are [`SharedBuf`]s, written
+//! with scatter/gather I/O (one `writev` of header + borrowed payload —
+//! no serialization copy, see [`write_data_frame_vectored`]) and read
+//! directly into pooled buffers ([`Frame::read_from_pooled`]) so the bytes
+//! the kernel hands us are the very bytes the storage writer and the hash
+//! queue consume.
 
-use std::io::{Read, Write};
+use std::io::{BufWriter, IoSlice, Read, Write};
 
 use anyhow::{bail, Context, Result};
+
+use super::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
 
 /// Verification scope of a digest (whole file vs one chunk).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,11 +37,11 @@ pub enum Frame {
     /// Announce a file: `a` = size, `b` = attempt, payload = name.
     FileStart { file_idx: u32, size: u64, attempt: u64, name: String },
     /// File content in stream order: `a` = offset, payload = bytes.
-    Data { file_idx: u32, offset: u64, payload: Vec<u8> },
+    Data { file_idx: u32, offset: u64, payload: SharedBuf },
     /// End of a file's stream.
     FileEnd { file_idx: u32 },
     /// Repair write into an already-received file: `a` = offset.
-    Fix { file_idx: u32, offset: u64, payload: Vec<u8> },
+    Fix { file_idx: u32, offset: u64, payload: SharedBuf },
     /// All repairs for a verification round sent; `a` = chunk index or
     /// u64::MAX for whole-file.
     FixEnd { file_idx: u32, unit: u64 },
@@ -82,9 +91,29 @@ const TAG_HELLO: u8 = 13;
 /// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
 pub const UNIT_FILE: u64 = u64::MAX;
 
+/// Fixed frame header width.
+pub const HEADER_LEN: usize = 25;
+
+/// Payloads below this go through the caller's `BufWriter` (one memcpy
+/// into warm buffer memory beats a syscall); at or above it the writer is
+/// flushed and header + payload leave in a single `writev` — no copy.
+const VECTORED_MIN: usize = 8 * 1024;
+
+fn encode_header(tag: u8, idx: u32, a: u64, b: u64, payload_len: usize) -> [u8; HEADER_LEN] {
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = tag;
+    header[1..5].copy_from_slice(&idx.to_le_bytes());
+    header[5..13].copy_from_slice(&a.to_le_bytes());
+    header[13..21].copy_from_slice(&b.to_le_bytes());
+    header[21..25].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    header
+}
+
 impl Frame {
     /// Serialize to a writer. One syscall-ish write for the header plus one
-    /// for the payload; callers wrap sockets in BufWriter.
+    /// for the payload; callers wrap sockets in BufWriter. (The Data/Fix
+    /// hot paths use [`write_data_frame_vectored`] /
+    /// [`write_fix_frame_vectored`] instead.)
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let count_bytes;
         let (tag, idx, a, b, payload): (u8, u32, u64, u64, &[u8]) = match self {
@@ -121,20 +150,29 @@ impl Frame {
             }
             Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
         };
-        let mut header = [0u8; 25];
-        header[0] = tag;
-        header[1..5].copy_from_slice(&idx.to_le_bytes());
-        header[5..13].copy_from_slice(&a.to_le_bytes());
-        header[13..21].copy_from_slice(&b.to_le_bytes());
-        header[21..25].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        let header = encode_header(tag, idx, a, b, payload.len());
         w.write_all(&header)?;
         w.write_all(payload)?;
         Ok(())
     }
 
-    /// Read one frame. `Ok(None)` on clean EOF at a frame boundary.
+    /// Read one frame, allocating payloads on the heap. `Ok(None)` on
+    /// clean EOF at a frame boundary. Control channels and tests use this;
+    /// data channels use [`Frame::read_from_pooled`].
     pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
-        let mut header = [0u8; 25];
+        Frame::read_framed(r, None)
+    }
+
+    /// Read one frame, filling `Data`/`Fix` payloads directly from the
+    /// stream into a pooled buffer (refcounted; returns to `pool` on last
+    /// drop). Oversized payloads fall back to a heap allocation rather
+    /// than failing.
+    pub fn read_from_pooled<R: Read>(r: &mut R, pool: &BufferPool) -> Result<Option<Frame>> {
+        Frame::read_framed(r, Some(pool))
+    }
+
+    fn read_framed<R: Read>(r: &mut R, pool: Option<&BufferPool>) -> Result<Option<Frame>> {
+        let mut header = [0u8; HEADER_LEN];
         match read_exact_or_eof(r, &mut header)? {
             false => return Ok(None),
             true => {}
@@ -148,6 +186,15 @@ impl Frame {
         if len > MAX_PAYLOAD {
             bail!("frame payload {len} exceeds limit");
         }
+        // Byte-carrying frames read straight into a pooled buffer; the
+        // metadata frames below own small Vec payloads.
+        if tag == TAG_DATA || tag == TAG_FIX {
+            let payload = read_payload(r, len, pool)?;
+            return Ok(Some(match tag {
+                TAG_DATA => Frame::Data { file_idx, offset: a, payload },
+                _ => Frame::Fix { file_idx, offset: a, payload },
+            }));
+        }
         let mut payload = vec![0u8; len];
         r.read_exact(&mut payload).context("frame payload")?;
         Ok(Some(match tag {
@@ -157,9 +204,7 @@ impl Frame {
                 attempt: b,
                 name: String::from_utf8(payload).context("file name utf8")?,
             },
-            TAG_DATA => Frame::Data { file_idx, offset: a, payload },
             TAG_FILE_END => Frame::FileEnd { file_idx },
-            TAG_FIX => Frame::Fix { file_idx, offset: a, payload },
             TAG_FIX_END => Frame::FixEnd { file_idx, unit: a },
             TAG_DIGEST => Frame::Digest { file_idx, unit: a, digest: payload },
             TAG_VERDICT => Frame::Verdict { file_idx, unit: a, ok: b != 0 },
@@ -183,21 +228,94 @@ impl Frame {
     }
 }
 
+/// Fill a payload of `len` bytes from the stream: pooled when a pool is
+/// given and the payload fits its buffer size, heap otherwise.
+fn read_payload<R: Read>(r: &mut R, len: usize, pool: Option<&BufferPool>) -> Result<SharedBuf> {
+    match pool {
+        Some(pool) if len <= pool.buf_size() => {
+            let mut buf = pool.get_or_alloc(POOL_GRACE);
+            r.read_exact(&mut buf[..len]).context("frame payload")?;
+            Ok(buf.freeze(len))
+        }
+        _ => {
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload).context("frame payload")?;
+            Ok(SharedBuf::from_vec(payload))
+        }
+    }
+}
+
 /// Write a `Data` frame from a borrowed slice — the hot path; avoids
-/// constructing a `Frame` (and its owned `Vec`) per buffer.
+/// constructing a `Frame` (and its owned payload) per buffer.
 pub fn write_data_frame<W: Write>(
     w: &mut W,
     file_idx: u32,
     offset: u64,
     payload: &[u8],
 ) -> Result<()> {
-    let mut header = [0u8; 25];
-    header[0] = TAG_DATA;
-    header[1..5].copy_from_slice(&file_idx.to_le_bytes());
-    header[5..13].copy_from_slice(&offset.to_le_bytes());
-    header[21..25].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let header = encode_header(TAG_DATA, file_idx, offset, 0, payload.len());
     w.write_all(&header)?;
     w.write_all(payload)?;
+    Ok(())
+}
+
+/// Write a `Data` frame with scatter/gather I/O: small payloads ride the
+/// `BufWriter`, large ones flush it and leave as one `writev` of header +
+/// borrowed payload — the payload bytes are never copied into a staging
+/// buffer.
+pub fn write_data_frame_vectored<W: Write>(
+    w: &mut BufWriter<W>,
+    file_idx: u32,
+    offset: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let header = encode_header(TAG_DATA, file_idx, offset, 0, payload.len());
+    write_frame_vectored(w, &header, payload)
+}
+
+/// [`write_data_frame_vectored`]'s twin for repair `Fix` frames, so the
+/// recovery path shares the zero-copy machinery.
+pub fn write_fix_frame_vectored<W: Write>(
+    w: &mut BufWriter<W>,
+    file_idx: u32,
+    offset: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let header = encode_header(TAG_FIX, file_idx, offset, 0, payload.len());
+    write_frame_vectored(w, &header, payload)
+}
+
+fn write_frame_vectored<W: Write>(
+    w: &mut BufWriter<W>,
+    header: &[u8; HEADER_LEN],
+    payload: &[u8],
+) -> Result<()> {
+    if payload.len() < VECTORED_MIN {
+        w.write_all(header)?;
+        w.write_all(payload)?;
+        return Ok(());
+    }
+    // Preserve frame ordering: everything buffered so far goes first.
+    w.flush()?;
+    let inner = w.get_mut();
+    let mut hdr_written = 0usize;
+    let mut pay_written = 0usize;
+    while hdr_written < header.len() || pay_written < payload.len() {
+        let n = if hdr_written < header.len() {
+            // writev consumes slices in order, so payload bytes can only
+            // follow a fully written header within one call.
+            let bufs = [IoSlice::new(&header[hdr_written..]), IoSlice::new(payload)];
+            inner.write_vectored(&bufs)?
+        } else {
+            inner.write(&payload[pay_written..])?
+        };
+        if n == 0 {
+            bail!("write_vectored wrote zero bytes");
+        }
+        let hdr_take = n.min(header.len() - hdr_written);
+        hdr_written += hdr_take;
+        pay_written += n - hdr_take;
+    }
     Ok(())
 }
 
@@ -221,6 +339,10 @@ fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
 mod tests {
     use super::*;
 
+    fn sbuf(v: Vec<u8>) -> SharedBuf {
+        SharedBuf::from_vec(v)
+    }
+
     fn roundtrip(f: Frame) {
         let mut buf = Vec::new();
         f.write_to(&mut buf).unwrap();
@@ -239,9 +361,9 @@ mod tests {
             attempt: 2,
             name: "dataset/file-0001".into(),
         });
-        roundtrip(Frame::Data { file_idx: 1, offset: 12345, payload: vec![1, 2, 3] });
+        roundtrip(Frame::Data { file_idx: 1, offset: 12345, payload: sbuf(vec![1, 2, 3]) });
         roundtrip(Frame::FileEnd { file_idx: 9 });
-        roundtrip(Frame::Fix { file_idx: 3, offset: 999, payload: vec![0xAA; 100] });
+        roundtrip(Frame::Fix { file_idx: 3, offset: 999, payload: sbuf(vec![0xAA; 100]) });
         roundtrip(Frame::FixEnd { file_idx: 3, unit: UNIT_FILE });
         roundtrip(Frame::Digest { file_idx: 2, unit: 5, digest: vec![0xCD; 32] });
         roundtrip(Frame::Verdict { file_idx: 2, unit: UNIT_FILE, ok: true });
@@ -264,7 +386,7 @@ mod tests {
         let mut buf = Vec::new();
         let frames = vec![
             Frame::FileStart { file_idx: 0, size: 3, attempt: 0, name: "a".into() },
-            Frame::Data { file_idx: 0, offset: 0, payload: vec![1, 2, 3] },
+            Frame::Data { file_idx: 0, offset: 0, payload: sbuf(vec![1, 2, 3]) },
             Frame::FileEnd { file_idx: 0 },
             Frame::Done,
         ];
@@ -278,9 +400,105 @@ mod tests {
     }
 
     #[test]
+    fn vectored_write_matches_plain_encoding() {
+        // Below and above VECTORED_MIN must produce identical bytes.
+        for size in [16usize, 100 * 1024] {
+            let payload: Vec<u8> = (0..size).map(|i| i as u8).collect();
+            let mut plain = Vec::new();
+            write_data_frame(&mut plain, 3, 777, &payload).unwrap();
+            let mut w = BufWriter::new(Vec::new());
+            write_data_frame_vectored(&mut w, 3, 777, &payload).unwrap();
+            let vectored = w.into_inner().unwrap();
+            assert_eq!(plain, vectored, "size {size}");
+            // And the fix twin differs only in its tag.
+            let mut wf = BufWriter::new(Vec::new());
+            write_fix_frame_vectored(&mut wf, 3, 777, &payload).unwrap();
+            let fix = wf.into_inner().unwrap();
+            let mut cursor = &fix[..];
+            match Frame::read_from(&mut cursor).unwrap().unwrap() {
+                Frame::Fix { file_idx: 3, offset: 777, payload: p } => {
+                    assert_eq!(p, payload);
+                }
+                other => panic!("expected Fix, got {other:?}"),
+            }
+        }
+    }
+
+    /// A writer that accepts at most `max` bytes per call — exercises the
+    /// partial-write loop of the vectored path.
+    #[derive(Debug)]
+    struct Dribble {
+        out: Vec<u8>,
+        max: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.max);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn vectored_write_survives_partial_writes() {
+        let payload: Vec<u8> = (0..50_000).map(|i| (i * 7) as u8).collect();
+        let mut w = BufWriter::new(Dribble { out: Vec::new(), max: 11 });
+        write_data_frame_vectored(&mut w, 1, 0, &payload).unwrap();
+        w.flush().unwrap();
+        let bytes = w.into_inner().unwrap().out;
+        let mut cursor = &bytes[..];
+        match Frame::read_from(&mut cursor).unwrap().unwrap() {
+            Frame::Data { payload: p, .. } => assert_eq!(p, payload),
+            other => panic!("expected Data, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pooled_read_recycles_payload_buffers() {
+        let pool = BufferPool::new(1024, 2);
+        let mut stream = Vec::new();
+        for i in 0..4u8 {
+            write_data_frame(&mut stream, 0, i as u64 * 100, &[i; 100]).unwrap();
+        }
+        Frame::Done.write_to(&mut stream).unwrap();
+        let mut cursor = &stream[..];
+        for i in 0..4u8 {
+            let f = Frame::read_from_pooled(&mut cursor, &pool).unwrap().unwrap();
+            let Frame::Data { payload, .. } = f else { panic!("expected Data") };
+            assert_eq!(payload, vec![i; 100]);
+            // Dropping the payload here returns the buffer; the pool never
+            // grows past one backing.
+        }
+        assert_eq!(pool.allocated(), 1, "buffers recycled, not re-allocated");
+        assert!(matches!(
+            Frame::read_from_pooled(&mut cursor, &pool).unwrap().unwrap(),
+            Frame::Done
+        ));
+    }
+
+    #[test]
+    fn pooled_read_falls_back_for_oversized_payload() {
+        let pool = BufferPool::new(16, 1);
+        let mut stream = Vec::new();
+        write_data_frame(&mut stream, 0, 0, &[7u8; 64]).unwrap();
+        let mut cursor = &stream[..];
+        let f = Frame::read_from_pooled(&mut cursor, &pool).unwrap().unwrap();
+        let Frame::Data { payload, .. } = f else { panic!("expected Data") };
+        assert_eq!(payload, vec![7u8; 64]);
+        assert_eq!(pool.allocated(), 0, "oversized payload skipped the pool");
+    }
+
+    #[test]
     fn truncated_frame_errors() {
         let mut buf = Vec::new();
-        Frame::Data { file_idx: 0, offset: 0, payload: vec![9; 10] }.write_to(&mut buf).unwrap();
+        Frame::Data { file_idx: 0, offset: 0, payload: sbuf(vec![9; 10]) }
+            .write_to(&mut buf)
+            .unwrap();
         let mut cursor = &buf[..20]; // mid-header
         assert!(Frame::read_from(&mut cursor).is_err());
     }

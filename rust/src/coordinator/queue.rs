@@ -8,12 +8,20 @@
 //! back-off [and] run at same speed as checksum computation"), `remove`
 //! blocks when empty (a fast checksum "will just wait for data to be
 //! available, so its total CPU time will not change").
+//!
+//! The queue carries [`SharedBuf`]s, not owned `Vec`s: inserting a buffer
+//! is a refcount bump, so the same pooled bytes the socket just saw flow
+//! to the checksum worker without a copy, and the backing returns to its
+//! [`super::bufpool::BufferPool`] when the worker drops the last
+//! reference.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::bufpool::SharedBuf;
+
 struct Inner {
-    buffers: VecDeque<Vec<u8>>,
+    buffers: VecDeque<SharedBuf>,
     bytes: usize,
     closed: bool,
     /// Blocked producers/consumers — lets the hot path skip the condvar
@@ -56,7 +64,7 @@ impl ByteQueue {
 
     /// Blocking add (Algorithm 1 line 7). Returns `false` if the queue was
     /// closed (consumer gone) — producers should stop.
-    pub fn add(&self, buf: Vec<u8>) -> bool {
+    pub fn add(&self, buf: SharedBuf) -> bool {
         let (lock, not_full, not_empty) = &*self.inner;
         let mut g = lock.lock().unwrap();
         // A buffer larger than capacity is still accepted when empty,
@@ -82,7 +90,7 @@ impl ByteQueue {
     /// frame merger must never block on a queue whose hash job may still
     /// be waiting for a pool worker (see [`crate::coordinator::pool`]).
     /// A closed queue accepts-and-drops (the consumer is gone).
-    pub fn try_add(&self, buf: Vec<u8>) -> Result<(), Vec<u8>> {
+    pub fn try_add(&self, buf: SharedBuf) -> Result<(), SharedBuf> {
         let (lock, _not_full, not_empty) = &*self.inner;
         let mut g = lock.lock().unwrap();
         if g.closed {
@@ -101,7 +109,7 @@ impl ByteQueue {
 
     /// Blocking remove (Algorithm 1 line 14). `None` once closed and
     /// drained — the consumer's end-of-stream.
-    pub fn remove(&self) -> Option<Vec<u8>> {
+    pub fn remove(&self) -> Option<SharedBuf> {
         let (lock, not_full, not_empty) = &*self.inner;
         let mut g = lock.lock().unwrap();
         loop {
@@ -141,23 +149,27 @@ mod tests {
     use std::thread;
     use std::time::Duration;
 
+    fn buf(v: Vec<u8>) -> SharedBuf {
+        SharedBuf::from_vec(v)
+    }
+
     #[test]
     fn fifo_order() {
         let q = ByteQueue::new(1024);
-        q.add(vec![1]);
-        q.add(vec![2, 2]);
-        q.add(vec![3]);
-        assert_eq!(q.remove(), Some(vec![1]));
-        assert_eq!(q.remove(), Some(vec![2, 2]));
-        assert_eq!(q.remove(), Some(vec![3]));
+        q.add(buf(vec![1]));
+        q.add(buf(vec![2, 2]));
+        q.add(buf(vec![3]));
+        assert_eq!(q.remove().unwrap(), vec![1]);
+        assert_eq!(q.remove().unwrap(), vec![2, 2]);
+        assert_eq!(q.remove().unwrap(), vec![3]);
     }
 
     #[test]
     fn close_drains_then_none() {
         let q = ByteQueue::new(1024);
-        q.add(vec![1]);
+        q.add(buf(vec![1]));
         q.close();
-        assert_eq!(q.remove(), Some(vec![1]));
+        assert_eq!(q.remove().unwrap(), vec![1]);
         assert_eq!(q.remove(), None);
     }
 
@@ -165,18 +177,18 @@ mod tests {
     fn add_after_close_rejected() {
         let q = ByteQueue::new(1024);
         q.close();
-        assert!(!q.add(vec![1]));
+        assert!(!q.add(buf(vec![1])));
     }
 
     #[test]
     fn producer_backs_off_when_full() {
         let q = ByteQueue::new(10);
-        q.add(vec![0; 8]);
+        q.add(buf(vec![0; 8]));
         let q2 = q.clone();
         let handle = thread::spawn(move || {
             // Blocks until the consumer drains.
             let start = std::time::Instant::now();
-            assert!(q2.add(vec![0; 8]));
+            assert!(q2.add(buf(vec![0; 8])));
             start.elapsed()
         });
         thread::sleep(Duration::from_millis(50));
@@ -188,21 +200,21 @@ mod tests {
     #[test]
     fn oversized_buffer_accepted_when_empty() {
         let q = ByteQueue::new(4);
-        assert!(q.add(vec![0; 100]));
+        assert!(q.add(buf(vec![0; 100])));
         assert_eq!(q.remove().unwrap().len(), 100);
     }
 
     #[test]
     fn try_add_returns_buffer_when_full() {
         let q = ByteQueue::new(10);
-        assert!(q.try_add(vec![1; 8]).is_ok());
-        let back = q.try_add(vec![2; 8]).unwrap_err();
+        assert!(q.try_add(buf(vec![1; 8])).is_ok());
+        let back = q.try_add(buf(vec![2; 8])).unwrap_err();
         assert_eq!(back, vec![2; 8], "full queue hands the buffer back");
         assert_eq!(q.remove().unwrap(), vec![1; 8]);
-        assert!(q.try_add(vec![2; 8]).is_ok(), "accepted once drained");
+        assert!(q.try_add(back).is_ok(), "accepted once drained");
         // Closed queues accept-and-drop.
         q.close();
-        assert!(q.try_add(vec![3; 3]).is_ok());
+        assert!(q.try_add(buf(vec![3; 3])).is_ok());
         assert_eq!(q.remove().unwrap(), vec![2; 8]);
         assert_eq!(q.remove(), None);
     }
@@ -213,8 +225,22 @@ mod tests {
         let q2 = q.clone();
         let handle = thread::spawn(move || q2.remove());
         thread::sleep(Duration::from_millis(30));
-        q.add(vec![7; 3]);
-        assert_eq!(handle.join().unwrap(), Some(vec![7; 3]));
+        q.add(buf(vec![7; 3]));
+        assert_eq!(handle.join().unwrap().unwrap(), vec![7; 3]);
+    }
+
+    #[test]
+    fn byte_accounting_with_slices() {
+        // Slices of one backing count their view length, not the backing.
+        let q = ByteQueue::new(100);
+        let big = buf((0u8..=99).collect());
+        q.add(big.slice(0, 30));
+        q.add(big.slice(30, 40));
+        assert_eq!(q.len_bytes(), 40);
+        assert_eq!(q.remove().unwrap().len(), 30);
+        assert_eq!(q.len_bytes(), 10);
+        assert_eq!(&q.remove().unwrap()[..], &(30u8..40).collect::<Vec<u8>>()[..]);
+        assert_eq!(q.len_bytes(), 0);
     }
 
     #[test]
@@ -226,22 +252,22 @@ mod tests {
         let producer = thread::spawn(move || {
             let mut counter = 0u8;
             for _ in 0..256 {
-                let buf: Vec<u8> = (0..4096)
+                let data: Vec<u8> = (0..4096)
                     .map(|_| {
                         counter = counter.wrapping_add(1);
                         counter
                     })
                     .collect();
-                assert!(q2.add(buf));
+                assert!(q2.add(buf(data)));
             }
             q2.close();
         });
         let mut expect = 0u8;
         let mut total = 0usize;
-        while let Some(buf) = q.remove() {
-            for b in buf {
+        while let Some(b) = q.remove() {
+            for &v in b.iter() {
                 expect = expect.wrapping_add(1);
-                assert_eq!(b, expect);
+                assert_eq!(v, expect);
                 total += 1;
             }
         }

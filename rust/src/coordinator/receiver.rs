@@ -30,6 +30,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::bufpool::{BufferPool, SharedBuf};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
@@ -91,18 +92,19 @@ pub fn serve_session(
     cfg: &SessionConfig,
 ) -> Result<ReceiverReport> {
     let pool = HashPool::new(2);
-    serve_session_multi(vec![data], ctrl, storage, cfg, pool.handle())
+    serve_session_multi(vec![data], ctrl, storage, cfg, pool.handle(), cfg.make_pool(1))
 }
 
 /// Serve one engine session: `datas` are this session's stripe sockets
 /// (index = stripe id), `ctrl` its control channel, `pool` the endpoint's
-/// shared hash pool.
+/// shared hash pool, `bufs` its shared data-plane buffer pool.
 pub fn serve_session_multi(
     datas: Vec<TcpStream>,
     ctrl: TcpStream,
     storage: Arc<dyn Storage>,
     cfg: &SessionConfig,
     pool: PoolHandle,
+    bufs: BufferPool,
 ) -> Result<ReceiverReport> {
     anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
     let (tx, rx) = mpsc::channel::<Event>();
@@ -113,15 +115,21 @@ pub fn serve_session_multi(
     let worker = std::thread::spawn(move || verify_worker(ctrl, worker_storage, &worker_cfg, rx));
 
     // Stripe readers: per-socket FIFO is preserved through the shared
-    // channel (std mpsc keeps each sender's sends in order).
+    // channel (std mpsc keeps each sender's sends in order). The socket
+    // is read *unbuffered* on purpose: payloads decode straight from the
+    // kernel into pooled buffers with zero intermediate copies (a
+    // BufReader would memcpy every payload's first bufferful through its
+    // internal buffer), at the cost of one extra small recv per frame
+    // for the 25-byte header — noise next to a payload-sized read.
     let (ftx, frx) = mpsc::channel::<Result<Frame>>();
     let mut readers = Vec::new();
     for data in datas {
         let ftx = ftx.clone();
+        let bufs2 = bufs.clone();
         readers.push(std::thread::spawn(move || {
-            let mut input = BufReader::with_capacity(1 << 20, data);
+            let mut input = data;
             loop {
-                match Frame::read_from(&mut input) {
+                match Frame::read_from_pooled(&mut input, &bufs2) {
                     Ok(Some(frame)) => {
                         if ftx.send(Ok(frame)).is_err() {
                             break; // merger gone
@@ -192,7 +200,7 @@ fn merge_frames(
     let mut names: HashMap<u32, String> = HashMap::new();
     // Data frames whose FileStart (stripe 0) has not arrived yet —
     // bounded by stripe skew, drained on FileStart.
-    let mut early: HashMap<u32, Vec<(u64, Vec<u8>)>> = HashMap::new();
+    let mut early: HashMap<u32, Vec<(u64, SharedBuf)>> = HashMap::new();
     // Byte spans rewritten by Fix frames since the last FixEnd, per file,
     // plus one write handle kept open across the batch (opening and
     // flushing per frame would pay a syscall pair per ~64 KiB of repair).
@@ -347,12 +355,15 @@ struct FileState {
     contiguous: u64,
     /// Out-of-order spans past the prefix: offset -> len.
     spans: BTreeMap<u64, u64>,
-    /// Queue mode only: out-of-order payloads awaiting their turn.
-    stash: BTreeMap<u64, Vec<u8>>,
+    /// Queue mode only: out-of-order payloads awaiting their turn. A
+    /// stashed entry is a refcount on the already-written pooled buffer,
+    /// not a copy.
+    stash: BTreeMap<u64, SharedBuf>,
     /// Queue mode only: in-order payloads the queue had no room for (its
     /// hash job may still be waiting for a pool worker). The merger spills
-    /// instead of blocking — see the drain note in `merge_frames`.
-    spill: VecDeque<Vec<u8>>,
+    /// instead of blocking — see the drain note in `merge_frames`. Spilled
+    /// entries are refcounted views, not re-owned copies.
+    spill: VecDeque<SharedBuf>,
     writer: Box<dyn crate::storage::WriteStream>,
     /// Queue for FIVER-mode files; its hash job runs on the shared pool.
     queue: Option<ByteQueue>,
@@ -392,7 +403,7 @@ impl FileState {
                 // single running digest) — still zero extra file I/O.
                 let leaf_size = cfg.leaf_size;
                 pool.submit(move || {
-                    let tree = queue_build_tree(q2, leaf_size, hasher_factory);
+                    let tree = queue_build_tree(q2, leaf_size, size, hasher_factory);
                     tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
                 });
             } else {
@@ -431,12 +442,13 @@ impl FileState {
         })
     }
 
-    fn write(&mut self, offset: u64, payload: Vec<u8>) -> Result<()> {
+    fn write(&mut self, offset: u64, payload: SharedBuf) -> Result<()> {
         self.writer.write_at(offset, &payload)?;
         let len = payload.len() as u64;
         if offset == self.contiguous {
             // Algorithm 2 line 7: share the received buffer with the
-            // checksum job — no re-read, no extra syscalls.
+            // checksum job — the storage write borrowed it above, the
+            // queue takes a refcount; no re-read, no copy.
             self.feed(payload);
             self.contiguous += len;
             // Pull any stashed successors into the prefix.
@@ -469,7 +481,7 @@ impl FileState {
 
     /// Hand an in-order buffer to the checksum queue without ever
     /// blocking the merger (spill on a full queue).
-    fn feed(&mut self, payload: Vec<u8>) {
+    fn feed(&mut self, payload: SharedBuf) {
         let Some(q) = &self.queue else { return };
         if self.spill.is_empty() {
             if let Err(back) = q.try_add(payload) {
@@ -603,13 +615,17 @@ pub(crate) fn queue_hash_units(
 
 /// Consume a queue into a streaming Merkle builder — FIVER-Merkle's
 /// COMPUTECHECKSUM, the tree-shaped twin of [`queue_hash_units`]; both
-/// endpoints drain their queue through this.
+/// endpoints drain their queue through this. `size_hint` (the announced
+/// file size) pre-sizes the leaf digest vec so a large file's build never
+/// reallocates mid-stream; leaf hashing consumes the queue's refcounted
+/// buffers as borrowed slices.
 pub(crate) fn queue_build_tree(
     q: ByteQueue,
     leaf_size: u64,
+    size_hint: u64,
     hasher_factory: super::HasherFactory,
 ) -> MerkleTree {
-    let mut builder = MerkleBuilder::new(leaf_size, hasher_factory);
+    let mut builder = MerkleBuilder::with_capacity(leaf_size, size_hint, hasher_factory);
     while let Some(buf) = q.remove() {
         builder.update(&buf);
     }
@@ -830,7 +846,7 @@ mod tests {
         let q = ByteQueue::new(1024);
         let data: Vec<u8> = (0u8..=255).cycle().take(1000).collect();
         for part in data.chunks(100) {
-            q.add(part.to_vec());
+            q.add(part.to_vec().into());
         }
         q.close();
         let mut out = Vec::new();
@@ -852,7 +868,7 @@ mod tests {
         let q = ByteQueue::new(4096);
         let data: Vec<u8> = (0u8..=255).cycle().take(1000).collect();
         for part in data.chunks(333) {
-            q.add(part.to_vec());
+            q.add(part.to_vec().into());
         }
         q.close();
         let units = [(0u64, 0u64, 400u64), (1, 400, 400), (2, 800, 200)];
@@ -889,7 +905,7 @@ mod tests {
     #[test]
     fn queue_hash_early_close_emits_partial() {
         let q = ByteQueue::new(64);
-        q.add(vec![1, 2, 3]);
+        q.add(vec![1, 2, 3].into());
         q.close();
         let mut out = Vec::new();
         let units = [(UNIT_FILE, 0, 100)];
@@ -933,7 +949,7 @@ mod tests {
         let size = data.len() as u64;
         let mut st = FileState::new(0, "f", size, &cfg, &storage, &handle, &tx).unwrap();
         for (i, chunk) in data.chunks(8 * 1024).enumerate() {
-            st.write((i * 8 * 1024) as u64, chunk.to_vec()).unwrap();
+            st.write((i * 8 * 1024) as u64, chunk.to_vec().into()).unwrap();
         }
         assert!(!st.spill.is_empty(), "writes past queue capacity must spill, not block");
         st.end_requested = true;
@@ -966,10 +982,10 @@ mod tests {
         let data: Vec<u8> = (0u8..=255).cycle().take(900).collect();
         let mut st = FileState::new(0, "f", 900, &cfg, &storage, &handle, &tx).unwrap();
         // Stripe skew: chunks 300..600 and 600..900 before 0..300.
-        st.write(300, data[300..600].to_vec()).unwrap();
-        st.write(600, data[600..900].to_vec()).unwrap();
+        st.write(300, data[300..600].to_vec().into()).unwrap();
+        st.write(600, data[600..900].to_vec().into()).unwrap();
         assert!(!st.complete());
-        st.write(0, data[0..300].to_vec()).unwrap();
+        st.write(0, data[0..300].to_vec().into()).unwrap();
         st.end_requested = true;
         assert!(st.complete());
         st.finish().unwrap();

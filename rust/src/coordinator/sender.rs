@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::bufpool::{BufferPool, POOL_GRACE};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
@@ -84,11 +85,16 @@ impl Shared {
         self.local_cv.notify_all();
     }
 
-    fn wait_local(&self, file_idx: u32, unit: u64) -> Vec<u8> {
+    /// Take the unit's local digest *out* of the map (instead of cloning
+    /// it and letting the map accumulate O(files × units) digests for the
+    /// whole session). The verifier re-inserts it while a repair round is
+    /// pending, since the receiver's fresh digest compares against the
+    /// same local value.
+    fn take_local(&self, file_idx: u32, unit: u64) -> Vec<u8> {
         let mut g = self.local.lock().unwrap();
         loop {
-            if let Some(d) = g.get(&(file_idx, unit)) {
-                return d.clone();
+            if let Some(d) = g.remove(&(file_idx, unit)) {
+                return d;
             }
             g = self.local_cv.wait(g).unwrap();
         }
@@ -163,10 +169,18 @@ impl DataOut {
         Ok(())
     }
 
-    /// Hot path: write a Data frame from a borrowed slice (no Vec built).
+    /// Hot path: write a Data frame from a borrowed slice — no owned
+    /// payload built, and large payloads leave as one `writev` of header +
+    /// slice (no serialization copy).
     fn send_data(&self, file_idx: u32, offset: u64, payload: &[u8]) -> Result<()> {
         let mut g = self.0.lock().unwrap();
-        super::protocol::write_data_frame(&mut *g, file_idx, offset, payload)
+        super::protocol::write_data_frame_vectored(&mut *g, file_idx, offset, payload)
+    }
+
+    /// The repair twin: Fix frames from a borrowed (pooled) slice.
+    fn send_fix(&self, file_idx: u32, offset: u64, payload: &[u8]) -> Result<()> {
+        let mut g = self.0.lock().unwrap();
+        super::protocol::write_fix_frame_vectored(&mut *g, file_idx, offset, payload)
     }
 
     fn flush(&self) -> Result<()> {
@@ -187,6 +201,9 @@ pub struct SenderSession {
     /// Round-robin stripe cursor for Data frames.
     rr: usize,
     pool: PoolHandle,
+    /// Data-plane buffer pool: one pooled buffer per read, shared by
+    /// refcount between the socket write and the hash queue.
+    bufs: BufferPool,
     ck_tx: Option<mpsc::SyncSender<(u32, String, u64, u64, u64)>>,
     ck_handle: Option<std::thread::JoinHandle<Result<()>>>,
     verifier: Option<std::thread::JoinHandle<Result<()>>>,
@@ -200,6 +217,7 @@ impl SenderSession {
     /// Wire up a session over connected data stripes + control socket.
     /// `names` is the full dataset name list (indexed by global file_idx —
     /// the verifier re-reads failed ranges by name).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         datas: Vec<TcpStream>,
         ctrl: TcpStream,
@@ -208,6 +226,7 @@ impl SenderSession {
         cfg: SessionConfig,
         faults: FaultPlan,
         pool: PoolHandle,
+        bufs: BufferPool,
     ) -> Result<SenderSession> {
         anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
         let shared = Shared::new();
@@ -224,8 +243,9 @@ impl SenderSession {
             let data_out2 = data_outs[0].clone();
             let cfg2 = cfg.clone();
             let faults2 = faults.clone();
+            let bufs2 = bufs.clone();
             Some(std::thread::spawn(move || {
-                run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2)
+                run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2, &bufs2)
             }))
         } else {
             None
@@ -265,6 +285,7 @@ impl SenderSession {
             data_outs,
             rr: 0,
             pool,
+            bufs,
             ck_tx,
             ck_handle,
             verifier,
@@ -302,7 +323,7 @@ impl SenderSession {
                 // drains from the queue (no second read of the source).
                 let leaf_size = self.cfg.leaf_size;
                 self.pool.submit(move || {
-                    shared2.put_tree(file_idx, queue_build_tree(q2, leaf_size, hasher));
+                    shared2.put_tree(file_idx, queue_build_tree(q2, leaf_size, size, hasher));
                 });
             } else {
                 let units2 = units.clone();
@@ -322,25 +343,27 @@ impl SenderSession {
         let mut offset = 0u64;
         let mut unit_cursor = 0usize;
         while offset < size {
-            let want = self.cfg.buf_size.min((size - offset) as usize);
-            let mut clean = vec![0u8; want];
-            let n = reader.read_next(&mut clean)?;
+            let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
+            // One pooled buffer per read: the socket borrows it, the hash
+            // queue shares it by refcount, and it returns to the pool when
+            // the checksum worker drops it — no allocation, no copy.
+            let mut clean = self.bufs.get_or_alloc(POOL_GRACE);
+            let n = reader.read_next(&mut clean[..want])?;
             anyhow::ensure!(n > 0, "short read of {name} at {offset}");
-            clean.truncate(n);
             // Corruption happens on the wire: flip bits, send, then flip
             // back (XOR is self-inverse) so the local checksum hashes the
             // true bytes while the receiver sees the corrupted ones.
-            let flips = self.injector.corrupt(&mut clean);
+            let flips = self.injector.corrupt(&mut clean[..n]);
             let lane = self.rr % self.data_outs.len();
             self.rr += 1;
-            self.data_outs[lane].send_data(file_idx, offset, &clean)?;
+            self.data_outs[lane].send_data(file_idx, offset, &clean[..n])?;
             for &(pos, bit) in &flips {
                 clean[pos] ^= 1 << bit;
             }
             self.report.bytes_sent += n as u64;
             offset += n as u64;
             if let Some(q) = &queue {
-                q.add(clean);
+                q.add(clean.freeze(n));
             }
             // Re-read-mode: emit checksum jobs for completed units
             // (block-level overlap within the file).
@@ -444,6 +467,7 @@ pub fn run_sender(
         cfg.clone(),
         faults.clone(),
         pool.handle(),
+        cfg.make_pool(1),
     )?;
     for (i, name) in names.iter().enumerate() {
         session.send_file(i as u32, name)?;
@@ -455,6 +479,7 @@ pub fn run_sender(
 /// repair mismatches by re-reading the failed source range and sending Fix
 /// frames. FIVER-Merkle mismatches are binary-searched down the digest
 /// tree first, so only the corrupted leaf ranges are re-read and re-sent.
+#[allow(clippy::too_many_arguments)]
 fn run_verifier(
     ctrl: TcpStream,
     shared: Arc<Shared>,
@@ -463,6 +488,7 @@ fn run_verifier(
     cfg: &SessionConfig,
     names: &[String],
     faults: &FaultPlan,
+    bufs: &BufferPool,
 ) -> Result<()> {
     let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
     let mut ctrl_out = BufWriter::new(ctrl);
@@ -484,7 +510,7 @@ fn run_verifier(
         };
         match frame {
             Frame::Digest { file_idx, unit, digest } => {
-                let local = shared.wait_local(file_idx, unit);
+                let local = shared.take_local(file_idx, unit);
                 shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
                 let ok = local == digest;
                 Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
@@ -493,8 +519,10 @@ fn run_verifier(
                     shared.unit_ok(file_idx);
                     continue;
                 }
-                // Mismatch: checksum verification failed — repair the unit
-                // (Algorithm 1 line 21 generalized to sub-file resolution).
+                // Mismatch: the receiver recomputes after the repair lands
+                // and offers a fresh digest, which compares against the
+                // same local value — put it back for that round.
+                shared.put_local(file_idx, unit, local);
                 shared.failures.fetch_add(1, Ordering::SeqCst);
                 let attempt = bump_attempt(&mut attempts, file_idx, unit);
                 let name = &names[file_idx as usize];
@@ -502,7 +530,7 @@ fn run_verifier(
                 let (offset, len) = unit_range(cfg, unit, size);
                 send_repair_range(
                     &storage, &data_out, &shared, faults, cfg, file_idx, name, offset, len,
-                    attempt,
+                    attempt, bufs,
                 )?;
                 data_out.send(&Frame::FixEnd { file_idx, unit })?;
                 data_out.flush()?;
@@ -564,6 +592,7 @@ fn run_verifier(
                         off,
                         last_off + last_len - off,
                         attempt,
+                        bufs,
                     )?;
                 }
                 data_out.send(&Frame::FixEnd { file_idx, unit: super::protocol::UNIT_FILE })?;
@@ -595,6 +624,9 @@ fn bump_attempt(attempts: &mut HashMap<(u32, u64), u32>, file_idx: u32, unit: u6
 /// Re-read `[offset, offset+len)` from the source and stream it as Fix
 /// frames, applying the fault plan's occurrence-`attempt` flips to the
 /// outbound copy only (local digests keep hashing clean source bytes).
+/// One pooled buffer serves the whole range: each Fix frame sends the
+/// borrowed slice (scatter/gather, no owned payload), so repairs ride the
+/// same zero-copy plane as the stream.
 #[allow(clippy::too_many_arguments)]
 fn send_repair_range(
     storage: &Arc<dyn Storage>,
@@ -607,17 +639,19 @@ fn send_repair_range(
     offset: u64,
     len: u64,
     attempt: u32,
+    bufs: &BufferPool,
 ) -> Result<()> {
     let mut r = storage.open_read(name)?;
     let mut pos = offset;
     let end = offset + len;
-    let mut buf = vec![0u8; cfg.buf_size];
+    let mut buf = bufs.get_or_alloc(POOL_GRACE);
+    let step = cfg.buf_size.min(buf.len());
     while pos < end {
-        let want = buf.len().min((end - pos) as usize);
+        let want = step.min((end - pos) as usize);
         let n = r.read_at(pos, &mut buf[..want])?;
         anyhow::ensure!(n > 0, "short repair read");
         faults.corrupt_in_place(file_idx as usize, attempt, pos, &mut buf[..n]);
-        data_out.send(&Frame::Fix { file_idx, offset: pos, payload: buf[..n].to_vec() })?;
+        data_out.send_fix(file_idx, pos, &buf[..n])?;
         shared.bytes_resent.fetch_add(n as u64, Ordering::SeqCst);
         shared.bytes_reread.fetch_add(n as u64, Ordering::SeqCst);
         pos += n as u64;
@@ -752,10 +786,12 @@ mod tests {
     fn shared_local_digest_rendezvous() {
         let shared = Shared::new();
         let s2 = shared.clone();
-        let t = std::thread::spawn(move || s2.wait_local(3, 7));
+        let t = std::thread::spawn(move || s2.take_local(3, 7));
         std::thread::sleep(std::time::Duration::from_millis(20));
         shared.put_local(3, 7, vec![0xAB]);
         assert_eq!(t.join().unwrap(), vec![0xAB]);
+        // take_local removed the entry; the session map stays bounded.
+        assert!(shared.local.lock().unwrap().is_empty());
     }
 
     #[test]

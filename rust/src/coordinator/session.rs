@@ -117,6 +117,9 @@ impl ReceiverEndpoint {
         }
 
         let pool = HashPool::new(eng.pool_workers());
+        // One data-plane buffer pool per endpoint: payload decode, storage
+        // write and hash queue all share its refcounted buffers.
+        let bufs = cfg.make_pool(n);
         let mut handles = Vec::new();
         for sid in 0..n {
             let ctrl = ctrls[sid].take().expect("routed above");
@@ -125,8 +128,9 @@ impl ReceiverEndpoint {
             let storage2 = storage.clone();
             let cfg2 = cfg.clone();
             let handle = pool.handle();
+            let bufs2 = bufs.clone();
             handles.push(std::thread::spawn(move || {
-                serve_session_multi(stripes, ctrl, storage2, &cfg2, handle)
+                serve_session_multi(stripes, ctrl, storage2, &cfg2, handle, bufs2)
             }));
         }
         let mut reports = Vec::with_capacity(n);
@@ -175,6 +179,9 @@ pub fn connect_and_send_engine(
     }
     let queue = Arc::new(WorkStealQueue::new(eng.plan(&sizes), n));
     let pool = HashPool::new(eng.pool_workers());
+    // Shared sender-side buffer pool: every session's reads recycle
+    // through it, and hash jobs return buffers as they drain the queues.
+    let bufs = cfg.make_pool(n);
     let start = Instant::now();
 
     let mut handles = Vec::new();
@@ -185,6 +192,7 @@ pub fn connect_and_send_engine(
         let cfg = cfg.clone();
         let faults = faults.clone();
         let handle = pool.handle();
+        let bufs = bufs.clone();
         let data_addr = data_addr.to_string();
         let ctrl_addr = ctrl_addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<TransferReport> {
@@ -204,8 +212,16 @@ pub fn connect_and_send_engine(
                 .write_to(&mut d)?;
                 stripes.push(d);
             }
-            let mut session =
-                SenderSession::new(stripes, ctrl, names.clone(), storage, cfg, faults, handle)?;
+            let mut session = SenderSession::new(
+                stripes,
+                ctrl,
+                names.clone(),
+                storage,
+                cfg,
+                faults,
+                handle,
+                bufs,
+            )?;
             while let Some(item) = queue.next(sid) {
                 for &fi in &item.files {
                     session.send_file(fi as u32, &names[fi])?;

@@ -63,8 +63,47 @@ pub fn concurrency_sweep() -> String {
         }
         out.push_str(&format!("\n{} — simulated:\n{}", tb.name, table.render()));
     }
+    out.push_str(&pool_starvation_sweep());
     out.push_str(&real_mode_sweep());
     out
+}
+
+/// Shrink the data-plane buffer pool under fixed concurrency: the point
+/// where the pool (not hash/net/disk) becomes the bottleneck — the regime
+/// `--pool-buffers` must be kept out of. Pool capacity is an explicit sim
+/// resource (see [`crate::sim::testbed::SimEnv::new_parallel`]).
+fn pool_starvation_sweep() -> String {
+    let tb = Testbed::hpclab_40g();
+    let ds = Dataset::uniform("10M", 10 * MB, 200);
+    let n = 4usize;
+    let base = AlgoParams::default();
+    let queue_bufs = base.queue_capacity / base.io_buf_size;
+    let mut table = fmt::Table::new(&["pool buffers", "time", "vs unbounded"]);
+    let unbounded = run_concurrent(tb, base, &ds, &FaultPlan::none(), Algorithm::Fiver, n, n);
+    for (label, bufs) in [
+        ("8x queue", 8 * queue_bufs),
+        ("4x queue", 4 * queue_bufs),
+        ("1x queue", queue_bufs),
+        ("1/2 queue", queue_bufs / 2),
+        ("1/4 queue", queue_bufs / 4),
+    ] {
+        // Per-endpoint pool sized against ONE session's queue worth of
+        // buffers: below ~1x the pool (not hash/net/disk) caps the
+        // endpoint and the sweep shows the cliff.
+        let params = AlgoParams { pool_buffers: bufs, ..base };
+        let s = run_concurrent(tb, params, &ds, &FaultPlan::none(), Algorithm::Fiver, n, n);
+        table.row(&[
+            label.to_string(),
+            fmt::secs(s.total_time),
+            format!("{:.2}x", s.total_time / unbounded.total_time),
+        ]);
+    }
+    format!(
+        "\n{} — pool starvation at concurrency {n} (unbounded: {}):\n{}",
+        tb.name,
+        fmt::secs(unbounded.total_time),
+        table.render()
+    )
 }
 
 /// A scaled-down real engine run over loopback TCP (the 1000×10M shape at
@@ -127,6 +166,7 @@ mod tests {
         let out = concurrency_sweep();
         assert!(out.contains("HPCLab-40G"));
         assert!(out.contains("ESNet-WAN"));
+        assert!(out.contains("pool starvation"));
         assert!(out.contains("real mode"));
         // One row per swept N per testbed.
         for n in SWEEP {

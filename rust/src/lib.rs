@@ -18,6 +18,12 @@
 //!   (`--parallel`), all feeding one shared hash worker pool per endpoint
 //!   ([`coordinator::scheduler`], [`coordinator::pool`]; small files
 //!   aggregate into batched work items so control exchanges amortize).
+//!   The byte-moving layer is a **zero-copy data plane**
+//!   ([`coordinator::bufpool`]): refcounted sliceable buffers recycled
+//!   through a fixed-size pool, vectored (`writev`) frame writes, and
+//!   length-prefixed reads decoded straight into pooled buffers, so the
+//!   steady state performs no payload allocation or copy per buffer
+//!   cycle (DESIGN.md "Data plane & buffer ownership").
 //!   [`sim`] re-runs the same scheduling policies — including the engine,
 //!   via [`sim::algorithms::run_concurrent`] — inside a discrete-event
 //!   testbed model so the paper's 165 GB / 100 Gbps experiments (and

@@ -18,6 +18,16 @@
 //! sets its repair granularity (default 64 KiB). Both endpoints must
 //! agree on the algorithm and leaf size.
 //!
+//! Data-plane knobs (zero-copy buffer pool; see
+//! `fiver::coordinator::bufpool`):
+//!
+//! * `--buffer-size N` (alias `--buf-size`) — I/O buffer granularity; one
+//!   pooled buffer per read, shared by refcount between socket and hash
+//!   queue.
+//! * `--pool-buffers N` — buffers in the endpoint's pool (default: auto,
+//!   sized so a full checksum queue per session plus in-flight slack
+//!   never exhausts it).
+//!
 //! Parallel engine knobs (serve/send/local; both endpoints must agree on
 //! `--concurrency` and `--parallel`):
 //!
@@ -69,12 +79,17 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
         format!("unknown --alg ({})", names.join("|"))
     })?;
     let mut cfg = SessionConfig::new(alg, hasher_factory(args.opt_or("hash", "fvr256"))?);
-    cfg.buf_size = args.opt_u64("buf-size", cfg.buf_size as u64) as usize;
+    // `--buffer-size` is the documented data-plane knob; `--buf-size` is
+    // kept as its long-standing alias.
+    cfg.buf_size =
+        args.opt_u64("buffer-size", args.opt_u64("buf-size", cfg.buf_size as u64)) as usize;
     cfg.block_size = args.opt_u64("block-size", cfg.block_size);
     cfg.queue_capacity = args.opt_u64("queue-capacity", cfg.queue_capacity as u64) as usize;
     cfg.hybrid_threshold = args.opt_u64("hybrid-threshold", cfg.hybrid_threshold);
     cfg.leaf_size = args.opt_u64("leaf-size", cfg.leaf_size);
+    cfg.pool_buffers = args.opt_u64("pool-buffers", 0) as usize;
     anyhow::ensure!(cfg.leaf_size > 0, "--leaf-size must be positive");
+    anyhow::ensure!(cfg.buf_size > 0, "--buffer-size must be positive");
     Ok(cfg)
 }
 
@@ -116,9 +131,10 @@ fn warn_unused_engine_flags(args: &Args) {
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[
-        "data", "ctrl", "dir", "alg", "hash", "buf-size", "block-size", "queue-capacity",
-        "hybrid-threshold", "leaf-size", "files", "size", "faults", "seed", "concurrency",
-        "parallel", "hash-workers", "batch-threshold", "batch-bytes",
+        "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
+        "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "files", "size",
+        "faults", "seed", "concurrency", "parallel", "hash-workers", "batch-threshold",
+        "batch-bytes",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");

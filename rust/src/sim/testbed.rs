@@ -31,6 +31,15 @@ pub struct Res {
     /// One checksum core per host (the paper's single-threaded hashing).
     pub src_hash: ResourceId,
     pub dst_hash: ResourceId,
+    /// Data-plane buffer pool throughput cap per host (infinite when
+    /// `AlgoParams::pool_buffers` is 0). Little's law: a coupled FIVER
+    /// flow holds each pooled buffer from fill until the hash worker
+    /// drops it, so aggregate throughput <= pool_bytes / residency with
+    /// residency ~ (queue_capacity + io_buf_size) / hash_rate. An ample
+    /// pool leaves this far above every other bottleneck; a starved pool
+    /// caps the whole endpoint — the regime concurrency sweeps probe.
+    pub src_pool: ResourceId,
+    pub dst_pool: ResourceId,
 }
 
 /// A simulated testbed session set: one TCP connection and transfer
@@ -75,6 +84,21 @@ impl SimEnv {
         let n = sessions.max(1);
         let w = hash_workers.max(1) as f64;
         let mut sim = FluidSim::new();
+        // Pooled buffer capacity as a rate cap (see `Res::src_pool`):
+        // pool_bytes / residency, residency ~ (queue + one buffer) /
+        // SINGLE-worker hash rate — a buffer is held until *its file's*
+        // hash job (one worker) drains it, so summing over sessions gives
+        // an aggregate cap scaled by the single-core rate, not the pooled
+        // rate. pool_buffers == 0 models an unbounded pool.
+        let pool_rate = |hash_rate_one: f64| -> f64 {
+            if params.pool_buffers == 0 {
+                f64::INFINITY
+            } else {
+                let pool_bytes = (params.pool_buffers * params.io_buf_size) as f64;
+                let residency_bytes = (params.queue_capacity + params.io_buf_size) as f64;
+                pool_bytes * hash_rate_one / residency_bytes
+            }
+        };
         let res = Res {
             src_disk: sim.add_resource("src_disk", tb.src.disk_read),
             dst_disk: sim.add_resource("dst_disk", tb.dst.disk_read.max(tb.dst.disk_write)),
@@ -83,6 +107,8 @@ impl SimEnv {
             dst_mem: sim.add_resource("dst_mem", tb.dst.mem_read),
             src_hash: sim.add_resource("src_hash", tb.src.hash_rate(params.hash) * w),
             dst_hash: sim.add_resource("dst_hash", tb.dst.hash_rate(params.hash) * w),
+            src_pool: sim.add_resource("src_pool", pool_rate(tb.src.hash_rate(params.hash))),
+            dst_pool: sim.add_resource("dst_pool", pool_rate(tb.dst.hash_rate(params.hash))),
         };
         SimEnv {
             sim,
@@ -273,6 +299,8 @@ impl SimEnv {
                 (self.res.dst_disk, w_write),
                 (self.res.src_hash, 1.0),
                 (self.res.dst_hash, 1.0),
+                (self.res.src_pool, 1.0),
+                (self.res.dst_pool, 1.0),
             ],
             Some(cap),
         );
@@ -474,6 +502,37 @@ mod tests {
         );
         assert_eq!(e.sessions(), 2);
         assert!(!e.transfer_active());
+    }
+
+    #[test]
+    fn starved_buffer_pool_caps_fiver_throughput() {
+        // Ample pool: the coupled flow is hash-bound (3 Gbps on
+        // HPCLab-40G). A pool holding only half the queue's worth of
+        // bytes halves the achievable rate (Little's law cap), and an
+        // unbounded pool (pool_buffers = 0) matches the ample case.
+        let base = AlgoParams::default();
+        let queue_bufs = base.queue_capacity / base.io_buf_size;
+        let ample = AlgoParams { pool_buffers: 4 * queue_bufs, ..base };
+        let starved = AlgoParams { pool_buffers: queue_bufs / 2, ..base };
+        let time_with = |params: AlgoParams| {
+            let mut e = SimEnv::new_parallel(Testbed::hpclab_40g(), params, 1, 1);
+            let f = file(0, 10 * GB);
+            let flow = e.start_fiver_flow(&f, 0, f.size);
+            e.pump_until(flow);
+            e.now()
+        };
+        let t_unbounded = time_with(base);
+        let t_ample = time_with(ample);
+        let t_starved = time_with(starved);
+        assert!(
+            (t_ample - t_unbounded).abs() / t_unbounded < 0.02,
+            "ample pool must not throttle: {t_ample:.1}s vs {t_unbounded:.1}s"
+        );
+        assert!(
+            t_starved > 1.7 * t_ample,
+            "half-queue pool should roughly halve throughput: \
+             {t_starved:.1}s vs {t_ample:.1}s"
+        );
     }
 
     #[test]

@@ -1,11 +1,18 @@
-//! Storage backends for the real-mode coordinator: buffered file I/O with
-//! the read/write patterns of the paper's Algorithms 1 & 2, plus an
-//! in-memory backend for deterministic tests and fault experiments that
-//! must not touch the disk.
+//! Storage backends for the real-mode coordinator: file I/O with the
+//! read/write patterns of the paper's Algorithms 1 & 2, plus an in-memory
+//! backend for deterministic tests and fault experiments that must not
+//! touch the disk.
+//!
+//! The filesystem backend uses *positioned* I/O (`pread`/`pwrite` on
+//! Unix): every ranged access is one syscall instead of a seek + I/O
+//! pair, and ranged repair writes never disturb the sequential cursor —
+//! the storage half of the zero-copy data plane (readers fill pooled
+//! buffers, writers consume borrowed slices; see
+//! [`crate::coordinator::bufpool`]).
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -61,13 +68,13 @@ impl Storage for FsStorage {
     fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
         let f = File::open(self.path(name))
             .with_context(|| format!("opening {name} for read"))?;
-        Ok(Box::new(FsRead { f }))
+        Ok(Box::new(FsRead { f, pos: 0 }))
     }
 
     fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>> {
         let f = File::create(self.path(name))
             .with_context(|| format!("opening {name} for write"))?;
-        Ok(Box::new(FsWrite { f }))
+        Ok(Box::new(FsWrite { f, pos: 0 }))
     }
 
     fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
@@ -75,7 +82,7 @@ impl Storage for FsStorage {
             .write(true)
             .open(self.path(name))
             .with_context(|| format!("opening {name} for update"))?;
-        Ok(Box::new(FsWrite { f }))
+        Ok(Box::new(FsWrite { f, pos: 0 }))
     }
 
     fn size_of(&self, name: &str) -> Result<u64> {
@@ -85,43 +92,86 @@ impl Storage for FsStorage {
     }
 }
 
+/// Positioned read of one range: `pread` on Unix (no seek, kernel cursor
+/// untouched), seek + read elsewhere.
+fn pread(f: &mut File, offset: u64, buf: &mut [u8]) -> Result<usize> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        Ok(f.read_at(buf, offset)?)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        f.seek(SeekFrom::Start(offset))?;
+        Ok(f.read(buf)?)
+    }
+}
+
+/// Positioned write of one range: `pwrite` on Unix, seek + write elsewhere.
+fn pwrite_all(f: &mut File, offset: u64, data: &[u8]) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        f.write_all_at(data, offset)?;
+        Ok(())
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom};
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(data)?;
+        Ok(())
+    }
+}
+
+/// Filesystem reader with an explicit cursor: sequential reads advance it,
+/// ranged reads reposition it — every access is a single positioned-I/O
+/// syscall (the same cursor semantics as [`MemStream`]).
 struct FsRead {
     f: File,
+    pos: u64,
 }
 
 impl ReadStream for FsRead {
     fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
-        self.f.seek(SeekFrom::Start(offset))?;
+        self.pos = offset;
         self.read_next(buf)
     }
 
     fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
         let mut total = 0;
         while total < buf.len() {
-            let n = self.f.read(&mut buf[total..])?;
+            let n = pread(&mut self.f, self.pos, &mut buf[total..])?;
             if n == 0 {
                 break;
             }
             total += n;
+            self.pos += n as u64;
         }
         Ok(total)
     }
 }
 
+/// Filesystem writer with an explicit append cursor. Ranged writes
+/// (`write_at`) land without touching the cursor beyond keeping it at the
+/// logical end, so repair writes interleave freely with a sequential
+/// stream.
 struct FsWrite {
     f: File,
+    pos: u64,
 }
 
 impl WriteStream for FsWrite {
     fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
-        self.f.seek(SeekFrom::Start(offset))?;
-        self.f.write_all(data)?;
-        self.f.seek(SeekFrom::End(0))?;
+        pwrite_all(&mut self.f, offset, data)?;
+        self.pos = self.pos.max(offset + data.len() as u64);
         Ok(())
     }
 
     fn write_next(&mut self, data: &[u8]) -> Result<()> {
-        self.f.write_all(data)?;
+        pwrite_all(&mut self.f, self.pos, data)?;
+        self.pos += data.len() as u64;
         Ok(())
     }
 
@@ -288,6 +338,48 @@ mod tests {
         let data = s.get("f").unwrap();
         assert_eq!(&data[39..42], &[0xAA, 0xBB, 0xBB]);
         assert_eq!(data.len(), 100);
+    }
+
+    #[test]
+    fn fs_ranged_rewrite_keeps_sequential_cursor() {
+        // Positioned repair writes must not disturb the stream cursor:
+        // write 100 bytes, patch the middle, keep streaming — exactly how
+        // Fix frames interleave with a later file's Data frames.
+        let dir = crate::util::tmpdir::unique_dir("fiver-pwrite");
+        let s = FsStorage::new(&dir).unwrap();
+        {
+            let mut w = s.open_write("f").unwrap();
+            w.write_next(&[0xAA; 100]).unwrap();
+            w.write_at(40, &[0xBB; 10]).unwrap();
+            w.write_next(&[0xCC; 10]).unwrap();
+            w.flush().unwrap();
+        }
+        assert_eq!(s.size_of("f").unwrap(), 110);
+        let mut r = s.open_read("f").unwrap();
+        let mut back = vec![0u8; 110];
+        assert_eq!(r.read_next(&mut back).unwrap(), 110);
+        assert_eq!(&back[39..42], &[0xAA, 0xBB, 0xBB]);
+        assert_eq!(&back[100..], &[0xCC; 10]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fs_read_at_then_sequential_continues() {
+        let dir = crate::util::tmpdir::unique_dir("fiver-pread");
+        let s = FsStorage::new(&dir).unwrap();
+        {
+            let mut w = s.open_write("f").unwrap();
+            w.write_next(&(0u8..200).collect::<Vec<u8>>()).unwrap();
+            w.flush().unwrap();
+        }
+        let mut r = s.open_read("f").unwrap();
+        let mut buf = [0u8; 10];
+        assert_eq!(r.read_at(50, &mut buf).unwrap(), 10);
+        assert_eq!(buf[0], 50);
+        // Sequential read resumes after the ranged one (MemStream parity).
+        assert_eq!(r.read_next(&mut buf).unwrap(), 10);
+        assert_eq!(buf[0], 60);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

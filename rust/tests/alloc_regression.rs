@@ -1,0 +1,143 @@
+//! Allocation regression gate for the zero-copy data plane: a transfer's
+//! heap traffic must scale with the buffer *pool* (O(pool) warmup), not
+//! with the number of chunks moved.
+//!
+//! Method: a `#[global_allocator]` shim counts allocation events and
+//! bytes, and we compare a 16 MB and a 64 MB single-file FIVER transfer
+//! over loopback TCP with FsStorage on both ends (identical
+//! thread/session structure; only the chunk count differs: 64 vs 256
+//! chunks at 256 KiB).
+//!
+//! What the pooled plane still pays per chunk is two constant-size
+//! `Arc<Backing>` control blocks (sender freeze + receiver decode,
+//! ~100 B each) plus mpsc's amortized block allocation — versus the two
+//! fresh *zeroed 256 KiB* `Vec`s per chunk of the owned plane. The
+//! discriminating assertion is therefore on **bytes**: the pre-pool plane
+//! allocated ~2 × buf_size per chunk (~512 KiB); the pooled plane must
+//! stay under buf_size/16 per chunk (16 KiB — 60x headroom over the
+//! expected ~250 B, and 32x below the old cost). A looser event-count
+//! ceiling guards against reintroducing per-chunk Vec churn on top of
+//! the refcount residue.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::HashAlgorithm;
+use fiver::storage::{FsStorage, Storage};
+use fiver::util::rng::SplitMix64;
+use fiver::util::tmpdir::TempDir;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Counts allocation events and bytes (alloc + realloc); frees are
+/// irrelevant to the O(pool)-vs-O(chunks) question.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const BUF_SIZE: usize = 256 * 1024;
+
+/// Run one single-file FIVER loopback transfer over FsStorage and return
+/// (allocation events, allocated bytes) for the transfer itself.
+fn transfer_cost(base: &TempDir, tag: &str, size: usize) -> (u64, u64) {
+    let src_dir = base.join(&format!("src-{tag}"));
+    let dst_dir = base.join(&format!("dst-{tag}"));
+    let src = FsStorage::new(&src_dir).expect("src storage");
+    {
+        let mut data = vec![0u8; size];
+        SplitMix64::new(size as u64).fill_bytes(&mut data);
+        let mut w = src.open_write("f").expect("create source file");
+        w.write_next(&data).expect("write source file");
+        w.flush().expect("flush source file");
+    }
+    let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+    cfg.buf_size = BUF_SIZE;
+    // Pin the pool well below the transfer's demand so every run
+    // saturates it: each endpoint allocates exactly `pool_buffers`
+    // backings regardless of scheduling, making the backing-allocation
+    // cost identical across runs (lazy sizing would otherwise add
+    // +-few x 256 KiB of run-to-run noise to the byte delta). The
+    // producer then simply blocks until the hash worker returns a buffer
+    // — pool-level backpressure, still zero fallback allocations.
+    cfg.pool_buffers = 8;
+    let names = vec!["f".to_string()];
+    let src: Arc<dyn Storage> = Arc::new(src);
+    let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&dst_dir).expect("dst storage"));
+
+    let events_before = ALLOCS.load(Ordering::SeqCst);
+    let bytes_before = ALLOC_BYTES.load(Ordering::SeqCst);
+    let (report, receiver) =
+        run_local_transfer(&names, src, dst, &cfg, &FaultPlan::none()).expect("transfer");
+    let events = ALLOCS.load(Ordering::SeqCst) - events_before;
+    let bytes = ALLOC_BYTES.load(Ordering::SeqCst) - bytes_before;
+    assert_eq!(report.bytes_sent, size as u64);
+    assert_eq!(receiver.units_failed, 0);
+    (events, bytes)
+}
+
+#[test]
+fn steady_state_allocations_scale_with_pool_not_chunks() {
+    let base = TempDir::create("fiver-allocgate").expect("tempdir");
+    // Warm up allocator arenas, lazy statics and thread machinery so the
+    // measured runs differ only in chunk count.
+    transfer_cost(&base, "warmup", 4 << 20);
+
+    let small = 16usize << 20;
+    let large = 64usize << 20;
+    let (ev_small, by_small) = transfer_cost(&base, "small", small);
+    let (ev_large, by_large) = transfer_cost(&base, "large", large);
+    let chunk_delta = ((large - small) / BUF_SIZE) as u64; // 192 extra chunks
+
+    // Bytes: the discriminator. Owned-Vec plane: ~2 x 256 KiB per chunk.
+    // Pooled plane: ~250 B per chunk. Budget: 16 KiB per chunk — 60x
+    // over the expected residue (headroom for a rare scheduler-stall
+    // fallback allocation), 32x under the owned plane's cost.
+    let byte_delta = by_large.saturating_sub(by_small);
+    let byte_budget = chunk_delta * (BUF_SIZE as u64 / 16);
+    assert!(
+        byte_delta < byte_budget,
+        "heap bytes scale with chunks: {by_small} B at 16 MB vs {by_large} B at 64 MB \
+         (delta {byte_delta} B for {chunk_delta} extra chunks, budget {byte_budget} B — \
+         payload buffers must recycle through the pool, not reallocate per chunk)"
+    );
+
+    // Events: a ceiling over the known per-chunk residue (two refcount
+    // blocks + amortized channel blocks), guarding against reintroduced
+    // per-chunk Vec churn on top of it.
+    let event_delta = ev_large.saturating_sub(ev_small);
+    assert!(
+        event_delta < chunk_delta * 3,
+        "allocation events scale past the refcount residue: {ev_small} at 16 MB vs \
+         {ev_large} at 64 MB (delta {event_delta} for {chunk_delta} extra chunks)"
+    );
+}

@@ -1,0 +1,245 @@
+//! Property tests over the zero-copy data plane's invariants:
+//! `SharedBuf` slicing/aliasing, `BufferPool` return-on-last-drop and
+//! exhaustion backpressure, and `ByteQueue` byte accounting with sliced
+//! refcounted buffers (in-tree seeded generators — no proptest crate
+//! offline; see rust/src/util/rng.rs).
+
+use std::time::Duration;
+
+use fiver::coordinator::bufpool::{BufferPool, SharedBuf};
+use fiver::coordinator::queue::ByteQueue;
+use fiver::util::rng::SplitMix64;
+
+/// PROPERTY: arbitrary slice trees over one backing always read the same
+/// bytes as the equivalent Vec slices, never alias outside their range,
+/// and keep the backing alive until the last view drops.
+#[test]
+fn prop_slices_match_vec_semantics() {
+    for seed in 0..30u64 {
+        let mut rng = SplitMix64::new(seed + 0xB0F);
+        let len = rng.range(1, 4096) as usize;
+        let mut data = vec![0u8; len];
+        rng.fill_bytes(&mut data);
+        let pool = BufferPool::new(len, 1);
+        let mut buf = pool.get();
+        buf[..len].copy_from_slice(&data);
+        let root = buf.freeze(len);
+        // Random nested slices.
+        let mut views: Vec<(usize, usize, SharedBuf)> = vec![(0, len, root.clone())];
+        drop(root);
+        for _ in 0..rng.range(1, 16) {
+            let (base_off, base_len, view) = {
+                let pick = &views[rng.below(views.len() as u64) as usize];
+                (pick.0, pick.1, pick.2.clone())
+            };
+            let start = rng.below(base_len as u64 + 1) as usize;
+            let end = start + rng.below((base_len - start) as u64 + 1) as usize;
+            let sub = view.slice(start, end);
+            assert_eq!(
+                &sub[..],
+                &data[base_off + start..base_off + end],
+                "seed {seed}: slice [{start},{end}) of view at +{base_off}"
+            );
+            views.push((base_off + start, end - start, sub));
+        }
+        // The single backing is still lent out while any view lives.
+        assert!(pool.try_get().is_none(), "seed {seed}: backing must stay lent");
+        drop(views);
+        assert_eq!(pool.free_buffers(), 1, "seed {seed}: last drop returns the backing");
+        assert_eq!(pool.allocated(), 1, "seed {seed}: exactly one backing ever allocated");
+    }
+}
+
+/// PROPERTY: dropping N references (clones + slices) in any order returns
+/// the buffer exactly once, after the final drop.
+#[test]
+fn prop_return_on_last_drop_any_order() {
+    for seed in 0..30u64 {
+        let mut rng = SplitMix64::new(seed + 0xD00D);
+        let pool = BufferPool::new(32, 1);
+        let root = pool.get().freeze(32);
+        let mut refs: Vec<SharedBuf> = vec![root];
+        for _ in 0..rng.range(1, 10) {
+            let src = refs[rng.below(refs.len() as u64) as usize].clone();
+            let view = if rng.below(2) == 0 {
+                let mid = rng.below(src.len() as u64 + 1) as usize;
+                src.slice(0, mid)
+            } else {
+                src
+            };
+            refs.push(view);
+        }
+        // Shuffle-drop.
+        while !refs.is_empty() {
+            let i = rng.below(refs.len() as u64) as usize;
+            refs.swap_remove(i);
+            if refs.is_empty() {
+                break;
+            }
+            assert_eq!(pool.free_buffers(), 0, "seed {seed}: early return with live refs");
+        }
+        assert_eq!(pool.free_buffers(), 1, "seed {seed}");
+    }
+}
+
+/// PROPERTY: an exhausted pool blocks `get` until a buffer returns, and
+/// `get_or_alloc` degrades to a counted unpooled allocation instead of
+/// blocking forever.
+#[test]
+fn prop_exhaustion_backpressure() {
+    let pool = BufferPool::new(64, 2);
+    let a = pool.get().freeze(64);
+    let b = pool.get().freeze(64);
+    assert!(pool.try_get().is_none());
+
+    // Blocking get parks until a return. The waiter hands its PoolBuf
+    // back to this thread so the pool stays exhausted for the fallback
+    // assertions below.
+    let pool2 = pool.clone();
+    let waiter = std::thread::spawn(move || {
+        let start = std::time::Instant::now();
+        let got = pool2.get();
+        (start.elapsed(), got)
+    });
+    std::thread::sleep(Duration::from_millis(60));
+    drop(a);
+    let (waited, got) = waiter.join().unwrap();
+    assert!(got.is_pooled());
+    assert!(waited >= Duration::from_millis(40), "get must block on exhaustion: {waited:?}");
+
+    // get_or_alloc gives up after the grace period (b + got still held).
+    let fallback = pool.get_or_alloc(Duration::from_millis(10));
+    assert!(!fallback.is_pooled());
+    assert_eq!(pool.fallback_allocs(), 1);
+    drop(b);
+    assert!(pool.get_or_alloc(Duration::from_millis(10)).is_pooled());
+    assert_eq!(pool.fallback_allocs(), 1, "grace-period success is not a fallback");
+    drop(got);
+}
+
+/// PROPERTY: ByteQueue byte accounting is exact for arbitrary slice
+/// patterns — `len_bytes` equals queued view lengths (not backing sizes),
+/// `try_add` hands the exact buffer back on a full queue, and spilled
+/// buffers round-trip through a retry without loss or reorder.
+#[test]
+fn prop_queue_accounting_with_slices() {
+    for seed in 0..25u64 {
+        let mut rng = SplitMix64::new(seed + 0xACC);
+        let cap = rng.range(512, 8192) as usize;
+        let q = ByteQueue::new(cap);
+        let backing_len = rng.range(1024, 16 * 1024) as usize;
+        let mut data = vec![0u8; backing_len];
+        rng.fill_bytes(&mut data);
+        let backing = SharedBuf::from_vec(data.clone());
+
+        // Cut the backing into consecutive slices (the sender/receiver
+        // pattern: one big read shared as per-unit views).
+        let mut cuts: Vec<(usize, usize)> = Vec::new();
+        let mut pos = 0usize;
+        while pos < backing_len {
+            let n = (rng.range(1, 2048) as usize).min(backing_len - pos);
+            cuts.push((pos, pos + n));
+            pos += n;
+        }
+
+        let mut queued_bytes = 0usize;
+        let mut spill: std::collections::VecDeque<SharedBuf> = Default::default();
+        let mut consumed: Vec<u8> = Vec::new();
+        for &(s, e) in &cuts {
+            let view = backing.slice(s, e);
+            let went_in = if spill.is_empty() {
+                match q.try_add(view) {
+                    Ok(()) => true,
+                    Err(back) => {
+                        assert_eq!(back, data[s..e].to_vec(), "seed {seed}: exact buffer back");
+                        spill.push_back(back);
+                        false
+                    }
+                }
+            } else {
+                spill.push_back(view);
+                false
+            };
+            if went_in {
+                queued_bytes += e - s;
+            }
+            assert_eq!(q.len_bytes(), queued_bytes, "seed {seed}: accounting after add");
+            // Occasionally drain one buffer and retry the spill (the
+            // merger's pump_spill).
+            if rng.below(3) == 0 {
+                if let Some(buf) = (queued_bytes > 0).then(|| q.remove().unwrap()) {
+                    queued_bytes -= buf.len();
+                    consumed.extend_from_slice(&buf);
+                }
+                while let Some(front) = spill.pop_front() {
+                    let n = front.len();
+                    match q.try_add(front) {
+                        Ok(()) => queued_bytes += n,
+                        Err(back) => {
+                            spill.push_front(back);
+                            break;
+                        }
+                    }
+                }
+                assert_eq!(q.len_bytes(), queued_bytes, "seed {seed}: accounting after pump");
+            }
+        }
+        // Final drain: spill first (blocking add is fine here — the
+        // consumer below is this thread), then the queue.
+        for buf in spill.drain(..) {
+            // Make room, then add.
+            while q.len_bytes() > 0 && q.len_bytes() + buf.len() > cap {
+                let b = q.remove().unwrap();
+                consumed.extend_from_slice(&b);
+            }
+            assert!(q.add(buf));
+        }
+        q.close();
+        while let Some(b) = q.remove() {
+            consumed.extend_from_slice(&b);
+        }
+        assert_eq!(consumed.len(), backing_len, "seed {seed}: no loss");
+        assert_eq!(consumed, data, "seed {seed}: order preserved");
+    }
+}
+
+/// PROPERTY: pooled buffers cycled through a queue by a consumer thread
+/// reach a steady state bounded by the pool capacity — the pool never
+/// grows past its cap and never takes a fallback allocation when sized to
+/// cover the queue.
+#[test]
+fn prop_pool_steady_state_through_queue() {
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(seed + 0x57EAD);
+        let buf_size = rng.range(256, 2048) as usize;
+        let queue_cap = buf_size * rng.range(2, 6) as usize;
+        // Enough buffers for a full queue plus one in flight on each side.
+        let pool = BufferPool::new(buf_size, queue_cap / buf_size + 2);
+        let q = ByteQueue::new(queue_cap);
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut total = 0usize;
+            while let Some(b) = q2.remove() {
+                total += b.len();
+            }
+            total
+        });
+        let rounds = 200usize;
+        for i in 0..rounds {
+            let mut b = pool.get();
+            b[0] = i as u8;
+            assert!(q.add(b.freeze(buf_size)));
+        }
+        q.close();
+        let total = consumer.join().unwrap();
+        assert_eq!(total, rounds * buf_size, "seed {seed}");
+        assert!(
+            pool.allocated() <= pool.capacity(),
+            "seed {seed}: pool grew past its cap ({} > {})",
+            pool.allocated(),
+            pool.capacity()
+        );
+        assert_eq!(pool.fallback_allocs(), 0, "seed {seed}: steady state must not fall back");
+        assert_eq!(pool.free_buffers(), pool.allocated(), "seed {seed}: all returned");
+    }
+}

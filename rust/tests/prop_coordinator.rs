@@ -228,7 +228,7 @@ fn prop_queue_stream_integrity() {
             let mut pos = 0;
             while pos < stream.len() {
                 let n = (chunk_rng.range(1, 4096) as usize).min(stream.len() - pos);
-                assert!(q2.add(stream[pos..pos + n].to_vec()));
+                assert!(q2.add(stream[pos..pos + n].to_vec().into()));
                 pos += n;
             }
             q2.close();
@@ -298,7 +298,7 @@ fn prop_protocol_roundtrip() {
             Frame::Data {
                 file_idx: rng.next_u32(),
                 offset: rng.next_u64(),
-                payload: payload.clone(),
+                payload: payload.clone().into(),
             },
             Frame::Digest {
                 file_idx: rng.next_u32(),
@@ -310,7 +310,11 @@ fn prop_protocol_roundtrip() {
                 unit: rng.next_u64(),
                 ok: rng.below(2) == 1,
             },
-            Frame::Fix { file_idx: rng.next_u32(), offset: rng.next_u64(), payload },
+            Frame::Fix {
+                file_idx: rng.next_u32(),
+                offset: rng.next_u64(),
+                payload: payload.into(),
+            },
             Frame::Done,
         ];
         let mut buf = Vec::new();
