@@ -1,11 +1,20 @@
 #!/usr/bin/env python3
-"""Warn-only perf-delta table for the bench-smoke CI job.
+"""Perf-delta table + soft regression gate for the bench-smoke CI job.
 
-Downloads the bench-results.json artifact from the previous successful run
-of this workflow on main (via the `gh` CLI baked into GitHub runners),
-joins it with the current run's results by bench name, and renders a
-markdown delta table into the job summary. Never fails the job: any error
-degrades to a note in the summary.
+Downloads the bench-results.json artifacts from the previous successful
+runs of this workflow on main (via the `gh` CLI baked into GitHub
+runners), joins them with the current run's results by bench name, and
+renders a markdown delta table into the job summary.
+
+Gating policy (soft gate): smoke-mode numbers are noisy, so a single bad
+comparison only warns. The job fails (exit 1) only when the same bench
+regresses by more than REGRESSION_THRESHOLD on *two consecutive runs*
+against the same older baseline: both this run and the previous
+successful main run must be slower than the run before that. A noisy
+current run cannot gate (the previous run was healthy), and a noisy
+baseline cannot gate (the comparison anchors on the older baseline).
+Infrastructure errors (no artifacts, gh failures) degrade to a note in
+the summary and exit 0.
 """
 
 import argparse
@@ -14,6 +23,12 @@ import os
 import subprocess
 import sys
 import tempfile
+
+# A bench "regresses" when its metric is worse than a baseline by more
+# than this fraction; it gates the job only when the regression shows on
+# two consecutive runs (this one and the previous successful main run,
+# both measured against the run before that).
+REGRESSION_THRESHOLD = 0.30
 
 
 def read_results(path):
@@ -34,8 +49,9 @@ def read_results(path):
     return results
 
 
-def previous_results(repo, workflow, artifact):
-    """Fetch the artifact from the last successful main run, or None."""
+def previous_results(repo, workflow, artifact, count=2):
+    """Artifacts from up to `count` previous successful main runs,
+    newest first: [(run_id, results), ...]."""
     runs = json.loads(
         subprocess.check_output(
             [
@@ -44,14 +60,17 @@ def previous_results(repo, workflow, artifact):
                 "--workflow", workflow,
                 "--branch", "main",
                 "--status", "success",
-                "--limit", "10",
+                "--limit", "15",
                 "--json", "databaseId",
             ],
             text=True,
         )
     )
     current = os.environ.get("GITHUB_RUN_ID")
+    baselines = []
     for run in runs:
+        if len(baselines) >= count:
+            break
         run_id = str(run["databaseId"])
         if run_id == current:
             continue
@@ -71,8 +90,8 @@ def previous_results(repo, workflow, artifact):
                 continue  # run without the artifact (e.g. older layout)
             path = os.path.join(tmp, "bench-results.json")
             if os.path.exists(path):
-                return run_id, read_results(path)
-    return None, None
+                baselines.append((run_id, read_results(path)))
+    return baselines
 
 
 def metric_of(obj):
@@ -84,10 +103,47 @@ def metric_of(obj):
     return obj.get("median_secs", 0.0) * 1e3, "ms", False
 
 
+def regression_of(cur_obj, prev_obj):
+    """Fractional regression of `cur` vs `prev` (positive = worse), or
+    None when not comparable."""
+    cur_v, _, higher = metric_of(cur_obj)
+    prev_v, _, _ = metric_of(prev_obj)
+    if prev_v == 0:
+        return None
+    pct = (cur_v - prev_v) / prev_v
+    return -pct if higher else pct
+
+
 def fmt_val(v, unit):
     if unit == "ops/s" and v >= 1000:
         return f"{v:,.0f} {unit}"
     return f"{v:.3f} {unit}" if v < 100 else f"{v:.1f} {unit}"
+
+
+def gated_benches(current, baselines):
+    """Benches whose regression persisted across two consecutive runs:
+    both the current run and the previous successful main run (prev1)
+    are past the threshold relative to the run before that (prev2).
+    Needs two baselines; a noisy current run alone never gates because
+    prev1-vs-prev2 was healthy then."""
+    if len(baselines) < 2:
+        return []
+    (_, prev1), (_, prev2) = baselines[0], baselines[1]
+    gated = []
+    for name, cur in sorted(current.items()):
+        if name not in prev1 or name not in prev2:
+            continue
+        r_cur = regression_of(cur, prev2[name])
+        r_prev = regression_of(prev1[name], prev2[name])
+        persisted = (
+            r_cur is not None
+            and r_prev is not None
+            and r_cur > REGRESSION_THRESHOLD
+            and r_prev > REGRESSION_THRESHOLD
+        )
+        if persisted:
+            gated.append((name, [r_cur, r_prev]))
+    return gated
 
 
 def render(current, previous, prev_run):
@@ -95,7 +151,10 @@ def render(current, previous, prev_run):
         "### Bench delta vs previous main run"
         + (f" (run {prev_run})" if prev_run else ""),
         "",
-        "_Warn-only: trends, not gates. Smoke-mode numbers are noisy._",
+        "_Soft gate: the job fails only when a bench regresses "
+        f">{REGRESSION_THRESHOLD:.0%} on two consecutive runs (this one "
+        "and the previous main run, vs the run before that); anything "
+        "else is a warning — smoke-mode numbers are noisy._",
         "",
         "| bench | previous | current | delta |",
         "|---|---:|---:|---:|",
@@ -133,26 +192,37 @@ def main():
     ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"))
     args = ap.parse_args()
 
+    gated = []
     try:
         current = read_results(args.current)
         if not current:
             raise RuntimeError(f"no results parsed from {args.current}")
-        prev_run, previous = previous_results(args.repo, args.workflow, args.artifact)
-        if previous is None:
+        baselines = previous_results(args.repo, args.workflow, args.artifact)
+        if not baselines:
             out = (
                 "### Bench delta\n\nNo previous `bench-results` artifact found on main "
                 "— this run becomes the baseline.\n"
             )
         else:
+            prev_run, previous = baselines[0]
             out = render(current, previous, prev_run)
-    except Exception as e:  # warn-only by contract
+            gated = gated_benches(current, baselines)
+            if gated:
+                out += "\n#### :x: Persistent regressions (gating)\n\n"
+                for name, (r_cur, r_prev) in gated:
+                    out += (
+                        f"- `{name}` regressed on two consecutive runs vs the "
+                        f"older baseline: now {r_cur:+.0%}, previous run "
+                        f"{r_prev:+.0%} (threshold {REGRESSION_THRESHOLD:.0%})\n"
+                    )
+    except Exception as e:  # infra problems stay warn-only by contract
         out = f"### Bench delta\n\nComparison skipped: `{e}`\n"
 
     print(out)
     if args.summary:
         with open(args.summary, "a", encoding="utf-8") as f:
             f.write(out)
-    return 0
+    return 1 if gated else 0
 
 
 if __name__ == "__main__":

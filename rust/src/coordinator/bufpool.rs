@@ -51,6 +51,12 @@ struct PoolState {
     /// Pooled backings currently alive (free + lent out). Lazily grown up
     /// to `capacity`, so an idle pool costs nothing.
     allocated: usize,
+    /// Pooled backings lent out right now.
+    in_use: usize,
+    /// High-water mark of `in_use` — how close the run came to exhausting
+    /// the pool (surfaces in `TransferReport` so `--pool-buffers` can be
+    /// tuned from telemetry instead of guesswork).
+    peak_in_use: usize,
     /// One-off unpooled allocations taken by [`BufferPool::get_or_alloc`]
     /// after the grace period — zero in a well-sized steady state.
     fallback_allocs: u64,
@@ -75,10 +81,17 @@ impl PoolCore {
     fn put_back(&self, data: Box<[u8]>) {
         let mut g = self.state.lock().unwrap();
         g.free.push(data);
+        g.in_use = g.in_use.saturating_sub(1);
         g.starved = false; // buffers are flowing again
         drop(g);
         self.available.notify_one();
     }
+}
+
+/// Update the lent-out accounting for one pooled acquisition.
+fn note_acquired(g: &mut PoolState) {
+    g.in_use += 1;
+    g.peak_in_use = g.peak_in_use.max(g.in_use);
 }
 
 /// A fixed-capacity pool of `buf_size`-byte buffers. Cloning shares the
@@ -104,6 +117,8 @@ impl BufferPool {
                 state: Mutex::new(PoolState {
                     free: Vec::with_capacity(capacity),
                     allocated: 0,
+                    in_use: 0,
+                    peak_in_use: 0,
                     fallback_allocs: 0,
                     starved: false,
                 }),
@@ -136,16 +151,30 @@ impl BufferPool {
         self.core.state.lock().unwrap().fallback_allocs
     }
 
+    /// Pooled buffers lent out right now.
+    pub fn in_flight(&self) -> usize {
+        self.core.state.lock().unwrap().in_use
+    }
+
+    /// High-water mark of lent-out pooled buffers over the pool's life —
+    /// `peak == capacity` plus nonzero fallbacks means the pool is sized
+    /// at (or below) what the workload actually needs.
+    pub fn peak_in_flight(&self) -> usize {
+        self.core.state.lock().unwrap().peak_in_use
+    }
+
     /// Blocking acquire: recycle a free backing, lazily allocate while
     /// under capacity, else wait for a return (the capacity backpressure).
     pub fn get(&self) -> PoolBuf {
         let mut g = self.core.state.lock().unwrap();
         loop {
             if let Some(data) = g.free.pop() {
+                note_acquired(&mut g);
                 return self.wrap(data);
             }
             if g.allocated < self.core.capacity {
                 g.allocated += 1;
+                note_acquired(&mut g);
                 drop(g);
                 return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
             }
@@ -157,10 +186,12 @@ impl BufferPool {
     pub fn try_get(&self) -> Option<PoolBuf> {
         let mut g = self.core.state.lock().unwrap();
         if let Some(data) = g.free.pop() {
+            note_acquired(&mut g);
             return Some(self.wrap(data));
         }
         if g.allocated < self.core.capacity {
             g.allocated += 1;
+            note_acquired(&mut g);
             drop(g);
             return Some(self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice()));
         }
@@ -182,10 +213,12 @@ impl BufferPool {
         let deadline = std::time::Instant::now() + grace;
         loop {
             if let Some(data) = g.free.pop() {
+                note_acquired(&mut g);
                 return self.wrap(data);
             }
             if g.allocated < self.core.capacity {
                 g.allocated += 1;
+                note_acquired(&mut g);
                 drop(g);
                 return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
             }
@@ -477,6 +510,32 @@ mod tests {
         // pooled again.
         drop(held);
         assert!(pool.get_or_alloc(Duration::from_millis(10)).is_pooled());
+    }
+
+    #[test]
+    fn in_flight_accounting_tracks_peak() {
+        let pool = BufferPool::new(8, 3);
+        assert_eq!(pool.peak_in_flight(), 0);
+        let a = pool.get().freeze(8);
+        let b = pool.get();
+        assert_eq!(pool.in_flight(), 2);
+        assert_eq!(pool.peak_in_flight(), 2);
+        drop(b);
+        assert_eq!(pool.in_flight(), 1);
+        let c = pool.try_get().unwrap();
+        assert_eq!(pool.peak_in_flight(), 2, "peak is a high-water mark");
+        drop(c);
+        drop(a);
+        assert_eq!(pool.in_flight(), 0);
+        assert_eq!(pool.peak_in_flight(), 2);
+        // Fallback buffers are unpooled and never count as in-flight.
+        let held: Vec<PoolBuf> = (0..3).map(|_| pool.get()).collect();
+        let fb = pool.get_or_alloc(Duration::from_millis(5));
+        assert!(!fb.is_pooled());
+        assert_eq!(pool.in_flight(), 3);
+        assert_eq!(pool.peak_in_flight(), 3);
+        drop(held);
+        assert_eq!(pool.in_flight(), 0);
     }
 
     #[test]

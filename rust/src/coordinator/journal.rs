@@ -1,0 +1,1101 @@
+//! Checkpoint journal + resume handshake — crash-recoverable transfers.
+//!
+//! A production transfer service must survive a process kill mid-dataset
+//! without re-hashing and re-sending everything. This module records
+//! engine progress durably on *both* endpoints and lets a restarted
+//! sender/receiver pair negotiate per-file restart offsets:
+//!
+//! * Each endpoint folds the in-order byte stream of every file through a
+//!   [`LeafTracker`] — a streaming leaf hasher at the session's Merkle
+//!   leaf granularity (`SessionConfig::leaf_size`), independent of which
+//!   verification policy the transfer runs. Completed leaf digests append
+//!   to a per-file [`FileJournal`] record.
+//! * Records are **append-only and prefix-valid**: a fixed binary header
+//!   followed by fixed-stride leaf digests. Recovery parses the header and
+//!   keeps `floor((len - header) / digest_len)` digests — a torn append
+//!   truncates to the last whole digest, a torn header invalidates the
+//!   record (full re-transfer), and no state is ever rewritten in place
+//!   except explicit repair patches. Durability ordering at a checkpoint
+//!   is *data before journal*: the receiver syncs the destination file,
+//!   then appends + syncs the journal, so a journaled watermark never
+//!   claims bytes the storage could have lost.
+//! * On restart, the receiver offers `(file, watermark)` per journaled
+//!   record; the sender counter-offers the longest common complete-leaf
+//!   prefix together with its Merkle root over its *own* journaled leaves
+//!   ([`negotiate_sender`]); the receiver folds its leaves to the same
+//!   root and issues a verdict ([`negotiate_receiver`]). Equal roots mean
+//!   the prefix already delivered matches the source **without re-reading
+//!   a single prefix byte on either side**; a mismatch falls back to full
+//!   re-transfer of that file. Agreed files re-enter the scheduler as
+//!   their unfinished tail only; fully-delivered files whose complete
+//!   roots match are skipped outright.
+//! * A resumed file is verified end-to-end by the journal's digest tree
+//!   regardless of the session algorithm: both endpoints seed a
+//!   [`crate::merkle::MerkleBuilder`] with the agreed prefix leaves and
+//!   fold the tail from their queues, then run the existing
+//!   `TreeRoot`/descent exchange — so tail corruption repairs at leaf
+//!   granularity, exactly like FIVER-Merkle.
+//!
+//! See DESIGN.md "Checkpoint journal & crash recovery" for the record
+//! format and the crash-consistency argument.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{Frame, UNIT_FILE};
+use super::{HasherFactory, SessionConfig};
+use crate::hashes::Hasher;
+use crate::merkle::MerkleTree;
+use crate::storage::Storage;
+
+/// Record magic (8 bytes, versioned).
+const MAGIC: &[u8; 8] = b"FVRJNL01";
+
+/// Fixed part of the record header: magic + name_len(u32) + size(u64) +
+/// leaf_size(u64) + digest_len(u32).
+const FIXED_HEADER: usize = 8 + 4 + 8 + 8 + 4;
+
+/// Upper bound on journaled file names (defensive parse limit).
+const MAX_NAME: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Journal directory
+// ---------------------------------------------------------------------------
+
+/// One endpoint's journal: a directory of per-file records, keyed by the
+/// dataset-global file index (which is stable across restarts because the
+/// engine is re-invoked with the same file list).
+pub struct Journal {
+    dir: PathBuf,
+}
+
+impl Journal {
+    /// Open (creating if needed) a journal directory.
+    pub fn open(dir: &Path) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        Ok(Journal { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn record_path(&self, file_idx: u32) -> PathBuf {
+        self.dir.join(format!("f{file_idx:06}.fjl"))
+    }
+
+    /// Start a fresh record for `file_idx` (truncating any stale one).
+    pub fn create(
+        &self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        leaf_size: u64,
+        digest_len: usize,
+    ) -> Result<FileJournal> {
+        anyhow::ensure!(leaf_size > 0 && digest_len > 0, "bad journal geometry");
+        anyhow::ensure!(name.len() <= MAX_NAME, "file name too long to journal");
+        let mut header = Vec::with_capacity(FIXED_HEADER + name.len());
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        header.extend_from_slice(&size.to_le_bytes());
+        header.extend_from_slice(&leaf_size.to_le_bytes());
+        header.extend_from_slice(&(digest_len as u32).to_le_bytes());
+        header.extend_from_slice(name.as_bytes());
+        let path = self.record_path(file_idx);
+        let mut file = File::create(&path)
+            .with_context(|| format!("creating journal record {}", path.display()))?;
+        file.write_all(&header)?;
+        file.sync_data().context("journal header sync")?;
+        Ok(FileJournal {
+            file,
+            digest_len,
+            header_len: header.len() as u64,
+            synced_leaves: 0,
+            pending: Vec::new(),
+        })
+    }
+
+    /// Reopen an existing record for a resumed file, truncating it to the
+    /// agreed `keep_leaves` digests (the negotiated common prefix). Tail
+    /// digests past the agreement are discarded; appends continue from
+    /// there as the resumed stream flows.
+    pub fn open_resumed(&self, file_idx: u32, keep_leaves: u64) -> Result<FileJournal> {
+        let path = self.record_path(file_idx);
+        let rec = self
+            .load(file_idx)?
+            .with_context(|| format!("no journal record to resume at {}", path.display()))?;
+        let keep = keep_leaves.min(rec.leaf_count());
+        let header_len = (FIXED_HEADER + rec.name.len()) as u64;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("reopening journal record {}", path.display()))?;
+        file.set_len(header_len + keep * rec.digest_len as u64)?;
+        file.sync_data().context("journal truncate sync")?;
+        Ok(FileJournal {
+            file,
+            digest_len: rec.digest_len,
+            header_len,
+            synced_leaves: keep,
+            pending: Vec::new(),
+        })
+    }
+
+    /// Parse one record; `None` when absent or invalid (torn header,
+    /// unknown magic — recovery treats both as "no checkpoint").
+    pub fn load(&self, file_idx: u32) -> Result<Option<JournalRecord>> {
+        let path = self.record_path(file_idx);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).context("reading journal record"),
+        };
+        Ok(parse_record(&bytes))
+    }
+
+    /// Every parseable record in the journal, keyed by file index.
+    pub fn load_all(&self) -> Result<BTreeMap<u32, JournalRecord>> {
+        let mut out = BTreeMap::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(e).context("reading journal dir"),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let fname = entry.file_name();
+            let Some(fname) = fname.to_str() else { continue };
+            let Some(idx) = fname
+                .strip_prefix('f')
+                .and_then(|s| s.strip_suffix(".fjl"))
+                .and_then(|s| s.parse::<u32>().ok())
+            else {
+                continue;
+            };
+            if let Some(rec) = self.load(idx)? {
+                out.insert(idx, rec);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drop a record (stale / rejected at handshake). Best-effort.
+    pub fn remove(&self, file_idx: u32) {
+        std::fs::remove_file(self.record_path(file_idx)).ok();
+    }
+
+    /// Open-or-create the record + tracker for one file as its stream
+    /// begins: a resumed file (`start_at > 0`) truncates its record to
+    /// the agreed complete-leaf prefix and continues from there; a fresh
+    /// file starts a new record. Single-sourced so sender and receiver
+    /// compute identical journal state (keep-leaves rounding included).
+    pub fn begin_file(
+        &self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        start_at: u64,
+        cfg: &SessionConfig,
+    ) -> Result<(FileJournal, LeafTracker)> {
+        if start_at > 0 {
+            let keep = start_at / cfg.leaf_size;
+            Ok((
+                self.open_resumed(file_idx, keep)?,
+                LeafTracker::resume(cfg.leaf_size, &cfg.hasher, keep),
+            ))
+        } else {
+            let dlen = (cfg.hasher)().digest_len();
+            Ok((
+                self.create(file_idx, name, size, cfg.leaf_size, dlen)?,
+                LeafTracker::new(cfg.leaf_size, &cfg.hasher),
+            ))
+        }
+    }
+
+    /// Patch a (possibly closed) record after repair `Fix` frames rewrote
+    /// byte `ranges` of the file: every journaled leaf the ranges touch is
+    /// recomputed via `recompute(offset, len)` (a storage re-hash of at
+    /// most the touched leaves) and overwritten in place, then synced. A
+    /// crash mid-patch at worst tears one digest, which fails the next
+    /// resume handshake closed (full re-transfer).
+    pub fn patch_record(
+        &self,
+        file_idx: u32,
+        ranges: &[(u64, u64)],
+        mut recompute: impl FnMut(u64, u64) -> Result<Vec<u8>>,
+    ) -> Result<()> {
+        let Some(rec) = self.load(file_idx)? else { return Ok(()) };
+        let dirty = leaves_touched(ranges, rec.leaf_size, rec.leaf_count());
+        if dirty.is_empty() {
+            return Ok(());
+        }
+        let path = self.record_path(file_idx);
+        let mut file = OpenOptions::new().write(true).open(&path)?;
+        let header_len = (FIXED_HEADER + rec.name.len()) as u64;
+        for l in dirty {
+            let loff = l * rec.leaf_size;
+            let llen = rec.leaf_size.min(rec.size.saturating_sub(loff));
+            let d = recompute(loff, llen)?;
+            anyhow::ensure!(d.len() == rec.digest_len, "digest width mismatch in patch");
+            file.seek(SeekFrom::Start(header_len + l * rec.digest_len as u64))?;
+            file.write_all(&d)?;
+        }
+        file.sync_data().context("journal patch sync")?;
+        Ok(())
+    }
+}
+
+/// Leaf indices (`< recorded`) whose spans intersect any of `ranges` —
+/// shared by the closed-record patch path and the receiver's open-file
+/// repair path, so the range→leaf mapping cannot diverge.
+pub(crate) fn leaves_touched(ranges: &[(u64, u64)], leaf_size: u64, recorded: u64) -> Vec<u64> {
+    let mut dirty: Vec<u64> = Vec::new();
+    if recorded == 0 {
+        return dirty;
+    }
+    for &(off, len) in ranges {
+        if len == 0 {
+            continue;
+        }
+        let first = off / leaf_size;
+        let last = (off + len - 1) / leaf_size;
+        for l in first..=last.min(recorded - 1) {
+            dirty.push(l);
+        }
+    }
+    dirty.sort_unstable();
+    dirty.dedup();
+    dirty
+}
+
+fn parse_record(bytes: &[u8]) -> Option<JournalRecord> {
+    if bytes.len() < FIXED_HEADER || &bytes[..8] != MAGIC {
+        return None;
+    }
+    let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let size = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let leaf_size = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let digest_len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
+    if name_len > MAX_NAME || leaf_size == 0 || digest_len == 0 || digest_len > 128 {
+        return None;
+    }
+    if bytes.len() < FIXED_HEADER + name_len {
+        return None;
+    }
+    let name = std::str::from_utf8(&bytes[FIXED_HEADER..FIXED_HEADER + name_len]).ok()?;
+    let tail = &bytes[FIXED_HEADER + name_len..];
+    // Prefix-valid recovery: keep whole digests, drop a torn append, and
+    // clip anything past the file's possible leaf count.
+    let max_leaves = crate::merkle::leaf_count(size, leaf_size) as usize;
+    let whole = (tail.len() / digest_len).min(max_leaves);
+    Some(JournalRecord {
+        name: name.to_string(),
+        size,
+        leaf_size,
+        digest_len,
+        leaves: tail[..whole * digest_len].to_vec(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Per-file record writer
+// ---------------------------------------------------------------------------
+
+/// Appender for one file's journal record. Digests buffer in memory and
+/// become durable only at [`FileJournal::checkpoint`] — callers sync the
+/// data file *first*, so the journal never gets ahead of storage.
+pub struct FileJournal {
+    file: File,
+    digest_len: usize,
+    header_len: u64,
+    /// Digests already appended and synced.
+    synced_leaves: u64,
+    /// Buffered digests awaiting the next checkpoint.
+    pending: Vec<u8>,
+}
+
+impl FileJournal {
+    /// Buffer one completed leaf digest (in leaf order).
+    pub fn push_leaf(&mut self, digest: &[u8]) {
+        assert_eq!(digest.len(), self.digest_len, "digest width mismatch");
+        self.pending.extend_from_slice(digest);
+    }
+
+    /// Buffered digests not yet durable.
+    pub fn pending_leaves(&self) -> u64 {
+        (self.pending.len() / self.digest_len) as u64
+    }
+
+    /// Digests recorded so far (synced + pending).
+    pub fn leaves_recorded(&self) -> u64 {
+        self.synced_leaves + self.pending_leaves()
+    }
+
+    /// Make the buffered digests durable: one append + fsync. The caller
+    /// must have synced the corresponding data-file bytes first (the
+    /// crash-consistency ordering).
+    pub fn checkpoint(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let at = self.header_len + self.synced_leaves * self.digest_len as u64;
+        self.file.seek(SeekFrom::Start(at))?;
+        self.file.write_all(&self.pending)?;
+        self.file.sync_data().context("journal checkpoint sync")?;
+        self.synced_leaves += self.pending_leaves();
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Replace an already-recorded leaf digest (repair patched its bytes).
+    /// Synced digests rewrite in place; pending ones patch the buffer.
+    /// The write becomes durable at the next [`FileJournal::checkpoint`].
+    pub fn overwrite_leaf(&mut self, idx: u64, digest: &[u8]) -> Result<()> {
+        anyhow::ensure!(digest.len() == self.digest_len, "digest width mismatch");
+        anyhow::ensure!(idx < self.leaves_recorded(), "overwrite of unrecorded leaf {idx}");
+        if idx < self.synced_leaves {
+            self.file.seek(SeekFrom::Start(self.header_len + idx * self.digest_len as u64))?;
+            self.file.write_all(digest)?;
+        } else {
+            let at = ((idx - self.synced_leaves) as usize) * self.digest_len;
+            self.pending[at..at + self.digest_len].copy_from_slice(digest);
+        }
+        Ok(())
+    }
+
+    /// Force durability of in-place overwrites even when nothing is
+    /// pending (checkpoint is a no-op then).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().context("journal sync")?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsed record
+// ---------------------------------------------------------------------------
+
+/// A parsed journal record: the leaf digests of one file's delivered
+/// prefix (all complete leaves, plus the final partial leaf once the
+/// stream finished).
+#[derive(Debug, Clone)]
+pub struct JournalRecord {
+    pub name: String,
+    pub size: u64,
+    pub leaf_size: u64,
+    pub digest_len: usize,
+    /// Concatenated leaf digests, `digest_len` stride.
+    pub leaves: Vec<u8>,
+}
+
+impl JournalRecord {
+    pub fn leaf_count(&self) -> u64 {
+        (self.leaves.len() / self.digest_len) as u64
+    }
+
+    /// Does the record cover the whole file (every leaf, including the
+    /// final partial one)?
+    pub fn is_complete(&self) -> bool {
+        self.leaf_count() >= crate::merkle::leaf_count(self.size, self.leaf_size)
+    }
+
+    /// Recorded leaves that are *complete* (span a full `leaf_size`) — the
+    /// unit a mid-file resume can restart from.
+    pub fn aligned_leaves(&self) -> u64 {
+        self.leaf_count().min(self.size / self.leaf_size)
+    }
+
+    /// Byte watermark this record attests: the whole file when complete,
+    /// else the complete-leaf-aligned prefix.
+    pub fn watermark(&self) -> u64 {
+        if self.is_complete() {
+            self.size
+        } else {
+            self.aligned_leaves() * self.leaf_size
+        }
+    }
+
+    /// Merkle root over the first `k_leaves` digests (a tree over a
+    /// `prefix_bytes`-byte virtual file) — the handshake's prefix proof.
+    /// Pure digest folding: no file bytes are read.
+    pub fn prefix_root(
+        &self,
+        k_leaves: u64,
+        prefix_bytes: u64,
+        factory: &HasherFactory,
+    ) -> Vec<u8> {
+        let k = k_leaves as usize;
+        assert!(k >= 1 && k * self.digest_len <= self.leaves.len(), "prefix out of range");
+        let tree = MerkleTree::from_leaves(
+            self.leaf_size,
+            prefix_bytes,
+            self.digest_len,
+            self.leaves[..k * self.digest_len].to_vec(),
+            factory,
+        );
+        tree.root().to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming leaf hasher
+// ---------------------------------------------------------------------------
+
+/// Folds an in-order byte stream into leaf digests at `leaf_size`
+/// granularity — the journal's twin of [`crate::merkle::MerkleBuilder`],
+/// but emitting digests incrementally (so they can checkpoint mid-file)
+/// and resumable from a completed-leaf count.
+pub struct LeafTracker {
+    leaf_size: u64,
+    hasher: Box<dyn Hasher>,
+    /// Bytes absorbed into the open leaf.
+    filled: u64,
+    /// Leaves completed so far (index of the open leaf).
+    completed: u64,
+}
+
+impl LeafTracker {
+    pub fn new(leaf_size: u64, factory: &HasherFactory) -> LeafTracker {
+        LeafTracker::resume(leaf_size, factory, 0)
+    }
+
+    /// A tracker whose first `completed` leaves are already journaled
+    /// (resume: hashing continues at the leaf boundary).
+    pub fn resume(leaf_size: u64, factory: &HasherFactory, completed: u64) -> LeafTracker {
+        assert!(leaf_size > 0, "leaf_size must be positive");
+        LeafTracker { leaf_size, hasher: factory(), filled: 0, completed }
+    }
+
+    pub fn leaf_size(&self) -> u64 {
+        self.leaf_size
+    }
+
+    pub fn completed_leaves(&self) -> u64 {
+        self.completed
+    }
+
+    /// Bytes absorbed into the currently open (partial) leaf.
+    pub fn filled(&self) -> u64 {
+        self.filled
+    }
+
+    /// Stream position: completed leaves plus the open partial leaf.
+    pub fn position(&self) -> u64 {
+        self.completed * self.leaf_size + self.filled
+    }
+
+    /// Absorb in-order bytes; `on_leaf(idx, digest)` fires per completed
+    /// leaf.
+    pub fn update(&mut self, mut data: &[u8], mut on_leaf: impl FnMut(u64, Vec<u8>)) {
+        while !data.is_empty() {
+            let take = ((self.leaf_size - self.filled) as usize).min(data.len());
+            self.hasher.update(&data[..take]);
+            self.filled += take as u64;
+            data = &data[take..];
+            if self.filled == self.leaf_size {
+                let d = self.hasher.finalize();
+                self.hasher.reset();
+                self.filled = 0;
+                on_leaf(self.completed, d);
+                self.completed += 1;
+            }
+        }
+    }
+
+    /// Close the stream: emit the final partial leaf, or the single empty
+    /// leaf of an empty stream that never emitted anything.
+    pub fn finish(&mut self, mut on_leaf: impl FnMut(u64, Vec<u8>)) {
+        if self.filled > 0 || self.completed == 0 {
+            let d = self.hasher.finalize();
+            self.hasher.reset();
+            self.filled = 0;
+            on_leaf(self.completed, d);
+            self.completed += 1;
+        }
+    }
+
+    /// Rebuild the open leaf's hasher state from `prefix` — the bytes of
+    /// the current leaf up to the stream position, re-read from storage
+    /// after a repair rewrote part of them (at most one leaf per file).
+    pub fn rebuild_partial(&mut self, prefix: &[u8]) {
+        assert!((prefix.len() as u64) < self.leaf_size, "partial rebuild spans a whole leaf");
+        self.hasher.reset();
+        self.hasher.update(prefix);
+        self.filled = prefix.len() as u64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resume plan + handshake
+// ---------------------------------------------------------------------------
+
+/// One file's negotiated resume state (this endpoint's own view).
+#[derive(Debug, Clone)]
+pub struct ResumedFile {
+    /// First byte the tail stream covers; `== size` for a file whose full
+    /// delivery was verified at handshake (skipped outright).
+    pub offset: u64,
+    pub size: u64,
+    /// Journaled leaf digests covering `[0, offset)` — this endpoint's own
+    /// copy, proved root-equal to the peer's at handshake. Seeds the
+    /// resumed file's verification tree (digest width comes from the
+    /// session's hasher, checked compatible at the handshake).
+    pub leaves: Vec<u8>,
+}
+
+/// The negotiated outcome of a resume handshake: per-file restart offsets
+/// and prefix leaves. Empty when resuming was not requested or nothing
+/// matched.
+#[derive(Debug, Clone, Default)]
+pub struct ResumePlan {
+    pub files: std::collections::HashMap<u32, ResumedFile>,
+}
+
+impl ResumePlan {
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn get(&self, file_idx: u32) -> Option<&ResumedFile> {
+        self.files.get(&file_idx)
+    }
+
+    /// The file's agreed *partial* resume state (`None` for fresh files,
+    /// fully-skipped files, or a size disagreement) — the single source
+    /// of the tail-eligibility predicate, shared by sender and receiver
+    /// so the two endpoints can never diverge on what "resumed" means.
+    pub fn partial_for(&self, file_idx: u32, size: u64) -> Option<&ResumedFile> {
+        self.files.get(&file_idx).filter(|r| r.offset > 0 && r.offset < size && r.size == size)
+    }
+
+    /// Agreed restart offset for a file (`None` = transfer from scratch).
+    pub fn offset_for(&self, file_idx: u32) -> Option<u64> {
+        self.files.get(&file_idx).map(|r| r.offset)
+    }
+
+    /// Was this file fully delivered and verified at handshake?
+    pub fn is_complete(&self, file_idx: u32) -> bool {
+        self.files.get(&file_idx).map(|r| r.offset == r.size).unwrap_or(false)
+    }
+
+    /// Files skipped outright (complete at handshake).
+    pub fn skipped_files(&self) -> u64 {
+        self.files.values().filter(|r| r.offset == r.size).count() as u64
+    }
+
+    /// Bytes the resumed run does not re-send (sum of agreed offsets).
+    pub fn skipped_bytes(&self) -> u64 {
+        self.files.values().map(|r| r.offset).sum()
+    }
+}
+
+/// Leaf count of a valid resume offset, or `None` when the offset cannot
+/// anchor a resume (zero, misaligned, or past the file).
+fn prefix_leaves_for(offset: u64, size: u64, leaf_size: u64) -> Option<u64> {
+    if offset == size {
+        Some(crate::merkle::leaf_count(size, leaf_size))
+    } else if offset > 0 && offset < size && offset % leaf_size == 0 {
+        Some(offset / leaf_size)
+    } else {
+        None
+    }
+}
+
+/// Receiver side of the resume handshake, on the dedicated resume control
+/// connection (its `Hello` already consumed by the accept loop): offer
+/// every compatible journal record, verify the sender's counter-offered
+/// prefix roots against our own leaves, and issue verdicts. Rejected
+/// records are dropped from the journal (full re-transfer).
+pub fn negotiate_receiver<S: Read + Write>(
+    sock: &mut S,
+    journal: Option<&Journal>,
+    cfg: &SessionConfig,
+    storage: &Arc<dyn Storage>,
+) -> Result<ResumePlan> {
+    let dlen = (cfg.hasher)().digest_len();
+    let records = match journal {
+        Some(j) => j.load_all()?,
+        None => BTreeMap::new(),
+    };
+    let mut offered: BTreeMap<u32, (JournalRecord, u64)> = BTreeMap::new();
+    for (idx, rec) in records {
+        if rec.leaf_size != cfg.leaf_size || rec.digest_len != dlen {
+            continue; // journaled under a different configuration
+        }
+        let wm = rec.watermark();
+        // The destination must still hold the journaled prefix.
+        if storage.size_of(&rec.name).unwrap_or(0) < wm {
+            continue;
+        }
+        Frame::ResumeOffer {
+            file_idx: idx,
+            watermark: wm,
+            leaf_size: rec.leaf_size,
+            name: rec.name.clone(),
+        }
+        .write_to(sock)?;
+        offered.insert(idx, (rec, wm));
+    }
+    Frame::Done.write_to(sock)?;
+    sock.flush()?;
+
+    let mut acks: Vec<(u32, u64, Vec<u8>)> = Vec::new();
+    loop {
+        let f = Frame::read_from(sock)?.context("resume channel closed awaiting acks")?;
+        match f {
+            Frame::ResumeAck { file_idx, offset, digest } => acks.push((file_idx, offset, digest)),
+            Frame::Done => break,
+            other => bail!("expected ResumeAck on resume channel, got {other:?}"),
+        }
+    }
+
+    let mut plan = ResumePlan::default();
+    for (idx, offset, digest) in acks {
+        let Some((rec, wm)) = offered.get(&idx) else {
+            bail!("resume ack for unoffered file {idx}");
+        };
+        let k = prefix_leaves_for(offset, rec.size, rec.leaf_size)
+            .filter(|&k| offset <= *wm && k <= rec.leaf_count());
+        // Only a *failed root comparison* proves the checkpoint divergent;
+        // a decline (empty digest: sender has no/stale journal) or an
+        // invalid offset must not cost us a record that correctly attests
+        // delivered bytes — a later, correctly-configured resume can
+        // still use it.
+        let mut divergent = false;
+        let ok = match k {
+            Some(k) if !digest.is_empty() => {
+                let equal = rec.prefix_root(k, offset, &cfg.hasher) == digest;
+                divergent = !equal;
+                equal
+            }
+            _ => false,
+        };
+        Frame::Verdict { file_idx: idx, unit: UNIT_FILE, ok }.write_to(sock)?;
+        if ok {
+            let k = k.expect("checked above") as usize;
+            plan.files.insert(
+                idx,
+                ResumedFile {
+                    offset,
+                    size: rec.size,
+                    leaves: rec.leaves[..k * rec.digest_len].to_vec(),
+                },
+            );
+        } else if divergent {
+            if let Some(j) = journal {
+                // Proven divergence: discard; the file re-transfers from
+                // scratch and the record is recreated at its FileStart.
+                j.remove(idx);
+            }
+        }
+    }
+    Frame::Done.write_to(sock)?;
+    sock.flush()?;
+    Ok(plan)
+}
+
+/// Sender side of the resume handshake: read the receiver's offers, reply
+/// with the longest common complete-leaf prefix and its root over our own
+/// journaled leaves (empty digest = declined), then collect verdicts.
+pub fn negotiate_sender<S: Read + Write>(
+    sock: &mut S,
+    journal: Option<&Journal>,
+    cfg: &SessionConfig,
+    names: &[String],
+    sizes: &[u64],
+) -> Result<ResumePlan> {
+    let dlen = (cfg.hasher)().digest_len();
+    let records = match journal {
+        Some(j) => j.load_all()?,
+        None => BTreeMap::new(),
+    };
+    let mut offers: Vec<(u32, u64, u64, String)> = Vec::new();
+    loop {
+        let f = Frame::read_from(sock)?.context("resume channel closed awaiting offers")?;
+        match f {
+            Frame::ResumeOffer { file_idx, watermark, leaf_size, name } => {
+                offers.push((file_idx, watermark, leaf_size, name));
+            }
+            Frame::Done => break,
+            other => bail!("expected ResumeOffer on resume channel, got {other:?}"),
+        }
+    }
+
+    let mut candidates: BTreeMap<u32, ResumedFile> = BTreeMap::new();
+    for (idx, watermark, leaf_size, name) in offers {
+        let mut ack_offset = 0u64;
+        let mut digest = Vec::new();
+        let known = leaf_size == cfg.leaf_size
+            && (idx as usize) < names.len()
+            && names[idx as usize] == name;
+        if known {
+            let size = sizes[idx as usize];
+            if let Some(rec) = records.get(&idx) {
+                // digest_len must match too: folding differently-sized
+                // digests through the session hasher would produce an
+                // ill-formed root that reads as *divergence* on the
+                // receiver (costing it a valid record) instead of as the
+                // stale-configuration decline it really is.
+                let compatible = rec.name == name
+                    && rec.size == size
+                    && rec.leaf_size == leaf_size
+                    && rec.digest_len == dlen
+                    && watermark <= size;
+                if compatible {
+                    // Longest common prefix: the shorter journal wins; a
+                    // full skip needs both records complete.
+                    let (offset, k) = if watermark == size && rec.is_complete() {
+                        (size, crate::merkle::leaf_count(size, leaf_size))
+                    } else {
+                        let k = rec.aligned_leaves().min(watermark / leaf_size);
+                        (k * leaf_size, k)
+                    };
+                    let valid = prefix_leaves_for(offset, size, leaf_size)
+                        .map(|kk| kk == k && k <= rec.leaf_count())
+                        .unwrap_or(false);
+                    if valid {
+                        digest = rec.prefix_root(k, offset, &cfg.hasher);
+                        ack_offset = offset;
+                        candidates.insert(
+                            idx,
+                            ResumedFile {
+                                offset,
+                                size,
+                                leaves: rec.leaves[..k as usize * rec.digest_len].to_vec(),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        Frame::ResumeAck { file_idx: idx, offset: ack_offset, digest }.write_to(sock)?;
+    }
+    Frame::Done.write_to(sock)?;
+    sock.flush()?;
+
+    let mut plan = ResumePlan::default();
+    loop {
+        let f = Frame::read_from(sock)?.context("resume channel closed awaiting verdicts")?;
+        match f {
+            Frame::Verdict { file_idx, ok, .. } => {
+                if ok {
+                    if let Some(rf) = candidates.remove(&file_idx) {
+                        plan.files.insert(file_idx, rf);
+                    }
+                }
+            }
+            Frame::Done => break,
+            other => bail!("expected Verdict on resume channel, got {other:?}"),
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native_factory;
+    use crate::coordinator::RealAlgorithm;
+    use crate::hashes::HashAlgorithm;
+    use crate::merkle::MerkleBuilder;
+    use crate::storage::MemStorage;
+    use crate::util::tmpdir::TempDir;
+
+    fn factory() -> HasherFactory {
+        native_factory(HashAlgorithm::Md5)
+    }
+
+    fn cfg_with(leaf: u64) -> SessionConfig {
+        let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, factory());
+        cfg.leaf_size = leaf;
+        cfg
+    }
+
+    /// Journal `data` through a tracker, checkpointing every leaf.
+    fn record_stream(j: &Journal, idx: u32, name: &str, data: &[u8], leaf: u64, finish: bool) {
+        let f = factory();
+        let dlen = f().digest_len();
+        let mut fj = j.create(idx, name, data.len() as u64, leaf, dlen).unwrap();
+        let mut tr = LeafTracker::new(leaf, &f);
+        tr.update(data, |_, d| fj.push_leaf(&d));
+        if finish {
+            tr.finish(|_, d| fj.push_leaf(&d));
+        }
+        fj.checkpoint().unwrap();
+    }
+
+    #[test]
+    fn record_roundtrip_and_watermarks() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data: Vec<u8> = (0u8..=255).cycle().take(2500).collect();
+        // Complete record: 2 full leaves + 1 partial at leaf 1000.
+        record_stream(&j, 0, "a/b.bin", &data, 1000, true);
+        let rec = j.load(0).unwrap().unwrap();
+        assert_eq!(rec.name, "a/b.bin");
+        assert_eq!(rec.size, 2500);
+        assert_eq!(rec.leaf_count(), 3);
+        assert!(rec.is_complete());
+        assert_eq!(rec.aligned_leaves(), 2);
+        assert_eq!(rec.watermark(), 2500);
+        // Partial record: only whole leaves journaled.
+        record_stream(&j, 1, "c", &data, 1000, false);
+        let rec = j.load(1).unwrap().unwrap();
+        assert_eq!(rec.leaf_count(), 2);
+        assert!(!rec.is_complete());
+        assert_eq!(rec.watermark(), 2000);
+        assert_eq!(j.load_all().unwrap().len(), 2);
+        // Missing record.
+        assert!(j.load(9).unwrap().is_none());
+        j.remove(0);
+        assert!(j.load(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_tail_truncates_torn_header_invalidates() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data = vec![7u8; 3000];
+        record_stream(&j, 0, "t", &data, 1000, false);
+        let path = dir.path().join("f000000.fjl");
+        // Torn append: garbage partial digest at the end.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xAB; 5]);
+        std::fs::write(&path, &bytes).unwrap();
+        let rec = j.load(0).unwrap().unwrap();
+        assert_eq!(rec.leaf_count(), 3, "torn tail drops to the last whole digest");
+        // Torn header: record is invalid, not garbage.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(j.load(0).unwrap().is_none());
+        // Wrong magic.
+        std::fs::write(&path, b"NOTAJRNLxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(j.load(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn tracker_matches_merkle_builder() {
+        let f = factory();
+        let data: Vec<u8> = (0u8..200).cycle().take(10_123).collect();
+        let mut b = MerkleBuilder::new(512, f.clone());
+        for part in data.chunks(333) {
+            b.update(part);
+        }
+        let tree = b.finish();
+        let mut leaves = Vec::new();
+        let mut tr = LeafTracker::new(512, &f);
+        for part in data.chunks(777) {
+            tr.update(part, |_, d| leaves.extend_from_slice(&d));
+        }
+        tr.finish(|_, d| leaves.extend_from_slice(&d));
+        assert_eq!(tr.completed_leaves() as usize, tree.leaf_count());
+        let rebuilt =
+            MerkleTree::from_leaves(512, data.len() as u64, tree.digest_len(), leaves, &f);
+        assert_eq!(rebuilt.root(), tree.root());
+        // Empty stream: one empty leaf.
+        let mut empty = LeafTracker::new(512, &f);
+        let mut n = 0;
+        empty.finish(|_, _| n += 1);
+        assert_eq!(n, 1);
+        assert_eq!(empty.position(), 0);
+    }
+
+    #[test]
+    fn tracker_resume_continues_at_leaf_boundary() {
+        let f = factory();
+        let data = vec![9u8; 4096];
+        let mut full = Vec::new();
+        let mut tr = LeafTracker::new(1024, &f);
+        tr.update(&data, |_, d| full.extend_from_slice(&d));
+        // Resume after 2 leaves: the tail produces the same digests.
+        let mut tail = Vec::new();
+        let mut tr2 = LeafTracker::resume(1024, &f, 2);
+        assert_eq!(tr2.position(), 2048);
+        tr2.update(&data[2048..], |i, d| {
+            assert!(i >= 2);
+            tail.extend_from_slice(&d);
+        });
+        let dlen = f().digest_len();
+        assert_eq!(&full[2 * dlen..], &tail[..]);
+    }
+
+    #[test]
+    fn open_resumed_truncates_and_appends() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data = vec![3u8; 4000];
+        record_stream(&j, 0, "r", &data, 1000, false); // 4 leaves
+        let f = factory();
+        let dlen = f().digest_len();
+        let mut fj = j.open_resumed(0, 2).unwrap();
+        assert_eq!(fj.leaves_recorded(), 2);
+        // Re-append leaves 2 and 3 (as the resumed stream would).
+        let mut tr = LeafTracker::resume(1000, &f, 2);
+        tr.update(&data[2000..], |_, d| fj.push_leaf(&d));
+        fj.checkpoint().unwrap();
+        let rec = j.load(0).unwrap().unwrap();
+        assert_eq!(rec.leaf_count(), 4);
+        // The re-appended digests equal the originals.
+        let fresh = {
+            let mut leaves = Vec::new();
+            let mut t = LeafTracker::new(1000, &f);
+            t.update(&data, |_, d| leaves.extend_from_slice(&d));
+            leaves
+        };
+        assert_eq!(rec.leaves, fresh);
+        assert_eq!(dlen * 4, rec.leaves.len());
+    }
+
+    #[test]
+    fn overwrite_and_patch_leaves() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data = vec![1u8; 3000];
+        record_stream(&j, 0, "p", &data, 1000, true);
+        // Patch leaf 1 via the closed-record path.
+        let f = factory();
+        let patched: Vec<u8> = {
+            let mut h = f();
+            h.update(&[0xEE; 1000]);
+            h.finalize()
+        };
+        let p2 = patched.clone();
+        j.patch_record(0, &[(1500, 10)], move |off, len| {
+            assert_eq!((off, len), (1000, 1000));
+            Ok(p2.clone())
+        })
+        .unwrap();
+        let rec = j.load(0).unwrap().unwrap();
+        assert_eq!(&rec.leaves[rec.digest_len..2 * rec.digest_len], &patched[..]);
+        // Zero-length ranges and out-of-record leaves are ignored.
+        j.patch_record(0, &[(2999, 0)], |_, _| panic!("no leaf touched")).unwrap();
+        assert!(leaves_touched(&[(5000, 100)], 1000, 3).is_empty());
+        assert_eq!(leaves_touched(&[(999, 2)], 1000, 3), vec![0, 1]);
+    }
+
+    #[test]
+    fn prefix_root_matches_stream_tree() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let f = factory();
+        let data: Vec<u8> = (0u8..=255).cycle().take(5000).collect();
+        record_stream(&j, 0, "x", &data, 1000, false);
+        let rec = j.load(0).unwrap().unwrap();
+        // Root over the first 3 leaves == a builder over the first 3000 B.
+        let got = rec.prefix_root(3, 3000, &f);
+        let mut b = MerkleBuilder::new(1000, f.clone());
+        b.update(&data[..3000]);
+        assert_eq!(got, b.finish().root());
+    }
+
+    #[test]
+    fn handshake_agrees_on_common_prefix() {
+        let dir = TempDir::create("fiver-hs").unwrap();
+        let sdir = dir.join("snd");
+        let rdir = dir.join("rcv");
+        let sj = Journal::open(&sdir).unwrap();
+        let rj = Journal::open(&rdir).unwrap();
+        let data: Vec<u8> = (0u8..=255).cycle().take(10_000).collect();
+        let leaf = 1000u64;
+        // Records carry the *full* source size; leaves cover the streamed
+        // prefix. file 0: receiver journaled 6 leaves, sender only 4 ->
+        // the common prefix is the sender's 4000 bytes.
+        let partial = |j: &Journal, idx: u32, name: &str, size: u64, bytes: &[u8]| {
+            let f = factory();
+            let dlen = f().digest_len();
+            let mut fj = j.create(idx, name, size, leaf, dlen).unwrap();
+            let mut tr = LeafTracker::new(leaf, &f);
+            tr.update(bytes, |_, d| fj.push_leaf(&d));
+            fj.checkpoint().unwrap();
+        };
+        partial(&rj, 0, "f0", 10_000, &data[..6000]);
+        partial(&sj, 0, "f0", 10_000, &data[..4000]);
+        // file 1: both complete -> skipped outright.
+        record_stream(&rj, 1, "f1", &data[..2500], leaf, true);
+        record_stream(&sj, 1, "f1", &data[..2500], leaf, true);
+        // file 2: receiver journal diverges (different bytes) -> rejected.
+        partial(&rj, 2, "f2", 3000, &[0xAA; 3000]);
+        partial(&sj, 2, "f2", 3000, &data[..3000]);
+        // file 3: receiver-only record -> the sender declines; the record
+        // must survive (a decline is not divergence).
+        partial(&rj, 3, "f3", 4000, &data[..2000]);
+
+        let cfg = cfg_with(leaf);
+        let names: Vec<String> = vec!["f0".into(), "f1".into(), "f2".into(), "f3".into()];
+        let sizes: Vec<u64> = vec![10_000, 2500, 3000, 4000];
+        // Destination holds at least each record's watermark.
+        let dst = MemStorage::new();
+        dst.put("f0", data[..6000].to_vec());
+        dst.put("f1", data[..2500].to_vec());
+        dst.put("f2", vec![0xAA; 3000]);
+        dst.put("f3", data[..2000].to_vec());
+        let storage: Arc<dyn Storage> = Arc::new(dst);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rcfg = cfg.clone();
+        let recv = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            negotiate_receiver(&mut sock, Some(&rj), &rcfg, &storage).unwrap()
+        });
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        let splan = negotiate_sender(&mut sock, Some(&sj), &cfg, &names, &sizes).unwrap();
+        let rplan = recv.join().unwrap();
+
+        for plan in [&splan, &rplan] {
+            assert_eq!(plan.offset_for(0), Some(4000), "common prefix = sender's 4 leaves");
+            assert_eq!(plan.offset_for(1), Some(2500), "both complete -> full skip");
+            assert!(plan.is_complete(1));
+            assert_eq!(plan.offset_for(2), None, "divergent prefix rejected");
+            assert_eq!(plan.offset_for(3), None, "declined offer resumes nothing");
+            assert_eq!(plan.skipped_files(), 1);
+            assert_eq!(plan.skipped_bytes(), 4000 + 2500);
+        }
+        // Both sides hold root-equal prefix leaves for file 0.
+        let s0 = splan.get(0).unwrap();
+        let r0 = rplan.get(0).unwrap();
+        assert_eq!(s0.leaves, r0.leaves);
+        assert_eq!(s0.size, 10_000);
+        // Only *proven divergence* costs a record: file 2 was dropped,
+        // the merely-declined file 3 survives for a later resume.
+        let rj = Journal::open(&rdir).unwrap();
+        assert!(rj.load(2).unwrap().is_none());
+        assert!(rj.load(3).unwrap().is_some(), "declined record must survive");
+        assert!(rj.load(0).unwrap().is_some());
+    }
+
+    #[test]
+    fn handshake_with_no_journals_is_empty() {
+        let cfg = cfg_with(1024);
+        let storage: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rcfg = cfg.clone();
+        let recv = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            negotiate_receiver(&mut sock, None, &rcfg, &storage).unwrap()
+        });
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        let splan = negotiate_sender(&mut sock, None, &cfg, &["a".into()], &[100]).unwrap();
+        assert!(splan.is_empty());
+        assert!(recv.join().unwrap().is_empty());
+    }
+
+    #[test]
+    fn prefix_leaf_geometry() {
+        assert_eq!(prefix_leaves_for(0, 0, 64), Some(1), "empty file skips via its one leaf");
+        assert_eq!(prefix_leaves_for(128, 128, 64), Some(2), "exact-multiple full skip");
+        assert_eq!(prefix_leaves_for(100, 100, 64), Some(2), "partial-leaf full skip");
+        assert_eq!(prefix_leaves_for(64, 100, 64), Some(1));
+        assert_eq!(prefix_leaves_for(0, 100, 64), None, "offset 0 = no resume");
+        assert_eq!(prefix_leaves_for(65, 100, 64), None, "misaligned");
+        assert_eq!(prefix_leaves_for(200, 100, 64), None, "past the file");
+    }
+}

@@ -12,6 +12,12 @@
 //! * [`scheduler`] — work items (small files batch, large files stand
 //!   alone), the work-stealing queue feeding N concurrent sessions, and
 //!   the engine configuration/report types.
+//! * [`journal`] — the crash-recovery subsystem: per-file checkpoint
+//!   records of leaf digests with crash-consistent (append-only,
+//!   data-before-journal fsync) writes, and the resume handshake that
+//!   lets a restarted sender/receiver pair verify the already-delivered
+//!   prefix by Merkle-root comparison and re-enqueue only the unfinished
+//!   tail.
 //! * [`pool`] — the shared hash worker pool: checksum compute decoupled
 //!   from per-session threads (one job per queue-mode file).
 //! * [`sender`] / [`receiver`] — Algorithm 1 (SEND + COMPUTECHECKSUM) and
@@ -34,6 +40,7 @@
 //! digests match (§IV-A's efficient error recovery).
 
 pub mod bufpool;
+pub mod journal;
 pub mod pool;
 pub mod protocol;
 pub mod queue;
@@ -154,6 +161,18 @@ pub struct SessionConfig {
     /// (0 = auto: sized so a full queue plus in-flight slack per session
     /// never exhausts it — see [`SessionConfig::pool_buffers_for`]).
     pub pool_buffers: usize,
+    /// Checkpoint-journal directory for this endpoint (`None` disables
+    /// journaling). Each endpoint needs its own directory; see
+    /// [`journal`].
+    pub journal_dir: Option<std::path::PathBuf>,
+    /// Run the resume handshake at engine start (both endpoints must set
+    /// it; requires the engine path, i.e. `serve_engine` /
+    /// `connect_and_send_engine`).
+    pub resume: bool,
+    /// Journal durability cadence: sync data + journal every this many
+    /// completed leaves (and always at file end). Smaller = fresher
+    /// checkpoints after a crash, more fsyncs on the stream path.
+    pub journal_checkpoint_leaves: u64,
     pub hasher: HasherFactory,
 }
 
@@ -167,6 +186,9 @@ impl SessionConfig {
             hybrid_threshold: 64 << 20,
             leaf_size: 64 << 10,
             pool_buffers: 0,
+            journal_dir: None,
+            resume: false,
+            journal_checkpoint_leaves: 8,
             hasher,
         }
     }
@@ -188,6 +210,11 @@ impl SessionConfig {
     /// Build the endpoint's data-plane buffer pool.
     pub fn make_pool(&self, sessions: usize) -> bufpool::BufferPool {
         bufpool::BufferPool::new(self.buf_size, self.pool_buffers_for(sessions))
+    }
+
+    /// Open this endpoint's checkpoint journal, if one is configured.
+    pub fn open_journal(&self) -> anyhow::Result<Option<journal::Journal>> {
+        self.journal_dir.as_deref().map(journal::Journal::open).transpose()
     }
 
     /// Verification units of a file as `(unit_id, offset, len)`.
@@ -234,6 +261,19 @@ pub struct TransferReport {
     /// Control-channel round trips spent on verification (digest/root
     /// exchanges plus tree node-range query rounds).
     pub verify_rtts: u64,
+    /// Files skipped outright at the resume handshake (fully delivered
+    /// and root-verified before the restart).
+    pub files_skipped: u64,
+    /// Bytes not re-sent thanks to the checkpoint journal (sum of agreed
+    /// resume offsets, including fully-skipped files).
+    pub bytes_skipped: u64,
+    /// Data-plane pool telemetry: grace-expired unpooled allocations
+    /// (nonzero = the pool was exhausted; consider a larger
+    /// `--pool-buffers`).
+    pub pool_fallback_allocs: u64,
+    /// Data-plane pool telemetry: peak pooled buffers in flight (how
+    /// close the run came to the pool's capacity).
+    pub pool_peak_in_flight: u64,
     pub elapsed_secs: f64,
 }
 

@@ -70,6 +70,16 @@ pub enum Frame {
     /// channel), `b` = stripe count. The accept loop uses it to route
     /// freshly accepted sockets to their session.
     Hello { session_id: u32, stripe_id: u64, stripes: u64 },
+    /// Receiver -> sender on the resume channel: "my journal attests
+    /// `watermark` delivered bytes of this file" — `a` = watermark, `b` =
+    /// leaf size, payload = file name (sanity cross-check).
+    ResumeOffer { file_idx: u32, watermark: u64, leaf_size: u64, name: String },
+    /// Sender -> receiver resume counter-offer: `a` = agreed restart
+    /// offset, payload = the sender's Merkle root over its journaled
+    /// prefix leaves up to that offset. An empty payload declines the
+    /// offer (no/stale sender journal); the receiver answers every ack
+    /// with a `Verdict`.
+    ResumeAck { file_idx: u32, offset: u64, digest: Vec<u8> },
     /// Session end.
     Done,
 }
@@ -87,9 +97,16 @@ const TAG_TREE_QUERY: u8 = 10;
 const TAG_TREE_NODES: u8 = 11;
 const TAG_TREE_REPAIR_SENT: u8 = 12;
 const TAG_HELLO: u8 = 13;
+const TAG_RESUME_OFFER: u8 = 14;
+const TAG_RESUME_ACK: u8 = 15;
 
 /// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
 pub const UNIT_FILE: u64 = u64::MAX;
+
+/// `Hello.session_id` marking the dedicated resume-handshake control
+/// connection (routed to [`super::journal::negotiate_receiver`] instead
+/// of a transfer session).
+pub const RESUME_SESSION: u32 = u32::MAX;
 
 /// Fixed frame header width.
 pub const HEADER_LEN: usize = 25;
@@ -147,6 +164,12 @@ impl Frame {
             }
             Frame::Hello { session_id, stripe_id, stripes } => {
                 (TAG_HELLO, *session_id, *stripe_id, *stripes, &[])
+            }
+            Frame::ResumeOffer { file_idx, watermark, leaf_size, name } => {
+                (TAG_RESUME_OFFER, *file_idx, *watermark, *leaf_size, name.as_bytes())
+            }
+            Frame::ResumeAck { file_idx, offset, digest } => {
+                (TAG_RESUME_ACK, *file_idx, *offset, 0, digest)
             }
             Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
         };
@@ -222,6 +245,13 @@ impl Frame {
                 Frame::TreeRepairSent { file_idx, round: a, leaves_fixed: b }
             }
             TAG_HELLO => Frame::Hello { session_id: file_idx, stripe_id: a, stripes: b },
+            TAG_RESUME_OFFER => Frame::ResumeOffer {
+                file_idx,
+                watermark: a,
+                leaf_size: b,
+                name: String::from_utf8(payload).context("resume offer name utf8")?,
+            },
+            TAG_RESUME_ACK => Frame::ResumeAck { file_idx, offset: a, digest: payload },
             TAG_DONE => Frame::Done,
             _ => bail!("unknown frame tag {tag}"),
         }))
@@ -378,6 +408,14 @@ mod tests {
         roundtrip(Frame::TreeNodes { file_idx: 4, level: 7, start: 128, digests: vec![1; 64] });
         roundtrip(Frame::TreeRepairSent { file_idx: 4, round: 1, leaves_fixed: 3 });
         roundtrip(Frame::Hello { session_id: 3, stripe_id: 1, stripes: 4 });
+        roundtrip(Frame::ResumeOffer {
+            file_idx: 11,
+            watermark: 3 << 20,
+            leaf_size: 64 << 10,
+            name: "dataset/file-0011".into(),
+        });
+        roundtrip(Frame::ResumeAck { file_idx: 11, offset: 3 << 20, digest: vec![0x6C; 32] });
+        roundtrip(Frame::ResumeAck { file_idx: 12, offset: 0, digest: Vec::new() });
         roundtrip(Frame::Done);
     }
 

@@ -31,10 +31,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::bufpool::{BufferPool, SharedBuf};
+use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
-use super::{RealAlgorithm, SessionConfig};
+use super::{HasherFactory, RealAlgorithm, SessionConfig};
 use crate::merkle::{MerkleBuilder, MerkleTree};
 use crate::storage::Storage;
 
@@ -92,12 +93,21 @@ pub fn serve_session(
     cfg: &SessionConfig,
 ) -> Result<ReceiverReport> {
     let pool = HashPool::new(2);
-    serve_session_multi(vec![data], ctrl, storage, cfg, pool.handle(), cfg.make_pool(1))
+    serve_session_multi(
+        vec![data],
+        ctrl,
+        storage,
+        cfg,
+        pool.handle(),
+        cfg.make_pool(1),
+        Arc::new(ResumePlan::default()),
+    )
 }
 
 /// Serve one engine session: `datas` are this session's stripe sockets
 /// (index = stripe id), `ctrl` its control channel, `pool` the endpoint's
-/// shared hash pool, `bufs` its shared data-plane buffer pool.
+/// shared hash pool, `bufs` its shared data-plane buffer pool, `resume`
+/// the handshake-agreed per-file restart state (empty = fresh run).
 pub fn serve_session_multi(
     datas: Vec<TcpStream>,
     ctrl: TcpStream,
@@ -105,8 +115,10 @@ pub fn serve_session_multi(
     cfg: &SessionConfig,
     pool: PoolHandle,
     bufs: BufferPool,
+    resume: Arc<ResumePlan>,
 ) -> Result<ReceiverReport> {
     anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
+    let journal = cfg.open_journal()?;
     let (tx, rx) = mpsc::channel::<Event>();
 
     // Verify worker: owns both directions of the control channel.
@@ -146,7 +158,7 @@ pub fn serve_session_multi(
     }
     drop(ftx); // merger's recv ends once every reader is done
 
-    let merged = merge_frames(&frx, &storage, cfg, &pool, &tx);
+    let merged = merge_frames(&frx, &storage, cfg, &pool, &tx, journal.as_ref(), &resume);
     drop(tx);
     let mut report = match merged {
         Ok(report) => {
@@ -191,6 +203,8 @@ fn merge_frames(
     cfg: &SessionConfig,
     pool: &PoolHandle,
     tx: &mpsc::Sender<Event>,
+    journal: Option<&Journal>,
+    resume: &ResumePlan,
 ) -> Result<ReceiverReport> {
     let mut report = ReceiverReport::default();
     let mut open: HashMap<u32, FileState> = HashMap::new();
@@ -248,7 +262,8 @@ fn merge_frames(
                 );
                 names.insert(file_idx, name.clone());
                 start_order.push(file_idx);
-                let mut st = FileState::new(file_idx, &name, size, cfg, storage, pool, tx)?;
+                let mut st =
+                    FileState::new(file_idx, &name, size, cfg, storage, pool, tx, journal, resume)?;
                 for (offset, payload) in early.remove(&file_idx).unwrap_or_default() {
                     st.write(offset, payload)?;
                 }
@@ -295,11 +310,21 @@ fn merge_frames(
             }
             Frame::FixEnd { file_idx, unit } => {
                 // Make the batch durable before the verify worker re-hashes
-                // the repaired ranges from storage.
+                // the repaired ranges from storage (and before the journal
+                // digests claiming those bytes do).
                 if let Some(mut w) = fix_writers.remove(&file_idx) {
-                    w.flush()?;
+                    w.sync()?;
                 }
                 let ranges = fix_ranges.remove(&file_idx).unwrap_or_default();
+                // Journaled leaf digests describing the patched bytes are
+                // stale now: recompute them from the repaired storage.
+                if let Some(st) = open.get_mut(&file_idx) {
+                    st.jrn_patch(&ranges, storage)?;
+                } else if let (Some(j), Some(name)) = (journal, names.get(&file_idx)) {
+                    j.patch_record(file_idx, &ranges, |off, len| {
+                        hash_range(storage, name, off, len, &cfg.hasher)
+                    })?;
+                }
                 tx.send(Event::Repaired { file_idx, unit, ranges }).ok();
             }
             Frame::Done => done_seen = true,
@@ -351,13 +376,14 @@ struct FileState {
     file_idx: u32,
     name: String,
     size: u64,
-    /// End of the contiguous prefix received so far.
+    /// End of the contiguous prefix received so far (starts at the
+    /// negotiated resume offset for a resumed file).
     contiguous: u64,
     /// Out-of-order spans past the prefix: offset -> len.
     spans: BTreeMap<u64, u64>,
-    /// Queue mode only: out-of-order payloads awaiting their turn. A
-    /// stashed entry is a refcount on the already-written pooled buffer,
-    /// not a copy.
+    /// Queue/journal mode only: out-of-order payloads awaiting their
+    /// turn. A stashed entry is a refcount on the already-written pooled
+    /// buffer, not a copy.
     stash: BTreeMap<u64, SharedBuf>,
     /// Queue mode only: in-order payloads the queue had no room for (its
     /// hash job may still be waiting for a pool worker). The merger spills
@@ -367,6 +393,13 @@ struct FileState {
     writer: Box<dyn crate::storage::WriteStream>,
     /// Queue for FIVER-mode files; its hash job runs on the shared pool.
     queue: Option<ByteQueue>,
+    /// Checkpoint journal for this file: the in-order stream folds into
+    /// leaf digests, checkpointed (data sync, then journal append+fsync)
+    /// every `jrn_checkpoint` completed leaves.
+    jrn: Option<(FileJournal, LeafTracker)>,
+    jrn_checkpoint: u64,
+    /// Hasher factory for journal-leaf recomputes after repairs.
+    hasher: HasherFactory,
     /// Re-read mode: units pending emission as the contiguous prefix
     /// crosses their end offset (lets block-level checksums overlap the
     /// next block's data).
@@ -377,6 +410,7 @@ struct FileState {
 }
 
 impl FileState {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         file_idx: u32,
         name: &str,
@@ -385,9 +419,21 @@ impl FileState {
         storage: &Arc<dyn Storage>,
         pool: &PoolHandle,
         tx: &mpsc::Sender<Event>,
+        journal: Option<&Journal>,
+        resume: &ResumePlan,
     ) -> Result<FileState> {
-        let writer = storage.open_write(name)?;
-        let uses_queue = cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
+        // A handshake-agreed partial file resumes: contiguous starts at
+        // the agreed offset, the destination opens without truncation,
+        // and verification runs on the journal's digest tree (prefix
+        // leaves + streamed tail) regardless of the session algorithm.
+        let resumed = resume.partial_for(file_idx, size).cloned();
+        let start_at = resumed.as_ref().map(|r| r.offset).unwrap_or(0);
+        let writer = if start_at > 0 {
+            storage.open_update(name)?
+        } else {
+            storage.open_write(name)?
+        };
+        let uses_queue = resumed.is_some() || cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
         let units = cfg.units_of(size, uses_queue);
         let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
 
@@ -397,7 +443,16 @@ impl FileState {
             let hasher_factory = cfg.hasher.clone();
             let tx2 = tx.clone();
             let name2 = name.to_string();
-            if cfg.algorithm == RealAlgorithm::FiverMerkle {
+            if let Some(rf) = &resumed {
+                let leaf_size = cfg.leaf_size;
+                let leaves = rf.leaves.clone();
+                let prefix = rf.offset;
+                pool.submit(move || {
+                    let tree =
+                        queue_build_resumed_tree(q2, leaf_size, leaves, prefix, hasher_factory);
+                    tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
+                });
+            } else if cfg.algorithm == RealAlgorithm::FiverMerkle {
                 // Fold the stream into a digest tree as it drains from the
                 // queue (Algorithm 2 line 7 with tree leaves instead of a
                 // single running digest) — still zero extra file I/O.
@@ -426,17 +481,30 @@ impl FileState {
         } else {
             None
         };
+        // Journal record: resumed files truncate to the agreed prefix and
+        // append from there; fresh files start a new record.
+        let jrn = match journal {
+            Some(j) => Some(j.begin_file(file_idx, name, size, start_at, cfg)?),
+            None => None,
+        };
         Ok(FileState {
             file_idx,
             name: name.to_string(),
             size,
-            contiguous: 0,
+            contiguous: start_at,
             spans: BTreeMap::new(),
             stash: BTreeMap::new(),
             spill: VecDeque::new(),
             writer,
             queue,
-            pending_units: if verify && !uses_queue { units } else { Vec::new() },
+            jrn,
+            jrn_checkpoint: cfg.journal_checkpoint_leaves.max(1),
+            hasher: cfg.hasher.clone(),
+            pending_units: if verify && !uses_queue && resumed.is_none() {
+                units
+            } else {
+                Vec::new()
+            },
             end_requested: false,
             tx: tx.clone(),
         })
@@ -448,7 +516,9 @@ impl FileState {
         if offset == self.contiguous {
             // Algorithm 2 line 7: share the received buffer with the
             // checksum job — the storage write borrowed it above, the
-            // queue takes a refcount; no re-read, no copy.
+            // journal tracker borrows it here, the queue takes a
+            // refcount; no re-read, no copy.
+            self.jrn_feed_buf(&payload)?;
             self.feed(payload);
             self.contiguous += len;
             // Pull any stashed successors into the prefix.
@@ -460,6 +530,7 @@ impl FileState {
                 }
                 self.spans.remove(&o);
                 if let Some(buf) = self.stash.remove(&o) {
+                    self.jrn_feed_buf(&buf)?;
                     self.feed(buf);
                 }
                 self.contiguous += l;
@@ -471,11 +542,68 @@ impl FileState {
                 self.contiguous
             );
             self.spans.insert(offset, len);
-            if self.queue.is_some() {
+            // The journal (like the queue) consumes the stream in order,
+            // so out-of-order payloads stash in both modes.
+            if self.queue.is_some() || self.jrn.is_some() {
                 self.stash.insert(offset, payload);
             }
         }
         self.emit_completed_units(false);
+        Ok(())
+    }
+
+    /// Fold an in-order payload into the journal tracker; checkpoint
+    /// (data sync, then journal append+fsync) every `jrn_checkpoint`
+    /// completed leaves, so the journal never attests bytes the storage
+    /// could still lose.
+    fn jrn_feed_buf(&mut self, data: &[u8]) -> Result<()> {
+        let Some((fj, tracker)) = self.jrn.as_mut() else { return Ok(()) };
+        tracker.update(data, |_, d| fj.push_leaf(&d));
+        if fj.pending_leaves() >= self.jrn_checkpoint {
+            self.writer.sync()?;
+            fj.checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// Repair `Fix` frames rewrote `ranges`: recompute the journaled leaf
+    /// digests they touch from the repaired storage, and rebuild the open
+    /// partial leaf's hasher state when the repair reached into it (at
+    /// most one leaf re-read per file).
+    fn jrn_patch(&mut self, ranges: &[(u64, u64)], storage: &Arc<dyn Storage>) -> Result<()> {
+        let Some((fj, tracker)) = self.jrn.as_mut() else { return Ok(()) };
+        let leaf = tracker.leaf_size();
+        let completed = tracker.completed_leaves();
+        // Completed-leaf hits share journal.rs's range->leaf mapping.
+        let dirty = super::journal::leaves_touched(ranges, leaf, completed);
+        let partial_dirty = ranges.iter().any(|&(off, len)| {
+            len > 0 && off / leaf <= completed && completed <= (off + len - 1) / leaf
+        });
+        for &l in &dirty {
+            let loff = l * leaf;
+            let llen = leaf.min(self.size - loff);
+            let d = hash_range(storage, &self.name, loff, llen, &self.hasher)?;
+            fj.overwrite_leaf(l, &d)?;
+        }
+        if partial_dirty && tracker.filled() > 0 {
+            // Re-read the open leaf's prefix from storage and rebuild the
+            // incremental hasher over the repaired bytes.
+            let start = completed * leaf;
+            let take = tracker.filled() as usize;
+            let mut buf = vec![0u8; take];
+            let mut r = storage.open_read(&self.name)?;
+            let mut got = 0usize;
+            while got < take {
+                let n = r.read_at(start + got as u64, &mut buf[got..])?;
+                anyhow::ensure!(n > 0, "short read rebuilding journal leaf of {}", self.name);
+                got += n;
+            }
+            tracker.rebuild_partial(&buf);
+        }
+        if !dirty.is_empty() {
+            self.writer.sync()?;
+            fj.sync()?;
+        }
         Ok(())
     }
 
@@ -556,6 +684,17 @@ impl FileState {
             self.contiguous,
             self.size
         );
+        // Close the journal record: final (partial) leaf, then the
+        // data-before-journal durability pair.
+        if let Some((fj, tracker)) = self.jrn.as_mut() {
+            tracker.finish(|_, d| fj.push_leaf(&d));
+        }
+        if self.jrn.is_some() {
+            self.writer.sync()?;
+            if let Some((fj, _)) = self.jrn.as_mut() {
+                fj.checkpoint()?;
+            }
+        }
         Ok(())
     }
 }
@@ -626,6 +765,26 @@ pub(crate) fn queue_build_tree(
     hasher_factory: super::HasherFactory,
 ) -> MerkleTree {
     let mut builder = MerkleBuilder::with_capacity(leaf_size, size_hint, hasher_factory);
+    while let Some(buf) = q.remove() {
+        builder.update(&buf);
+    }
+    builder.finish()
+}
+
+/// The resumed-file twin of [`queue_build_tree`]: seed the builder with
+/// the handshake-agreed prefix leaves and fold only the streamed tail.
+/// *Both* endpoints run exactly this job for a resumed file — keeping it
+/// in one place keeps the two trees provably identical, which is what
+/// the TreeRoot comparison's soundness rests on.
+pub(crate) fn queue_build_resumed_tree(
+    q: ByteQueue,
+    leaf_size: u64,
+    prefix_leaves: Vec<u8>,
+    prefix_bytes: u64,
+    hasher_factory: super::HasherFactory,
+) -> MerkleTree {
+    let mut builder =
+        MerkleBuilder::with_prefix(leaf_size, prefix_leaves, prefix_bytes, hasher_factory);
     while let Some(buf) = q.remove() {
         builder.update(&buf);
     }
@@ -947,7 +1106,9 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Event>();
         let data: Vec<u8> = (0u8..=255).cycle().take(64 * 1024).collect();
         let size = data.len() as u64;
-        let mut st = FileState::new(0, "f", size, &cfg, &storage, &handle, &tx).unwrap();
+        let plan = ResumePlan::default();
+        let mut st =
+            FileState::new(0, "f", size, &cfg, &storage, &handle, &tx, None, &plan).unwrap();
         for (i, chunk) in data.chunks(8 * 1024).enumerate() {
             st.write((i * 8 * 1024) as u64, chunk.to_vec().into()).unwrap();
         }
@@ -969,6 +1130,119 @@ mod tests {
         assert_eq!(mem.get("f").unwrap(), data);
     }
 
+    /// PROPERTY (spill path): randomized stripe interleavings across
+    /// several files, pushed through `ByteQueue::try_add` with a starved
+    /// 1-worker pool so the merger *must* spill, then drained oldest-first
+    /// exactly as `merge_frames`'s end-of-stream postlude does — every
+    /// file's queue-mode digest must equal the digest of its in-order
+    /// bytes (per-file byte ordering survives stash + spill), and storage
+    /// must hold the exact bytes.
+    #[test]
+    fn prop_spill_drains_oldest_first_preserving_order() {
+        use crate::util::rng::SplitMix64;
+        for seed in 0..20u64 {
+            let mut rng = SplitMix64::new(seed * 7919 + 5);
+            let mem = MemStorage::new();
+            let storage: Arc<dyn Storage> = Arc::new(mem.clone());
+            let mut cfg =
+                SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+            // Queue far smaller than the files: in-order feeds must spill
+            // while the gate starves the pool.
+            cfg.queue_capacity = rng.range(2_048, 8_192) as usize;
+            let pool = HashPool::new(1);
+            let handle = pool.handle();
+            let (gate_tx, gate_rx) = mpsc::channel::<()>();
+            handle.submit(move || {
+                gate_rx.recv().ok();
+            });
+            let (tx, rx) = mpsc::channel::<Event>();
+            let n_files = rng.range(2, 4) as usize;
+            let plan = ResumePlan::default();
+            let mut datas: Vec<Vec<u8>> = Vec::new();
+            let mut states: Vec<FileState> = Vec::new();
+            for i in 0..n_files {
+                let size = rng.range(20_000, 60_000) as usize;
+                let mut data = vec![0u8; size];
+                rng.fork().fill_bytes(&mut data);
+                let st = FileState::new(
+                    i as u32,
+                    &format!("s{i}"),
+                    size as u64,
+                    &cfg,
+                    &storage,
+                    &handle,
+                    &tx,
+                    None,
+                    &plan,
+                )
+                .unwrap();
+                datas.push(data);
+                states.push(st);
+            }
+            // Random per-file chunkings with bounded per-file reorder
+            // (stripe skew: adjacent chunks swap with 50% probability).
+            let mut chunks: Vec<VecDeque<(u64, Vec<u8>)>> = Vec::new();
+            for data in &datas {
+                let mut parts: Vec<(u64, Vec<u8>)> = Vec::new();
+                let mut off = 0usize;
+                while off < data.len() {
+                    let len = (rng.range(500, 4_000) as usize).min(data.len() - off);
+                    parts.push((off as u64, data[off..off + len].to_vec()));
+                    off += len;
+                }
+                let mut j = 0;
+                while j + 1 < parts.len() {
+                    if rng.below(2) == 1 {
+                        parts.swap(j, j + 1);
+                    }
+                    j += 2;
+                }
+                chunks.push(parts.into_iter().collect());
+            }
+            // Deliver in a random global interleaving of the files,
+            // occasionally retrying spills (as the merger does per frame).
+            while chunks.iter().any(|c| !c.is_empty()) {
+                let pick = rng.below(n_files as u64) as usize;
+                let Some((off, bytes)) = chunks[pick].pop_front() else { continue };
+                states[pick].write(off, bytes.into()).unwrap();
+                if rng.below(4) == 0 {
+                    states[pick].pump_spill();
+                }
+            }
+            assert!(
+                states.iter().any(|st| !st.spill.is_empty()),
+                "seed {seed}: geometry must actually exercise the spill path"
+            );
+            // End of stream: drain oldest-first (FileStart order), exactly
+            // like the merger postlude — the 1-worker pool runs the jobs
+            // FIFO, so this is the only safe blocking order.
+            gate_tx.send(()).unwrap();
+            for st in states.iter_mut() {
+                st.end_requested = true;
+                st.drain_spill_blocking();
+                st.finish().unwrap();
+            }
+            drop(states);
+            drop(tx);
+            // Storage holds the exact bytes, and every file's queue-fed
+            // digest equals the digest of its in-order bytes.
+            for (i, data) in datas.iter().enumerate() {
+                assert_eq!(&mem.get(&format!("s{i}")).unwrap(), data, "seed {seed} file {i}");
+            }
+            let mut seen = vec![false; n_files];
+            while let Ok(ev) = rx.recv() {
+                let Event::Verify { file_idx, digest: Some(d), .. } = ev else {
+                    panic!("expected queue-mode Verify event");
+                };
+                let expect =
+                    crate::hashes::hex_digest(HashAlgorithm::Md5, &datas[file_idx as usize]);
+                assert_eq!(crate::util::hex::encode(&d), expect, "seed {seed} file {file_idx}");
+                seen[file_idx as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "seed {seed}: one digest per file");
+        }
+    }
+
     #[test]
     fn file_state_reorders_stripe_skew_for_queue_feed() {
         // Out-of-order arrival: the storage writes land at their offsets
@@ -980,7 +1254,9 @@ mod tests {
         let handle = pool.handle();
         let (tx, rx) = mpsc::channel::<Event>();
         let data: Vec<u8> = (0u8..=255).cycle().take(900).collect();
-        let mut st = FileState::new(0, "f", 900, &cfg, &storage, &handle, &tx).unwrap();
+        let plan = ResumePlan::default();
+        let mut st =
+            FileState::new(0, "f", 900, &cfg, &storage, &handle, &tx, None, &plan).unwrap();
         // Stripe skew: chunks 300..600 and 600..900 before 0..300.
         st.write(300, data[300..600].to_vec().into()).unwrap();
         st.write(600, data[600..900].to_vec().into()).unwrap();

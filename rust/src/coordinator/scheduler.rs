@@ -83,6 +83,29 @@ impl EngineConfig {
             .map(|files| WorkItem { files })
             .collect()
     }
+
+    /// Plan a resumed run: files in `skip` (fully delivered and verified
+    /// at the resume handshake) drop out, and items that become empty
+    /// vanish — the crashed queue's drain state reconstructs as exactly
+    /// the unfinished tail of the dataset. Partially-delivered files stay
+    /// in the plan; their sessions stream only the journaled tail.
+    pub fn plan_resume(
+        &self,
+        sizes: &[u64],
+        skip: &std::collections::HashSet<usize>,
+    ) -> Vec<WorkItem> {
+        self.plan(sizes)
+            .into_iter()
+            .filter_map(|mut item| {
+                item.files.retain(|f| !skip.contains(f));
+                if item.files.is_empty() {
+                    None
+                } else {
+                    Some(item)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Per-session deques with stealing. All methods are safe to call from
@@ -134,6 +157,15 @@ impl WorkStealQueue {
     pub fn remaining(&self) -> usize {
         self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
     }
+
+    /// Racy snapshot of the undrained items per deque — the queue's
+    /// "drain state". The checkpoint journal does not persist this
+    /// directly (per-file watermarks are the durable truth); the snapshot
+    /// exists for telemetry and for tests that pin the resume planner's
+    /// equivalence to it.
+    pub fn snapshot(&self) -> Vec<Vec<WorkItem>> {
+        self.deques.iter().map(|d| d.lock().unwrap().iter().cloned().collect()).collect()
+    }
 }
 
 /// Aggregate outcome of an engine run: one [`TransferReport`] per session
@@ -141,6 +173,12 @@ impl WorkStealQueue {
 #[derive(Debug, Default, Clone)]
 pub struct EngineReport {
     pub per_session: Vec<TransferReport>,
+    /// Files skipped outright at the resume handshake (engine-level: the
+    /// scheduler never enqueued them).
+    pub files_skipped: u64,
+    /// Bytes not re-sent thanks to the checkpoint journal (sum of agreed
+    /// resume offsets).
+    pub bytes_skipped: u64,
     /// Wall-clock of the engine run (sessions overlap, so this is less
     /// than the sum of per-session elapsed times whenever concurrency
     /// helps).
@@ -150,10 +188,14 @@ pub struct EngineReport {
 impl EngineReport {
     /// Sum the per-session reports into one dataset-level report.
     /// `elapsed_secs` is the engine wall-clock, not the per-session sum.
+    /// Pool telemetry takes the per-session max (the pool is shared per
+    /// endpoint, so each session snapshots the same counters).
     pub fn aggregate(&self) -> TransferReport {
         let mut total = TransferReport {
             algorithm: self.per_session.first().map(|r| r.algorithm.clone()).unwrap_or_default(),
             elapsed_secs: self.elapsed_secs,
+            files_skipped: self.files_skipped,
+            bytes_skipped: self.bytes_skipped,
             ..Default::default()
         };
         for r in &self.per_session {
@@ -164,6 +206,8 @@ impl EngineReport {
             total.repair_rounds += r.repair_rounds;
             total.bytes_reread += r.bytes_reread;
             total.verify_rtts += r.verify_rtts;
+            total.pool_fallback_allocs = total.pool_fallback_allocs.max(r.pool_fallback_allocs);
+            total.pool_peak_in_flight = total.pool_peak_in_flight.max(r.pool_peak_in_flight);
         }
         total
     }
@@ -222,6 +266,36 @@ mod tests {
         assert_eq!(all.len(), 200, "every item claimed exactly once");
         let set: HashSet<usize> = all.into_iter().collect();
         assert_eq!(set.len(), 200);
+    }
+
+    #[test]
+    fn plan_resume_drops_completed_files_and_empty_items() {
+        use std::collections::HashSet;
+        let eng = EngineConfig { batch_threshold: 100, batch_bytes: 150, ..Default::default() };
+        // Files 0..4 all small: they batch into multi-file items.
+        let sizes = [50u64, 50, 50, 50, 200];
+        let full = eng.plan(&sizes);
+        let all: usize = full.iter().map(|i| i.files.len()).sum();
+        assert_eq!(all, 5);
+        let skip: HashSet<usize> = [0, 1, 4].into_iter().collect();
+        let resumed = eng.plan_resume(&sizes, &skip);
+        let kept: Vec<usize> = resumed.iter().flat_map(|i| i.files.iter().copied()).collect();
+        assert_eq!(kept, vec![2, 3], "only unfinished files re-enqueue");
+        // Skipping everything leaves an empty plan, not empty items.
+        let skip: HashSet<usize> = (0..5).collect();
+        assert!(eng.plan_resume(&sizes, &skip).is_empty());
+    }
+
+    #[test]
+    fn snapshot_reflects_drain_state() {
+        let q = WorkStealQueue::new(items(4), 2);
+        q.next(0).unwrap();
+        let snap = q.snapshot();
+        assert_eq!(snap.len(), 2);
+        let left: Vec<usize> =
+            snap.iter().flatten().flat_map(|i| i.files.iter().copied()).collect();
+        assert_eq!(left.len(), 3, "one item drained, three remain");
+        assert_eq!(q.remaining(), 3);
     }
 
     #[test]

@@ -33,12 +33,13 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::bufpool::{BufferPool, POOL_GRACE};
+use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan, ResumedFile};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
-use super::receiver::{hash_range, queue_build_tree, queue_hash_units};
+use super::receiver::{hash_range, queue_build_resumed_tree, queue_build_tree, queue_hash_units};
 use super::{RealAlgorithm, SessionConfig, TransferReport};
-use crate::faults::{FaultInjector, FaultPlan};
+use crate::faults::{CrashError, CrashPoint, FaultInjector, FaultPlan};
 use crate::merkle::MerkleTree;
 use crate::storage::Storage;
 
@@ -55,6 +56,10 @@ struct Shared {
     remaining: Mutex<HashMap<u32, usize>>,
     remaining_cv: Condvar,
     all_registered: AtomicBool,
+    /// Set when the verifier (or an abort) fails the session: blocked
+    /// waiters bail instead of sleeping on verifications that will never
+    /// arrive.
+    failed: AtomicBool,
     failures: AtomicU64,
     bytes_resent: AtomicU64,
     repair_rounds: AtomicU64,
@@ -72,6 +77,7 @@ impl Shared {
             remaining: Mutex::new(HashMap::new()),
             remaining_cv: Condvar::new(),
             all_registered: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
             failures: AtomicU64::new(0),
             bytes_resent: AtomicU64::new(0),
             repair_rounds: AtomicU64::new(0),
@@ -89,12 +95,16 @@ impl Shared {
     /// it and letting the map accumulate O(files × units) digests for the
     /// whole session). The verifier re-inserts it while a repair round is
     /// pending, since the receiver's fresh digest compares against the
-    /// same local value.
-    fn take_local(&self, file_idx: u32, unit: u64) -> Vec<u8> {
+    /// same local value. Bails when the session is failed/aborting, so a
+    /// dying session can always join its verifier.
+    fn take_local(&self, file_idx: u32, unit: u64) -> Result<Vec<u8>> {
         let mut g = self.local.lock().unwrap();
         loop {
             if let Some(d) = g.remove(&(file_idx, unit)) {
-                return d;
+                return Ok(d);
+            }
+            if self.failed.load(Ordering::SeqCst) {
+                bail!("session aborting while awaiting local digest ({file_idx},{unit})");
             }
             g = self.local_cv.wait(g).unwrap();
         }
@@ -107,11 +117,15 @@ impl Shared {
 
     /// Cheap Arc clone — a 1 TB file's tree holds tens of millions of
     /// digests; copying it per verification round would dwarf the repair.
-    fn wait_tree(&self, file_idx: u32) -> Arc<MerkleTree> {
+    /// Bails when the session is failed/aborting (see `take_local`).
+    fn wait_tree(&self, file_idx: u32) -> Result<Arc<MerkleTree>> {
         let mut g = self.trees.lock().unwrap();
         loop {
             if let Some(t) = g.get(&file_idx) {
-                return t.clone();
+                return Ok(t.clone());
+            }
+            if self.failed.load(Ordering::SeqCst) {
+                bail!("session aborting while awaiting digest tree of file {file_idx}");
             }
             g = self.trees_cv.wait(g).unwrap();
         }
@@ -136,18 +150,45 @@ impl Shared {
         self.remaining_cv.notify_all();
     }
 
-    fn wait_file_verified(&self, file_idx: u32) {
-        let mut g = self.remaining.lock().unwrap();
-        while g.get(&file_idx).copied().unwrap_or(0) > 0 {
-            g = self.remaining_cv.wait(g).unwrap();
-        }
+    /// Mark the session failed and wake every waiter (the verifier died,
+    /// or the session is being aborted) — blocked pacing/finish waits
+    /// bail instead of hanging on verifications that cannot complete.
+    ///
+    /// Each condvar's mutex is acquired (and released) before its notify:
+    /// a waiter that observed `failed == false` but has not parked yet
+    /// still holds its lock, so taking it here orders the store before
+    /// that waiter's `wait()` — without this, the notify could land while
+    /// nobody is parked and the wakeup would be lost forever.
+    fn fail(&self) {
+        self.failed.store(true, Ordering::SeqCst);
+        drop(self.local.lock().unwrap());
+        self.local_cv.notify_all();
+        drop(self.trees.lock().unwrap());
+        self.trees_cv.notify_all();
+        drop(self.remaining.lock().unwrap());
+        self.remaining_cv.notify_all();
     }
 
-    fn wait_all_verified(&self) {
+    fn wait_file_verified(&self, file_idx: u32) -> Result<()> {
         let mut g = self.remaining.lock().unwrap();
-        while g.values().any(|&n| n > 0) {
+        while g.get(&file_idx).copied().unwrap_or(0) > 0 {
+            if self.failed.load(Ordering::SeqCst) {
+                bail!("session failed while awaiting verification of file {file_idx}");
+            }
             g = self.remaining_cv.wait(g).unwrap();
         }
+        Ok(())
+    }
+
+    fn wait_all_verified(&self) -> Result<()> {
+        let mut g = self.remaining.lock().unwrap();
+        while g.values().any(|&n| n > 0) {
+            if self.failed.load(Ordering::SeqCst) {
+                bail!("session failed with unverified files");
+            }
+            g = self.remaining_cv.wait(g).unwrap();
+        }
+        Ok(())
     }
 
     fn all_done(&self) -> bool {
@@ -207,7 +248,20 @@ pub struct SenderSession {
     ck_tx: Option<mpsc::SyncSender<(u32, String, u64, u64, u64)>>,
     ck_handle: Option<std::thread::JoinHandle<Result<()>>>,
     verifier: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Clone of the control socket kept for the abort path (the verifier
+    /// owns the original).
+    ctrl_shutdown: Option<TcpStream>,
+    /// Raw clones of the data sockets for the abort path: severing them
+    /// must not take the `DataOut` mutexes, which a thread stuck in a
+    /// full-socket write may hold.
+    data_shutdown: Vec<TcpStream>,
     injector: FaultInjector,
+    /// Negotiated resume state: per-file restart offsets + prefix leaves.
+    resume: Arc<ResumePlan>,
+    /// Checkpoint journal for this endpoint (None = journaling off).
+    journal: Option<Journal>,
+    /// Shared engine kill switch (crash injection).
+    crash: Option<CrashPoint>,
     report: TransferReport,
     start: Instant,
     verify: bool,
@@ -227,25 +281,39 @@ impl SenderSession {
         faults: FaultPlan,
         pool: PoolHandle,
         bufs: BufferPool,
+        resume: Arc<ResumePlan>,
     ) -> Result<SenderSession> {
         anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
         let shared = Shared::new();
+        let data_shutdown: Vec<TcpStream> =
+            datas.iter().filter_map(|d| d.try_clone().ok()).collect();
         let data_outs: Vec<DataOut> = datas
             .into_iter()
             .map(|d| DataOut(Arc::new(Mutex::new(BufWriter::with_capacity(1 << 20, d)))))
             .collect();
         let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+        let journal = cfg.open_journal()?;
+        let ctrl_shutdown = ctrl.try_clone().ok();
 
         // Verifier thread (owns ctrl). Repair Fix frames ride stripe 0.
+        // On error it fails the shared state so pacing/finish waiters
+        // bail instead of sleeping forever.
         let verifier = if verify {
             let shared2 = shared.clone();
+            let shared3 = shared.clone();
             let storage2 = storage.clone();
             let data_out2 = data_outs[0].clone();
             let cfg2 = cfg.clone();
             let faults2 = faults.clone();
             let bufs2 = bufs.clone();
             Some(std::thread::spawn(move || {
-                run_verifier(ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2, &bufs2)
+                let r = run_verifier(
+                    ctrl, shared2, storage2, data_out2, &cfg2, &names, &faults2, &bufs2,
+                );
+                if r.is_err() {
+                    shared3.fail();
+                }
+                r
             }))
         } else {
             None
@@ -279,6 +347,7 @@ impl SenderSession {
         };
         Ok(SenderSession {
             injector: FaultInjector::new(&faults),
+            crash: faults.crash.clone(),
             cfg,
             storage,
             shared,
@@ -289,6 +358,10 @@ impl SenderSession {
             ck_tx,
             ck_handle,
             verifier,
+            ctrl_shutdown,
+            data_shutdown,
+            resume,
+            journal,
             report,
             start: Instant::now(),
             verify,
@@ -297,11 +370,24 @@ impl SenderSession {
 
     /// Stream one file (Algorithm 1 lines 5-8) and arrange its
     /// verification. Returns once the stream is on the wire (FIVER) or
-    /// once verified (Sequential pacing).
+    /// once verified (Sequential pacing). A file the resume handshake
+    /// proved fully delivered is skipped outright; a partially-delivered
+    /// one streams only its journaled tail and verifies end-to-end via
+    /// the journal's digest tree (prefix leaves + streamed tail).
     pub fn send_file(&mut self, file_idx: u32, name: &str) -> Result<()> {
+        if self.resume.is_complete(file_idx) {
+            return Ok(()); // verified at handshake; accounted engine-level
+        }
         let size = self.storage.size_of(name)?;
-        let uses_queue = self.cfg.algorithm.uses_queue(size, self.cfg.hybrid_threshold);
-        let units = self.cfg.units_of(size, uses_queue);
+        let resumed: Option<ResumedFile> = self.resume.partial_for(file_idx, size).cloned();
+        let start_at = resumed.as_ref().map(|r| r.offset).unwrap_or(0);
+        let uses_queue = resumed.is_some()
+            || self.cfg.algorithm.uses_queue(size, self.cfg.hybrid_threshold);
+        let units = if resumed.is_some() {
+            vec![(super::protocol::UNIT_FILE, 0, size)]
+        } else {
+            self.cfg.units_of(size, uses_queue)
+        };
         if self.verify {
             self.shared.register(file_idx, units.len());
         }
@@ -312,13 +398,24 @@ impl SenderSession {
             name: name.to_string(),
         })?;
 
-        // FIVER path: queue + pool job digesting the shared buffers.
+        // FIVER path: queue + pool job digesting the shared buffers. A
+        // resumed file always verifies by digest tree, whatever the
+        // session algorithm: the pool job seeds a builder with the
+        // journaled prefix leaves and folds only the streamed tail.
         let queue = if uses_queue && self.verify {
             let q = ByteQueue::new(self.cfg.queue_capacity);
             let q2 = q.clone();
             let hasher = self.cfg.hasher.clone();
             let shared2 = self.shared.clone();
-            if self.cfg.algorithm == RealAlgorithm::FiverMerkle {
+            if let Some(rf) = &resumed {
+                let leaf_size = self.cfg.leaf_size;
+                let leaves = rf.leaves.clone();
+                let prefix = rf.offset;
+                self.pool.submit(move || {
+                    let tree = queue_build_resumed_tree(q2, leaf_size, leaves, prefix, hasher);
+                    shared2.put_tree(file_idx, tree);
+                });
+            } else if self.cfg.algorithm == RealAlgorithm::FiverMerkle {
                 // Fold the clean outbound stream into a digest tree as it
                 // drains from the queue (no second read of the source).
                 let leaf_size = self.cfg.leaf_size;
@@ -338,17 +435,96 @@ impl SenderSession {
             None
         };
 
-        self.injector.start_file(file_idx as usize, 0);
+        // Checkpoint journal for this file: clean source bytes fold into
+        // leaf digests as they stream; resumed files truncate the record
+        // to the agreed prefix and append from there.
+        let mut jrn: Option<(FileJournal, LeafTracker)> = match &self.journal {
+            Some(j) => Some(j.begin_file(file_idx, name, size, start_at, &self.cfg)?),
+            None => None,
+        };
+
+        self.injector.start_file_at(file_idx as usize, 0, start_at);
+        let streamed =
+            self.stream_file(file_idx, name, size, start_at, queue.as_ref(), &units, &mut jrn);
+        // The hash job must never be left consuming an open queue — the
+        // pool's Drop joins its workers (crash/error liveness).
+        if let Some(q) = &queue {
+            q.close();
+        }
+        let mut unit_cursor = streamed?;
+        self.data_outs[0].send(&Frame::FileEnd { file_idx })?;
+        for out in &self.data_outs {
+            out.flush()?;
+        }
+        if queue.is_none() && self.verify {
+            // Remaining units past the stream loop's cursor (zero-length
+            // files have nothing to stream).
+            while unit_cursor < units.len() {
+                let (unit, uoff, ulen) = units[unit_cursor];
+                self.ck_tx
+                    .as_ref()
+                    .unwrap()
+                    .send((file_idx, name.to_string(), unit, uoff, ulen))?;
+                unit_cursor += 1;
+            }
+        }
+        // Close the final (partial) journal leaf and make it durable.
+        if let Some((mut fj, mut tracker)) = jrn.take() {
+            tracker.finish(|_, d| fj.push_leaf(&d));
+            fj.checkpoint()?;
+        }
+        // Pacing per policy. (Resume savings are accounted engine-level
+        // from the negotiated plan, not per session.)
+        if self.verify {
+            let sequential_pace = resumed.is_none()
+                && (matches!(self.cfg.algorithm, RealAlgorithm::Sequential)
+                    || (matches!(self.cfg.algorithm, RealAlgorithm::FiverHybrid) && !uses_queue));
+            if sequential_pace {
+                // Definitionally: verification completes before the next
+                // file starts.
+                self.shared.wait_file_verified(file_idx)?;
+            }
+            // File-/block-level pipelining pace through the depth-1 job
+            // channel (the sends above block appropriately); FIVER doesn't
+            // pace at all.
+        }
+        self.report.files += 1;
+        Ok(())
+    }
+
+    /// The read/stripe/queue loop of one file: stream `[start_at, size)`
+    /// from source storage over the data channels, feeding the checksum
+    /// queue, the re-read-mode unit jobs and the checkpoint journal along
+    /// the way. Returns the unit cursor (how many re-read-mode units were
+    /// emitted) so the caller continues from exactly where the loop
+    /// stopped. Aborts with [`CrashError`] at the next frame boundary
+    /// once the fault plan's crash budget is spent.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_file(
+        &mut self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        start_at: u64,
+        queue: Option<&ByteQueue>,
+        units: &[(u64, u64, u64)],
+        jrn: &mut Option<(FileJournal, LeafTracker)>,
+    ) -> Result<usize> {
         let mut reader = self.storage.open_read(name)?;
-        let mut offset = 0u64;
+        let mut offset = start_at;
         let mut unit_cursor = 0usize;
         while offset < size {
+            if let Some(c) = &self.crash {
+                if c.tripped() {
+                    return Err(anyhow::Error::new(CrashError));
+                }
+            }
             let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
             // One pooled buffer per read: the socket borrows it, the hash
             // queue shares it by refcount, and it returns to the pool when
             // the checksum worker drops it — no allocation, no copy.
             let mut clean = self.bufs.get_or_alloc(POOL_GRACE);
-            let n = reader.read_next(&mut clean[..want])?;
+            let n = reader.read_at(offset, &mut clean[..want])?;
             anyhow::ensure!(n > 0, "short read of {name} at {offset}");
             // Corruption happens on the wire: flip bits, send, then flip
             // back (XOR is self-inverse) so the local checksum hashes the
@@ -360,9 +536,21 @@ impl SenderSession {
             for &(pos, bit) in &flips {
                 clean[pos] ^= 1 << bit;
             }
+            if let Some(c) = &self.crash {
+                c.consume(n as u64);
+            }
+            // Journal the clean stream: completed leaves append, and every
+            // checkpoint_leaves of them fsync (source is read-only, so no
+            // data sync is needed on this side).
+            if let Some((fj, tracker)) = jrn.as_mut() {
+                tracker.update(&clean[..n], |_, d| fj.push_leaf(&d));
+                if fj.pending_leaves() >= self.cfg.journal_checkpoint_leaves.max(1) {
+                    fj.checkpoint()?;
+                }
+            }
             self.report.bytes_sent += n as u64;
             offset += n as u64;
-            if let Some(q) = &queue {
+            if let Some(q) = queue {
                 q.add(clean.freeze(n));
             }
             // Re-read-mode: emit checksum jobs for completed units
@@ -385,35 +573,7 @@ impl SenderSession {
                 }
             }
         }
-        self.data_outs[0].send(&Frame::FileEnd { file_idx })?;
-        for out in &self.data_outs {
-            out.flush()?;
-        }
-        if let Some(q) = queue {
-            q.close();
-        } else if self.verify {
-            // Remaining units (zero-length files).
-            while unit_cursor < units.len() {
-                let (unit, uoff, ulen) = units[unit_cursor];
-                self.ck_tx.as_ref().unwrap().send((file_idx, name.to_string(), unit, uoff, ulen))?;
-                unit_cursor += 1;
-            }
-        }
-        // Pacing per policy.
-        if self.verify {
-            let sequential_pace = matches!(self.cfg.algorithm, RealAlgorithm::Sequential)
-                || (matches!(self.cfg.algorithm, RealAlgorithm::FiverHybrid) && !uses_queue);
-            if sequential_pace {
-                // Definitionally: verification completes before the next
-                // file starts.
-                self.shared.wait_file_verified(file_idx);
-            }
-            // File-/block-level pipelining pace through the depth-1 job
-            // channel (the sends above block appropriately); FIVER doesn't
-            // pace at all.
-        }
-        self.report.files += 1;
-        Ok(())
+        Ok(unit_cursor)
     }
 
     /// Wait for every sent file to verify, close the session (`Done`), and
@@ -421,7 +581,7 @@ impl SenderSession {
     pub fn finish(mut self) -> Result<TransferReport> {
         if self.verify {
             self.shared.all_registered.store(true, Ordering::SeqCst);
-            self.shared.wait_all_verified();
+            self.shared.wait_all_verified()?;
         }
         drop(self.ck_tx.take()); // hang up the checksum worker
         self.data_outs[0].send(&Frame::Done)?;
@@ -439,10 +599,39 @@ impl SenderSession {
         self.report.repair_rounds = self.shared.repair_rounds.load(Ordering::SeqCst);
         self.report.bytes_reread = self.shared.bytes_reread.load(Ordering::SeqCst);
         self.report.verify_rtts = self.shared.verify_rtts.load(Ordering::SeqCst);
+        self.report.pool_fallback_allocs = self.bufs.fallback_allocs();
+        self.report.pool_peak_in_flight = self.bufs.peak_in_flight() as u64;
         self.report.elapsed_secs = self.start.elapsed().as_secs_f64();
-        Ok(self.report)
+        Ok(std::mem::take(&mut self.report))
         // data_outs drop here: BufWriters flush (already flushed above)
         // and the sockets close, which is the receiver readers' EOF.
+    }
+}
+
+impl Drop for SenderSession {
+    fn drop(&mut self) {
+        // Clean completion (`finish`) already joined everything. An abort
+        // (error / injected crash) must sever the transport so the
+        // verifier, the checksum worker and the remote peer all unwind —
+        // otherwise healthy sockets could deadlock a half-dead session
+        // against a receiver waiting for data that will never come.
+        if self.verifier.is_none() && self.ck_handle.is_none() {
+            return;
+        }
+        self.shared.fail();
+        if let Some(c) = &self.ctrl_shutdown {
+            c.shutdown(std::net::Shutdown::Both).ok();
+        }
+        for d in &self.data_shutdown {
+            d.shutdown(std::net::Shutdown::Both).ok();
+        }
+        drop(self.ck_tx.take());
+        if let Some(h) = self.ck_handle.take() {
+            h.join().ok();
+        }
+        if let Some(v) = self.verifier.take() {
+            let _ = v.join();
+        }
     }
 }
 
@@ -468,6 +657,7 @@ pub fn run_sender(
         faults.clone(),
         pool.handle(),
         cfg.make_pool(1),
+        Arc::new(ResumePlan::default()),
     )?;
     for (i, name) in names.iter().enumerate() {
         session.send_file(i as u32, name)?;
@@ -510,7 +700,7 @@ fn run_verifier(
         };
         match frame {
             Frame::Digest { file_idx, unit, digest } => {
-                let local = shared.take_local(file_idx, unit);
+                let local = shared.take_local(file_idx, unit)?;
                 shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
                 let ok = local == digest;
                 Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
@@ -539,7 +729,7 @@ fn run_verifier(
                 // on the next loop iteration.
             }
             Frame::TreeRoot { file_idx, leaves, leaf_size, digest } => {
-                let tree = shared.wait_tree(file_idx);
+                let tree = shared.wait_tree(file_idx)?;
                 // Geometry disagreements (leaf size or leaf count) are
                 // configuration/protocol errors, not wire corruption: leaf
                 // repairs can never change the remote tree's shape, so the
@@ -803,7 +993,19 @@ mod tests {
         shared.unit_ok(0);
         shared.all_registered.store(true, Ordering::SeqCst);
         assert!(shared.all_done());
-        shared.wait_file_verified(0); // returns immediately
-        shared.wait_all_verified();
+        shared.wait_file_verified(0).unwrap(); // returns immediately
+        shared.wait_all_verified().unwrap();
+    }
+
+    #[test]
+    fn failed_session_unblocks_waiters() {
+        let shared = Shared::new();
+        shared.register(0, 1); // never verified
+        let s2 = shared.clone();
+        let t = std::thread::spawn(move || s2.wait_all_verified());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        shared.fail();
+        assert!(t.join().unwrap().is_err(), "failed session must wake + bail waiters");
+        assert!(shared.wait_file_verified(0).is_err());
     }
 }

@@ -9,8 +9,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::journal::{self, ResumePlan};
 use super::pool::HashPool;
-use super::protocol::Frame;
+use super::protocol::{Frame, RESUME_SESSION};
 use super::receiver::{serve_session, serve_session_multi, ReceiverReport};
 use super::scheduler::{EngineConfig, EngineReport, WorkStealQueue};
 use super::sender::{run_sender, SenderSession};
@@ -81,19 +82,30 @@ impl ReceiverEndpoint {
         let p = eng.parallel.max(1);
         anyhow::ensure!(n * (p + 1) <= 128, "connection count exceeds the listen backlog");
 
-        // Route control connections by their Hello.
+        // Route control connections by their Hello. A resume-handshake
+        // connection (session id RESUME_SESSION) may arrive first: serve
+        // the negotiation from our checkpoint journal, then keep routing.
+        let mut resume_plan = Arc::new(ResumePlan::default());
         let mut ctrls: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
+        let mut routed = 0usize;
+        while routed < n {
             let (mut c, _) = self.ctrl_listener.accept().context("accept ctrl")?;
             c.set_nodelay(true).ok();
             let hello = Frame::read_from(&mut c)?.context("ctrl closed before Hello")?;
             let Frame::Hello { session_id, .. } = hello else {
                 bail!("expected Hello on ctrl, got {hello:?}");
             };
+            if session_id == RESUME_SESSION {
+                let jrnl = cfg.open_journal()?;
+                resume_plan =
+                    Arc::new(journal::negotiate_receiver(&mut c, jrnl.as_ref(), cfg, &storage)?);
+                continue;
+            }
             let sid = session_id as usize;
             anyhow::ensure!(sid < n, "session id {sid} out of range");
             anyhow::ensure!(ctrls[sid].is_none(), "duplicate ctrl for session {sid}");
             ctrls[sid] = Some(c);
+            routed += 1;
         }
         // Route data connections by (session, stripe).
         let mut datas: Vec<Vec<Option<TcpStream>>> =
@@ -129,13 +141,19 @@ impl ReceiverEndpoint {
             let cfg2 = cfg.clone();
             let handle = pool.handle();
             let bufs2 = bufs.clone();
+            let plan2 = resume_plan.clone();
             handles.push(std::thread::spawn(move || {
-                serve_session_multi(stripes, ctrl, storage2, &cfg2, handle, bufs2)
+                serve_session_multi(stripes, ctrl, storage2, &cfg2, handle, bufs2, plan2)
             }));
         }
+        // Join *every* session before surfacing an error: a crashed peer
+        // fails several sessions at once, and returning early would race
+        // the survivors against this scope's pool teardown.
+        let results: Vec<Result<ReceiverReport>> =
+            handles.into_iter().map(|h| h.join().expect("receiver session panicked")).collect();
         let mut reports = Vec::with_capacity(n);
-        for h in handles {
-            reports.push(h.join().expect("receiver session panicked")?);
+        for r in results {
+            reports.push(r?);
         }
         Ok(reports)
     }
@@ -177,7 +195,30 @@ pub fn connect_and_send_engine(
     for name in names.iter() {
         sizes.push(storage.size_of(name)?);
     }
-    let queue = Arc::new(WorkStealQueue::new(eng.plan(&sizes), n));
+    // Resume handshake (opt-in): one dedicated control connection up
+    // front negotiates per-file restart offsets from the two endpoints'
+    // checkpoint journals before any session spawns.
+    let mut resume_plan = Arc::new(ResumePlan::default());
+    if cfg.resume {
+        let journal = cfg.open_journal()?;
+        let mut c = TcpStream::connect(ctrl_addr).context("connect resume ctrl")?;
+        c.set_nodelay(true).ok();
+        Frame::Hello { session_id: RESUME_SESSION, stripe_id: 0, stripes: p as u64 }
+            .write_to(&mut c)?;
+        resume_plan =
+            Arc::new(journal::negotiate_sender(&mut c, journal.as_ref(), cfg, &names, &sizes)?);
+    }
+    // Files fully delivered and root-verified at handshake never
+    // re-enqueue: the scheduler plans only the unfinished tail.
+    let completed: std::collections::HashSet<usize> = resume_plan
+        .files
+        .keys()
+        .filter(|&&idx| resume_plan.is_complete(idx))
+        .map(|&idx| idx as usize)
+        .collect();
+    let files_skipped = resume_plan.skipped_files();
+    let bytes_skipped = resume_plan.skipped_bytes();
+    let queue = Arc::new(WorkStealQueue::new(eng.plan_resume(&sizes, &completed), n));
     let pool = HashPool::new(eng.pool_workers());
     // Shared sender-side buffer pool: every session's reads recycle
     // through it, and hash jobs return buffers as they drain the queues.
@@ -193,6 +234,7 @@ pub fn connect_and_send_engine(
         let faults = faults.clone();
         let handle = pool.handle();
         let bufs = bufs.clone();
+        let plan = resume_plan.clone();
         let data_addr = data_addr.to_string();
         let ctrl_addr = ctrl_addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<TransferReport> {
@@ -221,6 +263,7 @@ pub fn connect_and_send_engine(
                 faults,
                 handle,
                 bufs,
+                plan,
             )?;
             while let Some(item) = queue.next(sid) {
                 for &fi in &item.files {
@@ -230,11 +273,19 @@ pub fn connect_and_send_engine(
             session.finish()
         }));
     }
+    // Join every session before surfacing an error (see serve_engine).
+    let results: Vec<Result<TransferReport>> =
+        handles.into_iter().map(|h| h.join().expect("sender session panicked")).collect();
     let mut per_session = Vec::with_capacity(n);
-    for h in handles {
-        per_session.push(h.join().expect("sender session panicked")?);
+    for r in results {
+        per_session.push(r?);
     }
-    Ok(EngineReport { per_session, elapsed_secs: start.elapsed().as_secs_f64() })
+    Ok(EngineReport {
+        per_session,
+        files_skipped,
+        bytes_skipped,
+        elapsed_secs: start.elapsed().as_secs_f64(),
+    })
 }
 
 /// Run a complete local transfer: receiver thread + sender on the calling
@@ -267,12 +318,41 @@ pub fn run_parallel_local_transfer(
     eng: &EngineConfig,
     faults: &FaultPlan,
 ) -> Result<(EngineReport, Vec<ReceiverReport>)> {
+    run_recoverable_local_transfer(files, src, dst, cfg, cfg, eng, faults)
+}
+
+/// [`run_parallel_local_transfer`] with distinct sender/receiver session
+/// configurations — the crash-recovery surface: each endpoint needs its
+/// own `journal_dir`, and a resumed run sets `resume` on both. On a
+/// crashed run *both* sides return the error; journals and partially
+/// delivered files stay behind for the next attempt.
+pub fn run_recoverable_local_transfer(
+    files: &[String],
+    src: Arc<dyn Storage>,
+    dst: Arc<dyn Storage>,
+    sender_cfg: &SessionConfig,
+    receiver_cfg: &SessionConfig,
+    eng: &EngineConfig,
+    faults: &FaultPlan,
+) -> Result<(EngineReport, Vec<ReceiverReport>)> {
     let endpoint = ReceiverEndpoint::bind_local()?;
     let (data_addr, ctrl_addr) = endpoint.addrs()?;
-    let rcfg = cfg.clone();
+    let rcfg = receiver_cfg.clone();
     let reng = *eng;
     let receiver = std::thread::spawn(move || endpoint.serve_engine(dst, &rcfg, &reng));
-    let report = connect_and_send_engine(&data_addr, &ctrl_addr, files, src, cfg, eng, faults)?;
-    let rreports = receiver.join().expect("receiver engine panicked")?;
+    let sent = connect_and_send_engine(&data_addr, &ctrl_addr, files, src, sender_cfg, eng, faults);
+    if sent.is_err() {
+        // The sender may have died before connecting anything (bad
+        // journal dir, missing source file): a receiver still parked in
+        // its accept loop would make the join below hang forever. A dead
+        // connection per listener errors the loop out instead; when the
+        // receiver is already past accepting, the stray sockets just
+        // close unread.
+        TcpStream::connect(&ctrl_addr).map(drop).ok();
+        TcpStream::connect(&data_addr).map(drop).ok();
+    }
+    let received = receiver.join().expect("receiver engine panicked");
+    let report = sent?;
+    let rreports = received?;
     Ok((report, rreports))
 }

@@ -124,7 +124,9 @@ fn real_mode_sweep() -> String {
         names.push(name);
     }
     let cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
-    let run = |concurrency: usize| -> f64 {
+    // Real runs render through the same RunSummary surface as the sim
+    // (pool telemetry mirrored from the aggregate TransferReport).
+    let run = |concurrency: usize| -> crate::metrics::RunSummary {
         let eng = EngineConfig {
             concurrency,
             parallel: 1,
@@ -142,18 +144,24 @@ fn real_mode_sweep() -> String {
             &FaultPlan::none(),
         )
         .expect("real engine run");
-        assert_eq!(report.aggregate().bytes_sent, (files * size) as u64);
-        report.elapsed_secs
+        let total = report.aggregate();
+        assert_eq!(total.bytes_sent, (files * size) as u64);
+        crate::metrics::RunSummary::from_real(&total, concurrency)
     };
-    let t1 = run(1);
-    let t8 = run(8);
+    let s1 = run(1);
+    let s8 = run(8);
     format!(
         "\nreal mode (loopback, {files}x{}, MemStorage, fvr256):\n  \
-         concurrency 1: {}   concurrency 8: {}   ({:.2}x)\n",
+         concurrency 1: {}   concurrency 8: {}   ({:.2}x)\n  \
+         sender pool: peak {} / {} buffers in flight, {} / {} fallback allocs\n",
         fmt::bytes(size as u64),
-        fmt::secs(t1),
-        fmt::secs(t8),
-        t1 / t8
+        fmt::secs(s1.total_time),
+        fmt::secs(s8.total_time),
+        s1.total_time / s8.total_time,
+        s1.pool_peak_in_flight,
+        s8.pool_peak_in_flight,
+        s1.pool_fallback_allocs,
+        s8.pool_fallback_allocs,
     )
 }
 

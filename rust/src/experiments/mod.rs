@@ -11,6 +11,7 @@ pub mod concurrency;
 pub mod faults_table;
 pub mod hash_fig;
 pub mod overheads;
+pub mod resume;
 pub mod traces;
 
 use crate::config::{AlgoParams, Testbed, GB, MB};
@@ -88,6 +89,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
         "table3" => faults_table::table3(),
         "ablations" => ablations::ablations(),
         "concurrency" => concurrency::concurrency_sweep(),
+        "resume" => resume::resume_sweep(),
         "all" => {
             let mut out = String::new();
             for n in ALL {
@@ -103,7 +105,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
 /// All experiment names in paper order.
 pub const ALL: &[&str] = &[
     "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
-    "ablations", "concurrency",
+    "ablations", "concurrency", "resume",
 ];
 
 #[cfg(test)]

@@ -1,13 +1,69 @@
-//! Fault injection: silent data corruption on the wire path.
+//! Fault injection: silent data corruption on the wire path, plus
+//! mid-transfer process kills.
 //!
 //! The paper's Table III experiment "injected faults by flipping a random
 //! bit of randomly-chosen files during the transfer operation". This module
 //! provides the fault plan (which files/offsets corrupt, deterministic by
 //! seed) used by both the simulator and the real-mode coordinator (where
 //! a [`FaultInjector`] literally flips bits in the socket-bound buffers).
+//!
+//! A plan can also carry a [`CrashPoint`]: after a chosen number of
+//! streamed payload bytes, every sender session aborts at its next frame
+//! boundary as if the process were killed — the deterministic trigger the
+//! crash-recovery harness (`rust/tests/crash_recovery.rs`) and the sim's
+//! restart modeling drive. The budget is shared across sessions through
+//! an `Arc`, so one plan kills the whole engine, not one thread.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
 
 use crate::util::rng::SplitMix64;
 use crate::workload::Dataset;
+
+/// Error marker for an injected crash (the engine was "killed"; the
+/// transfer is expected to resume from its checkpoint journal).
+#[derive(Debug, Clone, Copy)]
+pub struct CrashError;
+
+impl std::fmt::Display for CrashError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected crash: engine killed mid-transfer")
+    }
+}
+
+impl std::error::Error for CrashError {}
+
+/// A planned mid-transfer kill: the engine dies at the first data-frame
+/// boundary once `after_bytes` payload bytes have been streamed (summed
+/// across every concurrent session — clones share the budget).
+#[derive(Debug, Clone)]
+pub struct CrashPoint {
+    after_bytes: u64,
+    remaining: Arc<AtomicI64>,
+}
+
+impl CrashPoint {
+    pub fn after_bytes(n: u64) -> CrashPoint {
+        let budget = n.min(i64::MAX as u64) as i64;
+        CrashPoint { after_bytes: n, remaining: Arc::new(AtomicI64::new(budget)) }
+    }
+
+    /// The configured kill threshold (the sim's restart models read it).
+    pub fn threshold(&self) -> u64 {
+        self.after_bytes
+    }
+
+    /// Has the byte budget been spent? Senders check this before putting
+    /// the next frame on the wire and abort with [`CrashError`] once true.
+    pub fn tripped(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) <= 0
+    }
+
+    /// Account `n` streamed payload bytes against the budget.
+    pub fn consume(&self, n: u64) {
+        self.remaining.fetch_sub(n.min(i64::MAX as u64) as i64, Ordering::SeqCst);
+    }
+}
 
 /// One planned corruption: flip `bit` of byte `offset` in file `file_idx`
 /// on its `occurrence`-th transfer attempt (0 = first attempt; re-transfers
@@ -24,12 +80,20 @@ pub struct Fault {
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     pub faults: Vec<Fault>,
+    /// Optional mid-transfer kill (see [`CrashPoint`]).
+    pub crash: Option<CrashPoint>,
 }
 
 impl FaultPlan {
     /// No faults.
     pub fn none() -> FaultPlan {
         FaultPlan::default()
+    }
+
+    /// This plan, plus a process kill after `bytes` streamed bytes.
+    pub fn with_crash_after_bytes(mut self, bytes: u64) -> FaultPlan {
+        self.crash = Some(CrashPoint::after_bytes(bytes));
+        self
     }
 
     /// `count` faults on distinct random (file, offset) positions, all on
@@ -58,12 +122,12 @@ impl FaultPlan {
             });
         }
         faults.sort_by_key(|f| (f.file_idx, f.offset));
-        FaultPlan { faults }
+        FaultPlan { faults, crash: None }
     }
 
     /// Faults hitting a specific file (for targeted tests).
     pub fn at(file_idx: usize, offset: u64, bit: u8) -> FaultPlan {
-        FaultPlan { faults: vec![Fault { file_idx, offset, bit, occurrence: 0 }] }
+        FaultPlan { faults: vec![Fault { file_idx, offset, bit, occurrence: 0 }], crash: None }
     }
 
     /// Faults planned for a given file + attempt.
@@ -142,9 +206,15 @@ impl FaultInjector {
 
     /// Begin streaming `file_idx`, attempt `occurrence`.
     pub fn start_file(&mut self, file_idx: usize, occurrence: u32) {
+        self.start_file_at(file_idx, occurrence, 0);
+    }
+
+    /// Begin streaming `file_idx` from byte `offset` (a journal-resumed
+    /// tail): planned fault offsets keep their whole-file coordinates.
+    pub fn start_file_at(&mut self, file_idx: usize, occurrence: u32, offset: u64) {
         self.current_file = file_idx;
         self.current_attempt = occurrence;
-        self.window_start = 0;
+        self.window_start = offset;
     }
 
     /// Corrupt `buf` (about to be sent at the current stream position).
@@ -250,6 +320,7 @@ mod tests {
                 Fault { file_idx: 1, offset: 105, bit: 1, occurrence: 2 },
                 Fault { file_idx: 0, offset: 105, bit: 2, occurrence: 1 },
             ],
+            crash: None,
         };
         let mut buf = vec![0u8; 10];
         // Wrong occurrence: untouched.
@@ -263,6 +334,42 @@ mod tests {
         assert_eq!(plan.corrupt_in_place(1, 1, 200, &mut buf2), 0);
         assert_eq!(plan.max_occurrence(1), 2);
         assert_eq!(plan.max_occurrence(9), 0);
+    }
+
+    #[test]
+    fn crash_point_trips_once_budget_spent_and_is_shared() {
+        let plan = FaultPlan::none().with_crash_after_bytes(100);
+        let c = plan.crash.as_ref().unwrap();
+        assert_eq!(c.threshold(), 100);
+        assert!(!c.tripped());
+        c.consume(60);
+        assert!(!c.tripped(), "under budget");
+        // Clones (other sessions) share the same budget.
+        let c2 = c.clone();
+        c2.consume(40);
+        assert!(c.tripped(), "budget spent across clones");
+        assert!(c2.tripped());
+        // Zero-budget plans are dead on arrival (crash before frame 1).
+        let now = CrashPoint::after_bytes(0);
+        assert!(now.tripped());
+    }
+
+    #[test]
+    fn injector_resumed_tail_keeps_file_coordinates() {
+        // A fault at absolute offset 15 must strike a tail stream that
+        // resumes at byte 10, at buffer position 5.
+        let p = FaultPlan::at(0, 15, 3);
+        let mut inj = FaultInjector::new(&p);
+        inj.start_file_at(0, 0, 10);
+        let mut buf = vec![0u8; 10];
+        assert_eq!(inj.corrupt(&mut buf), vec![(5, 3)]);
+        assert_eq!(buf[5], 0x08);
+        // A fault below the resume offset can never strike the tail.
+        let p = FaultPlan::at(0, 5, 0);
+        let mut inj = FaultInjector::new(&p);
+        inj.start_file_at(0, 0, 10);
+        let mut buf = vec![0u8; 10];
+        assert!(inj.corrupt(&mut buf).is_empty());
     }
 
     #[test]

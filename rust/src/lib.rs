@@ -24,6 +24,13 @@
 //!   length-prefixed reads decoded straight into pooled buffers, so the
 //!   steady state performs no payload allocation or copy per buffer
 //!   cycle (DESIGN.md "Data plane & buffer ownership").
+//!   Transfers are **crash-recoverable** ([`coordinator::journal`]): both
+//!   endpoints checkpoint per-file leaf digests with crash-consistent
+//!   writes, and a restarted pair negotiates per-file restart offsets —
+//!   the delivered prefix verifies by Merkle-root comparison without
+//!   re-reading a byte, and only the unfinished tail re-enters the
+//!   scheduler (`--journal-dir` / `--resume`; gated by the
+//!   crash-injection harness in `rust/tests/crash_recovery.rs`).
 //!   [`sim`] re-runs the same scheduling policies — including the engine,
 //!   via [`sim::algorithms::run_concurrent`] — inside a discrete-event
 //!   testbed model so the paper's 165 GB / 100 Gbps experiments (and

@@ -39,6 +39,20 @@
 //! * `--batch-threshold B` / `--batch-bytes T` — files under B bytes
 //!   aggregate into work items of ~T bytes so small-file control
 //!   round-trips amortize.
+//!
+//! Crash recovery (see `fiver::coordinator::journal`):
+//!
+//! * `--journal-dir PATH` — checkpoint journal for this endpoint (each
+//!   endpoint needs its own directory; `local` runs both endpoints, so it
+//!   splits the path into `PATH/snd` and `PATH/rcv` automatically). Leaf
+//!   digests of every file's delivered prefix are recorded with
+//!   crash-consistent writes.
+//! * `--resume` — negotiate per-file restart offsets from the journals at
+//!   session start and re-send only the unfinished tails (both endpoints
+//!   must pass it; forces the engine path).
+//! * `local` only: `--crash-after BYTES` — kill the engine mid-transfer
+//!   after ~BYTES streamed, then restart it against the journals and
+//!   report what the resume saved (a self-contained recovery demo).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -47,7 +61,7 @@ use anyhow::{bail, Context, Result};
 use fiver::coordinator::scheduler::EngineConfig;
 use fiver::coordinator::session::{
     connect_and_send, connect_and_send_engine, run_local_transfer, run_parallel_local_transfer,
-    ReceiverEndpoint,
+    run_recoverable_local_transfer, ReceiverEndpoint,
 };
 use fiver::coordinator::{native_factory, xla_factory, HasherFactory, RealAlgorithm, SessionConfig};
 use fiver::faults::FaultPlan;
@@ -88,8 +102,14 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     cfg.hybrid_threshold = args.opt_u64("hybrid-threshold", cfg.hybrid_threshold);
     cfg.leaf_size = args.opt_u64("leaf-size", cfg.leaf_size);
     cfg.pool_buffers = args.opt_u64("pool-buffers", 0) as usize;
+    cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
+    cfg.resume = args.flag("resume");
     anyhow::ensure!(cfg.leaf_size > 0, "--leaf-size must be positive");
     anyhow::ensure!(cfg.buf_size > 0, "--buffer-size must be positive");
+    anyhow::ensure!(
+        !cfg.resume || cfg.journal_dir.is_some(),
+        "--resume needs --journal-dir (the checkpoint to resume from)"
+    );
     Ok(cfg)
 }
 
@@ -106,9 +126,10 @@ fn engine_config(args: &Args) -> EngineConfig {
 }
 
 /// Does this invocation use the parallel engine (vs the classic
-/// single-session protocol without the Hello handshake)?
-fn uses_engine(eng: &EngineConfig) -> bool {
-    eng.concurrency > 1 || eng.parallel > 1
+/// single-session protocol without the Hello handshake)? `--resume`
+/// forces it: the resume handshake rides the engine's Hello routing.
+fn uses_engine(eng: &EngineConfig, cfg: &SessionConfig) -> bool {
+    eng.concurrency > 1 || eng.parallel > 1 || cfg.resume
 }
 
 /// Engine-only tuning knobs do nothing on the classic path; warn instead
@@ -134,7 +155,7 @@ fn main() -> Result<()> {
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
         "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "files", "size",
         "faults", "seed", "concurrency", "parallel", "hash-workers", "batch-threshold",
-        "batch-bytes",
+        "batch-bytes", "journal-dir", "crash-after",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -178,7 +199,7 @@ fn serve(args: &Args) -> Result<()> {
         eng.concurrency,
         eng.parallel,
     );
-    let report = if uses_engine(&eng) {
+    let report = if uses_engine(&eng, &cfg) {
         let mut total = fiver::coordinator::receiver::ReceiverReport::default();
         for (i, r) in endpoint.serve_engine(storage, &cfg, &eng)?.iter().enumerate() {
             println!(
@@ -215,7 +236,7 @@ fn send(args: &Args) -> Result<()> {
     anyhow::ensure!(!files.is_empty(), "no files given");
     let data_addr = args.opt_or("data", "127.0.0.1:7001");
     let ctrl_addr = args.opt_or("ctrl", "127.0.0.1:7002");
-    if uses_engine(&eng) {
+    if uses_engine(&eng, &cfg) {
         let engine_report = connect_and_send_engine(
             data_addr,
             ctrl_addr,
@@ -255,8 +276,77 @@ fn local(args: &Args) -> Result<()> {
     let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src"))?);
     let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst"))?);
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
-    let faults = FaultPlan::random(&ds, fault_count, seed);
-    if uses_engine(&eng) || engine_only_flags_given(args) {
+    let mut faults = FaultPlan::random(&ds, fault_count, seed);
+    let crash_after = args.opt_u64("crash-after", 0);
+    if crash_after > 0 {
+        // Crash-recovery demo: kill mid-transfer, restart against the
+        // journals, report what the resume saved. Needs per-endpoint
+        // journal dirs; default them under the demo's scratch tree.
+        faults = faults.with_crash_after_bytes(crash_after);
+        let jroot = match &cfg.journal_dir {
+            Some(d) => d.clone(),
+            None => base.join("journal"),
+        };
+        let mut scfg = cfg.clone();
+        scfg.journal_dir = Some(jroot.join("snd"));
+        let mut rcfg = cfg.clone();
+        rcfg.journal_dir = Some(jroot.join("rcv"));
+        eprintln!(
+            "phase 1: transferring with a planned kill after {} ...",
+            fmt::bytes(crash_after)
+        );
+        let crashed = run_recoverable_local_transfer(
+            &names,
+            src.clone(),
+            dst.clone(),
+            &scfg,
+            &rcfg,
+            &eng,
+            &faults,
+        );
+        match crashed {
+            Ok(_) => eprintln!("transfer finished before the crash point — nothing to resume"),
+            Err(e) => eprintln!("engine killed as planned ({e:#})"),
+        }
+        eprintln!("phase 2: restarting against the journals (--resume) ...");
+        scfg.resume = true;
+        rcfg.resume = true;
+        let (engine_report, _) = run_recoverable_local_transfer(
+            &names,
+            src,
+            dst,
+            &scfg,
+            &rcfg,
+            &eng,
+            &FaultPlan::none(),
+        )?;
+        print_engine_report(&engine_report);
+        return Ok(());
+    }
+    if cfg.journal_dir.is_some() {
+        // `local` runs both endpoints in one process: a single journal
+        // directory would have sender and receiver writing the same
+        // records (and a resume would compare a record against itself),
+        // so split it per endpoint, exactly like the crash demo above.
+        let jroot = cfg.journal_dir.clone().expect("checked above");
+        let mut scfg = cfg.clone();
+        scfg.journal_dir = Some(jroot.join("snd"));
+        let mut rcfg = cfg.clone();
+        rcfg.journal_dir = Some(jroot.join("rcv"));
+        let (engine_report, rreports) =
+            run_recoverable_local_transfer(&names, src, dst, &scfg, &rcfg, &eng, &faults)?;
+        print_engine_report(&engine_report);
+        for (i, r) in rreports.iter().enumerate() {
+            println!(
+                "receiver session {i}: {} units verified, {} failed, {} repaired",
+                r.units_verified,
+                r.units_failed,
+                fmt::bytes(r.bytes_repaired)
+            );
+        }
+        return Ok(());
+    }
+    if uses_engine(&eng, &cfg) || engine_only_flags_given(args) {
         let (engine_report, rreports) =
             run_parallel_local_transfer(&names, src, dst, &cfg, &eng, &faults)?;
         print_engine_report(&engine_report);
@@ -326,4 +416,17 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
         fmt::bytes(r.bytes_reread),
         r.verify_rtts,
     );
+    if r.pool_peak_in_flight > 0 || r.pool_fallback_allocs > 0 {
+        println!(
+            "data plane: {} pooled buffers peak in flight, {} fallback allocs",
+            r.pool_peak_in_flight, r.pool_fallback_allocs,
+        );
+    }
+    if r.files_skipped > 0 || r.bytes_skipped > 0 {
+        println!(
+            "resume: {} files verified from the journal, {} not re-sent",
+            r.files_skipped,
+            fmt::bytes(r.bytes_skipped),
+        );
+    }
 }

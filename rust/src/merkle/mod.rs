@@ -258,6 +258,37 @@ impl MerkleBuilder {
         }
     }
 
+    /// A builder seeded with precomputed digests of the stream's first
+    /// complete leaves — the crash-resume path: the journaled prefix's
+    /// leaves verify by root comparison without re-reading a byte, and
+    /// only the tail is hashed as it streams. `prefix_bytes` must sit on
+    /// a leaf boundary (the journal checkpoints complete leaves only).
+    pub fn with_prefix(
+        leaf_size: u64,
+        prefix_leaves: Vec<u8>,
+        prefix_bytes: u64,
+        factory: DigestFactory,
+    ) -> MerkleBuilder {
+        assert!(leaf_size > 0, "leaf_size must be positive");
+        let hasher = factory();
+        let digest_len = hasher.digest_len();
+        assert!(prefix_leaves.len() % digest_len == 0, "ragged prefix leaf digests");
+        assert_eq!(
+            (prefix_leaves.len() / digest_len) as u64 * leaf_size,
+            prefix_bytes,
+            "prefix must cover exactly its complete leaves"
+        );
+        MerkleBuilder {
+            leaf_size,
+            digest_len,
+            factory,
+            hasher,
+            filled: 0,
+            total: prefix_bytes,
+            leaves: prefix_leaves,
+        }
+    }
+
     /// Absorb the next buffer of the stream.
     pub fn update(&mut self, mut data: &[u8]) {
         while !data.is_empty() {
@@ -422,6 +453,30 @@ mod tests {
         assert_eq!(t.nodes_concat(0, 4, 2).len(), t.digest_len());
         assert!(t.nodes_concat(0, 9, 2).is_empty());
         assert!(t.nodes_concat(99, 0, 2).is_empty());
+    }
+
+    #[test]
+    fn with_prefix_matches_full_stream_build() {
+        // Seeding a builder with the first k leaf digests and streaming
+        // only the tail must yield the tree of the full stream — the
+        // resume-verification invariant.
+        let mut data = vec![0u8; 47_000];
+        SplitMix64::new(21).fill_bytes(&mut data);
+        let f = factory(HashAlgorithm::Md5);
+        let full = build(&data, 4096, HashAlgorithm::Md5, 1234);
+        for k in [1usize, 5, 11] {
+            let cut = k * 4096;
+            let dlen = full.digest_len();
+            let prefix = full.levels[0][..k * dlen].to_vec();
+            let mut b = MerkleBuilder::with_prefix(4096, prefix, cut as u64, f.clone());
+            for part in data[cut..].chunks(999) {
+                b.update(part);
+            }
+            let resumed = b.finish();
+            assert_eq!(resumed.root(), full.root(), "k={k}");
+            assert_eq!(resumed.leaf_count(), full.leaf_count());
+            assert_eq!(resumed.file_size(), data.len() as u64);
+        }
     }
 
     #[test]

@@ -176,6 +176,13 @@ pub struct RunSummary {
     /// Control-channel round trips spent on verification (digest/root
     /// exchanges plus Merkle node-range query rounds).
     pub verify_rtts: u64,
+    /// Data-plane pool telemetry, mirrored from a real run's
+    /// `TransferReport` by [`RunSummary::from_real`] (the sim models pool
+    /// capacity as a rate cap instead, so simulated summaries leave these
+    /// at 0): grace-expired unpooled allocations, and the peak pooled
+    /// buffers in flight.
+    pub pool_fallback_allocs: u64,
+    pub pool_peak_in_flight: u64,
     /// Concurrent sessions used (1 for the serial drivers).
     pub concurrency: usize,
     /// Per-session accounting (empty for the serial drivers).
@@ -185,6 +192,30 @@ pub struct RunSummary {
 impl RunSummary {
     pub fn overhead(&self) -> f64 {
         overhead(self.total_time, self.t_checksum_only, self.t_transfer_only)
+    }
+
+    /// Mirror a real engine run's aggregate report into a summary
+    /// (wall-clock, repair and data-plane pool telemetry), so real and
+    /// simulated runs render through the same reporting surface. The
+    /// Eq. 1 baselines are not measurable from a single real run and
+    /// stay 0 (don't call [`RunSummary::overhead`] on these).
+    pub fn from_real(
+        report: &crate::coordinator::TransferReport,
+        concurrency: usize,
+    ) -> RunSummary {
+        RunSummary {
+            algorithm: report.algorithm.clone(),
+            total_time: report.elapsed_secs,
+            bytes_resent: report.bytes_resent,
+            failures_detected: report.failures_detected,
+            repair_rounds: report.repair_rounds,
+            bytes_reread: report.bytes_reread,
+            verify_rtts: report.verify_rtts,
+            pool_fallback_allocs: report.pool_fallback_allocs,
+            pool_peak_in_flight: report.pool_peak_in_flight,
+            concurrency,
+            ..Default::default()
+        }
     }
 }
 
@@ -244,6 +275,29 @@ mod tests {
             .fold((0u64, 0u64), |(ah, am), &(h, m)| (ah + h, am + m));
         assert_eq!(h, 1000003);
         assert_eq!(m, 999999);
+    }
+
+    #[test]
+    fn from_real_mirrors_report_counters() {
+        let report = crate::coordinator::TransferReport {
+            algorithm: "FIVER".into(),
+            elapsed_secs: 1.5,
+            bytes_resent: 64,
+            failures_detected: 2,
+            repair_rounds: 2,
+            bytes_reread: 64,
+            verify_rtts: 9,
+            pool_fallback_allocs: 3,
+            pool_peak_in_flight: 40,
+            ..Default::default()
+        };
+        let s = RunSummary::from_real(&report, 4);
+        assert_eq!(s.algorithm, "FIVER");
+        assert_eq!(s.total_time, 1.5);
+        assert_eq!(s.pool_fallback_allocs, 3);
+        assert_eq!(s.pool_peak_in_flight, 40);
+        assert_eq!(s.concurrency, 4);
+        assert_eq!(s.failures_detected, 2);
     }
 
     #[test]

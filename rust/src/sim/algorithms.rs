@@ -998,6 +998,7 @@ mod tests {
                 Fault { file_idx: 0, offset: 12_345, bit: 0, occurrence: 0 },
                 Fault { file_idx: 0, offset: 12_345, bit: 1, occurrence: 1 },
             ],
+            crash: None,
         };
         let p = AlgoParams::default();
         let s = run(tb, p, &ds, &faults, Algorithm::FiverMerkle);
@@ -1140,6 +1141,7 @@ mod tests {
                 Fault { file_idx: 0, offset: 12_345, bit: 0, occurrence: 0 },
                 Fault { file_idx: 0, offset: 500 << 20, bit: 1, occurrence: 1 },
             ],
+            crash: None,
         };
         let s = run(tb, AlgoParams::default(), &ds, &faults, Algorithm::FiverMerkle);
         assert_eq!(s.repair_rounds, 1);

@@ -321,6 +321,26 @@ impl SimEnv {
         self.sim.start_flow(secs.max(0.0), vec![], Some(1.0))
     }
 
+    /// Model a process kill + restart of both endpoints: page caches are
+    /// lost, every TCP envelope restarts from a cold slow start, and the
+    /// restart costs `downtime` seconds of dead time plus one resume-
+    /// handshake RTT. Callers must have drained in-flight flows first
+    /// (the drivers split the crossing flow at the crash byte), exactly
+    /// as a kill truncates a stream at a frame boundary.
+    pub fn crash_restart(&mut self, downtime: f64) {
+        assert!(!self.transfer_active(), "abandon in-flight flows before a crash");
+        self.src_cache = PageCache::new(self.tb.src.free_mem);
+        self.dst_cache = PageCache::new(self.tb.dst.free_mem);
+        let params = self.tb.tcp_params();
+        for t in self.tcps.iter_mut() {
+            let survived = t.restarts + 1; // the kill itself is a restart
+            *t = TcpConn::new(params);
+            t.restarts = survived;
+        }
+        let timer = self.start_timer(downtime.max(0.0) + self.tb.rtt);
+        self.pump_until(timer);
+    }
+
     /// One engine step with TCP envelope management across every active
     /// session. Returns completed flows.
     pub fn pump_step(&mut self) -> Vec<FlowId> {
@@ -533,6 +553,26 @@ mod tests {
             "half-queue pool should roughly halve throughput: \
              {t_starved:.1}s vs {t_ample:.1}s"
         );
+    }
+
+    #[test]
+    fn crash_restart_cools_caches_and_advances_clock() {
+        let mut e = env();
+        let f = file(0, 100 * MB);
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        // Warm: a checksum read after the transfer hits cache.
+        let (hits, _) = e.cache_read(Side::Dst, &f, 0, f.size);
+        assert!(hits > 0, "transfer should have warmed the dst cache");
+        let before = e.now();
+        e.crash_restart(2.0);
+        assert!(e.now() >= before + 2.0, "downtime + handshake RTT must elapse");
+        assert!(e.restarts() >= 1, "the kill counts as a TCP restart");
+        // Cold: the same read now misses (caches were lost with the
+        // process).
+        let (_, misses) = e.cache_read(Side::Dst, &f, 0, f.size);
+        assert!(misses as f64 / f.size as f64 > 0.9, "restart must cold the caches");
+        assert!(!e.transfer_active());
     }
 
     #[test]

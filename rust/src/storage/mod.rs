@@ -41,6 +41,13 @@ pub trait WriteStream: Send {
     fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()>;
     fn write_next(&mut self, data: &[u8]) -> Result<()>;
     fn flush(&mut self) -> Result<()>;
+    /// Force written bytes to durable storage (`fdatasync`-strength where
+    /// the backend has a notion of durability). The checkpoint journal
+    /// calls this *before* recording a watermark, so a journal never
+    /// attests bytes the storage could still lose. Defaults to `flush`.
+    fn sync(&mut self) -> Result<()> {
+        self.flush()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -177,6 +184,11 @@ impl WriteStream for FsWrite {
 
     fn flush(&mut self) -> Result<()> {
         self.f.flush()?;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.f.sync_data()?;
         Ok(())
     }
 }

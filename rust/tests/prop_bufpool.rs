@@ -117,6 +117,52 @@ fn prop_exhaustion_backpressure() {
     drop(got);
 }
 
+/// PROPERTY: deliberate pool exhaustion increments `fallback_allocs`
+/// once per starved acquisition, `peak_in_flight` records the high-water
+/// mark, and the pool *recovers* — once the held refcounts drop, an
+/// arbitrary number of steady-state cycles takes pooled buffers without
+/// a single further fallback.
+#[test]
+fn prop_starvation_counts_fallbacks_then_recovers() {
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed + 0x57A8);
+        let cap = rng.range(2, 6) as usize;
+        let pool = BufferPool::new(128, cap);
+        // Exhaust: hold every pooled buffer via frozen refcounts.
+        let held: Vec<SharedBuf> = (0..cap).map(|_| pool.get().freeze(128)).collect();
+        assert_eq!(pool.in_flight(), cap);
+        assert_eq!(pool.peak_in_flight(), cap);
+        // Starved acquisitions fall back and are counted, one each.
+        let n_fallback = rng.range(1, 5);
+        let fallbacks: Vec<_> =
+            (0..n_fallback).map(|_| pool.get_or_alloc(Duration::from_millis(5))).collect();
+        assert!(fallbacks.iter().all(|b| !b.is_pooled()));
+        assert_eq!(pool.fallback_allocs(), n_fallback);
+        assert_eq!(pool.in_flight(), cap, "fallbacks never count as pooled in-flight");
+        // Recovery: refcounts drop, buffers return, and steady-state
+        // cycles stay fallback-free from then on.
+        drop(held);
+        drop(fallbacks);
+        assert_eq!(pool.free_buffers(), cap);
+        assert_eq!(pool.in_flight(), 0);
+        for _ in 0..rng.range(8, 40) {
+            let take = rng.range(1, cap as u64) as usize;
+            let round: Vec<SharedBuf> = (0..take)
+                .map(|_| pool.get_or_alloc(Duration::from_millis(50)).freeze(64))
+                .collect();
+            assert!(round.iter().all(|b| b.len() == 64));
+            drop(round);
+        }
+        assert_eq!(
+            pool.fallback_allocs(),
+            n_fallback,
+            "seed {seed}: zero-fallback steady state after recovery"
+        );
+        assert_eq!(pool.peak_in_flight(), cap);
+        assert_eq!(pool.allocated(), cap, "recovered cycles recycle, never re-allocate");
+    }
+}
+
 /// PROPERTY: ByteQueue byte accounting is exact for arbitrary slice
 /// patterns — `len_bytes` equals queued view lengths (not backing sizes),
 /// `try_add` hands the exact buffer back on a full queue, and spilled

@@ -180,6 +180,7 @@ fn merkle_repair_loop_converges_on_corrupted_repair() {
             Fault { file_idx: 0, offset, bit: 2, occurrence: 0 },
             Fault { file_idx: 0, offset: offset + 10, bit: 5, occurrence: 1 },
         ],
+        crash: None,
     };
     let src = MemStorage::new();
     let mut data = vec![0u8; size];

@@ -191,6 +191,7 @@ fn sim_real_cross_check_at_concurrency() {
             Fault { file_idx: 2, offset: 149_999, bit: 3, occurrence: 0 },
             Fault { file_idx: 5, offset: 75_000, bit: 5, occurrence: 0 },
         ],
+        crash: None,
     };
 
     // Real engine over loopback.
