@@ -103,9 +103,19 @@ def metric_of(obj):
     return obj.get("median_secs", 0.0) * 1e3, "ms", False
 
 
+def backend_of(obj):
+    """The io-backend a result was measured under (results predating the
+    backend matrix count as buffered — they were)."""
+    return obj.get("io_backend") or "buffered"
+
+
 def regression_of(cur_obj, prev_obj):
     """Fractional regression of `cur` vs `prev` (positive = worse), or
-    None when not comparable."""
+    None when not comparable — including when the two results were
+    measured under different io-backends (like-for-like only: a backend
+    switch is a configuration change, not a regression)."""
+    if backend_of(cur_obj) != backend_of(prev_obj):
+        return None
     cur_v, _, higher = metric_of(cur_obj)
     prev_v, _, _ = metric_of(prev_obj)
     if prev_v == 0:
@@ -166,7 +176,9 @@ def render(current, previous, prev_run):
             lines.append(f"| `{name}` | — | {fmt_val(cur_v, unit)} | new |")
             continue
         prev_v, _, _ = metric_of(prev)
-        if prev_v == 0:
+        if backend_of(prev) != backend_of(current[name]):
+            delta = f"backend changed ({backend_of(prev)} → {backend_of(current[name])})"
+        elif prev_v == 0:
             delta = "n/a"
         else:
             pct = (cur_v - prev_v) / prev_v * 100.0

@@ -87,10 +87,17 @@ impl BenchResult {
     }
 
     /// One JSON object per result; bench names are plain ASCII so no
-    /// escaping is needed.
+    /// escaping is needed. Every line records the environment's I/O
+    /// backend (`FIVER_IO_BACKEND`, `buffered` default) so the CI delta
+    /// gate only ever compares like-for-like baselines across the
+    /// io-backend matrix legs.
     fn emit_json(&self, extra: &str) {
+        // Canonical parse (not the raw env string): alias spellings and
+        // unknown values must not defeat the like-for-like comparison.
+        let backend = fiver::storage::IoBackend::from_env().name();
         append_json(&format!(
-            "{{\"name\":\"{}\",\"median_secs\":{:.9},\"mean_secs\":{:.9},\"min_secs\":{:.9}{extra}}}",
+            "{{\"name\":\"{}\",\"io_backend\":\"{backend}\",\"median_secs\":{:.9},\
+             \"mean_secs\":{:.9},\"min_secs\":{:.9}{extra}}}",
             self.name,
             self.median_secs,
             self.mean_secs,

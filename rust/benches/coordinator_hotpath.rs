@@ -16,13 +16,14 @@ use fiver::coordinator::session::{run_local_transfer, run_parallel_local_transfe
 use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
 use fiver::faults::FaultPlan;
 use fiver::hashes::HashAlgorithm;
-use fiver::storage::MemStorage;
+use fiver::storage::{FsStorage, IoBackend, MemStorage, Storage};
 use fiver::util::rng::SplitMix64;
 
 fn main() {
     queue_bench();
     queue_pool_bench();
     protocol_bench();
+    storage_backend_bench();
     transfer_bench();
     engine_bench();
 }
@@ -156,6 +157,93 @@ fn protocol_bench() {
         black_box(n);
     });
     r.report_bytes((frames * payload.len()) as u64);
+}
+
+/// The storage engines head to head on their hot paths: sequential
+/// write (+ one sync), ranged `read_shared` reads (pooled fill vs mmap
+/// zero-copy view vs O_DIRECT aligned read), and a full FsStorage
+/// loopback FIVER transfer per backend. Engines a filesystem refuses
+/// degrade gracefully inside the backend — the numbers then document the
+/// fallback, which is itself worth seeing in bench-results.json.
+fn storage_backend_bench() {
+    let total = pick(64, 8) << 20;
+    let buf_size = 256 * 1024;
+    println!(
+        "\n== storage backends ({} MiB, 256 KiB ops, FsStorage read/write) ==",
+        total >> 20
+    );
+    let payload = vec![0xA5u8; buf_size];
+    for backend in IoBackend::ALL {
+        let dir = fiver::util::tmpdir::unique_dir(&format!("fiver-bench-{}", backend.name()));
+        let storage = FsStorage::with_backend(&dir, backend).unwrap();
+        let pool = BufferPool::with_options(buf_size, 8, backend.buffer_align(), 8);
+        let r = bench(&format!("storage/write-{}", backend.name()), 1, pick(3, 1), || {
+            let mut w = storage.open_write_sized("f", total as u64).unwrap();
+            for _ in 0..(total / buf_size) {
+                w.write_next(&payload).unwrap();
+            }
+            w.flush().unwrap();
+            w.sync().unwrap();
+        });
+        r.report_bytes(total as u64);
+        let r = bench(&format!("storage/read-{}", backend.name()), 1, pick(3, 1), || {
+            let mut rd = storage.open_read("f").unwrap();
+            let mut off = 0u64;
+            let mut n = 0usize;
+            while off < total as u64 {
+                let chunk = rd.read_shared(off, buf_size, &pool).unwrap();
+                if chunk.is_empty() {
+                    break;
+                }
+                n += chunk.len();
+                off += chunk.len() as u64;
+            }
+            black_box(n);
+        });
+        r.report_bytes(total as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // End to end per backend: a loopback FIVER engine transfer with
+    // FsStorage on both ends (the receiver's decode/write path and the
+    // sender's read path both ride the selected engine).
+    let count = pick(16, 4);
+    let size = 1usize << 20;
+    let grand = (count * size) as u64;
+    println!("\n== per-backend loopback ({count} x 1 MiB, FsStorage, fvr256) ==");
+    let mut rng = SplitMix64::new(11);
+    let mut datas = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        datas.push(data);
+    }
+    for backend in IoBackend::ALL {
+        let dir = fiver::util::tmpdir::unique_dir(&format!("fiver-bxfer-{}", backend.name()));
+        let src = FsStorage::with_backend(&dir.join("src"), backend).unwrap();
+        let mut names = Vec::with_capacity(count);
+        for (i, data) in datas.iter().enumerate() {
+            let name = format!("b{i}");
+            let mut w = src.open_write(&name).unwrap();
+            w.write_next(data).unwrap();
+            w.flush().unwrap();
+            names.push(name);
+        }
+        let src = Arc::new(src);
+        let label = format!("transfer/FIVER-fs-{}", backend.name());
+        let r = bench(&label, 1, pick(3, 1), || {
+            let mut cfg =
+                SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+            cfg.io_backend = backend;
+            let dst: Arc<dyn Storage> =
+                Arc::new(FsStorage::with_backend(&dir.join("dst"), backend).unwrap());
+            let (rep, _) =
+                run_local_transfer(&names, src.clone(), dst, &cfg, &FaultPlan::none()).unwrap();
+            black_box(rep.bytes_sent);
+        });
+        r.report_bytes(grand);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 /// Complete loopback sessions: what a user of the system sees.

@@ -1,5 +1,5 @@
 //! The zero-copy data plane: a refcounted, sliceable byte buffer
-//! ([`SharedBuf`]) and a fixed-size recycling pool ([`BufferPool`]).
+//! ([`SharedBuf`]) and a recycling pool ([`BufferPool`]).
 //!
 //! FIVER's whole advantage is that transfer and checksum share one file
 //! read — but an implementation that allocates a fresh `Vec<u8>` per I/O
@@ -21,6 +21,14 @@
 //!   the owned plane paid; `rust/tests/alloc_regression.rs` gates the
 //!   byte cost).
 //!
+//! The pool serves the pluggable storage backends too
+//! (`crate::storage`): backings can be allocated at a configured
+//! **alignment** (O_DIRECT requires block-aligned buffers — see
+//! [`BufferPool::with_options`]), and a [`SharedBuf`] can wrap an
+//! **external** backing ([`SharedBuf::from_external`]) such as a live
+//! mmap region, so a memory-mapped file serves socket + hash queue with
+//! zero read copies and zero pool traffic.
+//!
 //! Backpressure and liveness: [`BufferPool::get`] blocks once `capacity`
 //! buffers are outstanding, which bounds data-plane memory exactly like
 //! the paper's fixed-size queue bounds decoupling. Blocking on a shared
@@ -32,9 +40,15 @@
 //! allocation and count it in [`BufferPool::fallback_allocs`]. A
 //! well-sized pool (the [`super::SessionConfig::pool_buffers_for`]
 //! default) never takes the fallback; the counter makes mis-sizing
-//! observable instead of deadlocking the transfer.
+//! observable instead of deadlocking the transfer. And instead of
+//! *permanently* degrading to allocate-per-buffer, a persistently
+//! exhausted pool **grows**: every [`GROW_FALLBACK_THRESHOLD`]
+//! grace-expired misses raise `capacity` by half (up to the configured
+//! `max_capacity`), counted in [`BufferPool::grow_events`] so telemetry
+//! shows the adaptation instead of hiding it.
 
 use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -44,10 +58,82 @@ use std::time::Duration;
 /// ownership"). Hot paths pass this to [`BufferPool::get_or_alloc`].
 pub const POOL_GRACE: Duration = Duration::from_millis(100);
 
+/// Grace-expired misses before an undersized pool grows its capacity
+/// (adaptive sizing): the first few misses fall back to one-off
+/// allocations — a transient burst shouldn't commit memory permanently —
+/// but a *sustained* shortfall raises `capacity` by half, up to the
+/// configured cap.
+pub const GROW_FALLBACK_THRESHOLD: u64 = 4;
+
+/// An owned, heap-allocated, fixed-size byte buffer with an explicit
+/// alignment — the pool's backing storage. `align == 1` is a plain
+/// allocation; the O_DIRECT storage backend asks for block alignment
+/// (`crate::storage::DIRECT_ALIGN`) so pooled buffers are valid direct-I/O
+/// targets without a bounce copy.
+pub(crate) struct AlignedBytes {
+    ptr: NonNull<u8>,
+    len: usize,
+    align: usize,
+}
+
+// SAFETY: AlignedBytes uniquely owns its allocation; &/&mut access follows
+// Rust's usual borrow rules via Deref/DerefMut.
+unsafe impl Send for AlignedBytes {}
+unsafe impl Sync for AlignedBytes {}
+
+impl AlignedBytes {
+    fn zeroed(len: usize, align: usize) -> AlignedBytes {
+        assert!(len > 0, "buffer length must be positive");
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        let layout = std::alloc::Layout::from_size_align(len, align).expect("buffer layout");
+        // SAFETY: layout has non-zero size (asserted above).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw) else { std::alloc::handle_alloc_error(layout) };
+        AlignedBytes { ptr, len, align }
+    }
+}
+
+impl Deref for AlignedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        // SAFETY: ptr/len describe our live, uniquely owned allocation.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedBytes {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above, and &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        // SAFETY: same layout as the allocation (len > 0, align power of 2).
+        unsafe {
+            let layout = std::alloc::Layout::from_size_align_unchecked(self.len, self.align);
+            std::alloc::dealloc(self.ptr.as_ptr(), layout);
+        }
+    }
+}
+
+/// Bytes owned by something other than the pool or the heap — e.g. a live
+/// mmap region held by the mmap storage backend. A [`SharedBuf`] view over
+/// an external backing keeps it alive (refcounted) and copies nothing.
+pub trait ExternalBytes: Send + Sync {
+    fn as_bytes(&self) -> &[u8];
+}
+
 /// Pool bookkeeping behind the mutex.
 struct PoolState {
     /// Recycled backings ready for reuse.
-    free: Vec<Box<[u8]>>,
+    free: Vec<AlignedBytes>,
+    /// Current capacity: starts at the configured size and grows (up to
+    /// `PoolCore::max_capacity`) when sustained exhaustion shows the
+    /// workload needs more — see [`GROW_FALLBACK_THRESHOLD`].
+    capacity: usize,
     /// Pooled backings currently alive (free + lent out). Lazily grown up
     /// to `capacity`, so an idle pool costs nothing.
     allocated: usize,
@@ -60,6 +146,11 @@ struct PoolState {
     /// One-off unpooled allocations taken by [`BufferPool::get_or_alloc`]
     /// after the grace period — zero in a well-sized steady state.
     fallback_allocs: u64,
+    /// Capacity raises taken by the adaptive sizer.
+    grow_events: u64,
+    /// Grace-expired misses since the last grow (or since creation) —
+    /// the adaptive sizer's trigger counter.
+    misses_since_grow: u64,
     /// Set when a `get_or_alloc` grace period expired without a return
     /// and cleared on the next return: while starved, further
     /// `get_or_alloc` calls fall back immediately instead of repaying the
@@ -71,14 +162,17 @@ struct PoolState {
 
 struct PoolCore {
     buf_size: usize,
-    capacity: usize,
+    align: usize,
+    /// Adaptive-growth ceiling (>= the initial capacity; equal disables
+    /// growth).
+    max_capacity: usize,
     state: Mutex<PoolState>,
     available: Condvar,
 }
 
 impl PoolCore {
     /// Return a backing to the free list (called from the last-ref drop).
-    fn put_back(&self, data: Box<[u8]>) {
+    fn put_back(&self, data: AlignedBytes) {
         let mut g = self.state.lock().unwrap();
         g.free.push(data);
         g.in_use = g.in_use.saturating_sub(1);
@@ -94,7 +188,7 @@ fn note_acquired(g: &mut PoolState) {
     g.peak_in_use = g.peak_in_use.max(g.in_use);
 }
 
-/// A fixed-capacity pool of `buf_size`-byte buffers. Cloning shares the
+/// A bounded pool of `buf_size`-byte buffers. Cloning shares the
 /// pool (cheap `Arc` clone); buffers return on the last drop of any
 /// [`PoolBuf`]/[`SharedBuf`] referencing them, even if every `BufferPool`
 /// handle is gone by then.
@@ -106,20 +200,38 @@ pub struct BufferPool {
 impl BufferPool {
     /// A pool of up to `capacity` buffers of `buf_size` bytes each.
     /// Backings are allocated lazily on first use and recycled forever
-    /// after.
+    /// after. No alignment requirement, no adaptive growth.
     pub fn new(buf_size: usize, capacity: usize) -> BufferPool {
+        BufferPool::with_options(buf_size, capacity, 1, capacity)
+    }
+
+    /// The fully-specified constructor: `align` is the backing alignment
+    /// (1 = none; the direct storage backend needs
+    /// `crate::storage::DIRECT_ALIGN`), `max_capacity` the adaptive-growth
+    /// ceiling (clamped to >= `capacity`; equal disables growth).
+    pub fn with_options(
+        buf_size: usize,
+        capacity: usize,
+        align: usize,
+        max_capacity: usize,
+    ) -> BufferPool {
         assert!(buf_size > 0, "buffer size must be positive");
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
         let capacity = capacity.max(1);
         BufferPool {
             core: Arc::new(PoolCore {
                 buf_size,
-                capacity,
+                align,
+                max_capacity: max_capacity.max(capacity),
                 state: Mutex::new(PoolState {
                     free: Vec::with_capacity(capacity),
+                    capacity,
                     allocated: 0,
                     in_use: 0,
                     peak_in_use: 0,
                     fallback_allocs: 0,
+                    grow_events: 0,
+                    misses_since_grow: 0,
                     starved: false,
                 }),
                 available: Condvar::new(),
@@ -131,8 +243,19 @@ impl BufferPool {
         self.core.buf_size
     }
 
+    /// Backing alignment (1 = unaligned).
+    pub fn align(&self) -> usize {
+        self.core.align
+    }
+
+    /// Current capacity (grows adaptively up to [`BufferPool::max_capacity`]).
     pub fn capacity(&self) -> usize {
-        self.core.capacity
+        self.core.state.lock().unwrap().capacity
+    }
+
+    /// Adaptive-growth ceiling.
+    pub fn max_capacity(&self) -> usize {
+        self.core.max_capacity
     }
 
     /// Pooled backings currently alive (free + lent out).
@@ -149,6 +272,12 @@ impl BufferPool {
     /// the pool stayed exhausted past the grace period.
     pub fn fallback_allocs(&self) -> u64 {
         self.core.state.lock().unwrap().fallback_allocs
+    }
+
+    /// Capacity raises taken by the adaptive sizer (sustained exhaustion
+    /// grew the pool instead of degrading to allocate-per-buffer).
+    pub fn grow_events(&self) -> u64 {
+        self.core.state.lock().unwrap().grow_events
     }
 
     /// Pooled buffers lent out right now.
@@ -172,11 +301,11 @@ impl BufferPool {
                 note_acquired(&mut g);
                 return self.wrap(data);
             }
-            if g.allocated < self.core.capacity {
+            if g.allocated < g.capacity {
                 g.allocated += 1;
                 note_acquired(&mut g);
                 drop(g);
-                return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
+                return self.wrap(self.alloc_backing());
             }
             g = self.core.available.wait(g).unwrap();
         }
@@ -189,11 +318,11 @@ impl BufferPool {
             note_acquired(&mut g);
             return Some(self.wrap(data));
         }
-        if g.allocated < self.core.capacity {
+        if g.allocated < g.capacity {
             g.allocated += 1;
             note_acquired(&mut g);
             drop(g);
-            return Some(self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice()));
+            return Some(self.wrap(self.alloc_backing()));
         }
         None
     }
@@ -207,7 +336,10 @@ impl BufferPool {
     /// The grace wait is paid only at the *edge* of exhaustion: once it
     /// expires, the pool is marked starved and further calls fall back
     /// immediately (degrading to allocate-per-buffer speed, not one
-    /// buffer per grace period) until a return clears the mark.
+    /// buffer per grace period) until a return clears the mark. Sustained
+    /// exhaustion instead *grows* the pool: every
+    /// [`GROW_FALLBACK_THRESHOLD`] grace-expired misses raise capacity by
+    /// half, up to `max_capacity`.
     pub fn get_or_alloc(&self, grace: Duration) -> PoolBuf {
         let mut g = self.core.state.lock().unwrap();
         let deadline = std::time::Instant::now() + grace;
@@ -216,19 +348,34 @@ impl BufferPool {
                 note_acquired(&mut g);
                 return self.wrap(data);
             }
-            if g.allocated < self.core.capacity {
+            if g.allocated < g.capacity {
                 g.allocated += 1;
                 note_acquired(&mut g);
                 drop(g);
-                return self.wrap(vec![0u8; self.core.buf_size].into_boxed_slice());
+                return self.wrap(self.alloc_backing());
             }
             let now = std::time::Instant::now();
             if g.starved || now >= deadline {
+                // Adaptive sizing: once GROW_FALLBACK_THRESHOLD misses
+                // have fallen back since the last grow, the shortfall is
+                // sustained — raise capacity instead of committing to
+                // allocate-per-buffer forever.
+                if g.capacity < self.core.max_capacity
+                    && g.misses_since_grow >= GROW_FALLBACK_THRESHOLD
+                {
+                    let step = (g.capacity / 2).max(1);
+                    g.capacity = (g.capacity + step).min(self.core.max_capacity);
+                    g.grow_events += 1;
+                    g.misses_since_grow = 0;
+                    g.starved = false;
+                    continue; // allocated < capacity now: pooled path
+                }
+                g.misses_since_grow += 1;
                 g.starved = true;
                 g.fallback_allocs += 1;
                 drop(g);
                 return PoolBuf {
-                    data: Some(vec![0u8; self.core.buf_size].into_boxed_slice()),
+                    data: Some(AlignedBytes::zeroed(self.core.buf_size, self.core.align)),
                     pool: None,
                 };
             }
@@ -237,7 +384,11 @@ impl BufferPool {
         }
     }
 
-    fn wrap(&self, data: Box<[u8]>) -> PoolBuf {
+    fn alloc_backing(&self) -> AlignedBytes {
+        AlignedBytes::zeroed(self.core.buf_size, self.core.align)
+    }
+
+    fn wrap(&self, data: AlignedBytes) -> PoolBuf {
         PoolBuf { data: Some(data), pool: Some(self.core.clone()) }
     }
 }
@@ -246,7 +397,7 @@ impl BufferPool {
 /// Either [`PoolBuf::freeze`] it into an immutable [`SharedBuf`] for
 /// refcounted sharing, or drop it to return the backing immediately.
 pub struct PoolBuf {
-    data: Option<Box<[u8]>>,
+    data: Option<AlignedBytes>,
     /// `None` for grace-period fallback buffers: they free on drop instead
     /// of returning to the pool.
     pool: Option<Arc<PoolCore>>,
@@ -260,7 +411,12 @@ impl PoolBuf {
         let data = self.data.take().expect("freeze after drop");
         assert!(len <= data.len(), "freeze length {} exceeds buffer {}", len, data.len());
         SharedBuf {
-            backing: Arc::new(Backing { data: Some(data), pool: self.pool.take() }),
+            backing: Arc::new(Backing {
+                pooled: Some(data),
+                pool: self.pool.take(),
+                owned: None,
+                external: None,
+            }),
             off: 0,
             len,
         }
@@ -294,16 +450,39 @@ impl Drop for PoolBuf {
     }
 }
 
-/// The refcounted backing of one or more [`SharedBuf`] views.
+/// The refcounted backing of one or more [`SharedBuf`] views: exactly one
+/// of `pooled` / `owned` / `external` is set.
 struct Backing {
-    data: Option<Box<[u8]>>,
+    /// Pool-shaped storage; returns to `pool` on drop when one is set,
+    /// frees otherwise (grace-period fallbacks).
+    pooled: Option<AlignedBytes>,
     pool: Option<Arc<PoolCore>>,
+    /// Plain heap storage ([`SharedBuf::from_vec`]).
+    owned: Option<Box<[u8]>>,
+    /// Externally owned bytes ([`SharedBuf::from_external`]) — e.g. a live
+    /// mmap region; the refcount keeps the owner alive, nothing to free.
+    external: Option<Arc<dyn ExternalBytes>>,
+}
+
+impl Backing {
+    fn as_slice(&self) -> &[u8] {
+        if let Some(d) = &self.pooled {
+            return d;
+        }
+        if let Some(d) = &self.owned {
+            return d;
+        }
+        if let Some(e) = &self.external {
+            return e.as_bytes();
+        }
+        unreachable!("backing has no storage")
+    }
 }
 
 impl Drop for Backing {
     fn drop(&mut self) {
         // Last reference gone: recycle pooled storage, free the rest.
-        if let (Some(data), Some(pool)) = (self.data.take(), self.pool.take()) {
+        if let (Some(data), Some(pool)) = (self.pooled.take(), self.pool.take()) {
             pool.put_back(data);
         }
     }
@@ -325,8 +504,36 @@ impl SharedBuf {
     pub fn from_vec(v: Vec<u8>) -> SharedBuf {
         let len = v.len();
         SharedBuf {
-            backing: Arc::new(Backing { data: Some(v.into_boxed_slice()), pool: None }),
+            backing: Arc::new(Backing {
+                pooled: None,
+                pool: None,
+                owned: Some(v.into_boxed_slice()),
+                external: None,
+            }),
             off: 0,
+            len,
+        }
+    }
+
+    /// A view of `[off, off+len)` of externally owned bytes — the mmap
+    /// storage backend's zero-copy read path: the refcount keeps the
+    /// mapping alive for as long as any view (socket write, hash queue,
+    /// stash, spill) still needs the bytes; nothing is copied and no pool
+    /// buffer is consumed.
+    pub fn from_external(ext: Arc<dyn ExternalBytes>, off: usize, len: usize) -> SharedBuf {
+        let total = ext.as_bytes().len();
+        assert!(
+            off <= total && len <= total - off,
+            "external view [{off}, {off}+{len}) of {total}"
+        );
+        SharedBuf {
+            backing: Arc::new(Backing {
+                pooled: None,
+                pool: None,
+                owned: None,
+                external: Some(ext),
+            }),
+            off,
             len,
         }
     }
@@ -347,8 +554,7 @@ impl SharedBuf {
     }
 
     pub fn as_slice(&self) -> &[u8] {
-        let data = self.backing.data.as_ref().expect("backing taken");
-        &data[self.off..self.off + self.len]
+        &self.backing.as_slice()[self.off..self.off + self.len]
     }
 
     /// Strong references to the backing (tests / diagnostics).
@@ -553,5 +759,103 @@ mod tests {
         assert_eq!(s, SharedBuf::from_vec(vec![9, 8, 7]));
         assert!(!s.is_empty());
         assert_eq!(format!("{s:?}"), "SharedBuf([9, 8, 7])");
+    }
+
+    #[test]
+    fn aligned_pool_yields_aligned_buffers() {
+        let pool = BufferPool::with_options(4096, 2, 4096, 2);
+        assert_eq!(pool.align(), 4096);
+        let b = pool.get();
+        assert_eq!(b.as_ptr() as usize % 4096, 0, "pooled backing must honor the alignment");
+        // Recycled and fallback backings keep it too.
+        let s = b.freeze(4096);
+        assert_eq!(s.as_slice().as_ptr() as usize % 4096, 0);
+        drop(s);
+        let b2 = pool.get();
+        assert_eq!(b2.as_ptr() as usize % 4096, 0);
+        let _hold = pool.get();
+        let fb = pool.get_or_alloc(Duration::from_millis(5));
+        assert!(!fb.is_pooled());
+        assert_eq!(fb.as_ptr() as usize % 4096, 0, "fallbacks honor the alignment too");
+    }
+
+    #[test]
+    fn sustained_exhaustion_grows_capacity_up_to_cap() {
+        let pool = BufferPool::with_options(8, 2, 1, 4);
+        assert_eq!(pool.capacity(), 2);
+        assert_eq!(pool.max_capacity(), 4);
+        let held: Vec<PoolBuf> = (0..2).map(|_| pool.get()).collect();
+        // The first GROW_FALLBACK_THRESHOLD misses fall back...
+        let mut fallbacks = Vec::new();
+        for _ in 0..GROW_FALLBACK_THRESHOLD {
+            let b = pool.get_or_alloc(Duration::from_millis(2));
+            assert!(!b.is_pooled());
+            fallbacks.push(b);
+        }
+        assert_eq!(pool.grow_events(), 0);
+        // ...and the next one grows the pool instead (2 -> 3).
+        let grown = pool.get_or_alloc(Duration::from_millis(2));
+        assert!(grown.is_pooled(), "sustained exhaustion must grow, not degrade");
+        assert_eq!(pool.capacity(), 3);
+        assert_eq!(pool.grow_events(), 1);
+        assert_eq!(pool.fallback_allocs(), GROW_FALLBACK_THRESHOLD);
+        // Growth is capped at max_capacity: drain the threshold again...
+        let mut more = Vec::new();
+        for _ in 0..GROW_FALLBACK_THRESHOLD {
+            more.push(pool.get_or_alloc(Duration::from_millis(2)));
+        }
+        let grown2 = pool.get_or_alloc(Duration::from_millis(2));
+        assert!(grown2.is_pooled());
+        assert_eq!(pool.capacity(), 4, "second grow clamps to the cap");
+        assert_eq!(pool.grow_events(), 2);
+        // ...after which exhaustion can only fall back.
+        for _ in 0..2 * GROW_FALLBACK_THRESHOLD {
+            assert!(!pool.get_or_alloc(Duration::from_millis(2)).is_pooled());
+        }
+        assert_eq!(pool.capacity(), 4, "capacity never exceeds max_capacity");
+        assert_eq!(pool.grow_events(), 2);
+        drop(held);
+        drop(fallbacks);
+        drop(more);
+        drop(grown);
+        drop(grown2);
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn default_pool_never_grows() {
+        let pool = BufferPool::new(8, 1);
+        assert_eq!(pool.max_capacity(), 1);
+        let _held = pool.get();
+        for _ in 0..2 * GROW_FALLBACK_THRESHOLD {
+            assert!(!pool.get_or_alloc(Duration::from_millis(1)).is_pooled());
+        }
+        assert_eq!(pool.capacity(), 1);
+        assert_eq!(pool.grow_events(), 0);
+    }
+
+    struct Blob(Vec<u8>);
+    impl ExternalBytes for Blob {
+        fn as_bytes(&self) -> &[u8] {
+            &self.0
+        }
+    }
+
+    #[test]
+    fn external_backing_views_share_without_copy() {
+        let ext: Arc<dyn ExternalBytes> = Arc::new(Blob((0u8..100).collect()));
+        let s = SharedBuf::from_external(ext.clone(), 10, 50);
+        assert_eq!(s.len(), 50);
+        assert_eq!(s[0], 10);
+        let sub = s.slice(5, 10);
+        assert_eq!(&sub[..], &[15, 16, 17, 18, 19]);
+        // The views keep the owner alive: 1 (ext) + 1 inside the backing.
+        assert_eq!(Arc::strong_count(&ext), 2);
+        drop(s);
+        drop(sub);
+        assert_eq!(Arc::strong_count(&ext), 1, "last view releases the owner");
+        // Zero-length view of the very end is fine.
+        let empty = SharedBuf::from_external(ext, 100, 0);
+        assert!(empty.is_empty());
     }
 }

@@ -56,6 +56,11 @@ use crate::storage::Storage;
 /// Record magic (8 bytes, versioned).
 const MAGIC: &[u8; 8] = b"FVRJNL01";
 
+/// Data-sync callback a [`JournalFold`] runs before each checkpoint —
+/// `Storage::sync_file` on the receiver (fdatasync the destination
+/// inode), `None` on the read-only sender side.
+pub type DataSync = Box<dyn Fn() -> Result<()> + Send>;
+
 /// Fixed part of the record header: magic + name_len(u32) + size(u64) +
 /// leaf_size(u64) + digest_len(u32).
 const FIXED_HEADER: usize = 8 + 4 + 8 + 8 + 4;
@@ -192,11 +197,30 @@ impl Journal {
         std::fs::remove_file(self.record_path(file_idx)).ok();
     }
 
-    /// Open-or-create the record + tracker for one file as its stream
-    /// begins: a resumed file (`start_at > 0`) truncates its record to
-    /// the agreed complete-leaf prefix and continues from there; a fresh
-    /// file starts a new record. Single-sourced so sender and receiver
-    /// compute identical journal state (keep-leaves rounding included).
+    /// Open-or-create the record for one file as its stream begins: a
+    /// resumed file (`start_at > 0`) truncates its record to the agreed
+    /// complete-leaf prefix and continues from there; a fresh file starts
+    /// a new record. Single-sourced so sender and receiver compute
+    /// identical journal state (keep-leaves rounding included).
+    pub fn begin_record(
+        &self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        start_at: u64,
+        cfg: &SessionConfig,
+    ) -> Result<FileJournal> {
+        if start_at > 0 {
+            self.open_resumed(file_idx, start_at / cfg.leaf_size)
+        } else {
+            let dlen = (cfg.hasher)().digest_len();
+            self.create(file_idx, name, size, cfg.leaf_size, dlen)
+        }
+    }
+
+    /// [`Journal::begin_record`] plus a [`LeafTracker`] positioned to
+    /// continue it — the stream-side journaling pair (non-tree files,
+    /// where the stream thread itself folds leaves).
     pub fn begin_file(
         &self,
         file_idx: u32,
@@ -205,19 +229,37 @@ impl Journal {
         start_at: u64,
         cfg: &SessionConfig,
     ) -> Result<(FileJournal, LeafTracker)> {
-        if start_at > 0 {
-            let keep = start_at / cfg.leaf_size;
-            Ok((
-                self.open_resumed(file_idx, keep)?,
-                LeafTracker::resume(cfg.leaf_size, &cfg.hasher, keep),
-            ))
+        let fj = self.begin_record(file_idx, name, size, start_at, cfg)?;
+        let tracker = if start_at > 0 {
+            LeafTracker::resume(cfg.leaf_size, &cfg.hasher, start_at / cfg.leaf_size)
         } else {
-            let dlen = (cfg.hasher)().digest_len();
-            Ok((
-                self.create(file_idx, name, size, cfg.leaf_size, dlen)?,
-                LeafTracker::new(cfg.leaf_size, &cfg.hasher),
-            ))
-        }
+            LeafTracker::new(cfg.leaf_size, &cfg.hasher)
+        };
+        Ok((fj, tracker))
+    }
+
+    /// [`Journal::begin_record`] wrapped for the verification tree job
+    /// ([`JournalFold`]): FIVER-Merkle and resumed files journal from the
+    /// hash job's single pass instead of paying a second in-memory hash
+    /// on the stream thread. `sync_data` runs before every checkpoint
+    /// (the data-before-journal ordering); `None` on the sender, whose
+    /// source is read-only.
+    pub fn begin_fold(
+        &self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        start_at: u64,
+        cfg: &SessionConfig,
+        sync_data: Option<DataSync>,
+    ) -> Result<JournalFold> {
+        let fj = self.begin_record(file_idx, name, size, start_at, cfg)?;
+        Ok(JournalFold {
+            fj,
+            checkpoint_leaves: cfg.journal_checkpoint_leaves.max(1),
+            sync_data,
+            failed: false,
+        })
     }
 
     /// Patch a (possibly closed) record after repair `Fix` frames rewrote
@@ -376,6 +418,65 @@ impl FileJournal {
     pub fn sync(&mut self) -> Result<()> {
         self.file.sync_data().context("journal sync")?;
         Ok(())
+    }
+}
+
+/// A file's journal record owned by its verification tree job: the job's
+/// single hash pass over the queue feeds both the Merkle leaves and the
+/// journal, so FIVER-Merkle and resumed files no longer pay a second
+/// in-memory hash for journaling (the stream-side [`LeafTracker`] path
+/// still serves policies that build no tree).
+///
+/// Durability ordering is preserved: `sync_data` (the destination file's
+/// `fdatasync`, via `Storage::sync_file` — `None` on the read-only sender
+/// side) runs before every journal checkpoint, and the job pushes only
+/// leaves whose bytes it has already consumed *after* the receiver wrote
+/// them to storage. The journal may *lag* the stream (it attests less,
+/// never more), which is always safe for a watermark.
+///
+/// Checkpoint errors disable journaling for the file rather than failing
+/// the hash job: the journal is a progress record, not a correctness
+/// gate, and a missing checkpoint only costs resume coverage.
+pub struct JournalFold {
+    fj: FileJournal,
+    checkpoint_leaves: u64,
+    sync_data: Option<DataSync>,
+    failed: bool,
+}
+
+impl JournalFold {
+    /// Record one completed leaf digest; checkpoints (data sync, then
+    /// journal append + fsync) at the configured cadence.
+    pub fn push_leaf(&mut self, digest: &[u8]) {
+        if self.failed {
+            return;
+        }
+        self.fj.push_leaf(digest);
+        if self.fj.pending_leaves() >= self.checkpoint_leaves {
+            self.checkpoint();
+        }
+    }
+
+    fn checkpoint(&mut self) {
+        if self.failed {
+            return;
+        }
+        let r = (|| -> Result<()> {
+            if let Some(sync) = &self.sync_data {
+                sync()?;
+            }
+            self.fj.checkpoint()
+        })();
+        if let Err(e) = r {
+            eprintln!("warning: journal checkpoint failed, journaling stops for this file: {e:#}");
+            self.failed = true;
+        }
+    }
+
+    /// Final checkpoint at stream end (callers push the final partial
+    /// leaf first — and only when the stream actually completed).
+    pub fn finish(&mut self) {
+        self.checkpoint();
     }
 }
 

@@ -161,6 +161,16 @@ pub struct SessionConfig {
     /// (0 = auto: sized so a full queue plus in-flight slack per session
     /// never exhausts it — see [`SessionConfig::pool_buffers_for`]).
     pub pool_buffers: usize,
+    /// Adaptive-growth ceiling for the buffer pool (0 = auto: twice the
+    /// effective `pool_buffers`). Sustained exhaustion grows the pool up
+    /// to this cap instead of permanently degrading to
+    /// allocate-per-buffer; grow events surface in pool telemetry.
+    pub pool_max_buffers: usize,
+    /// Storage I/O engine this endpoint's pools and reports assume (the
+    /// `--io-backend` selection; [`crate::storage::FsStorage`] is
+    /// constructed to match). Decides pool buffer alignment — the direct
+    /// engine needs block-aligned buffers to avoid bounce copies.
+    pub io_backend: crate::storage::IoBackend,
     /// Checkpoint-journal directory for this endpoint (`None` disables
     /// journaling). Each endpoint needs its own directory; see
     /// [`journal`].
@@ -186,6 +196,8 @@ impl SessionConfig {
             hybrid_threshold: 64 << 20,
             leaf_size: 64 << 10,
             pool_buffers: 0,
+            pool_max_buffers: 0,
+            io_backend: crate::storage::IoBackend::from_env(),
             journal_dir: None,
             resume: false,
             journal_checkpoint_leaves: 8,
@@ -207,9 +219,15 @@ impl SessionConfig {
         sessions.max(1) * per_session + 8
     }
 
-    /// Build the endpoint's data-plane buffer pool.
+    /// Build the endpoint's data-plane buffer pool: capacity from
+    /// [`SessionConfig::pool_buffers_for`], backing alignment from the
+    /// I/O backend (O_DIRECT needs block-aligned buffers), and an
+    /// adaptive-growth ceiling so sustained exhaustion grows the pool
+    /// instead of degrading to allocate-per-buffer.
     pub fn make_pool(&self, sessions: usize) -> bufpool::BufferPool {
-        bufpool::BufferPool::new(self.buf_size, self.pool_buffers_for(sessions))
+        let cap = self.pool_buffers_for(sessions);
+        let max = if self.pool_max_buffers > 0 { self.pool_max_buffers.max(cap) } else { cap * 2 };
+        bufpool::BufferPool::with_options(self.buf_size, cap, self.io_backend.buffer_align(), max)
     }
 
     /// Open this endpoint's checkpoint journal, if one is configured.
@@ -274,6 +292,16 @@ pub struct TransferReport {
     /// Data-plane pool telemetry: peak pooled buffers in flight (how
     /// close the run came to the pool's capacity).
     pub pool_peak_in_flight: u64,
+    /// Data-plane pool telemetry: adaptive capacity raises (sustained
+    /// exhaustion grew the pool instead of falling back per buffer).
+    pub pool_grow_events: u64,
+    /// Active storage I/O engine of this endpoint's storage (buffered /
+    /// mmap / direct / mem), so experiments can attribute overhead to
+    /// storage vs hash vs network.
+    pub io_backend: String,
+    /// Times this endpoint's storage forced durability (`sync`) — the
+    /// journal's checkpoint cadence dominates this in journaled runs.
+    pub storage_syncs: u64,
     pub elapsed_secs: f64,
 }
 

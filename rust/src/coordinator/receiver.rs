@@ -31,7 +31,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::bufpool::{BufferPool, SharedBuf};
-use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan};
+use super::journal::{FileJournal, Journal, JournalFold, LeafTracker, ResumePlan};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
@@ -49,6 +49,13 @@ pub struct ReceiverReport {
     pub units_failed: u64,
     /// Bytes rewritten by repair frames.
     pub bytes_repaired: u64,
+    /// Active storage I/O engine at this endpoint (buffered/mmap/direct/
+    /// mem).
+    pub io_backend: String,
+    /// Storage `sync` calls observed at session end. The counter is
+    /// shared per storage, so every session of an endpoint snapshots the
+    /// same value — merge takes the max, not the sum.
+    pub storage_syncs: u64,
 }
 
 impl ReceiverReport {
@@ -59,6 +66,10 @@ impl ReceiverReport {
         self.units_verified += other.units_verified;
         self.units_failed += other.units_failed;
         self.bytes_repaired += other.bytes_repaired;
+        if self.io_backend.is_empty() {
+            self.io_backend = other.io_backend.clone();
+        }
+        self.storage_syncs = self.storage_syncs.max(other.storage_syncs);
     }
 }
 
@@ -176,6 +187,8 @@ pub fn serve_session_multi(
     let stats = worker.join().expect("verify worker panicked")?;
     report.units_verified = stats.0;
     report.units_failed = stats.1;
+    report.io_backend = storage.backend_name().to_string();
+    report.storage_syncs = storage.sync_count();
     Ok(report)
 }
 
@@ -216,10 +229,12 @@ fn merge_frames(
     // bounded by stripe skew, drained on FileStart.
     let mut early: HashMap<u32, Vec<(u64, SharedBuf)>> = HashMap::new();
     // Byte spans rewritten by Fix frames since the last FixEnd, per file,
-    // plus one write handle kept open across the batch (opening and
-    // flushing per frame would pay a syscall pair per ~64 KiB of repair).
+    // plus one scatter-write batch per file: payloads accumulate as
+    // refcounted views and land as coalesced `write_at_vectored` calls —
+    // a multi-leaf repair run is one positioned syscall, not one per
+    // frame (and one open + one sync per batch).
     let mut fix_ranges: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
-    let mut fix_writers: HashMap<u32, Box<dyn crate::storage::WriteStream>> = HashMap::new();
+    let mut fix_batches: HashMap<u32, FixBatch> = HashMap::new();
     let mut done_seen = false;
 
     loop {
@@ -298,22 +313,22 @@ fn merge_frames(
                 let name = names
                     .get(&file_idx)
                     .with_context(|| format!("Fix for unknown file {file_idx}"))?;
-                let w = match fix_writers.entry(file_idx) {
+                let b = match fix_batches.entry(file_idx) {
                     std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                     std::collections::hash_map::Entry::Vacant(e) => {
-                        e.insert(storage.open_update(name)?)
+                        e.insert(FixBatch::new(storage.open_update(name)?))
                     }
                 };
-                w.write_at(offset, &payload)?;
                 report.bytes_repaired += payload.len() as u64;
                 fix_ranges.entry(file_idx).or_default().push((offset, payload.len() as u64));
+                b.push(offset, payload)?;
             }
             Frame::FixEnd { file_idx, unit } => {
-                // Make the batch durable before the verify worker re-hashes
-                // the repaired ranges from storage (and before the journal
-                // digests claiming those bytes do).
-                if let Some(mut w) = fix_writers.remove(&file_idx) {
-                    w.sync()?;
+                // Land the batch and make it durable before the verify
+                // worker re-hashes the repaired ranges from storage (and
+                // before the journal digests claiming those bytes do).
+                if let Some(mut b) = fix_batches.remove(&file_idx) {
+                    b.finish()?;
                 }
                 let ranges = fix_ranges.remove(&file_idx).unwrap_or_default();
                 // Journaled leaf digests describing the patched bytes are
@@ -366,6 +381,63 @@ fn merge_frames(
         report.files_received += 1;
     }
     Ok(report)
+}
+
+/// A scatter batch of repair (`Fix`) payloads for one file: refcounted
+/// views accumulate (bounded by [`FixBatch::MAX_BUFFERED`]) and land as
+/// coalesced [`crate::storage::WriteStream::write_at_vectored`] calls —
+/// adjacent frames of one repaired leaf run become a single positioned
+/// vectored write.
+struct FixBatch {
+    writer: Box<dyn crate::storage::WriteStream>,
+    parts: Vec<(u64, SharedBuf)>,
+    buffered: usize,
+}
+
+impl FixBatch {
+    /// Flush threshold: a massive repair must not pin unbounded payload
+    /// memory behind refcounts.
+    const MAX_BUFFERED: usize = 4 << 20;
+
+    fn new(writer: Box<dyn crate::storage::WriteStream>) -> FixBatch {
+        FixBatch { writer, parts: Vec::new(), buffered: 0 }
+    }
+
+    fn push(&mut self, offset: u64, payload: SharedBuf) -> Result<()> {
+        self.buffered += payload.len();
+        self.parts.push((offset, payload));
+        if self.buffered >= Self::MAX_BUFFERED {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Land everything buffered: consecutive contiguous parts coalesce
+    /// into one scatter write each.
+    fn flush(&mut self) -> Result<()> {
+        let parts = std::mem::take(&mut self.parts);
+        self.buffered = 0;
+        let mut i = 0;
+        while i < parts.len() {
+            let start = parts[i].0;
+            let mut end = start + parts[i].1.len() as u64;
+            let mut j = i + 1;
+            while j < parts.len() && parts[j].0 == end {
+                end += parts[j].1.len() as u64;
+                j += 1;
+            }
+            let slices: Vec<&[u8]> = parts[i..j].iter().map(|(_, b)| &b[..]).collect();
+            self.writer.write_at_vectored(start, &slices)?;
+            i = j;
+        }
+        Ok(())
+    }
+
+    /// Flush and make the repairs durable (called at `FixEnd`).
+    fn finish(&mut self) -> Result<()> {
+        self.flush()?;
+        self.writer.sync()
+    }
 }
 
 /// Per-file receive state. Bytes may arrive out of order across stripes;
@@ -431,11 +503,24 @@ impl FileState {
         let writer = if start_at > 0 {
             storage.open_update(name)?
         } else {
-            storage.open_write(name)?
+            // The announced size lets pre-sizing backends (mmap) map the
+            // whole destination once and never remap mid-stream.
+            storage.open_write_sized(name, size)?
         };
         let uses_queue = resumed.is_some() || cfg.algorithm.uses_queue(size, cfg.hybrid_threshold);
         let units = cfg.units_of(size, uses_queue);
         let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+        // Tree-building files (FIVER-Merkle, and every resumed file) fold
+        // the journal inside the hash job: one pass feeds both the tree
+        // leaves and the checkpoint record, so journaling stops paying a
+        // second in-memory hash of the stream. Data-before-journal holds
+        // because the job's `sync_data` closure fdatasyncs the
+        // destination inode (which settles mmap-dirtied pages too) before
+        // each checkpoint, and the job only ever sees bytes the merger
+        // already wrote.
+        let tree_mode = uses_queue
+            && verify
+            && (resumed.is_some() || cfg.algorithm == RealAlgorithm::FiverMerkle);
 
         let queue = if uses_queue && verify {
             let q = ByteQueue::new(cfg.queue_capacity);
@@ -443,22 +528,21 @@ impl FileState {
             let hasher_factory = cfg.hasher.clone();
             let tx2 = tx.clone();
             let name2 = name.to_string();
-            if let Some(rf) = &resumed {
+            if tree_mode {
+                let fold = match journal {
+                    Some(j) => {
+                        let s2 = storage.clone();
+                        let n2 = name.to_string();
+                        let sync: super::journal::DataSync = Box::new(move || s2.sync_file(&n2));
+                        Some(j.begin_fold(file_idx, name, size, start_at, cfg, Some(sync))?)
+                    }
+                    None => None,
+                };
+                let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = cfg.leaf_size;
-                let leaves = rf.leaves.clone();
-                let prefix = rf.offset;
                 pool.submit(move || {
                     let tree =
-                        queue_build_resumed_tree(q2, leaf_size, leaves, prefix, hasher_factory);
-                    tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
-                });
-            } else if cfg.algorithm == RealAlgorithm::FiverMerkle {
-                // Fold the stream into a digest tree as it drains from the
-                // queue (Algorithm 2 line 7 with tree leaves instead of a
-                // single running digest) — still zero extra file I/O.
-                let leaf_size = cfg.leaf_size;
-                pool.submit(move || {
-                    let tree = queue_build_tree(q2, leaf_size, size, hasher_factory);
+                        queue_build_tree_fold(q2, leaf_size, size, prefix, hasher_factory, fold);
                     tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
                 });
             } else {
@@ -481,11 +565,17 @@ impl FileState {
         } else {
             None
         };
-        // Journal record: resumed files truncate to the agreed prefix and
-        // append from there; fresh files start a new record.
-        let jrn = match journal {
-            Some(j) => Some(j.begin_file(file_idx, name, size, start_at, cfg)?),
-            None => None,
+        // Stream-side journal record (policies that build no tree):
+        // resumed files truncate to the agreed prefix and append from
+        // there; fresh files start a new record. Tree-mode files journal
+        // inside the hash job instead (see above).
+        let jrn = if tree_mode {
+            None
+        } else {
+            match journal {
+                Some(j) => Some(j.begin_file(file_idx, name, size, start_at, cfg)?),
+                None => None,
+            }
         };
         Ok(FileState {
             file_idx,
@@ -752,43 +842,70 @@ pub(crate) fn queue_hash_units(
     }
 }
 
-/// Consume a queue into a streaming Merkle builder — FIVER-Merkle's
-/// COMPUTECHECKSUM, the tree-shaped twin of [`queue_hash_units`]; both
-/// endpoints drain their queue through this. `size_hint` (the announced
-/// file size) pre-sizes the leaf digest vec so a large file's build never
-/// reallocates mid-stream; leaf hashing consumes the queue's refcounted
-/// buffers as borrowed slices.
-pub(crate) fn queue_build_tree(
+/// Consume a queue into a digest tree — FIVER-Merkle's COMPUTECHECKSUM,
+/// the tree-shaped twin of [`queue_hash_units`]; *both* endpoints drain
+/// their queue through this one function (fresh files pass
+/// `prefix = None`, resumed files their handshake-agreed prefix leaves),
+/// which keeps the two trees provably identical — the TreeRoot
+/// comparison's soundness rests on that.
+///
+/// When a [`JournalFold`] is given, each completed leaf digest also
+/// appends to the file's checkpoint record (with the data-before-journal
+/// sync ordering at the configured cadence): the one hash pass this job
+/// already performs serves verification *and* journaling, so FIVER-Merkle
+/// and resumed files stop paying the stream-side `LeafTracker`'s second
+/// in-memory hash.
+///
+/// The final (partial) leaf — and the final checkpoint — are emitted only
+/// when the stream actually completed (`prefix + streamed == size`). A
+/// crash-truncated stream must never journal a digest over partial
+/// final-leaf bytes: both endpoints could otherwise agree on a bogus
+/// "complete" record at the resume handshake and skip undelivered tail
+/// bytes. In the truncated case the returned tree is a placeholder (the
+/// session is already dead; nobody exchanges it).
+pub(crate) fn queue_build_tree_fold(
     q: ByteQueue,
     leaf_size: u64,
-    size_hint: u64,
+    size: u64,
+    prefix: Option<(Vec<u8>, u64)>,
     hasher_factory: super::HasherFactory,
+    mut journal: Option<JournalFold>,
 ) -> MerkleTree {
-    let mut builder = MerkleBuilder::with_capacity(leaf_size, size_hint, hasher_factory);
+    let dlen = hasher_factory().digest_len();
+    let (mut leaves, prefix_bytes) = prefix.unwrap_or((Vec::new(), 0));
+    debug_assert!(prefix_bytes % leaf_size == 0, "resume prefix must be leaf-aligned");
+    // Pre-size the digest vec from the announced file size so a large
+    // file's build never reallocates mid-stream (PR 3's
+    // MerkleBuilder::with_capacity guarantee, preserved).
+    let total_leaves = crate::merkle::leaf_count(size, leaf_size) as usize;
+    leaves.reserve((total_leaves * dlen).saturating_sub(leaves.len()));
+    let mut tracker = LeafTracker::resume(leaf_size, &hasher_factory, prefix_bytes / leaf_size);
+    let mut streamed = 0u64;
     while let Some(buf) = q.remove() {
-        builder.update(&buf);
+        streamed += buf.len() as u64;
+        tracker.update(&buf, |_, d| {
+            if let Some(j) = journal.as_mut() {
+                j.push_leaf(&d);
+            }
+            leaves.extend_from_slice(&d);
+        });
     }
-    builder.finish()
-}
-
-/// The resumed-file twin of [`queue_build_tree`]: seed the builder with
-/// the handshake-agreed prefix leaves and fold only the streamed tail.
-/// *Both* endpoints run exactly this job for a resumed file — keeping it
-/// in one place keeps the two trees provably identical, which is what
-/// the TreeRoot comparison's soundness rests on.
-pub(crate) fn queue_build_resumed_tree(
-    q: ByteQueue,
-    leaf_size: u64,
-    prefix_leaves: Vec<u8>,
-    prefix_bytes: u64,
-    hasher_factory: super::HasherFactory,
-) -> MerkleTree {
-    let mut builder =
-        MerkleBuilder::with_prefix(leaf_size, prefix_leaves, prefix_bytes, hasher_factory);
-    while let Some(buf) = q.remove() {
-        builder.update(&buf);
+    let complete = prefix_bytes + streamed == size;
+    if complete {
+        tracker.finish(|_, d| {
+            if let Some(j) = journal.as_mut() {
+                j.push_leaf(&d);
+            }
+            leaves.extend_from_slice(&d);
+        });
     }
-    builder.finish()
+    if let Some(mut j) = journal.take() {
+        j.finish();
+    }
+    if !complete {
+        return MerkleBuilder::new(leaf_size, hasher_factory).finish();
+    }
+    MerkleTree::from_leaves(leaf_size, size, dlen, leaves, &hasher_factory)
 }
 
 /// The verify worker: digests out, verdicts in, repair loop.

@@ -193,6 +193,7 @@ impl EngineReport {
     pub fn aggregate(&self) -> TransferReport {
         let mut total = TransferReport {
             algorithm: self.per_session.first().map(|r| r.algorithm.clone()).unwrap_or_default(),
+            io_backend: self.per_session.first().map(|r| r.io_backend.clone()).unwrap_or_default(),
             elapsed_secs: self.elapsed_secs,
             files_skipped: self.files_skipped,
             bytes_skipped: self.bytes_skipped,
@@ -208,6 +209,10 @@ impl EngineReport {
             total.verify_rtts += r.verify_rtts;
             total.pool_fallback_allocs = total.pool_fallback_allocs.max(r.pool_fallback_allocs);
             total.pool_peak_in_flight = total.pool_peak_in_flight.max(r.pool_peak_in_flight);
+            total.pool_grow_events = total.pool_grow_events.max(r.pool_grow_events);
+            // The sync counter is shared per storage: every session
+            // snapshots the same value, so max (not sum) is the truth.
+            total.storage_syncs = total.storage_syncs.max(r.storage_syncs);
         }
         total
     }

@@ -32,12 +32,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::bufpool::{BufferPool, POOL_GRACE};
+use super::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
 use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan, ResumedFile};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
-use super::receiver::{hash_range, queue_build_resumed_tree, queue_build_tree, queue_hash_units};
+use super::receiver::{hash_range, queue_build_tree_fold, queue_hash_units};
 use super::{RealAlgorithm, SessionConfig, TransferReport};
 use crate::faults::{CrashError, CrashPoint, FaultInjector, FaultPlan};
 use crate::merkle::MerkleTree;
@@ -400,27 +400,32 @@ impl SenderSession {
 
         // FIVER path: queue + pool job digesting the shared buffers. A
         // resumed file always verifies by digest tree, whatever the
-        // session algorithm: the pool job seeds a builder with the
+        // session algorithm: the pool job seeds the tree with the
         // journaled prefix leaves and folds only the streamed tail.
+        // Tree-building jobs also own this file's checkpoint journaling
+        // (one hash pass serves both — no LeafTracker second hash on the
+        // stream thread; the source is read-only, so no data sync is
+        // needed before a checkpoint here).
+        let tree_mode = uses_queue
+            && self.verify
+            && (resumed.is_some() || self.cfg.algorithm == RealAlgorithm::FiverMerkle);
         let queue = if uses_queue && self.verify {
             let q = ByteQueue::new(self.cfg.queue_capacity);
             let q2 = q.clone();
             let hasher = self.cfg.hasher.clone();
             let shared2 = self.shared.clone();
-            if let Some(rf) = &resumed {
+            if tree_mode {
+                let fold = match &self.journal {
+                    Some(j) => {
+                        Some(j.begin_fold(file_idx, name, size, start_at, &self.cfg, None)?)
+                    }
+                    None => None,
+                };
+                let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = self.cfg.leaf_size;
-                let leaves = rf.leaves.clone();
-                let prefix = rf.offset;
                 self.pool.submit(move || {
-                    let tree = queue_build_resumed_tree(q2, leaf_size, leaves, prefix, hasher);
+                    let tree = queue_build_tree_fold(q2, leaf_size, size, prefix, hasher, fold);
                     shared2.put_tree(file_idx, tree);
-                });
-            } else if self.cfg.algorithm == RealAlgorithm::FiverMerkle {
-                // Fold the clean outbound stream into a digest tree as it
-                // drains from the queue (no second read of the source).
-                let leaf_size = self.cfg.leaf_size;
-                self.pool.submit(move || {
-                    shared2.put_tree(file_idx, queue_build_tree(q2, leaf_size, size, hasher));
                 });
             } else {
                 let units2 = units.clone();
@@ -435,12 +440,18 @@ impl SenderSession {
             None
         };
 
-        // Checkpoint journal for this file: clean source bytes fold into
-        // leaf digests as they stream; resumed files truncate the record
-        // to the agreed prefix and append from there.
-        let mut jrn: Option<(FileJournal, LeafTracker)> = match &self.journal {
-            Some(j) => Some(j.begin_file(file_idx, name, size, start_at, &self.cfg)?),
-            None => None,
+        // Stream-side checkpoint journal (policies whose hash job builds
+        // no tree): clean source bytes fold into leaf digests as they
+        // stream; resumed files truncate the record to the agreed prefix
+        // and append from there. Tree-mode files journal inside the hash
+        // job instead (see above).
+        let mut jrn: Option<(FileJournal, LeafTracker)> = if tree_mode {
+            None
+        } else {
+            match &self.journal {
+                Some(j) => Some(j.begin_file(file_idx, name, size, start_at, &self.cfg)?),
+                None => None,
+            }
         };
 
         self.injector.start_file_at(file_idx as usize, 0, start_at);
@@ -520,22 +531,35 @@ impl SenderSession {
                 }
             }
             let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
-            // One pooled buffer per read: the socket borrows it, the hash
-            // queue shares it by refcount, and it returns to the pool when
-            // the checksum worker drops it — no allocation, no copy.
-            let mut clean = self.bufs.get_or_alloc(POOL_GRACE);
-            let n = reader.read_at(offset, &mut clean[..want])?;
-            anyhow::ensure!(n > 0, "short read of {name} at {offset}");
-            // Corruption happens on the wire: flip bits, send, then flip
-            // back (XOR is self-inverse) so the local checksum hashes the
-            // true bytes while the receiver sees the corrupted ones.
-            let flips = self.injector.corrupt(&mut clean[..n]);
             let lane = self.rr % self.data_outs.len();
             self.rr += 1;
-            self.data_outs[lane].send_data(file_idx, offset, &clean[..n])?;
-            for &(pos, bit) in &flips {
-                clean[pos] ^= 1 << bit;
-            }
+            // One ranged read serves socket, hash queue and journal. The
+            // clean path is zero-copy: `read_shared` fills a pooled
+            // buffer — or, on the mmap backend, returns a refcounted view
+            // of the file mapping — which the socket borrows and the hash
+            // queue shares by refcount. Only when the fault plan targets
+            // this window does the stream pay for a mutable duplicate:
+            // the wire gets the corrupted copy while the clean bytes keep
+            // feeding checksum and journal (no XOR flip-back dance, and
+            // mmap views stay untouched).
+            let chunk: SharedBuf = if self.injector.will_corrupt(want) {
+                let mut wire = self.bufs.get_or_alloc(POOL_GRACE);
+                let n = reader.read_at(offset, &mut wire[..want])?;
+                anyhow::ensure!(n > 0, "short read of {name} at {offset}");
+                let flips = self.injector.corrupt(&mut wire[..n]);
+                self.data_outs[lane].send_data(file_idx, offset, &wire[..n])?;
+                for &(pos, bit) in &flips {
+                    wire[pos] ^= 1 << bit;
+                }
+                wire.freeze(n)
+            } else {
+                let chunk = reader.read_shared(offset, want, &self.bufs)?;
+                anyhow::ensure!(!chunk.is_empty(), "short read of {name} at {offset}");
+                self.injector.advance(chunk.len());
+                self.data_outs[lane].send_data(file_idx, offset, &chunk)?;
+                chunk
+            };
+            let n = chunk.len();
             if let Some(c) = &self.crash {
                 c.consume(n as u64);
             }
@@ -543,7 +567,7 @@ impl SenderSession {
             // checkpoint_leaves of them fsync (source is read-only, so no
             // data sync is needed on this side).
             if let Some((fj, tracker)) = jrn.as_mut() {
-                tracker.update(&clean[..n], |_, d| fj.push_leaf(&d));
+                tracker.update(&chunk, |_, d| fj.push_leaf(&d));
                 if fj.pending_leaves() >= self.cfg.journal_checkpoint_leaves.max(1) {
                     fj.checkpoint()?;
                 }
@@ -551,7 +575,7 @@ impl SenderSession {
             self.report.bytes_sent += n as u64;
             offset += n as u64;
             if let Some(q) = queue {
-                q.add(clean.freeze(n));
+                q.add(chunk);
             }
             // Re-read-mode: emit checksum jobs for completed units
             // (block-level overlap within the file).
@@ -601,6 +625,9 @@ impl SenderSession {
         self.report.verify_rtts = self.shared.verify_rtts.load(Ordering::SeqCst);
         self.report.pool_fallback_allocs = self.bufs.fallback_allocs();
         self.report.pool_peak_in_flight = self.bufs.peak_in_flight() as u64;
+        self.report.pool_grow_events = self.bufs.grow_events();
+        self.report.io_backend = self.storage.backend_name().to_string();
+        self.report.storage_syncs = self.storage.sync_count();
         self.report.elapsed_secs = self.start.elapsed().as_secs_f64();
         Ok(std::mem::take(&mut self.report))
         // data_outs drop here: BufWriters flush (already flushed above)
@@ -814,9 +841,10 @@ fn bump_attempt(attempts: &mut HashMap<(u32, u64), u32>, file_idx: u32, unit: u6
 /// Re-read `[offset, offset+len)` from the source and stream it as Fix
 /// frames, applying the fault plan's occurrence-`attempt` flips to the
 /// outbound copy only (local digests keep hashing clean source bytes).
-/// One pooled buffer serves the whole range: each Fix frame sends the
-/// borrowed slice (scatter/gather, no owned payload), so repairs ride the
-/// same zero-copy plane as the stream.
+/// Repairs ride the same zero-copy plane as the stream: the clean path
+/// sends refcounted `read_shared` buffers (a view of the mapping on the
+/// mmap backend) as borrowed Fix slices; only a fault-targeted attempt
+/// pays a mutable pooled copy.
 #[allow(clippy::too_many_arguments)]
 fn send_repair_range(
     storage: &Arc<dyn Storage>,
@@ -834,14 +862,23 @@ fn send_repair_range(
     let mut r = storage.open_read(name)?;
     let mut pos = offset;
     let end = offset + len;
-    let mut buf = bufs.get_or_alloc(POOL_GRACE);
-    let step = cfg.buf_size.min(buf.len());
+    let step = cfg.buf_size.min(bufs.buf_size());
+    let dirty = !faults.for_attempt(file_idx as usize, attempt).is_empty();
     while pos < end {
         let want = step.min((end - pos) as usize);
-        let n = r.read_at(pos, &mut buf[..want])?;
-        anyhow::ensure!(n > 0, "short repair read");
-        faults.corrupt_in_place(file_idx as usize, attempt, pos, &mut buf[..n]);
-        data_out.send_fix(file_idx, pos, &buf[..n])?;
+        let n = if dirty {
+            let mut buf = bufs.get_or_alloc(POOL_GRACE);
+            let n = r.read_at(pos, &mut buf[..want])?;
+            anyhow::ensure!(n > 0, "short repair read");
+            faults.corrupt_in_place(file_idx as usize, attempt, pos, &mut buf[..n]);
+            data_out.send_fix(file_idx, pos, &buf[..n])?;
+            n
+        } else {
+            let chunk = r.read_shared(pos, want, bufs)?;
+            anyhow::ensure!(!chunk.is_empty(), "short repair read");
+            data_out.send_fix(file_idx, pos, &chunk)?;
+            chunk.len()
+        };
         shared.bytes_resent.fetch_add(n as u64, Ordering::SeqCst);
         shared.bytes_reread.fetch_add(n as u64, Ordering::SeqCst);
         pos += n as u64;

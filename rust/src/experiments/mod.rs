@@ -10,6 +10,7 @@ pub mod ablations;
 pub mod concurrency;
 pub mod faults_table;
 pub mod hash_fig;
+pub mod io_backend;
 pub mod overheads;
 pub mod resume;
 pub mod traces;
@@ -90,6 +91,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
         "ablations" => ablations::ablations(),
         "concurrency" => concurrency::concurrency_sweep(),
         "resume" => resume::resume_sweep(),
+        "io_backend" => io_backend::io_backend_sweep(),
         "all" => {
             let mut out = String::new();
             for n in ALL {
@@ -105,7 +107,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
 /// All experiment names in paper order.
 pub const ALL: &[&str] = &[
     "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
-    "ablations", "concurrency", "resume",
+    "ablations", "concurrency", "resume", "io_backend",
 ];
 
 #[cfg(test)]

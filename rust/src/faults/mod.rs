@@ -217,6 +217,28 @@ impl FaultInjector {
         self.window_start = offset;
     }
 
+    /// Would [`FaultInjector::corrupt`] flip anything in the next `len`
+    /// bytes? The zero-copy stream path checks this before deciding
+    /// whether it needs a mutable copy of the outbound window (the clean
+    /// path sends the shared buffer untouched and calls
+    /// [`FaultInjector::advance`] instead).
+    pub fn will_corrupt(&self, len: usize) -> bool {
+        let lo = self.window_start;
+        let hi = lo + len as u64;
+        self.faults.iter().any(|f| {
+            f.file_idx == self.current_file
+                && f.occurrence == self.current_attempt
+                && f.offset >= lo
+                && f.offset < hi
+        })
+    }
+
+    /// Advance the stream window past `len` clean (untouched) bytes —
+    /// the zero-copy twin of [`FaultInjector::corrupt`].
+    pub fn advance(&mut self, len: usize) {
+        self.window_start += len as u64;
+    }
+
     /// Corrupt `buf` (about to be sent at the current stream position).
     /// Returns the applied flips as (index-in-buf, bit) — XOR is
     /// self-inverse, so callers can restore the clean bytes for local

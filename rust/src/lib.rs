@@ -20,10 +20,17 @@
 //!   aggregate into batched work items so control exchanges amortize).
 //!   The byte-moving layer is a **zero-copy data plane**
 //!   ([`coordinator::bufpool`]): refcounted sliceable buffers recycled
-//!   through a fixed-size pool, vectored (`writev`) frame writes, and
-//!   length-prefixed reads decoded straight into pooled buffers, so the
-//!   steady state performs no payload allocation or copy per buffer
-//!   cycle (DESIGN.md "Data plane & buffer ownership").
+//!   through a bounded (adaptively growing, optionally aligned) pool,
+//!   vectored (`writev`) frame writes, and length-prefixed reads decoded
+//!   straight into pooled buffers, so the steady state performs no
+//!   payload allocation or copy per buffer cycle (DESIGN.md "Data plane
+//!   & buffer ownership"). Storage access rides **pluggable I/O
+//!   backends** ([`storage`], `--io-backend`): buffered pread/pwrite,
+//!   mmap (zero-copy `SharedBuf` views of the file mapping, msync-backed
+//!   durability), or O_DIRECT-style aligned I/O with graceful fallback —
+//!   selectable per endpoint, modeled per backend in the sim, and gated
+//!   by a cross-backend conformance suite (DESIGN.md "Storage I/O
+//!   backends").
 //!   Transfers are **crash-recoverable** ([`coordinator::journal`]): both
 //!   endpoints checkpoint per-file leaf digests with crash-consistent
 //!   writes, and a restarted pair negotiates per-file restart offsets —

@@ -27,6 +27,22 @@
 //! * `--pool-buffers N` — buffers in the endpoint's pool (default: auto,
 //!   sized so a full checksum queue per session plus in-flight slack
 //!   never exhausts it).
+//! * `--pool-max-buffers N` — adaptive-growth ceiling: a sustainedly
+//!   exhausted pool grows up to this many buffers instead of permanently
+//!   degrading to allocate-per-buffer (default: twice the pool size;
+//!   grow events surface in the `data plane:` line).
+//! * `--io-backend buffered|mmap|direct` — storage I/O engine (see
+//!   `fiver::storage`): `buffered` is positioned pread/pwrite through the
+//!   page cache (default); `mmap` serves zero-copy reads out of a file
+//!   mapping and writes through `MAP_SHARED` stores with msync-backed
+//!   durability; `direct` is O_DIRECT-style aligned I/O bypassing the
+//!   page cache, falling back to buffered wherever the filesystem or the
+//!   operation's alignment rules it out. The `FIVER_IO_BACKEND`
+//!   environment variable sets the default. Endpoints may choose their
+//!   backends independently (the selection is local to each side's
+//!   storage). The active backend and its sync count are reported on the
+//!   `data plane:` line so overhead attributes to storage vs hash vs
+//!   network.
 //!
 //! Parallel engine knobs (serve/send/local; both endpoints must agree on
 //! `--concurrency` and `--parallel`):
@@ -102,6 +118,15 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     cfg.hybrid_threshold = args.opt_u64("hybrid-threshold", cfg.hybrid_threshold);
     cfg.leaf_size = args.opt_u64("leaf-size", cfg.leaf_size);
     cfg.pool_buffers = args.opt_u64("pool-buffers", 0) as usize;
+    cfg.pool_max_buffers = args.opt_u64("pool-max-buffers", 0) as usize;
+    cfg.io_backend = match args.opt("io-backend") {
+        Some(s) => fiver::storage::IoBackend::parse(s).with_context(|| {
+            let names: Vec<&str> =
+                fiver::storage::IoBackend::ALL.iter().map(|b| b.name()).collect();
+            format!("unknown --io-backend ({})", names.join("|"))
+        })?,
+        None => fiver::storage::IoBackend::from_env(),
+    };
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
     anyhow::ensure!(cfg.leaf_size > 0, "--leaf-size must be positive");
@@ -153,9 +178,9 @@ fn warn_unused_engine_flags(args: &Args) {
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
-        "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "files", "size",
-        "faults", "seed", "concurrency", "parallel", "hash-workers", "batch-threshold",
-        "batch-bytes", "journal-dir", "crash-after",
+        "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "pool-max-buffers",
+        "io-backend", "files", "size", "faults", "seed", "concurrency", "parallel",
+        "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -187,7 +212,8 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
     let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
-    let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
+    let storage: Arc<dyn Storage> =
+        Arc::new(FsStorage::with_backend(Path::new(dir), cfg.io_backend)?);
     let endpoint = ReceiverEndpoint::bind(
         args.opt_or("data", "0.0.0.0:7001"),
         args.opt_or("ctrl", "0.0.0.0:7002"),
@@ -231,7 +257,8 @@ fn send(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
     let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
-    let storage: Arc<dyn Storage> = Arc::new(FsStorage::new(Path::new(dir))?);
+    let storage: Arc<dyn Storage> =
+        Arc::new(FsStorage::with_backend(Path::new(dir), cfg.io_backend)?);
     let files: Vec<String> = args.positional[1..].to_vec();
     anyhow::ensure!(!files.is_empty(), "no files given");
     let data_addr = args.opt_or("data", "127.0.0.1:7001");
@@ -273,8 +300,10 @@ fn local(args: &Args) -> Result<()> {
         base.path().display()
     );
     ds.materialize(&base.join("src"), seed)?;
-    let src: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("src"))?);
-    let dst: Arc<dyn Storage> = Arc::new(FsStorage::new(&base.join("dst"))?);
+    let src: Arc<dyn Storage> =
+        Arc::new(FsStorage::with_backend(&base.join("src"), cfg.io_backend)?);
+    let dst: Arc<dyn Storage> =
+        Arc::new(FsStorage::with_backend(&base.join("dst"), cfg.io_backend)?);
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
     let mut faults = FaultPlan::random(&ds, fault_count, seed);
     let crash_after = args.opt_u64("crash-after", 0);
@@ -416,10 +445,12 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
         fmt::bytes(r.bytes_reread),
         r.verify_rtts,
     );
-    if r.pool_peak_in_flight > 0 || r.pool_fallback_allocs > 0 {
+    if !r.io_backend.is_empty() || r.pool_peak_in_flight > 0 || r.pool_fallback_allocs > 0 {
+        let backend = if r.io_backend.is_empty() { "?" } else { &r.io_backend };
         println!(
-            "data plane: {} pooled buffers peak in flight, {} fallback allocs",
-            r.pool_peak_in_flight, r.pool_fallback_allocs,
+            "data plane: backend={backend}, {} pooled buffers peak in flight, \
+             {} fallback allocs, {} pool grows, {} storage syncs",
+            r.pool_peak_in_flight, r.pool_fallback_allocs, r.pool_grow_events, r.storage_syncs,
         );
     }
     if r.files_skipped > 0 || r.bytes_skipped > 0 {

@@ -183,6 +183,13 @@ pub struct RunSummary {
     /// buffers in flight.
     pub pool_fallback_allocs: u64,
     pub pool_peak_in_flight: u64,
+    /// Adaptive pool-capacity raises (real runs; 0 in the sim).
+    pub pool_grow_events: u64,
+    /// Storage I/O engine of the run (real runs mirror the endpoint's
+    /// storage; the sim records the modeled `AlgoParams::io_backend`).
+    pub io_backend: String,
+    /// Storage sync calls (real runs; the sim does not model fsync).
+    pub storage_syncs: u64,
     /// Concurrent sessions used (1 for the serial drivers).
     pub concurrency: usize,
     /// Per-session accounting (empty for the serial drivers).
@@ -213,6 +220,9 @@ impl RunSummary {
             verify_rtts: report.verify_rtts,
             pool_fallback_allocs: report.pool_fallback_allocs,
             pool_peak_in_flight: report.pool_peak_in_flight,
+            pool_grow_events: report.pool_grow_events,
+            io_backend: report.io_backend.clone(),
+            storage_syncs: report.storage_syncs,
             concurrency,
             ..Default::default()
         }

@@ -166,6 +166,7 @@ pub fn run(
         algorithm: alg.name().to_string(),
         dataset: ds.name.clone(),
         testbed: tb.name.to_string(),
+        io_backend: params.io_backend.name().to_string(),
         concurrency: 1,
         ..Default::default()
     };
@@ -562,6 +563,7 @@ pub fn run_concurrent(
         algorithm: alg.name().to_string(),
         dataset: ds.name.clone(),
         testbed: tb.name.to_string(),
+        io_backend: params.io_backend.name().to_string(),
         concurrency: n,
         ..Default::default()
     };

@@ -1,0 +1,596 @@
+//! Filesystem storage: one [`FsStorage`] root directory served by a
+//! selectable I/O engine (see [`IoBackend`]).
+//!
+//! * **buffered** — positioned `pread`/`pwrite` through the page cache:
+//!   every ranged access is one syscall instead of a seek + I/O pair, and
+//!   ranged repair writes never disturb the sequential cursor. This is
+//!   the PR 3 data plane, unchanged.
+//! * **direct** — O_DIRECT-style aligned I/O (this file): reads and
+//!   writes whose offset, length and buffer address are all
+//!   [`DIRECT_ALIGN`]-aligned bypass the page cache entirely; everything
+//!   else (file tails, unaligned repair patches) degrades per-operation
+//!   to a plain descriptor of the same file, and a filesystem that
+//!   refuses `O_DIRECT` altogether (tmpfs, some overlayfs) degrades the
+//!   whole stream — graceful fallback, counted in
+//!   [`FsStorage::direct_fallbacks`], never an error.
+//! * **mmap** — memory-mapped streams, in [`super::mmap`].
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{IoBackend, ReadStream, Storage, WriteStream};
+#[cfg(target_os = "linux")]
+use super::DIRECT_ALIGN;
+#[cfg(target_os = "linux")]
+use crate::coordinator::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
+
+/// Shared per-storage telemetry: how many times streams forced durability
+/// (`sync`), and how many times the direct engine had to fall back to
+/// buffered I/O (open refused or an aligned op failed).
+pub(crate) struct IoCounters {
+    pub(crate) syncs: AtomicU64,
+    pub(crate) direct_fallbacks: AtomicU64,
+}
+
+impl IoCounters {
+    fn new() -> Arc<IoCounters> {
+        Arc::new(IoCounters {
+            syncs: AtomicU64::new(0),
+            direct_fallbacks: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Real files under a root directory, accessed through the configured
+/// [`IoBackend`] engine.
+pub struct FsStorage {
+    root: PathBuf,
+    backend: IoBackend,
+    counters: Arc<IoCounters>,
+}
+
+impl FsStorage {
+    /// Open a root with the backend selected by the `FIVER_IO_BACKEND`
+    /// environment variable (`buffered` when unset/unknown) — this is how
+    /// the CI io-backend matrix steers every FsStorage-based test and
+    /// bench without touching call sites.
+    pub fn new(root: &Path) -> Result<FsStorage> {
+        FsStorage::with_backend(root, IoBackend::from_env())
+    }
+
+    /// Open a root with an explicit backend. Platforms without mmap /
+    /// O_DIRECT support degrade to `buffered` (graceful fallback — the
+    /// transfer must run everywhere, just without the engine's edge).
+    pub fn with_backend(root: &Path, backend: IoBackend) -> Result<FsStorage> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating storage root {}", root.display()))?;
+        let backend = if cfg!(target_os = "linux") { backend } else { IoBackend::Buffered };
+        Ok(FsStorage { root: root.to_path_buf(), backend, counters: IoCounters::new() })
+    }
+
+    /// The effective engine (after any platform degrade).
+    pub fn backend(&self) -> IoBackend {
+        self.backend
+    }
+
+    /// Times the direct engine fell back to buffered I/O.
+    pub fn direct_fallbacks(&self) -> u64 {
+        self.counters.direct_fallbacks.load(Ordering::Relaxed)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+}
+
+impl Storage for FsStorage {
+    fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
+        let path = self.path(name);
+        match self.backend {
+            IoBackend::Buffered => {
+                let f = File::open(&path).with_context(|| format!("opening {name} for read"))?;
+                Ok(Box::new(FsRead { f, pos: 0 }))
+            }
+            #[cfg(target_os = "linux")]
+            IoBackend::Mmap => Ok(Box::new(super::mmap::MmapRead::open(&path, name)?)),
+            #[cfg(target_os = "linux")]
+            IoBackend::Direct => {
+                Ok(Box::new(DirectRead::open(&path, name, self.counters.clone())?))
+            }
+            #[cfg(not(target_os = "linux"))]
+            _ => unreachable!("non-buffered backends degrade at construction"),
+        }
+    }
+
+    fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        self.open_write_sized(name, 0)
+    }
+
+    fn open_write_sized(&self, name: &str, size_hint: u64) -> Result<Box<dyn WriteStream>> {
+        let path = self.path(name);
+        match self.backend {
+            IoBackend::Buffered => {
+                let f =
+                    File::create(&path).with_context(|| format!("opening {name} for write"))?;
+                Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
+            }
+            #[cfg(target_os = "linux")]
+            IoBackend::Mmap => Ok(Box::new(super::mmap::MmapWrite::create(
+                &path,
+                name,
+                size_hint,
+                self.counters.clone(),
+            )?)),
+            #[cfg(target_os = "linux")]
+            IoBackend::Direct => {
+                let _ = size_hint;
+                Ok(Box::new(DirectWrite::create(&path, name, self.counters.clone())?))
+            }
+            #[cfg(not(target_os = "linux"))]
+            _ => unreachable!("non-buffered backends degrade at construction"),
+        }
+    }
+
+    fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let path = self.path(name);
+        match self.backend {
+            IoBackend::Buffered => {
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("opening {name} for update"))?;
+                Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
+            }
+            #[cfg(target_os = "linux")]
+            IoBackend::Mmap => {
+                Ok(Box::new(super::mmap::MmapWrite::open_existing(
+                    &path,
+                    name,
+                    self.counters.clone(),
+                )?))
+            }
+            #[cfg(target_os = "linux")]
+            IoBackend::Direct => {
+                Ok(Box::new(DirectWrite::open_existing(&path, name, self.counters.clone())?))
+            }
+            #[cfg(not(target_os = "linux"))]
+            _ => unreachable!("non-buffered backends degrade at construction"),
+        }
+    }
+
+    fn size_of(&self, name: &str) -> Result<u64> {
+        Ok(std::fs::metadata(self.path(name))
+            .with_context(|| format!("stat {name}"))?
+            .len())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn sync_count(&self) -> u64 {
+        self.counters.syncs.load(Ordering::Relaxed)
+    }
+
+    fn sync_file(&self, name: &str) -> Result<()> {
+        // fdatasync on any descriptor of the inode flushes every dirty
+        // page of the file — including pages dirtied through a MAP_SHARED
+        // mapping held by a different stream (the page cache is unified).
+        // This is what lets the journal's data-before-watermark ordering
+        // run from the hash job while the stream writer owns the mapping.
+        let f = File::open(self.path(name))
+            .with_context(|| format!("opening {name} for sync"))?;
+        f.sync_data().with_context(|| format!("sync of {name}"))?;
+        self.counters.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Positioned read of one range: `pread` on Unix (no seek, kernel cursor
+/// untouched), seek + read elsewhere.
+pub(crate) fn pread(f: &File, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        f.read_at(buf, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = f;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read(buf)
+    }
+}
+
+/// Positioned write of one range: `pwrite` on Unix, seek + write elsewhere.
+pub(crate) fn pwrite_all(f: &File, offset: u64, data: &[u8]) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        f.write_all_at(data, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = f;
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(data)
+    }
+}
+
+/// Filesystem reader with an explicit cursor: sequential reads advance it,
+/// ranged reads reposition it — every access is a single positioned-I/O
+/// syscall (the same cursor semantics as the in-memory backend).
+struct FsRead {
+    f: File,
+    pos: u64,
+}
+
+impl ReadStream for FsRead {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = pread(&self.f, self.pos, &mut buf[total..])?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+            self.pos += n as u64;
+        }
+        Ok(total)
+    }
+}
+
+/// Filesystem writer with an explicit append cursor. Ranged writes
+/// (`write_at`) land without touching the cursor beyond keeping it at the
+/// logical end, so repair writes interleave freely with a sequential
+/// stream.
+struct FsWrite {
+    f: File,
+    pos: u64,
+    counters: Arc<IoCounters>,
+}
+
+impl WriteStream for FsWrite {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        pwrite_all(&self.f, offset, data)?;
+        self.pos = self.pos.max(offset + data.len() as u64);
+        Ok(())
+    }
+
+    fn write_next(&mut self, data: &[u8]) -> Result<()> {
+        pwrite_all(&self.f, self.pos, data)?;
+        self.pos += data.len() as u64;
+        Ok(())
+    }
+
+    fn write_at_vectored(&mut self, offset: u64, parts: &[&[u8]]) -> Result<()> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total == 0 {
+            self.pos = self.pos.max(offset);
+            return Ok(());
+        }
+        // One pwritev where the platform has it; whatever it didn't take
+        // (short write, >IOV_MAX parts, or no pwritev at all) finishes as
+        // positioned per-part writes.
+        let written = pwritev_once(&self.f, offset, parts).unwrap_or(0);
+        write_parts_at(&self.f, offset, parts, written)?;
+        self.pos = self.pos.max(offset + total as u64);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.f.flush()?;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.f.sync_data()?;
+        self.counters.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Write `parts` as one contiguous span starting at `offset`, skipping
+/// the first `skip` bytes (already written by a vectored call).
+fn write_parts_at(f: &File, offset: u64, parts: &[&[u8]], mut skip: usize) -> Result<()> {
+    let mut off = offset;
+    for p in parts {
+        if skip >= p.len() {
+            skip -= p.len();
+            off += p.len() as u64;
+            continue;
+        }
+        pwrite_all(f, off + skip as u64, &p[skip..])?;
+        off += p.len() as u64;
+        skip = 0;
+    }
+    Ok(())
+}
+
+#[cfg(target_os = "linux")]
+mod vec_sys {
+    use std::ffi::c_void;
+
+    #[repr(C)]
+    pub struct IoVec {
+        pub base: *const c_void,
+        pub len: usize,
+    }
+
+    extern "C" {
+        pub fn pwritev(fd: i32, iov: *const IoVec, iovcnt: i32, offset: i64) -> isize;
+    }
+}
+
+/// One `pwritev` of up to IOV_MAX slices; returns the bytes it accepted.
+#[cfg(target_os = "linux")]
+fn pwritev_once(f: &File, offset: u64, parts: &[&[u8]]) -> std::io::Result<usize> {
+    use std::os::unix::io::AsRawFd;
+    const MAX_IOV: usize = 1024;
+    let iovs: Vec<vec_sys::IoVec> = parts
+        .iter()
+        .take(MAX_IOV)
+        .map(|p| vec_sys::IoVec { base: p.as_ptr() as *const _, len: p.len() })
+        .collect();
+    // SAFETY: iovs points at live slices for the duration of the call.
+    let n = unsafe {
+        vec_sys::pwritev(f.as_raw_fd(), iovs.as_ptr(), iovs.len() as i32, offset as i64)
+    };
+    if n < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pwritev_once(_f: &File, _offset: u64, _parts: &[&[u8]]) -> std::io::Result<usize> {
+    Ok(0) // no vectored syscall: the per-part path writes everything
+}
+
+// ---------------------------------------------------------------------------
+// Direct (O_DIRECT) engine
+// ---------------------------------------------------------------------------
+
+/// `O_DIRECT` open flag (architecture-specific on Linux; 0 = unknown arch,
+/// which turns the direct engine into plain buffered I/O — fallback, not
+/// failure).
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "x86", target_arch = "riscv64")
+))]
+const O_DIRECT: i32 = 0o40000;
+#[cfg(all(target_os = "linux", any(target_arch = "aarch64", target_arch = "arm")))]
+const O_DIRECT: i32 = 0o200000;
+#[cfg(all(
+    target_os = "linux",
+    not(any(
+        target_arch = "x86_64",
+        target_arch = "x86",
+        target_arch = "riscv64",
+        target_arch = "aarch64",
+        target_arch = "arm"
+    ))
+))]
+const O_DIRECT: i32 = 0;
+
+/// Try to open `path` with `O_DIRECT` for the given access mode; `None`
+/// when the flag is unknown here or the filesystem refuses it (tmpfs and
+/// some overlay mounts do) — callers degrade to the plain descriptor.
+#[cfg(target_os = "linux")]
+fn open_direct(path: &Path, write: bool, counters: &IoCounters) -> Option<File> {
+    use std::os::unix::fs::OpenOptionsExt;
+    if O_DIRECT == 0 {
+        counters.direct_fallbacks.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    let mut opts = OpenOptions::new();
+    if write {
+        opts.write(true);
+    } else {
+        opts.read(true);
+    }
+    match opts.custom_flags(O_DIRECT).open(path) {
+        Ok(f) => Some(f),
+        Err(_) => {
+            counters.direct_fallbacks.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+/// Is this operation eligible for direct I/O? O_DIRECT requires the file
+/// offset, the transfer length and the user buffer address to all be
+/// block-aligned.
+#[cfg(target_os = "linux")]
+fn direct_eligible(offset: u64, len: usize, ptr: *const u8) -> bool {
+    len > 0
+        && offset % DIRECT_ALIGN as u64 == 0
+        && len % DIRECT_ALIGN == 0
+        && (ptr as usize) % DIRECT_ALIGN == 0
+}
+
+/// Direct-engine reader: aligned `read_shared` requests bypass the page
+/// cache through the O_DIRECT descriptor; the generic ranged/sequential
+/// API (arbitrary offsets and buffers) reads through the plain one.
+#[cfg(target_os = "linux")]
+pub(crate) struct DirectRead {
+    direct: Option<File>,
+    plain: File,
+    pos: u64,
+    counters: Arc<IoCounters>,
+}
+
+#[cfg(target_os = "linux")]
+impl DirectRead {
+    pub(crate) fn open(path: &Path, name: &str, counters: Arc<IoCounters>) -> Result<DirectRead> {
+        let plain = File::open(path).with_context(|| format!("opening {name} for read"))?;
+        let direct = open_direct(path, false, &counters);
+        Ok(DirectRead { direct, plain, pos: 0, counters })
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl ReadStream for DirectRead {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = pread(&self.plain, self.pos, &mut buf[total..])?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+            self.pos += n as u64;
+        }
+        Ok(total)
+    }
+
+    fn read_shared(
+        &mut self,
+        offset: u64,
+        len: usize,
+        pool: &BufferPool,
+    ) -> Result<SharedBuf> {
+        let mut buf = pool.get_or_alloc(POOL_GRACE);
+        let want = len.min(buf.len());
+        // The aligned fast path: round the request up to a whole block
+        // (O_DIRECT's length rule; EOF still returns short) and read
+        // through the uncached descriptor straight into the aligned
+        // pooled buffer. Anything unaligned takes the plain descriptor.
+        if let Some(df) = self.direct.take() {
+            let aligned_cap = buf.len() - buf.len() % DIRECT_ALIGN;
+            let want_up = want.div_ceil(DIRECT_ALIGN) * DIRECT_ALIGN;
+            if want_up <= aligned_cap && direct_eligible(offset, want_up, buf.as_ptr()) {
+                let mut total = 0usize;
+                let mut failed = false;
+                while total < want_up {
+                    match pread(&df, offset + total as u64, &mut buf[total..want_up]) {
+                        Ok(0) => break,
+                        Ok(n) => total += n,
+                        Err(_) => {
+                            // Filesystem rejected the direct op mid-file:
+                            // degrade this stream to buffered for good.
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                if !failed {
+                    self.direct = Some(df);
+                    let n = total.min(want);
+                    self.pos = offset + n as u64;
+                    return Ok(buf.freeze(n));
+                }
+                self.counters.direct_fallbacks.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.direct = Some(df);
+            }
+        }
+        let n = self.read_at(offset, &mut buf[..want])?;
+        Ok(buf.freeze(n))
+    }
+}
+
+/// Direct-engine writer: fully aligned ranged writes go through the
+/// O_DIRECT descriptor; tails, repairs and anything unaligned take the
+/// plain one (the page cache keeps the two views coherent).
+#[cfg(target_os = "linux")]
+pub(crate) struct DirectWrite {
+    direct: Option<File>,
+    plain: File,
+    pos: u64,
+    counters: Arc<IoCounters>,
+}
+
+#[cfg(target_os = "linux")]
+impl DirectWrite {
+    pub(crate) fn create(
+        path: &Path,
+        name: &str,
+        counters: Arc<IoCounters>,
+    ) -> Result<DirectWrite> {
+        let plain = File::create(path).with_context(|| format!("opening {name} for write"))?;
+        let direct = open_direct(path, true, &counters);
+        Ok(DirectWrite { direct, plain, pos: 0, counters })
+    }
+
+    pub(crate) fn open_existing(
+        path: &Path,
+        name: &str,
+        counters: Arc<IoCounters>,
+    ) -> Result<DirectWrite> {
+        let plain = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {name} for update"))?;
+        let direct = open_direct(path, true, &counters);
+        Ok(DirectWrite { direct, plain, pos: 0, counters })
+    }
+
+    fn write_range(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        if let Some(df) = self.direct.take() {
+            if direct_eligible(offset, data.len(), data.as_ptr()) {
+                match pwrite_all(&df, offset, data) {
+                    Ok(()) => {
+                        self.direct = Some(df);
+                        return Ok(());
+                    }
+                    Err(_) => {
+                        // Degrade this stream to buffered for good.
+                        self.counters.direct_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            } else {
+                self.direct = Some(df);
+            }
+        }
+        pwrite_all(&self.plain, offset, data)?;
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl WriteStream for DirectWrite {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.write_range(offset, data)?;
+        self.pos = self.pos.max(offset + data.len() as u64);
+        Ok(())
+    }
+
+    fn write_next(&mut self, data: &[u8]) -> Result<()> {
+        let pos = self.pos;
+        self.write_range(pos, data)?;
+        self.pos = pos + data.len() as u64;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.plain.flush()?;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        // The plain descriptor's fdatasync covers the direct writes too:
+        // O_DIRECT data already bypassed the cache, and fdatasync flushes
+        // whatever the unaligned tail writes left dirty.
+        self.plain.sync_data()?;
+        self.counters.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}

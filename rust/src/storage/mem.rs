@@ -1,0 +1,163 @@
+//! In-memory storage backend: deterministic tests and fault experiments
+//! that must not touch the disk. Implements the full [`Storage`] surface
+//! (including the vectored/ranged extensions), so the backend conformance
+//! suite runs against it like any disk engine.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::{ReadStream, Storage, WriteStream};
+
+type MemMap = Arc<Mutex<HashMap<String, Arc<Mutex<Vec<u8>>>>>>;
+
+/// In-memory storage shared between "hosts" in tests.
+#[derive(Clone, Default)]
+pub struct MemStorage {
+    files: MemMap,
+    /// `sync` calls across every stream of this storage (durability is a
+    /// no-op in memory, but the *count* lets tests and telemetry verify
+    /// sync discipline per backend).
+    syncs: Arc<AtomicU64>,
+}
+
+impl MemStorage {
+    pub fn new() -> MemStorage {
+        MemStorage::default()
+    }
+
+    /// Preload a file.
+    pub fn put(&self, name: &str, data: Vec<u8>) {
+        self.files
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(Mutex::new(data)));
+    }
+
+    /// Snapshot a file's bytes.
+    pub fn get(&self, name: &str) -> Option<Vec<u8>> {
+        self.files.lock().unwrap().get(name).map(|v| v.lock().unwrap().clone())
+    }
+}
+
+impl Storage for MemStorage {
+    fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
+        let data = self
+            .files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no such mem file {name}"))?;
+        Ok(Box::new(MemStream { data, pos: 0, syncs: self.syncs.clone() }))
+    }
+
+    fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let data = Arc::new(Mutex::new(Vec::new()));
+        self.files.lock().unwrap().insert(name.to_string(), data.clone());
+        Ok(Box::new(MemStream { data, pos: 0, syncs: self.syncs.clone() }))
+    }
+
+    fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
+        let data = self
+            .files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no such mem file {name}"))?;
+        Ok(Box::new(MemStream { data, pos: 0, syncs: self.syncs.clone() }))
+    }
+
+    fn size_of(&self, name: &str) -> Result<u64> {
+        let files = self.files.lock().unwrap();
+        let f = files.get(name).with_context(|| format!("no such mem file {name}"))?;
+        let len = f.lock().unwrap().len() as u64;
+        Ok(len)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "mem"
+    }
+
+    fn sync_count(&self) -> u64 {
+        self.syncs.load(Ordering::Relaxed)
+    }
+
+    fn sync_file(&self, name: &str) -> Result<()> {
+        // Memory is "durable" by definition; count the call so sync
+        // discipline is observable.
+        anyhow::ensure!(
+            self.files.lock().unwrap().contains_key(name),
+            "no such mem file {name}"
+        );
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+struct MemStream {
+    data: Arc<Mutex<Vec<u8>>>,
+    pos: u64,
+    syncs: Arc<AtomicU64>,
+}
+
+impl ReadStream for MemStream {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let data = self.data.lock().unwrap();
+        let start = (self.pos as usize).min(data.len());
+        let n = buf.len().min(data.len() - start);
+        buf[..n].copy_from_slice(&data[start..start + n]);
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+impl WriteStream for MemStream {
+    fn write_at(&mut self, offset: u64, bytes: &[u8]) -> Result<()> {
+        if !bytes.is_empty() {
+            let mut data = self.data.lock().unwrap();
+            let end = offset as usize + bytes.len();
+            if data.len() < end {
+                data.resize(end, 0);
+            }
+            data[offset as usize..end].copy_from_slice(bytes);
+        }
+        // Ranged writes keep the sequential cursor at the logical end —
+        // the cursor rule every backend shares (even for empty writes,
+        // which raise the cursor without extending the file).
+        self.pos = self.pos.max(offset + bytes.len() as u64);
+        Ok(())
+    }
+
+    fn write_next(&mut self, bytes: &[u8]) -> Result<()> {
+        let pos = self.pos;
+        let end = pos + bytes.len() as u64;
+        {
+            let mut data = self.data.lock().unwrap();
+            let e = end as usize;
+            if data.len() < e {
+                data.resize(e, 0);
+            }
+            data[pos as usize..e].copy_from_slice(bytes);
+        }
+        self.pos = end;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}

@@ -1,0 +1,334 @@
+//! Memory-mapped storage engine (Linux): reads serve zero-copy
+//! [`SharedBuf`] views straight out of a shared file mapping, writes land
+//! as stores into a `MAP_SHARED` mapping (no write syscalls on the hot
+//! path), and durability is `msync` + `fdatasync`.
+//!
+//! Ownership story: a read stream maps the whole file once and hands out
+//! refcounted views ([`SharedBuf::from_external`]) — the mapping stays
+//! alive for as long as any view (socket write, hash queue, stash, spill)
+//! still needs the bytes, and *no pool buffer and no copy* are involved
+//! on the read path at all. A write stream maps the destination
+//! read-write; `open_write_sized` pre-sizes the mapping to the announced
+//! file size so the streaming path never remaps, while the unhinted path
+//! grows geometrically and truncates back to the logical length on
+//! `flush`/drop.
+//!
+//! Durability: `MAP_SHARED` dirty pages live in the page cache like any
+//! written page, so [`WriteStream::sync`] = `msync(MS_SYNC)` +
+//! `fdatasync` gives the same "bytes are on stable storage when sync
+//! returns" guarantee the buffered engine's `fdatasync` gives — which is
+//! exactly what the checkpoint journal's data-before-watermark ordering
+//! needs (see DESIGN.md "Storage I/O backends").
+
+#![cfg(target_os = "linux")]
+
+use std::fs::{File, OpenOptions};
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::fs::IoCounters;
+use super::{ReadStream, WriteStream};
+use crate::coordinator::bufpool::{BufferPool, ExternalBytes, SharedBuf};
+
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const PROT_WRITE: i32 = 0x2;
+    pub const MAP_SHARED: i32 = 0x01;
+    pub const MS_SYNC: i32 = 0x4;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn msync(addr: *mut c_void, len: usize, flags: i32) -> i32;
+    }
+}
+
+/// One live `MAP_SHARED` mapping of a file's first `len` bytes.
+struct Region {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is process-global memory; access through &/&mut
+// follows the usual borrow discipline of the owning stream, and the
+// read-only regions handed to SharedBuf views are immutable by contract
+// (source files do not change during a transfer — same assumption every
+// checksum-while-reading pipeline makes).
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+impl Region {
+    fn map(f: &File, len: usize, write: bool) -> Result<Region> {
+        use std::os::unix::io::AsRawFd;
+        anyhow::ensure!(len > 0, "cannot map zero bytes");
+        let prot = if write { sys::PROT_READ | sys::PROT_WRITE } else { sys::PROT_READ };
+        // SAFETY: fd is a live descriptor; len > 0; kernel validates the rest.
+        let p = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, prot, sys::MAP_SHARED, f.as_raw_fd(), 0)
+        };
+        if p as isize == -1 {
+            return Err(std::io::Error::last_os_error()).context("mmap");
+        }
+        Ok(Region { ptr: p as *mut u8, len })
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the live mapping.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: as above; &mut self guarantees exclusive access through
+        // this handle.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    fn msync(&self) -> Result<()> {
+        // SAFETY: ptr/len describe the live mapping.
+        let rc = unsafe { sys::msync(self.ptr as *mut _, self.len, sys::MS_SYNC) };
+        if rc != 0 {
+            return Err(std::io::Error::last_os_error()).context("msync");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        // SAFETY: mapping is live until this very munmap.
+        unsafe {
+            sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+/// A read-only mapped file, shared into the data plane as an external
+/// [`SharedBuf`] backing: every view holds a refcount, so the mapping
+/// outlives the stream for as long as any byte of it is still in flight.
+struct MappedFile {
+    region: Region,
+}
+
+impl ExternalBytes for MappedFile {
+    fn as_bytes(&self) -> &[u8] {
+        self.region.as_slice()
+    }
+}
+
+/// mmap engine reader.
+pub(crate) struct MmapRead {
+    /// `None` for an empty file (zero-length mappings are invalid).
+    map: Option<Arc<MappedFile>>,
+    size: u64,
+    pos: u64,
+}
+
+impl MmapRead {
+    pub(crate) fn open(path: &Path, name: &str) -> Result<MmapRead> {
+        let f = File::open(path).with_context(|| format!("opening {name} for read"))?;
+        let size = f.metadata()?.len();
+        let map = if size > 0 {
+            Some(Arc::new(MappedFile { region: Region::map(&f, size as usize, false)? }))
+        } else {
+            None
+        };
+        Ok(MmapRead { map, size, pos: 0 })
+    }
+}
+
+impl ReadStream for MmapRead {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let Some(map) = &self.map else { return Ok(0) };
+        let data = map.as_bytes();
+        let start = (self.pos as usize).min(data.len());
+        let n = buf.len().min(data.len() - start);
+        buf[..n].copy_from_slice(&data[start..start + n]);
+        self.pos += n as u64;
+        Ok(n)
+    }
+
+    fn read_shared(
+        &mut self,
+        offset: u64,
+        len: usize,
+        _pool: &BufferPool,
+    ) -> Result<SharedBuf> {
+        // The zero-copy path: a refcounted window of the mapping itself.
+        // No pool buffer, no copy — the socket writes and the hash queue
+        // consume the very pages the kernel faulted in.
+        let Some(map) = &self.map else { return Ok(SharedBuf::from_vec(Vec::new())) };
+        let start = (offset as usize).min(self.size as usize);
+        let n = len.min(self.size as usize - start);
+        self.pos = (start + n) as u64;
+        if n == 0 {
+            return Ok(SharedBuf::from_vec(Vec::new()));
+        }
+        let ext: Arc<dyn ExternalBytes> = map.clone();
+        Ok(SharedBuf::from_external(ext, start, n))
+    }
+}
+
+/// mmap engine writer: stores into a `MAP_SHARED` mapping. `cap` is the
+/// mapped (= physical) length, `logical` the high-water byte actually
+/// written; `flush` truncates physical down to logical when the two
+/// diverge (the unhinted growth path).
+pub(crate) struct MmapWrite {
+    file: File,
+    region: Option<Region>,
+    cap: u64,
+    logical: u64,
+    pos: u64,
+    counters: Arc<IoCounters>,
+}
+
+impl MmapWrite {
+    pub(crate) fn create(
+        path: &Path,
+        name: &str,
+        size_hint: u64,
+        counters: Arc<IoCounters>,
+    ) -> Result<MmapWrite> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("opening {name} for write"))?;
+        let mut w = MmapWrite { file, region: None, cap: 0, logical: 0, pos: 0, counters };
+        if size_hint > 0 {
+            // Pre-size to the announced length: the streaming write path
+            // then never remaps and never truncates.
+            w.ensure_cap(size_hint)?;
+        }
+        Ok(w)
+    }
+
+    pub(crate) fn open_existing(
+        path: &Path,
+        name: &str,
+        counters: Arc<IoCounters>,
+    ) -> Result<MmapWrite> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {name} for update"))?;
+        let len = file.metadata()?.len();
+        let region = if len > 0 { Some(Region::map(&file, len as usize, true)?) } else { None };
+        Ok(MmapWrite { file, region, cap: len, logical: len, pos: 0, counters })
+    }
+
+    /// Make the mapping cover at least `need` bytes (geometric growth so
+    /// an unhinted stream remaps O(log n) times, exact for the pre-sized
+    /// path).
+    fn ensure_cap(&mut self, need: u64) -> Result<()> {
+        if need <= self.cap {
+            return Ok(());
+        }
+        let new_cap = need.max(self.cap.saturating_mul(2));
+        self.region = None; // unmap before resizing the file
+        self.file.set_len(new_cap).context("growing mmap destination")?;
+        self.region = Some(Region::map(&self.file, new_cap as usize, true)?);
+        self.cap = new_cap;
+        Ok(())
+    }
+
+    fn store(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let end = offset + data.len() as u64;
+        self.ensure_cap(end)?;
+        let region = self.region.as_mut().expect("ensure_cap mapped");
+        region.as_mut_slice()[offset as usize..end as usize].copy_from_slice(data);
+        self.logical = self.logical.max(end);
+        Ok(())
+    }
+}
+
+impl WriteStream for MmapWrite {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.store(offset, data)?;
+        self.pos = self.pos.max(offset + data.len() as u64);
+        Ok(())
+    }
+
+    fn write_next(&mut self, data: &[u8]) -> Result<()> {
+        let pos = self.pos;
+        self.store(pos, data)?;
+        self.pos = pos + data.len() as u64;
+        Ok(())
+    }
+
+    fn write_at_vectored(&mut self, offset: u64, parts: &[&[u8]]) -> Result<()> {
+        // Scatter writes into a mapping are just consecutive stores — no
+        // syscall to batch, so the win over the default is one cursor
+        // update and a single capacity check.
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total > 0 {
+            self.ensure_cap(offset + total as u64)?;
+        }
+        let mut off = offset;
+        for p in parts {
+            self.store(off, p)?;
+            off += p.len() as u64;
+        }
+        self.pos = self.pos.max(off);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        // Close the unhinted growth path's over-allocation: physical
+        // length snaps back to the bytes actually written. (The pre-sized
+        // streaming path has cap == logical and skips all of this.)
+        if self.cap != self.logical {
+            self.region = None;
+            self.file.set_len(self.logical).context("truncating mmap destination")?;
+            self.cap = self.logical;
+            if self.cap > 0 {
+                self.region = Some(Region::map(&self.file, self.cap as usize, true)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        if let Some(r) = &self.region {
+            r.msync()?;
+        }
+        // msync settles the mapped pages; fdatasync covers file length
+        // changes from ensure_cap/flush.
+        self.file.sync_data()?;
+        self.counters.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+impl Drop for MmapWrite {
+    fn drop(&mut self) {
+        // A stream dropped without flush (error paths, crash injection)
+        // must not leave pre-allocated capacity past the written bytes.
+        if self.cap > self.logical {
+            self.region = None;
+            self.file.set_len(self.logical).ok();
+        }
+    }
+}

@@ -341,3 +341,124 @@ fn resume_falls_back_on_journal_mismatch() {
     let rec = rj.load(0).unwrap().expect("record recreated by the fresh transfer");
     assert!(rec.is_complete());
 }
+
+/// The whole crash/resume cycle — kill at a frame boundary, journal
+/// handshake, tail-only re-send, bit-identical delivery — must hold on
+/// every storage I/O backend, with real files on both ends. This is the
+/// durability-ordering proof per engine: the journaled watermark may
+/// never attest bytes the backend's sync (`fdatasync` / `msync`) did not
+/// actually persist, or the resumed prefix would diverge from storage
+/// and the handshake's root comparison would reject it (costing the
+/// skip) or — worse — deliver wrong bytes. Both algorithms that exercise
+/// the two journaling paths run: FIVER (stream-side LeafTracker) and
+/// FIVER-Merkle (journal folded into the verification tree job).
+#[test]
+fn crash_resume_across_storage_backends() {
+    use fiver::storage::{read_all, FsStorage, IoBackend, Storage};
+    for backend in IoBackend::ALL {
+        for alg in [RealAlgorithm::Fiver, RealAlgorithm::FiverMerkle] {
+            let mut rng = SplitMix64::new(0xBACC + backend as u64);
+            let sizes = [120_000usize, 60_000, 90_000];
+            let total: u64 = sizes.iter().map(|&s| s as u64).sum();
+            let mut contents = Vec::new();
+            let base = TempDir::create("fiver-crash-backend").expect("scratch dir");
+            let src_fs = FsStorage::with_backend(&base.join("src"), backend).expect("src");
+            let dst_fs = FsStorage::with_backend(&base.join("dst"), backend).expect("dst");
+            let mut names = Vec::new();
+            for (i, &size) in sizes.iter().enumerate() {
+                let mut data = vec![0u8; size];
+                rng.fork().fill_bytes(&mut data);
+                let name = format!("k{i:03}");
+                let mut w = src_fs.open_write(&name).expect("create source");
+                w.write_next(&data).expect("write source");
+                w.flush().expect("flush source");
+                names.push(name);
+                contents.push(data);
+            }
+            let src: Arc<dyn fiver::storage::Storage> = Arc::new(src_fs);
+            let dst: Arc<dyn fiver::storage::Storage> = Arc::new(dst_fs);
+            let (mut scfg, mut rcfg) = journaled_cfgs(alg, &base, 16_384);
+            for cfg in [&mut scfg, &mut rcfg] {
+                cfg.buf_size = 16_384;
+                cfg.journal_checkpoint_leaves = 1;
+                cfg.io_backend = backend;
+            }
+            let eng = EngineConfig {
+                concurrency: 2,
+                parallel: 2,
+                hash_workers: 2,
+                batch_threshold: 0,
+                batch_bytes: 1,
+            };
+            // Phase 1: kill mid-dataset.
+            let crashed = run_recoverable_local_transfer(
+                &names,
+                src.clone(),
+                dst.clone(),
+                &scfg,
+                &rcfg,
+                &eng,
+                &FaultPlan::none().with_crash_after_bytes(total / 2),
+            );
+            assert!(
+                crashed.is_err(),
+                "{} {}: planned kill must abort the run",
+                backend.name(),
+                alg.name()
+            );
+            let expected_skip = expected_common_watermarks(&base, 16_384);
+            // Phase 2: resume against the journals.
+            scfg.resume = true;
+            rcfg.resume = true;
+            let (report, _) = run_recoverable_local_transfer(
+                &names,
+                src.clone(),
+                dst.clone(),
+                &scfg,
+                &rcfg,
+                &eng,
+                &FaultPlan::none(),
+            )
+            .unwrap_or_else(|e| {
+                panic!("{} {}: resume failed: {e:#}", backend.name(), alg.name())
+            });
+            let totals = report.aggregate();
+            for (name, expect) in names.iter().zip(&contents) {
+                let got = read_all(&dst, name).unwrap_or_else(|e| {
+                    panic!("{} {}: read back {name}: {e:#}", backend.name(), alg.name())
+                });
+                assert_eq!(
+                    &got,
+                    expect,
+                    "{} {}: delivered bytes differ on {name}",
+                    backend.name(),
+                    alg.name()
+                );
+            }
+            assert_eq!(
+                totals.bytes_reread,
+                0,
+                "{} {}: clean resume must not re-read",
+                backend.name(),
+                alg.name()
+            );
+            assert_eq!(
+                totals.bytes_sent + totals.bytes_skipped,
+                total,
+                "{} {}: skip accounting must partition the dataset",
+                backend.name(),
+                alg.name()
+            );
+            assert_eq!(
+                totals.bytes_skipped,
+                expected_skip,
+                "{} {}: journal watermarks vs skipped bytes (durability ordering)",
+                backend.name(),
+                alg.name()
+            );
+            // The report must attribute the run to the *effective* engine
+            // (platforms without mmap/O_DIRECT degrade to buffered).
+            assert_eq!(totals.io_backend, src.backend_name(), "reported backend must match");
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Storage backend conformance property suite: every backend — the
+//! in-memory one and each FsStorage engine (buffered / mmap / direct) —
+//! must deliver byte-identical semantics under random interleavings of
+//! the full trait surface: sequential writes, ranged (repair) writes,
+//! scatter batches, sync/flush, reopen-for-update, and all three read
+//! paths (`read_next`, `read_at`, `read_shared`).
+//!
+//! The model is a plain `Vec<u8>` with the shared cursor rule (ranged
+//! writes only ever *raise* the sequential cursor to the end of their
+//! range). Whatever the engine does underneath — pwrite, MAP_SHARED
+//! stores + remap growth, O_DIRECT with per-op fallback — the observable
+//! bytes must match the model exactly.
+
+use std::sync::Arc;
+
+use fiver::coordinator::bufpool::BufferPool;
+use fiver::storage::{read_all, FsStorage, IoBackend, MemStorage, Storage, DIRECT_ALIGN};
+use fiver::util::rng::SplitMix64;
+use fiver::util::tmpdir::TempDir;
+
+/// Every constructible backend under `dir`. Engines the platform or the
+/// filesystem refuses degrade inside FsStorage — still exercised.
+fn all_backends(dir: &TempDir) -> Vec<(String, Arc<dyn Storage>)> {
+    let mut out: Vec<(String, Arc<dyn Storage>)> =
+        vec![("mem".to_string(), Arc::new(MemStorage::new()))];
+    for b in IoBackend::ALL {
+        let sub = dir.join(b.name());
+        let s = FsStorage::with_backend(&sub, b).expect("backend storage");
+        out.push((format!("fs-{}", b.name()), Arc::new(s)));
+    }
+    out
+}
+
+/// In-memory model of one file plus the shared cursor rule.
+#[derive(Default)]
+struct Model {
+    data: Vec<u8>,
+    pos: u64,
+}
+
+impl Model {
+    fn write_at(&mut self, offset: u64, bytes: &[u8]) {
+        if !bytes.is_empty() {
+            let end = offset as usize + bytes.len();
+            if self.data.len() < end {
+                self.data.resize(end, 0);
+            }
+            self.data[offset as usize..end].copy_from_slice(bytes);
+        }
+        // Empty ranged writes still raise the cursor (the shared rule).
+        self.pos = self.pos.max(offset + bytes.len() as u64);
+    }
+
+    fn write_next(&mut self, bytes: &[u8]) {
+        let pos = self.pos;
+        let end = pos as usize + bytes.len();
+        if self.data.len() < end {
+            self.data.resize(end, 0);
+        }
+        self.data[pos as usize..end].copy_from_slice(bytes);
+        self.pos = pos + bytes.len() as u64;
+    }
+}
+
+fn rand_bytes(rng: &mut SplitMix64, len: usize) -> Vec<u8> {
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// PROPERTY: random interleavings of write_next / write_at / scatter
+/// write_at_vectored / flush / sync, then a reopen-for-update repair
+/// phase, leave every backend holding exactly the model's bytes — and
+/// all three read paths agree with the model at random offsets.
+#[test]
+fn prop_random_interleavings_read_back_byte_identical() {
+    let pool = BufferPool::with_options(64 * 1024, 4, DIRECT_ALIGN, 4);
+    for seed in 0..10u64 {
+        let dir = TempDir::create("fiver-propstorage").expect("scratch dir");
+        for (name, storage) in all_backends(&dir) {
+            let mut rng = SplitMix64::new(seed * 0x9E37 + 0x79B9);
+            let mut model = Model::default();
+            let file = "f0";
+            // Phase 1: streaming writes, sometimes pre-sized (the
+            // receiver's FileStart hint), sometimes not.
+            let hint = rng.range(0, 300_000);
+            let mut w = if rng.below(2) == 0 {
+                storage.open_write(file).expect("open_write")
+            } else {
+                storage.open_write_sized(file, hint).expect("open_write_sized")
+            };
+            let ops = rng.range(10, 40);
+            for _ in 0..ops {
+                match rng.below(6) {
+                    0 | 1 | 2 => {
+                        // Sequential stream chunk (the common case).
+                        let len = rng.range(1, 50_000) as usize;
+                        let bytes = rand_bytes(&mut rng, len);
+                        w.write_next(&bytes).expect("write_next");
+                        model.write_next(&bytes);
+                    }
+                    3 => {
+                        // Ranged (repair-style) write, possibly past EOF —
+                        // occasionally empty (raises the cursor only).
+                        let cap = model.data.len() as u64 + 10_000;
+                        let offset = rng.range(0, cap.max(1));
+                        let len = rng.range(0, 20_000) as usize;
+                        let bytes = rand_bytes(&mut rng, len);
+                        w.write_at(offset, &bytes).expect("write_at");
+                        model.write_at(offset, &bytes);
+                    }
+                    4 => {
+                        // Scatter batch of adjacent parts.
+                        let cap = model.data.len() as u64 + 5_000;
+                        let offset = rng.range(0, cap.max(1));
+                        let parts: Vec<Vec<u8>> = (0..rng.range(1, 4))
+                            .map(|_| rand_bytes(&mut rng, rng.range(1, 8_000) as usize))
+                            .collect();
+                        let slices: Vec<&[u8]> = parts.iter().map(|p| &p[..]).collect();
+                        w.write_at_vectored(offset, &slices).expect("write_at_vectored");
+                        let mut off = offset;
+                        for p in &parts {
+                            model.write_at(off, p);
+                            off += p.len() as u64;
+                        }
+                    }
+                    _ => {
+                        // Durability points interleave with the stream.
+                        if rng.below(2) == 0 {
+                            w.flush().expect("flush");
+                        } else {
+                            w.sync().expect("sync");
+                        }
+                    }
+                }
+            }
+            w.flush().expect("final flush");
+            drop(w);
+            assert_eq!(
+                storage.size_of(file).expect("size_of"),
+                model.data.len() as u64,
+                "seed {seed} {name}: size after phase 1"
+            );
+
+            // Phase 2: reopen for update (the Fix-writer path) and patch.
+            if !model.data.is_empty() {
+                let mut u = storage.open_update(file).expect("open_update");
+                for _ in 0..rng.range(1, 6) {
+                    let offset = rng.below(model.data.len() as u64);
+                    let len = rng
+                        .range(1, 10_000)
+                        .min(model.data.len() as u64 - offset) as usize;
+                    let bytes = rand_bytes(&mut rng, len);
+                    u.write_at(offset, &bytes).expect("repair write_at");
+                    model.write_at(offset, &bytes);
+                }
+                u.sync().expect("repair sync");
+                drop(u);
+            }
+            assert_eq!(
+                storage.size_of(file).expect("size_of"),
+                model.data.len() as u64,
+                "seed {seed} {name}: repairs must not change the length"
+            );
+
+            // Read-back: full sequential, then random ranged + shared.
+            let back = read_all(&storage, file).expect("read_all");
+            assert_eq!(back, model.data, "seed {seed} {name}: full read-back");
+            let mut r = storage.open_read(file).expect("open_read");
+            for _ in 0..8 {
+                if model.data.is_empty() {
+                    break;
+                }
+                let offset = rng.below(model.data.len() as u64);
+                let want = rng.range(1, 70_000) as usize;
+                let mut buf = vec![0u8; want];
+                let n = r.read_at(offset, &mut buf).expect("read_at");
+                let expect_n = want.min(model.data.len() - offset as usize);
+                assert_eq!(n, expect_n, "seed {seed} {name}: read_at length at {offset}");
+                assert_eq!(
+                    &buf[..n],
+                    &model.data[offset as usize..offset as usize + n],
+                    "seed {seed} {name}: read_at bytes at {offset}"
+                );
+                let shared = r.read_shared(offset, want, &pool).expect("read_shared");
+                assert!(
+                    !shared.is_empty() && shared.len() <= want,
+                    "seed {seed} {name}: read_shared progress at {offset}"
+                );
+                assert_eq!(
+                    &shared[..],
+                    &model.data[offset as usize..offset as usize + shared.len()],
+                    "seed {seed} {name}: read_shared bytes at {offset}"
+                );
+            }
+        }
+    }
+}
+
+/// The repair pattern every backend must preserve exactly: ranged writes
+/// interleaved with a sequential stream never disturb the stream cursor,
+/// and `sync` mid-stream leaves the bytes readable by a fresh reader
+/// (the journal's data-before-watermark read-back).
+#[test]
+fn midstream_sync_is_readable_by_a_fresh_reader() {
+    let dir = TempDir::create("fiver-propsync").expect("scratch dir");
+    for (name, storage) in all_backends(&dir) {
+        let mut w = storage.open_write_sized("f", 200_000).expect("open");
+        let first = vec![0xA1u8; 70_000];
+        w.write_next(&first).expect("write");
+        w.sync().expect("sync");
+        // A fresh reader (different descriptor / mapping) must see the
+        // synced prefix even while the writer stays open — exactly what
+        // Storage::sync_file + journal checkpointing rely on.
+        let got = {
+            let mut r = storage.open_read("f").expect("read");
+            let mut buf = vec![0u8; 70_000];
+            let mut filled = 0;
+            while filled < buf.len() {
+                let n = r.read_next(&mut buf[filled..]).expect("read_next");
+                if n == 0 {
+                    break;
+                }
+                filled += n;
+            }
+            buf.truncate(filled);
+            buf
+        };
+        assert!(got.len() >= 70_000, "{name}: synced prefix visible to a fresh reader");
+        assert_eq!(&got[..70_000], &first[..], "{name}: synced prefix bytes");
+        w.write_next(&[0xB2u8; 30_000]).expect("tail");
+        w.flush().expect("flush");
+        drop(w);
+        assert_eq!(storage.size_of("f").expect("size"), 100_000, "{name}");
+        let back = read_all(&storage, "f").expect("read_all");
+        assert_eq!(&back[..70_000], &first[..], "{name}");
+        assert_eq!(&back[70_000..], &[0xB2u8; 30_000][..], "{name}");
+    }
+}
+
+/// `sync_file` (the hash-job checkpoint's data sync) must work while a
+/// writer holds the file open on every backend — including mmap, where
+/// the dirty pages live in a MAP_SHARED mapping owned by the writer.
+#[test]
+fn sync_file_while_writer_open_every_backend() {
+    let dir = TempDir::create("fiver-propsyncfile").expect("scratch dir");
+    for (name, storage) in all_backends(&dir) {
+        let mut w = storage.open_write_sized("f", 50_000).expect("open");
+        w.write_next(&[0x5Au8; 50_000]).expect("write");
+        let before = storage.sync_count();
+        storage.sync_file("f").expect("sync_file with writer open");
+        assert!(storage.sync_count() > before, "{name}: sync_file must count");
+        w.flush().expect("flush");
+        drop(w);
+        let back = read_all(&storage, "f").expect("read_all");
+        assert_eq!(back, vec![0x5Au8; 50_000], "{name}");
+    }
+}
