@@ -43,7 +43,7 @@ fn main() {
         t.row(&[
             s.algorithm.clone(),
             secs(s.total_time),
-            pct(s.overhead()),
+            pct(s.overhead().expect("sim runs carry Eq. 1 baselines")),
             pct(s.dst_trace.average()),
             bytes(s.dst_trace.total_misses()),
             s.tcp_restarts.to_string(),

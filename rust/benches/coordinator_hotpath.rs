@@ -16,6 +16,7 @@ use fiver::coordinator::session::{run_local_transfer, run_parallel_local_transfe
 use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
 use fiver::faults::FaultPlan;
 use fiver::hashes::HashAlgorithm;
+use fiver::obs::{Hist, Recorder, Stage};
 use fiver::storage::{FsStorage, IoBackend, MemStorage, Storage};
 use fiver::util::rng::SplitMix64;
 
@@ -23,6 +24,7 @@ fn main() {
     queue_bench();
     queue_pool_bench();
     protocol_bench();
+    obs_bench();
     storage_backend_bench();
     transfer_bench();
     engine_bench();
@@ -157,6 +159,75 @@ fn protocol_bench() {
         black_box(n);
     });
     r.report_bytes((frames * payload.len()) as u64);
+}
+
+/// The observability plane's own cost: raw span/histogram record rates in
+/// isolation, then the end-to-end tracing tax — the same loopback FIVER
+/// transfer with the recorder off vs on. Target: <2% median wall-clock
+/// delta (the CI bench gate compares the two recorded medians).
+fn obs_bench() {
+    println!("\n== observability plane (span/hist record rates, tracing tax) ==");
+    let ops = pick(4 << 20, 1 << 18);
+    let rec = Recorder::enabled();
+    let shard = rec.shard("bench");
+    let r = bench("obs/span-record", 2, pick(10, 3), || {
+        for i in 0..ops {
+            shard.record_ns(Stage::Hash, i as u64, 1_000);
+        }
+    });
+    r.report_ops(ops as u64);
+
+    let hist = Hist::new();
+    let r = bench("obs/hist-record", 2, pick(10, 3), || {
+        for i in 0..ops {
+            hist.record(i as u64);
+        }
+    });
+    r.report_ops(ops as u64);
+
+    let count = pick(16, 4);
+    let size = 1usize << 20;
+    let total = (count * size) as u64;
+    let src = MemStorage::new();
+    let mut rng = SplitMix64::new(13);
+    let mut names = Vec::new();
+    for i in 0..count {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        let name = format!("o{i}");
+        src.put(&name, data);
+        names.push(name);
+    }
+    let mut medians = [0.0f64; 2];
+    for (slot, tracing) in [(0usize, false), (1, true)] {
+        let label =
+            if tracing { "transfer/FIVER-tracing-on" } else { "transfer/FIVER-tracing-off" };
+        let src = src.clone();
+        let names = names.clone();
+        let r = bench(label, 1, pick(5, 2), || {
+            let mut cfg =
+                SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+            // Pin the recorder explicitly: FIVER_TRACE in the environment
+            // must not turn the "off" baseline on.
+            cfg.obs = if tracing { Recorder::enabled() } else { Recorder::disabled() };
+            let dst = MemStorage::new();
+            let (rep, _) = run_local_transfer(
+                &names,
+                Arc::new(src.clone()),
+                Arc::new(dst),
+                &cfg,
+                &FaultPlan::none(),
+            )
+            .unwrap();
+            black_box(rep.bytes_sent);
+        });
+        medians[slot] = r.median_secs;
+        r.report_bytes(total);
+    }
+    println!(
+        "   tracing tax: {:+.2}% median wall-clock (budget: < 2%)",
+        (medians[1] / medians[0] - 1.0) * 100.0
+    );
 }
 
 /// The storage engines head to head on their hot paths: sequential

@@ -183,6 +183,13 @@ pub struct SessionConfig {
     /// completed leaves (and always at file end). Smaller = fresher
     /// checkpoints after a crash, more fsyncs on the stream path.
     pub journal_checkpoint_leaves: u64,
+    /// The endpoint's observability recorder ([`crate::obs`]): enabled
+    /// by `FIVER_TRACE=1` (or explicitly by the `--trace-out` /
+    /// `--metrics-json` / `--progress` flags), disabled otherwise at
+    /// near-zero recording cost. Sessions, hash jobs and the receiver
+    /// draw per-worker [`crate::obs::Shard`]s from it; reports merge
+    /// them into per-stage percentiles and a bottleneck label.
+    pub obs: crate::obs::Recorder,
     pub hasher: HasherFactory,
 }
 
@@ -201,6 +208,7 @@ impl SessionConfig {
             journal_dir: None,
             resume: false,
             journal_checkpoint_leaves: 8,
+            obs: crate::obs::Recorder::from_env(),
             hasher,
         }
     }
@@ -227,7 +235,17 @@ impl SessionConfig {
     pub fn make_pool(&self, sessions: usize) -> bufpool::BufferPool {
         let cap = self.pool_buffers_for(sessions);
         let max = if self.pool_max_buffers > 0 { self.pool_max_buffers.max(cap) } else { cap * 2 };
-        bufpool::BufferPool::with_options(self.buf_size, cap, self.io_backend.buffer_align(), max)
+        let pool = bufpool::BufferPool::with_options(
+            self.buf_size,
+            cap,
+            self.io_backend.buffer_align(),
+            max,
+        );
+        if self.obs.is_enabled() {
+            let p = pool.clone();
+            self.obs.register_pool_gauge(move || (p.in_flight(), p.capacity()));
+        }
+        pool
     }
 
     /// Open this endpoint's checkpoint journal, if one is configured.
@@ -302,6 +320,23 @@ pub struct TransferReport {
     /// Times this endpoint's storage forced durability (`sync`) — the
     /// journal's checkpoint cadence dominates this in journaled runs.
     pub storage_syncs: u64,
+    /// O_DIRECT per-op fallbacks to buffered I/O on this endpoint's
+    /// storage (nonzero = alignment or filesystem support forced the
+    /// direct engine off its fast path).
+    pub direct_fallbacks: u64,
+    /// Merged per-stage span statistics from the observability plane
+    /// (p50/p95/p99 latencies + busy time; empty when tracing is
+    /// disabled).
+    pub stage_stats: Vec<crate::obs::StageStats>,
+    /// Bottleneck label from per-stage busy-time decomposition
+    /// (`hash-bound` / `read-bound` / `write-bound` / `net-bound`;
+    /// empty when tracing is disabled).
+    pub bottleneck: String,
+    /// Busiest stage group over the runner-up (>= 1; capped at 999).
+    pub bottleneck_confidence: f64,
+    /// Span events dropped by contended ring pushes (recording never
+    /// blocks; nonzero here means the trace has gaps, not the run).
+    pub trace_dropped: u64,
     pub elapsed_secs: f64,
 }
 

@@ -37,6 +37,7 @@ use super::protocol::Frame;
 use super::queue::ByteQueue;
 use super::{HasherFactory, RealAlgorithm, SessionConfig};
 use crate::merkle::{MerkleBuilder, MerkleTree};
+use crate::obs::{Shard, Stage};
 use crate::storage::Storage;
 
 /// Receiver-side session summary.
@@ -56,6 +57,10 @@ pub struct ReceiverReport {
     /// shared per storage, so every session of an endpoint snapshots the
     /// same value — merge takes the max, not the sum.
     pub storage_syncs: u64,
+    /// O_DIRECT per-op fallbacks to buffered I/O at this endpoint
+    /// (0 for the other engines). Shared per storage like
+    /// `storage_syncs` — merge takes the max.
+    pub direct_fallbacks: u64,
 }
 
 impl ReceiverReport {
@@ -70,6 +75,7 @@ impl ReceiverReport {
             self.io_backend = other.io_backend.clone();
         }
         self.storage_syncs = self.storage_syncs.max(other.storage_syncs);
+        self.direct_fallbacks = self.direct_fallbacks.max(other.direct_fallbacks);
     }
 }
 
@@ -149,11 +155,14 @@ pub fn serve_session_multi(
     for data in datas {
         let ftx = ftx.clone();
         let bufs2 = bufs.clone();
+        let obs = cfg.obs.shard("recv-stripe");
         readers.push(std::thread::spawn(move || {
             let mut input = data;
             loop {
+                let t = obs.start();
                 match Frame::read_from_pooled(&mut input, &bufs2) {
                     Ok(Some(frame)) => {
+                        obs.record(Stage::Recv, t);
                         if ftx.send(Ok(frame)).is_err() {
                             break; // merger gone
                         }
@@ -189,6 +198,7 @@ pub fn serve_session_multi(
     report.units_failed = stats.1;
     report.io_backend = storage.backend_name().to_string();
     report.storage_syncs = storage.sync_count();
+    report.direct_fallbacks = storage.direct_fallbacks();
     Ok(report)
 }
 
@@ -479,6 +489,8 @@ struct FileState {
     /// FileEnd seen (data may still be in flight on other stripes).
     end_requested: bool,
     tx: mpsc::Sender<Event>,
+    /// Merger-side span shard (write/journal/queue_wait stages).
+    obs: Shard,
 }
 
 impl FileState {
@@ -528,6 +540,7 @@ impl FileState {
             let hasher_factory = cfg.hasher.clone();
             let tx2 = tx.clone();
             let name2 = name.to_string();
+            let hobs = cfg.obs.shard("recv-hash");
             if tree_mode {
                 let fold = match journal {
                     Some(j) => {
@@ -541,24 +554,37 @@ impl FileState {
                 let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = cfg.leaf_size;
                 pool.submit(move || {
-                    let tree =
-                        queue_build_tree_fold(q2, leaf_size, size, prefix, hasher_factory, fold);
+                    let tree = queue_build_tree_fold(
+                        q2,
+                        leaf_size,
+                        size,
+                        prefix,
+                        hasher_factory,
+                        fold,
+                        hobs,
+                    );
                     tx2.send(Event::VerifyTree { file_idx, name: name2, tree }).ok();
                 });
             } else {
                 let units2 = units.clone();
                 pool.submit(move || {
-                    queue_hash_units(q2, &units2, hasher_factory, |unit, offset, len, digest| {
-                        tx2.send(Event::Verify {
-                            file_idx,
-                            name: name2.clone(),
-                            unit,
-                            offset,
-                            len,
-                            digest: Some(digest),
-                        })
-                        .ok();
-                    });
+                    queue_hash_units(
+                        q2,
+                        &units2,
+                        hasher_factory,
+                        hobs,
+                        |unit, offset, len, digest| {
+                            tx2.send(Event::Verify {
+                                file_idx,
+                                name: name2.clone(),
+                                unit,
+                                offset,
+                                len,
+                                digest: Some(digest),
+                            })
+                            .ok();
+                        },
+                    );
                 });
             }
             Some(q)
@@ -597,11 +623,14 @@ impl FileState {
             },
             end_requested: false,
             tx: tx.clone(),
+            obs: cfg.obs.shard("recv-merge"),
         })
     }
 
     fn write(&mut self, offset: u64, payload: SharedBuf) -> Result<()> {
+        let t = self.obs.start();
         self.writer.write_at(offset, &payload)?;
+        self.obs.record(Stage::Write, t);
         let len = payload.len() as u64;
         if offset == self.contiguous {
             // Algorithm 2 line 7: share the received buffer with the
@@ -648,11 +677,13 @@ impl FileState {
     /// could still lose.
     fn jrn_feed_buf(&mut self, data: &[u8]) -> Result<()> {
         let Some((fj, tracker)) = self.jrn.as_mut() else { return Ok(()) };
+        let t = self.obs.start();
         tracker.update(data, |_, d| fj.push_leaf(&d));
         if fj.pending_leaves() >= self.jrn_checkpoint {
             self.writer.sync()?;
             fj.checkpoint()?;
         }
+        self.obs.record(Stage::Journal, t);
         Ok(())
     }
 
@@ -708,6 +739,7 @@ impl FileState {
         } else {
             self.spill.push_back(payload);
         }
+        self.obs.gauge_depth(q.len_bytes() as u64);
     }
 
     /// Retry spilled feeds (non-blocking).
@@ -729,7 +761,9 @@ impl FileState {
     fn drain_spill_blocking(&mut self) {
         if let Some(q) = &self.queue {
             for buf in self.spill.drain(..) {
+                let t = self.obs.start();
                 q.add(buf);
+                self.obs.record(Stage::QueueWait, t);
             }
         }
     }
@@ -805,6 +839,7 @@ pub(crate) fn queue_hash_units(
     q: ByteQueue,
     units: &[(u64, u64, u64)],
     hasher_factory: super::HasherFactory,
+    obs: Shard,
     mut emit: impl FnMut(u64, u64, u64, Vec<u8>),
 ) {
     let mut idx = 0usize;
@@ -818,7 +853,10 @@ pub(crate) fn queue_hash_units(
         idx += 1;
     }
     while idx < units.len() {
+        // The blocking `remove` (waiting for stream bytes) is *not* hash
+        // busy time — only the digesting of a drained buffer is.
         let Some(buf) = q.remove() else { break };
+        let t = obs.start();
         let mut slice = &buf[..];
         while !slice.is_empty() && idx < units.len() {
             let (unit, offset, len) = units[idx];
@@ -833,6 +871,7 @@ pub(crate) fn queue_hash_units(
                 idx += 1;
             }
         }
+        obs.record(Stage::Hash, t);
     }
     // Queue closed early (short stream): emit the partial unit so
     // verification fails closed rather than hanging the session.
@@ -870,6 +909,7 @@ pub(crate) fn queue_build_tree_fold(
     prefix: Option<(Vec<u8>, u64)>,
     hasher_factory: super::HasherFactory,
     mut journal: Option<JournalFold>,
+    obs: Shard,
 ) -> MerkleTree {
     let dlen = hasher_factory().digest_len();
     let (mut leaves, prefix_bytes) = prefix.unwrap_or((Vec::new(), 0));
@@ -883,29 +923,38 @@ pub(crate) fn queue_build_tree_fold(
     let mut streamed = 0u64;
     while let Some(buf) = q.remove() {
         streamed += buf.len() as u64;
+        let t = obs.start();
         tracker.update(&buf, |_, d| {
             if let Some(j) = journal.as_mut() {
                 j.push_leaf(&d);
             }
             leaves.extend_from_slice(&d);
         });
+        obs.record(Stage::Hash, t);
     }
     let complete = prefix_bytes + streamed == size;
     if complete {
+        let t = obs.start();
         tracker.finish(|_, d| {
             if let Some(j) = journal.as_mut() {
                 j.push_leaf(&d);
             }
             leaves.extend_from_slice(&d);
         });
+        obs.record(Stage::Hash, t);
     }
     if let Some(mut j) = journal.take() {
+        let t = obs.start();
         j.finish();
+        obs.record(Stage::Journal, t);
     }
     if !complete {
         return MerkleBuilder::new(leaf_size, hasher_factory).finish();
     }
-    MerkleTree::from_leaves(leaf_size, size, dlen, leaves, &hasher_factory)
+    let t = obs.start();
+    let tree = MerkleTree::from_leaves(leaf_size, size, dlen, leaves, &hasher_factory);
+    obs.record(Stage::Hash, t);
+    tree
 }
 
 /// The verify worker: digests out, verdicts in, repair loop.
@@ -917,6 +966,7 @@ fn verify_worker(
 ) -> Result<(u64, u64)> {
     let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
     let mut ctrl_out = BufWriter::new(ctrl);
+    let obs = cfg.obs.shard("recv-verify");
     let mut verified = 0u64;
     let mut failed = 0u64;
     let mut stash: std::collections::VecDeque<Event> = Default::default();
@@ -944,6 +994,7 @@ fn verify_worker(
                     file_idx,
                     &name,
                     tree,
+                    &obs,
                 )?;
                 verified += v;
                 failed += f;
@@ -955,14 +1006,21 @@ fn verify_worker(
         // Compute (re-read mode) or take (queue mode) the digest.
         let mut digest = match digest {
             Some(d) => d,
-            None => hash_range(&storage, &name, offset, len, &cfg.hasher)?,
+            None => {
+                let t = obs.start();
+                let d = hash_range(&storage, &name, offset, len, &cfg.hasher)?;
+                obs.record(Stage::Hash, t);
+                d
+            }
         };
         loop {
+            let t = obs.start();
             Frame::Digest { file_idx, unit, digest: digest.clone() }.write_to(&mut ctrl_out)?;
             use std::io::Write;
             ctrl_out.flush()?;
             let verdict =
                 Frame::read_from(&mut ctrl_in)?.context("ctrl channel closed awaiting verdict")?;
+            obs.record(Stage::Verify, t);
             match verdict {
                 Frame::Verdict { file_idx: fi, unit: u, ok } => {
                     anyhow::ensure!(
@@ -988,7 +1046,9 @@ fn verify_worker(
                             Err(_) => bail!("session ended mid-repair"),
                         }
                     }
+                    let t = obs.start();
                     digest = hash_range(&storage, &name, offset, len, &cfg.hasher)?;
+                    obs.record(Stage::Repair, t);
                 }
                 other => bail!("expected Verdict, got {other:?}"),
             }
@@ -1013,11 +1073,13 @@ fn verify_tree_exchange(
     file_idx: u32,
     name: &str,
     mut tree: MerkleTree,
+    obs: &Shard,
 ) -> Result<(u64, u64)> {
     use std::io::Write;
     let mut verified = 0u64;
     let mut failed = 0u64;
     loop {
+        let t = obs.start();
         Frame::TreeRoot {
             file_idx,
             leaves: tree.leaf_count() as u64,
@@ -1028,6 +1090,7 @@ fn verify_tree_exchange(
         ctrl_out.flush()?;
         let verdict =
             Frame::read_from(ctrl_in)?.context("ctrl channel closed awaiting tree verdict")?;
+        obs.record(Stage::Verify, t);
         let Frame::Verdict { file_idx: fi, unit: _, ok } = verdict else {
             bail!("expected Verdict for tree root, got {verdict:?}");
         };
@@ -1077,11 +1140,13 @@ fn verify_tree_exchange(
         }
         dirty.sort_unstable();
         dirty.dedup();
+        let t = obs.start();
         for &leaf in &dirty {
             let (off, len) = tree.leaf_range(leaf);
             tree.set_leaf(leaf, hash_range(storage, name, off, len, &cfg.hasher)?);
         }
         tree.recompute_paths(&dirty, &cfg.hasher);
+        obs.record(Stage::Repair, t);
     }
 }
 
@@ -1130,6 +1195,7 @@ mod tests {
             q,
             &[(UNIT_FILE, 0, 1000)],
             native_factory(HashAlgorithm::Md5),
+            Shard::disabled(),
             |u, o, l, d| out.push((u, o, l, d)),
         );
         assert_eq!(out.len(), 1);
@@ -1149,9 +1215,13 @@ mod tests {
         q.close();
         let units = [(0u64, 0u64, 400u64), (1, 400, 400), (2, 800, 200)];
         let mut out = Vec::new();
-        queue_hash_units(q, &units, native_factory(HashAlgorithm::Sha1), |u, o, l, d| {
-            out.push((u, o, l, d))
-        });
+        queue_hash_units(
+            q,
+            &units,
+            native_factory(HashAlgorithm::Sha1),
+            Shard::disabled(),
+            |u, o, l, d| out.push((u, o, l, d)),
+        );
         assert_eq!(out.len(), 3);
         for (i, (u, o, l, d)) in out.iter().enumerate() {
             assert_eq!(*u, i as u64);
@@ -1172,6 +1242,7 @@ mod tests {
             q,
             &[(UNIT_FILE, 0, 0)],
             native_factory(HashAlgorithm::Md5),
+            Shard::disabled(),
             |u, o, l, d| out.push((u, o, l, d)),
         );
         assert_eq!(out.len(), 1);
@@ -1185,9 +1256,13 @@ mod tests {
         q.close();
         let mut out = Vec::new();
         let units = [(UNIT_FILE, 0, 100)];
-        queue_hash_units(q, &units, native_factory(HashAlgorithm::Md5), |u, o, l, d| {
-            out.push((u, o, l, d))
-        });
+        queue_hash_units(
+            q,
+            &units,
+            native_factory(HashAlgorithm::Md5),
+            Shard::disabled(),
+            |u, o, l, d| out.push((u, o, l, d)),
+        );
         assert_eq!(out.len(), 1, "partial unit must still emit (fail-closed)");
     }
 

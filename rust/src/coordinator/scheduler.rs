@@ -213,6 +213,16 @@ impl EngineReport {
             // The sync counter is shared per storage: every session
             // snapshots the same value, so max (not sum) is the truth.
             total.storage_syncs = total.storage_syncs.max(r.storage_syncs);
+            total.direct_fallbacks = total.direct_fallbacks.max(r.direct_fallbacks);
+            total.trace_dropped = total.trace_dropped.max(r.trace_dropped);
+            // Observability stats merge the whole endpoint's recorder,
+            // so every session's snapshot is the same merged view: take
+            // the first non-empty one.
+            if total.stage_stats.is_empty() && !r.stage_stats.is_empty() {
+                total.stage_stats = r.stage_stats.clone();
+                total.bottleneck = r.bottleneck.clone();
+                total.bottleneck_confidence = r.bottleneck_confidence;
+            }
         }
         total
     }

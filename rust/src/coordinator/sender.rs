@@ -41,6 +41,7 @@ use super::receiver::{hash_range, queue_build_tree_fold, queue_hash_units};
 use super::{RealAlgorithm, SessionConfig, TransferReport};
 use crate::faults::{CrashError, CrashPoint, FaultInjector, FaultPlan};
 use crate::merkle::MerkleTree;
+use crate::obs::{Shard, Stage};
 use crate::storage::Storage;
 
 /// Shared sender state between the session thread, hash jobs and the
@@ -262,6 +263,11 @@ pub struct SenderSession {
     journal: Option<Journal>,
     /// Shared engine kill switch (crash injection).
     crash: Option<CrashPoint>,
+    /// Session-thread span shard (read/send/queue_wait/journal stages).
+    obs: Shard,
+    /// Checksum-station shard, cloned into hash pool jobs and the
+    /// re-read checksum worker (hash stage).
+    obs_hash: Shard,
     report: TransferReport,
     start: Instant,
     verify: bool,
@@ -294,6 +300,8 @@ impl SenderSession {
         let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
         let journal = cfg.open_journal()?;
         let ctrl_shutdown = ctrl.try_clone().ok();
+        let obs = cfg.obs.shard("sender");
+        let obs_hash = cfg.obs.shard("sender-hash");
 
         // Verifier thread (owns ctrl). Repair Fix frames ride stripe 0.
         // On error it fails the shared state so pacing/finish waiters
@@ -329,9 +337,12 @@ impl SenderSession {
             let shared2 = shared.clone();
             let storage2 = storage.clone();
             let hasher = cfg.hasher.clone();
+            let hobs = obs_hash.clone();
             let handle = std::thread::spawn(move || -> Result<()> {
                 while let Ok((file_idx, name, unit, offset, len)) = rx.recv() {
+                    let t = hobs.start();
                     let digest = hash_range(&storage2, &name, offset, len, &hasher)?;
+                    hobs.record(Stage::Hash, t);
                     shared2.put_local(file_idx, unit, digest);
                 }
                 Ok(())
@@ -362,6 +373,8 @@ impl SenderSession {
             data_shutdown,
             resume,
             journal,
+            obs,
+            obs_hash,
             report,
             start: Instant::now(),
             verify,
@@ -423,14 +436,17 @@ impl SenderSession {
                 };
                 let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = self.cfg.leaf_size;
+                let hobs = self.obs_hash.clone();
                 self.pool.submit(move || {
-                    let tree = queue_build_tree_fold(q2, leaf_size, size, prefix, hasher, fold);
+                    let tree =
+                        queue_build_tree_fold(q2, leaf_size, size, prefix, hasher, fold, hobs);
                     shared2.put_tree(file_idx, tree);
                 });
             } else {
                 let units2 = units.clone();
+                let hobs = self.obs_hash.clone();
                 self.pool.submit(move || {
-                    queue_hash_units(q2, &units2, hasher, |unit, _o, _l, digest| {
+                    queue_hash_units(q2, &units2, hasher, hobs, |unit, _o, _l, digest| {
                         shared2.put_local(file_idx, unit, digest);
                     });
                 });
@@ -481,8 +497,10 @@ impl SenderSession {
         }
         // Close the final (partial) journal leaf and make it durable.
         if let Some((mut fj, mut tracker)) = jrn.take() {
+            let t = self.obs.start();
             tracker.finish(|_, d| fj.push_leaf(&d));
             fj.checkpoint()?;
+            self.obs.record(Stage::Journal, t);
         }
         // Pacing per policy. (Resume savings are accounted engine-level
         // from the negotiated plan, not per session.)
@@ -543,20 +561,28 @@ impl SenderSession {
             // feeding checksum and journal (no XOR flip-back dance, and
             // mmap views stay untouched).
             let chunk: SharedBuf = if self.injector.will_corrupt(want) {
+                let t = self.obs.start();
                 let mut wire = self.bufs.get_or_alloc(POOL_GRACE);
                 let n = reader.read_at(offset, &mut wire[..want])?;
                 anyhow::ensure!(n > 0, "short read of {name} at {offset}");
                 let flips = self.injector.corrupt(&mut wire[..n]);
+                self.obs.record(Stage::Read, t);
+                let t = self.obs.start();
                 self.data_outs[lane].send_data(file_idx, offset, &wire[..n])?;
+                self.obs.record(Stage::Send, t);
                 for &(pos, bit) in &flips {
                     wire[pos] ^= 1 << bit;
                 }
                 wire.freeze(n)
             } else {
+                let t = self.obs.start();
                 let chunk = reader.read_shared(offset, want, &self.bufs)?;
                 anyhow::ensure!(!chunk.is_empty(), "short read of {name} at {offset}");
+                self.obs.record(Stage::Read, t);
                 self.injector.advance(chunk.len());
+                let t = self.obs.start();
                 self.data_outs[lane].send_data(file_idx, offset, &chunk)?;
+                self.obs.record(Stage::Send, t);
                 chunk
             };
             let n = chunk.len();
@@ -567,15 +593,21 @@ impl SenderSession {
             // checkpoint_leaves of them fsync (source is read-only, so no
             // data sync is needed on this side).
             if let Some((fj, tracker)) = jrn.as_mut() {
+                let t = self.obs.start();
                 tracker.update(&chunk, |_, d| fj.push_leaf(&d));
                 if fj.pending_leaves() >= self.cfg.journal_checkpoint_leaves.max(1) {
                     fj.checkpoint()?;
                 }
+                self.obs.record(Stage::Journal, t);
             }
             self.report.bytes_sent += n as u64;
+            self.obs.add_bytes(n as u64);
             offset += n as u64;
             if let Some(q) = queue {
+                let t = self.obs.start();
                 q.add(chunk);
+                self.obs.record(Stage::QueueWait, t);
+                self.obs.gauge_depth(q.len_bytes() as u64);
             }
             // Re-read-mode: emit checksum jobs for completed units
             // (block-level overlap within the file).
@@ -628,6 +660,17 @@ impl SenderSession {
         self.report.pool_grow_events = self.bufs.grow_events();
         self.report.io_backend = self.storage.backend_name().to_string();
         self.report.storage_syncs = self.storage.sync_count();
+        self.report.direct_fallbacks = self.storage.direct_fallbacks();
+        if self.cfg.obs.is_enabled() {
+            // Endpoint-wide snapshot: every session of this endpoint
+            // reports the same merged view (the aggregator takes the
+            // first non-empty one, mirroring `storage_syncs`).
+            let o = self.cfg.obs.report();
+            self.report.stage_stats = o.stages;
+            self.report.bottleneck = o.bottleneck;
+            self.report.bottleneck_confidence = o.confidence;
+            self.report.trace_dropped = o.dropped_events;
+        }
         self.report.elapsed_secs = self.start.elapsed().as_secs_f64();
         Ok(std::mem::take(&mut self.report))
         // data_outs drop here: BufWriters flush (already flushed above)
@@ -709,6 +752,7 @@ fn run_verifier(
 ) -> Result<()> {
     let mut ctrl_in = BufReader::new(ctrl.try_clone().context("ctrl clone")?);
     let mut ctrl_out = BufWriter::new(ctrl);
+    let obs = cfg.obs.shard("sender-verify");
     // Repair rounds per (file, unit): round n's re-sent bytes count as
     // occurrence n for the fault plan (corruption strikes re-transfers too).
     let mut attempts: HashMap<(u32, u64), u32> = HashMap::new();
@@ -727,11 +771,13 @@ fn run_verifier(
         };
         match frame {
             Frame::Digest { file_idx, unit, digest } => {
+                let t = obs.start();
                 let local = shared.take_local(file_idx, unit)?;
                 shared.verify_rtts.fetch_add(1, Ordering::SeqCst);
                 let ok = local == digest;
                 Frame::Verdict { file_idx, unit, ok }.write_to(&mut ctrl_out)?;
                 ctrl_out.flush()?;
+                obs.record(Stage::Verify, t);
                 if ok {
                     shared.unit_ok(file_idx);
                     continue;
@@ -745,17 +791,20 @@ fn run_verifier(
                 let name = &names[file_idx as usize];
                 let size = storage.size_of(name)?;
                 let (offset, len) = unit_range(cfg, unit, size);
+                let t = obs.start();
                 send_repair_range(
                     &storage, &data_out, &shared, faults, cfg, file_idx, name, offset, len,
                     attempt, bufs,
                 )?;
                 data_out.send(&Frame::FixEnd { file_idx, unit })?;
                 data_out.flush()?;
+                obs.record(Stage::Repair, t);
                 shared.repair_rounds.fetch_add(1, Ordering::SeqCst);
                 // The receiver recomputes and sends a fresh Digest; handled
                 // on the next loop iteration.
             }
             Frame::TreeRoot { file_idx, leaves, leaf_size, digest } => {
+                let t = obs.start();
                 let tree = shared.wait_tree(file_idx)?;
                 // Geometry disagreements (leaf size or leaf count) are
                 // configuration/protocol errors, not wire corruption: leaf
@@ -779,6 +828,7 @@ fn run_verifier(
                 Frame::Verdict { file_idx, unit: super::protocol::UNIT_FILE, ok }
                     .write_to(&mut ctrl_out)?;
                 ctrl_out.flush()?;
+                obs.record(Stage::Verify, t);
                 if ok {
                     shared.unit_ok(file_idx);
                     shared.drop_tree(file_idx);
@@ -788,6 +838,7 @@ fn run_verifier(
                 let attempt = bump_attempt(&mut attempts, file_idx, super::protocol::UNIT_FILE);
                 // Binary-search the mismatch down the tree — O(log n)
                 // node-range round trips — then re-send only bad leaves.
+                let t = obs.start();
                 let bad_leaves: Vec<usize> =
                     descend_tree(&mut ctrl_in, &mut ctrl_out, &shared, &tree, file_idx)?;
                 anyhow::ensure!(
@@ -814,6 +865,7 @@ fn run_verifier(
                 }
                 data_out.send(&Frame::FixEnd { file_idx, unit: super::protocol::UNIT_FILE })?;
                 data_out.flush()?;
+                obs.record(Stage::Repair, t);
                 shared.repair_rounds.fetch_add(1, Ordering::SeqCst);
                 Frame::TreeRepairSent {
                     file_idx,

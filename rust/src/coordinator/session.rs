@@ -223,11 +223,15 @@ pub fn connect_and_send_engine(
     // Shared sender-side buffer pool: every session's reads recycle
     // through it, and hash jobs return buffers as they drain the queues.
     let bufs = cfg.make_pool(n);
+    // Scheduler shard: one queue-depth observation per dispatched work
+    // item, shared by every session's steal loop.
+    let sched_obs = cfg.obs.shard("scheduler");
     let start = Instant::now();
 
     let mut handles = Vec::new();
     for sid in 0..n {
         let queue = queue.clone();
+        let sched_obs = sched_obs.clone();
         let names = names.clone();
         let storage = storage.clone();
         let cfg = cfg.clone();
@@ -266,6 +270,7 @@ pub fn connect_and_send_engine(
                 plan,
             )?;
             while let Some(item) = queue.next(sid) {
+                sched_obs.gauge_depth(queue.remaining() as u64);
                 for &fi in &item.files {
                     session.send_file(fi as u32, &names[fi])?;
                 }

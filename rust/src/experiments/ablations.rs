@@ -34,7 +34,7 @@ pub fn ablation_block_size() -> String {
         let params = AlgoParams { block_size: bs, ..AlgoParams::default() };
         let u = run(tb, params, &uniform, &FaultPlan::none(), Algorithm::BlockLevelPpl);
         let s = run(tb, params, &sorted, &FaultPlan::none(), Algorithm::BlockLevelPpl);
-        t.row(&[bytes(bs), pct(u.overhead()), pct(s.overhead())]);
+        t.row(&[bytes(bs), pct(u.overhead().unwrap()), pct(s.overhead().unwrap())]);
     }
     out.push_str(&t.render());
     out
@@ -160,12 +160,9 @@ mod tests {
             &FaultPlan::none(),
             Algorithm::BlockLevelPpl,
         );
-        assert!(
-            small.overhead() > paper_pick.overhead(),
-            "16M {} should exceed 256M {}",
-            small.overhead(),
-            paper_pick.overhead()
-        );
+        let so = small.overhead().unwrap();
+        let po = paper_pick.overhead().unwrap();
+        assert!(so > po, "16M {so} should exceed 256M {po}");
     }
 
     /// §IV-A claim: chunk size barely affects fault-free time, but repair

@@ -57,7 +57,7 @@ pub fn concurrency_sweep() -> String {
                 n.to_string(),
                 fmt::secs(s.total_time),
                 format!("{:.2}x", base_time / s.total_time),
-                format!("{:+.1}%", s.overhead() * 100.0),
+                format!("{:+.1}%", s.overhead().unwrap() * 100.0),
                 fmt::pct(min_util),
             ]);
         }

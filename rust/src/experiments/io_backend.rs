@@ -53,7 +53,7 @@ fn sim_sweep() -> String {
                     ds.name.clone(),
                     n.to_string(),
                     fmt::secs(s.total_time),
-                    format!("{:+.1}%", s.overhead() * 100.0),
+                    format!("{:+.1}%", s.overhead().unwrap() * 100.0),
                 ]);
             }
         }
@@ -85,7 +85,7 @@ fn hybrid_read_back() -> String {
                 backend.name().to_string(),
                 fmt::secs(s.total_time),
                 fmt::pct(s.dst_trace.average()),
-                format!("{:+.1}%", s.overhead() * 100.0),
+                format!("{:+.1}%", s.overhead().unwrap() * 100.0),
             ]);
         }
     }

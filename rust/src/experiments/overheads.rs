@@ -69,7 +69,7 @@ fn subfigure(tb: Testbed, datasets: &[Dataset], caption: &str) -> String {
                 secs(s.total_time),
                 secs(s.t_transfer_only),
                 secs(s.t_checksum_only),
-                pct(s.overhead()),
+                pct(s.overhead().expect("sim runs carry Eq. 1 baselines")),
             ]);
         }
     }
@@ -93,12 +93,12 @@ mod tests {
         let tb = Testbed::hpclab_1g();
         let small = Dataset::uniform("10M", 10 * MB, 50);
         for alg in FIGURE_ALGS {
-            let o = overhead_of(tb, &small, alg).overhead();
+            let o = overhead_of(tb, &small, alg).overhead().unwrap();
             assert!(o < 0.40, "{}: small-file overhead {o}", alg.name());
         }
         let large = Dataset::uniform("10G", 10 * GB, 1);
-        let file = overhead_of(tb, &large, Algorithm::FileLevelPpl).overhead();
-        let fiver = overhead_of(tb, &large, Algorithm::Fiver).overhead();
+        let file = overhead_of(tb, &large, Algorithm::FileLevelPpl).overhead().unwrap();
+        let fiver = overhead_of(tb, &large, Algorithm::Fiver).overhead().unwrap();
         assert!(file > 0.15, "file-level on one large file: {file}");
         assert!(fiver < 0.05, "FIVER on one large file: {fiver}");
     }
@@ -108,8 +108,8 @@ mod tests {
     fn fig5_shape() {
         let tb = Testbed::hpclab_40g();
         let ds = Dataset::uniform("1G", GB, 10);
-        let block = overhead_of(tb, &ds, Algorithm::BlockLevelPpl).overhead();
-        let fiver = overhead_of(tb, &ds, Algorithm::Fiver).overhead();
+        let block = overhead_of(tb, &ds, Algorithm::BlockLevelPpl).overhead().unwrap();
+        let fiver = overhead_of(tb, &ds, Algorithm::Fiver).overhead().unwrap();
         assert!(fiver < 0.10, "FIVER {fiver}");
         assert!(block > fiver, "block {block} > fiver {fiver}");
         assert!((0.05..0.35).contains(&block), "block {block}");
@@ -120,11 +120,16 @@ mod tests {
     #[test]
     fn sorted_vs_shuffled_and_wan_amplification() {
         let sorted = Dataset::sorted_5m250m(30);
-        let lan = overhead_of(Testbed::esnet_lan(), &sorted, Algorithm::BlockLevelPpl).overhead();
-        let wan = overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::BlockLevelPpl).overhead();
+        let lan = overhead_of(Testbed::esnet_lan(), &sorted, Algorithm::BlockLevelPpl)
+            .overhead()
+            .unwrap();
+        let wan = overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::BlockLevelPpl)
+            .overhead()
+            .unwrap();
         assert!(lan > 0.20, "LAN sorted block-level {lan}");
         assert!(wan > lan, "WAN {wan} should exceed LAN {lan}");
-        let fiver_wan = overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::Fiver).overhead();
+        let fiver_wan =
+            overhead_of(Testbed::esnet_wan(), &sorted, Algorithm::Fiver).overhead().unwrap();
         assert!(fiver_wan < 0.10, "FIVER sorted WAN {fiver_wan}");
     }
 

@@ -53,6 +53,19 @@
 //!   O(file)). Both real mode and the sim implement the same policy, so
 //!   Table III replays at 100 Gbps scale with repair-cost telemetry
 //!   (`repair_rounds`, `bytes_reread`, `verify_rtts`).
+//! * **Observability plane** ([`obs`]) — always-on, allocation-free-in-
+//!   steady-state tracing threaded through every layer above: per-stage
+//!   spans (`read`/`hash`/`queue_wait`/`send`/`recv`/`write`/`verify`/
+//!   `journal`/`repair`) recorded into pre-allocated per-worker ring
+//!   buffers, sharded log2 latency + queue-depth histograms merged into
+//!   p50/p95/p99 report fields, per-stage busy-time **bottleneck
+//!   attribution** (`hash-bound` / `read-bound` / `write-bound` /
+//!   `net-bound`, mirrored by the sim so labels are checkable against
+//!   reality), Chrome/Perfetto `trace_event` export (`--trace-out`),
+//!   merged-histogram JSON (`--metrics-json`) and a live throughput +
+//!   pool-occupancy line (`--progress`). Enabled by `FIVER_TRACE=1` or
+//!   any of those flags; the `alloc_regression.rs` gate runs tracing-on
+//!   (DESIGN.md "Observability & tracing").
 //! * **Layer 2/1 (build-time Python)** — the FVR-256 digest pipeline
 //!   (JAX graph + Pallas block-hash kernel), AOT-lowered to HLO text which
 //!   [`runtime`] loads and executes through the XLA PJRT CPU client.
@@ -74,6 +87,7 @@ pub mod hashes;
 pub mod merkle;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod storage;

@@ -69,6 +69,19 @@
 //! * `local` only: `--crash-after BYTES` — kill the engine mid-transfer
 //!   after ~BYTES streamed, then restart it against the journals and
 //!   report what the resume saved (a self-contained recovery demo).
+//!
+//! Observability (see `fiver::obs`; any of these — or `FIVER_TRACE=1` —
+//! turns the allocation-free tracing plane on, and per-stage
+//! p50/p95/p99 latencies plus a bottleneck label join the report):
+//!
+//! * `--trace-out FILE` — write the per-stage span timeline as
+//!   Chrome/Perfetto `trace_event` JSON (one track per session / hash
+//!   worker; open at <https://ui.perfetto.dev>).
+//! * `--metrics-json FILE` — dump the merged per-stage log2 latency and
+//!   queue-depth histograms (sparse `[bucket, count]` pairs) plus the
+//!   bottleneck attribution as JSON.
+//! * `--progress` — render a live per-second throughput sparkline and
+//!   buffer-pool occupancy line to stderr while the transfer runs.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -129,6 +142,15 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     };
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
+    // Any observability flag turns the tracing plane on (FIVER_TRACE=1
+    // already did via SessionConfig::new).
+    if !cfg.obs.is_enabled()
+        && (args.opt("trace-out").is_some()
+            || args.opt("metrics-json").is_some()
+            || args.flag("progress"))
+    {
+        cfg.obs = fiver::obs::Recorder::enabled();
+    }
     anyhow::ensure!(cfg.leaf_size > 0, "--leaf-size must be positive");
     anyhow::ensure!(cfg.buf_size > 0, "--buffer-size must be positive");
     anyhow::ensure!(
@@ -175,12 +197,47 @@ fn warn_unused_engine_flags(args: &Args) {
     }
 }
 
+/// Start the live `--progress` line when asked (the recorder was already
+/// enabled by `session_config` in that case).
+fn start_progress(args: &Args, cfg: &SessionConfig) -> Option<fiver::obs::Progress> {
+    if args.flag("progress") {
+        Some(fiver::obs::Progress::start(cfg.obs.clone()))
+    } else {
+        None
+    }
+}
+
+/// Stop the progress line and write the `--trace-out` / `--metrics-json`
+/// exports after a run.
+fn finish_obs(
+    args: &Args,
+    cfg: &SessionConfig,
+    progress: Option<fiver::obs::Progress>,
+) -> Result<()> {
+    if let Some(p) = progress {
+        p.finish();
+    }
+    if let Some(path) = args.opt("trace-out") {
+        cfg.obs
+            .write_chrome_trace_to(Path::new(path))
+            .with_context(|| format!("writing trace to {path}"))?;
+        eprintln!("trace written: {path}");
+    }
+    if let Some(path) = args.opt("metrics-json") {
+        std::fs::write(path, cfg.obs.metrics_json())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        eprintln!("metrics written: {path}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
         "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "pool-max-buffers",
         "io-backend", "files", "size", "faults", "seed", "concurrency", "parallel",
         "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
+        "trace-out", "metrics-json",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -250,7 +307,10 @@ fn serve(args: &Args) -> Result<()> {
         report.units_failed,
         fmt::bytes(report.bytes_repaired),
     );
-    Ok(())
+    if report.direct_fallbacks > 0 {
+        println!("data plane: {} direct-I/O fallbacks", report.direct_fallbacks);
+    }
+    finish_obs(args, &cfg, None)
 }
 
 fn send(args: &Args) -> Result<()> {
@@ -263,6 +323,7 @@ fn send(args: &Args) -> Result<()> {
     anyhow::ensure!(!files.is_empty(), "no files given");
     let data_addr = args.opt_or("data", "127.0.0.1:7001");
     let ctrl_addr = args.opt_or("ctrl", "127.0.0.1:7002");
+    let progress = start_progress(args, &cfg);
     if uses_engine(&eng, &cfg) {
         let engine_report = connect_and_send_engine(
             data_addr,
@@ -280,7 +341,7 @@ fn send(args: &Args) -> Result<()> {
             connect_and_send(data_addr, ctrl_addr, &files, storage, &cfg, &FaultPlan::none())?;
         print_report(&report);
     }
-    Ok(())
+    finish_obs(args, &cfg, progress)
 }
 
 fn local(args: &Args) -> Result<()> {
@@ -306,6 +367,9 @@ fn local(args: &Args) -> Result<()> {
         Arc::new(FsStorage::with_backend(&base.join("dst"), cfg.io_backend)?);
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
     let mut faults = FaultPlan::random(&ds, fault_count, seed);
+    // Both endpoints share `cfg`'s recorder (clones share the Arc), so the
+    // exports and the report's bottleneck label cover the whole pipeline.
+    let progress = start_progress(args, &cfg);
     let crash_after = args.opt_u64("crash-after", 0);
     if crash_after > 0 {
         // Crash-recovery demo: kill mid-transfer, restart against the
@@ -350,7 +414,7 @@ fn local(args: &Args) -> Result<()> {
             &FaultPlan::none(),
         )?;
         print_engine_report(&engine_report);
-        return Ok(());
+        return finish_obs(args, &cfg, progress);
     }
     if cfg.journal_dir.is_some() {
         // `local` runs both endpoints in one process: a single journal
@@ -373,7 +437,7 @@ fn local(args: &Args) -> Result<()> {
                 fmt::bytes(r.bytes_repaired)
             );
         }
-        return Ok(());
+        return finish_obs(args, &cfg, progress);
     }
     if uses_engine(&eng, &cfg) || engine_only_flags_given(args) {
         let (engine_report, rreports) =
@@ -397,7 +461,7 @@ fn local(args: &Args) -> Result<()> {
             fmt::bytes(r.bytes_repaired)
         );
     }
-    Ok(())
+    finish_obs(args, &cfg, progress)
 }
 
 fn hash_cmd(args: &Args) -> Result<()> {
@@ -449,8 +513,34 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
         let backend = if r.io_backend.is_empty() { "?" } else { &r.io_backend };
         println!(
             "data plane: backend={backend}, {} pooled buffers peak in flight, \
-             {} fallback allocs, {} pool grows, {} storage syncs",
-            r.pool_peak_in_flight, r.pool_fallback_allocs, r.pool_grow_events, r.storage_syncs,
+             {} fallback allocs, {} pool grows, {} storage syncs, {} direct fallbacks",
+            r.pool_peak_in_flight,
+            r.pool_fallback_allocs,
+            r.pool_grow_events,
+            r.storage_syncs,
+            r.direct_fallbacks,
+        );
+    }
+    for s in &r.stage_stats {
+        println!(
+            "stage {:<10} {:>9} spans, busy {:>9}, p50 {:>7}µs, p95 {:>7}µs, p99 {:>7}µs",
+            s.stage,
+            s.count,
+            fmt::secs(s.busy_secs),
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+        );
+    }
+    if !r.bottleneck.is_empty() {
+        let dropped = if r.trace_dropped > 0 {
+            format!(", {} trace events dropped", r.trace_dropped)
+        } else {
+            String::new()
+        };
+        println!(
+            "bottleneck: {} (confidence {:.1}x{dropped})",
+            r.bottleneck, r.bottleneck_confidence,
         );
     }
     if r.files_skipped > 0 || r.bytes_skipped > 0 {

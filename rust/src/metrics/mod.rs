@@ -5,10 +5,20 @@
 /// `overhead = (t_algorithm - max(t_chksum, t_transfer)) / max(t_chksum, t_transfer)`.
 ///
 /// Example from §IV: transfer 90 s, checksum 120 s, FIVER 130 s → 8.3 %.
+/// Panics when both baselines are zero; prefer [`overhead_checked`] where
+/// zero baselines are possible (real runs don't measure them).
 pub fn overhead(t_algorithm: f64, t_chksum: f64, t_transfer: f64) -> f64 {
+    overhead_checked(t_algorithm, t_chksum, t_transfer)
+        .expect("baseline must be positive")
+}
+
+/// Checked Eq. 1: `None` when the baseline `max(t_chksum, t_transfer)`
+/// is not positive — real-run summaries carry zero baselines (a single
+/// real run can't measure the transfer-only / checksum-only legs), and
+/// asking for their overhead should degrade, not abort.
+pub fn overhead_checked(t_algorithm: f64, t_chksum: f64, t_transfer: f64) -> Option<f64> {
     let base = t_chksum.max(t_transfer);
-    assert!(base > 0.0, "baseline must be positive");
-    (t_algorithm - base) / base
+    (base > 0.0).then(|| (t_algorithm - base) / base)
 }
 
 /// A time-bucketed hit-ratio trace (receiver side unless noted), matching
@@ -190,6 +200,21 @@ pub struct RunSummary {
     pub io_backend: String,
     /// Storage sync calls (real runs; the sim does not model fsync).
     pub storage_syncs: u64,
+    /// O_DIRECT per-op fallbacks to buffered I/O (real runs with the
+    /// direct backend; 0 elsewhere).
+    pub direct_fallbacks: u64,
+    /// Per-stage busy time + latency percentiles from the observability
+    /// plane. Real runs fill counts and p50/p95/p99 from the merged
+    /// shard histograms; sim runs fill the four bottleneck groups'
+    /// `busy_secs` from the fluid model's resource utilization. Empty
+    /// when tracing is disabled.
+    pub stage_stats: Vec<crate::obs::StageStats>,
+    /// Bottleneck label from per-stage busy-time decomposition
+    /// (`hash-bound` / `read-bound` / `write-bound` / `net-bound`;
+    /// empty when unknown).
+    pub bottleneck: String,
+    /// Busiest stage group over the runner-up (>= 1; capped at 999).
+    pub bottleneck_confidence: f64,
     /// Concurrent sessions used (1 for the serial drivers).
     pub concurrency: usize,
     /// Per-session accounting (empty for the serial drivers).
@@ -197,15 +222,18 @@ pub struct RunSummary {
 }
 
 impl RunSummary {
-    pub fn overhead(&self) -> f64 {
-        overhead(self.total_time, self.t_checksum_only, self.t_transfer_only)
+    /// Checked Eq. 1 overhead: `None` when the baselines are unknown
+    /// (real runs leave them at 0 — see [`RunSummary::from_real`]).
+    pub fn overhead(&self) -> Option<f64> {
+        overhead_checked(self.total_time, self.t_checksum_only, self.t_transfer_only)
     }
 
     /// Mirror a real engine run's aggregate report into a summary
-    /// (wall-clock, repair and data-plane pool telemetry), so real and
-    /// simulated runs render through the same reporting surface. The
-    /// Eq. 1 baselines are not measurable from a single real run and
-    /// stay 0 (don't call [`RunSummary::overhead`] on these).
+    /// (wall-clock, repair, data-plane pool and observability
+    /// telemetry), so real and simulated runs render through the same
+    /// reporting surface. The Eq. 1 baselines are not measurable from a
+    /// single real run and stay 0 — [`RunSummary::overhead`] returns
+    /// `None` on these.
     pub fn from_real(
         report: &crate::coordinator::TransferReport,
         concurrency: usize,
@@ -223,6 +251,10 @@ impl RunSummary {
             pool_grow_events: report.pool_grow_events,
             io_backend: report.io_backend.clone(),
             storage_syncs: report.storage_syncs,
+            direct_fallbacks: report.direct_fallbacks,
+            stage_stats: report.stage_stats.clone(),
+            bottleneck: report.bottleneck.clone(),
+            bottleneck_confidence: report.bottleneck_confidence,
             concurrency,
             ..Default::default()
         }
@@ -238,6 +270,16 @@ mod tests {
         // §IV: transfer 90 s, checksum 120 s, algorithm 130 s -> 8.3 %.
         let o = overhead(130.0, 120.0, 90.0);
         assert!((o - 0.0833).abs() < 1e-3, "{o}");
+    }
+
+    #[test]
+    fn eq1_checked_degrades_on_zero_baselines() {
+        assert_eq!(overhead_checked(130.0, 0.0, 0.0), None);
+        let o = overhead_checked(130.0, 120.0, 90.0).unwrap();
+        assert!((o - 0.0833).abs() < 1e-3, "{o}");
+        // A real-run summary (zero baselines) must degrade, not abort.
+        let real = RunSummary { total_time: 1.5, ..Default::default() };
+        assert_eq!(real.overhead(), None);
     }
 
     #[test]

@@ -1,0 +1,880 @@
+//! The observability plane: always-on, allocation-free-in-steady-state
+//! tracing and metrics for the real engine and the sim testbed.
+//!
+//! The paper's entire argument is a *timing* claim — FIVER wins because
+//! checksum and transfer overlap (Eq. 1) — but end-of-run aggregates
+//! (`TransferReport`) can't show *where* a run's time went: hash pool,
+//! `ByteQueue`, socket, or storage. This module records that signal
+//! without perturbing it:
+//!
+//! * A [`Recorder`] is created per endpoint (enabled by `FIVER_TRACE=1`
+//!   or the `--trace-out`/`--metrics-json`/`--progress` flags, disabled
+//!   otherwise at near-zero cost) and handed out as cheap [`Shard`]
+//!   handles, one per session / hash worker / role — the "per-thread"
+//!   in the design. All allocation happens at shard creation (the span
+//!   ring is pre-allocated); the record path is atomics plus a
+//!   `try_lock` ring push and never allocates or blocks.
+//! * Every stage of the pipeline gets [`Stage`] spans and fixed-bucket
+//!   log2 latency histograms ([`Hist`]), sharded per worker and merged
+//!   at report time into p50/p95/p99 percentiles per stage.
+//! * Per-stage cumulative busy time feeds [`attribute`] — the per-stage
+//!   analogue of Eq. 1's `max(t_chksum, t_transfer)` — labeling a run
+//!   `hash-bound` / `read-bound` / `write-bound` / `net-bound` with a
+//!   confidence ratio (busiest group over the runner-up).
+//! * Spans export as Chrome/Perfetto `trace_event` JSON
+//!   ([`Recorder::write_chrome_trace`], one track per shard), merged
+//!   histograms as JSON ([`Recorder::metrics_json`]), and a live
+//!   throughput + pool-occupancy line renders via [`Progress`].
+//!
+//! Why recording must never block: hash jobs run on the shared FIFO
+//! [`crate::coordinator::pool::HashPool`], whose deadlock-freedom
+//! argument requires every submitted job to make progress. A recorder
+//! that blocked a hash job on a contended lock would couple the hash
+//! pool to the observer. So the ring push is `try_lock`: a contended
+//! record is *dropped and counted* ([`Recorder::dropped`]) instead of
+//! waited for, and the histogram/busy-time path is purely atomic.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::HitTrace;
+
+/// Pipeline stages a span can belong to. The indices are stable (used
+/// as array offsets in shards and reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Source storage read (any backend).
+    Read,
+    /// Checksum compute (hash pool job, per drained buffer).
+    Hash,
+    /// Blocked inserting into the fixed-size `ByteQueue` (backpressure
+    /// from a slow checksum consumer) or draining spill into it.
+    QueueWait,
+    /// Socket write of a data/fix frame (includes blocking on the
+    /// kernel buffer — a throttled link surfaces here).
+    Send,
+    /// Socket read of a frame on the receiver.
+    Recv,
+    /// Destination storage write (any backend).
+    Write,
+    /// Digest/root exchange and verdict handling.
+    Verify,
+    /// Checkpoint-journal feeding and sync.
+    Journal,
+    /// Re-read + Fix retransmission of a failed unit.
+    Repair,
+}
+
+impl Stage {
+    pub const COUNT: usize = 9;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Read,
+        Stage::Hash,
+        Stage::QueueWait,
+        Stage::Send,
+        Stage::Recv,
+        Stage::Write,
+        Stage::Verify,
+        Stage::Journal,
+        Stage::Repair,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Read => "read",
+            Stage::Hash => "hash",
+            Stage::QueueWait => "queue_wait",
+            Stage::Send => "send",
+            Stage::Recv => "recv",
+            Stage::Write => "write",
+            Stage::Verify => "verify",
+            Stage::Journal => "journal",
+            Stage::Repair => "repair",
+        }
+    }
+
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// One completed span: stage, start offset from the recorder epoch, and
+/// duration, both in nanoseconds (virtual nanoseconds in the sim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub stage: Stage,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Fixed-capacity wrapping span ring. The buffer is pre-allocated at
+/// shard creation; once full, new events overwrite the oldest, so the
+/// steady state never allocates.
+struct SpanRing {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    /// Overwrite cursor, meaningful once `buf.len() == cap`: points at
+    /// the oldest event.
+    next: usize,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> SpanRing {
+        SpanRing { buf: Vec::with_capacity(cap.max(1)), cap: cap.max(1), next: 0 }
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Oldest-first snapshot.
+    fn snapshot(&self) -> Vec<SpanEvent> {
+        if self.buf.len() < self.cap {
+            return self.buf.clone();
+        }
+        let mut out = Vec::with_capacity(self.cap);
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+}
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `b >= 1`
+/// holds values in `[2^(b-1), 2^b)`; values past bucket 62 clamp into
+/// the last bucket.
+pub const HIST_BUCKETS: usize = 64;
+
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Representative value of a bucket (geometric-ish midpoint), used when
+/// reading percentiles back out of the log2 grid.
+fn bucket_value(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        let lo = 1u64 << (b - 1);
+        lo + lo / 2
+    }
+}
+
+/// A fixed-bucket log2 histogram with atomic counters — concurrent
+/// `record` from any thread, no locks, no allocation.
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for (i, b) in self.buckets.iter().enumerate() {
+            s.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        s.sum = self.sum.load(Ordering::Relaxed);
+        s
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+/// An owned, mergeable histogram snapshot — the report-time currency.
+/// Merging shards is elementwise bucket addition, so N sharded
+/// histograms merged are bit-identical to one histogram that saw every
+/// sample (the shard-merge property test pins this).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: [0; HIST_BUCKETS], sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Value at percentile `p` (0..=100), as the representative value of
+    /// the bucket containing that rank. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(HIST_BUCKETS - 1)
+    }
+}
+
+/// Merged per-stage statistics, carried on `TransferReport` /
+/// `RunSummary` and printed on the CLI `data plane:` lines. Sim-side
+/// summaries fill only `stage` and `busy_secs` (the fluid model has no
+/// per-op latencies).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageStats {
+    pub stage: String,
+    /// Recorded spans for this stage (0 in the sim).
+    pub count: u64,
+    /// Cumulative busy seconds across all shards.
+    pub busy_secs: f64,
+    /// Latency percentiles in microseconds (0 in the sim).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Merged observability snapshot for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ObsReport {
+    /// Stages that recorded anything, in [`Stage::ALL`] order.
+    pub stages: Vec<StageStats>,
+    /// `hash-bound` / `read-bound` / `write-bound` / `net-bound`, or
+    /// empty when nothing was recorded.
+    pub bottleneck: String,
+    /// Busiest stage group over the runner-up (>= 1, capped at 999;
+    /// higher = more clear-cut).
+    pub confidence: f64,
+    /// Span events dropped because a recorder found its ring contended
+    /// (recording never blocks).
+    pub dropped_events: u64,
+}
+
+/// Per-stage busy-time decomposition: label the run by its busiest
+/// stage *group* — the per-stage analogue of Eq. 1's
+/// `max(t_chksum, t_transfer)`. `groups` maps a label stem ("hash") to
+/// cumulative busy seconds; returns `("hash-bound", confidence)` where
+/// confidence = busiest / runner-up (capped at 999.0), or `("", 0.0)`
+/// when nothing was busy.
+pub fn attribute(groups: &[(&str, f64)]) -> (String, f64) {
+    let mut best: Option<(usize, f64)> = None;
+    let mut second = 0.0f64;
+    for (i, &(_, v)) in groups.iter().enumerate() {
+        match best {
+            Some((_, bv)) if v <= bv => second = second.max(v),
+            _ => {
+                if let Some((_, bv)) = best {
+                    second = second.max(bv);
+                }
+                best = Some((i, v));
+            }
+        }
+    }
+    match best {
+        Some((i, v)) if v > 0.0 => {
+            let confidence =
+                if second > 0.0 { (v / second).min(999.0) } else { 999.0 };
+            (format!("{}-bound", groups[i].0), confidence)
+        }
+        _ => (String::new(), 0.0),
+    }
+}
+
+struct ShardInner {
+    label: String,
+    tid: u64,
+    epoch: Instant,
+    ring: Mutex<SpanRing>,
+    dropped: AtomicU64,
+    stage_busy_ns: [AtomicU64; Stage::COUNT],
+    stage_hist: [Hist; Stage::COUNT],
+    depth_hist: Hist,
+    bytes: AtomicU64,
+}
+
+/// A per-worker recording handle. Cloning shares the shard; a disabled
+/// shard (from a disabled [`Recorder`]) no-ops at the cost of one
+/// `Option` check per call.
+#[derive(Clone)]
+pub struct Shard {
+    inner: Option<Arc<ShardInner>>,
+}
+
+impl Shard {
+    /// The always-no-op shard.
+    pub fn disabled() -> Shard {
+        Shard { inner: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Start a span: `None` (and no clock read) when disabled.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        self.inner.as_ref().map(|_| Instant::now())
+    }
+
+    /// Finish a span started with [`Shard::start`]. Never allocates,
+    /// never blocks: histogram/busy-time updates are atomic and the
+    /// ring push is `try_lock` (contended pushes are drop-counted).
+    #[inline]
+    pub fn record(&self, stage: Stage, t0: Option<Instant>) {
+        if let (Some(inner), Some(t0)) = (&self.inner, t0) {
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            let t0_ns = t0.saturating_duration_since(inner.epoch).as_nanos() as u64;
+            record_inner(inner, stage, t0_ns, dur_ns);
+        }
+    }
+
+    /// Record a span with explicit timestamps (the sim's virtual-time
+    /// path and tests).
+    pub fn record_ns(&self, stage: Stage, t0_ns: u64, dur_ns: u64) {
+        if let Some(inner) = &self.inner {
+            record_inner(inner, stage, t0_ns, dur_ns);
+        }
+    }
+
+    /// Record an instantaneous queue-depth observation.
+    #[inline]
+    pub fn gauge_depth(&self, depth: u64) {
+        if let Some(inner) = &self.inner {
+            inner.depth_hist.record(depth);
+        }
+    }
+
+    /// Account payload bytes moved (feeds the live progress view).
+    #[inline]
+    pub fn add_bytes(&self, n: u64) {
+        if let Some(inner) = &self.inner {
+            inner.bytes.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Oldest-first snapshot of the span ring.
+    pub fn spans(&self) -> Vec<SpanEvent> {
+        match &self.inner {
+            Some(inner) => inner.ring.lock().unwrap().snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
+    }
+}
+
+fn record_inner(inner: &ShardInner, stage: Stage, t0_ns: u64, dur_ns: u64) {
+    let i = stage.index();
+    inner.stage_busy_ns[i].fetch_add(dur_ns, Ordering::Relaxed);
+    inner.stage_hist[i].record(dur_ns);
+    match inner.ring.try_lock() {
+        Ok(mut ring) => ring.push(SpanEvent { stage, t0_ns, dur_ns }),
+        Err(_) => {
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Pool-occupancy gauge: `(in_flight, capacity)`.
+type PoolGauge = Box<dyn Fn() -> (usize, usize) + Send + Sync>;
+
+struct RecorderInner {
+    epoch: Instant,
+    ring_capacity: usize,
+    shards: Mutex<Vec<Arc<ShardInner>>>,
+    next_tid: AtomicU64,
+    gauges: Mutex<Vec<PoolGauge>>,
+}
+
+/// Default per-shard span-ring capacity. Spans past it wrap (oldest
+/// overwritten); histograms and busy time keep counting everything.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// The per-endpoint recorder: owns the shard registry and the report /
+/// export surface. Cloning shares the recorder (it rides along on
+/// `SessionConfig`). A disabled recorder hands out disabled shards and
+/// costs one `Option` check per recording call.
+#[derive(Clone)]
+pub struct Recorder {
+    inner: Option<Arc<RecorderInner>>,
+}
+
+impl Recorder {
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    pub fn enabled() -> Recorder {
+        Recorder::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// Enabled recorder with an explicit per-shard span-ring capacity.
+    pub fn with_capacity(ring_capacity: usize) -> Recorder {
+        Recorder {
+            inner: Some(Arc::new(RecorderInner {
+                epoch: Instant::now(),
+                ring_capacity: ring_capacity.max(1),
+                shards: Mutex::new(Vec::new()),
+                next_tid: AtomicU64::new(1),
+                gauges: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// Enabled when `FIVER_TRACE` is `1`/`true`, disabled otherwise.
+    pub fn from_env() -> Recorder {
+        match std::env::var("FIVER_TRACE") {
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => Recorder::enabled(),
+            _ => Recorder::disabled(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Create (and register) a shard for one worker/role. This is the
+    /// cold path: the span ring and label are allocated here, once per
+    /// session/worker/file — never per chunk.
+    pub fn shard(&self, label: &str) -> Shard {
+        let Some(inner) = &self.inner else { return Shard::disabled() };
+        let shard = Arc::new(ShardInner {
+            label: label.to_string(),
+            tid: inner.next_tid.fetch_add(1, Ordering::Relaxed),
+            epoch: inner.epoch,
+            ring: Mutex::new(SpanRing::new(inner.ring_capacity)),
+            dropped: AtomicU64::new(0),
+            stage_busy_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            stage_hist: std::array::from_fn(|_| Hist::new()),
+            depth_hist: Hist::new(),
+            bytes: AtomicU64::new(0),
+        });
+        inner.shards.lock().unwrap().push(shard.clone());
+        Shard { inner: Some(shard) }
+    }
+
+    /// Register a pool-occupancy gauge for the progress view.
+    pub fn register_pool_gauge(
+        &self,
+        gauge: impl Fn() -> (usize, usize) + Send + Sync + 'static,
+    ) {
+        if let Some(inner) = &self.inner {
+            inner.gauges.lock().unwrap().push(Box::new(gauge));
+        }
+    }
+
+    /// Summed pool occupancy across registered gauges.
+    pub fn pool_occupancy(&self) -> (usize, usize) {
+        let Some(inner) = &self.inner else { return (0, 0) };
+        let gauges = inner.gauges.lock().unwrap();
+        gauges.iter().fold((0, 0), |(fi, fc), g| {
+            let (i, c) = g();
+            (fi + i, fc + c)
+        })
+    }
+
+    /// Total payload bytes accounted across shards.
+    pub fn total_bytes(&self) -> u64 {
+        self.for_shards(0, |acc, s| acc + s.bytes.load(Ordering::Relaxed))
+    }
+
+    /// Span events dropped across shards (contended ring pushes).
+    pub fn dropped(&self) -> u64 {
+        self.for_shards(0, |acc, s| acc + s.dropped.load(Ordering::Relaxed))
+    }
+
+    fn for_shards<T>(&self, init: T, f: impl Fn(T, &ShardInner) -> T) -> T {
+        match &self.inner {
+            Some(inner) => inner.shards.lock().unwrap().iter().fold(init, |a, s| f(a, s)),
+            None => init,
+        }
+    }
+
+    /// Merged per-stage histogram snapshots, in [`Stage::ALL`] order.
+    fn merged_hists(&self) -> ([HistSnapshot; Stage::COUNT], [u64; Stage::COUNT], HistSnapshot) {
+        let mut hists: [HistSnapshot; Stage::COUNT] = Default::default();
+        let mut busy = [0u64; Stage::COUNT];
+        let mut depth = HistSnapshot::default();
+        if let Some(inner) = &self.inner {
+            for s in inner.shards.lock().unwrap().iter() {
+                for st in Stage::ALL {
+                    let i = st.index();
+                    hists[i].merge(&s.stage_hist[i].snapshot());
+                    busy[i] += s.stage_busy_ns[i].load(Ordering::Relaxed);
+                }
+                depth.merge(&s.depth_hist.snapshot());
+            }
+        }
+        (hists, busy, depth)
+    }
+
+    /// Merge every shard into per-stage stats + a bottleneck label.
+    pub fn report(&self) -> ObsReport {
+        if self.inner.is_none() {
+            return ObsReport::default();
+        }
+        let (hists, busy, _depth) = self.merged_hists();
+        let mut stages = Vec::new();
+        for st in Stage::ALL {
+            let i = st.index();
+            let count = hists[i].count();
+            if count == 0 && busy[i] == 0 {
+                continue;
+            }
+            stages.push(StageStats {
+                stage: st.name().to_string(),
+                count,
+                busy_secs: busy[i] as f64 / 1e9,
+                p50_us: hists[i].percentile(50.0) as f64 / 1e3,
+                p95_us: hists[i].percentile(95.0) as f64 / 1e3,
+                p99_us: hists[i].percentile(99.0) as f64 / 1e3,
+            });
+        }
+        let secs = |st: Stage| busy[st.index()] as f64 / 1e9;
+        // Group spans into the four bottleneck candidates: queue_wait is
+        // backpressure from a slow checksum consumer (hash), journal
+        // rides the destination write path; verify/repair are
+        // control-plane and excluded.
+        let groups = [
+            ("read", secs(Stage::Read)),
+            ("hash", secs(Stage::Hash) + secs(Stage::QueueWait)),
+            ("write", secs(Stage::Write) + secs(Stage::Journal)),
+            ("net", secs(Stage::Send) + secs(Stage::Recv)),
+        ];
+        let (bottleneck, confidence) = attribute(&groups);
+        ObsReport { stages, bottleneck, confidence, dropped_events: self.dropped() }
+    }
+
+    /// Write the span timeline as Chrome/Perfetto `trace_event` JSON:
+    /// one complete-event (`"ph":"X"`) per span, one track (tid) per
+    /// shard, thread names from the shard labels. Load the file at
+    /// `chrome://tracing` or <https://ui.perfetto.dev>.
+    pub fn write_chrome_trace<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(w, "{{\"traceEvents\":[")?;
+        let mut first = true;
+        if let Some(inner) = &self.inner {
+            let shards = inner.shards.lock().unwrap();
+            for s in shards.iter() {
+                if !first {
+                    write!(w, ",")?;
+                }
+                first = false;
+                write!(
+                    w,
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    s.tid,
+                    esc(&s.label)
+                )?;
+                for ev in s.ring.lock().unwrap().snapshot() {
+                    write!(
+                        w,
+                        ",{{\"name\":\"{}\",\"cat\":\"stage\",\"ph\":\"X\",\"pid\":1,\
+                         \"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
+                        ev.stage.name(),
+                        s.tid,
+                        ev.t0_ns as f64 / 1e3,
+                        ev.dur_ns as f64 / 1e3,
+                    )?;
+                }
+            }
+        }
+        write!(w, "]}}")
+    }
+
+    /// Write the Chrome trace to a file path.
+    pub fn write_chrome_trace_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_chrome_trace(&mut f)?;
+        std::io::Write::flush(&mut f)
+    }
+
+    /// Merged histograms + attribution as a JSON object.
+    pub fn metrics_json(&self) -> String {
+        let (hists, busy, depth) = self.merged_hists();
+        let rep = self.report();
+        let mut out = String::from("{\"stages\":[");
+        let mut first = true;
+        for st in Stage::ALL {
+            let i = st.index();
+            let count = hists[i].count();
+            if count == 0 && busy[i] == 0 {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"stage\":\"{}\",\"count\":{},\"busy_secs\":{:.6},\"sum_ns\":{},\
+                 \"p50_us\":{:.3},\"p95_us\":{:.3},\"p99_us\":{:.3},\"buckets\":{}}}",
+                st.name(),
+                count,
+                busy[i] as f64 / 1e9,
+                hists[i].sum,
+                hists[i].percentile(50.0) as f64 / 1e3,
+                hists[i].percentile(95.0) as f64 / 1e3,
+                hists[i].percentile(99.0) as f64 / 1e3,
+                json_buckets(&hists[i]),
+            ));
+        }
+        out.push_str(&format!(
+            "],\"queue_depth\":{{\"count\":{},\"buckets\":{}}},\
+             \"dropped\":{},\"bottleneck\":\"{}\",\"confidence\":{:.3}}}",
+            depth.count(),
+            json_buckets(&depth),
+            rep.dropped_events,
+            esc(&rep.bottleneck),
+            rep.confidence,
+        ));
+        out
+    }
+}
+
+fn json_buckets(h: &HistSnapshot) -> String {
+    // Sparse [bucket, count] pairs: 64 mostly-zero buckets per stage
+    // would dominate the dump.
+    let mut out = String::from("[");
+    let mut first = true;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!("[{i},{c}]"));
+    }
+    out.push(']');
+    out
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Live progress line: a background thread samples the recorder's byte
+/// counter ~4x/second and renders per-second throughput as a
+/// [`HitTrace`] sparkline plus current pool occupancy to stderr. Drop
+/// (or [`Progress::finish`]) stops it.
+pub struct Progress {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+const PROGRESS_TICK: Duration = Duration::from_millis(250);
+
+impl Progress {
+    pub fn start(rec: Recorder) -> Progress {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fiver-progress".into())
+            .spawn(move || {
+                let mut trace = HitTrace::new(1.0);
+                let mut last = rec.total_bytes();
+                let mut peak = 1u64;
+                let mut t = 0.0f64;
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(PROGRESS_TICK);
+                    let now = rec.total_bytes();
+                    let delta = now.saturating_sub(last);
+                    last = now;
+                    peak = peak.max(delta);
+                    // Throughput relative to the peak tick renders as the
+                    // hit ratio of the tick's bucket.
+                    trace.record(t, t, delta, peak.saturating_sub(delta));
+                    t += PROGRESS_TICK.as_secs_f64();
+                    let (in_flight, cap) = rec.pool_occupancy();
+                    let mbps = delta as f64 / PROGRESS_TICK.as_secs_f64() / 1e6;
+                    eprint!(
+                        "\r{:>9.1} MB/s |{}| pool {}/{} in flight   ",
+                        mbps,
+                        trace.sparkline(30),
+                        in_flight,
+                        cap
+                    );
+                    let _ = std::io::Write::flush(&mut std::io::stderr());
+                }
+                eprintln!();
+            })
+            .expect("spawn progress thread");
+        Progress { stop, handle: Some(handle) }
+    }
+
+    /// Stop and join the render thread (Drop does the same).
+    pub fn finish(self) {}
+}
+
+impl Drop for Progress {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_covers_the_line() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Every bucket's representative value maps back into it (except
+        // the clamped last bucket).
+        for b in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_value(b)), b, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_the_buckets() {
+        let h = Hist::new();
+        for v in [1u64, 1, 1, 1000, 1000, 1000, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 8);
+        assert_eq!(s.sum, 1_004_003);
+        assert_eq!(bucket_of(s.percentile(1.0)), bucket_of(1));
+        assert_eq!(bucket_of(s.percentile(50.0)), bucket_of(1000));
+        assert_eq!(bucket_of(s.percentile(99.0)), bucket_of(1_000_000));
+        assert!(s.percentile(50.0) <= s.percentile(95.0));
+        assert!(s.percentile(95.0) <= s.percentile(99.0));
+        assert_eq!(HistSnapshot::default().percentile(50.0), 0);
+    }
+
+    #[test]
+    fn ring_wraps_oldest_first() {
+        let mut r = SpanRing::new(3);
+        let ev = |n: u64| SpanEvent { stage: Stage::Read, t0_ns: n, dur_ns: 1 };
+        r.push(ev(1));
+        r.push(ev(2));
+        assert_eq!(r.snapshot().iter().map(|e| e.t0_ns).collect::<Vec<_>>(), vec![1, 2]);
+        r.push(ev(3));
+        r.push(ev(4));
+        r.push(ev(5));
+        assert_eq!(r.snapshot().iter().map(|e| e.t0_ns).collect::<Vec<_>>(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn attribute_picks_the_busiest_group() {
+        let (label, conf) =
+            attribute(&[("read", 1.0), ("hash", 4.0), ("write", 2.0), ("net", 0.5)]);
+        assert_eq!(label, "hash-bound");
+        assert!((conf - 2.0).abs() < 1e-9, "{conf}");
+        let (label, conf) = attribute(&[("read", 0.0), ("net", 3.0)]);
+        assert_eq!(label, "net-bound");
+        assert_eq!(conf, 999.0, "no runner-up caps out");
+        assert_eq!(attribute(&[("read", 0.0), ("net", 0.0)]).0, "");
+    }
+
+    #[test]
+    fn disabled_shard_is_inert() {
+        let s = Shard::disabled();
+        assert!(!s.is_enabled());
+        assert!(s.start().is_none());
+        s.record(Stage::Hash, None);
+        s.record_ns(Stage::Hash, 0, 100);
+        s.gauge_depth(5);
+        s.add_bytes(100);
+        assert!(s.spans().is_empty());
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        assert!(!rec.shard("x").is_enabled());
+        assert!(rec.report().stages.is_empty());
+        assert_eq!(rec.total_bytes(), 0);
+    }
+
+    #[test]
+    fn report_merges_shards_and_attributes() {
+        let rec = Recorder::enabled();
+        let a = rec.shard("worker-a");
+        let b = rec.shard("worker-b");
+        a.record_ns(Stage::Hash, 0, 3_000_000_000);
+        b.record_ns(Stage::Hash, 0, 2_000_000_000);
+        b.record_ns(Stage::Send, 0, 1_000_000_000);
+        a.add_bytes(10);
+        b.add_bytes(20);
+        let rep = rec.report();
+        assert_eq!(rep.bottleneck, "hash-bound");
+        assert!((rep.confidence - 5.0).abs() < 1e-6, "{}", rep.confidence);
+        let hash = rep.stages.iter().find(|s| s.stage == "hash").unwrap();
+        assert_eq!(hash.count, 2);
+        assert!((hash.busy_secs - 5.0).abs() < 1e-6);
+        assert_eq!(rec.total_bytes(), 30);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let rec = Recorder::enabled();
+        let s = rec.shard("sess\"0\\");
+        s.record_ns(Stage::Read, 1000, 500);
+        s.record_ns(Stage::Send, 1500, 250);
+        let mut buf = Vec::new();
+        rec.write_chrome_trace(&mut buf).unwrap();
+        let out = String::from_utf8(buf).unwrap();
+        assert!(out.starts_with("{\"traceEvents\":["));
+        assert!(out.ends_with("]}"));
+        assert!(out.contains("\"ph\":\"X\""));
+        assert!(out.contains("\"ph\":\"M\""));
+        assert!(out.contains("sess\\\"0\\\\"), "label must be escaped: {out}");
+        assert!(out.contains("\"name\":\"read\""));
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let rec = Recorder::enabled();
+        let s = rec.shard("w");
+        s.record_ns(Stage::Write, 0, 42);
+        s.gauge_depth(7);
+        let j = rec.metrics_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"stage\":\"write\""));
+        assert!(j.contains("\"queue_depth\""));
+        assert!(j.contains("\"bottleneck\":\"write-bound\""));
+    }
+}

@@ -69,6 +69,9 @@ pub struct FluidSim {
     resources: Vec<Resource>,
     flows: Vec<FlowState>,
     rates_dirty: bool,
+    /// Accumulated busy seconds per resource (utilization-weighted time;
+    /// feeds bottleneck attribution in the sim testbed).
+    resource_busy: Vec<f64>,
 }
 
 impl FluidSim {
@@ -83,7 +86,16 @@ impl FluidSim {
     pub fn add_resource(&mut self, name: &str, capacity_bytes_per_sec: f64) -> ResourceId {
         assert!(capacity_bytes_per_sec > 0.0, "capacity must be positive");
         self.resources.push(Resource { name: name.to_string(), capacity: capacity_bytes_per_sec });
+        self.resource_busy.push(0.0);
         ResourceId(self.resources.len() - 1)
+    }
+
+    /// Utilization-weighted busy time accumulated by a resource so far:
+    /// each step contributes `dt * consumed_rate / capacity` (clamped to
+    /// `dt` — a saturated resource is 100% busy). Infinite-capacity
+    /// resources are never busy.
+    pub fn busy_seconds(&self, r: ResourceId) -> f64 {
+        self.resource_busy[r.0]
     }
 
     pub fn resource_name(&self, r: ResourceId) -> &str {
@@ -268,6 +280,26 @@ impl FluidSim {
                 dt = dt.min(f.remaining / f.rate);
             }
         }
+        // Busy accounting at the (still valid) current rates: each
+        // resource is `consumed/capacity` utilized for this interval.
+        if dt > 0.0 {
+            let mut consumed = vec![0.0f64; self.resources.len()];
+            for f in &self.flows {
+                if f.done || f.rate <= 0.0 {
+                    continue;
+                }
+                for &(r, w) in &f.uses {
+                    consumed[r.0] += f.rate * w;
+                }
+            }
+            for (busy, (res, used)) in
+                self.resource_busy.iter_mut().zip(self.resources.iter().zip(&consumed))
+            {
+                if res.capacity.is_finite() {
+                    *busy += dt * (used / res.capacity).min(1.0);
+                }
+            }
+        }
         // Advance all flows.
         for (i, f) in self.flows.iter_mut().enumerate() {
             if f.done {
@@ -428,6 +460,19 @@ mod tests {
         let f = sim.start_flow(1e12, vec![], None);
         let t = sim.run_until_done(f);
         assert!(t < 1e-3, "unconstrained flow finishes instantly");
+    }
+
+    #[test]
+    fn busy_seconds_track_utilization() {
+        let mut sim = FluidSim::new();
+        let disk = sim.add_resource("disk", 100.0);
+        let hash = sim.add_resource("hash", 400.0);
+        let f = sim.start_flow(1000.0, vec![(disk, 1.0), (hash, 1.0)], None);
+        let t = sim.run_until_done(f);
+        assert!((t - 10.0).abs() < 1e-6);
+        // Disk saturated the whole run; hash ran at 100/400 = 25%.
+        assert!((sim.busy_seconds(disk) - 10.0).abs() < 1e-6, "{}", sim.busy_seconds(disk));
+        assert!((sim.busy_seconds(hash) - 2.5).abs() < 1e-6, "{}", sim.busy_seconds(hash));
     }
 
     #[test]

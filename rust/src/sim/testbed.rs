@@ -6,6 +6,7 @@ use crate::cache::PageCache;
 use crate::config::{AlgoParams, IoCost, Testbed};
 use crate::metrics::HitTrace;
 use crate::net::TcpConn;
+use crate::obs::{Recorder, Shard, SpanEvent, Stage};
 use crate::sim::{FlowId, FluidSim, ResourceId};
 use crate::workload::FileSpec;
 
@@ -61,9 +62,14 @@ pub struct SimEnv {
     /// a time per session — the station discipline); drives TCP cap
     /// management in [`SimEnv::pump_step`].
     active: Vec<Option<FlowId>>,
-    /// (flow, side, hit_bytes, miss_bytes, t_start): recorded into the
-    /// hit trace when the flow completes.
-    pending_traces: Vec<(FlowId, Side, u64, u64, f64)>,
+    /// (flow, side, hit_bytes, miss_bytes, t_start, stage): recorded into
+    /// the hit trace (and, when tracing is on, as a virtual-time span)
+    /// when the flow completes.
+    pending_traces: Vec<(FlowId, Side, u64, u64, f64, Stage)>,
+    /// Observability plane (off unless `FIVER_TRACE=1` or
+    /// [`SimEnv::enable_tracing`]); spans carry virtual nanoseconds.
+    pub obs: Recorder,
+    obs_shard: Shard,
 }
 
 impl SimEnv {
@@ -110,6 +116,8 @@ impl SimEnv {
             src_pool: sim.add_resource("src_pool", pool_rate(tb.src.hash_rate(params.hash))),
             dst_pool: sim.add_resource("dst_pool", pool_rate(tb.dst.hash_rate(params.hash))),
         };
+        let obs = Recorder::from_env();
+        let obs_shard = obs.shard("sim");
         SimEnv {
             sim,
             tcps: (0..n).map(|_| TcpConn::new(tb.tcp_params())).collect(),
@@ -122,7 +130,36 @@ impl SimEnv {
             dst_trace: HitTrace::new(1.0),
             active: vec![None; n],
             pending_traces: Vec::new(),
+            obs,
+            obs_shard,
         }
+    }
+
+    /// Swap in an enabled recorder regardless of `FIVER_TRACE` (tests,
+    /// sim trace exports). Call before flows complete — spans finished
+    /// under the previous recorder are not replayed.
+    pub fn enable_tracing(&mut self) {
+        self.obs = Recorder::enabled();
+        self.obs_shard = self.obs.shard("sim");
+    }
+
+    /// Completed-flow spans recorded so far (virtual-time; oldest first).
+    pub fn sim_spans(&self) -> Vec<SpanEvent> {
+        self.obs_shard.spans()
+    }
+
+    /// Per-stage-group busy seconds — the sim analogue of the real
+    /// engine's span-derived attribution groups (see
+    /// [`crate::obs::attribute`]). Hash takes the busier endpoint core:
+    /// either side's checksum station can gate the coupled pipeline.
+    pub fn stage_busy(&self) -> Vec<(&'static str, f64)> {
+        let s = &self.sim;
+        vec![
+            ("read", s.busy_seconds(self.res.src_disk)),
+            ("hash", s.busy_seconds(self.res.src_hash).max(s.busy_seconds(self.res.dst_hash))),
+            ("write", s.busy_seconds(self.res.dst_disk)),
+            ("net", s.busy_seconds(self.res.net)),
+        ]
     }
 
     /// Number of concurrent sessions.
@@ -243,7 +280,7 @@ impl SimEnv {
         if !self.sim.is_done(flow) {
             self.active[session] = Some(flow);
         }
-        self.pending_traces.push((flow, Side::Src, hits, misses, now));
+        self.pending_traces.push((flow, Side::Src, hits, misses, now, Stage::Send));
         flow
     }
 
@@ -281,7 +318,7 @@ impl SimEnv {
             )
         };
         let flow = self.sim.start_flow(len as f64, uses, None);
-        self.pending_traces.push((flow, side, hits, misses, now));
+        self.pending_traces.push((flow, side, hits, misses, now, Stage::Hash));
         flow
     }
 
@@ -330,9 +367,10 @@ impl SimEnv {
             self.active[session] = Some(flow);
         }
         // Source trace: the single shared read; checksum I/O on both sides
-        // is served from the queue (pure hits).
-        self.pending_traces.push((flow, Side::Src, hits + len, misses, now));
-        self.pending_traces.push((flow, Side::Dst, len, 0, now));
+        // is served from the queue (pure hits). The coupled flow spans as
+        // one Send (the pipeline) plus the destination's Hash leg.
+        self.pending_traces.push((flow, Side::Src, hits + len, misses, now, Stage::Send));
+        self.pending_traces.push((flow, Side::Dst, len, 0, now, Stage::Hash));
         flow
     }
 
@@ -395,12 +433,14 @@ impl SimEnv {
             .map(|(i, _)| i)
             .collect();
         for i in done.into_iter().rev() {
-            let (_, side, hits, misses, t0) = self.pending_traces.swap_remove(i);
+            let (_, side, hits, misses, t0, stage) = self.pending_traces.swap_remove(i);
             let trace = match side {
                 Side::Src => &mut self.src_trace,
                 Side::Dst => &mut self.dst_trace,
             };
             trace.record(t0, now, hits, misses);
+            // Virtual-time span: the flow's lifetime, in sim nanoseconds.
+            self.obs_shard.record_ns(stage, (t0 * 1e9) as u64, ((now - t0) * 1e9) as u64);
         }
         step.completed
     }
@@ -632,6 +672,33 @@ mod tests {
             direct > 1.8 * buffered,
             "direct read-back must pay disk: {direct:.3}s vs {buffered:.3}s"
         );
+    }
+
+    #[test]
+    fn stage_busy_attributes_hash_bound_fiver_flow() {
+        // HPCLab-40G: the coupled flow is gated by the 3 Gbps hash cores,
+        // so the busy decomposition must label the run hash-bound.
+        let mut e = SimEnv::new(Testbed::hpclab_40g(), AlgoParams::default());
+        let f = file(0, 10 * GB);
+        let flow = e.start_fiver_flow(&f, 0, f.size);
+        e.pump_until(flow);
+        let (label, confidence) = crate::obs::attribute(&e.stage_busy());
+        assert_eq!(label, "hash-bound", "busy: {:?}", e.stage_busy());
+        assert!(confidence > 1.0, "confidence {confidence}");
+    }
+
+    #[test]
+    fn sim_spans_carry_virtual_time() {
+        let mut e = env();
+        e.enable_tracing();
+        let f = file(0, 100 * MB);
+        let flow = e.start_transfer(&f, 0, f.size);
+        e.pump_until(flow);
+        let spans = e.sim_spans();
+        assert_eq!(spans.len(), 1, "one completed flow = one span");
+        let wall_ns = (e.now() * 1e9) as u64;
+        assert_eq!(spans[0].stage, Stage::Send);
+        assert!(spans[0].dur_ns > 0 && spans[0].dur_ns <= wall_ns);
     }
 
     #[test]

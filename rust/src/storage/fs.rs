@@ -177,6 +177,10 @@ impl Storage for FsStorage {
         self.counters.syncs.load(Ordering::Relaxed)
     }
 
+    fn direct_fallbacks(&self) -> u64 {
+        self.counters.direct_fallbacks.load(Ordering::Relaxed)
+    }
+
     fn sync_file(&self, name: &str) -> Result<()> {
         // fdatasync on any descriptor of the inode flushes every dirty
         // page of the file — including pages dirtied through a MAP_SHARED

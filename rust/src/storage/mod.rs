@@ -125,6 +125,13 @@ pub trait Storage: Send + Sync {
     fn sync_count(&self) -> u64 {
         0
     }
+    /// Times the O_DIRECT engine fell back to buffered I/O (per-op
+    /// alignment misses or filesystem refusal). 0 for every other
+    /// engine; surfaces in `TransferReport::direct_fallbacks` and the
+    /// CLI `data plane:` line.
+    fn direct_fallbacks(&self) -> u64 {
+        0
+    }
     /// Force every written byte of `name` to durable storage, regardless
     /// of which stream wrote it. On Unix this is `fdatasync` on the
     /// inode, which also settles pages dirtied through `MAP_SHARED`

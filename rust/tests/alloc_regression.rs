@@ -81,6 +81,12 @@ fn transfer_cost(base: &TempDir, tag: &str, size: usize) -> (u64, u64) {
         w.flush().expect("flush source file");
     }
     let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Md5));
+    // Tracing ON: the observability plane claims allocation-free steady
+    // state (preallocated span rings, fixed-bucket histograms), so it must
+    // pass the same O(pool)-not-O(chunks) gate as the data plane. Span
+    // volume scales with chunk count — any per-span allocation would blow
+    // the byte budget immediately.
+    cfg.obs = fiver::obs::Recorder::enabled();
     cfg.buf_size = BUF_SIZE;
     // Pin the pool well below the transfer's demand so every run
     // saturates it: each endpoint allocates exactly `pool_buffers`

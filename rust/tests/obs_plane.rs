@@ -1,0 +1,178 @@
+//! Integration: the observability plane — sharded-histogram merge
+//! equivalence, trace/metrics export validity, and bottleneck
+//! attribution on both the real loopback engine and the sim testbed.
+
+use std::sync::Arc;
+
+use fiver::config::{gbps, AlgoParams, Testbed, MB};
+use fiver::coordinator::session::run_local_transfer;
+use fiver::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+use fiver::faults::FaultPlan;
+use fiver::hashes::HashAlgorithm;
+use fiver::obs::{Hist, HistSnapshot, Recorder, Stage};
+use fiver::sim::algorithms::{run, Algorithm};
+use fiver::sim::testbed::{Side, SimEnv};
+use fiver::storage::MemStorage;
+use fiver::util::json::Json;
+use fiver::util::rng::SplitMix64;
+use fiver::workload::{Dataset, FileSpec};
+
+/// N sharded histograms merged at report time must be bit-identical to a
+/// single histogram that saw every sample — counts, sum, and every
+/// percentile (the property the per-worker sharding design rests on).
+#[test]
+fn sharded_histograms_merge_to_single_reference() {
+    const SHARDS: usize = 8;
+    const SAMPLES: usize = 20_000;
+    let shards: Vec<Hist> = (0..SHARDS).map(|_| Hist::new()).collect();
+    let reference = Hist::new();
+    let mut rng = SplitMix64::new(0x0B5E_7EED);
+    for i in 0..SAMPLES {
+        // Spread samples across many octaves so most buckets populate.
+        let shift = (rng.next_u64() % 60) as u32;
+        let v = rng.next_u64() >> shift;
+        shards[i % SHARDS].record(v);
+        reference.record(v);
+    }
+    let mut merged = HistSnapshot::default();
+    for s in &shards {
+        merged.merge(&s.snapshot());
+    }
+    let expect = reference.snapshot();
+    assert_eq!(merged, expect, "merged shards must equal the single-shard reference");
+    assert_eq!(merged.count(), SAMPLES as u64);
+    for p in 1..=99 {
+        assert_eq!(
+            merged.percentile(p as f64),
+            expect.percentile(p as f64),
+            "percentile {p} diverged"
+        );
+    }
+}
+
+/// The Chrome/Perfetto export is well-formed trace_event JSON: a
+/// traceEvents array of thread-name metadata plus "X" complete events
+/// with microsecond ts/dur. The metrics export parses too.
+#[test]
+fn chrome_trace_and_metrics_exports_are_valid_json() {
+    let rec = Recorder::enabled();
+    let shard = rec.shard("test-worker");
+    shard.record_ns(Stage::Read, 1_000, 5_000);
+    shard.record_ns(Stage::Hash, 6_000, 250_000);
+    shard.record_ns(Stage::Send, 10_000, 42_000);
+    let mut buf: Vec<u8> = Vec::new();
+    rec.write_chrome_trace(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("invalid trace JSON: {e:?}\n{text}"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let mut complete = 0usize;
+    let mut metadata = 0usize;
+    for ev in events {
+        match ev.get("ph").and_then(|p| p.as_str()) {
+            Some("X") => {
+                complete += 1;
+                assert!(ev.get("name").and_then(|n| n.as_str()).is_some(), "X event name");
+                assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some(), "X event ts");
+                assert!(ev.get("dur").and_then(|d| d.as_f64()).is_some(), "X event dur");
+            }
+            Some("M") => metadata += 1,
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(complete, 3, "one X event per recorded span");
+    assert!(metadata >= 1, "thread_name metadata for the shard");
+    let metrics = rec.metrics_json();
+    let mdoc = Json::parse(&metrics)
+        .unwrap_or_else(|e| panic!("invalid metrics JSON: {e:?}\n{metrics}"));
+    assert!(mdoc.get("stages").is_some(), "metrics carry per-stage histograms");
+    assert!(mdoc.get("bottleneck").is_some(), "metrics carry the attribution");
+}
+
+/// A SHA1-heavy loopback transfer is hash-bound: both endpoints digest
+/// every byte while storage is memcpy-fast, so the attribution must
+/// blame the checksum stations (the regime Eq. 1's `t_chksum >
+/// t_transfer` describes).
+#[test]
+fn loopback_sha1_run_attributes_hash_bound() {
+    let src = MemStorage::new();
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    let mut names = Vec::new();
+    for i in 0..4 {
+        let mut data = vec![0u8; 2 * 1024 * 1024];
+        rng.fill_bytes(&mut data);
+        let name = format!("f{i}");
+        src.put(&name, data);
+        names.push(name);
+    }
+    let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Sha1));
+    cfg.obs = Recorder::enabled();
+    let (report, _rreport) = run_local_transfer(
+        &names,
+        Arc::new(src),
+        Arc::new(MemStorage::new()),
+        &cfg,
+        &FaultPlan::none(),
+    )
+    .expect("loopback transfer");
+    assert!(!report.stage_stats.is_empty(), "tracing was on: stage stats must be populated");
+    let hash = report.stage_stats.iter().find(|s| s.stage == "hash");
+    assert!(hash.map(|s| s.count > 0).unwrap_or(false), "hash spans recorded: {report:?}");
+    assert_eq!(
+        report.bottleneck, "hash-bound",
+        "SHA1 loopback must be hash-bound (stages: {:?})",
+        report.stage_stats
+    );
+    assert!(report.bottleneck_confidence >= 1.0);
+}
+
+/// The same attribution on the sim testbed: throttle the link far below
+/// the hash rate and the run must flip to net-bound.
+#[test]
+fn sim_throttled_link_attributes_net_bound() {
+    let mut tb = Testbed::hpclab_40g();
+    tb.bandwidth = gbps(0.3); // hash cores run at ~3 Gbps: net is 10x slower
+    let ds = Dataset::uniform("1G", 1024 * MB, 2);
+    let s = run(tb, AlgoParams::default(), &ds, &FaultPlan::none(), Algorithm::Fiver);
+    assert_eq!(s.bottleneck, "net-bound", "stages: {:?}", s.stage_stats);
+    assert!(s.bottleneck_confidence > 2.0, "confidence {}", s.bottleneck_confidence);
+}
+
+/// And without the throttle, HPCLab-40G's FIVER runs are hash-bound in
+/// the sim exactly as the paper describes (hash is the slowest stage).
+#[test]
+fn sim_default_40g_attributes_hash_bound() {
+    let ds = Dataset::uniform("1G", 1024 * MB, 2);
+    let s = run(
+        Testbed::hpclab_40g(),
+        AlgoParams::default(),
+        &ds,
+        &FaultPlan::none(),
+        Algorithm::Fiver,
+    );
+    assert_eq!(s.bottleneck, "hash-bound", "stages: {:?}", s.stage_stats);
+}
+
+/// Sim spans are deterministic: two identical virtual-time runs emit
+/// identical span streams (which is why the recorder bans wall-clock
+/// lookups in sim paths).
+#[test]
+fn sim_spans_are_deterministic() {
+    let spans_of = || {
+        let mut e = SimEnv::new(Testbed::hpclab_40g(), AlgoParams::default());
+        e.enable_tracing();
+        let a = FileSpec { id: 0, name: "a".into(), size: 256 * MB };
+        let b = FileSpec { id: 1, name: "b".into(), size: 64 * MB };
+        let fa = e.start_fiver_flow(&a, 0, a.size);
+        e.pump_until(fa);
+        let ck = e.start_checksum(Side::Dst, &b, 0, b.size, false);
+        e.pump_until(ck);
+        e.sim_spans()
+    };
+    let first = spans_of();
+    let second = spans_of();
+    assert!(!first.is_empty(), "flows must record spans");
+    assert_eq!(first, second, "same seed, same virtual time, same spans");
+}
