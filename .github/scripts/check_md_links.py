@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only) for the repo's top-level docs.
+
+Checks, for every `[text](target)` link in the given files:
+
+* relative file targets resolve to an existing file or directory
+  (relative to the markdown file's own directory);
+* `#fragment` targets (same-file or on a relative target) match a
+  heading in the target file, using GitHub's anchor slug rules;
+* absolute `http(s)`/`mailto` targets are skipped (offline CI).
+
+Exit status is the number of broken links (0 = clean).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def headings(path: Path) -> set:
+    slugs = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            slugs.add(slugify(line.lstrip("#")))
+    return slugs
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans before link scanning."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def check(md: Path) -> list:
+    errors = []
+    for target in LINK.findall(strip_code(md.read_text(encoding="utf-8"))):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md.resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link target `{target}`")
+            continue
+        if fragment and dest.suffix == ".md":
+            if slugify(fragment) not in headings(dest):
+                errors.append(f"{md}: no heading for anchor `{target}`")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for name in sys.argv[1:]:
+        md = Path(name)
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check(md))
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    if not errors:
+        print(f"ok: {len(sys.argv) - 1} files, all links resolve")
+    return min(len(errors), 100)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

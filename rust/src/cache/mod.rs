@@ -25,15 +25,19 @@ pub type FileId = u64;
 /// Result of a cache access: how many bytes hit vs missed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Access {
+    /// Bytes served from cache.
     pub hit_bytes: u64,
+    /// Bytes that missed and went to disk.
     pub miss_bytes: u64,
 }
 
 impl Access {
+    /// Total bytes accessed.
     pub fn total(&self) -> u64 {
         self.hit_bytes + self.miss_bytes
     }
 
+    /// Fraction of bytes served from cache (0 for an empty access).
     pub fn hit_ratio(&self) -> f64 {
         if self.total() == 0 {
             1.0
@@ -68,6 +72,7 @@ pub struct PageCache {
     used_bytes: u64,
     /// Lifetime counters.
     pub total_hits: u64,
+    /// Lifetime bytes that missed the cache.
     pub total_misses: u64,
 }
 
@@ -77,6 +82,7 @@ impl PageCache {
         Self::with_granularity(capacity_bytes, 1 << 20)
     }
 
+    /// A cache tracking residency in `granularity`-byte extents.
     pub fn with_granularity(capacity_bytes: u64, granularity: u64) -> PageCache {
         assert!(granularity > 0);
         PageCache {
@@ -91,10 +97,12 @@ impl PageCache {
         }
     }
 
+    /// Configured capacity in bytes.
     pub fn capacity(&self) -> u64 {
         self.capacity_bytes
     }
 
+    /// Resident bytes.
     pub fn used(&self) -> u64 {
         self.used_bytes
     }

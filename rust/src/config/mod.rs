@@ -23,8 +23,11 @@ pub const fn gbps(g: f64) -> f64 {
     g * 1e9 / 8.0
 }
 
+/// One kibibyte.
 pub const KB: u64 = 1 << 10;
+/// One mebibyte.
 pub const MB: u64 = 1 << 20;
+/// One gibibyte.
 pub const GB: u64 = 1 << 30;
 
 /// Per-host I/O and compute rates.
@@ -44,6 +47,7 @@ pub struct HostSpec {
 }
 
 impl HostSpec {
+    /// This host's hash throughput in bytes/sec for `alg`.
     pub fn hash_rate(&self, alg: HashAlgorithm) -> f64 {
         self.hash_md5 / alg.relative_cost()
     }
@@ -52,8 +56,11 @@ impl HostSpec {
 /// A source-destination pair plus network path (one row of Table I/II).
 #[derive(Debug, Clone, Copy)]
 pub struct Testbed {
+    /// Testbed name as used in the paper and on the CLI.
     pub name: &'static str,
+    /// Source-host capabilities.
     pub src: HostSpec,
+    /// Destination-host capabilities.
     pub dst: HostSpec,
     /// Link bandwidth (bytes/s).
     pub bandwidth: f64,
@@ -62,6 +69,7 @@ pub struct Testbed {
 }
 
 impl Testbed {
+    /// The TCP envelope for this testbed's link.
     pub fn tcp_params(&self) -> TcpParams {
         TcpParams::new(self.bandwidth, self.rtt)
     }
@@ -130,6 +138,7 @@ impl Testbed {
         Testbed { name: "HPCLab-40G", src: dtn, dst: dtn, bandwidth: gbps(40.0), rtt: 30e-3 }
     }
 
+    /// Look a testbed up by CLI name.
     pub fn by_name(name: &str) -> Option<Testbed> {
         match name.to_ascii_lowercase().as_str() {
             "esnet-lan" | "esnet_lan" => Some(Self::esnet_lan()),
@@ -140,6 +149,7 @@ impl Testbed {
         }
     }
 
+    /// All four paper testbeds.
     pub fn all() -> [Testbed; 4] {
         [Self::esnet_lan(), Self::esnet_wan(), Self::hpclab_1g(), Self::hpclab_40g()]
     }
@@ -190,6 +200,14 @@ pub struct AlgoParams {
     /// `--io-backend`): decides per-byte read/write weights and whether
     /// the page cache participates at all — see [`IoCost`].
     pub io_backend: IoBackend,
+    /// Delta-sync model (the real engine's `--delta`): fraction of the
+    /// dataset's bytes that are *dirty* — changed since the receiver's
+    /// copy — and must cross the wire. 1.0 (the default) is a full copy:
+    /// every byte ships and no delta machinery runs. Below 1.0 the sim
+    /// charges the sender a full read+scan pass, ships only the dirty
+    /// fraction, and charges the receiver local copy + re-hash of the
+    /// reconstructed file (see `sim::algorithms::run_delta`).
+    pub delta_fraction: f64,
 }
 
 /// The sim's per-backend storage cost model (dimensionless weights on the
@@ -223,6 +241,7 @@ pub struct IoCost {
 }
 
 impl IoCost {
+    /// The cost model for `backend`.
     pub fn of(backend: IoBackend) -> IoCost {
         match backend {
             IoBackend::Buffered => IoCost {
@@ -259,6 +278,7 @@ impl Default for AlgoParams {
             pool_buffers: 0,
             io_buf_size: 256 * KB,
             io_backend: IoBackend::Buffered,
+            delta_fraction: 1.0,
         }
     }
 }

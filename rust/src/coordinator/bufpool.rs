@@ -123,6 +123,7 @@ impl Drop for AlignedBytes {
 /// mmap region held by the mmap storage backend. A [`SharedBuf`] view over
 /// an external backing keeps it alive (refcounted) and copies nothing.
 pub trait ExternalBytes: Send + Sync {
+    /// The readable bytes of the external backing.
     fn as_bytes(&self) -> &[u8];
 }
 
@@ -239,6 +240,7 @@ impl BufferPool {
         }
     }
 
+    /// Size in bytes of each pooled buffer.
     pub fn buf_size(&self) -> usize {
         self.core.buf_size
     }
@@ -538,10 +540,12 @@ impl SharedBuf {
         }
     }
 
+    /// Length of the slice in bytes.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the slice is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -553,6 +557,7 @@ impl SharedBuf {
         SharedBuf { backing: self.backing.clone(), off: self.off + start, len: end - start }
     }
 
+    /// The bytes this slice covers.
     pub fn as_slice(&self) -> &[u8] {
         &self.backing.as_slice()[self.off..self.off + self.len]
     }

@@ -1,0 +1,662 @@
+//! Delta sync: rsync-style incremental transfer over journaled leaf
+//! digests.
+//!
+//! A recurring sync re-transfers datasets that are mostly unchanged. The
+//! checkpoint journal (v2, see [`super::journal`]) already persists every
+//! file's leaf digests — *and* a 32-bit rolling weak sum per leaf — so a
+//! re-run can ship only the leaves that actually changed:
+//!
+//! 1. **Handshake** (one dedicated control connection, session id
+//!    [`super::protocol::DELTA_SESSION`]): the sender lists its files
+//!    (`DeltaReq`); the receiver answers with per-leaf signatures of
+//!    whatever basis it holds for each name (`DeltaSig`) — journaled v2
+//!    digests when a compatible record exists, else weak+strong sums
+//!    computed by reading its existing destination data.
+//! 2. **Scan** (sender): each file's fresh source bytes stream through a
+//!    [`DeltaScanner`], which slides a leaf-sized window with an O(1)
+//!    [`Rolling32`] weak checksum. A weak hit is confirmed with the
+//!    session's strong hash before it counts — a weak collision can
+//!    therefore never ship a wrong leaf, it only costs one extra strong
+//!    hash. Confirmed windows become `DeltaCopy` instructions (reuse a
+//!    leaf the receiver already holds), everything else ships as
+//!    `DeltaData` literals.
+//! 3. **Reconstruct** (receiver): instructions arrive in new-file order;
+//!    the receiver assembles the new content into a staging file (reading
+//!    copy sources from its existing destination), then atomically
+//!    renames it over the destination.
+//! 4. **Verify**: both endpoints fold the *new* byte stream into leaf
+//!    digests and exchange Merkle roots through the existing
+//!    `TreeRoot`/descent machinery — so even a stale or lying basis
+//!    self-heals: a bad reconstruction fails the root comparison,
+//!    descent localizes it, and ordinary `Fix` repair converges.
+//!
+//! The rolling checksum is the classic rsync pair of 16-bit sums: over a
+//! window `x_k..x_l`, `a = Σ x_i (mod 2^16)` and
+//! `b = Σ (l - i + 1)·x_i (mod 2^16)`, composed as `(b << 16) | a`.
+//! Both roll in O(1) when the window slides one byte.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::HasherFactory;
+use crate::hashes::Hasher;
+
+/// Encoded width of one weak checksum in signatures and journal records.
+pub const WEAK_LEN: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Rolling weak checksum
+// ---------------------------------------------------------------------------
+
+/// The rsync 32-bit rolling checksum: two 16-bit sums that update in O(1)
+/// as a fixed-size window slides over a byte stream.
+///
+/// ```
+/// use fiver::coordinator::delta::Rolling32;
+///
+/// let data = b"the quick brown fox jumps over the lazy dog";
+/// let window = 16;
+/// // Seed the sum over the first window, then roll it one byte at a
+/// // time; every rolled value equals the sum computed from scratch.
+/// let mut r = Rolling32::new();
+/// r.update(&data[..window]);
+/// for start in 1..=data.len() - window {
+///     r.roll(window, data[start - 1], data[start + window - 1]);
+///     assert_eq!(r.digest(), Rolling32::of(&data[start..start + window]));
+/// }
+/// ```
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Rolling32 {
+    a: u32,
+    b: u32,
+}
+
+impl Rolling32 {
+    /// An empty sum (the fixed point of zero bytes).
+    pub fn new() -> Rolling32 {
+        Rolling32::default()
+    }
+
+    /// Absorb one byte at the end of the window.
+    #[inline]
+    pub fn push(&mut self, byte: u8) {
+        self.a = (self.a + byte as u32) & 0xffff;
+        self.b = (self.b + self.a) & 0xffff;
+    }
+
+    /// Absorb a run of bytes.
+    pub fn update(&mut self, data: &[u8]) {
+        for &x in data {
+            self.push(x);
+        }
+    }
+
+    /// Slide a `window`-byte window one position: drop `out` (the byte
+    /// leaving at the front) and absorb `inb` (the byte entering at the
+    /// back). O(1) — the property that makes scanning every window
+    /// offset affordable.
+    #[inline]
+    pub fn roll(&mut self, window: usize, out: u8, inb: u8) {
+        self.a = self.a.wrapping_sub(out as u32).wrapping_add(inb as u32) & 0xffff;
+        self.b =
+            self.b.wrapping_sub((window as u32).wrapping_mul(out as u32)).wrapping_add(self.a)
+                & 0xffff;
+    }
+
+    /// The composed 32-bit digest: `(b << 16) | a`.
+    #[inline]
+    pub fn digest(&self) -> u32 {
+        (self.b << 16) | self.a
+    }
+
+    /// Forget all absorbed bytes.
+    pub fn reset(&mut self) {
+        *self = Rolling32::default();
+    }
+
+    /// One-shot digest of a block.
+    pub fn of(block: &[u8]) -> u32 {
+        let mut r = Rolling32::new();
+        r.update(block);
+        r.digest()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Signatures and the sender's plan
+// ---------------------------------------------------------------------------
+
+/// Encode per-leaf `(weak, strong)` signature pairs as a `DeltaSig`
+/// payload: fixed `WEAK_LEN + digest_len` stride, leaf order.
+pub fn encode_sigs(sigs: &[(u32, Vec<u8>)], digest_len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(sigs.len() * (WEAK_LEN + digest_len));
+    for (weak, strong) in sigs {
+        debug_assert_eq!(strong.len(), digest_len);
+        out.extend_from_slice(&weak.to_le_bytes());
+        out.extend_from_slice(strong);
+    }
+    out
+}
+
+/// One file's delta basis on the sender: the receiver's old leaves,
+/// indexed by weak checksum for the O(1) first-pass lookup of the scan.
+/// Only *full* (leaf-size-spanning) old leaves participate — a trailing
+/// partial leaf cannot anchor a window match.
+pub struct DeltaBasis {
+    /// Size of the receiver's basis file (reporting only).
+    pub old_size: u64,
+    /// Number of full old leaves offered.
+    pub leaves: u64,
+    /// weak → candidate `(old byte offset, strong digest)` pairs.
+    by_weak: HashMap<u32, Vec<(u64, Vec<u8>)>>,
+}
+
+impl DeltaBasis {
+    /// Parse a `DeltaSig` payload (leaf-ordered `(weak, strong)` pairs at
+    /// `WEAK_LEN + digest_len` stride). Returns `None` on a malformed
+    /// payload — the file then simply transfers in full.
+    pub fn from_sig_payload(
+        old_size: u64,
+        leaf_size: u64,
+        digest_len: usize,
+        payload: &[u8],
+    ) -> Option<DeltaBasis> {
+        let stride = WEAK_LEN + digest_len;
+        if digest_len == 0 || leaf_size == 0 || payload.len() % stride != 0 {
+            return None;
+        }
+        let leaves = (payload.len() / stride) as u64;
+        let mut by_weak: HashMap<u32, Vec<(u64, Vec<u8>)>> = HashMap::new();
+        for (i, sig) in payload.chunks_exact(stride).enumerate() {
+            let weak = u32::from_le_bytes(sig[..WEAK_LEN].try_into().unwrap());
+            let strong = sig[WEAK_LEN..].to_vec();
+            by_weak.entry(weak).or_default().push((i as u64 * leaf_size, strong));
+        }
+        Some(DeltaBasis { old_size, leaves, by_weak })
+    }
+
+    /// First-pass filter: is this weak sum present at all? Gates the
+    /// strong hash, so a clean scan pays one strong hash per matched
+    /// leaf, not per byte.
+    pub fn lookup_weak(&self, weak: u32) -> bool {
+        self.by_weak.contains_key(&weak)
+    }
+
+    /// Second-pass confirmation: does any old leaf with this weak sum
+    /// also match the window's strong digest? Returns its old byte
+    /// offset.
+    pub fn confirm(&self, weak: u32, strong: &[u8]) -> Option<u64> {
+        self.by_weak
+            .get(&weak)?
+            .iter()
+            .find(|(_, s)| s.as_slice() == strong)
+            .map(|&(off, _)| off)
+    }
+}
+
+/// The sender's negotiated delta plan: per file index, the basis the
+/// receiver offered for that file's name. Files absent from the plan
+/// transfer in full through the ordinary `FileStart`/`Data` path.
+#[derive(Default)]
+pub struct DeltaPlan {
+    /// file index → basis.
+    pub files: HashMap<u32, DeltaBasis>,
+}
+
+impl DeltaPlan {
+    /// Basis for one file, when the receiver offered one.
+    pub fn basis(&self, file_idx: u32) -> Option<&DeltaBasis> {
+        self.files.get(&file_idx)
+    }
+
+    /// No file has a basis (fresh destination): every transfer is full.
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+}
+
+/// Staging-file name a delta reconstruction writes into before the
+/// atomic rename over the destination. Kept deterministic so a crashed
+/// run's leftover staging file is recognizably ours (and simply
+/// overwritten by the next attempt).
+pub fn staging_name(name: &str) -> String {
+    format!("{name}.fvr-delta-tmp")
+}
+
+// ---------------------------------------------------------------------------
+// Streaming scanner
+// ---------------------------------------------------------------------------
+
+/// One instruction of the delta stream, in strict new-file order.
+#[derive(Debug, PartialEq, Eq)]
+pub enum DeltaOp {
+    /// The receiver already holds these bytes at `old_off` of its basis
+    /// file: copy them to `new_off` instead of shipping them.
+    Copy {
+        /// Destination offset in the new file.
+        new_off: u64,
+        /// Source offset in the receiver's existing (old) file.
+        old_off: u64,
+        /// Bytes to copy (always one full leaf).
+        len: u64,
+    },
+    /// Fresh bytes the receiver does not hold: ship them literally.
+    Literal {
+        /// Destination offset in the new file.
+        new_off: u64,
+        /// The literal bytes.
+        data: Vec<u8>,
+    },
+}
+
+/// Streaming rsync-style scan of a new file against a [`DeltaBasis`]:
+/// feed source chunks in order with [`DeltaScanner::update`], drain
+/// [`DeltaOp`]s (emitted in new-file order) with [`DeltaScanner::pop`].
+///
+/// The scanner slides a leaf-sized window over the stream. At each
+/// position the O(1) rolling weak sum gates a strong-hash confirmation;
+/// a confirmed window becomes a `Copy` and the window jumps a whole
+/// leaf, otherwise it slides one byte and the passed-over byte joins the
+/// pending literal run. Unmatched runs flush as `Literal` ops (bounded
+/// by an internal flush size), so buffered state stays O(leaf + flush).
+pub struct DeltaScanner<'b> {
+    basis: &'b DeltaBasis,
+    leaf: usize,
+    /// Literal runs flush at this size (keeps frames bounded).
+    flush_bytes: usize,
+    hasher: Box<dyn Hasher>,
+    /// Unconsumed stream bytes: `buf[..cursor]` is the pending literal
+    /// run, `buf[cursor..]` is window lookahead.
+    buf: Vec<u8>,
+    cursor: usize,
+    /// New-file offset of `buf[0]`.
+    base: u64,
+    /// Rolling sum over `buf[cursor..cursor + leaf]` when that window is
+    /// complete; `None` when it must be (re)seeded.
+    roll: Option<Rolling32>,
+    /// Emitted ops awaiting [`DeltaScanner::pop`].
+    ops: VecDeque<DeltaOp>,
+    /// Scan statistics: leaves copied (basis hits).
+    pub copies: u64,
+    /// Scan statistics: bytes covered by copies (not shipped).
+    pub copied_bytes: u64,
+    /// Scan statistics: literal bytes emitted (shipped).
+    pub literal_bytes: u64,
+}
+
+impl<'b> DeltaScanner<'b> {
+    /// A scanner for one file. `leaf_size` must match the basis geometry
+    /// (both come from the shared session config).
+    pub fn new(basis: &'b DeltaBasis, leaf_size: u64, factory: &HasherFactory) -> DeltaScanner<'b> {
+        let leaf = leaf_size as usize;
+        assert!(leaf > 0, "leaf_size must be positive");
+        DeltaScanner {
+            basis,
+            leaf,
+            flush_bytes: leaf.max(64 * 1024),
+            hasher: factory(),
+            buf: Vec::with_capacity(2 * leaf),
+            cursor: 0,
+            base: 0,
+            roll: None,
+            ops: VecDeque::new(),
+            copies: 0,
+            copied_bytes: 0,
+            literal_bytes: 0,
+        }
+    }
+
+    /// Next emitted op, in new-file order.
+    pub fn pop(&mut self) -> Option<DeltaOp> {
+        self.ops.pop_front()
+    }
+
+    fn flush_literals(&mut self) {
+        if self.cursor > 0 {
+            self.literal_bytes += self.cursor as u64;
+            let data: Vec<u8> = self.buf.drain(..self.cursor).collect();
+            self.ops.push_back(DeltaOp::Literal { new_off: self.base, data });
+            self.base += self.cursor as u64;
+            self.cursor = 0;
+        }
+    }
+
+    /// Scan as far as the buffered bytes allow.
+    fn scan(&mut self) {
+        while self.buf.len() >= self.cursor + self.leaf {
+            let weak = match &self.roll {
+                Some(r) => r.digest(),
+                None => {
+                    let mut r = Rolling32::new();
+                    r.update(&self.buf[self.cursor..self.cursor + self.leaf]);
+                    let d = r.digest();
+                    self.roll = Some(r);
+                    d
+                }
+            };
+            let matched = if self.basis.lookup_weak(weak) {
+                self.hasher.reset();
+                self.hasher.update(&self.buf[self.cursor..self.cursor + self.leaf]);
+                let strong = self.hasher.finalize();
+                self.basis.confirm(weak, &strong)
+            } else {
+                None
+            };
+            if let Some(old_off) = matched {
+                // Flush the pending literal run, then emit the copy.
+                self.flush_literals();
+                self.ops.push_back(DeltaOp::Copy {
+                    new_off: self.base,
+                    old_off,
+                    len: self.leaf as u64,
+                });
+                self.copies += 1;
+                self.copied_bytes += self.leaf as u64;
+                self.base += self.leaf as u64;
+                self.buf.drain(..self.leaf);
+                self.roll = None;
+            } else {
+                // Slide one byte: the byte at `cursor` joins the literal
+                // run and the window advances.
+                let out = self.buf[self.cursor];
+                let window_end = self.cursor + self.leaf;
+                if window_end < self.buf.len() {
+                    let inb = self.buf[window_end];
+                    self.roll.as_mut().expect("seeded above").roll(self.leaf, out, inb);
+                } else {
+                    // The next window is incomplete; reseed when more
+                    // bytes arrive.
+                    self.roll = None;
+                }
+                self.cursor += 1;
+                if self.cursor >= self.flush_bytes {
+                    // Flushing invalidates nothing: the window (and its
+                    // rolling state) lives at `cursor`, which resets to
+                    // 0 with the same window bytes still buffered.
+                    self.flush_literals();
+                }
+            }
+        }
+    }
+
+    /// Feed the next in-order source chunk; matched/expired spans queue
+    /// as ops. Lookahead shorter than one leaf is retained for the next
+    /// call (it may yet match).
+    pub fn update(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+        self.scan();
+    }
+
+    /// End of stream: everything still buffered (a tail shorter than one
+    /// leaf, plus any pending literal run) is literal by definition.
+    pub fn finish(&mut self) {
+        self.scan();
+        self.cursor = self.buf.len();
+        self.flush_literals();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native_factory;
+    use crate::hashes::HashAlgorithm;
+
+    fn factory() -> HasherFactory {
+        native_factory(HashAlgorithm::Md5)
+    }
+
+    /// Full-leaf signatures of `data` at `leaf` granularity.
+    fn sigs_of(data: &[u8], leaf: usize) -> Vec<(u32, Vec<u8>)> {
+        let f = factory();
+        data.chunks_exact(leaf)
+            .map(|c| {
+                let mut h = f();
+                h.update(c);
+                (Rolling32::of(c), h.finalize())
+            })
+            .collect()
+    }
+
+    fn basis_of(data: &[u8], leaf: usize) -> DeltaBasis {
+        let f = factory();
+        let dlen = f().digest_len();
+        let payload = encode_sigs(&sigs_of(data, leaf), dlen);
+        DeltaBasis::from_sig_payload(data.len() as u64, leaf as u64, dlen, &payload).unwrap()
+    }
+
+    /// Run a full scan; return the ops and the receiver-style
+    /// reconstruction (copies read `old`, literals land verbatim).
+    fn scan_all(old: &[u8], new: &[u8], leaf: usize, chunk: usize) -> (Vec<DeltaOp>, Vec<u8>) {
+        let basis = basis_of(old, leaf);
+        let f = factory();
+        let mut sc = DeltaScanner::new(&basis, leaf as u64, &f);
+        let mut ops = Vec::new();
+        for c in new.chunks(chunk.max(1)) {
+            sc.update(c);
+            while let Some(op) = sc.pop() {
+                ops.push(op);
+            }
+        }
+        sc.finish();
+        while let Some(op) = sc.pop() {
+            ops.push(op);
+        }
+        let mut rebuilt = Vec::new();
+        for op in &ops {
+            match op {
+                DeltaOp::Copy { new_off, old_off, len } => {
+                    assert_eq!(*new_off as usize, rebuilt.len(), "ops must be in-order, gapless");
+                    let (o, l) = (*old_off as usize, *len as usize);
+                    rebuilt.extend_from_slice(&old[o..o + l]);
+                }
+                DeltaOp::Literal { new_off, data } => {
+                    assert_eq!(*new_off as usize, rebuilt.len(), "ops must be in-order, gapless");
+                    rebuilt.extend_from_slice(data);
+                }
+            }
+        }
+        (ops, rebuilt)
+    }
+
+    fn literal_bytes(ops: &[DeltaOp]) -> usize {
+        ops.iter()
+            .map(|op| match op {
+                DeltaOp::Literal { data, .. } => data.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    fn copy_count(ops: &[DeltaOp]) -> usize {
+        ops.iter().filter(|op| matches!(op, DeltaOp::Copy { .. })).count()
+    }
+
+    #[test]
+    fn rolling_matches_scratch_at_every_offset() {
+        let data: Vec<u8> = (0u8..=255).cycle().take(1000).map(|b| b.wrapping_mul(31)).collect();
+        for window in [1usize, 2, 16, 64] {
+            let mut r = Rolling32::new();
+            r.update(&data[..window]);
+            assert_eq!(r.digest(), Rolling32::of(&data[..window]));
+            for start in 1..=data.len() - window {
+                r.roll(window, data[start - 1], data[start + window - 1]);
+                assert_eq!(
+                    r.digest(),
+                    Rolling32::of(&data[start..start + window]),
+                    "window {window} at {start}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rolling_reset_and_empty() {
+        let mut r = Rolling32::new();
+        assert_eq!(r.digest(), 0);
+        r.update(b"abc");
+        assert_ne!(r.digest(), 0);
+        r.reset();
+        assert_eq!(r.digest(), 0);
+        assert_eq!(Rolling32::of(&[]), 0);
+    }
+
+    #[test]
+    fn weak_collision_is_vetoed_by_strong_hash() {
+        // Distinct blocks with identical weak sums: equal byte sums and
+        // equal position-weighted sums.
+        let x = [1u8, 2, 3, 4];
+        let y = [2u8, 1, 2, 5];
+        assert_ne!(x, y);
+        assert_eq!(Rolling32::of(&x), Rolling32::of(&y), "forced weak collision");
+        // Old file = x; new file = y. The weak sum collides, so the
+        // scanner *must* compute the strong hash — which differs, so y
+        // ships as a literal, never as a wrong copy of x.
+        let (ops, rebuilt) = scan_all(&x, &y, 4, 4);
+        assert_eq!(rebuilt, y);
+        assert_eq!(copy_count(&ops), 0, "collision must not copy");
+        // And the basis itself confirms only the true strong digest.
+        let basis = basis_of(&x, 4);
+        assert!(basis.lookup_weak(Rolling32::of(&y)));
+        let f = factory();
+        let strong_y = {
+            let mut h = f();
+            h.update(&y);
+            h.finalize()
+        };
+        assert_eq!(basis.confirm(Rolling32::of(&y), &strong_y), None);
+    }
+
+    #[test]
+    fn identical_file_is_all_copies() {
+        let leaf = 64;
+        let data: Vec<u8> = (0u8..=255).cycle().take(leaf * 8).collect();
+        for chunk in [1, 7, leaf, leaf * 3, data.len()] {
+            let (ops, rebuilt) = scan_all(&data, &data, leaf, chunk);
+            assert_eq!(rebuilt, data);
+            assert_eq!(copy_count(&ops), 8, "chunk {chunk}: every leaf copies");
+            assert_eq!(literal_bytes(&ops), 0, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn in_place_mutation_dirties_only_touched_leaves() {
+        let leaf = 32;
+        let old: Vec<u8> = (0u8..=255).cycle().take(leaf * 10).collect();
+        let mut new = old.clone();
+        // Mutate one byte in leaf 3 and two bytes in leaf 7.
+        new[3 * leaf + 5] ^= 0xFF;
+        new[7 * leaf] ^= 0x55;
+        new[7 * leaf + 31] ^= 0x11;
+        let (ops, rebuilt) = scan_all(&old, &new, leaf, 100);
+        assert_eq!(rebuilt, new);
+        assert_eq!(literal_bytes(&ops), 2 * leaf, "exactly the two touched leaves ship");
+        assert_eq!(copy_count(&ops), 8);
+    }
+
+    #[test]
+    fn append_keeps_prefix_as_copies() {
+        let leaf = 32;
+        let old: Vec<u8> = (17u8..=255).cycle().take(leaf * 4).collect();
+        let mut new = old.clone();
+        new.extend((0u8..100).map(|b| b.wrapping_mul(7)));
+        let (ops, rebuilt) = scan_all(&old, &new, leaf, 50);
+        assert_eq!(rebuilt, new);
+        assert_eq!(copy_count(&ops), 4, "the whole old prefix copies");
+        assert_eq!(literal_bytes(&ops), 100, "only the appended tail ships");
+    }
+
+    #[test]
+    fn truncation_ships_nothing_extra() {
+        let leaf = 32;
+        let old: Vec<u8> = (0u8..=255).cycle().take(leaf * 6).collect();
+        let new = old[..leaf * 3 + 10].to_vec();
+        let (ops, rebuilt) = scan_all(&old, &new, leaf, 64);
+        assert_eq!(rebuilt, new);
+        assert_eq!(copy_count(&ops), 3);
+        assert_eq!(literal_bytes(&ops), 10, "only the sub-leaf tail is literal");
+    }
+
+    #[test]
+    fn insertion_shifts_are_found_by_rolling() {
+        // Insert bytes mid-file: every old leaf after the insertion point
+        // sits at a *shifted* (unaligned) offset in the new file. Only a
+        // genuinely rolling weak sum finds those matches.
+        let leaf = 32;
+        let old: Vec<u8> = (0u8..=255).cycle().take(leaf * 8).collect();
+        let mut new = old[..leaf + 7].to_vec();
+        new.extend_from_slice(b"INSERTED");
+        new.extend_from_slice(&old[leaf + 7..]);
+        let (ops, rebuilt) = scan_all(&old, &new, leaf, 60);
+        assert_eq!(rebuilt, new);
+        // Leaf 0 matches aligned; leaves 2..8 match at shifted offsets
+        // (leaf 1 is split by the insertion).
+        let copies = copy_count(&ops);
+        assert!(copies >= 7, "rolling must recover shifted leaves, got {copies} copies");
+        let lit = literal_bytes(&ops);
+        assert!(lit <= 2 * leaf + 8, "literals stay near the insertion, got {lit}");
+    }
+
+    #[test]
+    fn empty_and_sub_leaf_files() {
+        let leaf = 64;
+        // Empty new file: no ops at all.
+        let (ops, rebuilt) = scan_all(b"old content that does not matter", &[], leaf, 16);
+        assert!(ops.is_empty());
+        assert!(rebuilt.is_empty());
+        // Sub-leaf new file: one literal, no window ever forms.
+        let new = b"tiny".to_vec();
+        let (ops, rebuilt) = scan_all(&vec![9u8; leaf * 4], &new, leaf, 2);
+        assert_eq!(rebuilt, new);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(copy_count(&ops), 0);
+        // Empty basis (old file empty): everything literal.
+        let new: Vec<u8> = (0u8..200).collect();
+        let (ops, rebuilt) = scan_all(&[], &new, leaf, 33);
+        assert_eq!(rebuilt, new);
+        assert_eq!(copy_count(&ops), 0);
+    }
+
+    #[test]
+    fn window_state_survives_chunk_boundaries() {
+        // Feed the same mutated file at every chunk size from 1 up: the
+        // op stream must be identical regardless of how the stream is
+        // sliced (window wrap/reset across chunk and leaf boundaries).
+        let leaf = 16;
+        let old: Vec<u8> = (0u8..=255).cycle().take(leaf * 5).collect();
+        let mut new = old.clone();
+        new[2 * leaf + 3] ^= 0xA5; // dirty one mid leaf
+        let (ref_ops, ref_rebuilt) = scan_all(&old, &new, leaf, new.len());
+        for chunk in 1..=40 {
+            let (ops, rebuilt) = scan_all(&old, &new, leaf, chunk);
+            assert_eq!(rebuilt, ref_rebuilt, "chunk {chunk}");
+            assert_eq!(ops, ref_ops, "chunk {chunk}: op stream must be slice-invariant");
+        }
+    }
+
+    #[test]
+    fn scanner_counters_track_ops() {
+        let leaf = 32;
+        let old: Vec<u8> = (3u8..=255).cycle().take(leaf * 6).collect();
+        let mut new = old.clone();
+        new[leaf] ^= 0x42;
+        let basis = basis_of(&old, leaf);
+        let f = factory();
+        let mut sc = DeltaScanner::new(&basis, leaf as u64, &f);
+        sc.update(&new);
+        sc.finish();
+        while sc.pop().is_some() {}
+        assert_eq!(sc.copies, 5);
+        assert_eq!(sc.copied_bytes, 5 * leaf as u64);
+        assert_eq!(sc.literal_bytes, leaf as u64);
+    }
+
+    #[test]
+    fn malformed_sig_payload_is_rejected() {
+        assert!(DeltaBasis::from_sig_payload(100, 32, 16, &[0u8; 21]).is_none());
+        assert!(DeltaBasis::from_sig_payload(100, 0, 16, &[]).is_none());
+        assert!(DeltaBasis::from_sig_payload(100, 32, 0, &[]).is_none());
+        let b = DeltaBasis::from_sig_payload(100, 32, 16, &[0u8; 40]).unwrap();
+        assert_eq!(b.leaves, 2);
+        assert_eq!(b.old_size, 100);
+    }
+}

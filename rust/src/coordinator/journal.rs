@@ -19,7 +19,7 @@
 //!   is *data before journal*: the receiver syncs the destination file,
 //!   then appends + syncs the journal, so a journaled watermark never
 //!   claims bytes the storage could have lost.
-//! * On restart, the receiver offers `(file, watermark)` per journaled
+//! * On restart, the receiver offers `(name, watermark)` per journaled
 //!   record; the sender counter-offers the longest common complete-leaf
 //!   prefix together with its Merkle root over its *own* journaled leaves
 //!   ([`negotiate_sender`]); the receiver folds its leaves to the same
@@ -36,10 +36,29 @@
 //!   `TreeRoot`/descent exchange — so tail corruption repairs at leaf
 //!   granularity, exactly like FIVER-Merkle.
 //!
-//! See DESIGN.md "Checkpoint journal & crash recovery" for the record
-//! format and the crash-consistency argument.
+//! Records are **name-keyed** (journal v2): a record file is named by a
+//! hash of the file's path, and the authoritative name lives inside the
+//! record — so resume and delta survive a changed file list (renames and
+//! insertions shift dataset indices, never names). v2 records also store
+//! a 32-bit rolling weak sum next to each strong leaf digest, which is
+//! exactly the per-leaf signature the delta handshake
+//! ([`negotiate_delta_receiver`]) serves for free. Legacy v1 records
+//! (strong digests only, historically one per dataset index) still parse
+//! and resume; they simply cannot seed a delta basis from the journal.
+//!
+//! To scale to million-file datasets the journal also keeps an
+//! **append-only segment file** (`segment.fjs`): [`Journal::compact`]
+//! folds every per-file record into one length-prefixed segment and
+//! deletes the per-file files, so a quiescent journal is a single file.
+//! Per-file records written after a compaction override the segment copy
+//! for their name; a torn segment tail is dropped at the last whole
+//! frame, exactly like a torn record tail.
+//!
+//! See DESIGN.md "Checkpoint journal & crash recovery" for the v1 record
+//! format and crash-consistency argument, and "Delta sync & journal v2"
+//! for the v2/segment formats and compatibility rules.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -47,14 +66,28 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::delta::{DeltaBasis, DeltaPlan, Rolling32, WEAK_LEN};
 use super::protocol::{Frame, UNIT_FILE};
 use super::{HasherFactory, SessionConfig};
 use crate::hashes::Hasher;
 use crate::merkle::MerkleTree;
 use crate::storage::Storage;
 
-/// Record magic (8 bytes, versioned).
-const MAGIC: &[u8; 8] = b"FVRJNL01";
+/// Record magic, v1 (8 bytes): strong leaf digests only.
+const MAGIC_V1: &[u8; 8] = b"FVRJNL01";
+
+/// Record magic, v2: each leaf entry is a 32-bit rolling weak sum
+/// followed by the strong digest.
+const MAGIC_V2: &[u8; 8] = b"FVRJNL02";
+
+/// Segment-file magic: `SEG_MAGIC` then repeated `[len: u32 LE][record]`
+/// frames, each framing one complete record (either version).
+const SEG_MAGIC: &[u8; 8] = b"FVRJSG02";
+
+/// Cap on one file's delta-signature payload (stays safely under the
+/// frame decoder's 64 MiB payload limit). Basis leaves past the cap are
+/// simply not offered; their spans re-transfer in full.
+const MAX_SIG_BYTES: usize = 48 << 20;
 
 /// Data-sync callback a [`JournalFold`] runs before each checkpoint —
 /// `Storage::sync_file` on the receiver (fdatasync the destination
@@ -72,11 +105,26 @@ const MAX_NAME: usize = 4096;
 // Journal directory
 // ---------------------------------------------------------------------------
 
-/// One endpoint's journal: a directory of per-file records, keyed by the
-/// dataset-global file index (which is stable across restarts because the
-/// engine is re-invoked with the same file list).
+/// One endpoint's journal: a directory of name-keyed per-file records
+/// plus an optional compacted segment file. Lookup is by file *name* —
+/// dataset indices shift when the file list changes between runs, names
+/// do not.
+#[derive(Clone)]
 pub struct Journal {
     dir: PathBuf,
+}
+
+/// FNV-1a over a file name — the stable, path-safe key a record file is
+/// named by. A (vanishingly rare) collision makes two names share one
+/// record slot; the loser parses to a mismatched embedded name, reads as
+/// "no checkpoint", and simply re-transfers in full.
+fn fnv64(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 impl Journal {
@@ -87,18 +135,24 @@ impl Journal {
         Ok(Journal { dir: dir.to_path_buf() })
     }
 
+    /// The journal's directory on disk.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    fn record_path(&self, file_idx: u32) -> PathBuf {
-        self.dir.join(format!("f{file_idx:06}.fjl"))
+    /// Where `name`'s per-file record lives (`r<fnv64(name)>.fjl`).
+    pub fn record_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("r{:016x}.fjl", fnv64(name)))
     }
 
-    /// Start a fresh record for `file_idx` (truncating any stale one).
+    /// The compacted segment file (`segment.fjs`).
+    pub fn segment_path(&self) -> PathBuf {
+        self.dir.join("segment.fjs")
+    }
+
+    /// Start a fresh v2 record for `name` (truncating any stale one).
     pub fn create(
         &self,
-        file_idx: u32,
         name: &str,
         size: u64,
         leaf_size: u64,
@@ -107,13 +161,13 @@ impl Journal {
         anyhow::ensure!(leaf_size > 0 && digest_len > 0, "bad journal geometry");
         anyhow::ensure!(name.len() <= MAX_NAME, "file name too long to journal");
         let mut header = Vec::with_capacity(FIXED_HEADER + name.len());
-        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(MAGIC_V2);
         header.extend_from_slice(&(name.len() as u32).to_le_bytes());
         header.extend_from_slice(&size.to_le_bytes());
         header.extend_from_slice(&leaf_size.to_le_bytes());
         header.extend_from_slice(&(digest_len as u32).to_le_bytes());
         header.extend_from_slice(name.as_bytes());
-        let path = self.record_path(file_idx);
+        let path = self.record_path(name);
         let mut file = File::create(&path)
             .with_context(|| format!("creating journal record {}", path.display()))?;
         file.write_all(&header)?;
@@ -121,80 +175,178 @@ impl Journal {
         Ok(FileJournal {
             file,
             digest_len,
+            stride: WEAK_LEN + digest_len,
             header_len: header.len() as u64,
             synced_leaves: 0,
             pending: Vec::new(),
         })
     }
 
-    /// Reopen an existing record for a resumed file, truncating it to the
-    /// agreed `keep_leaves` digests (the negotiated common prefix). Tail
-    /// digests past the agreement are discarded; appends continue from
-    /// there as the resumed stream flows.
-    pub fn open_resumed(&self, file_idx: u32, keep_leaves: u64) -> Result<FileJournal> {
-        let path = self.record_path(file_idx);
+    /// Reopen `name`'s record for a resumed file, keeping the agreed
+    /// `keep_leaves` entries (the negotiated common prefix) and
+    /// discarding everything past them; appends continue from there as
+    /// the resumed stream flows. The kept prefix is rewritten to the
+    /// name-keyed path, which also upgrades records found in legacy
+    /// index-keyed files or the segment (a record upgraded from v1 stays
+    /// v1 — it has no weak sums to carry).
+    pub fn open_resumed(&self, name: &str, keep_leaves: u64) -> Result<FileJournal> {
         let rec = self
-            .load(file_idx)?
-            .with_context(|| format!("no journal record to resume at {}", path.display()))?;
-        let keep = keep_leaves.min(rec.leaf_count());
-        let header_len = (FIXED_HEADER + rec.name.len()) as u64;
-        let file = OpenOptions::new()
+            .find(name)?
+            .with_context(|| format!("no journal record to resume for {name}"))?;
+        let keep = keep_leaves.min(rec.leaf_count()) as usize;
+        let v2 = rec.has_weaks();
+        let bytes = encode_record(&rec, keep, v2);
+        let path = self.record_path(name);
+        let mut file = File::options()
             .read(true)
             .write(true)
+            .create(true)
+            .truncate(true)
             .open(&path)
-            .with_context(|| format!("reopening journal record {}", path.display()))?;
-        file.set_len(header_len + keep * rec.digest_len as u64)?;
+            .with_context(|| format!("rewriting journal record {}", path.display()))?;
+        file.write_all(&bytes)?;
         file.sync_data().context("journal truncate sync")?;
         Ok(FileJournal {
             file,
             digest_len: rec.digest_len,
-            header_len,
-            synced_leaves: keep,
+            stride: if v2 { WEAK_LEN + rec.digest_len } else { rec.digest_len },
+            header_len: (FIXED_HEADER + rec.name.len()) as u64,
+            synced_leaves: keep as u64,
             pending: Vec::new(),
         })
     }
 
-    /// Parse one record; `None` when absent or invalid (torn header,
-    /// unknown magic — recovery treats both as "no checkpoint").
-    pub fn load(&self, file_idx: u32) -> Result<Option<JournalRecord>> {
-        let path = self.record_path(file_idx);
-        let bytes = match std::fs::read(&path) {
+    /// Parse `name`'s per-file record; `None` when absent or invalid
+    /// (torn header, unknown magic, or a hash-collision slot holding a
+    /// different name — recovery treats all three as "no checkpoint").
+    pub fn load(&self, name: &str) -> Result<Option<JournalRecord>> {
+        let bytes = match std::fs::read(self.record_path(name)) {
             Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
             Err(e) => return Err(e).context("reading journal record"),
         };
-        Ok(parse_record(&bytes))
+        Ok(parse_record(&bytes).filter(|r| r.name == name))
     }
 
-    /// Every parseable record in the journal, keyed by file index.
-    pub fn load_all(&self) -> Result<BTreeMap<u32, JournalRecord>> {
-        let mut out = BTreeMap::new();
+    /// [`Journal::load`] extended to the segment and legacy index-keyed
+    /// files — the resume path's lookup, since a record may live in any
+    /// of the three places.
+    pub fn find(&self, name: &str) -> Result<Option<JournalRecord>> {
+        if let Some(rec) = self.load(name)? {
+            return Ok(Some(rec));
+        }
+        Ok(self.load_all()?.remove(name))
+    }
+
+    /// Every parseable record, keyed by the name embedded in the record:
+    /// the segment's frames first (last occurrence per name wins), then
+    /// every `*.fjl` file (per-file records override the segment).
+    pub fn load_all(&self) -> Result<BTreeMap<String, JournalRecord>> {
+        let mut out = self.load_segment();
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(e) => e,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
             Err(e) => return Err(e).context("reading journal dir"),
         };
         for entry in entries {
-            let entry = entry?;
-            let fname = entry.file_name();
-            let Some(fname) = fname.to_str() else { continue };
-            let Some(idx) = fname
-                .strip_prefix('f')
-                .and_then(|s| s.strip_suffix(".fjl"))
-                .and_then(|s| s.parse::<u32>().ok())
-            else {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("fjl") {
                 continue;
-            };
-            if let Some(rec) = self.load(idx)? {
-                out.insert(idx, rec);
+            }
+            if let Ok(bytes) = std::fs::read(&path) {
+                if let Some(rec) = parse_record(&bytes) {
+                    out.insert(rec.name.clone(), rec);
+                }
             }
         }
         Ok(out)
     }
 
-    /// Drop a record (stale / rejected at handshake). Best-effort.
-    pub fn remove(&self, file_idx: u32) {
-        std::fs::remove_file(self.record_path(file_idx)).ok();
+    /// Parse the segment file into its per-name records (empty when
+    /// absent or unrecognized). A torn tail keeps the valid frame prefix.
+    fn load_segment(&self) -> BTreeMap<String, JournalRecord> {
+        let mut out = BTreeMap::new();
+        let Ok(bytes) = std::fs::read(self.segment_path()) else { return out };
+        if bytes.len() < 8 || &bytes[..8] != SEG_MAGIC {
+            return out;
+        }
+        let mut at = 8usize;
+        while bytes.len() - at >= 4 {
+            let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+            at += 4;
+            if len == 0 || len > bytes.len() - at {
+                break; // torn tail: keep the frames before it
+            }
+            if let Some(rec) = parse_record(&bytes[at..at + len]) {
+                out.insert(rec.name.clone(), rec);
+            }
+            at += len;
+        }
+        out
+    }
+
+    /// Write `records` as a fresh segment (tmp file + atomic rename, so
+    /// a crash leaves either the old segment or the new one).
+    fn write_segment(&self, records: &BTreeMap<String, JournalRecord>) -> Result<()> {
+        let tmp = self.dir.join("segment.fjs.tmp");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(SEG_MAGIC);
+        for rec in records.values() {
+            let body = encode_record(rec, rec.leaf_count() as usize, rec.has_weaks());
+            buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&body);
+        }
+        let mut f = File::create(&tmp).context("creating segment tmp")?;
+        f.write_all(&buf)?;
+        f.sync_data().context("segment sync")?;
+        std::fs::rename(&tmp, self.segment_path()).context("segment rename")?;
+        Ok(())
+    }
+
+    /// Fold every per-file record into one deduplicated segment and
+    /// delete the per-file files — after a completed run the journal is
+    /// a single file regardless of dataset size. Crash-safe: the segment
+    /// replaces atomically, and per-file files deleted late merely
+    /// override the identical segment copy until the next compaction.
+    pub fn compact(&self) -> Result<()> {
+        let all = self.load_all()?;
+        if !all.is_empty() {
+            self.write_segment(&all)?;
+        }
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path.extension().and_then(|e| e.to_str()) == Some("fjl") {
+                    std::fs::remove_file(&path).ok();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop `name`'s record everywhere it may live (stale / rejected at
+    /// handshake): the name-keyed file, any legacy index-keyed file
+    /// carrying the name, and the segment copy. Best-effort.
+    pub fn remove(&self, name: &str) {
+        let keyed = self.record_path(name);
+        std::fs::remove_file(&keyed).ok();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path == keyed || path.extension().and_then(|e| e.to_str()) != Some("fjl") {
+                    continue;
+                }
+                if let Ok(bytes) = std::fs::read(&path) {
+                    if parse_record(&bytes).map(|r| r.name == name).unwrap_or(false) {
+                        std::fs::remove_file(&path).ok();
+                    }
+                }
+            }
+        }
+        let mut seg = self.load_segment();
+        if seg.remove(name).is_some() {
+            self.write_segment(&seg).ok();
+        }
     }
 
     /// Open-or-create the record for one file as its stream begins: a
@@ -204,17 +356,16 @@ impl Journal {
     /// identical journal state (keep-leaves rounding included).
     pub fn begin_record(
         &self,
-        file_idx: u32,
         name: &str,
         size: u64,
         start_at: u64,
         cfg: &SessionConfig,
     ) -> Result<FileJournal> {
         if start_at > 0 {
-            self.open_resumed(file_idx, start_at / cfg.leaf_size)
+            self.open_resumed(name, start_at / cfg.leaf_size)
         } else {
             let dlen = (cfg.hasher)().digest_len();
-            self.create(file_idx, name, size, cfg.leaf_size, dlen)
+            self.create(name, size, cfg.leaf_size, dlen)
         }
     }
 
@@ -223,13 +374,12 @@ impl Journal {
     /// where the stream thread itself folds leaves).
     pub fn begin_file(
         &self,
-        file_idx: u32,
         name: &str,
         size: u64,
         start_at: u64,
         cfg: &SessionConfig,
     ) -> Result<(FileJournal, LeafTracker)> {
-        let fj = self.begin_record(file_idx, name, size, start_at, cfg)?;
+        let fj = self.begin_record(name, size, start_at, cfg)?;
         let tracker = if start_at > 0 {
             LeafTracker::resume(cfg.leaf_size, &cfg.hasher, start_at / cfg.leaf_size)
         } else {
@@ -246,14 +396,13 @@ impl Journal {
     /// source is read-only.
     pub fn begin_fold(
         &self,
-        file_idx: u32,
         name: &str,
         size: u64,
         start_at: u64,
         cfg: &SessionConfig,
         sync_data: Option<DataSync>,
     ) -> Result<JournalFold> {
-        let fj = self.begin_record(file_idx, name, size, start_at, cfg)?;
+        let fj = self.begin_record(name, size, start_at, cfg)?;
         Ok(JournalFold {
             fj,
             checkpoint_leaves: cfg.journal_checkpoint_leaves.max(1),
@@ -263,31 +412,38 @@ impl Journal {
     }
 
     /// Patch a (possibly closed) record after repair `Fix` frames rewrote
-    /// byte `ranges` of the file: every journaled leaf the ranges touch is
-    /// recomputed via `recompute(offset, len)` (a storage re-hash of at
-    /// most the touched leaves) and overwritten in place, then synced. A
-    /// crash mid-patch at worst tears one digest, which fails the next
-    /// resume handshake closed (full re-transfer).
+    /// byte `ranges` of the file: every journaled leaf the ranges touch
+    /// is recomputed via `recompute(offset, len)` (a storage re-hash of
+    /// at most the touched leaves, yielding the strong digest and rolling
+    /// weak sum) and overwritten in place, then synced. A crash mid-patch
+    /// at worst tears one entry, which fails the next resume handshake
+    /// closed (full re-transfer). Only the name-keyed per-file record is
+    /// patched — a segment-only copy is from a prior run, and the current
+    /// run always writes a per-file record that overrides it.
     pub fn patch_record(
         &self,
-        file_idx: u32,
+        name: &str,
         ranges: &[(u64, u64)],
-        mut recompute: impl FnMut(u64, u64) -> Result<Vec<u8>>,
+        mut recompute: impl FnMut(u64, u64) -> Result<(Vec<u8>, u32)>,
     ) -> Result<()> {
-        let Some(rec) = self.load(file_idx)? else { return Ok(()) };
+        let Some(rec) = self.load(name)? else { return Ok(()) };
         let dirty = leaves_touched(ranges, rec.leaf_size, rec.leaf_count());
         if dirty.is_empty() {
             return Ok(());
         }
-        let path = self.record_path(file_idx);
-        let mut file = OpenOptions::new().write(true).open(&path)?;
+        let v2 = rec.has_weaks();
+        let stride = if v2 { WEAK_LEN + rec.digest_len } else { rec.digest_len } as u64;
+        let mut file = OpenOptions::new().write(true).open(self.record_path(name))?;
         let header_len = (FIXED_HEADER + rec.name.len()) as u64;
         for l in dirty {
             let loff = l * rec.leaf_size;
             let llen = rec.leaf_size.min(rec.size.saturating_sub(loff));
-            let d = recompute(loff, llen)?;
+            let (d, w) = recompute(loff, llen)?;
             anyhow::ensure!(d.len() == rec.digest_len, "digest width mismatch in patch");
-            file.seek(SeekFrom::Start(header_len + l * rec.digest_len as u64))?;
+            file.seek(SeekFrom::Start(header_len + l * stride))?;
+            if v2 {
+                file.write_all(&w.to_le_bytes())?;
+            }
             file.write_all(&d)?;
         }
         file.sync_data().context("journal patch sync")?;
@@ -319,9 +475,14 @@ pub(crate) fn leaves_touched(ranges: &[(u64, u64)], leaf_size: u64, recorded: u6
 }
 
 fn parse_record(bytes: &[u8]) -> Option<JournalRecord> {
-    if bytes.len() < FIXED_HEADER || &bytes[..8] != MAGIC {
+    if bytes.len() < FIXED_HEADER {
         return None;
     }
+    let v2 = match &bytes[..8] {
+        m if m == MAGIC_V2 => true,
+        m if m == MAGIC_V1 => false,
+        _ => return None,
+    };
     let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
     let size = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
     let leaf_size = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
@@ -334,46 +495,82 @@ fn parse_record(bytes: &[u8]) -> Option<JournalRecord> {
     }
     let name = std::str::from_utf8(&bytes[FIXED_HEADER..FIXED_HEADER + name_len]).ok()?;
     let tail = &bytes[FIXED_HEADER + name_len..];
-    // Prefix-valid recovery: keep whole digests, drop a torn append, and
+    // Prefix-valid recovery: keep whole entries, drop a torn append, and
     // clip anything past the file's possible leaf count.
+    let stride = if v2 { WEAK_LEN + digest_len } else { digest_len };
     let max_leaves = crate::merkle::leaf_count(size, leaf_size) as usize;
-    let whole = (tail.len() / digest_len).min(max_leaves);
-    Some(JournalRecord {
-        name: name.to_string(),
-        size,
-        leaf_size,
-        digest_len,
-        leaves: tail[..whole * digest_len].to_vec(),
-    })
+    let whole = (tail.len() / stride).min(max_leaves);
+    let mut leaves = Vec::with_capacity(whole * digest_len);
+    let mut weaks = Vec::new();
+    if v2 {
+        weaks.reserve(whole);
+        for entry in tail[..whole * stride].chunks_exact(stride) {
+            weaks.push(u32::from_le_bytes(entry[..WEAK_LEN].try_into().unwrap()));
+            leaves.extend_from_slice(&entry[WEAK_LEN..]);
+        }
+    } else {
+        leaves.extend_from_slice(&tail[..whole * digest_len]);
+    }
+    Some(JournalRecord { name: name.to_string(), size, leaf_size, digest_len, leaves, weaks })
+}
+
+/// Serialize the first `keep` leaf entries of `rec` as a standalone
+/// record (v2 `[weak][strong]` entries when `with_weaks`, else v1).
+/// Requires `keep <= rec.leaf_count()` and, with weaks, that the record
+/// carries them.
+fn encode_record(rec: &JournalRecord, keep: usize, with_weaks: bool) -> Vec<u8> {
+    let dlen = rec.digest_len;
+    let stride = if with_weaks { WEAK_LEN + dlen } else { dlen };
+    let mut out = Vec::with_capacity(FIXED_HEADER + rec.name.len() + keep * stride);
+    out.extend_from_slice(if with_weaks { MAGIC_V2 } else { MAGIC_V1 });
+    out.extend_from_slice(&(rec.name.len() as u32).to_le_bytes());
+    out.extend_from_slice(&rec.size.to_le_bytes());
+    out.extend_from_slice(&rec.leaf_size.to_le_bytes());
+    out.extend_from_slice(&(dlen as u32).to_le_bytes());
+    out.extend_from_slice(rec.name.as_bytes());
+    for i in 0..keep {
+        if with_weaks {
+            out.extend_from_slice(&rec.weaks[i].to_le_bytes());
+        }
+        out.extend_from_slice(&rec.leaves[i * dlen..(i + 1) * dlen]);
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
 // Per-file record writer
 // ---------------------------------------------------------------------------
 
-/// Appender for one file's journal record. Digests buffer in memory and
+/// Appender for one file's journal record. Entries buffer in memory and
 /// become durable only at [`FileJournal::checkpoint`] — callers sync the
 /// data file *first*, so the journal never gets ahead of storage.
 pub struct FileJournal {
     file: File,
     digest_len: usize,
+    /// Bytes one journaled leaf entry occupies: weak + strong digest for
+    /// a v2 record, strong only for one upgraded from legacy v1.
+    stride: usize,
     header_len: u64,
-    /// Digests already appended and synced.
+    /// Entries already appended and synced.
     synced_leaves: u64,
-    /// Buffered digests awaiting the next checkpoint.
+    /// Buffered entries awaiting the next checkpoint.
     pending: Vec<u8>,
 }
 
 impl FileJournal {
-    /// Buffer one completed leaf digest (in leaf order).
-    pub fn push_leaf(&mut self, digest: &[u8]) {
+    /// Buffer one completed leaf entry (in leaf order): the strong digest
+    /// plus its rolling weak sum (dropped on a v1-format record).
+    pub fn push_leaf(&mut self, digest: &[u8], weak: u32) {
         assert_eq!(digest.len(), self.digest_len, "digest width mismatch");
+        if self.stride > self.digest_len {
+            self.pending.extend_from_slice(&weak.to_le_bytes());
+        }
         self.pending.extend_from_slice(digest);
     }
 
-    /// Buffered digests not yet durable.
+    /// Buffered entries not yet durable.
     pub fn pending_leaves(&self) -> u64 {
-        (self.pending.len() / self.digest_len) as u64
+        (self.pending.len() / self.stride) as u64
     }
 
     /// Digests recorded so far (synced + pending).
@@ -388,7 +585,7 @@ impl FileJournal {
         if self.pending.is_empty() {
             return Ok(());
         }
-        let at = self.header_len + self.synced_leaves * self.digest_len as u64;
+        let at = self.header_len + self.synced_leaves * self.stride as u64;
         self.file.seek(SeekFrom::Start(at))?;
         self.file.write_all(&self.pending)?;
         self.file.sync_data().context("journal checkpoint sync")?;
@@ -397,17 +594,25 @@ impl FileJournal {
         Ok(())
     }
 
-    /// Replace an already-recorded leaf digest (repair patched its bytes).
-    /// Synced digests rewrite in place; pending ones patch the buffer.
+    /// Replace an already-recorded leaf entry (repair patched its bytes).
+    /// Synced entries rewrite in place; pending ones patch the buffer.
     /// The write becomes durable at the next [`FileJournal::checkpoint`].
-    pub fn overwrite_leaf(&mut self, idx: u64, digest: &[u8]) -> Result<()> {
+    pub fn overwrite_leaf(&mut self, idx: u64, digest: &[u8], weak: u32) -> Result<()> {
         anyhow::ensure!(digest.len() == self.digest_len, "digest width mismatch");
         anyhow::ensure!(idx < self.leaves_recorded(), "overwrite of unrecorded leaf {idx}");
+        let with_weak = self.stride > self.digest_len;
         if idx < self.synced_leaves {
-            self.file.seek(SeekFrom::Start(self.header_len + idx * self.digest_len as u64))?;
+            self.file.seek(SeekFrom::Start(self.header_len + idx * self.stride as u64))?;
+            if with_weak {
+                self.file.write_all(&weak.to_le_bytes())?;
+            }
             self.file.write_all(digest)?;
         } else {
-            let at = ((idx - self.synced_leaves) as usize) * self.digest_len;
+            let mut at = ((idx - self.synced_leaves) as usize) * self.stride;
+            if with_weak {
+                self.pending[at..at + WEAK_LEN].copy_from_slice(&weak.to_le_bytes());
+                at += WEAK_LEN;
+            }
             self.pending[at..at + self.digest_len].copy_from_slice(digest);
         }
         Ok(())
@@ -445,13 +650,13 @@ pub struct JournalFold {
 }
 
 impl JournalFold {
-    /// Record one completed leaf digest; checkpoints (data sync, then
+    /// Record one completed leaf entry; checkpoints (data sync, then
     /// journal append + fsync) at the configured cadence.
-    pub fn push_leaf(&mut self, digest: &[u8]) {
+    pub fn push_leaf(&mut self, digest: &[u8], weak: u32) {
         if self.failed {
             return;
         }
-        self.fj.push_leaf(digest);
+        self.fj.push_leaf(digest, weak);
         if self.fj.pending_leaves() >= self.checkpoint_leaves {
             self.checkpoint();
         }
@@ -489,17 +694,48 @@ impl JournalFold {
 /// stream finished).
 #[derive(Debug, Clone)]
 pub struct JournalRecord {
+    /// The file's dataset-relative name (the record's key).
     pub name: String,
+    /// Full source size in bytes.
     pub size: u64,
+    /// Merkle leaf granularity the digests were folded at.
     pub leaf_size: u64,
+    /// Width of one strong digest.
     pub digest_len: usize,
-    /// Concatenated leaf digests, `digest_len` stride.
+    /// Concatenated strong leaf digests, `digest_len` stride.
     pub leaves: Vec<u8>,
+    /// Rolling weak sums, one per leaf (empty for legacy v1 records).
+    pub weaks: Vec<u32>,
 }
 
 impl JournalRecord {
+    /// Leaf entries the record holds.
     pub fn leaf_count(&self) -> u64 {
         (self.leaves.len() / self.digest_len) as u64
+    }
+
+    /// Does every recorded leaf carry its rolling weak sum (v2)? Only
+    /// such records can seed a delta basis without re-reading data.
+    pub fn has_weaks(&self) -> bool {
+        self.leaf_count() > 0 && self.weaks.len() as u64 == self.leaf_count()
+    }
+
+    /// The record's delta-signature payload (`[weak][strong]` per *full*
+    /// leaf, capped at `max_leaves`), or `None` when the record carries
+    /// no weak sums. A trailing partial leaf is excluded — it cannot
+    /// anchor a window match.
+    pub fn sig_payload(&self, max_leaves: u64) -> Option<Vec<u8>> {
+        let n = self.aligned_leaves().min(max_leaves) as usize;
+        if n == 0 || self.weaks.len() < n {
+            return None;
+        }
+        let dlen = self.digest_len;
+        let mut out = Vec::with_capacity(n * (WEAK_LEN + dlen));
+        for i in 0..n {
+            out.extend_from_slice(&self.weaks[i].to_le_bytes());
+            out.extend_from_slice(&self.leaves[i * dlen..(i + 1) * dlen]);
+        }
+        Some(out)
     }
 
     /// Does the record cover the whole file (every leaf, including the
@@ -557,6 +793,9 @@ impl JournalRecord {
 pub struct LeafTracker {
     leaf_size: u64,
     hasher: Box<dyn Hasher>,
+    /// Rolling weak sum of the open leaf (journal v2 records one per
+    /// leaf, which is what the delta handshake later serves as a basis).
+    weak: Rolling32,
     /// Bytes absorbed into the open leaf.
     filled: u64,
     /// Leaves completed so far (index of the open leaf).
@@ -564,6 +803,22 @@ pub struct LeafTracker {
 }
 
 impl LeafTracker {
+    /// A tracker positioned at the start of a stream.
+    ///
+    /// ```
+    /// use fiver::coordinator::journal::LeafTracker;
+    /// use fiver::coordinator::native_factory;
+    /// use fiver::hashes::HashAlgorithm;
+    ///
+    /// let factory = native_factory(HashAlgorithm::Md5);
+    /// let mut tracker = LeafTracker::new(4, &factory);
+    /// let mut leaves = Vec::new();
+    /// tracker.update(b"abcdefgh", |idx, digest, weak| leaves.push((idx, digest, weak)));
+    /// tracker.finish(|idx, digest, weak| leaves.push((idx, digest, weak)));
+    /// assert_eq!(leaves.len(), 2); // "abcd" and "efgh", nothing partial
+    /// assert_eq!(leaves[0].0, 0);
+    /// assert_eq!(leaves[1].0, 1);
+    /// ```
     pub fn new(leaf_size: u64, factory: &HasherFactory) -> LeafTracker {
         LeafTracker::resume(leaf_size, factory, 0)
     }
@@ -572,13 +827,21 @@ impl LeafTracker {
     /// (resume: hashing continues at the leaf boundary).
     pub fn resume(leaf_size: u64, factory: &HasherFactory, completed: u64) -> LeafTracker {
         assert!(leaf_size > 0, "leaf_size must be positive");
-        LeafTracker { leaf_size, hasher: factory(), filled: 0, completed }
+        LeafTracker {
+            leaf_size,
+            hasher: factory(),
+            weak: Rolling32::new(),
+            filled: 0,
+            completed,
+        }
     }
 
+    /// Leaf granularity the tracker folds at.
     pub fn leaf_size(&self) -> u64 {
         self.leaf_size
     }
 
+    /// Leaves completed so far (index of the open leaf).
     pub fn completed_leaves(&self) -> u64 {
         self.completed
     }
@@ -593,19 +856,22 @@ impl LeafTracker {
         self.completed * self.leaf_size + self.filled
     }
 
-    /// Absorb in-order bytes; `on_leaf(idx, digest)` fires per completed
-    /// leaf.
-    pub fn update(&mut self, mut data: &[u8], mut on_leaf: impl FnMut(u64, Vec<u8>)) {
+    /// Absorb in-order bytes; `on_leaf(idx, digest, weak)` fires per
+    /// completed leaf with its strong digest and rolling weak sum.
+    pub fn update(&mut self, mut data: &[u8], mut on_leaf: impl FnMut(u64, Vec<u8>, u32)) {
         while !data.is_empty() {
             let take = ((self.leaf_size - self.filled) as usize).min(data.len());
             self.hasher.update(&data[..take]);
+            self.weak.update(&data[..take]);
             self.filled += take as u64;
             data = &data[take..];
             if self.filled == self.leaf_size {
                 let d = self.hasher.finalize();
                 self.hasher.reset();
+                let w = self.weak.digest();
+                self.weak.reset();
                 self.filled = 0;
-                on_leaf(self.completed, d);
+                on_leaf(self.completed, d, w);
                 self.completed += 1;
             }
         }
@@ -613,12 +879,14 @@ impl LeafTracker {
 
     /// Close the stream: emit the final partial leaf, or the single empty
     /// leaf of an empty stream that never emitted anything.
-    pub fn finish(&mut self, mut on_leaf: impl FnMut(u64, Vec<u8>)) {
+    pub fn finish(&mut self, mut on_leaf: impl FnMut(u64, Vec<u8>, u32)) {
         if self.filled > 0 || self.completed == 0 {
             let d = self.hasher.finalize();
             self.hasher.reset();
+            let w = self.weak.digest();
+            self.weak.reset();
             self.filled = 0;
-            on_leaf(self.completed, d);
+            on_leaf(self.completed, d, w);
             self.completed += 1;
         }
     }
@@ -630,6 +898,8 @@ impl LeafTracker {
         assert!((prefix.len() as u64) < self.leaf_size, "partial rebuild spans a whole leaf");
         self.hasher.reset();
         self.hasher.update(prefix);
+        self.weak.reset();
+        self.weak.update(prefix);
         self.filled = prefix.len() as u64;
     }
 }
@@ -644,6 +914,7 @@ pub struct ResumedFile {
     /// First byte the tail stream covers; `== size` for a file whose full
     /// delivery was verified at handshake (skipped outright).
     pub offset: u64,
+    /// Total size in bytes of the journaled file.
     pub size: u64,
     /// Journaled leaf digests covering `[0, offset)` — this endpoint's own
     /// copy, proved root-equal to the peer's at handshake. Seeds the
@@ -653,38 +924,42 @@ pub struct ResumedFile {
 }
 
 /// The negotiated outcome of a resume handshake: per-file restart offsets
-/// and prefix leaves. Empty when resuming was not requested or nothing
-/// matched.
+/// and prefix leaves, keyed by file *name* (the journal's key — dataset
+/// indices are not stable across a changed file list). Empty when
+/// resuming was not requested or nothing matched.
 #[derive(Debug, Clone, Default)]
 pub struct ResumePlan {
-    pub files: std::collections::HashMap<u32, ResumedFile>,
+    /// file name → negotiated resume state.
+    pub files: HashMap<String, ResumedFile>,
 }
 
 impl ResumePlan {
+    /// Nothing resumed.
     pub fn is_empty(&self) -> bool {
         self.files.is_empty()
     }
 
-    pub fn get(&self, file_idx: u32) -> Option<&ResumedFile> {
-        self.files.get(&file_idx)
+    /// The file's negotiated state, if any.
+    pub fn get(&self, name: &str) -> Option<&ResumedFile> {
+        self.files.get(name)
     }
 
     /// The file's agreed *partial* resume state (`None` for fresh files,
     /// fully-skipped files, or a size disagreement) — the single source
     /// of the tail-eligibility predicate, shared by sender and receiver
     /// so the two endpoints can never diverge on what "resumed" means.
-    pub fn partial_for(&self, file_idx: u32, size: u64) -> Option<&ResumedFile> {
-        self.files.get(&file_idx).filter(|r| r.offset > 0 && r.offset < size && r.size == size)
+    pub fn partial_for(&self, name: &str, size: u64) -> Option<&ResumedFile> {
+        self.files.get(name).filter(|r| r.offset > 0 && r.offset < size && r.size == size)
     }
 
     /// Agreed restart offset for a file (`None` = transfer from scratch).
-    pub fn offset_for(&self, file_idx: u32) -> Option<u64> {
-        self.files.get(&file_idx).map(|r| r.offset)
+    pub fn offset_for(&self, name: &str) -> Option<u64> {
+        self.files.get(name).map(|r| r.offset)
     }
 
     /// Was this file fully delivered and verified at handshake?
-    pub fn is_complete(&self, file_idx: u32) -> bool {
-        self.files.get(&file_idx).map(|r| r.offset == r.size).unwrap_or(false)
+    pub fn is_complete(&self, name: &str) -> bool {
+        self.files.get(name).map(|r| r.offset == r.size).unwrap_or(false)
     }
 
     /// Files skipped outright (complete at handshake).
@@ -726,24 +1001,27 @@ pub fn negotiate_receiver<S: Read + Write>(
         Some(j) => j.load_all()?,
         None => BTreeMap::new(),
     };
-    let mut offered: BTreeMap<u32, (JournalRecord, u64)> = BTreeMap::new();
-    for (idx, rec) in records {
+    // Offers ride a receiver-local ordinal in the frames' `file_idx`
+    // field — records are name-keyed, so no shared dataset index exists.
+    // The ordinal only associates each ack/verdict with its offer.
+    let mut offered: Vec<(String, JournalRecord, u64)> = Vec::new();
+    for (name, rec) in records {
         if rec.leaf_size != cfg.leaf_size || rec.digest_len != dlen {
             continue; // journaled under a different configuration
         }
         let wm = rec.watermark();
         // The destination must still hold the journaled prefix.
-        if storage.size_of(&rec.name).unwrap_or(0) < wm {
+        if storage.size_of(&name).unwrap_or(0) < wm {
             continue;
         }
         Frame::ResumeOffer {
-            file_idx: idx,
+            file_idx: offered.len() as u32,
             watermark: wm,
             leaf_size: rec.leaf_size,
-            name: rec.name.clone(),
+            name: name.clone(),
         }
         .write_to(sock)?;
-        offered.insert(idx, (rec, wm));
+        offered.push((name, rec, wm));
     }
     Frame::Done.write_to(sock)?;
     sock.flush()?;
@@ -759,9 +1037,9 @@ pub fn negotiate_receiver<S: Read + Write>(
     }
 
     let mut plan = ResumePlan::default();
-    for (idx, offset, digest) in acks {
-        let Some((rec, wm)) = offered.get(&idx) else {
-            bail!("resume ack for unoffered file {idx}");
+    for (ord, offset, digest) in acks {
+        let Some((name, rec, wm)) = offered.get(ord as usize) else {
+            bail!("resume ack for unoffered ordinal {ord}");
         };
         let k = prefix_leaves_for(offset, rec.size, rec.leaf_size)
             .filter(|&k| offset <= *wm && k <= rec.leaf_count());
@@ -779,11 +1057,11 @@ pub fn negotiate_receiver<S: Read + Write>(
             }
             _ => false,
         };
-        Frame::Verdict { file_idx: idx, unit: UNIT_FILE, ok }.write_to(sock)?;
+        Frame::Verdict { file_idx: ord, unit: UNIT_FILE, ok }.write_to(sock)?;
         if ok {
             let k = k.expect("checked above") as usize;
             plan.files.insert(
-                idx,
+                name.clone(),
                 ResumedFile {
                     offset,
                     size: rec.size,
@@ -794,7 +1072,7 @@ pub fn negotiate_receiver<S: Read + Write>(
             if let Some(j) = journal {
                 // Proven divergence: discard; the file re-transfers from
                 // scratch and the record is recreated at its FileStart.
-                j.remove(idx);
+                j.remove(name);
             }
         }
     }
@@ -818,6 +1096,10 @@ pub fn negotiate_sender<S: Read + Write>(
         Some(j) => j.load_all()?,
         None => BTreeMap::new(),
     };
+    // Offers match the *current* file list by name — a rename or
+    // reordering between runs shifts indices, never names.
+    let by_name: HashMap<&str, usize> =
+        names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
     let mut offers: Vec<(u32, u64, u64, String)> = Vec::new();
     loop {
         let f = Frame::read_from(sock)?.context("resume channel closed awaiting offers")?;
@@ -830,54 +1112,23 @@ pub fn negotiate_sender<S: Read + Write>(
         }
     }
 
-    let mut candidates: BTreeMap<u32, ResumedFile> = BTreeMap::new();
-    for (idx, watermark, leaf_size, name) in offers {
+    let mut candidates: HashMap<u32, (String, ResumedFile)> = HashMap::new();
+    for (ord, watermark, leaf_size, name) in offers {
         let mut ack_offset = 0u64;
         let mut digest = Vec::new();
-        let known = leaf_size == cfg.leaf_size
-            && (idx as usize) < names.len()
-            && names[idx as usize] == name;
-        if known {
-            let size = sizes[idx as usize];
-            if let Some(rec) = records.get(&idx) {
-                // digest_len must match too: folding differently-sized
-                // digests through the session hasher would produce an
-                // ill-formed root that reads as *divergence* on the
-                // receiver (costing it a valid record) instead of as the
-                // stale-configuration decline it really is.
-                let compatible = rec.name == name
-                    && rec.size == size
-                    && rec.leaf_size == leaf_size
-                    && rec.digest_len == dlen
-                    && watermark <= size;
-                if compatible {
-                    // Longest common prefix: the shorter journal wins; a
-                    // full skip needs both records complete.
-                    let (offset, k) = if watermark == size && rec.is_complete() {
-                        (size, crate::merkle::leaf_count(size, leaf_size))
-                    } else {
-                        let k = rec.aligned_leaves().min(watermark / leaf_size);
-                        (k * leaf_size, k)
-                    };
-                    let valid = prefix_leaves_for(offset, size, leaf_size)
-                        .map(|kk| kk == k && k <= rec.leaf_count())
-                        .unwrap_or(false);
-                    if valid {
-                        digest = rec.prefix_root(k, offset, &cfg.hasher);
-                        ack_offset = offset;
-                        candidates.insert(
-                            idx,
-                            ResumedFile {
-                                offset,
-                                size,
-                                leaves: rec.leaves[..k as usize * rec.digest_len].to_vec(),
-                            },
-                        );
-                    }
+        if leaf_size == cfg.leaf_size {
+            if let Some(&idx) = by_name.get(name.as_str()) {
+                if let Some(c) = records.get(&name).and_then(|rec| {
+                    resume_candidate(rec, sizes[idx], watermark, leaf_size, dlen, &cfg.hasher)
+                }) {
+                    let (offset, root, rf) = c;
+                    ack_offset = offset;
+                    digest = root;
+                    candidates.insert(ord, (name.clone(), rf));
                 }
             }
         }
-        Frame::ResumeAck { file_idx: idx, offset: ack_offset, digest }.write_to(sock)?;
+        Frame::ResumeAck { file_idx: ord, offset: ack_offset, digest }.write_to(sock)?;
     }
     Frame::Done.write_to(sock)?;
     sock.flush()?;
@@ -888,13 +1139,218 @@ pub fn negotiate_sender<S: Read + Write>(
         match f {
             Frame::Verdict { file_idx, ok, .. } => {
                 if ok {
-                    if let Some(rf) = candidates.remove(&file_idx) {
-                        plan.files.insert(file_idx, rf);
+                    if let Some((name, rf)) = candidates.remove(&file_idx) {
+                        plan.files.insert(name, rf);
                     }
                 }
             }
             Frame::Done => break,
             other => bail!("expected Verdict on resume channel, got {other:?}"),
+        }
+    }
+    Ok(plan)
+}
+
+/// The sender's counter-offer for one compatible record: the longest
+/// common complete-leaf prefix (the shorter journal wins; a full skip
+/// needs both records complete), its root over our own journaled leaves,
+/// and the resulting resume state. `None` when the record is stale or
+/// incompatible — declined, which the receiver must not read as
+/// divergence. digest_len must match too: folding differently-sized
+/// digests through the session hasher would produce an ill-formed root
+/// that reads as *divergence* on the receiver (costing it a valid
+/// record) instead of the stale-configuration decline it really is.
+fn resume_candidate(
+    rec: &JournalRecord,
+    size: u64,
+    watermark: u64,
+    leaf_size: u64,
+    dlen: usize,
+    factory: &HasherFactory,
+) -> Option<(u64, Vec<u8>, ResumedFile)> {
+    let compatible = rec.size == size
+        && rec.leaf_size == leaf_size
+        && rec.digest_len == dlen
+        && watermark <= size;
+    if !compatible {
+        return None;
+    }
+    let (offset, k) = if watermark == size && rec.is_complete() {
+        (size, crate::merkle::leaf_count(size, leaf_size))
+    } else {
+        let k = rec.aligned_leaves().min(watermark / leaf_size);
+        (k * leaf_size, k)
+    };
+    let valid = prefix_leaves_for(offset, size, leaf_size)
+        .map(|kk| kk == k && k <= rec.leaf_count())
+        .unwrap_or(false);
+    if !valid {
+        return None;
+    }
+    let digest = rec.prefix_root(k, offset, factory);
+    let leaves = rec.leaves[..k as usize * rec.digest_len].to_vec();
+    Some((offset, digest, ResumedFile { offset, size, leaves }))
+}
+
+// ---------------------------------------------------------------------------
+// Delta handshake
+// ---------------------------------------------------------------------------
+
+/// Receiver side of the delta handshake, on the dedicated delta control
+/// connection (its `Hello` with [`super::protocol::DELTA_SESSION`]
+/// already consumed by the accept loop): for every `DeltaReq` the sender
+/// lists, answer a `DeltaSig` with per-leaf `(weak, strong)` signatures
+/// of whatever basis this endpoint holds for the name — served for free
+/// from a compatible complete v2 journal record, else computed by
+/// reading the existing destination data, else empty (decline: the file
+/// transfers in full). The receiver retains no state: reconstruction
+/// later reads the old bytes straight from storage by name, and the
+/// Merkle verification pass backstops a basis that was stale or lying.
+pub fn negotiate_delta_receiver<S: Read + Write>(
+    sock: &mut S,
+    journal: Option<&Journal>,
+    cfg: &SessionConfig,
+    storage: &Arc<dyn Storage>,
+) -> Result<()> {
+    let dlen = (cfg.hasher)().digest_len();
+    let max_leaves = (MAX_SIG_BYTES / (WEAK_LEN + dlen)) as u64;
+    let records = match journal {
+        Some(j) => j.load_all()?,
+        None => BTreeMap::new(),
+    };
+    let mut reqs: Vec<(u32, String)> = Vec::new();
+    loop {
+        let f = Frame::read_from(sock)?.context("delta channel closed awaiting requests")?;
+        match f {
+            Frame::DeltaReq { file_idx, name, .. } => reqs.push((file_idx, name)),
+            Frame::Done => break,
+            other => bail!("expected DeltaReq on delta channel, got {other:?}"),
+        }
+    }
+    for (ord, name) in reqs {
+        let (basis_size, sigs) =
+            delta_sigs_for(records.get(&name), &name, cfg, dlen, max_leaves, storage);
+        Frame::DeltaSig { file_idx: ord, basis_size, sigs }.write_to(sock)?;
+    }
+    Frame::Done.write_to(sock)?;
+    sock.flush()?;
+    Ok(())
+}
+
+/// The receiver's basis signatures for one requested name: `(old size,
+/// payload)`, where an empty payload declines. The journaled fast path
+/// requires a complete v2 record whose geometry matches the session and
+/// whose size matches the bytes actually on disk; anything else falls
+/// back to a read+hash of the destination's full leaves.
+fn delta_sigs_for(
+    rec: Option<&JournalRecord>,
+    name: &str,
+    cfg: &SessionConfig,
+    dlen: usize,
+    max_leaves: u64,
+    storage: &Arc<dyn Storage>,
+) -> (u64, Vec<u8>) {
+    let leaf = cfg.leaf_size;
+    let Ok(old_size) = storage.size_of(name) else {
+        return (0, Vec::new()); // no destination file: nothing to offer
+    };
+    if old_size < leaf {
+        return (old_size, Vec::new()); // no full leaf can anchor a match
+    }
+    if let Some(rec) = rec {
+        let fresh = rec.leaf_size == leaf
+            && rec.digest_len == dlen
+            && rec.is_complete()
+            && rec.size == old_size;
+        if fresh {
+            if let Some(sigs) = rec.sig_payload(max_leaves) {
+                return (old_size, sigs);
+            }
+        }
+    }
+    match sigs_from_storage(storage, name, old_size, leaf, &cfg.hasher, max_leaves) {
+        Ok(sigs) => (old_size, sigs),
+        Err(_) => (old_size, Vec::new()), // unreadable basis: decline
+    }
+}
+
+/// Read the destination's full leaves and fold each into its `(weak,
+/// strong)` signature — the no-journal basis path (one sequential read
+/// of the old data, the cost rsync's receiver pays).
+fn sigs_from_storage(
+    storage: &Arc<dyn Storage>,
+    name: &str,
+    old_size: u64,
+    leaf: u64,
+    factory: &HasherFactory,
+    max_leaves: u64,
+) -> Result<Vec<u8>> {
+    let n = (old_size / leaf).min(max_leaves);
+    let mut rs = storage.open_read(name)?;
+    let mut hasher = factory();
+    let dlen = hasher.digest_len();
+    let mut out = Vec::with_capacity(n as usize * (WEAK_LEN + dlen));
+    let mut buf = vec![0u8; leaf as usize];
+    for i in 0..n {
+        let off = i * leaf;
+        let mut got = 0usize;
+        while got < buf.len() {
+            let k = rs.read_at(off + got as u64, &mut buf[got..])?;
+            anyhow::ensure!(k > 0, "short read hashing delta basis for {name}");
+            got += k;
+        }
+        hasher.reset();
+        hasher.update(&buf);
+        let strong = hasher.finalize();
+        out.extend_from_slice(&Rolling32::of(&buf).to_le_bytes());
+        out.extend_from_slice(&strong);
+    }
+    Ok(out)
+}
+
+/// Sender side of the delta handshake: request a basis for every file
+/// that could possibly reuse one (at least one leaf long), then collect
+/// the receiver's signatures into a [`DeltaPlan`] keyed by this run's
+/// file indices. Files absent from the plan transfer in full.
+pub fn negotiate_delta_sender<S: Read + Write>(
+    sock: &mut S,
+    cfg: &SessionConfig,
+    names: &[String],
+    sizes: &[u64],
+) -> Result<DeltaPlan> {
+    let dlen = (cfg.hasher)().digest_len();
+    let mut asked = vec![false; names.len()];
+    for (i, name) in names.iter().enumerate() {
+        if sizes[i] < cfg.leaf_size {
+            continue; // a sub-leaf source can never anchor a copy
+        }
+        Frame::DeltaReq { file_idx: i as u32, size: sizes[i], name: name.clone() }
+            .write_to(sock)?;
+        asked[i] = true;
+    }
+    Frame::Done.write_to(sock)?;
+    sock.flush()?;
+
+    let mut plan = DeltaPlan::default();
+    loop {
+        let f = Frame::read_from(sock)?.context("delta channel closed awaiting signatures")?;
+        match f {
+            Frame::DeltaSig { file_idx, basis_size, sigs } => {
+                let idx = file_idx as usize;
+                if idx >= names.len() || !asked[idx] {
+                    bail!("delta signature for unrequested file {file_idx}");
+                }
+                if sigs.is_empty() {
+                    continue; // declined
+                }
+                if let Some(b) =
+                    DeltaBasis::from_sig_payload(basis_size, cfg.leaf_size, dlen, &sigs)
+                {
+                    plan.files.insert(file_idx, b);
+                }
+            }
+            Frame::Done => break,
+            other => bail!("expected DeltaSig on delta channel, got {other:?}"),
         }
     }
     Ok(plan)
@@ -921,16 +1377,23 @@ mod tests {
     }
 
     /// Journal `data` through a tracker, checkpointing every leaf.
-    fn record_stream(j: &Journal, idx: u32, name: &str, data: &[u8], leaf: u64, finish: bool) {
+    fn record_stream(j: &Journal, name: &str, data: &[u8], leaf: u64, finish: bool) {
         let f = factory();
         let dlen = f().digest_len();
-        let mut fj = j.create(idx, name, data.len() as u64, leaf, dlen).unwrap();
+        let mut fj = j.create(name, data.len() as u64, leaf, dlen).unwrap();
         let mut tr = LeafTracker::new(leaf, &f);
-        tr.update(data, |_, d| fj.push_leaf(&d));
+        tr.update(data, |_, d, w| fj.push_leaf(&d, w));
         if finish {
-            tr.finish(|_, d| fj.push_leaf(&d));
+            tr.finish(|_, d, w| fj.push_leaf(&d, w));
         }
         fj.checkpoint().unwrap();
+    }
+
+    /// Strong-hash `data` with the test factory.
+    fn strong_of(data: &[u8]) -> Vec<u8> {
+        let mut h = factory()();
+        h.update(data);
+        h.finalize()
     }
 
     #[test]
@@ -939,8 +1402,8 @@ mod tests {
         let j = Journal::open(dir.path()).unwrap();
         let data: Vec<u8> = (0u8..=255).cycle().take(2500).collect();
         // Complete record: 2 full leaves + 1 partial at leaf 1000.
-        record_stream(&j, 0, "a/b.bin", &data, 1000, true);
-        let rec = j.load(0).unwrap().unwrap();
+        record_stream(&j, "a/b.bin", &data, 1000, true);
+        let rec = j.load("a/b.bin").unwrap().unwrap();
         assert_eq!(rec.name, "a/b.bin");
         assert_eq!(rec.size, 2500);
         assert_eq!(rec.leaf_count(), 3);
@@ -948,16 +1411,16 @@ mod tests {
         assert_eq!(rec.aligned_leaves(), 2);
         assert_eq!(rec.watermark(), 2500);
         // Partial record: only whole leaves journaled.
-        record_stream(&j, 1, "c", &data, 1000, false);
-        let rec = j.load(1).unwrap().unwrap();
+        record_stream(&j, "c", &data, 1000, false);
+        let rec = j.load("c").unwrap().unwrap();
         assert_eq!(rec.leaf_count(), 2);
         assert!(!rec.is_complete());
         assert_eq!(rec.watermark(), 2000);
         assert_eq!(j.load_all().unwrap().len(), 2);
         // Missing record.
-        assert!(j.load(9).unwrap().is_none());
-        j.remove(0);
-        assert!(j.load(0).unwrap().is_none());
+        assert!(j.load("nope").unwrap().is_none());
+        j.remove("a/b.bin");
+        assert!(j.load("a/b.bin").unwrap().is_none());
     }
 
     #[test]
@@ -965,20 +1428,124 @@ mod tests {
         let dir = TempDir::create("fiver-jrnl").unwrap();
         let j = Journal::open(dir.path()).unwrap();
         let data = vec![7u8; 3000];
-        record_stream(&j, 0, "t", &data, 1000, false);
-        let path = dir.path().join("f000000.fjl");
-        // Torn append: garbage partial digest at the end.
+        record_stream(&j, "t", &data, 1000, false);
+        let path = j.record_path("t");
+        // Torn append: garbage partial entry at the end.
         let mut bytes = std::fs::read(&path).unwrap();
         bytes.extend_from_slice(&[0xAB; 5]);
         std::fs::write(&path, &bytes).unwrap();
-        let rec = j.load(0).unwrap().unwrap();
-        assert_eq!(rec.leaf_count(), 3, "torn tail drops to the last whole digest");
+        let rec = j.load("t").unwrap().unwrap();
+        assert_eq!(rec.leaf_count(), 3, "torn tail drops to the last whole entry");
         // Torn header: record is invalid, not garbage.
         std::fs::write(&path, &bytes[..10]).unwrap();
-        assert!(j.load(0).unwrap().is_none());
+        assert!(j.load("t").unwrap().is_none());
         // Wrong magic.
         std::fs::write(&path, b"NOTAJRNLxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
-        assert!(j.load(0).unwrap().is_none());
+        assert!(j.load("t").unwrap().is_none());
+    }
+
+    #[test]
+    fn weak_sums_journaled_and_sig_payload() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data: Vec<u8> = (3u8..).map(|b| b.wrapping_mul(31)).take(2500).collect();
+        record_stream(&j, "w", &data, 1000, true);
+        let rec = j.load("w").unwrap().unwrap();
+        assert!(rec.has_weaks());
+        assert_eq!(rec.weaks.len(), 3);
+        assert_eq!(rec.weaks[0], Rolling32::of(&data[..1000]));
+        assert_eq!(rec.weaks[1], Rolling32::of(&data[1000..2000]));
+        let dlen = rec.digest_len;
+        // Signatures cover only *full* leaves: 2 of the 3.
+        let sigs = rec.sig_payload(u64::MAX).unwrap();
+        assert_eq!(sigs.len(), 2 * (WEAK_LEN + dlen));
+        assert_eq!(&sigs[..WEAK_LEN], &rec.weaks[0].to_le_bytes());
+        assert_eq!(&sigs[WEAK_LEN..WEAK_LEN + dlen], &rec.leaves[..dlen]);
+        assert_eq!(&sigs[WEAK_LEN + dlen..2 * WEAK_LEN + dlen], &rec.weaks[1].to_le_bytes());
+        // The cap truncates, and zero full leaves declines.
+        assert_eq!(rec.sig_payload(1).unwrap().len(), WEAK_LEN + dlen);
+        record_stream(&j, "tiny", &data[..500], 1000, true);
+        let tiny = j.load("tiny").unwrap().unwrap();
+        assert!(tiny.sig_payload(u64::MAX).is_none(), "sub-leaf file offers no signatures");
+    }
+
+    /// Hand-build a v1 (strong-only, index-keyed era) record file.
+    fn v1_bytes(name: &str, size: u64, leaf: u64, dlen: usize, digests: &[Vec<u8>]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC_V1);
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(&size.to_le_bytes());
+        b.extend_from_slice(&leaf.to_le_bytes());
+        b.extend_from_slice(&(dlen as u32).to_le_bytes());
+        b.extend_from_slice(name.as_bytes());
+        for d in digests {
+            b.extend_from_slice(d);
+        }
+        b
+    }
+
+    #[test]
+    fn v1_records_read_compatible() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let f = factory();
+        let dlen = f().digest_len();
+        let data = vec![5u8; 4000];
+        let digests: Vec<Vec<u8>> = data.chunks(1000).map(strong_of).collect();
+        // A PR-4-era journal keyed the file by transfer index, not name.
+        let legacy = dir.path().join("f000003.fjl");
+        std::fs::write(&legacy, v1_bytes("legacy.bin", 4000, 1000, dlen, &digests)).unwrap();
+        // Name-keyed lookup misses it; the scan-everything paths find it.
+        assert!(j.load("legacy.bin").unwrap().is_none());
+        let rec = j.find("legacy.bin").unwrap().unwrap();
+        assert_eq!((rec.size, rec.leaf_size, rec.leaf_count()), (4000, 1000, 4));
+        assert!(!rec.has_weaks(), "v1 carries no weak sums");
+        assert!(rec.sig_payload(u64::MAX).is_none(), "strong-only record declines delta");
+        assert!(j.load_all().unwrap().contains_key("legacy.bin"));
+        // Resuming upgrades it to a name-keyed path, still in v1 format
+        // (no weak sums are invented for data we never re-read).
+        let mut fj = j.open_resumed("legacy.bin", 2).unwrap();
+        assert_eq!(fj.leaves_recorded(), 2);
+        let mut tr = LeafTracker::resume(1000, &f, 2);
+        tr.update(&data[2000..], |_, d, w| fj.push_leaf(&d, w));
+        fj.checkpoint().unwrap();
+        let rec = j.load("legacy.bin").unwrap().unwrap();
+        assert_eq!(rec.leaf_count(), 4);
+        assert!(!rec.has_weaks());
+        assert_eq!(rec.leaves, digests.concat());
+    }
+
+    #[test]
+    fn segment_compaction_override_and_remove() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data: Vec<u8> = (0u8..=255).cycle().take(3000).collect();
+        record_stream(&j, "s1", &data[..2500], 1000, true);
+        record_stream(&j, "s2", &data, 1000, false);
+        j.compact().unwrap();
+        assert!(!j.record_path("s1").exists(), "compaction folds per-file records away");
+        assert!(j.segment_path().exists());
+        let all = j.load_all().unwrap();
+        assert_eq!(all.len(), 2);
+        assert!(all["s1"].is_complete());
+        assert_eq!(all["s1"].weaks[0], Rolling32::of(&data[..1000]));
+        assert!(j.load("s1").unwrap().is_none(), "segment entries are not name-keyed files");
+        assert_eq!(j.find("s1").unwrap().unwrap().size, 2500);
+        // A torn segment tail keeps the valid prefix.
+        let mut bytes = std::fs::read(j.segment_path()).unwrap();
+        bytes.extend_from_slice(&[0xAB; 5]);
+        std::fs::write(j.segment_path(), &bytes).unwrap();
+        assert_eq!(j.load_all().unwrap().len(), 2);
+        // A newer per-file record overrides the segment copy.
+        record_stream(&j, "s1", &data[..1200], 1000, true);
+        assert_eq!(j.load_all().unwrap()["s1"].size, 1200);
+        // Remove masks the segment copy too.
+        j.remove("s2");
+        let all = j.load_all().unwrap();
+        assert_eq!(all.len(), 1);
+        assert!(!all.contains_key("s2"));
+        j.remove("s1");
+        assert!(j.load_all().unwrap().is_empty());
     }
 
     #[test]
@@ -991,19 +1558,32 @@ mod tests {
         }
         let tree = b.finish();
         let mut leaves = Vec::new();
+        let mut weaks = Vec::new();
         let mut tr = LeafTracker::new(512, &f);
         for part in data.chunks(777) {
-            tr.update(part, |_, d| leaves.extend_from_slice(&d));
+            tr.update(part, |_, d, w| {
+                leaves.extend_from_slice(&d);
+                weaks.push(w);
+            });
         }
-        tr.finish(|_, d| leaves.extend_from_slice(&d));
+        tr.finish(|_, d, w| {
+            leaves.extend_from_slice(&d);
+            weaks.push(w);
+        });
         assert_eq!(tr.completed_leaves() as usize, tree.leaf_count());
         let rebuilt =
             MerkleTree::from_leaves(512, data.len() as u64, tree.digest_len(), leaves, &f);
         assert_eq!(rebuilt.root(), tree.root());
+        // Weak sums match a one-shot rolling sum over each leaf,
+        // regardless of how the stream was chunked.
+        for (i, w) in weaks.iter().enumerate() {
+            let end = ((i + 1) * 512).min(data.len());
+            assert_eq!(*w, Rolling32::of(&data[i * 512..end]), "leaf {i}");
+        }
         // Empty stream: one empty leaf.
         let mut empty = LeafTracker::new(512, &f);
         let mut n = 0;
-        empty.finish(|_, _| n += 1);
+        empty.finish(|_, _, _| n += 1);
         assert_eq!(n, 1);
         assert_eq!(empty.position(), 0);
     }
@@ -1014,12 +1594,12 @@ mod tests {
         let data = vec![9u8; 4096];
         let mut full = Vec::new();
         let mut tr = LeafTracker::new(1024, &f);
-        tr.update(&data, |_, d| full.extend_from_slice(&d));
+        tr.update(&data, |_, d, _| full.extend_from_slice(&d));
         // Resume after 2 leaves: the tail produces the same digests.
         let mut tail = Vec::new();
         let mut tr2 = LeafTracker::resume(1024, &f, 2);
         assert_eq!(tr2.position(), 2048);
-        tr2.update(&data[2048..], |i, d| {
+        tr2.update(&data[2048..], |i, d, _| {
             assert!(i >= 2);
             tail.extend_from_slice(&d);
         });
@@ -1032,22 +1612,23 @@ mod tests {
         let dir = TempDir::create("fiver-jrnl").unwrap();
         let j = Journal::open(dir.path()).unwrap();
         let data = vec![3u8; 4000];
-        record_stream(&j, 0, "r", &data, 1000, false); // 4 leaves
+        record_stream(&j, "r", &data, 1000, false); // 4 leaves
         let f = factory();
         let dlen = f().digest_len();
-        let mut fj = j.open_resumed(0, 2).unwrap();
+        let mut fj = j.open_resumed("r", 2).unwrap();
         assert_eq!(fj.leaves_recorded(), 2);
         // Re-append leaves 2 and 3 (as the resumed stream would).
         let mut tr = LeafTracker::resume(1000, &f, 2);
-        tr.update(&data[2000..], |_, d| fj.push_leaf(&d));
+        tr.update(&data[2000..], |_, d, w| fj.push_leaf(&d, w));
         fj.checkpoint().unwrap();
-        let rec = j.load(0).unwrap().unwrap();
+        let rec = j.load("r").unwrap().unwrap();
         assert_eq!(rec.leaf_count(), 4);
+        assert!(rec.has_weaks(), "a resumed v2 record keeps its weak sums");
         // The re-appended digests equal the originals.
         let fresh = {
             let mut leaves = Vec::new();
             let mut t = LeafTracker::new(1000, &f);
-            t.update(&data, |_, d| leaves.extend_from_slice(&d));
+            t.update(&data, |_, d, _| leaves.extend_from_slice(&d));
             leaves
         };
         assert_eq!(rec.leaves, fresh);
@@ -1059,24 +1640,21 @@ mod tests {
         let dir = TempDir::create("fiver-jrnl").unwrap();
         let j = Journal::open(dir.path()).unwrap();
         let data = vec![1u8; 3000];
-        record_stream(&j, 0, "p", &data, 1000, true);
+        record_stream(&j, "p", &data, 1000, true);
         // Patch leaf 1 via the closed-record path.
-        let f = factory();
-        let patched: Vec<u8> = {
-            let mut h = f();
-            h.update(&[0xEE; 1000]);
-            h.finalize()
-        };
+        let patched = strong_of(&[0xEE; 1000]);
+        let weak = Rolling32::of(&[0xEE; 1000]);
         let p2 = patched.clone();
-        j.patch_record(0, &[(1500, 10)], move |off, len| {
+        j.patch_record("p", &[(1500, 10)], move |off, len| {
             assert_eq!((off, len), (1000, 1000));
-            Ok(p2.clone())
+            Ok((p2.clone(), weak))
         })
         .unwrap();
-        let rec = j.load(0).unwrap().unwrap();
+        let rec = j.load("p").unwrap().unwrap();
         assert_eq!(&rec.leaves[rec.digest_len..2 * rec.digest_len], &patched[..]);
+        assert_eq!(rec.weaks[1], weak, "the weak sum is patched alongside the digest");
         // Zero-length ranges and out-of-record leaves are ignored.
-        j.patch_record(0, &[(2999, 0)], |_, _| panic!("no leaf touched")).unwrap();
+        j.patch_record("p", &[(2999, 0)], |_, _| panic!("no leaf touched")).unwrap();
         assert!(leaves_touched(&[(5000, 100)], 1000, 3).is_empty());
         assert_eq!(leaves_touched(&[(999, 2)], 1000, 3), vec![0, 1]);
     }
@@ -1087,8 +1665,8 @@ mod tests {
         let j = Journal::open(dir.path()).unwrap();
         let f = factory();
         let data: Vec<u8> = (0u8..=255).cycle().take(5000).collect();
-        record_stream(&j, 0, "x", &data, 1000, false);
-        let rec = j.load(0).unwrap().unwrap();
+        record_stream(&j, "x", &data, 1000, false);
+        let rec = j.load("x").unwrap().unwrap();
         // Root over the first 3 leaves == a builder over the first 3000 B.
         let got = rec.prefix_root(3, 3000, &f);
         let mut b = MerkleBuilder::new(1000, f.clone());
@@ -1106,27 +1684,27 @@ mod tests {
         let data: Vec<u8> = (0u8..=255).cycle().take(10_000).collect();
         let leaf = 1000u64;
         // Records carry the *full* source size; leaves cover the streamed
-        // prefix. file 0: receiver journaled 6 leaves, sender only 4 ->
+        // prefix. f0: receiver journaled 6 leaves, sender only 4 ->
         // the common prefix is the sender's 4000 bytes.
-        let partial = |j: &Journal, idx: u32, name: &str, size: u64, bytes: &[u8]| {
+        let partial = |j: &Journal, name: &str, size: u64, bytes: &[u8]| {
             let f = factory();
             let dlen = f().digest_len();
-            let mut fj = j.create(idx, name, size, leaf, dlen).unwrap();
+            let mut fj = j.create(name, size, leaf, dlen).unwrap();
             let mut tr = LeafTracker::new(leaf, &f);
-            tr.update(bytes, |_, d| fj.push_leaf(&d));
+            tr.update(bytes, |_, d, w| fj.push_leaf(&d, w));
             fj.checkpoint().unwrap();
         };
-        partial(&rj, 0, "f0", 10_000, &data[..6000]);
-        partial(&sj, 0, "f0", 10_000, &data[..4000]);
-        // file 1: both complete -> skipped outright.
-        record_stream(&rj, 1, "f1", &data[..2500], leaf, true);
-        record_stream(&sj, 1, "f1", &data[..2500], leaf, true);
-        // file 2: receiver journal diverges (different bytes) -> rejected.
-        partial(&rj, 2, "f2", 3000, &[0xAA; 3000]);
-        partial(&sj, 2, "f2", 3000, &data[..3000]);
-        // file 3: receiver-only record -> the sender declines; the record
+        partial(&rj, "f0", 10_000, &data[..6000]);
+        partial(&sj, "f0", 10_000, &data[..4000]);
+        // f1: both complete -> skipped outright.
+        record_stream(&rj, "f1", &data[..2500], leaf, true);
+        record_stream(&sj, "f1", &data[..2500], leaf, true);
+        // f2: receiver journal diverges (different bytes) -> rejected.
+        partial(&rj, "f2", 3000, &[0xAA; 3000]);
+        partial(&sj, "f2", 3000, &data[..3000]);
+        // f3: receiver-only record -> the sender declines; the record
         // must survive (a decline is not divergence).
-        partial(&rj, 3, "f3", 4000, &data[..2000]);
+        partial(&rj, "f3", 4000, &data[..2000]);
 
         let cfg = cfg_with(leaf);
         let names: Vec<String> = vec!["f0".into(), "f1".into(), "f2".into(), "f3".into()];
@@ -1151,25 +1729,25 @@ mod tests {
         let rplan = recv.join().unwrap();
 
         for plan in [&splan, &rplan] {
-            assert_eq!(plan.offset_for(0), Some(4000), "common prefix = sender's 4 leaves");
-            assert_eq!(plan.offset_for(1), Some(2500), "both complete -> full skip");
-            assert!(plan.is_complete(1));
-            assert_eq!(plan.offset_for(2), None, "divergent prefix rejected");
-            assert_eq!(plan.offset_for(3), None, "declined offer resumes nothing");
+            assert_eq!(plan.offset_for("f0"), Some(4000), "common prefix = sender's 4 leaves");
+            assert_eq!(plan.offset_for("f1"), Some(2500), "both complete -> full skip");
+            assert!(plan.is_complete("f1"));
+            assert_eq!(plan.offset_for("f2"), None, "divergent prefix rejected");
+            assert_eq!(plan.offset_for("f3"), None, "declined offer resumes nothing");
             assert_eq!(plan.skipped_files(), 1);
             assert_eq!(plan.skipped_bytes(), 4000 + 2500);
         }
-        // Both sides hold root-equal prefix leaves for file 0.
-        let s0 = splan.get(0).unwrap();
-        let r0 = rplan.get(0).unwrap();
+        // Both sides hold root-equal prefix leaves for f0.
+        let s0 = splan.get("f0").unwrap();
+        let r0 = rplan.get("f0").unwrap();
         assert_eq!(s0.leaves, r0.leaves);
         assert_eq!(s0.size, 10_000);
-        // Only *proven divergence* costs a record: file 2 was dropped,
-        // the merely-declined file 3 survives for a later resume.
+        // Only *proven divergence* costs a record: f2 was dropped,
+        // the merely-declined f3 survives for a later resume.
         let rj = Journal::open(&rdir).unwrap();
-        assert!(rj.load(2).unwrap().is_none());
-        assert!(rj.load(3).unwrap().is_some(), "declined record must survive");
-        assert!(rj.load(0).unwrap().is_some());
+        assert!(rj.load("f2").unwrap().is_none());
+        assert!(rj.load("f3").unwrap().is_some(), "declined record must survive");
+        assert!(rj.load("f0").unwrap().is_some());
     }
 
     #[test]
@@ -1198,5 +1776,79 @@ mod tests {
         assert_eq!(prefix_leaves_for(0, 100, 64), None, "offset 0 = no resume");
         assert_eq!(prefix_leaves_for(65, 100, 64), None, "misaligned");
         assert_eq!(prefix_leaves_for(200, 100, 64), None, "past the file");
+    }
+
+    #[test]
+    fn delta_handshake_journaled_hashed_and_declined() {
+        let dir = TempDir::create("fiver-delta").unwrap();
+        let rj = Journal::open(dir.path()).unwrap();
+        let leaf = 1000u64;
+        let cfg = cfg_with(leaf);
+
+        // "big": the receiver holds a complete v2 record for the bytes it
+        // journaled, while the destination file has since been replaced
+        // with different bytes of the *same size*. The free path must
+        // serve the journal's signatures, not re-hash storage.
+        let data_j: Vec<u8> = (0u8..=255).cycle().take(5000).collect();
+        let data_s = vec![0x55u8; 5000];
+        record_stream(&rj, "big", &data_j, leaf, true);
+        // "nojournal": destination bytes only — signatures are computed
+        // by reading and hashing the existing file.
+        let data_n: Vec<u8> = (7u8..).map(|b| b.wrapping_mul(13)).take(3500).collect();
+        let dst = MemStorage::new();
+        dst.put("big", data_s.clone());
+        dst.put("nojournal", data_n.clone());
+        let storage: Arc<dyn Storage> = Arc::new(dst);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rcfg = cfg.clone();
+        let recv = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            negotiate_delta_receiver(&mut sock, Some(&rj), &rcfg, &storage).unwrap()
+        });
+        let names: Vec<String> =
+            vec!["big".into(), "nojournal".into(), "absent".into(), "tiny".into()];
+        let sizes: Vec<u64> = vec![6000, 4000, 2000, 500];
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        let plan = negotiate_delta_sender(&mut sock, &cfg, &names, &sizes).unwrap();
+        recv.join().unwrap();
+
+        // Journal-served basis: confirms the *journaled* leaves...
+        let big = plan.basis(0).expect("journaled basis");
+        assert_eq!((big.old_size, big.leaves), (5000, 5));
+        let w = Rolling32::of(&data_j[..1000]);
+        assert_eq!(big.confirm(w, &strong_of(&data_j[..1000])), Some(0));
+        // ...and not the bytes now sitting in storage.
+        let ws = Rolling32::of(&data_s[..1000]);
+        assert_eq!(big.confirm(ws, &strong_of(&data_s[..1000])), None);
+
+        // Storage-hashed basis: 3 full leaves of the 3500-byte file.
+        let nj = plan.basis(1).expect("storage-hashed basis");
+        assert_eq!((nj.old_size, nj.leaves), (3500, 3));
+        let w1 = Rolling32::of(&data_n[1000..2000]);
+        assert_eq!(nj.confirm(w1, &strong_of(&data_n[1000..2000])), Some(1000));
+
+        // No destination file -> declined; sub-leaf source never asked.
+        assert!(plan.basis(2).is_none(), "absent file declines");
+        assert!(plan.basis(3).is_none(), "sub-leaf file is never requested");
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn delta_handshake_empty_without_state() {
+        let cfg = cfg_with(1024);
+        let storage: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rcfg = cfg.clone();
+        let recv = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            negotiate_delta_receiver(&mut sock, None, &rcfg, &storage).unwrap()
+        });
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        let plan = negotiate_delta_sender(&mut sock, &cfg, &["a".into()], &[5000]).unwrap();
+        recv.join().unwrap();
+        assert!(plan.is_empty());
     }
 }

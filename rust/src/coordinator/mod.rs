@@ -12,12 +12,21 @@
 //! * [`scheduler`] — work items (small files batch, large files stand
 //!   alone), the work-stealing queue feeding N concurrent sessions, and
 //!   the engine configuration/report types.
-//! * [`journal`] — the crash-recovery subsystem: per-file checkpoint
-//!   records of leaf digests with crash-consistent (append-only,
-//!   data-before-journal fsync) writes, and the resume handshake that
-//!   lets a restarted sender/receiver pair verify the already-delivered
-//!   prefix by Merkle-root comparison and re-enqueue only the unfinished
-//!   tail.
+//! * [`journal`] — the crash-recovery and incremental-sync subsystem:
+//!   name-keyed checkpoint records of leaf digests (v2 adds per-leaf
+//!   rolling weak sums) with crash-consistent (append-only,
+//!   data-before-journal fsync) writes, an append-only segment file
+//!   that compacts a million-file journal into one file per transfer,
+//!   the resume handshake that lets a restarted sender/receiver pair
+//!   verify the already-delivered prefix by Merkle-root comparison and
+//!   re-enqueue only the unfinished tail, and the delta handshake that
+//!   ships the receiver's per-leaf signatures to the sender.
+//! * [`delta`] — rsync-style incremental transfer (`--delta`): a 32-bit
+//!   rolling weak checksum scans the new source bytes against the
+//!   receiver's basis signatures, a strong hash confirms candidate
+//!   matches, and only unmatched byte ranges ship as literals; matched
+//!   leaves become `DeltaCopy` ops the receiver satisfies from its own
+//!   disk.
 //! * [`pool`] — the shared hash worker pool: checksum compute decoupled
 //!   from per-session threads (one job per queue-mode file).
 //! * [`sender`] / [`receiver`] — Algorithm 1 (SEND + COMPUTECHECKSUM) and
@@ -39,14 +48,25 @@
 //! the range, recomputes the digest from storage, and re-exchanges until
 //! digests match (§IV-A's efficient error recovery).
 
+/// Pooled refcounted I/O buffers — the zero-copy data plane.
 pub mod bufpool;
+/// Rolling-checksum delta sync (rsync-style) over Merkle leaves.
+pub mod delta;
+/// Leaf-digest journal plus the resume and delta handshakes.
 pub mod journal;
+/// Shared hash worker pool.
 pub mod pool;
+/// Length-prefixed wire frames and their encoding.
 pub mod protocol;
+/// Bounded byte queue between the reader and sender stages.
 pub mod queue;
+/// Receiver side: frame routing, verification, repair.
 pub mod receiver;
+/// Multi-session engine: file scheduling and report aggregation.
 pub mod scheduler;
+/// Session orchestration over loopback or TCP.
 pub mod session;
+/// Sender side: streaming, delta scan, repair rounds.
 pub mod sender;
 
 use std::sync::Arc;
@@ -55,12 +75,19 @@ use std::sync::Arc;
 /// plus a transfer-only baseline for Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RealAlgorithm {
+    /// Transfer with no verification at all (the Eq. 1 baseline).
     TransferOnly,
+    /// Hash each file only after its transfer completes.
     Sequential,
+    /// Pipeline whole-file hashing with the transfer.
     FileLevelPpl,
+    /// Pipeline fixed-size block hashing with the transfer.
     BlockLevelPpl,
+    /// FIVER: file-level verification pipelined at I/O granularity.
     Fiver,
+    /// FIVER verifying fixed-size chunks instead of whole files.
     FiverChunk,
+    /// FIVER choosing file- or chunk-level verification by file size.
     FiverHybrid,
     /// FIVER with a streaming Merkle digest tree (see [`crate::merkle`]):
     /// corruption is localized by binary-searching the tree and only the
@@ -82,6 +109,7 @@ impl RealAlgorithm {
         RealAlgorithm::FiverMerkle,
     ];
 
+    /// Canonical display/CLI name of this algorithm.
     pub fn name(&self) -> &'static str {
         match self {
             RealAlgorithm::TransferOnly => "TransferOnly",
@@ -95,6 +123,7 @@ impl RealAlgorithm {
         }
     }
 
+    /// Parse a CLI algorithm name (aliases accepted).
     pub fn parse(s: &str) -> Option<RealAlgorithm> {
         match s.to_ascii_lowercase().as_str() {
             "transferonly" | "transfer-only" | "none" => Some(RealAlgorithm::TransferOnly),
@@ -145,6 +174,7 @@ pub fn xla_factory(engine: crate::runtime::XlaHashEngine) -> HasherFactory {
 /// Session configuration shared by sender and receiver.
 #[derive(Clone)]
 pub struct SessionConfig {
+    /// Verification policy this session runs.
     pub algorithm: RealAlgorithm,
     /// I/O buffer granularity for reads/sends (paper's `buffer`).
     pub buf_size: usize,
@@ -179,6 +209,14 @@ pub struct SessionConfig {
     /// it; requires the engine path, i.e. `serve_engine` /
     /// `connect_and_send_engine`).
     pub resume: bool,
+    /// Run the delta handshake at engine start and transfer mutated
+    /// files incrementally (`--delta`): the receiver offers per-leaf
+    /// `(weak, strong)` signatures of its existing data — served for
+    /// free from a complete v2 journal record when one matches — and
+    /// the sender ships only byte ranges the rolling-checksum scan
+    /// can't match against that basis. Requires the engine path; most
+    /// useful with `journal_dir` set on the receiver.
+    pub delta: bool,
     /// Journal durability cadence: sync data + journal every this many
     /// completed leaves (and always at file end). Smaller = fresher
     /// checkpoints after a crash, more fsyncs on the stream path.
@@ -190,10 +228,12 @@ pub struct SessionConfig {
     /// draw per-worker [`crate::obs::Shard`]s from it; reports merge
     /// them into per-stage percentiles and a bottleneck label.
     pub obs: crate::obs::Recorder,
+    /// Factory producing the session's streaming hashers.
     pub hasher: HasherFactory,
 }
 
 impl SessionConfig {
+    /// A config with the given policy and hasher; everything else defaulted.
     pub fn new(algorithm: RealAlgorithm, hasher: HasherFactory) -> SessionConfig {
         SessionConfig {
             algorithm,
@@ -207,6 +247,7 @@ impl SessionConfig {
             io_backend: crate::storage::IoBackend::from_env(),
             journal_dir: None,
             resume: false,
+            delta: false,
             journal_checkpoint_leaves: 8,
             obs: crate::obs::Recorder::from_env(),
             hasher,
@@ -284,11 +325,15 @@ impl SessionConfig {
 /// Outcome of a sender-side session.
 #[derive(Debug, Default, Clone)]
 pub struct TransferReport {
+    /// Algorithm name, as reported by [`RealAlgorithm::name`].
     pub algorithm: String,
+    /// Files whose delivery this session completed.
     pub files: usize,
+    /// Payload bytes that crossed the wire.
     pub bytes_sent: u64,
     /// Extra bytes sent for verification repairs.
     pub bytes_resent: u64,
+    /// Verification failures detected (file, chunk or leaf level).
     pub failures_detected: u64,
     /// Repair rounds executed (FixEnd batches sent).
     pub repair_rounds: u64,
@@ -303,6 +348,15 @@ pub struct TransferReport {
     /// Bytes not re-sent thanks to the checkpoint journal (sum of agreed
     /// resume offsets, including fully-skipped files).
     pub bytes_skipped: u64,
+    /// Bytes not sent because the delta scan matched them against the
+    /// receiver's existing data (sum of `DeltaCopy` lengths).
+    pub bytes_skipped_delta: u64,
+    /// Delta mode: leaves whose bytes had to ship as literals (changed
+    /// or unmatched data).
+    pub leaves_dirty: u64,
+    /// Delta mode: leaves satisfied from the receiver's basis without
+    /// sending data.
+    pub leaves_clean: u64,
     /// Data-plane pool telemetry: grace-expired unpooled allocations
     /// (nonzero = the pool was exhausted; consider a larger
     /// `--pool-buffers`).
@@ -337,6 +391,7 @@ pub struct TransferReport {
     /// Span events dropped by contended ring pushes (recording never
     /// blocks; nonzero here means the trace has gaps, not the run).
     pub trace_dropped: u64,
+    /// Wall-clock duration of the run in seconds.
     pub elapsed_secs: f64,
 }
 

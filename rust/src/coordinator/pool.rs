@@ -65,6 +65,7 @@ impl HashPool {
         PoolHandle { tx: self.tx.as_ref().expect("pool already shut down").clone() }
     }
 
+    /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.workers.len()
     }

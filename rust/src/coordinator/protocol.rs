@@ -27,7 +27,9 @@ use super::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
 /// Verification scope of a digest (whole file vs one chunk).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DigestKind {
+    /// Digest covers a whole file.
     File,
+    /// Digest covers one fixed-size chunk.
     Chunk,
 }
 
@@ -80,6 +82,28 @@ pub enum Frame {
     /// offer (no/stale sender journal); the receiver answers every ack
     /// with a `Verdict`.
     ResumeAck { file_idx: u32, offset: u64, digest: Vec<u8> },
+    /// Sender -> receiver on the delta channel: "what basis do you hold
+    /// for this file?" — `a` = the sender's (new) file size, payload =
+    /// file name. The receiver answers each request with a `DeltaSig`.
+    DeltaReq { file_idx: u32, size: u64, name: String },
+    /// Receiver -> sender delta basis: `a` = basis (old destination) file
+    /// size, payload = leaf-ordered `(weak u32 LE, strong digest)`
+    /// signature pairs at `WEAK_LEN + digest_len` stride. An empty
+    /// payload declines (no usable basis: the file transfers in full).
+    DeltaSig { file_idx: u32, basis_size: u64, sigs: Vec<u8> },
+    /// Announce a delta-reconstructed file on the data channel: `a` =
+    /// new file size, payload = name. Followed by interleaved `Data`
+    /// (literal bytes) and `DeltaCopy` instructions in strict new-file
+    /// order, closed by `DeltaEnd`.
+    DeltaStart { file_idx: u32, size: u64, name: String },
+    /// Copy instruction: the receiver already holds these bytes — read
+    /// `len` bytes at `old_off` of its existing destination file and
+    /// append them at `new_off` of the reconstruction. `a` = new_off,
+    /// `b` = old_off, payload = len (u64 LE).
+    DeltaCopy { file_idx: u32, new_off: u64, old_off: u64, len: u64 },
+    /// End of a delta instruction stream: the receiver finalizes the
+    /// staged reconstruction and renames it over the destination.
+    DeltaEnd { file_idx: u32 },
     /// Session end.
     Done,
 }
@@ -99,6 +123,11 @@ const TAG_TREE_REPAIR_SENT: u8 = 12;
 const TAG_HELLO: u8 = 13;
 const TAG_RESUME_OFFER: u8 = 14;
 const TAG_RESUME_ACK: u8 = 15;
+const TAG_DELTA_REQ: u8 = 16;
+const TAG_DELTA_SIG: u8 = 17;
+const TAG_DELTA_START: u8 = 18;
+const TAG_DELTA_COPY: u8 = 19;
+const TAG_DELTA_END: u8 = 20;
 
 /// Unit value meaning "whole file" in Digest/Verdict/FixEnd frames.
 pub const UNIT_FILE: u64 = u64::MAX;
@@ -107,6 +136,11 @@ pub const UNIT_FILE: u64 = u64::MAX;
 /// connection (routed to [`super::journal::negotiate_receiver`] instead
 /// of a transfer session).
 pub const RESUME_SESSION: u32 = u32::MAX;
+
+/// `Hello.session_id` marking the dedicated delta-sync handshake control
+/// connection (routed to [`super::journal::negotiate_delta_receiver`]
+/// instead of a transfer session).
+pub const DELTA_SESSION: u32 = u32::MAX - 1;
 
 /// Fixed frame header width.
 pub const HEADER_LEN: usize = 25;
@@ -171,6 +205,20 @@ impl Frame {
             Frame::ResumeAck { file_idx, offset, digest } => {
                 (TAG_RESUME_ACK, *file_idx, *offset, 0, digest)
             }
+            Frame::DeltaReq { file_idx, size, name } => {
+                (TAG_DELTA_REQ, *file_idx, *size, 0, name.as_bytes())
+            }
+            Frame::DeltaSig { file_idx, basis_size, sigs } => {
+                (TAG_DELTA_SIG, *file_idx, *basis_size, 0, sigs)
+            }
+            Frame::DeltaStart { file_idx, size, name } => {
+                (TAG_DELTA_START, *file_idx, *size, 0, name.as_bytes())
+            }
+            Frame::DeltaCopy { file_idx, new_off, old_off, len } => {
+                count_bytes = len.to_le_bytes();
+                (TAG_DELTA_COPY, *file_idx, *new_off, *old_off, &count_bytes)
+            }
+            Frame::DeltaEnd { file_idx } => (TAG_DELTA_END, *file_idx, 0, 0, &[]),
             Frame::Done => (TAG_DONE, 0, 0, 0, &[]),
         };
         let header = encode_header(tag, idx, a, b, payload.len());
@@ -252,6 +300,24 @@ impl Frame {
                 name: String::from_utf8(payload).context("resume offer name utf8")?,
             },
             TAG_RESUME_ACK => Frame::ResumeAck { file_idx, offset: a, digest: payload },
+            TAG_DELTA_REQ => Frame::DeltaReq {
+                file_idx,
+                size: a,
+                name: String::from_utf8(payload).context("delta req name utf8")?,
+            },
+            TAG_DELTA_SIG => Frame::DeltaSig { file_idx, basis_size: a, sigs: payload },
+            TAG_DELTA_START => Frame::DeltaStart {
+                file_idx,
+                size: a,
+                name: String::from_utf8(payload).context("delta start name utf8")?,
+            },
+            TAG_DELTA_COPY => Frame::DeltaCopy {
+                file_idx,
+                new_off: a,
+                old_off: b,
+                len: u64::from_le_bytes(payload.as_slice().try_into().context("delta copy len")?),
+            },
+            TAG_DELTA_END => Frame::DeltaEnd { file_idx },
             TAG_DONE => Frame::Done,
             _ => bail!("unknown frame tag {tag}"),
         }))
@@ -416,6 +482,12 @@ mod tests {
         });
         roundtrip(Frame::ResumeAck { file_idx: 11, offset: 3 << 20, digest: vec![0x6C; 32] });
         roundtrip(Frame::ResumeAck { file_idx: 12, offset: 0, digest: Vec::new() });
+        roundtrip(Frame::DeltaReq { file_idx: 5, size: 1 << 30, name: "dataset/d.bin".into() });
+        roundtrip(Frame::DeltaSig { file_idx: 5, basis_size: 1 << 30, sigs: vec![0x3B; 72] });
+        roundtrip(Frame::DeltaSig { file_idx: 6, basis_size: 0, sigs: Vec::new() });
+        roundtrip(Frame::DeltaStart { file_idx: 5, size: 1 << 30, name: "dataset/d.bin".into() });
+        roundtrip(Frame::DeltaCopy { file_idx: 5, new_off: 1 << 17, old_off: 65536, len: 65536 });
+        roundtrip(Frame::DeltaEnd { file_idx: 5 });
         roundtrip(Frame::Done);
     }
 

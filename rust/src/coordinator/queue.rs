@@ -40,6 +40,7 @@ pub struct ByteQueue {
 }
 
 impl ByteQueue {
+    /// A queue admitting at most `capacity_bytes` of queued data.
     pub fn new(capacity_bytes: usize) -> ByteQueue {
         assert!(capacity_bytes > 0);
         ByteQueue {
@@ -58,6 +59,7 @@ impl ByteQueue {
         }
     }
 
+    /// Configured capacity in bytes.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

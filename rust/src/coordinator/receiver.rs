@@ -43,8 +43,11 @@ use crate::storage::Storage;
 /// Receiver-side session summary.
 #[derive(Debug, Default, Clone)]
 pub struct ReceiverReport {
+    /// Files fully received and written.
     pub files_received: usize,
+    /// Payload bytes received.
     pub bytes_received: u64,
+    /// Verification units (files, chunks or trees) that passed.
     pub units_verified: u64,
     /// Digest exchanges that failed (corruption caught).
     pub units_failed: u64,
@@ -245,6 +248,10 @@ fn merge_frames(
     // frame (and one open + one sync per batch).
     let mut fix_ranges: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
     let mut fix_batches: HashMap<u32, FixBatch> = HashMap::new();
+    // Files being reconstructed incrementally (`DeltaStart`..`DeltaEnd`):
+    // literals and copy directives land in a staging file that replaces
+    // the destination atomically at `DeltaEnd`.
+    let mut delta_open: HashMap<u32, DeltaFileState> = HashMap::new();
     let mut done_seen = false;
 
     loop {
@@ -297,7 +304,10 @@ fn merge_frames(
             }
             Frame::Data { file_idx, offset, payload } => {
                 report.bytes_received += payload.len() as u64;
-                if let Some(st) = open.get_mut(&file_idx) {
+                if let Some(st) = delta_open.get_mut(&file_idx) {
+                    // Dirty-leaf literals of a delta reconstruction.
+                    st.write_literal(offset, &payload)?;
+                } else if let Some(st) = open.get_mut(&file_idx) {
                     st.write(offset, payload)?;
                 } else {
                     // A stripe outran stripe 0's FileStart (or, worse,
@@ -346,11 +356,67 @@ fn merge_frames(
                 if let Some(st) = open.get_mut(&file_idx) {
                     st.jrn_patch(&ranges, storage)?;
                 } else if let (Some(j), Some(name)) = (journal, names.get(&file_idx)) {
-                    j.patch_record(file_idx, &ranges, |off, len| {
-                        hash_range(storage, name, off, len, &cfg.hasher)
+                    j.patch_record(name, &ranges, |off, len| {
+                        hash_leaf_sig(storage, name, off, len, &cfg.hasher)
                     })?;
                 }
                 tx.send(Event::Repaired { file_idx, unit, ranges }).ok();
+            }
+            Frame::DeltaStart { file_idx, size, name } => {
+                anyhow::ensure!(
+                    !names.contains_key(&file_idx),
+                    "duplicate start for file {file_idx}"
+                );
+                names.insert(file_idx, name.clone());
+                let st = DeltaFileState::new(&name, size, cfg, storage)?;
+                delta_open.insert(file_idx, st);
+            }
+            Frame::DeltaCopy { file_idx, new_off, old_off, len } => {
+                delta_open
+                    .get_mut(&file_idx)
+                    .with_context(|| format!("DeltaCopy for unknown file {file_idx}"))?
+                    .copy(new_off, old_off, len)?;
+            }
+            Frame::DeltaEnd { file_idx } => {
+                let st = delta_open
+                    .remove(&file_idx)
+                    .with_context(|| format!("DeltaEnd for unknown file {file_idx}"))?;
+                let DeltaFileState { name, staging, size, mut writer, reader, .. } = st;
+                // Make the reconstruction durable, then swap it in
+                // atomically — the destination is never observable in a
+                // half-reconstructed state.
+                writer.flush()?;
+                writer.sync()?;
+                drop(writer);
+                drop(reader);
+                storage.rename(&staging, &name)?;
+                report.files_received += 1;
+                // Verification + fresh journal state: re-hash the
+                // reconstructed file from storage on the shared pool (the
+                // integrity backstop — a stale or lying basis surfaces as
+                // a TreeRoot mismatch and is repaired by Fix frames).
+                let verify = cfg.algorithm != RealAlgorithm::TransferOnly;
+                if verify || journal.is_some() {
+                    let storage2 = storage.clone();
+                    let cfg2 = cfg.clone();
+                    let j2 = journal.cloned();
+                    let tx2 = tx.clone();
+                    let hobs = cfg.obs.shard("recv-hash");
+                    pool.submit(move || {
+                        let rehash =
+                            delta_rehash(&storage2, &name, size, &cfg2, j2.as_ref(), &hobs);
+                        if verify {
+                            // An unreadable reconstruction yields a
+                            // placeholder tree: the root mismatch surfaces
+                            // the failure through the normal verdict path
+                            // instead of hanging the sender.
+                            let tree = rehash.unwrap_or_else(|_| {
+                                MerkleBuilder::new(cfg2.leaf_size, cfg2.hasher.clone()).finish()
+                            });
+                            tx2.send(Event::VerifyTree { file_idx, name, tree }).ok();
+                        }
+                    });
+                }
             }
             Frame::Done => done_seen = true,
             other => bail!("unexpected frame on data channel: {other:?}"),
@@ -371,6 +437,11 @@ fn merge_frames(
     }
     anyhow::ensure!(done_seen, "data channels closed before Done");
     anyhow::ensure!(early.is_empty(), "data for files that never started: {:?}", early.keys());
+    anyhow::ensure!(
+        delta_open.is_empty(),
+        "delta reconstructions never ended: {:?}",
+        delta_open.keys()
+    );
     // End of stream: any still-open file either lost data (error) or has
     // spilled queue feeds awaiting a pool worker. Draining those may
     // block, which is safe *only* here and *only* oldest-first: the pool
@@ -450,6 +521,144 @@ impl FixBatch {
     }
 }
 
+/// Per-file state of an incremental reconstruction
+/// (`DeltaStart`..`DeltaEnd`): literal `Data` frames land at their offset
+/// in a staging file, `DeltaCopy` directives pull unchanged leaf runs out
+/// of the old destination, and `DeltaEnd` renames the staging file over
+/// the destination atomically.
+struct DeltaFileState {
+    name: String,
+    staging: String,
+    size: u64,
+    /// The staging file being reconstructed.
+    writer: Box<dyn crate::storage::WriteStream>,
+    /// The old destination — the copy source for unchanged leaves.
+    reader: Box<dyn crate::storage::ReadStream>,
+    /// Reusable bounce buffer for copy directives.
+    buf: Vec<u8>,
+    obs: Shard,
+}
+
+impl DeltaFileState {
+    fn new(
+        name: &str,
+        size: u64,
+        cfg: &SessionConfig,
+        storage: &Arc<dyn Storage>,
+    ) -> Result<DeltaFileState> {
+        let staging = super::delta::staging_name(name);
+        let writer = storage.open_write_sized(&staging, size)?;
+        let reader = storage
+            .open_read(name)
+            .with_context(|| format!("delta basis {name} vanished before reconstruction"))?;
+        Ok(DeltaFileState {
+            name: name.to_string(),
+            staging,
+            size,
+            writer,
+            reader,
+            buf: vec![0u8; 256 * 1024],
+            obs: cfg.obs.shard("recv-delta"),
+        })
+    }
+
+    /// A dirty-leaf literal run from the wire.
+    fn write_literal(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            offset + data.len() as u64 <= self.size,
+            "delta literal past announced size of {}",
+            self.name
+        );
+        let t = self.obs.start();
+        self.writer.write_at(offset, data)?;
+        self.obs.record(Stage::Write, t);
+        Ok(())
+    }
+
+    /// A clean-leaf copy directive: pull `[old_off, old_off+len)` of the
+    /// old destination into `[new_off, ...)` of the staging file.
+    fn copy(&mut self, new_off: u64, old_off: u64, len: u64) -> Result<()> {
+        anyhow::ensure!(
+            new_off + len <= self.size,
+            "delta copy past announced size of {}",
+            self.name
+        );
+        let t = self.obs.start();
+        let mut done = 0u64;
+        while done < len {
+            let want = self.buf.len().min((len - done) as usize);
+            let n = self.reader.read_at(old_off + done, &mut self.buf[..want])?;
+            anyhow::ensure!(
+                n > 0,
+                "short read of delta basis {} at {}",
+                self.name,
+                old_off + done
+            );
+            self.writer.write_at(new_off + done, &self.buf[..n])?;
+            done += n as u64;
+        }
+        self.obs.record(Stage::Write, t);
+        Ok(())
+    }
+}
+
+/// Rebuild verification and journal state for a delta-reconstructed file:
+/// one sequential read of the renamed destination feeds the digest tree
+/// (for the TreeRoot exchange) and a fresh v2 journal record (so the
+/// *next* delta run gets its signature basis for free). Reading back what
+/// storage actually holds — rather than trusting the reconstruction —
+/// is the delta path's end-to-end integrity guarantee.
+fn delta_rehash(
+    storage: &Arc<dyn Storage>,
+    name: &str,
+    size: u64,
+    cfg: &SessionConfig,
+    journal: Option<&Journal>,
+    obs: &Shard,
+) -> Result<MerkleTree> {
+    let factory = &cfg.hasher;
+    let dlen = factory().digest_len();
+    let leaf_size = cfg.leaf_size;
+    let mut fj = match journal {
+        Some(j) => Some(j.create(name, size, leaf_size, dlen)?),
+        None => None,
+    };
+    let total_leaves = crate::merkle::leaf_count(size, leaf_size) as usize;
+    let mut leaves = Vec::with_capacity(total_leaves * dlen);
+    let mut tracker = LeafTracker::new(leaf_size, factory);
+    let mut r = storage.open_read(name)?;
+    let mut buf = vec![0u8; 256 * 1024];
+    let mut pos = 0u64;
+    while pos < size {
+        let want = buf.len().min((size - pos) as usize);
+        let n = r.read_at(pos, &mut buf[..want])?;
+        anyhow::ensure!(n > 0, "short read rehashing {name} at {pos}");
+        let t = obs.start();
+        tracker.update(&buf[..n], |_, d, w| {
+            if let Some(fj) = fj.as_mut() {
+                fj.push_leaf(&d, w);
+            }
+            leaves.extend_from_slice(&d);
+        });
+        obs.record(Stage::Hash, t);
+        pos += n as u64;
+    }
+    tracker.finish(|_, d, w| {
+        if let Some(fj) = fj.as_mut() {
+            fj.push_leaf(&d, w);
+        }
+        leaves.extend_from_slice(&d);
+    });
+    if let Some(mut fj) = fj {
+        // The data was fsynced before the staging rename, so the journal
+        // may attest it immediately (data-before-journal holds).
+        let t = obs.start();
+        fj.checkpoint()?;
+        obs.record(Stage::Journal, t);
+    }
+    Ok(MerkleTree::from_leaves(leaf_size, size, dlen, leaves, factory))
+}
+
 /// Per-file receive state. Bytes may arrive out of order across stripes;
 /// storage writes go straight to their offset while the queue feed (and
 /// the completed-unit emission for re-read mode) follows the contiguous
@@ -510,7 +719,7 @@ impl FileState {
         // the agreed offset, the destination opens without truncation,
         // and verification runs on the journal's digest tree (prefix
         // leaves + streamed tail) regardless of the session algorithm.
-        let resumed = resume.partial_for(file_idx, size).cloned();
+        let resumed = resume.partial_for(name, size).cloned();
         let start_at = resumed.as_ref().map(|r| r.offset).unwrap_or(0);
         let writer = if start_at > 0 {
             storage.open_update(name)?
@@ -547,7 +756,7 @@ impl FileState {
                         let s2 = storage.clone();
                         let n2 = name.to_string();
                         let sync: super::journal::DataSync = Box::new(move || s2.sync_file(&n2));
-                        Some(j.begin_fold(file_idx, name, size, start_at, cfg, Some(sync))?)
+                        Some(j.begin_fold(name, size, start_at, cfg, Some(sync))?)
                     }
                     None => None,
                 };
@@ -599,7 +808,7 @@ impl FileState {
             None
         } else {
             match journal {
-                Some(j) => Some(j.begin_file(file_idx, name, size, start_at, cfg)?),
+                Some(j) => Some(j.begin_file(name, size, start_at, cfg)?),
                 None => None,
             }
         };
@@ -678,7 +887,7 @@ impl FileState {
     fn jrn_feed_buf(&mut self, data: &[u8]) -> Result<()> {
         let Some((fj, tracker)) = self.jrn.as_mut() else { return Ok(()) };
         let t = self.obs.start();
-        tracker.update(data, |_, d| fj.push_leaf(&d));
+        tracker.update(data, |_, d, w| fj.push_leaf(&d, w));
         if fj.pending_leaves() >= self.jrn_checkpoint {
             self.writer.sync()?;
             fj.checkpoint()?;
@@ -703,8 +912,8 @@ impl FileState {
         for &l in &dirty {
             let loff = l * leaf;
             let llen = leaf.min(self.size - loff);
-            let d = hash_range(storage, &self.name, loff, llen, &self.hasher)?;
-            fj.overwrite_leaf(l, &d)?;
+            let (d, w) = hash_leaf_sig(storage, &self.name, loff, llen, &self.hasher)?;
+            fj.overwrite_leaf(l, &d, w)?;
         }
         if partial_dirty && tracker.filled() > 0 {
             // Re-read the open leaf's prefix from storage and rebuild the
@@ -811,7 +1020,7 @@ impl FileState {
         // Close the journal record: final (partial) leaf, then the
         // data-before-journal durability pair.
         if let Some((fj, tracker)) = self.jrn.as_mut() {
-            tracker.finish(|_, d| fj.push_leaf(&d));
+            tracker.finish(|_, d, w| fj.push_leaf(&d, w));
         }
         if self.jrn.is_some() {
             self.writer.sync()?;
@@ -924,9 +1133,9 @@ pub(crate) fn queue_build_tree_fold(
     while let Some(buf) = q.remove() {
         streamed += buf.len() as u64;
         let t = obs.start();
-        tracker.update(&buf, |_, d| {
+        tracker.update(&buf, |_, d, w| {
             if let Some(j) = journal.as_mut() {
-                j.push_leaf(&d);
+                j.push_leaf(&d, w);
             }
             leaves.extend_from_slice(&d);
         });
@@ -935,9 +1144,9 @@ pub(crate) fn queue_build_tree_fold(
     let complete = prefix_bytes + streamed == size;
     if complete {
         let t = obs.start();
-        tracker.finish(|_, d| {
+        tracker.finish(|_, d, w| {
             if let Some(j) = journal.as_mut() {
-                j.push_leaf(&d);
+                j.push_leaf(&d, w);
             }
             leaves.extend_from_slice(&d);
         });
@@ -1172,6 +1381,33 @@ pub(crate) fn hash_range(
         pos += n as u64;
     }
     Ok(h.finalize())
+}
+
+/// Hash `[offset, offset+len)` of a stored file into *both* the strong
+/// digest and the rolling weak sum — one read serves the journal's v2
+/// leaf entry (repair-recompute and delta-rehash paths).
+pub(crate) fn hash_leaf_sig(
+    storage: &Arc<dyn Storage>,
+    name: &str,
+    offset: u64,
+    len: u64,
+    hasher_factory: &super::HasherFactory,
+) -> Result<(Vec<u8>, u32)> {
+    let mut h = hasher_factory();
+    let mut weak = super::delta::Rolling32::new();
+    let mut r = storage.open_read(name)?;
+    let mut buf = vec![0u8; 256 * 1024];
+    let mut pos = offset;
+    let end = offset + len;
+    while pos < end {
+        let want = buf.len().min((end - pos) as usize);
+        let n = r.read_at(pos, &mut buf[..want])?;
+        anyhow::ensure!(n > 0, "short read hashing {name} at {pos}");
+        h.update(&buf[..n]);
+        weak.update(&buf[..n]);
+        pos += n as u64;
+    }
+    Ok((h.finalize(), weak.digest()))
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@ use super::TransferReport;
 /// back-to-back.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WorkItem {
+    /// Indices into the run's file list that this item covers.
     pub files: Vec<usize>,
 }
 
@@ -63,6 +64,7 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
+    /// A config with `concurrency` sessions and defaults elsewhere.
     pub fn with_concurrency(concurrency: usize) -> EngineConfig {
         EngineConfig { concurrency: concurrency.max(1), ..Default::default() }
     }
@@ -105,6 +107,33 @@ impl EngineConfig {
                 }
             })
             .collect()
+    }
+
+    /// Plan a delta run on top of [`EngineConfig::plan_resume`]: files
+    /// with a negotiated signature basis leave their batches and stand
+    /// alone. A delta file's cost is dominated by the local source scan,
+    /// not the wire, so batching several of them into one work item would
+    /// serialize their scans on a single session while others idle; as
+    /// standalone items the work-stealing queue spreads them out.
+    pub fn plan_delta(
+        &self,
+        sizes: &[u64],
+        skip: &std::collections::HashSet<usize>,
+        delta_files: &std::collections::HashSet<usize>,
+    ) -> Vec<WorkItem> {
+        if delta_files.is_empty() {
+            return self.plan_resume(sizes, skip);
+        }
+        let mut out = Vec::new();
+        for item in self.plan_resume(sizes, skip) {
+            let (solo, rest): (Vec<usize>, Vec<usize>) =
+                item.files.iter().copied().partition(|f| delta_files.contains(f));
+            out.extend(solo.into_iter().map(|f| WorkItem { files: vec![f] }));
+            if !rest.is_empty() {
+                out.push(WorkItem { files: rest });
+            }
+        }
+        out
     }
 }
 
@@ -172,6 +201,7 @@ impl WorkStealQueue {
 /// plus the wall-clock of the whole fan-out.
 #[derive(Debug, Default, Clone)]
 pub struct EngineReport {
+    /// One report per sender session, in session order.
     pub per_session: Vec<TransferReport>,
     /// Files skipped outright at the resume handshake (engine-level: the
     /// scheduler never enqueued them).
@@ -206,6 +236,9 @@ impl EngineReport {
             total.failures_detected += r.failures_detected;
             total.repair_rounds += r.repair_rounds;
             total.bytes_reread += r.bytes_reread;
+            total.bytes_skipped_delta += r.bytes_skipped_delta;
+            total.leaves_dirty += r.leaves_dirty;
+            total.leaves_clean += r.leaves_clean;
             total.verify_rtts += r.verify_rtts;
             total.pool_fallback_allocs = total.pool_fallback_allocs.max(r.pool_fallback_allocs);
             total.pool_peak_in_flight = total.pool_peak_in_flight.max(r.pool_peak_in_flight);
@@ -299,6 +332,35 @@ mod tests {
         // Skipping everything leaves an empty plan, not empty items.
         let skip: HashSet<usize> = (0..5).collect();
         assert!(eng.plan_resume(&sizes, &skip).is_empty());
+    }
+
+    #[test]
+    fn plan_delta_isolates_basis_files() {
+        use std::collections::HashSet;
+        let eng = EngineConfig { batch_threshold: 100, batch_bytes: 300, ..Default::default() };
+        // Five small files batch together without delta.
+        let sizes = [50u64, 50, 50, 50, 50];
+        let none: HashSet<usize> = HashSet::new();
+        assert_eq!(eng.plan_delta(&sizes, &none, &none), eng.plan_resume(&sizes, &none));
+        // Files 1 and 3 have a basis: they stand alone, the rest stay
+        // batched, and nothing is lost or duplicated.
+        let delta: HashSet<usize> = [1, 3].into_iter().collect();
+        let plan = eng.plan_delta(&sizes, &none, &delta);
+        let mut solo: Vec<usize> = plan
+            .iter()
+            .filter(|i| i.files.len() == 1 && delta.contains(&i.files[0]))
+            .map(|i| i.files[0])
+            .collect();
+        solo.sort_unstable();
+        assert_eq!(solo, vec![1, 3]);
+        let mut all: Vec<usize> = plan.iter().flat_map(|i| i.files.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        // Completed files still drop out first.
+        let skip: HashSet<usize> = [1].into_iter().collect();
+        let plan = eng.plan_delta(&sizes, &skip, &delta);
+        let all: Vec<usize> = plan.iter().flat_map(|i| i.files.iter().copied()).collect();
+        assert!(!all.contains(&1));
     }
 
     #[test]

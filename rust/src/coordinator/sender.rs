@@ -33,6 +33,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
+use super::delta::{DeltaOp, DeltaPlan, DeltaScanner};
 use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan, ResumedFile};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
@@ -259,6 +260,9 @@ pub struct SenderSession {
     injector: FaultInjector,
     /// Negotiated resume state: per-file restart offsets + prefix leaves.
     resume: Arc<ResumePlan>,
+    /// Negotiated delta bases: per-file weak/strong signatures of the
+    /// receiver's existing data (empty = full-copy every file).
+    delta: Arc<DeltaPlan>,
     /// Checkpoint journal for this endpoint (None = journaling off).
     journal: Option<Journal>,
     /// Shared engine kill switch (crash injection).
@@ -288,6 +292,7 @@ impl SenderSession {
         pool: PoolHandle,
         bufs: BufferPool,
         resume: Arc<ResumePlan>,
+        delta: Arc<DeltaPlan>,
     ) -> Result<SenderSession> {
         anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
         let shared = Shared::new();
@@ -372,6 +377,7 @@ impl SenderSession {
             ctrl_shutdown,
             data_shutdown,
             resume,
+            delta,
             journal,
             obs,
             obs_hash,
@@ -388,11 +394,18 @@ impl SenderSession {
     /// one streams only its journaled tail and verifies end-to-end via
     /// the journal's digest tree (prefix leaves + streamed tail).
     pub fn send_file(&mut self, file_idx: u32, name: &str) -> Result<()> {
-        if self.resume.is_complete(file_idx) {
+        if self.resume.is_complete(name) {
             return Ok(()); // verified at handshake; accounted engine-level
         }
         let size = self.storage.size_of(name)?;
-        let resumed: Option<ResumedFile> = self.resume.partial_for(file_idx, size).cloned();
+        let resumed: Option<ResumedFile> = self.resume.partial_for(name, size).cloned();
+        // Delta path: the receiver offered a signature basis for this file
+        // and no resume prefix claims it — ship only the leaf ranges that
+        // changed. (A resumed partial is already incremental; it wins.)
+        if resumed.is_none() && self.delta.basis(file_idx).is_some() {
+            let delta = self.delta.clone();
+            return self.send_file_delta(file_idx, name, size, delta.basis(file_idx).unwrap());
+        }
         let start_at = resumed.as_ref().map(|r| r.offset).unwrap_or(0);
         let uses_queue = resumed.is_some()
             || self.cfg.algorithm.uses_queue(size, self.cfg.hybrid_threshold);
@@ -429,9 +442,7 @@ impl SenderSession {
             let shared2 = self.shared.clone();
             if tree_mode {
                 let fold = match &self.journal {
-                    Some(j) => {
-                        Some(j.begin_fold(file_idx, name, size, start_at, &self.cfg, None)?)
-                    }
+                    Some(j) => Some(j.begin_fold(name, size, start_at, &self.cfg, None)?),
                     None => None,
                 };
                 let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
@@ -465,7 +476,7 @@ impl SenderSession {
             None
         } else {
             match &self.journal {
-                Some(j) => Some(j.begin_file(file_idx, name, size, start_at, &self.cfg)?),
+                Some(j) => Some(j.begin_file(name, size, start_at, &self.cfg)?),
                 None => None,
             }
         };
@@ -498,7 +509,7 @@ impl SenderSession {
         // Close the final (partial) journal leaf and make it durable.
         if let Some((mut fj, mut tracker)) = jrn.take() {
             let t = self.obs.start();
-            tracker.finish(|_, d| fj.push_leaf(&d));
+            tracker.finish(|_, d, w| fj.push_leaf(&d, w));
             fj.checkpoint()?;
             self.obs.record(Stage::Journal, t);
         }
@@ -518,6 +529,144 @@ impl SenderSession {
             // pace at all.
         }
         self.report.files += 1;
+        Ok(())
+    }
+
+    /// Incremental transfer of one file against the receiver's signature
+    /// basis (rsync over journaled leaves, §delta in DESIGN.md). The source
+    /// is read once; a rolling weak checksum finds candidate leaf matches
+    /// in the basis and a strong digest confirms them. Confirmed leaves
+    /// ship as `DeltaCopy` directives (the receiver copies them from its
+    /// own old data), everything else ships as literal `Data` frames. All
+    /// delta frames ride stripe 0 so `DeltaEnd` cannot overtake them.
+    ///
+    /// Verification is unchanged: the same read feeds the tree-hash queue,
+    /// and the receiver re-hashes its reconstructed file, so a stale or
+    /// corrupt basis is caught by the normal TreeRoot/Fix machinery.
+    fn send_file_delta(
+        &mut self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        basis: &super::delta::DeltaBasis,
+    ) -> Result<()> {
+        if self.verify {
+            // One tree-verified unit, like a resumed file.
+            self.shared.register(file_idx, 1);
+        }
+        self.data_outs[0].send(&Frame::DeltaStart {
+            file_idx,
+            size,
+            name: name.to_string(),
+        })?;
+        // Tree verification + journaling ride the same hash queue as the
+        // FIVER path: the pool job digests the exact bytes being scanned
+        // and journals fresh v2 leaves for the *next* delta run.
+        let queue = if self.verify {
+            let q = ByteQueue::new(self.cfg.queue_capacity);
+            let q2 = q.clone();
+            let hasher = self.cfg.hasher.clone();
+            let shared2 = self.shared.clone();
+            let fold = match &self.journal {
+                Some(j) => Some(j.begin_fold(name, size, 0, &self.cfg, None)?),
+                None => None,
+            };
+            let leaf_size = self.cfg.leaf_size;
+            let hobs = self.obs_hash.clone();
+            self.pool.submit(move || {
+                let tree = queue_build_tree_fold(q2, leaf_size, size, None, hasher, fold, hobs);
+                shared2.put_tree(file_idx, tree);
+            });
+            Some(q)
+        } else {
+            None
+        };
+        let mut scanner = DeltaScanner::new(basis, self.cfg.leaf_size, &self.cfg.hasher);
+        let streamed = self.stream_file_delta(file_idx, name, size, queue.as_ref(), &mut scanner);
+        if let Some(q) = &queue {
+            q.close();
+        }
+        streamed?;
+        self.data_outs[0].send(&Frame::DeltaEnd { file_idx })?;
+        self.data_outs[0].flush()?;
+        self.report.bytes_skipped_delta += scanner.copied_bytes;
+        self.report.leaves_clean += scanner.copies;
+        let leaf = self.cfg.leaf_size.max(1);
+        self.report.leaves_dirty += (scanner.literal_bytes + leaf - 1) / leaf;
+        if self.verify && matches!(self.cfg.algorithm, RealAlgorithm::Sequential) {
+            // Sequential keeps its definitional pacing even in delta mode.
+            self.shared.wait_file_verified(file_idx)?;
+        }
+        self.report.files += 1;
+        Ok(())
+    }
+
+    /// Read/scan loop of the delta path: sequential shared-buffer reads
+    /// feed the rolling scanner and the tree-hash queue; emitted ops are
+    /// flushed to stripe 0 as they appear, so memory stays bounded by the
+    /// scanner's window plus one read buffer.
+    fn stream_file_delta(
+        &mut self,
+        file_idx: u32,
+        name: &str,
+        size: u64,
+        queue: Option<&ByteQueue>,
+        scanner: &mut DeltaScanner<'_>,
+    ) -> Result<()> {
+        let mut reader = self.storage.open_read(name)?;
+        let mut offset = 0u64;
+        while offset < size {
+            if let Some(c) = &self.crash {
+                if c.tripped() {
+                    return Err(anyhow::Error::new(CrashError));
+                }
+            }
+            let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
+            let t = self.obs.start();
+            let chunk: SharedBuf = reader.read_shared(offset, want, &self.bufs)?;
+            anyhow::ensure!(!chunk.is_empty(), "short read of {name} at {offset}");
+            self.obs.record(Stage::Read, t);
+            scanner.update(&chunk);
+            self.flush_delta_ops(file_idx, scanner)?;
+            if let Some(c) = &self.crash {
+                c.consume(chunk.len() as u64);
+            }
+            offset += chunk.len() as u64;
+            self.obs.add_bytes(chunk.len() as u64);
+            if let Some(q) = queue {
+                let t = self.obs.start();
+                q.add(chunk);
+                self.obs.record(Stage::QueueWait, t);
+                self.obs.gauge_depth(q.len_bytes() as u64);
+            }
+        }
+        scanner.finish();
+        self.flush_delta_ops(file_idx, scanner)?;
+        Ok(())
+    }
+
+    /// Drain the scanner's pending ops onto stripe 0. Literal bytes count
+    /// toward `bytes_sent`; copies are pure directives (a few dozen wire
+    /// bytes each) and count toward the skipped total instead.
+    fn flush_delta_ops(&mut self, file_idx: u32, scanner: &mut DeltaScanner<'_>) -> Result<()> {
+        while let Some(op) = scanner.pop() {
+            match op {
+                DeltaOp::Literal { new_off, data } => {
+                    let t = self.obs.start();
+                    self.data_outs[0].send_data(file_idx, new_off, &data)?;
+                    self.obs.record(Stage::Send, t);
+                    self.report.bytes_sent += data.len() as u64;
+                }
+                DeltaOp::Copy { new_off, old_off, len } => {
+                    self.data_outs[0].send(&Frame::DeltaCopy {
+                        file_idx,
+                        new_off,
+                        old_off,
+                        len,
+                    })?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -594,7 +743,7 @@ impl SenderSession {
             // data sync is needed on this side).
             if let Some((fj, tracker)) = jrn.as_mut() {
                 let t = self.obs.start();
-                tracker.update(&chunk, |_, d| fj.push_leaf(&d));
+                tracker.update(&chunk, |_, d, w| fj.push_leaf(&d, w));
                 if fj.pending_leaves() >= self.cfg.journal_checkpoint_leaves.max(1) {
                     fj.checkpoint()?;
                 }
@@ -728,6 +877,7 @@ pub fn run_sender(
         pool.handle(),
         cfg.make_pool(1),
         Arc::new(ResumePlan::default()),
+        Arc::new(DeltaPlan::default()),
     )?;
     for (i, name) in names.iter().enumerate() {
         session.send_file(i as u32, name)?;

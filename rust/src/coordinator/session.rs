@@ -9,9 +9,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::delta::DeltaPlan;
 use super::journal::{self, ResumePlan};
 use super::pool::HashPool;
-use super::protocol::{Frame, RESUME_SESSION};
+use super::protocol::{Frame, DELTA_SESSION, RESUME_SESSION};
 use super::receiver::{serve_session, serve_session_multi, ReceiverReport};
 use super::scheduler::{EngineConfig, EngineReport, WorkStealQueue};
 use super::sender::{run_sender, SenderSession};
@@ -101,6 +102,13 @@ impl ReceiverEndpoint {
                     Arc::new(journal::negotiate_receiver(&mut c, jrnl.as_ref(), cfg, &storage)?);
                 continue;
             }
+            if session_id == DELTA_SESSION {
+                // Serve per-file signature bases from the journal (free)
+                // or by hashing the existing destination data.
+                let jrnl = cfg.open_journal()?;
+                journal::negotiate_delta_receiver(&mut c, jrnl.as_ref(), cfg, &storage)?;
+                continue;
+            }
             let sid = session_id as usize;
             anyhow::ensure!(sid < n, "session id {sid} out of range");
             anyhow::ensure!(ctrls[sid].is_none(), "duplicate ctrl for session {sid}");
@@ -155,6 +163,12 @@ impl ReceiverEndpoint {
         for r in results {
             reports.push(r?);
         }
+        // A clean run folds its per-file records into the append-only
+        // segment, so a million-file journal settles to one file plus a
+        // short tail of fresh records.
+        if let Some(j) = cfg.open_journal()? {
+            j.compact()?;
+        }
         Ok(reports)
     }
 }
@@ -208,17 +222,37 @@ pub fn connect_and_send_engine(
         resume_plan =
             Arc::new(journal::negotiate_sender(&mut c, journal.as_ref(), cfg, &names, &sizes)?);
     }
+    // Delta handshake (opt-in): a second dedicated control connection
+    // fetches per-file signature bases of the receiver's existing data.
+    // Files with a basis transfer incrementally; the rest stream in full.
+    let mut delta_plan = Arc::new(DeltaPlan::default());
+    if cfg.delta {
+        let mut c = TcpStream::connect(ctrl_addr).context("connect delta ctrl")?;
+        c.set_nodelay(true).ok();
+        Frame::Hello { session_id: DELTA_SESSION, stripe_id: 0, stripes: p as u64 }
+            .write_to(&mut c)?;
+        delta_plan = Arc::new(journal::negotiate_delta_sender(&mut c, cfg, &names, &sizes)?);
+    }
     // Files fully delivered and root-verified at handshake never
-    // re-enqueue: the scheduler plans only the unfinished tail.
-    let completed: std::collections::HashSet<usize> = resume_plan
-        .files
-        .keys()
-        .filter(|&&idx| resume_plan.is_complete(idx))
-        .map(|&idx| idx as usize)
+    // re-enqueue: the scheduler plans only the unfinished tail. (The
+    // resume plan is name-keyed; map it back to dataset indices here.)
+    let completed: std::collections::HashSet<usize> = names
+        .iter()
+        .enumerate()
+        .filter(|(_, name)| resume_plan.is_complete(name))
+        .map(|(idx, _)| idx)
         .collect();
     let files_skipped = resume_plan.skipped_files();
     let bytes_skipped = resume_plan.skipped_bytes();
-    let queue = Arc::new(WorkStealQueue::new(eng.plan_resume(&sizes, &completed), n));
+    // Delta files schedule as standalone items (their cost is the local
+    // scan, not the wire — batching several onto one session would
+    // serialize the scans while other sessions idle).
+    let delta_files: std::collections::HashSet<usize> =
+        delta_plan.files.keys().map(|&idx| idx as usize).collect();
+    let queue = Arc::new(WorkStealQueue::new(
+        eng.plan_delta(&sizes, &completed, &delta_files),
+        n,
+    ));
     let pool = HashPool::new(eng.pool_workers());
     // Shared sender-side buffer pool: every session's reads recycle
     // through it, and hash jobs return buffers as they drain the queues.
@@ -239,6 +273,7 @@ pub fn connect_and_send_engine(
         let handle = pool.handle();
         let bufs = bufs.clone();
         let plan = resume_plan.clone();
+        let dplan = delta_plan.clone();
         let data_addr = data_addr.to_string();
         let ctrl_addr = ctrl_addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<TransferReport> {
@@ -268,6 +303,7 @@ pub fn connect_and_send_engine(
                 handle,
                 bufs,
                 plan,
+                dplan,
             )?;
             while let Some(item) = queue.next(sid) {
                 sched_obs.gauge_depth(queue.remaining() as u64);
@@ -284,6 +320,10 @@ pub fn connect_and_send_engine(
     let mut per_session = Vec::with_capacity(n);
     for r in results {
         per_session.push(r?);
+    }
+    // Clean-run journal hygiene, mirroring the receiver side.
+    if let Some(j) = cfg.open_journal()? {
+        j.compact()?;
     }
     Ok(EngineReport {
         per_session,

@@ -8,6 +8,7 @@ use crate::sim::algorithms::{run, Algorithm};
 use crate::util::fmt::{bytes, secs, Table};
 use crate::workload::Dataset;
 
+/// Render Table III: fault detection and repair across algorithms.
 pub fn table3() -> String {
     let tb = Testbed::hpclab_40g();
     let ds = Dataset::table3_dataset();

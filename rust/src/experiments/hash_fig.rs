@@ -8,6 +8,7 @@ use crate::sim::algorithms::{checksum_only, run, Algorithm};
 use crate::util::fmt::{secs, Table};
 use crate::workload::Dataset;
 
+/// Render Figure 10: hash algorithm throughput comparison.
 pub fn fig10() -> String {
     let tb = Testbed::esnet_lan();
     let ds = Dataset::esnet_mixed(42);

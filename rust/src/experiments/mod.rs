@@ -6,13 +6,23 @@
 //! Run via the `repro-experiments` binary: `repro-experiments fig5`,
 //! `repro-experiments all`, etc.
 
+/// Design-ablation sweep.
 pub mod ablations;
+/// Concurrency/parallelism sweep.
 pub mod concurrency;
+/// Delta-sync sweep plus a real loopback check.
+pub mod delta;
+/// Table III: fault injection.
 pub mod faults_table;
+/// Figure 10: hash throughput.
 pub mod hash_fig;
+/// Storage I/O backend sweep.
 pub mod io_backend;
+/// Figures 3/5/6/7: verification overheads.
 pub mod overheads;
+/// Crash/resume sweep.
 pub mod resume;
+/// Figures 1/4/8/9: time-series traces.
 pub mod traces;
 
 use crate::config::{AlgoParams, Testbed, GB, MB};
@@ -91,6 +101,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
         "ablations" => ablations::ablations(),
         "concurrency" => concurrency::concurrency_sweep(),
         "resume" => resume::resume_sweep(),
+        "delta" => delta::delta_sweep(),
         "io_backend" => io_backend::io_backend_sweep(),
         "all" => {
             let mut out = String::new();
@@ -107,7 +118,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
 /// All experiment names in paper order.
 pub const ALL: &[&str] = &[
     "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
-    "ablations", "concurrency", "resume", "io_backend",
+    "ablations", "concurrency", "resume", "delta", "io_backend",
 ];
 
 #[cfg(test)]

@@ -43,6 +43,7 @@ pub struct CrashPoint {
 }
 
 impl CrashPoint {
+    /// Crash once `n` payload bytes have been sent.
     pub fn after_bytes(n: u64) -> CrashPoint {
         let budget = n.min(i64::MAX as u64) as i64;
         CrashPoint { after_bytes: n, remaining: Arc::new(AtomicI64::new(budget)) }
@@ -70,15 +71,20 @@ impl CrashPoint {
 /// of a repaired file are clean unless a later occurrence is planned).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fault {
+    /// Index of the file the fault corrupts.
     pub file_idx: usize,
+    /// Byte offset within the file.
     pub offset: u64,
+    /// Which bit to flip at `offset`.
     pub bit: u8,
+    /// Which read of that byte gets corrupted (so repairs can succeed).
     pub occurrence: u32,
 }
 
 /// A deterministic fault plan over a dataset.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
+    /// The injected faults.
     pub faults: Vec<Fault>,
     /// Optional mid-transfer kill (see [`CrashPoint`]).
     pub crash: Option<CrashPoint>,
@@ -139,6 +145,7 @@ impl FaultPlan {
             .collect()
     }
 
+    /// Number of faults in the plan.
     pub fn count(&self) -> usize {
         self.faults.len()
     }
@@ -195,6 +202,7 @@ pub struct FaultInjector {
 }
 
 impl FaultInjector {
+    /// An injector executing `plan`.
     pub fn new(plan: &FaultPlan) -> FaultInjector {
         FaultInjector {
             faults: plan.faults.clone(),

@@ -17,13 +17,20 @@
 
 use super::Hasher;
 
+/// Number of parallel mixing lanes.
 pub const LANES: usize = 8;
+/// Mixing multiplier 1 (golden-ratio prime).
 pub const M1: u32 = 0x9E3779B1;
+/// Mixing multiplier 2.
 pub const M2: u32 = 0x85EBCA77;
+/// Per-chunk offset constant.
 pub const C0: u32 = 0x7F4A7C15;
+/// Domain-separation constant (ASCII `FIVE`).
 pub const MAGIC_F: u32 = 0x46495645;
+/// Finalization constant.
 pub const MAGIC_R: u32 = 0x52C3D2E1;
 
+/// Initial state vector.
 pub const IV: [u32; 8] = [
     0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
     0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19,
@@ -62,10 +69,12 @@ pub struct Geometry {
 }
 
 impl Geometry {
+    /// A geometry of `num_blocks` blocks x `words_per_block` words.
     pub const fn new(num_blocks: usize, words_per_block: usize) -> Geometry {
         Geometry { num_blocks, words_per_block }
     }
 
+    /// Check the geometry against kernel limits.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.num_blocks.is_power_of_two(), "num_blocks must be a power of two");
         anyhow::ensure!(
@@ -76,10 +85,12 @@ impl Geometry {
         Ok(())
     }
 
+    /// Words consumed per chunk.
     pub const fn chunk_words(&self) -> usize {
         self.num_blocks * self.words_per_block
     }
 
+    /// Bytes consumed per chunk.
     pub const fn chunk_bytes(&self) -> usize {
         self.chunk_words() * 4
     }
@@ -222,6 +233,7 @@ impl Default for Fvr256 {
 }
 
 impl Fvr256 {
+    /// A hasher with the given geometry.
     pub fn new(geo: Geometry) -> Self {
         geo.validate().expect("invalid geometry");
         Fvr256 {
@@ -233,6 +245,7 @@ impl Fvr256 {
         }
     }
 
+    /// The configured geometry.
     pub fn geometry(&self) -> Geometry {
         self.geo
     }

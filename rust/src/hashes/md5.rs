@@ -46,6 +46,7 @@ impl Default for Md5 {
 }
 
 impl Md5 {
+    /// A fresh hasher.
     pub fn new() -> Self {
         Md5 { state: INIT, len: 0, buf: [0; 64], buf_len: 0 }
     }

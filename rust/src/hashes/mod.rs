@@ -12,9 +12,13 @@
 //! All implement [`Hasher`]; [`HashAlgorithm`] is the runtime-selectable
 //! registry the coordinator and CLI use.
 
+/// FVR-256: the 8-lane verification digest.
 pub mod fvr256;
+/// MD5 (RFC 1321), from scratch.
 pub mod md5;
+/// SHA-1 (FIPS 180-4), from scratch.
 pub mod sha1;
+/// SHA-256 (FIPS 180-4), from scratch.
 pub mod sha256;
 
 /// Factory producing fresh streaming hashers; shared across threads. The
@@ -41,9 +45,13 @@ pub trait Hasher: Send {
 /// is our TPU-adapted hash, in XLA-artifact or native form).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HashAlgorithm {
+    /// MD5 (128-bit).
     Md5,
+    /// SHA-1 (160-bit).
     Sha1,
+    /// SHA-256 (256-bit).
     Sha256,
+    /// FVR-256 (256-bit, 8 lanes).
     Fvr256,
 }
 
@@ -53,6 +61,7 @@ impl HashAlgorithm {
     pub const ALL: [HashAlgorithm; 4] =
         [HashAlgorithm::Md5, HashAlgorithm::Sha1, HashAlgorithm::Sha256, HashAlgorithm::Fvr256];
 
+    /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             HashAlgorithm::Md5 => "md5",
@@ -62,6 +71,7 @@ impl HashAlgorithm {
         }
     }
 
+    /// Parse a CLI hash name.
     pub fn parse(s: &str) -> Option<HashAlgorithm> {
         match s.to_ascii_lowercase().as_str() {
             "md5" => Some(HashAlgorithm::Md5),

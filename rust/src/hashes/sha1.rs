@@ -22,6 +22,7 @@ impl Default for Sha1 {
 }
 
 impl Sha1 {
+    /// A fresh hasher.
     pub fn new() -> Self {
         Sha1 { state: INIT, len: 0, buf: [0; 64], buf_len: 0 }
     }

@@ -39,6 +39,7 @@ impl Default for Sha256 {
 }
 
 impl Sha256 {
+    /// A fresh hasher.
     pub fn new() -> Self {
         Sha256 { state: INIT, len: 0, buf: [0; 64], buf_len: 0 }
     }

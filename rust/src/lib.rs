@@ -38,6 +38,15 @@
 //!   re-reading a byte, and only the unfinished tail re-enters the
 //!   scheduler (`--journal-dir` / `--resume`; gated by the
 //!   crash-injection harness in `rust/tests/crash_recovery.rs`).
+//!   Re-runs of a mostly-unchanged dataset go **incremental**
+//!   ([`coordinator::delta`], `--delta`): the receiver offers per-leaf
+//!   (rolling-weak, strong) signatures of the data it already holds —
+//!   served from its name-keyed journal when one matches, else hashed
+//!   from storage — the sender scans its source with an rsync-style
+//!   rolling window and ships only unmatched byte ranges, and the
+//!   receiver splices matched leaves out of its own old copy, then
+//!   re-hashes the reconstructed file so the Merkle backstop verifies
+//!   it end to end (DESIGN.md "Delta sync & journal v2").
 //!   [`sim`] re-runs the same scheduling policies — including the engine,
 //!   via [`sim::algorithms::run_concurrent`] — inside a discrete-event
 //!   testbed model so the paper's 165 GB / 100 Gbps experiments (and
@@ -78,20 +87,37 @@
 //! [`workload`], fault injection [`faults`], and a minimal JSON parser
 //! [`util::json`] for the artifact manifest.
 
+#![warn(missing_docs)]
+
+/// Fluid-sim page-cache model with per-extent hit/miss accounting.
 pub mod cache;
+/// Testbed specifications and tunable algorithm parameters.
 pub mod config;
+/// Real transfer engine: sessions, wire protocol, verification, repair.
 pub mod coordinator;
+/// Drivers that regenerate the paper's tables and figures.
 pub mod experiments;
+/// Deterministic fault and crash injection plans.
 pub mod faults;
+/// From-scratch MD5/SHA-1/SHA-256 and the FVR-256 digest.
 pub mod hashes;
+/// Streaming Merkle digest tree over fixed-size leaves.
 pub mod merkle;
+/// Run summaries, hit-ratio traces and the Eq. 1 overhead model.
 pub mod metrics;
+/// TCP throughput envelope (slow start, steady state) for the sim.
 pub mod net;
+/// Allocation-free tracing and metrics plane.
 pub mod obs;
+/// XLA/PJRT runtime hosting the AOT-compiled FVR-256 pipeline.
 pub mod runtime;
+/// Fluid-flow discrete-event simulator of the testbeds.
 pub mod sim;
+/// Pluggable storage I/O backends (buffered, mmap, direct, in-memory).
 pub mod storage;
+/// Dependency-free helpers: CLI, JSON, hex, RNG, tables, temp dirs.
 pub mod util;
+/// Dataset generators describing the files a run transfers.
 pub mod workload;
 
 /// Crate-wide result type (thin alias over `anyhow`).

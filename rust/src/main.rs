@@ -66,6 +66,16 @@
 //! * `--resume` — negotiate per-file restart offsets from the journals at
 //!   session start and re-send only the unfinished tails (both endpoints
 //!   must pass it; forces the engine path).
+//!
+//! Incremental transfers (see `fiver::coordinator::delta`):
+//!
+//! * `--delta` — rsync-style delta sync (forces the engine path): a
+//!   handshake fetches per-leaf signatures of the receiver's existing
+//!   files (free when the receiver has `--journal-dir`, otherwise hashed
+//!   on demand), the sender scans its source with a rolling checksum, and
+//!   only changed leaf ranges ship; unchanged leaves are copied from the
+//!   receiver's own data and the result is re-verified end-to-end. The
+//!   report's `delta:` line shows the bytes that never crossed the wire.
 //! * `local` only: `--crash-after BYTES` — kill the engine mid-transfer
 //!   after ~BYTES streamed, then restart it against the journals and
 //!   report what the resume saved (a self-contained recovery demo).
@@ -142,6 +152,7 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     };
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
+    cfg.delta = args.flag("delta");
     // Any observability flag turns the tracing plane on (FIVER_TRACE=1
     // already did via SessionConfig::new).
     if !cfg.obs.is_enabled()
@@ -173,10 +184,10 @@ fn engine_config(args: &Args) -> EngineConfig {
 }
 
 /// Does this invocation use the parallel engine (vs the classic
-/// single-session protocol without the Hello handshake)? `--resume`
-/// forces it: the resume handshake rides the engine's Hello routing.
+/// single-session protocol without the Hello handshake)? `--resume` and
+/// `--delta` force it: both handshakes ride the engine's Hello routing.
 fn uses_engine(eng: &EngineConfig, cfg: &SessionConfig) -> bool {
-    eng.concurrency > 1 || eng.parallel > 1 || cfg.resume
+    eng.concurrency > 1 || eng.parallel > 1 || cfg.resume || cfg.delta
 }
 
 /// Engine-only tuning knobs do nothing on the classic path; warn instead
@@ -548,6 +559,15 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
             "resume: {} files verified from the journal, {} not re-sent",
             r.files_skipped,
             fmt::bytes(r.bytes_skipped),
+        );
+    }
+    if r.bytes_skipped_delta > 0 || r.leaves_clean > 0 || r.leaves_dirty > 0 {
+        println!(
+            "delta: {} matched from the receiver's data and not re-sent \
+             ({} clean leaves, {} dirty)",
+            fmt::bytes(r.bytes_skipped_delta),
+            r.leaves_clean,
+            r.leaves_dirty,
         );
     }
 }

@@ -103,22 +103,27 @@ impl MerkleTree {
         self.levels.len()
     }
 
+    /// Number of leaves.
     pub fn leaf_count(&self) -> usize {
         self.levels[0].len() / self.digest_len
     }
 
+    /// Leaf size in bytes.
     pub fn leaf_size(&self) -> u64 {
         self.leaf_size
     }
 
+    /// Total file size the tree covers.
     pub fn file_size(&self) -> u64 {
         self.file_size
     }
 
+    /// Digest width in bytes.
     pub fn digest_len(&self) -> usize {
         self.digest_len
     }
 
+    /// The root digest.
     pub fn root(&self) -> &[u8] {
         self.levels.last().unwrap()
     }
@@ -128,6 +133,7 @@ impl MerkleTree {
         self.levels.get(level).map_or(0, |l| l.len() / self.digest_len)
     }
 
+    /// Digest of node `idx` at `level` (0 = leaves).
     pub fn node(&self, level: usize, idx: usize) -> &[u8] {
         &self.levels[level][idx * self.digest_len..(idx + 1) * self.digest_len]
     }
@@ -218,6 +224,7 @@ pub struct MerkleBuilder {
 }
 
 impl MerkleBuilder {
+    /// A builder producing `leaf_size` leaves with `factory` digests.
     pub fn new(leaf_size: u64, factory: DigestFactory) -> MerkleBuilder {
         MerkleBuilder::with_capacity(leaf_size, 0, factory)
     }

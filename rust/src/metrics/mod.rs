@@ -32,6 +32,7 @@ pub struct HitTrace {
 }
 
 impl HitTrace {
+    /// A trace bucketing accesses every `bucket_secs` of (virtual) time.
     pub fn new(bucket_secs: f64) -> HitTrace {
         HitTrace { bucket: bucket_secs, samples: Vec::new() }
     }
@@ -95,6 +96,7 @@ impl HitTrace {
         }
     }
 
+    /// Total missed bytes across the trace.
     pub fn total_misses(&self) -> u64 {
         self.samples.iter().map(|&(_, m)| m).sum()
     }
@@ -136,6 +138,7 @@ impl HitTrace {
 /// what one concurrency slot moved and how long it was occupied.
 #[derive(Debug, Clone, Default)]
 pub struct SessionStats {
+    /// Session index this row describes.
     pub session: usize,
     /// Files this session transferred (work-stealing makes this uneven by
     /// design — slow sessions shed work).
@@ -161,13 +164,17 @@ impl SessionStats {
 /// Summary of one simulated or real run of an algorithm over a dataset.
 #[derive(Debug, Clone, Default)]
 pub struct RunSummary {
+    /// Algorithm name.
     pub algorithm: String,
+    /// Dataset name.
     pub dataset: String,
+    /// Testbed name.
     pub testbed: String,
     /// End-to-end wall/virtual time (s).
     pub total_time: f64,
     /// Baselines for Eq. 1.
     pub t_transfer_only: f64,
+    /// Standalone checksum time — the `t_cksm` term of Eq. 1.
     pub t_checksum_only: f64,
     /// Receiver-side hit trace.
     pub dst_trace: HitTrace,
@@ -192,6 +199,7 @@ pub struct RunSummary {
     /// at 0): grace-expired unpooled allocations, and the peak pooled
     /// buffers in flight.
     pub pool_fallback_allocs: u64,
+    /// Peak pooled buffers in flight (see above).
     pub pool_peak_in_flight: u64,
     /// Adaptive pool-capacity raises (real runs; 0 in the sim).
     pub pool_grow_events: u64,
@@ -215,6 +223,17 @@ pub struct RunSummary {
     pub bottleneck: String,
     /// Busiest stage group over the runner-up (>= 1; capped at 999).
     pub bottleneck_confidence: f64,
+    /// Files the resume handshake verified from the journal and skipped.
+    pub files_skipped: u64,
+    /// Bytes those skipped files would have re-sent.
+    pub bytes_skipped: u64,
+    /// Bytes a `--delta` run matched against the receiver's existing data
+    /// and never sent (sim: the modeled clean fraction of the dataset).
+    pub bytes_skipped_delta: u64,
+    /// Leaves re-sent as literals in a delta run (changed data).
+    pub leaves_dirty: u64,
+    /// Leaves matched clean and copied from the receiver's own data.
+    pub leaves_clean: u64,
     /// Concurrent sessions used (1 for the serial drivers).
     pub concurrency: usize,
     /// Per-session accounting (empty for the serial drivers).
@@ -255,6 +274,11 @@ impl RunSummary {
             stage_stats: report.stage_stats.clone(),
             bottleneck: report.bottleneck.clone(),
             bottleneck_confidence: report.bottleneck_confidence,
+            files_skipped: report.files_skipped,
+            bytes_skipped: report.bytes_skipped,
+            bytes_skipped_delta: report.bytes_skipped_delta,
+            leaves_dirty: report.leaves_dirty,
+            leaves_clean: report.leaves_clean,
             concurrency,
             ..Default::default()
         }
@@ -341,6 +365,11 @@ mod tests {
             verify_rtts: 9,
             pool_fallback_allocs: 3,
             pool_peak_in_flight: 40,
+            bytes_skipped: 128,
+            files_skipped: 1,
+            bytes_skipped_delta: 4096,
+            leaves_dirty: 2,
+            leaves_clean: 14,
             ..Default::default()
         };
         let s = RunSummary::from_real(&report, 4);
@@ -350,6 +379,11 @@ mod tests {
         assert_eq!(s.pool_peak_in_flight, 40);
         assert_eq!(s.concurrency, 4);
         assert_eq!(s.failures_detected, 2);
+        assert_eq!(s.bytes_skipped, 128);
+        assert_eq!(s.files_skipped, 1);
+        assert_eq!(s.bytes_skipped_delta, 4096);
+        assert_eq!(s.leaves_dirty, 2);
+        assert_eq!(s.leaves_clean, 14);
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub struct TcpParams {
 }
 
 impl TcpParams {
+    /// Parameters for a link of the given bandwidth and round-trip time.
     pub fn new(bandwidth_bytes_per_sec: f64, rtt_secs: f64) -> TcpParams {
         TcpParams {
             bandwidth: bandwidth_bytes_per_sec,
@@ -50,6 +51,7 @@ impl TcpParams {
 /// when the sender stops having data to send.
 #[derive(Debug, Clone)]
 pub struct TcpConn {
+    /// The link parameters this connection models.
     pub params: TcpParams,
     /// cwnd in bytes.
     cwnd: f64,
@@ -61,6 +63,7 @@ pub struct TcpConn {
 }
 
 impl TcpConn {
+    /// A fresh connection (starts in slow start).
     pub fn new(params: TcpParams) -> TcpConn {
         TcpConn { params, cwnd: params.init_cwnd as f64, last_send: None, restarts: 0 }
     }

@@ -67,7 +67,9 @@ pub enum Stage {
 }
 
 impl Stage {
+    /// Number of stages.
     pub const COUNT: usize = 9;
+    /// All stages, in pipeline order.
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::Read,
         Stage::Hash,
@@ -80,6 +82,7 @@ impl Stage {
         Stage::Repair,
     ];
 
+    /// Short stage label used in traces and reports.
     pub fn name(&self) -> &'static str {
         match self {
             Stage::Read => "read",
@@ -103,8 +106,11 @@ impl Stage {
 /// duration, both in nanoseconds (virtual nanoseconds in the sim).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpanEvent {
+    /// Stage this span measures.
     pub stage: Stage,
+    /// Start timestamp in ns since the recorder epoch.
     pub t0_ns: u64,
+    /// Span duration in ns.
     pub dur_ns: u64,
 }
 
@@ -177,15 +183,18 @@ pub struct Hist {
 }
 
 impl Hist {
+    /// An empty histogram.
     pub fn new() -> Hist {
         Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
     }
 
+    /// Record one value.
     pub fn record(&self, v: u64) {
         self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// A point-in-time copy of the buckets.
     pub fn snapshot(&self) -> HistSnapshot {
         let mut s = HistSnapshot::default();
         for (i, b) in self.buckets.iter().enumerate() {
@@ -208,7 +217,9 @@ impl Default for Hist {
 /// sample (the shard-merge property test pins this).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HistSnapshot {
+    /// Per-bucket counts (log-spaced bounds).
     pub buckets: [u64; HIST_BUCKETS],
+    /// Sum of all recorded values.
     pub sum: u64,
 }
 
@@ -219,6 +230,7 @@ impl Default for HistSnapshot {
 }
 
 impl HistSnapshot {
+    /// Fold `other` into this snapshot.
     pub fn merge(&mut self, other: &HistSnapshot) {
         for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
             *a += b;
@@ -226,6 +238,7 @@ impl HistSnapshot {
         self.sum += other.sum;
     }
 
+    /// Total recorded values.
     pub fn count(&self) -> u64 {
         self.buckets.iter().sum()
     }
@@ -255,6 +268,7 @@ impl HistSnapshot {
 /// per-op latencies).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageStats {
+    /// Stage name.
     pub stage: String,
     /// Recorded spans for this stage (0 in the sim).
     pub count: u64,
@@ -262,7 +276,9 @@ pub struct StageStats {
     pub busy_secs: f64,
     /// Latency percentiles in microseconds (0 in the sim).
     pub p50_us: f64,
+    /// 95th-percentile duration in microseconds.
     pub p95_us: f64,
+    /// 99th-percentile duration in microseconds.
     pub p99_us: f64,
 }
 
@@ -338,6 +354,7 @@ impl Shard {
         Shard { inner: None }
     }
 
+    /// Whether this shard records anything.
     pub fn is_enabled(&self) -> bool {
         self.inner.is_some()
     }
@@ -392,6 +409,7 @@ impl Shard {
         }
     }
 
+    /// Span events dropped on contended ring pushes.
     pub fn dropped(&self) -> u64 {
         self.inner.as_ref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
     }
@@ -434,10 +452,12 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// A recorder that drops everything at near-zero cost.
     pub fn disabled() -> Recorder {
         Recorder { inner: None }
     }
 
+    /// A recorder that captures spans and counters.
     pub fn enabled() -> Recorder {
         Recorder::with_capacity(DEFAULT_RING_CAPACITY)
     }
@@ -463,6 +483,7 @@ impl Recorder {
         }
     }
 
+    /// Whether recording is on.
     pub fn is_enabled(&self) -> bool {
         self.inner.is_some()
     }
@@ -700,6 +721,7 @@ pub struct Progress {
 const PROGRESS_TICK: Duration = Duration::from_millis(250);
 
 impl Progress {
+    /// Spawn the progress-ticker thread (joined by `finish`/drop).
     pub fn start(rec: Recorder) -> Progress {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();

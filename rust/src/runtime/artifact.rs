@@ -10,7 +10,9 @@ use crate::util::json::Json;
 /// One lowered chunk-size variant from `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct VariantInfo {
+    /// Variant name (keyed by chunk geometry).
     pub name: String,
+    /// Chunk geometry the variant was compiled for.
     pub geometry: Geometry,
     /// HLO text file of the Pallas-kernel pipeline.
     pub artifact: String,
@@ -19,6 +21,7 @@ pub struct VariantInfo {
 }
 
 impl VariantInfo {
+    /// Bytes per hashing chunk under this geometry.
     pub fn chunk_bytes(&self) -> usize {
         self.geometry.chunk_bytes()
     }
@@ -27,7 +30,9 @@ impl VariantInfo {
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Compiled variants listed by the manifest.
     pub variants: Vec<VariantInfo>,
 }
 

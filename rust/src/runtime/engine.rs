@@ -46,6 +46,7 @@ impl XlaHashEngine {
         Self::load_variant(manifest, info, use_ref)
     }
 
+    /// Load one compiled variant, given its manifest entry directly.
     pub fn load_variant(
         manifest: &Manifest,
         info: &VariantInfo,
@@ -72,10 +73,12 @@ impl XlaHashEngine {
             .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
     }
 
+    /// The chunk geometry this engine was compiled for.
     pub fn geometry(&self) -> Geometry {
         self.inner.geometry
     }
 
+    /// Name of the loaded variant.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -26,6 +26,7 @@ pub struct FvrHasher {
 }
 
 impl FvrHasher {
+    /// A streaming hasher backed by `engine`.
     pub fn new(engine: XlaHashEngine) -> FvrHasher {
         let cap = engine.geometry().chunk_bytes();
         FvrHasher {

@@ -71,6 +71,7 @@ impl Algorithm {
         Algorithm::FiverMerkle,
     ];
 
+    /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Sequential => "Sequential",
@@ -83,6 +84,7 @@ impl Algorithm {
         }
     }
 
+    /// Parse a CLI algorithm name.
     pub fn parse(s: &str) -> Option<Algorithm> {
         match s.to_ascii_lowercase().as_str() {
             "sequential" | "seq" => Some(Algorithm::Sequential),
@@ -150,6 +152,70 @@ pub fn checksum_only(tb: Testbed, params: AlgoParams, ds: &Dataset) -> f64 {
         }
     }
     env.now()
+}
+
+/// Delta-sync model (the real engine's `--delta`): per file, exchange the
+/// per-leaf signature payload, then run a coupled scan flow that ships
+/// only [`AlgoParams::delta_fraction`] of the bytes while the receiver
+/// reconstructs and re-hashes locally (see
+/// [`SimEnv::start_delta_flow`]). Signatures are journal-served (free to
+/// produce); `cold_receiver` charges a full read+hash pass of the old
+/// data at the destination instead — the no-journal path.
+///
+/// Faults are not modeled here: delta repairs ride the same Merkle
+/// verification backstop as a full run, so the regime of interest is the
+/// byte economics — when does scanning everything to ship a fraction
+/// beat shipping everything? (See `experiments::delta`.)
+pub fn run_delta(tb: Testbed, params: AlgoParams, ds: &Dataset, cold_receiver: bool) -> RunSummary {
+    let mut env = SimEnv::new(tb, params);
+    let dirty = params.delta_fraction.clamp(0.0, 1.0);
+    let mut summary = RunSummary {
+        algorithm: "FIVER-Delta".to_string(),
+        dataset: ds.name.clone(),
+        testbed: tb.name.to_string(),
+        io_backend: params.io_backend.name().to_string(),
+        concurrency: 1,
+        ..Default::default()
+    };
+    let dlen = params.hash.hasher().digest_len() as u64;
+    // One handshake round trip covers the whole session's DeltaReq/Sig
+    // exchange (the real engine batches every file into one connection).
+    let hs = env.start_timer(env.params.control_rtts * tb.rtt);
+    env.pump_until(hs);
+    summary.verify_rtts += 1;
+    for f in &ds.files {
+        let leaves = crate::merkle::leaf_count(f.size, params.leaf_size);
+        if cold_receiver {
+            // No receiver journal: the basis is hashed from the old data
+            // on demand before the scan can start.
+            let sig = env.start_checksum(Side::Dst, f, 0, f.size, false);
+            env.pump_until(sig);
+        }
+        // Per-leaf (weak, strong) signature payload crosses the control
+        // channel — the term that punishes small leaves.
+        let sig_bytes = leaves * (crate::coordinator::delta::WEAK_LEN as u64 + dlen);
+        let sig = env.start_ctrl_bytes(sig_bytes);
+        env.pump_until(sig);
+        let flow = env.start_delta_flow(f, dirty);
+        env.pump_until(flow);
+        // Root exchange of the reconstructed file, like FIVER's digest.
+        summary.verify_rtts += 1;
+        let dirty_leaves = ((leaves as f64) * dirty).ceil() as u64;
+        let dirty_bytes = (f.size as f64 * dirty).round() as u64;
+        summary.leaves_dirty += dirty_leaves;
+        summary.leaves_clean += leaves - dirty_leaves;
+        summary.bytes_skipped_delta += f.size - dirty_bytes;
+    }
+    let t = env.start_timer(env.params.control_rtts * env.tb.rtt);
+    env.pump_until(t);
+    summary.total_time = env.now();
+    summary.tcp_restarts = env.restarts();
+    attach_obs(&env, &mut summary);
+    summary.src_trace = std::mem::take(&mut env.src_trace);
+    summary.dst_trace = std::mem::take(&mut env.dst_trace);
+    summary.t_transfer_only = transfer_only(tb, params, ds);
+    summary.t_checksum_only = checksum_only(tb, params, ds);
+    summary
 }
 
 /// Simulate `alg` over `ds` with `faults`, producing the run summary
@@ -1146,6 +1212,58 @@ mod tests {
             batched.total_time,
             unbatched.total_time
         );
+    }
+
+    /// On a network-limited testbed (hash faster than the wire), a mostly
+    /// clean delta run beats a full re-send, and the counters account for
+    /// the skipped bytes.
+    #[test]
+    fn delta_mostly_clean_beats_full_resend_when_network_bound() {
+        let ds = Dataset::uniform("1G", GB, 4);
+        let tb = Testbed::hpclab_1g(); // hash rate > bandwidth
+        let p = AlgoParams { delta_fraction: 0.05, ..AlgoParams::default() };
+        let delta = run_delta(tb, p, &ds, false);
+        let full = quick_run(tb, &ds, Algorithm::Fiver);
+        assert!(
+            delta.total_time < full.total_time,
+            "delta {} should beat full {}",
+            delta.total_time,
+            full.total_time
+        );
+        let total = ds.total_bytes();
+        assert!(
+            delta.bytes_skipped_delta > (total as f64 * 0.90) as u64,
+            "skipped {} of {}",
+            delta.bytes_skipped_delta,
+            total
+        );
+        assert!(delta.leaves_clean > delta.leaves_dirty);
+    }
+
+    /// delta_fraction 1.0 (the default) is a full copy: nothing skipped,
+    /// and the scan pass makes it no faster than a plain FIVER run.
+    #[test]
+    fn delta_all_dirty_skips_nothing() {
+        let ds = Dataset::uniform("1G", GB, 2);
+        let tb = Testbed::hpclab_40g();
+        let s = run_delta(tb, AlgoParams::default(), &ds, false);
+        assert_eq!(s.bytes_skipped_delta, 0);
+        assert_eq!(s.leaves_clean, 0);
+        assert!(s.leaves_dirty > 0);
+        let full = quick_run(tb, &ds, Algorithm::Fiver);
+        assert!(s.total_time >= full.total_time * 0.95, "{} vs {}", s.total_time, full.total_time);
+    }
+
+    /// A receiver without a journal hashes its old data to produce the
+    /// signature basis — strictly slower than the journal-served path.
+    #[test]
+    fn delta_cold_receiver_pays_for_signatures() {
+        let ds = Dataset::uniform("1G", GB, 4);
+        let tb = Testbed::hpclab_1g();
+        let p = AlgoParams { delta_fraction: 0.05, ..AlgoParams::default() };
+        let warm = run_delta(tb, p, &ds, false);
+        let cold = run_delta(tb, p, &ds, true);
+        assert!(cold.total_time > warm.total_time, "{} vs {}", cold.total_time, warm.total_time);
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //! [`crate::config::Testbed`]; [`algorithms`] drives the five
 //! integrity-verification policies over the engine.
 
+/// The simulated verification algorithms.
 pub mod algorithms;
+/// Testbed environment built on the fluid sim.
 pub mod testbed;
 
 use std::collections::HashMap;
@@ -75,14 +77,17 @@ pub struct FluidSim {
 }
 
 impl FluidSim {
+    /// An empty simulator at `t = 0`.
     pub fn new() -> FluidSim {
         FluidSim::default()
     }
 
+    /// Current simulated time in seconds.
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Register a resource of the given capacity; returns its id.
     pub fn add_resource(&mut self, name: &str, capacity_bytes_per_sec: f64) -> ResourceId {
         assert!(capacity_bytes_per_sec > 0.0, "capacity must be positive");
         self.resources.push(Resource { name: name.to_string(), capacity: capacity_bytes_per_sec });
@@ -98,6 +103,7 @@ impl FluidSim {
         self.resource_busy[r.0]
     }
 
+    /// The name `r` was registered with.
     pub fn resource_name(&self, r: ResourceId) -> &str {
         &self.resources[r.0].name
     }
@@ -143,10 +149,12 @@ impl FluidSim {
         }
     }
 
+    /// Whether flow `f` has finished.
     pub fn is_done(&self, f: FlowId) -> bool {
         self.flows[f.0].done
     }
 
+    /// Bytes flow `f` still has to move.
     pub fn remaining(&self, f: FlowId) -> f64 {
         self.flows[f.0].remaining
     }
@@ -156,6 +164,7 @@ impl FluidSim {
         self.flows[f.0].rate
     }
 
+    /// Number of unfinished flows.
     pub fn active_flows(&self) -> usize {
         self.flows.iter().filter(|f| !f.done).count()
     }

@@ -13,7 +13,9 @@ use crate::workload::FileSpec;
 /// Which endpoint a checksum/cache operation belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Side {
+    /// The sending host.
     Src,
+    /// The receiving host.
     Dst,
 }
 
@@ -28,9 +30,11 @@ pub struct Res {
     pub net: ResourceId,
     /// Memory-bus read rate per host (cached checksum I/O).
     pub src_mem: ResourceId,
+    /// Destination memory/page-cache bandwidth.
     pub dst_mem: ResourceId,
     /// One checksum core per host (the paper's single-threaded hashing).
     pub src_hash: ResourceId,
+    /// Destination hash engine.
     pub dst_hash: ResourceId,
     /// Data-plane buffer pool throughput cap per host (infinite when
     /// `AlgoParams::pool_buffers` is 0). Little's law: a coupled FIVER
@@ -40,6 +44,7 @@ pub struct Res {
     /// pool leaves this far above every other bottleneck; a starved pool
     /// caps the whole endpoint — the regime concurrency sweeps probe.
     pub src_pool: ResourceId,
+    /// Destination worker-pool admission.
     pub dst_pool: ResourceId,
 }
 
@@ -48,15 +53,23 @@ pub struct Res {
 /// shared resource set. The single-session constructors/methods are the
 /// classic serial drivers' API; `*_on` variants address a session.
 pub struct SimEnv {
+    /// The underlying fluid simulator.
     pub sim: FluidSim,
     /// One connection envelope per session.
     pub tcps: Vec<TcpConn>,
+    /// Source page-cache model.
     pub src_cache: PageCache,
+    /// Destination page-cache model.
     pub dst_cache: PageCache,
+    /// Testbed specification.
     pub tb: Testbed,
+    /// Algorithm parameters for the run.
     pub params: AlgoParams,
+    /// Resource handles.
     pub res: Res,
+    /// Source-side cache hit trace.
     pub src_trace: HitTrace,
+    /// Destination-side cache hit trace.
     pub dst_trace: HitTrace,
     /// Currently active network transfer flow per session (at most one at
     /// a time per session — the station discipline); drives TCP cap
@@ -73,6 +86,7 @@ pub struct SimEnv {
 }
 
 impl SimEnv {
+    /// An environment for `tb` under `params`.
     pub fn new(tb: Testbed, params: AlgoParams) -> SimEnv {
         Self::new_parallel(tb, params, 1, 1)
     }
@@ -172,6 +186,7 @@ impl SimEnv {
         self.tcps.iter().map(|t| t.restarts).sum()
     }
 
+    /// Current simulated time in seconds.
     pub fn now(&self) -> f64 {
         self.sim.now()
     }
@@ -374,6 +389,70 @@ impl SimEnv {
         flow
     }
 
+    /// Start a delta-sync coupled flow (the real engine's `--delta`
+    /// steady state, see [`crate::coordinator::delta`]): the sender reads
+    /// and rolling-scans the *whole* source (full read + hash cost), but
+    /// only `dirty_frac` of each scanned byte crosses the wire. The
+    /// receiver reconstructs locally — copying clean bytes from its own
+    /// old copy (a destination read), writing the full staging file, and
+    /// re-hashing the reconstructed result end-to-end (served from the
+    /// just-written cache when the backend allows it).
+    ///
+    /// The flow is not registered with the session's TCP envelope: the
+    /// wire leg is `dirty_frac` of the scan rate, so a whole-flow cap
+    /// would wrongly throttle the scan; the `net` resource capacity still
+    /// bounds the shipped bytes. Signature generation is journal-served
+    /// (free) — model a cold receiver by charging a separate
+    /// [`SimEnv::start_checksum`] of the old data first.
+    pub fn start_delta_flow(&mut self, file: &FileSpec, dirty_frac: f64) -> FlowId {
+        let now = self.now();
+        let cost = self.io_cost();
+        let dirty = dirty_frac.clamp(0.0, 1.0);
+        let clean = 1.0 - dirty;
+        // Sender: one full sequential read of the new source.
+        let (shits, smisses) = self.cache_read(Side::Src, file, 0, file.size);
+        let smiss_frac = if file.size == 0 { 0.0 } else { smisses as f64 / file.size as f64 };
+        // Receiver: reads its old copy for the clean-leaf copies, then
+        // writes the full staging file (which warms the cache for the
+        // re-hash pass).
+        let (dhits, dmisses) = self.cache_read(Side::Dst, file, 0, file.size);
+        let dmiss_frac = if file.size == 0 { 0.0 } else { dmisses as f64 / file.size as f64 };
+        self.cache_write(Side::Dst, file, 0, file.size);
+        let w_write = self.write_weight() * cost.write_weight_mult;
+        // Re-hash read: straight after the write, so cached unless the
+        // backend bypasses the page cache (direct re-reads pay disk).
+        let rehash_disk = if cost.bypass_page_cache { 1.0 } else { 0.0 };
+        let rehash_mem = if cost.bypass_page_cache { 0.0 } else { cost.cached_read_weight };
+        let flow = self.sim.start_flow(
+            file.size as f64,
+            vec![
+                (self.res.src_disk, smiss_frac),
+                (self.res.src_mem, (1.0 - smiss_frac) * cost.cached_read_weight),
+                (self.res.src_hash, 1.0),
+                (self.res.net, dirty),
+                (self.res.dst_disk, clean * dmiss_frac + w_write + rehash_disk),
+                (
+                    self.res.dst_mem,
+                    clean * (1.0 - dmiss_frac) * cost.cached_read_weight + rehash_mem,
+                ),
+                (self.res.dst_hash, 1.0),
+                (self.res.src_pool, 1.0),
+                (self.res.dst_pool, 1.0),
+            ],
+            None,
+        );
+        let dirty_bytes = (file.size as f64 * dirty).round() as u64;
+        self.pending_traces.push((flow, Side::Src, shits, smisses, now, Stage::Send));
+        self.pending_traces.push((flow, Side::Dst, dhits + dirty_bytes, dmisses, now, Stage::Hash));
+        flow
+    }
+
+    /// A control-plane byte exchange (delta signature payloads): `bytes`
+    /// crossing the network alone, unpaced.
+    pub fn start_ctrl_bytes(&mut self, bytes: u64) -> FlowId {
+        self.sim.start_flow(bytes as f64, vec![(self.res.net, 1.0)], None)
+    }
+
     /// A pure-delay flow of `secs` (control exchanges, pipeline bubbles).
     pub fn start_timer(&mut self, secs: f64) -> FlowId {
         self.sim.start_flow(secs.max(0.0), vec![], Some(1.0))
@@ -462,6 +541,7 @@ impl SimEnv {
         }
     }
 
+    /// Whether any transfer flow is still running.
     pub fn transfer_active(&self) -> bool {
         self.active.iter().any(|a| a.is_some())
     }

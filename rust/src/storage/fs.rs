@@ -193,6 +193,11 @@ impl Storage for FsStorage {
         self.counters.syncs.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
+
+    fn rename(&self, from: &str, to: &str) -> Result<()> {
+        std::fs::rename(self.path(from), self.path(to))
+            .with_context(|| format!("renaming {from} over {to}"))
+    }
 }
 
 /// Positioned read of one range: `pread` on Unix (no seek, kernel cursor
@@ -327,13 +332,17 @@ fn write_parts_at(f: &File, offset: u64, parts: &[&[u8]], mut skip: usize) -> Re
 mod vec_sys {
     use std::ffi::c_void;
 
+    /// One `struct iovec` entry for `pwritev(2)`.
     #[repr(C)]
     pub struct IoVec {
+        /// Start of the buffer.
         pub base: *const c_void,
+        /// Length in bytes.
         pub len: usize,
     }
 
     extern "C" {
+        /// Vectored positional write — see `pwritev(2)`.
         pub fn pwritev(fd: i32, iov: *const IoVec, iovcnt: i32, offset: i64) -> isize;
     }
 }

@@ -24,6 +24,7 @@ pub struct MemStorage {
 }
 
 impl MemStorage {
+    /// An empty in-memory store.
     pub fn new() -> MemStorage {
         MemStorage::default()
     }
@@ -94,6 +95,13 @@ impl Storage for MemStorage {
             "no such mem file {name}"
         );
         self.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn rename(&self, from: &str, to: &str) -> Result<()> {
+        let mut files = self.files.lock().unwrap();
+        let data = files.remove(from).with_context(|| format!("no such mem file {from}"))?;
+        files.insert(to.to_string(), data);
         Ok(())
     }
 }

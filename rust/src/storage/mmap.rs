@@ -36,12 +36,17 @@ use crate::coordinator::bufpool::{BufferPool, ExternalBytes, SharedBuf};
 mod sys {
     use std::ffi::c_void;
 
+    /// `PROT_READ` from `<sys/mman.h>`.
     pub const PROT_READ: i32 = 0x1;
+    /// `PROT_WRITE` from `<sys/mman.h>`.
     pub const PROT_WRITE: i32 = 0x2;
+    /// `MAP_SHARED` from `<sys/mman.h>`.
     pub const MAP_SHARED: i32 = 0x01;
+    /// `MS_SYNC` flag for `msync(2)`.
     pub const MS_SYNC: i32 = 0x4;
 
     extern "C" {
+        /// Map a file region — see `mmap(2)`.
         pub fn mmap(
             addr: *mut c_void,
             len: usize,
@@ -50,7 +55,9 @@ mod sys {
             fd: i32,
             offset: i64,
         ) -> *mut c_void;
+        /// Unmap a region — see `munmap(2)`.
         pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        /// Flush a mapped region to its file — see `msync(2)`.
         pub fn msync(addr: *mut c_void, len: usize, flags: i32) -> i32;
     }
 }

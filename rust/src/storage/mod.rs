@@ -30,7 +30,9 @@ use anyhow::Result;
 
 use crate::coordinator::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
 
+/// Filesystem-backed storage (buffered, direct and mmap engines).
 pub mod fs;
+/// In-memory storage for tests and loopback runs.
 pub mod mem;
 #[cfg(target_os = "linux")]
 pub(crate) mod mmap;
@@ -63,6 +65,7 @@ impl IoBackend {
     /// for tests, benches, CI matrix legs and CLI help.
     pub const ALL: [IoBackend; 3] = [IoBackend::Buffered, IoBackend::Mmap, IoBackend::Direct];
 
+    /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             IoBackend::Buffered => "buffered",
@@ -71,6 +74,7 @@ impl IoBackend {
         }
     }
 
+    /// Parse a CLI backend name.
     pub fn parse(s: &str) -> Option<IoBackend> {
         match s.to_ascii_lowercase().as_str() {
             "buffered" | "pread" | "default" => Some(IoBackend::Buffered),
@@ -104,6 +108,7 @@ impl IoBackend {
 
 /// Abstract storage: open files for streaming read/write by name.
 pub trait Storage: Send + Sync {
+    /// Open `name` for sequential reading.
     fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>>;
     /// Create (or truncate) a file for writing.
     fn open_write(&self, name: &str) -> Result<Box<dyn WriteStream>>;
@@ -117,6 +122,7 @@ pub trait Storage: Send + Sync {
     /// Open an existing file for in-place updates (repair writes) without
     /// truncating it.
     fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>>;
+    /// Size of `name` in bytes.
     fn size_of(&self, name: &str) -> Result<u64>;
     /// The active I/O engine, for telemetry (`TransferReport::io_backend`).
     fn backend_name(&self) -> &'static str;
@@ -141,6 +147,13 @@ pub trait Storage: Send + Sync {
         let mut w = self.open_update(name)?;
         w.sync()
     }
+    /// Atomically replace `to` with `from` (both names within this
+    /// storage). The delta receiver reconstructs an incremental file
+    /// into a staging name while the old destination still serves
+    /// `DeltaCopy` reads, then renames it into place — readers never
+    /// observe a half-built file and the old basis stays intact until
+    /// the new bytes are complete.
+    fn rename(&self, from: &str, to: &str) -> Result<()>;
 }
 
 /// Streaming reader with range support (chunk re-reads for recovery).
@@ -170,7 +183,9 @@ pub trait ReadStream: Send {
 /// cursor to the end of the written range (repair writes never rewind a
 /// sequential stream).
 pub trait WriteStream: Send {
+    /// Write `data` at the absolute `offset`.
     fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()>;
+    /// Append `data` at the stream cursor.
     fn write_next(&mut self, data: &[u8]) -> Result<()>;
     /// Scatter write: land `parts` as one contiguous span starting at
     /// `offset`. The buffered engine batches this into `pwritev`; the
@@ -184,6 +199,7 @@ pub trait WriteStream: Send {
         }
         Ok(())
     }
+    /// Flush buffered writes to the backing store.
     fn flush(&mut self) -> Result<()>;
     /// Force written bytes to durable storage (`fdatasync`-strength where
     /// the backend has a notion of durability; `msync` + `fdatasync` on
@@ -396,6 +412,23 @@ mod tests {
             let mut buf = [0u8; 16];
             assert_eq!(r.read_next(&mut buf).unwrap(), 0, "{name}");
             assert!(r.read_shared(0, 16, &pool).unwrap().is_empty(), "{name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rename_replaces_destination_every_backend() {
+        let dir = crate::util::tmpdir::unique_dir("fiver-rename");
+        for (name, s) in all_backends(&dir) {
+            for (f, byte, len) in [("old", 1u8, 10usize), ("staging", 2, 20)] {
+                let mut w = s.open_write(f).unwrap();
+                w.write_next(&vec![byte; len]).unwrap();
+                w.flush().unwrap();
+            }
+            s.rename("staging", "old").unwrap();
+            assert_eq!(read_all(&s, "old").unwrap(), vec![2u8; 20], "{name}");
+            assert!(s.size_of("staging").is_err(), "{name}: source gone after rename");
+            assert!(s.rename("missing", "x").is_err(), "{name}");
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -48,22 +49,27 @@ impl Args {
         Self::parse(std::env::args().skip(1), value_opts)
     }
 
+    /// Whether `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name <value>`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Like [`Args::opt`] with a default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// An integer option with a default.
     pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
         self.opt(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
     }
 
+    /// A float option with a default.
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name).map(|v| v.parse().expect("float option")).unwrap_or(default)
     }

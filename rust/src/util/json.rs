@@ -11,11 +11,17 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys kept sorted).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -32,6 +38,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -39,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -46,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The number as `u64`, if this is a non-negative integral `Num`.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) {
@@ -56,6 +65,7 @@ impl Json {
         })
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -63,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -79,7 +90,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -8,9 +8,15 @@
 //! a tiny CLI argument parser ([`cli`]), and collision-free scratch
 //! directories for parallel tests ([`tmpdir`]).
 
+/// Tiny argv parser: flags and `--opt value` pairs.
 pub mod cli;
+/// Byte/rate/time formatting and aligned text tables.
 pub mod fmt;
+/// Hex encoding and decoding.
 pub mod hex;
+/// Minimal JSON value, parser and writer.
 pub mod json;
+/// Deterministic PRNGs (SplitMix64 and a 31-bit LCG).
 pub mod rng;
+/// Self-cleaning temporary directories.
 pub mod tmpdir;

@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A generator seeded with `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -25,6 +27,7 @@ impl SplitMix64 {
         z ^ (z >> 31)
     }
 
+    /// Next 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -87,15 +90,18 @@ pub struct Lcg31 {
 }
 
 impl Lcg31 {
+    /// A generator seeded with `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next pseudo-random byte.
     pub fn next_byte(&mut self) -> u8 {
         self.state = (self.state.wrapping_mul(1103515245).wrapping_add(12345)) & 0x7FFF_FFFF;
         (self.state & 0xFF) as u8
     }
 
+    /// The next `n` bytes.
     pub fn bytes(&mut self, n: usize) -> Vec<u8> {
         (0..n).map(|_| self.next_byte()).collect()
     }

@@ -12,26 +12,33 @@ use crate::util::rng::SplitMix64;
 pub struct FileSpec {
     /// Stable id (also the cache-model FileId).
     pub id: u64,
+    /// File name, unique within the dataset.
     pub name: String,
+    /// File size in bytes.
     pub size: u64,
 }
 
 /// A named dataset (ordered: transfer order matters for pipelining).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset name used in reports.
     pub name: String,
+    /// The files, in transfer order.
     pub files: Vec<FileSpec>,
 }
 
 impl Dataset {
+    /// Sum of all file sizes.
     pub fn total_bytes(&self) -> u64 {
         self.files.iter().map(|f| f.size).sum()
     }
 
+    /// Number of files.
     pub fn len(&self) -> usize {
         self.files.len()
     }
 
+    /// Whether the dataset has no files.
     pub fn is_empty(&self) -> bool {
         self.files.is_empty()
     }

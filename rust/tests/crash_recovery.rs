@@ -312,7 +312,7 @@ fn resume_falls_back_on_journal_mismatch() {
     );
     assert!(crashed.is_err(), "planned kill must abort the run");
     // Corrupt one digest byte in the receiver's journal record.
-    let rec_path = jroot.join("rcv").join("f000000.fjl");
+    let rec_path = Journal::open(&jroot.join("rcv")).unwrap().record_path(&names[0]);
     let mut bytes = std::fs::read(&rec_path).expect("receiver journal record exists");
     assert!(bytes.len() > 40, "record should hold at least one digest");
     let last = bytes.len() - 1;
@@ -338,7 +338,7 @@ fn resume_falls_back_on_journal_mismatch() {
     assert_eq!(totals.bytes_sent, 150_000, "full re-transfer after the rejected prefix");
     // The rejected record was discarded; the fresh run re-journaled it.
     let rj = Journal::open(&jroot.join("rcv")).unwrap();
-    let rec = rj.load(0).unwrap().expect("record recreated by the fresh transfer");
+    let rec = rj.find(&names[0]).unwrap().expect("record recreated by the fresh transfer");
     assert!(rec.is_complete());
 }
 
