@@ -248,6 +248,9 @@ fn storage_backend_bench() {
         let dir = fiver::util::tmpdir::unique_dir(&format!("fiver-bench-{}", backend.name()));
         let storage = FsStorage::with_backend(&dir, backend).unwrap();
         let pool = BufferPool::with_options(buf_size, 8, backend.buffer_align(), 8);
+        // Lets the uring engine pin the pool's backings as registered
+        // buffers, so its reads take the READ_FIXED path (no-op elsewhere).
+        storage.register_pool(&pool);
         let r = bench(&format!("storage/write-{}", backend.name()), 1, pick(3, 1), || {
             let mut w = storage.open_write_sized("f", total as u64).unwrap();
             for _ in 0..(total / buf_size) {
@@ -272,6 +275,17 @@ fn storage_backend_bench() {
             black_box(n);
         });
         r.report_bytes(total as u64);
+        if backend == IoBackend::Uring {
+            let (enters, ops) = (storage.uring_enters(), storage.uring_ops());
+            if storage.uring_fallbacks() == 0 && ops > 0 {
+                // The whole point of the uring engine: readahead batches
+                // amortize the enter syscall over several chunks.
+                assert!(enters < ops, "uring batching regressed: {enters} enters for {ops} ops");
+                println!("  uring batching: {ops} ops in {enters} enter syscalls");
+            } else {
+                println!("  uring unavailable here — batching not measured (buffered fallback)");
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

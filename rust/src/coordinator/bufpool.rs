@@ -159,6 +159,12 @@ struct PoolState {
     /// degrade to allocate-per-buffer speed, not to one buffer per grace
     /// period).
     starved: bool,
+    /// `(address, length)` of every pooled backing ever allocated — the
+    /// registration table the io_uring storage engine hands to
+    /// `IORING_REGISTER_BUFFERS`. Backings live until the process exits
+    /// (the free list never shrinks), so recorded entries never dangle;
+    /// grace-period fallback buffers are unpooled and deliberately absent.
+    backings: Vec<(usize, usize)>,
 }
 
 struct PoolCore {
@@ -234,6 +240,7 @@ impl BufferPool {
                     grow_events: 0,
                     misses_since_grow: 0,
                     starved: false,
+                    backings: Vec::new(),
                 }),
                 available: Condvar::new(),
             }),
@@ -306,8 +313,9 @@ impl BufferPool {
             if g.allocated < g.capacity {
                 g.allocated += 1;
                 note_acquired(&mut g);
+                let data = self.alloc_recorded(&mut g);
                 drop(g);
-                return self.wrap(self.alloc_backing());
+                return self.wrap(data);
             }
             g = self.core.available.wait(g).unwrap();
         }
@@ -323,8 +331,9 @@ impl BufferPool {
         if g.allocated < g.capacity {
             g.allocated += 1;
             note_acquired(&mut g);
+            let data = self.alloc_recorded(&mut g);
             drop(g);
-            return Some(self.wrap(self.alloc_backing()));
+            return Some(self.wrap(data));
         }
         None
     }
@@ -353,8 +362,9 @@ impl BufferPool {
             if g.allocated < g.capacity {
                 g.allocated += 1;
                 note_acquired(&mut g);
+                let data = self.alloc_recorded(&mut g);
                 drop(g);
-                return self.wrap(self.alloc_backing());
+                return self.wrap(data);
             }
             let now = std::time::Instant::now();
             if g.starved || now >= deadline {
@@ -390,8 +400,46 @@ impl BufferPool {
         AlignedBytes::zeroed(self.core.buf_size, self.core.align)
     }
 
+    /// Allocate a pooled backing and record its `(address, length)` in
+    /// the registration table, all under the state lock — the io_uring
+    /// engine's epoch check relies on the table and `allocated` moving
+    /// together.
+    fn alloc_recorded(&self, g: &mut PoolState) -> AlignedBytes {
+        let b = self.alloc_backing();
+        g.backings.push((b.ptr.as_ptr() as usize, b.len));
+        b
+    }
+
     fn wrap(&self, data: AlignedBytes) -> PoolBuf {
         PoolBuf { data: Some(data), pool: Some(self.core.clone()) }
+    }
+
+    /// Stable identity of the shared pool core (`Arc` pointer) — lets the
+    /// io_uring engine tell "same pool, new epoch" from "different pool".
+    pub(crate) fn core_id(&self) -> usize {
+        Arc::as_ptr(&self.core) as usize
+    }
+
+    /// The io_uring registration snapshot: eagerly allocate the free list
+    /// up to the current capacity (so the table covers every buffer the
+    /// pool will hand out at this capacity), then return
+    /// `(grow_events, backings)`. After the eager fill `allocated ==
+    /// capacity`, so no new pooled backing can appear until the adaptive
+    /// sizer raises capacity — which bumps `grow_events`, making
+    /// `(core_id, grow_events)` a valid registration-epoch key.
+    pub(crate) fn registration_table(&self) -> (u64, Vec<(usize, usize)>) {
+        let mut g = self.core.state.lock().unwrap();
+        while g.allocated < g.capacity {
+            g.allocated += 1;
+            let b = self.alloc_recorded(&mut g);
+            g.free.push(b);
+        }
+        let snapshot = (g.grow_events, g.backings.clone());
+        drop(g);
+        // The eager fill put fresh buffers on the free list; wake any
+        // waiter blocked on capacity.
+        self.core.available.notify_all();
+        snapshot
     }
 }
 
@@ -837,6 +885,35 @@ mod tests {
         }
         assert_eq!(pool.capacity(), 1);
         assert_eq!(pool.grow_events(), 0);
+    }
+
+    #[test]
+    fn registration_table_covers_every_pooled_backing() {
+        let pool = BufferPool::with_options(4096, 3, 4096, 6);
+        let (epoch, table) = pool.registration_table();
+        assert_eq!(epoch, 0);
+        assert_eq!(table.len(), 3, "eager fill allocates to capacity");
+        assert_eq!(pool.allocated(), 3);
+        // Every buffer the pool hands out afterwards lies inside a
+        // recorded backing — the property READ_FIXED/WRITE_FIXED needs.
+        let b = pool.get();
+        let p = b.as_ptr() as usize;
+        assert!(table.iter().any(|&(start, len)| p >= start && p < start + len));
+        // Stable while grow_events is: a re-snapshot is identical.
+        let (epoch2, table2) = pool.registration_table();
+        assert_eq!((epoch2, table2.len()), (0, 3));
+        drop(b);
+        // A grow moves the epoch and the new backing joins the table.
+        let held: Vec<PoolBuf> = (0..3).map(|_| pool.get()).collect();
+        for _ in 0..=GROW_FALLBACK_THRESHOLD {
+            let _ = pool.get_or_alloc(Duration::from_millis(1));
+        }
+        assert_eq!(pool.grow_events(), 1);
+        let (epoch3, table3) = pool.registration_table();
+        assert_eq!(epoch3, 1);
+        assert!(table3.len() > 3, "grown capacity brings new recorded backings");
+        assert!(table3.starts_with(&table), "registration is append-only");
+        drop(held);
     }
 
     struct Blob(Vec<u8>);

@@ -201,6 +201,11 @@ pub struct SessionConfig {
     /// constructed to match). Decides pool buffer alignment — the direct
     /// engine needs block-aligned buffers to avoid bounce copies.
     pub io_backend: crate::storage::IoBackend,
+    /// `--io-backend auto` size threshold (`--direct-threshold`): files
+    /// at or above this open on the uring/direct engines, smaller files
+    /// stay buffered (the page cache wins for small files; batched or
+    /// uncached I/O wins once a file dwarfs memory).
+    pub direct_threshold: u64,
     /// Checkpoint-journal directory for this endpoint (`None` disables
     /// journaling). Each endpoint needs its own directory; see
     /// [`journal`].
@@ -245,6 +250,7 @@ impl SessionConfig {
             pool_buffers: 0,
             pool_max_buffers: 0,
             io_backend: crate::storage::IoBackend::from_env(),
+            direct_threshold: crate::storage::fs::DEFAULT_DIRECT_THRESHOLD,
             journal_dir: None,
             resume: false,
             delta: false,
@@ -378,6 +384,18 @@ pub struct TransferReport {
     /// storage (nonzero = alignment or filesystem support forced the
     /// direct engine off its fast path).
     pub direct_fallbacks: u64,
+    /// io_uring fallbacks to buffered I/O on this endpoint's storage
+    /// (ring setup refused — kernels/sandboxes without io_uring — or a
+    /// ring died mid-transfer; delivery is bit-identical either way).
+    pub uring_fallbacks: u64,
+    /// `posix_fadvise` streaming hints issued by this endpoint's storage
+    /// (SEQUENTIAL at stream open, coalesced DONTNEED after verified
+    /// spans).
+    pub storage_hints: u64,
+    /// With `--io-backend auto`: the engine each file resolved to, as
+    /// `(file name, engine name)` in completion order. Empty for fixed
+    /// engines.
+    pub file_backends: Vec<(String, String)>,
     /// Merged per-stage span statistics from the observability plane
     /// (p50/p95/p99 latencies + busy time; empty when tracing is
     /// disabled).

@@ -64,6 +64,12 @@ pub struct ReceiverReport {
     /// (0 for the other engines). Shared per storage like
     /// `storage_syncs` — merge takes the max.
     pub direct_fallbacks: u64,
+    /// io_uring fallbacks to buffered I/O at this endpoint (ring setup
+    /// refused or a ring died). Shared per storage — merge takes the max.
+    pub uring_fallbacks: u64,
+    /// `posix_fadvise` streaming hints issued at this endpoint. Shared
+    /// per storage — merge takes the max.
+    pub storage_hints: u64,
 }
 
 impl ReceiverReport {
@@ -79,6 +85,8 @@ impl ReceiverReport {
         }
         self.storage_syncs = self.storage_syncs.max(other.storage_syncs);
         self.direct_fallbacks = self.direct_fallbacks.max(other.direct_fallbacks);
+        self.uring_fallbacks = self.uring_fallbacks.max(other.uring_fallbacks);
+        self.storage_hints = self.storage_hints.max(other.storage_hints);
     }
 }
 
@@ -202,6 +210,8 @@ pub fn serve_session_multi(
     report.io_backend = storage.backend_name().to_string();
     report.storage_syncs = storage.sync_count();
     report.direct_fallbacks = storage.direct_fallbacks();
+    report.uring_fallbacks = storage.uring_fallbacks();
+    report.storage_hints = storage.hint_count();
     Ok(report)
 }
 
@@ -1238,6 +1248,9 @@ fn verify_worker(
                     );
                     if ok {
                         verified += 1;
+                        // Delivered bytes verified: they won't be
+                        // re-hashed, so the page cache can let them go.
+                        storage.advise_done(&name, offset, len).ok();
                         break;
                     }
                     failed += 1;
@@ -1306,6 +1319,8 @@ fn verify_tree_exchange(
         anyhow::ensure!(fi == file_idx, "tree verdict for wrong file {fi} != {file_idx}");
         if ok {
             verified += 1;
+            // Root accepted: the whole delivered file is verified.
+            storage.advise_done(name, 0, 0).ok();
             return Ok((verified, failed));
         }
         failed += 1;

@@ -247,6 +247,9 @@ impl EngineReport {
             // snapshots the same value, so max (not sum) is the truth.
             total.storage_syncs = total.storage_syncs.max(r.storage_syncs);
             total.direct_fallbacks = total.direct_fallbacks.max(r.direct_fallbacks);
+            total.uring_fallbacks = total.uring_fallbacks.max(r.uring_fallbacks);
+            total.storage_hints = total.storage_hints.max(r.storage_hints);
+            total.file_backends.extend(r.file_backends.iter().cloned());
             total.trace_dropped = total.trace_dropped.max(r.trace_dropped);
             // Observability stats merge the whole endpoint's recorder,
             // so every session's snapshot is the same merged view: take

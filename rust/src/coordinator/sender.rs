@@ -406,6 +406,12 @@ impl SenderSession {
             let delta = self.delta.clone();
             return self.send_file_delta(file_idx, name, size, delta.basis(file_idx).unwrap());
         }
+        if self.storage.backend_name() == "auto" {
+            // Record the per-file engine choice the auto policy made.
+            self.report
+                .file_backends
+                .push((name.to_string(), self.storage.backend_for(name).to_string()));
+        }
         let start_at = resumed.as_ref().map(|r| r.offset).unwrap_or(0);
         let uses_queue = resumed.is_some()
             || self.cfg.algorithm.uses_queue(size, self.cfg.hybrid_threshold);
@@ -810,6 +816,8 @@ impl SenderSession {
         self.report.io_backend = self.storage.backend_name().to_string();
         self.report.storage_syncs = self.storage.sync_count();
         self.report.direct_fallbacks = self.storage.direct_fallbacks();
+        self.report.uring_fallbacks = self.storage.uring_fallbacks();
+        self.report.storage_hints = self.storage.hint_count();
         if self.cfg.obs.is_enabled() {
             // Endpoint-wide snapshot: every session of this endpoint
             // reports the same merged view (the aggregator takes the
@@ -930,6 +938,14 @@ fn run_verifier(
                 obs.record(Stage::Verify, t);
                 if ok {
                     shared.unit_ok(file_idx);
+                    // Verified source bytes won't be re-read (repairs
+                    // re-read only on mismatch): let the page cache go.
+                    let name = &names[file_idx as usize];
+                    if unit == super::protocol::UNIT_FILE {
+                        storage.advise_done(name, 0, 0).ok();
+                    } else {
+                        storage.advise_done(name, unit * cfg.block_size, cfg.block_size).ok();
+                    }
                     continue;
                 }
                 // Mismatch: the receiver recomputes after the repair lands
@@ -982,6 +998,8 @@ fn run_verifier(
                 if ok {
                     shared.unit_ok(file_idx);
                     shared.drop_tree(file_idx);
+                    // Root verified: the whole source file is done with.
+                    storage.advise_done(&names[file_idx as usize], 0, 0).ok();
                     continue;
                 }
                 shared.failures.fetch_add(1, Ordering::SeqCst);

@@ -138,8 +138,11 @@ impl ReceiverEndpoint {
 
         let pool = HashPool::new(eng.pool_workers());
         // One data-plane buffer pool per endpoint: payload decode, storage
-        // write and hash queue all share its refcounted buffers.
+        // write and hash queue all share its refcounted buffers. Offer it
+        // to the storage too — the io_uring engine registers its aligned
+        // backings as the ring's fixed-buffer table.
         let bufs = cfg.make_pool(n);
+        storage.register_pool(&bufs);
         let mut handles = Vec::new();
         for sid in 0..n {
             let ctrl = ctrls[sid].take().expect("routed above");
@@ -256,7 +259,9 @@ pub fn connect_and_send_engine(
     let pool = HashPool::new(eng.pool_workers());
     // Shared sender-side buffer pool: every session's reads recycle
     // through it, and hash jobs return buffers as they drain the queues.
+    // The storage gets a handle too (io_uring registered buffers).
     let bufs = cfg.make_pool(n);
+    storage.register_pool(&bufs);
     // Scheduler shard: one queue-depth observation per dispatched work
     // item, shared by every session's steal loop.
     let sched_obs = cfg.obs.shard("scheduler");

@@ -31,18 +31,26 @@
 //!   exhausted pool grows up to this many buffers instead of permanently
 //!   degrading to allocate-per-buffer (default: twice the pool size;
 //!   grow events surface in the `data plane:` line).
-//! * `--io-backend buffered|mmap|direct` — storage I/O engine (see
-//!   `fiver::storage`): `buffered` is positioned pread/pwrite through the
-//!   page cache (default); `mmap` serves zero-copy reads out of a file
-//!   mapping and writes through `MAP_SHARED` stores with msync-backed
-//!   durability; `direct` is O_DIRECT-style aligned I/O bypassing the
-//!   page cache, falling back to buffered wherever the filesystem or the
-//!   operation's alignment rules it out. The `FIVER_IO_BACKEND`
-//!   environment variable sets the default. Endpoints may choose their
-//!   backends independently (the selection is local to each side's
-//!   storage). The active backend and its sync count are reported on the
-//!   `data plane:` line so overhead attributes to storage vs hash vs
-//!   network.
+//! * `--io-backend buffered|mmap|direct|uring|auto` — storage I/O engine
+//!   (see `fiver::storage`): `buffered` is positioned pread/pwrite
+//!   through the page cache (default); `mmap` serves zero-copy reads out
+//!   of a file mapping and writes through `MAP_SHARED` stores with
+//!   msync-backed durability; `direct` is O_DIRECT-style aligned I/O
+//!   bypassing the page cache, falling back to buffered wherever the
+//!   filesystem or the operation's alignment rules it out; `uring`
+//!   batches reads and writes through an io_uring submission queue with
+//!   the endpoint's pooled buffers registered for fixed-buffer I/O,
+//!   falling back to buffered when the kernel refuses the ring; `auto`
+//!   picks per file by size — files at or above `--direct-threshold`
+//!   take the uring (or, ringless, the direct) engine, smaller files
+//!   stay buffered. The `FIVER_IO_BACKEND` environment variable sets the
+//!   default. Endpoints may choose their backends independently (the
+//!   selection is local to each side's storage). The active backend and
+//!   its sync count are reported on the `data plane:` line so overhead
+//!   attributes to storage vs hash vs network.
+//! * `--direct-threshold BYTES` — `auto` backend's size cutoff between
+//!   the buffered engine and the batched/bypass engines (default
+//!   256 MiB).
 //!
 //! Parallel engine knobs (serve/send/local; both endpoints must agree on
 //! `--concurrency` and `--parallel`):
@@ -146,10 +154,11 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
         Some(s) => fiver::storage::IoBackend::parse(s).with_context(|| {
             let names: Vec<&str> =
                 fiver::storage::IoBackend::ALL.iter().map(|b| b.name()).collect();
-            format!("unknown --io-backend ({})", names.join("|"))
+            format!("unknown --io-backend ({}|auto)", names.join("|"))
         })?,
         None => fiver::storage::IoBackend::from_env(),
     };
+    cfg.direct_threshold = args.opt_u64("direct-threshold", cfg.direct_threshold);
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
     cfg.delta = args.flag("delta");
@@ -246,8 +255,8 @@ fn main() -> Result<()> {
     let args = Args::from_env(&[
         "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
         "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "pool-max-buffers",
-        "io-backend", "files", "size", "faults", "seed", "concurrency", "parallel",
-        "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
+        "io-backend", "direct-threshold", "files", "size", "faults", "seed", "concurrency",
+        "parallel", "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
         "trace-out", "metrics-json",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
@@ -280,8 +289,11 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
     let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
-    let storage: Arc<dyn Storage> =
-        Arc::new(FsStorage::with_backend(Path::new(dir), cfg.io_backend)?);
+    let storage: Arc<dyn Storage> = Arc::new(
+        FsStorage::with_backend(Path::new(dir), cfg.io_backend)?
+            .with_threshold(cfg.direct_threshold)
+            .with_recorder(cfg.obs.clone()),
+    );
     let endpoint = ReceiverEndpoint::bind(
         args.opt_or("data", "0.0.0.0:7001"),
         args.opt_or("ctrl", "0.0.0.0:7002"),
@@ -321,6 +333,12 @@ fn serve(args: &Args) -> Result<()> {
     if report.direct_fallbacks > 0 {
         println!("data plane: {} direct-I/O fallbacks", report.direct_fallbacks);
     }
+    if report.uring_fallbacks > 0 || report.storage_hints > 0 {
+        println!(
+            "data plane: {} uring fallbacks, {} storage hints issued",
+            report.uring_fallbacks, report.storage_hints,
+        );
+    }
     finish_obs(args, &cfg, None)
 }
 
@@ -328,8 +346,11 @@ fn send(args: &Args) -> Result<()> {
     let cfg = session_config(args)?;
     let eng = engine_config(args);
     let dir = args.opt("dir").context("--dir required")?;
-    let storage: Arc<dyn Storage> =
-        Arc::new(FsStorage::with_backend(Path::new(dir), cfg.io_backend)?);
+    let storage: Arc<dyn Storage> = Arc::new(
+        FsStorage::with_backend(Path::new(dir), cfg.io_backend)?
+            .with_threshold(cfg.direct_threshold)
+            .with_recorder(cfg.obs.clone()),
+    );
     let files: Vec<String> = args.positional[1..].to_vec();
     anyhow::ensure!(!files.is_empty(), "no files given");
     let data_addr = args.opt_or("data", "127.0.0.1:7001");
@@ -372,10 +393,16 @@ fn local(args: &Args) -> Result<()> {
         base.path().display()
     );
     ds.materialize(&base.join("src"), seed)?;
-    let src: Arc<dyn Storage> =
-        Arc::new(FsStorage::with_backend(&base.join("src"), cfg.io_backend)?);
-    let dst: Arc<dyn Storage> =
-        Arc::new(FsStorage::with_backend(&base.join("dst"), cfg.io_backend)?);
+    let src: Arc<dyn Storage> = Arc::new(
+        FsStorage::with_backend(&base.join("src"), cfg.io_backend)?
+            .with_threshold(cfg.direct_threshold)
+            .with_recorder(cfg.obs.clone()),
+    );
+    let dst: Arc<dyn Storage> = Arc::new(
+        FsStorage::with_backend(&base.join("dst"), cfg.io_backend)?
+            .with_threshold(cfg.direct_threshold)
+            .with_recorder(cfg.obs.clone()),
+    );
     let names: Vec<String> = ds.files.iter().map(|f| f.name.clone()).collect();
     let mut faults = FaultPlan::random(&ds, fault_count, seed);
     // Both endpoints share `cfg`'s recorder (clones share the Arc), so the
@@ -531,6 +558,25 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
             r.storage_syncs,
             r.direct_fallbacks,
         );
+    }
+    if r.uring_fallbacks > 0 || r.storage_hints > 0 {
+        println!(
+            "data plane: {} uring fallbacks, {} storage hints issued",
+            r.uring_fallbacks, r.storage_hints,
+        );
+    }
+    if !r.file_backends.is_empty() {
+        // `auto` records the engine picked per file; cap the listing so
+        // large batches don't flood the report.
+        let shown: Vec<String> = r
+            .file_backends
+            .iter()
+            .take(8)
+            .map(|(name, backend)| format!("{name}={backend}"))
+            .collect();
+        let more = r.file_backends.len().saturating_sub(8);
+        let suffix = if more > 0 { format!(" (+{more} more)") } else { String::new() };
+        println!("auto backend: {}{suffix}", shown.join(", "));
     }
     for s in &r.stage_stats {
         println!(

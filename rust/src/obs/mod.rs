@@ -64,11 +64,16 @@ pub enum Stage {
     Journal,
     /// Re-read + Fix retransmission of a failed unit.
     Repair,
+    /// io_uring SQE batch submission (`io_uring_enter`); the queue-depth
+    /// gauge on this stage records the batch size.
+    Submit,
+    /// io_uring completion-queue drain for a submitted batch.
+    Complete,
 }
 
 impl Stage {
     /// Number of stages.
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 11;
     /// All stages, in pipeline order.
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::Read,
@@ -80,6 +85,8 @@ impl Stage {
         Stage::Verify,
         Stage::Journal,
         Stage::Repair,
+        Stage::Submit,
+        Stage::Complete,
     ];
 
     /// Short stage label used in traces and reports.
@@ -94,6 +101,8 @@ impl Stage {
             Stage::Verify => "verify",
             Stage::Journal => "journal",
             Stage::Repair => "repair",
+            Stage::Submit => "submit",
+            Stage::Complete => "complete",
         }
     }
 
@@ -589,7 +598,12 @@ impl Recorder {
         // Group spans into the four bottleneck candidates: queue_wait is
         // backpressure from a slow checksum consumer (hash), journal
         // rides the destination write path; verify/repair are
-        // control-plane and excluded.
+        // control-plane and excluded. Submit/Complete are excluded too:
+        // they are sub-spans of the io_uring engine's Read/Write work,
+        // which the calling stream already records under Read/Write —
+        // counting them here would double-bill the storage time. They
+        // still appear in the per-stage percentiles, with the Submit
+        // depth gauge carrying the SQE batch size.
         let groups = [
             ("read", secs(Stage::Read)),
             ("hash", secs(Stage::Hash) + secs(Stage::QueueWait)),

@@ -283,7 +283,7 @@ impl SimEnv {
             len as f64,
             vec![
                 (self.res.src_disk, miss_frac),
-                (self.res.src_mem, hit_frac * cost.cached_read_weight),
+                (self.res.src_mem, hit_frac * cost.cached_read_weight * cost.syscall_weight),
                 (self.res.net, 1.0),
                 (self.res.dst_disk, w_write),
             ],
@@ -325,7 +325,7 @@ impl SimEnv {
             (
                 vec![
                     (hash_res, 1.0),
-                    (mem_res, (1.0 - miss_frac) * cost.cached_read_weight),
+                    (mem_res, (1.0 - miss_frac) * cost.cached_read_weight * cost.syscall_weight),
                     (disk_res, miss_frac),
                 ],
                 hits,
@@ -366,7 +366,10 @@ impl SimEnv {
             len as f64,
             vec![
                 (self.res.src_disk, miss_frac),
-                (self.res.src_mem, (1.0 - miss_frac) * cost.cached_read_weight),
+                (
+                    self.res.src_mem,
+                    (1.0 - miss_frac) * cost.cached_read_weight * cost.syscall_weight,
+                ),
                 (self.res.net, 1.0),
                 (self.res.dst_disk, w_write),
                 (self.res.src_hash, 1.0),
@@ -422,18 +425,26 @@ impl SimEnv {
         // Re-hash read: straight after the write, so cached unless the
         // backend bypasses the page cache (direct re-reads pay disk).
         let rehash_disk = if cost.bypass_page_cache { 1.0 } else { 0.0 };
-        let rehash_mem = if cost.bypass_page_cache { 0.0 } else { cost.cached_read_weight };
+        let rehash_mem = if cost.bypass_page_cache {
+            0.0
+        } else {
+            cost.cached_read_weight * cost.syscall_weight
+        };
         let flow = self.sim.start_flow(
             file.size as f64,
             vec![
                 (self.res.src_disk, smiss_frac),
-                (self.res.src_mem, (1.0 - smiss_frac) * cost.cached_read_weight),
+                (
+                    self.res.src_mem,
+                    (1.0 - smiss_frac) * cost.cached_read_weight * cost.syscall_weight,
+                ),
                 (self.res.src_hash, 1.0),
                 (self.res.net, dirty),
                 (self.res.dst_disk, clean * dmiss_frac + w_write + rehash_disk),
                 (
                     self.res.dst_mem,
-                    clean * (1.0 - dmiss_frac) * cost.cached_read_weight + rehash_mem,
+                    clean * (1.0 - dmiss_frac) * cost.cached_read_weight * cost.syscall_weight
+                        + rehash_mem,
                 ),
                 (self.res.dst_hash, 1.0),
                 (self.res.src_pool, 1.0),

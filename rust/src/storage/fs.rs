@@ -14,12 +14,28 @@
 //!   whole stream — graceful fallback, counted in
 //!   [`FsStorage::direct_fallbacks`], never an error.
 //! * **mmap** — memory-mapped streams, in [`super::mmap`].
+//! * **uring** — io_uring batched submission-queue I/O with registered
+//!   buffers, in [`super::uring`]; ring setup failure (old kernels,
+//!   sandboxes) degrades to buffered, counted in
+//!   [`FsStorage::uring_fallbacks`].
+//! * **auto** — per-file selection: files at or above the configured
+//!   direct threshold open on uring (direct if the ring is unavailable),
+//!   smaller files stay buffered; [`Storage::backend_for`] reports the
+//!   choice per file.
+//!
+//! The read-side engines also issue `posix_fadvise` streaming hints:
+//! `SEQUENTIAL` at stream open, and coalesced `DONTNEED` after verified
+//! spans ([`Storage::advise_done`]) so a long transfer doesn't evict the
+//! rest of the machine's page cache. Hint calls are counted in
+//! [`FsStorage::storage_hints`].
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+#[cfg(target_os = "linux")]
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{Context, Result};
 
@@ -28,23 +44,45 @@ use super::{IoBackend, ReadStream, Storage, WriteStream};
 use super::DIRECT_ALIGN;
 #[cfg(target_os = "linux")]
 use crate::coordinator::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
+use crate::obs::Recorder;
 
 /// Shared per-storage telemetry: how many times streams forced durability
-/// (`sync`), and how many times the direct engine had to fall back to
-/// buffered I/O (open refused or an aligned op failed).
+/// (`sync`), how many times the direct engine had to fall back to
+/// buffered I/O (open refused or an aligned op failed), the io_uring
+/// engine's degradations and syscall accounting (`uring_enters` vs
+/// `uring_ops` is the batching factor), and `posix_fadvise` hints issued.
 pub(crate) struct IoCounters {
     pub(crate) syncs: AtomicU64,
     pub(crate) direct_fallbacks: AtomicU64,
+    pub(crate) uring_fallbacks: AtomicU64,
+    pub(crate) uring_enters: AtomicU64,
+    pub(crate) uring_ops: AtomicU64,
+    pub(crate) hints: AtomicU64,
 }
 
 impl IoCounters {
-    fn new() -> Arc<IoCounters> {
+    pub(crate) fn new() -> Arc<IoCounters> {
         Arc::new(IoCounters {
             syncs: AtomicU64::new(0),
             direct_fallbacks: AtomicU64::new(0),
+            uring_fallbacks: AtomicU64::new(0),
+            uring_enters: AtomicU64::new(0),
+            uring_ops: AtomicU64::new(0),
+            hints: AtomicU64::new(0),
         })
     }
 }
+
+/// File-size floor (bytes) above which `--io-backend auto` leaves the
+/// page-cache-friendly buffered engine for uring/direct.
+pub const DEFAULT_DIRECT_THRESHOLD: u64 = 256 << 20;
+
+/// Minimum verified-span width before a coalesced `POSIX_FADV_DONTNEED`
+/// hint is issued — per-leaf hints would cost an open + fadvise per
+/// chunk, which the allocation/syscall budget of the hot path can't
+/// afford; an 8 MiB batch is invisible in both.
+#[cfg(target_os = "linux")]
+const HINT_COALESCE: u64 = 8 << 20;
 
 /// Real files under a root directory, accessed through the configured
 /// [`IoBackend`] engine.
@@ -52,6 +90,23 @@ pub struct FsStorage {
     root: PathBuf,
     backend: IoBackend,
     counters: Arc<IoCounters>,
+    /// `auto` threshold: files >= this open on uring/direct.
+    threshold: u64,
+    /// Obs recorder the uring engine draws its submit/complete shard from.
+    #[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+    recorder: Recorder,
+    /// Lazily-created shared io_uring ring (`None` inside = setup failed,
+    /// every uring stream degrades to buffered).
+    #[cfg(target_os = "linux")]
+    uring: OnceLock<Option<Arc<super::uring::UringCore>>>,
+    /// Pool adopted via [`Storage::register_pool`] — the source of the
+    /// ring's registered-buffer table.
+    #[cfg(target_os = "linux")]
+    pool: Mutex<Option<BufferPool>>,
+    /// Per-file verified-span bounding boxes awaiting a coalesced
+    /// DONTNEED hint (see [`HINT_COALESCE`]).
+    #[cfg(target_os = "linux")]
+    hint_spans: Mutex<std::collections::HashMap<String, (u64, u64)>>,
 }
 
 impl FsStorage {
@@ -64,13 +119,39 @@ impl FsStorage {
     }
 
     /// Open a root with an explicit backend. Platforms without mmap /
-    /// O_DIRECT support degrade to `buffered` (graceful fallback — the
-    /// transfer must run everywhere, just without the engine's edge).
+    /// O_DIRECT / io_uring support degrade to `buffered` (graceful
+    /// fallback — the transfer must run everywhere, just without the
+    /// engine's edge).
     pub fn with_backend(root: &Path, backend: IoBackend) -> Result<FsStorage> {
         std::fs::create_dir_all(root)
             .with_context(|| format!("creating storage root {}", root.display()))?;
         let backend = if cfg!(target_os = "linux") { backend } else { IoBackend::Buffered };
-        Ok(FsStorage { root: root.to_path_buf(), backend, counters: IoCounters::new() })
+        Ok(FsStorage {
+            root: root.to_path_buf(),
+            backend,
+            counters: IoCounters::new(),
+            threshold: DEFAULT_DIRECT_THRESHOLD,
+            recorder: Recorder::disabled(),
+            #[cfg(target_os = "linux")]
+            uring: OnceLock::new(),
+            #[cfg(target_os = "linux")]
+            pool: Mutex::new(None),
+            #[cfg(target_os = "linux")]
+            hint_spans: Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Set the `auto` engine's size threshold (`--direct-threshold`).
+    pub fn with_threshold(mut self, threshold: u64) -> FsStorage {
+        self.threshold = threshold;
+        self
+    }
+
+    /// Attach an obs recorder: the uring engine's submit/complete spans
+    /// and queue-depth gauge land on its `storage-uring` shard.
+    pub fn with_recorder(mut self, recorder: Recorder) -> FsStorage {
+        self.recorder = recorder;
+        self
     }
 
     /// The effective engine (after any platform degrade).
@@ -83,25 +164,168 @@ impl FsStorage {
         self.counters.direct_fallbacks.load(Ordering::Relaxed)
     }
 
+    /// Times the uring engine fell back to buffered I/O (ring setup
+    /// refused, or a ring died mid-transfer).
+    pub fn uring_fallbacks(&self) -> u64 {
+        self.counters.uring_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// `io_uring_enter` syscalls taken (batching denominator).
+    pub fn uring_enters(&self) -> u64 {
+        self.counters.uring_enters.load(Ordering::Relaxed)
+    }
+
+    /// I/O operations completed through the ring (batching numerator —
+    /// `uring_ops / uring_enters` is the realized batch factor).
+    pub fn uring_ops(&self) -> u64 {
+        self.counters.uring_ops.load(Ordering::Relaxed)
+    }
+
+    /// `posix_fadvise` streaming hints issued (SEQUENTIAL + DONTNEED).
+    pub fn storage_hints(&self) -> u64 {
+        self.counters.hints.load(Ordering::Relaxed)
+    }
+
     fn path(&self, name: &str) -> PathBuf {
         self.root.join(name)
+    }
+
+    /// The shared ring, created on first use. `None` = setup failed
+    /// (counted once); uring opens then serve buffered streams.
+    #[cfg(target_os = "linux")]
+    fn uring_core(&self) -> Option<Arc<super::uring::UringCore>> {
+        self.uring
+            .get_or_init(|| {
+                let core = super::uring::UringCore::create(
+                    self.counters.clone(),
+                    self.recorder.shard("storage-uring"),
+                );
+                if let Some(c) = core.as_ref() {
+                    if let Some(p) = self.pool.lock().unwrap().as_ref() {
+                        c.adopt_pool(p);
+                    }
+                }
+                core
+            })
+            .clone()
+    }
+
+    /// Resolve the engine for one file: `auto` picks by size (uring when
+    /// the ring is up, direct otherwise, buffered below the threshold);
+    /// explicit backends pass through.
+    fn resolve(&self, size: u64) -> IoBackend {
+        match self.backend {
+            IoBackend::Auto => {
+                if size >= self.threshold {
+                    #[cfg(target_os = "linux")]
+                    {
+                        if self.uring_core().is_some() {
+                            return IoBackend::Uring;
+                        }
+                        return IoBackend::Direct;
+                    }
+                    #[cfg(not(target_os = "linux"))]
+                    IoBackend::Buffered
+                } else {
+                    IoBackend::Buffered
+                }
+            }
+            b => b,
+        }
+    }
+
+    fn size_on_disk(&self, name: &str) -> u64 {
+        std::fs::metadata(self.path(name)).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Issue the coalesced DONTNEED for `[offset, offset + len)` of
+    /// `name` (`len == 0` = to EOF). Failure is a non-event: hints are
+    /// advisory.
+    #[cfg(target_os = "linux")]
+    fn fadvise_dontneed(&self, name: &str, offset: u64, len: u64) {
+        use std::os::unix::io::AsRawFd;
+        if let Ok(f) = File::open(self.path(name)) {
+            // SAFETY: fd is live for the call; constants match the ABI.
+            let rc = unsafe {
+                fadv_sys::posix_fadvise(
+                    f.as_raw_fd(),
+                    offset as i64,
+                    len as i64,
+                    fadv_sys::POSIX_FADV_DONTNEED,
+                )
+            };
+            if rc == 0 {
+                self.counters.hints.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Tell the kernel this descriptor will be read sequentially (readahead
+/// doubles on most kernels). Advisory: refusal is ignored.
+#[cfg(target_os = "linux")]
+pub(crate) fn advise_sequential(f: &File, counters: &IoCounters) {
+    use std::os::unix::io::AsRawFd;
+    // SAFETY: fd is live for the call; constants match the ABI.
+    let rc = unsafe {
+        fadv_sys::posix_fadvise(f.as_raw_fd(), 0, 0, fadv_sys::POSIX_FADV_SEQUENTIAL)
+    };
+    if rc == 0 {
+        counters.hints.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod fadv_sys {
+    /// Expect sequential access — kernel may double readahead.
+    pub const POSIX_FADV_SEQUENTIAL: i32 = 2;
+    /// The given range will not be accessed again — drop cached pages.
+    pub const POSIX_FADV_DONTNEED: i32 = 4;
+
+    extern "C" {
+        /// Page-cache usage hint — see `posix_fadvise(2)`.
+        pub fn posix_fadvise(fd: i32, offset: i64, len: i64, advice: i32) -> i32;
+    }
+}
+
+impl FsStorage {
+    fn open_read_buffered(&self, path: &Path, name: &str) -> Result<Box<dyn ReadStream>> {
+        let f = File::open(path).with_context(|| format!("opening {name} for read"))?;
+        #[cfg(target_os = "linux")]
+        advise_sequential(&f, &self.counters);
+        Ok(Box::new(FsRead { f, pos: 0 }))
+    }
+
+    fn open_write_buffered(&self, path: &Path, name: &str) -> Result<Box<dyn WriteStream>> {
+        let f = File::create(path).with_context(|| format!("opening {name} for write"))?;
+        Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
+    }
+
+    fn open_update_buffered(&self, path: &Path, name: &str) -> Result<Box<dyn WriteStream>> {
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {name} for update"))?;
+        Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
     }
 }
 
 impl Storage for FsStorage {
     fn open_read(&self, name: &str) -> Result<Box<dyn ReadStream>> {
         let path = self.path(name);
-        match self.backend {
-            IoBackend::Buffered => {
-                let f = File::open(&path).with_context(|| format!("opening {name} for read"))?;
-                Ok(Box::new(FsRead { f, pos: 0 }))
-            }
+        match self.resolve(self.size_on_disk(name)) {
+            IoBackend::Buffered | IoBackend::Auto => self.open_read_buffered(&path, name),
             #[cfg(target_os = "linux")]
             IoBackend::Mmap => Ok(Box::new(super::mmap::MmapRead::open(&path, name)?)),
             #[cfg(target_os = "linux")]
             IoBackend::Direct => {
                 Ok(Box::new(DirectRead::open(&path, name, self.counters.clone())?))
             }
+            #[cfg(target_os = "linux")]
+            IoBackend::Uring => match self.uring_core() {
+                Some(core) => Ok(Box::new(super::uring::UringRead::open(&path, name, core)?)),
+                None => self.open_read_buffered(&path, name),
+            },
             #[cfg(not(target_os = "linux"))]
             _ => unreachable!("non-buffered backends degrade at construction"),
         }
@@ -113,12 +337,8 @@ impl Storage for FsStorage {
 
     fn open_write_sized(&self, name: &str, size_hint: u64) -> Result<Box<dyn WriteStream>> {
         let path = self.path(name);
-        match self.backend {
-            IoBackend::Buffered => {
-                let f =
-                    File::create(&path).with_context(|| format!("opening {name} for write"))?;
-                Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
-            }
+        match self.resolve(size_hint) {
+            IoBackend::Buffered | IoBackend::Auto => self.open_write_buffered(&path, name),
             #[cfg(target_os = "linux")]
             IoBackend::Mmap => Ok(Box::new(super::mmap::MmapWrite::create(
                 &path,
@@ -128,9 +348,18 @@ impl Storage for FsStorage {
             )?)),
             #[cfg(target_os = "linux")]
             IoBackend::Direct => {
-                let _ = size_hint;
                 Ok(Box::new(DirectWrite::create(&path, name, self.counters.clone())?))
             }
+            #[cfg(target_os = "linux")]
+            IoBackend::Uring => match self.uring_core() {
+                Some(core) => Ok(Box::new(super::uring::UringWrite::create(
+                    &path,
+                    name,
+                    core,
+                    self.counters.clone(),
+                )?)),
+                None => self.open_write_buffered(&path, name),
+            },
             #[cfg(not(target_os = "linux"))]
             _ => unreachable!("non-buffered backends degrade at construction"),
         }
@@ -138,14 +367,8 @@ impl Storage for FsStorage {
 
     fn open_update(&self, name: &str) -> Result<Box<dyn WriteStream>> {
         let path = self.path(name);
-        match self.backend {
-            IoBackend::Buffered => {
-                let f = OpenOptions::new()
-                    .write(true)
-                    .open(&path)
-                    .with_context(|| format!("opening {name} for update"))?;
-                Ok(Box::new(FsWrite { f, pos: 0, counters: self.counters.clone() }))
-            }
+        match self.resolve(self.size_on_disk(name)) {
+            IoBackend::Buffered | IoBackend::Auto => self.open_update_buffered(&path, name),
             #[cfg(target_os = "linux")]
             IoBackend::Mmap => {
                 Ok(Box::new(super::mmap::MmapWrite::open_existing(
@@ -158,6 +381,16 @@ impl Storage for FsStorage {
             IoBackend::Direct => {
                 Ok(Box::new(DirectWrite::open_existing(&path, name, self.counters.clone())?))
             }
+            #[cfg(target_os = "linux")]
+            IoBackend::Uring => match self.uring_core() {
+                Some(core) => Ok(Box::new(super::uring::UringWrite::open_existing(
+                    &path,
+                    name,
+                    core,
+                    self.counters.clone(),
+                )?)),
+                None => self.open_update_buffered(&path, name),
+            },
             #[cfg(not(target_os = "linux"))]
             _ => unreachable!("non-buffered backends degrade at construction"),
         }
@@ -179,6 +412,71 @@ impl Storage for FsStorage {
 
     fn direct_fallbacks(&self) -> u64 {
         self.counters.direct_fallbacks.load(Ordering::Relaxed)
+    }
+
+    fn uring_fallbacks(&self) -> u64 {
+        self.counters.uring_fallbacks.load(Ordering::Relaxed)
+    }
+
+    fn hint_count(&self) -> u64 {
+        self.counters.hints.load(Ordering::Relaxed)
+    }
+
+    fn backend_for(&self, name: &str) -> &'static str {
+        self.resolve(self.size_on_disk(name)).name()
+    }
+
+    #[cfg(target_os = "linux")]
+    fn register_pool(&self, pool: &BufferPool) {
+        *self.pool.lock().unwrap() = Some(pool.clone());
+        // If the ring already exists, re-point it; otherwise uring_core()
+        // adopts the stashed pool at creation.
+        if let Some(Some(core)) = self.uring.get() {
+            core.adopt_pool(pool);
+        }
+    }
+
+    fn advise_done(&self, name: &str, offset: u64, len: u64) -> Result<()> {
+        #[cfg(target_os = "linux")]
+        {
+            // The mmap engine keeps live zero-copy views over the file
+            // (delta copy ranges, verify reads) — evicting pages under
+            // them would just fault them straight back in.
+            if self.backend == IoBackend::Mmap {
+                return Ok(());
+            }
+            if len == 0 {
+                // Whole file verified: flush immediately, drop any
+                // partial bounding box.
+                self.hint_spans.lock().unwrap().remove(name);
+                self.fadvise_dontneed(name, 0, 0);
+                return Ok(());
+            }
+            // Coalesce per-leaf spans into a per-file bounding box and
+            // only hint once it spans HINT_COALESCE bytes — the hot
+            // path stays free of per-chunk opens.
+            let flush = {
+                let mut spans = self.hint_spans.lock().unwrap();
+                let (lo, hi) = spans
+                    .entry(name.to_string())
+                    .or_insert((offset, offset + len));
+                *lo = (*lo).min(offset);
+                *hi = (*hi).max(offset + len);
+                if *hi - *lo >= HINT_COALESCE {
+                    spans.remove(name)
+                } else {
+                    None
+                }
+            };
+            if let Some((lo, hi)) = flush {
+                self.fadvise_dontneed(name, lo, hi - lo);
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (name, offset, len);
+        }
+        Ok(())
     }
 
     fn sync_file(&self, name: &str) -> Result<()> {
@@ -449,6 +747,7 @@ pub(crate) struct DirectRead {
 impl DirectRead {
     pub(crate) fn open(path: &Path, name: &str, counters: Arc<IoCounters>) -> Result<DirectRead> {
         let plain = File::open(path).with_context(|| format!("opening {name} for read"))?;
+        advise_sequential(&plain, &counters);
         let direct = open_direct(path, false, &counters);
         Ok(DirectRead { direct, plain, pos: 0, counters })
     }

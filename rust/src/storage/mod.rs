@@ -15,6 +15,14 @@
 //! * [`IoBackend::Direct`] — O_DIRECT-style aligned I/O that bypasses the
 //!   page cache where offset/length/buffer all meet [`DIRECT_ALIGN`],
 //!   with graceful per-operation and per-filesystem fallback to buffered.
+//! * [`IoBackend::Uring`] — io_uring submission-queue I/O: multiple reads
+//!   or writes queue as SQEs and drain with one `io_uring_enter`, pooled
+//!   buffers register once (`IORING_REGISTER_BUFFERS`) so fixed-buffer
+//!   ops skip per-op pinning. Kernels without io_uring degrade to
+//!   buffered, counted in `uring_fallbacks`.
+//! * [`IoBackend::Auto`] — per-file policy, not an engine: files at or
+//!   above the direct threshold open on the uring engine (direct when the
+//!   ring is unavailable), smaller files stay buffered.
 //!
 //! The traits carry the vectored/ranged operations the data plane wants:
 //! [`ReadStream::read_shared`] fills (or, on mmap, *aliases*) a pooled
@@ -36,6 +44,8 @@ pub mod fs;
 pub mod mem;
 #[cfg(target_os = "linux")]
 pub(crate) mod mmap;
+#[cfg(target_os = "linux")]
+pub(crate) mod uring;
 
 pub use fs::FsStorage;
 pub use mem::MemStorage;
@@ -58,12 +68,23 @@ pub enum IoBackend {
     /// O_DIRECT-style aligned I/O bypassing the page cache, with graceful
     /// fallback where the filesystem or platform refuses it.
     Direct,
+    /// io_uring submission-queue I/O with registered buffers: batched
+    /// SQE submissions drain with one `io_uring_enter`, falling back to
+    /// buffered on kernels without io_uring support.
+    Uring,
+    /// Per-file automatic selection: large files (at or above the direct
+    /// threshold) open on the uring/direct engine, small files stay
+    /// buffered. A policy over the other engines, so it is not in
+    /// [`IoBackend::ALL`] (sweeps iterate real engines).
+    Auto,
 }
 
 impl IoBackend {
-    /// Every backend, in presentation order — the single source of truth
-    /// for tests, benches, CI matrix legs and CLI help.
-    pub const ALL: [IoBackend; 3] = [IoBackend::Buffered, IoBackend::Mmap, IoBackend::Direct];
+    /// Every *engine*, in presentation order — the single source of truth
+    /// for tests, benches, CI matrix legs and CLI help. `Auto` is a
+    /// per-file policy over these and deliberately absent.
+    pub const ALL: [IoBackend; 4] =
+        [IoBackend::Buffered, IoBackend::Mmap, IoBackend::Direct, IoBackend::Uring];
 
     /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
@@ -71,6 +92,8 @@ impl IoBackend {
             IoBackend::Buffered => "buffered",
             IoBackend::Mmap => "mmap",
             IoBackend::Direct => "direct",
+            IoBackend::Uring => "uring",
+            IoBackend::Auto => "auto",
         }
     }
 
@@ -80,6 +103,8 @@ impl IoBackend {
             "buffered" | "pread" | "default" => Some(IoBackend::Buffered),
             "mmap" => Some(IoBackend::Mmap),
             "direct" | "o_direct" | "odirect" => Some(IoBackend::Direct),
+            "uring" | "io_uring" | "io-uring" => Some(IoBackend::Uring),
+            "auto" => Some(IoBackend::Auto),
             _ => None,
         }
     }
@@ -96,11 +121,12 @@ impl IoBackend {
     }
 
     /// Buffer alignment the data-plane pool should use for this backend
-    /// (pooled buffers become valid O_DIRECT targets without a bounce
-    /// copy).
+    /// (pooled buffers become valid O_DIRECT / registered-buffer targets
+    /// without a bounce copy; `Auto` may resolve to either, so it aligns
+    /// too).
     pub fn buffer_align(&self) -> usize {
         match self {
-            IoBackend::Direct => DIRECT_ALIGN,
+            IoBackend::Direct | IoBackend::Uring | IoBackend::Auto => DIRECT_ALIGN,
             _ => 1,
         }
     }
@@ -138,6 +164,41 @@ pub trait Storage: Send + Sync {
     fn direct_fallbacks(&self) -> u64 {
         0
     }
+    /// Times the io_uring engine fell back to buffered I/O (ring setup
+    /// refused — `ENOSYS`/`EPERM` on kernels or sandboxes without
+    /// io_uring — or a mid-stream ring error). 0 for every other engine;
+    /// surfaces in `TransferReport::uring_fallbacks`.
+    fn uring_fallbacks(&self) -> u64 {
+        0
+    }
+    /// Page-cache hint calls issued (`posix_fadvise` SEQUENTIAL at stream
+    /// open plus DONTNEED after verified ranges). Surfaces in
+    /// `TransferReport::storage_hints`.
+    fn hint_count(&self) -> u64 {
+        0
+    }
+    /// The engine a specific file would open on — equals
+    /// [`Storage::backend_name`] for every fixed engine; the `auto`
+    /// policy resolves it per file by size.
+    fn backend_for(&self, _name: &str) -> &'static str {
+        self.backend_name()
+    }
+    /// Streaming page-cache hint: the bytes of `name` in
+    /// `[offset, offset + len)` were verified and will not be re-read —
+    /// the backend may drop them from the page cache
+    /// (`POSIX_FADV_DONTNEED`). `len == 0` means "to end of file". Purely
+    /// advisory: errors are swallowed, backends without a page-cache
+    /// notion ignore it.
+    fn advise_done(&self, _name: &str, _offset: u64, _len: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Offer the data-plane [`BufferPool`] to the backend. The io_uring
+    /// engine registers its aligned backings as the ring's fixed-buffer
+    /// table (`IORING_REGISTER_BUFFERS`) so pooled reads and writes skip
+    /// per-op page pinning; every other engine ignores it. Sessions call
+    /// this right after constructing their pool — write streams only ever
+    /// see `&[u8]`, so the pool has to arrive out of band.
+    fn register_pool(&self, _pool: &BufferPool) {}
     /// Force every written byte of `name` to durable storage, regardless
     /// of which stream wrote it. On Unix this is `fdatasync` on the
     /// inode, which also settles pages dirtied through `MAP_SHARED`
@@ -458,9 +519,14 @@ mod tests {
             assert_eq!(IoBackend::parse(b.name()), Some(b));
         }
         assert_eq!(IoBackend::parse("O_DIRECT"), Some(IoBackend::Direct));
+        assert_eq!(IoBackend::parse("io_uring"), Some(IoBackend::Uring));
+        assert_eq!(IoBackend::parse("auto"), Some(IoBackend::Auto));
+        assert!(!IoBackend::ALL.contains(&IoBackend::Auto), "auto is a policy, not an engine");
         assert_eq!(IoBackend::parse("nope"), None);
         assert_eq!(IoBackend::Buffered.buffer_align(), 1);
         assert_eq!(IoBackend::Direct.buffer_align(), DIRECT_ALIGN);
+        assert_eq!(IoBackend::Uring.buffer_align(), DIRECT_ALIGN);
+        assert_eq!(IoBackend::Auto.buffer_align(), DIRECT_ALIGN);
         assert!(DIRECT_ALIGN.is_power_of_two());
     }
 

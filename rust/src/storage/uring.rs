@@ -1,0 +1,1057 @@
+//! io_uring storage engine (Linux): batched submission-queue I/O with
+//! registered buffers, behind the same [`ReadStream`]/[`WriteStream`]
+//! seam as the other engines — raw `io_uring_setup`/`io_uring_enter`/
+//! `io_uring_register` syscalls, no crates.
+//!
+//! Where the syscalls go: the buffered engine pays one `pread` per chunk
+//! and one `pwrite` per chunk (plus one per repair part). This engine
+//! queues multiple operations as SQEs and drains them with a *single*
+//! `io_uring_enter` — the reader submits a small readahead batch
+//! ([`RA_DEPTH`] sequential chunks) per miss and then serves the next
+//! chunks from completed buffers with **zero** syscalls, and
+//! `write_at_vectored`'s coalesced repair batches land as one SQE per
+//! part under one enter. `IoCounters::uring_enters` vs
+//! `IoCounters::uring_ops` makes the batching factor observable (the
+//! `coordinator_hotpath` bench asserts enters < ops).
+//!
+//! Registered buffers: the [`BufferPool`]'s aligned backings are
+//! registered once per pool epoch (`IORING_REGISTER_BUFFERS`), so
+//! operations on pooled buffers run as `IORING_OP_READ_FIXED`/
+//! `WRITE_FIXED` and skip per-op page pinning. The pool's adaptive growth
+//! bumps its `grow_events` epoch; the ring detects the stale key on the
+//! next batch and re-registers (see `BufferPool::registration_table`).
+//! Registration refusal (e.g. `RLIMIT_MEMLOCK`) is tolerated: operations
+//! simply run unregistered (`READV`/`WRITEV`), still batched.
+//!
+//! Degradation mirrors the O_DIRECT engine: `ENOSYS`/`EPERM` at ring
+//! setup (kernels or sandboxes without io_uring) falls back to buffered
+//! streams, counted once in `IoCounters::uring_fallbacks`; a mid-stream
+//! ring failure kills the shared ring (counted once) and every stream
+//! completes through its plain descriptor. Data delivery is bit-identical
+//! either way.
+//!
+//! Durability & ordering: every batch *completes before the call
+//! returns* (one `io_uring_enter` with `min_complete == n`), so a
+//! `WriteStream::sync` (`fdatasync`) can never run ahead of queued
+//! writes — the checkpoint journal's data-before-watermark ordering
+//! holds exactly as it does for the synchronous engines (see DESIGN.md
+//! "io_uring data plane").
+
+#![cfg(target_os = "linux")]
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::fs::{pread, pwrite_all, IoCounters};
+use super::{ReadStream, WriteStream};
+use crate::coordinator::bufpool::{BufferPool, PoolBuf, SharedBuf, POOL_GRACE};
+use crate::obs::{Shard, Stage};
+
+/// Submission/completion queue entries requested at ring setup. Sized
+/// for the engine's batches (readahead depth, repair waves), not for
+/// deep async pipelines — every batch completes synchronously.
+const RING_ENTRIES: u32 = 64;
+
+/// Sequential chunks submitted per readahead batch: one miss costs one
+/// `io_uring_enter` and the next `RA_DEPTH - 1` chunks are then served
+/// syscall-free, putting the read path well under one syscall per chunk.
+const RA_DEPTH: usize = 4;
+
+/// Largest SQE wave per `io_uring_enter` (bounded so per-wave iovec
+/// storage lives on the stack); longer op lists submit in waves.
+const MAX_BATCH: usize = 32;
+
+mod sys {
+    use std::ffi::{c_long, c_void};
+
+    /// `io_uring_setup(2)` syscall number (same on every 64-bit arch).
+    pub const SYS_IO_URING_SETUP: c_long = 425;
+    /// `io_uring_enter(2)` syscall number.
+    pub const SYS_IO_URING_ENTER: c_long = 426;
+    /// `io_uring_register(2)` syscall number.
+    pub const SYS_IO_URING_REGISTER: c_long = 427;
+
+    /// mmap offset of the submission-queue ring.
+    pub const IORING_OFF_SQ_RING: i64 = 0;
+    /// mmap offset of the completion-queue ring.
+    pub const IORING_OFF_CQ_RING: i64 = 0x8000000;
+    /// mmap offset of the SQE array.
+    pub const IORING_OFF_SQES: i64 = 0x10000000;
+
+    /// Feature bit: one mmap covers both rings (kernel >= 5.4).
+    pub const IORING_FEAT_SINGLE_MMAP: u32 = 1;
+    /// `io_uring_enter` flag: wait for `min_complete` completions.
+    pub const IORING_ENTER_GETEVENTS: u32 = 1;
+
+    /// Vectored read opcode.
+    pub const IORING_OP_READV: u8 = 1;
+    /// Vectored write opcode.
+    pub const IORING_OP_WRITEV: u8 = 2;
+    /// Registered-buffer read opcode.
+    pub const IORING_OP_READ_FIXED: u8 = 4;
+    /// Registered-buffer write opcode.
+    pub const IORING_OP_WRITE_FIXED: u8 = 5;
+
+    /// `io_uring_register` opcode: register a buffer table.
+    pub const IORING_REGISTER_BUFFERS: u32 = 0;
+    /// `io_uring_register` opcode: drop the registered buffer table.
+    pub const IORING_UNREGISTER_BUFFERS: u32 = 1;
+
+    /// `PROT_READ | PROT_WRITE` for the ring mappings.
+    pub const PROT_RW: i32 = 0x1 | 0x2;
+    /// `MAP_SHARED` — ring memory is shared with the kernel.
+    pub const MAP_SHARED: i32 = 0x01;
+
+    /// Offsets into the SQ ring mapping (`struct io_sqring_offsets`).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct SqringOffsets {
+        pub head: u32,
+        pub tail: u32,
+        pub ring_mask: u32,
+        pub ring_entries: u32,
+        pub flags: u32,
+        pub dropped: u32,
+        pub array: u32,
+        pub resv1: u32,
+        pub resv2: u64,
+    }
+
+    /// Offsets into the CQ ring mapping (`struct io_cqring_offsets`).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct CqringOffsets {
+        pub head: u32,
+        pub tail: u32,
+        pub ring_mask: u32,
+        pub ring_entries: u32,
+        pub overflow: u32,
+        pub cqes: u32,
+        pub flags: u32,
+        pub resv1: u32,
+        pub resv2: u64,
+    }
+
+    /// `struct io_uring_params` — filled in by `io_uring_setup`.
+    #[repr(C)]
+    pub struct IoUringParams {
+        pub sq_entries: u32,
+        pub cq_entries: u32,
+        pub flags: u32,
+        pub sq_thread_cpu: u32,
+        pub sq_thread_idle: u32,
+        pub features: u32,
+        pub wq_fd: u32,
+        pub resv: [u32; 3],
+        pub sq_off: SqringOffsets,
+        pub cq_off: CqringOffsets,
+    }
+
+    /// One 64-byte submission-queue entry (`struct io_uring_sqe`).
+    #[repr(C)]
+    pub struct Sqe {
+        pub opcode: u8,
+        pub flags: u8,
+        pub ioprio: u16,
+        pub fd: i32,
+        pub off: u64,
+        pub addr: u64,
+        pub len: u32,
+        pub rw_flags: u32,
+        pub user_data: u64,
+        pub buf_index: u16,
+        pub personality: u16,
+        pub splice_fd_in: i32,
+        pub pad2: [u64; 2],
+    }
+
+    /// One 16-byte completion-queue entry (`struct io_uring_cqe`).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct Cqe {
+        pub user_data: u64,
+        pub res: i32,
+        pub flags: u32,
+    }
+
+    /// One `struct iovec` (READV/WRITEV payload descriptor and the
+    /// registration table entry format).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct IoVec {
+        pub base: *mut c_void,
+        pub len: usize,
+    }
+
+    extern "C" {
+        /// Raw syscall entry — how the three io_uring calls are made
+        /// without a libc wrapper dependency.
+        pub fn syscall(num: c_long, ...) -> c_long;
+        /// Map ring memory — see `mmap(2)`.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        /// Unmap ring memory — see `munmap(2)`.
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        /// Close the ring descriptor — see `close(2)`.
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// One mmap'd ring region, unmapped on drop.
+struct Mapping {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl Mapping {
+    fn map(fd: i32, len: usize, offset: i64) -> std::io::Result<Mapping> {
+        // SAFETY: fd is the live ring descriptor; the kernel validates
+        // len/offset against the ring geometry.
+        let p = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_RW, sys::MAP_SHARED, fd, offset)
+        };
+        if p as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr: p as *mut u8, len })
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        // SAFETY: mapping is live until this munmap.
+        unsafe {
+            sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+/// One I/O operation to queue: a single-buffer read or write at an
+/// absolute file offset. `submit_wave` picks the fixed-buffer opcode
+/// when `ptr` lies inside a registered backing.
+struct SqOp {
+    write: bool,
+    fd: i32,
+    offset: u64,
+    ptr: *mut u8,
+    len: usize,
+}
+
+/// The live ring: fd, the three mappings, cached ring pointers, and the
+/// registered-buffer table. Owned behind [`UringCore`]'s mutex; raw ring
+/// pointers are only touched while that lock is held.
+struct Ring {
+    fd: i32,
+    _sq_ring: Mapping,
+    _cq_ring: Option<Mapping>,
+    _sqes: Mapping,
+    sq_tail: *const AtomicU32,
+    sq_mask: u32,
+    sq_array: *mut u32,
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cq_mask: u32,
+    cqes: *const sys::Cqe,
+    sqe_ptr: *mut sys::Sqe,
+    /// Is a buffer table currently registered with the kernel?
+    registered: bool,
+    /// `(pool core_id, grow_events epoch)` the current registration (or
+    /// registration *attempt* — failures are cached too, so a refusing
+    /// kernel is asked once per epoch, not once per batch) corresponds to.
+    reg_key: Option<(usize, u64)>,
+    /// Registered backings as `(address, length)`, sorted by address —
+    /// `fixed_index` resolves op buffers against it by binary search.
+    table: Vec<(usize, usize)>,
+}
+
+// SAFETY: the ring is confined behind UringCore's Mutex — all pointer
+// access happens under that lock, one thread at a time.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    /// `io_uring_setup` + the ring mmaps. Any failure (ENOSYS on old
+    /// kernels, EPERM in sandboxes, mmap refusal) surfaces as `Err` and
+    /// the caller degrades to buffered I/O.
+    fn setup(entries: u32) -> std::io::Result<Ring> {
+        // SAFETY: params is a zeroed struct the kernel fills in.
+        let mut p: sys::IoUringParams = unsafe { std::mem::zeroed() };
+        // SAFETY: valid pointer to params; kernel validates entries.
+        let rc = unsafe {
+            sys::syscall(sys::SYS_IO_URING_SETUP, entries, &mut p as *mut sys::IoUringParams)
+        };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        let fd = rc as i32;
+        match Ring::map_rings(fd, &p) {
+            Ok(ring) => Ok(ring),
+            Err(e) => {
+                // SAFETY: fd is the live ring descriptor we just created.
+                unsafe { sys::close(fd) };
+                Err(e)
+            }
+        }
+    }
+
+    fn map_rings(fd: i32, p: &sys::IoUringParams) -> std::io::Result<Ring> {
+        let sq_size = p.sq_off.array as usize + p.sq_entries as usize * 4;
+        let cq_size =
+            p.cq_off.cqes as usize + p.cq_entries as usize * std::mem::size_of::<sys::Cqe>();
+        let single = p.features & sys::IORING_FEAT_SINGLE_MMAP != 0;
+        let sq_map_len = if single { sq_size.max(cq_size) } else { sq_size };
+        let sq_ring = Mapping::map(fd, sq_map_len, sys::IORING_OFF_SQ_RING)?;
+        let cq_ring = if single {
+            None
+        } else {
+            Some(Mapping::map(fd, cq_size, sys::IORING_OFF_CQ_RING)?)
+        };
+        let sqes = Mapping::map(
+            fd,
+            p.sq_entries as usize * std::mem::size_of::<sys::Sqe>(),
+            sys::IORING_OFF_SQES,
+        )?;
+        let sqp = sq_ring.ptr;
+        let cqp = cq_ring.as_ref().map(|m| m.ptr).unwrap_or(sq_ring.ptr);
+        // SAFETY: all offsets come from the kernel's params and lie
+        // within the mappings created above.
+        unsafe {
+            Ok(Ring {
+                fd,
+                sq_tail: sqp.add(p.sq_off.tail as usize) as *const AtomicU32,
+                sq_mask: *(sqp.add(p.sq_off.ring_mask as usize) as *const u32),
+                sq_array: sqp.add(p.sq_off.array as usize) as *mut u32,
+                cq_head: cqp.add(p.cq_off.head as usize) as *const AtomicU32,
+                cq_tail: cqp.add(p.cq_off.tail as usize) as *const AtomicU32,
+                cq_mask: *(cqp.add(p.cq_off.ring_mask as usize) as *const u32),
+                cqes: cqp.add(p.cq_off.cqes as usize) as *const sys::Cqe,
+                sqe_ptr: sqes.ptr as *mut sys::Sqe,
+                _sq_ring: sq_ring,
+                _cq_ring: cq_ring,
+                _sqes: sqes,
+                registered: false,
+                reg_key: None,
+                table: Vec::new(),
+            })
+        }
+    }
+
+    /// (Re-)register the pool's backings as the ring's fixed-buffer
+    /// table. Failures (e.g. `RLIMIT_MEMLOCK`) leave the ring usable in
+    /// unregistered mode; the attempt is cached per epoch either way.
+    fn reregister(&mut self, core_id: usize, pool: &BufferPool) {
+        let (epoch, mut table) = pool.registration_table();
+        let key = (core_id, epoch);
+        if self.reg_key == Some(key) {
+            return;
+        }
+        if self.registered {
+            // SAFETY: fd is live; UNREGISTER takes no argument payload.
+            unsafe {
+                sys::syscall(
+                    sys::SYS_IO_URING_REGISTER,
+                    self.fd,
+                    sys::IORING_UNREGISTER_BUFFERS,
+                    0usize,
+                    0u32,
+                )
+            };
+            self.registered = false;
+        }
+        table.sort_unstable();
+        let iovecs: Vec<sys::IoVec> = table
+            .iter()
+            .map(|&(a, l)| sys::IoVec { base: a as *mut _, len: l })
+            .collect();
+        // SAFETY: iovecs describe live pool backings (pooled backings are
+        // never freed — see PoolState::backings) and outlive the call.
+        let rc = unsafe {
+            sys::syscall(
+                sys::SYS_IO_URING_REGISTER,
+                self.fd,
+                sys::IORING_REGISTER_BUFFERS,
+                iovecs.as_ptr(),
+                iovecs.len() as u32,
+            )
+        };
+        self.registered = rc >= 0;
+        self.table = if self.registered { table } else { Vec::new() };
+        self.reg_key = Some(key);
+    }
+
+    /// The registered-buffer index covering `[ptr, ptr + len)`, if any.
+    fn fixed_index(&self, ptr: *const u8, len: usize) -> Option<u16> {
+        if !self.registered {
+            return None;
+        }
+        let p = ptr as usize;
+        let i = self.table.partition_point(|&(start, _)| start <= p);
+        if i == 0 {
+            return None;
+        }
+        let (start, blen) = self.table[i - 1];
+        (p + len <= start + blen).then_some((i - 1) as u16)
+    }
+
+    /// Queue `ops` as SQEs and drain their completions with (normally)
+    /// one `io_uring_enter`. `results[i]` receives op i's CQE result.
+    /// Returns the number of enter syscalls taken; `Err` means the ring
+    /// itself failed and must be abandoned.
+    fn submit_wave(
+        &mut self,
+        ops: &[SqOp],
+        results: &mut [i32],
+        obs: &Shard,
+    ) -> std::io::Result<u32> {
+        let n = ops.len() as u32;
+        debug_assert!(n as usize <= MAX_BATCH && n <= self.sq_mask + 1);
+        let mut iovecs = [sys::IoVec { base: std::ptr::null_mut(), len: 0 }; MAX_BATCH];
+        let t_submit = obs.start();
+        // SAFETY (this block and below): ring pointers are valid for the
+        // ring's lifetime and we are the only submitter (caller holds the
+        // UringCore lock); the kernel only reads SQE slots in
+        // [head, tail), which cannot include the ones being written here.
+        let tail0 = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
+        for (i, op) in ops.iter().enumerate() {
+            let idx = tail0.wrapping_add(i as u32) & self.sq_mask;
+            // SAFETY: idx is masked into the SQE array.
+            let sqe = unsafe { &mut *self.sqe_ptr.add(idx as usize) };
+            *sqe = unsafe { std::mem::zeroed() };
+            sqe.fd = op.fd;
+            sqe.off = op.offset;
+            sqe.user_data = i as u64;
+            match self.fixed_index(op.ptr, op.len) {
+                Some(bi) => {
+                    sqe.opcode = if op.write {
+                        sys::IORING_OP_WRITE_FIXED
+                    } else {
+                        sys::IORING_OP_READ_FIXED
+                    };
+                    sqe.addr = op.ptr as u64;
+                    sqe.len = op.len as u32;
+                    sqe.buf_index = bi;
+                }
+                None => {
+                    iovecs[i] = sys::IoVec { base: op.ptr as *mut _, len: op.len };
+                    sqe.opcode =
+                        if op.write { sys::IORING_OP_WRITEV } else { sys::IORING_OP_READV };
+                    sqe.addr = &iovecs[i] as *const sys::IoVec as u64;
+                    sqe.len = 1;
+                }
+            }
+            // SAFETY: idx is masked into the SQ index array.
+            unsafe { *self.sq_array.add(idx as usize) = idx };
+        }
+        // Publish the new tail (Release: SQE stores above must be visible
+        // to the kernel before it sees the tail move).
+        unsafe { (*self.sq_tail).store(tail0.wrapping_add(n), Ordering::Release) };
+        // One syscall submits the whole wave and waits for every
+        // completion (min_complete = n) — this is the batching win, and
+        // it is also why completion can never outlive this call.
+        let mut enters = 0u32;
+        loop {
+            // SAFETY: fd is live; null sigset with zero size.
+            let rc = unsafe {
+                sys::syscall(
+                    sys::SYS_IO_URING_ENTER,
+                    self.fd,
+                    n,
+                    n,
+                    sys::IORING_ENTER_GETEVENTS,
+                    std::ptr::null::<std::ffi::c_void>(),
+                    0usize,
+                )
+            };
+            enters += 1;
+            if rc >= 0 {
+                break;
+            }
+            let err = std::io::Error::last_os_error();
+            if err.raw_os_error() != Some(4 /* EINTR */) {
+                return Err(err);
+            }
+        }
+        obs.record(Stage::Submit, t_submit);
+        obs.gauge_depth(n as u64);
+        // Drain the CQ. The enter above waited for n completions, so the
+        // extra-enter loop below is belt-and-braces for CQE visibility
+        // races, not the common path.
+        let t_complete = obs.start();
+        let mut done = 0u32;
+        while done < n {
+            // SAFETY: CQ pointers are valid; Acquire on tail pairs with
+            // the kernel's Release publish of new CQEs.
+            let tail = unsafe { (*self.cq_tail).load(Ordering::Acquire) };
+            let mut head = unsafe { (*self.cq_head).load(Ordering::Relaxed) };
+            while head != tail {
+                // SAFETY: masked index into the CQE array.
+                let cqe = unsafe { *self.cqes.add((head & self.cq_mask) as usize) };
+                let ud = cqe.user_data as usize;
+                if ud < results.len() {
+                    results[ud] = cqe.res;
+                }
+                head = head.wrapping_add(1);
+                done += 1;
+            }
+            // SAFETY: Release hands the consumed slots back to the kernel.
+            unsafe { (*self.cq_head).store(head, Ordering::Release) };
+            if done < n {
+                // SAFETY: as above — wait for the stragglers.
+                let rc = unsafe {
+                    sys::syscall(
+                        sys::SYS_IO_URING_ENTER,
+                        self.fd,
+                        0u32,
+                        n - done,
+                        sys::IORING_ENTER_GETEVENTS,
+                        std::ptr::null::<std::ffi::c_void>(),
+                        0usize,
+                    )
+                };
+                enters += 1;
+                if rc < 0 {
+                    let err = std::io::Error::last_os_error();
+                    if err.raw_os_error() != Some(4 /* EINTR */) {
+                        return Err(err);
+                    }
+                }
+            }
+        }
+        obs.record(Stage::Complete, t_complete);
+        Ok(enters)
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        // SAFETY: fd is live until this close; the mappings unmap via
+        // their own Drop.
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// The per-[`super::FsStorage`] shared ring: created lazily by the first
+/// uring stream open, shared by every stream of that storage (the mutex
+/// serializes batches — each batch is submit + complete, so there is no
+/// cross-stream in-flight state to entangle).
+pub(crate) struct UringCore {
+    ring: Mutex<Option<Ring>>,
+    /// The data-plane pool whose backings get registered
+    /// ([`super::Storage::register_pool`] wires it in).
+    pool: Mutex<Option<BufferPool>>,
+    counters: Arc<IoCounters>,
+    obs: Shard,
+}
+
+impl UringCore {
+    /// Set up the shared ring. `None` (with `uring_fallbacks` counted
+    /// once) when the kernel refuses io_uring — the storage then serves
+    /// buffered streams. `FIVER_URING_DISABLE=1` forces the refusal, so
+    /// tests can exercise the degradation path on any kernel.
+    pub(crate) fn create(counters: Arc<IoCounters>, obs: Shard) -> Option<Arc<UringCore>> {
+        let disabled = std::env::var("FIVER_URING_DISABLE")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false);
+        let ring = if disabled { None } else { Ring::setup(RING_ENTRIES).ok() };
+        match ring {
+            Some(r) => Some(Arc::new(UringCore {
+                ring: Mutex::new(Some(r)),
+                pool: Mutex::new(None),
+                counters,
+                obs,
+            })),
+            None => {
+                counters.uring_fallbacks.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Adopt `pool` as the registration source: its backings become the
+    /// ring's fixed-buffer table (refreshed per grow epoch).
+    pub(crate) fn adopt_pool(&self, pool: &BufferPool) {
+        *self.pool.lock().unwrap() = Some(pool.clone());
+    }
+
+    /// Run one batch: refresh buffer registration if the pool epoch
+    /// moved, submit every op (in waves of [`MAX_BATCH`]), wait for all
+    /// completions. `Err(())` means the ring died — it is torn down (one
+    /// `uring_fallbacks` count) and callers finish on plain descriptors.
+    fn run_batch(&self, ops: &[SqOp], results: &mut [i32]) -> std::result::Result<(), ()> {
+        let mut guard = self.ring.lock().unwrap();
+        let Some(ring) = guard.as_mut() else { return Err(()) };
+        {
+            let pg = self.pool.lock().unwrap();
+            if let Some(p) = pg.as_ref() {
+                // Cheap epoch probe per batch; the full table snapshot +
+                // register syscall runs only when the epoch moved.
+                let key = (p.core_id(), p.grow_events());
+                if ring.reg_key != Some(key) {
+                    ring.reregister(key.0, p);
+                }
+            }
+        }
+        let mut off = 0usize;
+        for wave in ops.chunks(MAX_BATCH) {
+            match ring.submit_wave(wave, &mut results[off..off + wave.len()], &self.obs) {
+                Ok(enters) => {
+                    self.counters.uring_enters.fetch_add(enters as u64, Ordering::Relaxed);
+                    self.counters.uring_ops.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    // Ring-level failure: abandon it for the whole
+                    // storage and count the degradation once.
+                    *guard = None;
+                    self.counters.uring_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    return Err(());
+                }
+            }
+            off += wave.len();
+        }
+        Ok(())
+    }
+}
+
+/// uring engine reader: readahead batches over the shared ring, plus a
+/// plain descriptor for the generic ranged API, top-ups and fallback.
+pub(crate) struct UringRead {
+    core: Option<Arc<UringCore>>,
+    file: File,
+    pos: u64,
+    /// Completed readahead chunks keyed by absolute file offset, in
+    /// submission order — a sequential hit pops the front with zero
+    /// syscalls. Capacity is reserved once (alloc-free steady state).
+    ready: VecDeque<(u64, SharedBuf)>,
+}
+
+impl UringRead {
+    pub(crate) fn open(path: &Path, name: &str, core: Arc<UringCore>) -> Result<UringRead> {
+        let file = File::open(path).with_context(|| format!("opening {name} for read"))?;
+        super::fs::advise_sequential(&file, &core.counters);
+        Ok(UringRead {
+            core: Some(core),
+            file,
+            pos: 0,
+            ready: VecDeque::with_capacity(RA_DEPTH),
+        })
+    }
+
+    /// Fill `buf[..want]` from `offset` via positioned reads on the plain
+    /// descriptor (fallback path and short-completion top-ups).
+    fn pread_fill(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = pread(&self.file, offset + total as u64, &mut buf[total..])?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        Ok(total)
+    }
+}
+
+impl ReadStream for UringRead {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pos = offset;
+        self.read_next(buf)
+    }
+
+    fn read_next(&mut self, buf: &mut [u8]) -> Result<usize> {
+        // Any non-read_shared read invalidates the prefetch run: only
+        // consecutive read_shared calls may consume it, so a stream mixing
+        // APIs (repair re-reads) can never observe pre-write bytes.
+        self.ready.clear();
+        let n = self.pread_fill(self.pos, buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+
+    fn read_shared(&mut self, offset: u64, len: usize, pool: &BufferPool) -> Result<SharedBuf> {
+        // Readahead hit: the bytes are already here, zero syscalls.
+        if let Some(&(o, _)) = self.ready.front() {
+            if o == offset {
+                let (_, shared) = self.ready.pop_front().expect("front checked");
+                if shared.len() > len {
+                    // Caller wants less than was prefetched; later
+                    // prefetched offsets no longer line up.
+                    self.ready.clear();
+                    self.pos = offset + len as u64;
+                    return Ok(shared.slice(0, len));
+                }
+                self.pos = offset + shared.len() as u64;
+                return Ok(shared);
+            }
+            // Offset mismatch (repair re-read, random access): the
+            // prefetched run is stale.
+            self.ready.clear();
+        }
+        let mut first = pool.get_or_alloc(POOL_GRACE);
+        let want = len.min(first.len());
+        let Some(core) = self.core.clone() else {
+            let n = self.pread_fill(offset, &mut first[..want])?;
+            self.pos = offset + n as u64;
+            return Ok(first.freeze(n));
+        };
+        // Batch a readahead run: the requested chunk plus up to
+        // RA_DEPTH - 1 sequential successors — but only on the streaming
+        // shape (full-buffer chunks), and only with buffers the pool can
+        // spare without blocking.
+        let mut bufs: [Option<PoolBuf>; RA_DEPTH] = [None, None, None, None];
+        let full = want == first.len();
+        bufs[0] = Some(first);
+        let mut k = 1usize;
+        if full {
+            while k < RA_DEPTH {
+                match pool.try_get() {
+                    Some(b) => {
+                        bufs[k] = Some(b);
+                        k += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        let mut ops: [Option<SqOp>; RA_DEPTH] = [None, None, None, None];
+        for (i, slot) in bufs.iter_mut().take(k).enumerate() {
+            let b = slot.as_mut().expect("filled above");
+            ops[i] = Some(SqOp {
+                write: false,
+                fd: {
+                    use std::os::unix::io::AsRawFd;
+                    self.file.as_raw_fd()
+                },
+                offset: offset + (i * want) as u64,
+                ptr: b.as_mut_ptr(),
+                len: want,
+            });
+        }
+        let op_arr: [SqOp; RA_DEPTH] = ops.map(|o| {
+            o.unwrap_or(SqOp { write: false, fd: -1, offset: 0, ptr: std::ptr::null_mut(), len: 0 })
+        });
+        let mut results = [-1i32; RA_DEPTH];
+        if core.run_batch(&op_arr[..k], &mut results[..k]).is_err() {
+            // Ring died: this stream (and its siblings) finish buffered.
+            self.core = None;
+            let mut b = bufs[0].take().expect("first buffer");
+            let n = self.pread_fill(offset, &mut b[..want])?;
+            self.pos = offset + n as u64;
+            return Ok(b.freeze(n));
+        }
+        for i in 0..k {
+            let mut b = bufs[i].take().expect("filled above");
+            let o = offset + (i * want) as u64;
+            let mut n = results[i].max(0) as usize;
+            if results[i] < 0 || (n > 0 && n < want) {
+                // Per-op error or short completion: finish the chunk
+                // through the plain descriptor (regular files only short
+                // at EOF, so this is the rare path).
+                n += self.pread_fill(o + n as u64, &mut b[n..want])?;
+            }
+            if n == 0 {
+                break; // EOF: later chunks are empty too
+            }
+            self.ready.push_back((o, b.freeze(n)));
+            if n < want {
+                break; // EOF inside this chunk
+            }
+        }
+        match self.ready.pop_front() {
+            Some((_, shared)) => {
+                self.pos = offset + shared.len() as u64;
+                Ok(shared)
+            }
+            None => Ok(SharedBuf::from_vec(Vec::new())), // at/past EOF
+        }
+    }
+}
+
+/// uring engine writer: ranged and sequential writes submit through the
+/// shared ring (repair batches as one multi-SQE wave per enter), with
+/// plain positioned writes as the completion/fallback path. Every batch
+/// completes before the call returns, so `sync` and the journal's
+/// ordering guarantees work exactly as on the synchronous engines.
+pub(crate) struct UringWrite {
+    core: Option<Arc<UringCore>>,
+    file: File,
+    pos: u64,
+    counters: Arc<IoCounters>,
+}
+
+impl UringWrite {
+    pub(crate) fn create(
+        path: &Path,
+        name: &str,
+        core: Arc<UringCore>,
+        counters: Arc<IoCounters>,
+    ) -> Result<UringWrite> {
+        let file = File::create(path).with_context(|| format!("opening {name} for write"))?;
+        Ok(UringWrite { core: Some(core), file, pos: 0, counters })
+    }
+
+    pub(crate) fn open_existing(
+        path: &Path,
+        name: &str,
+        core: Arc<UringCore>,
+        counters: Arc<IoCounters>,
+    ) -> Result<UringWrite> {
+        let file = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {name} for update"))?;
+        Ok(UringWrite { core: Some(core), file, pos: 0, counters })
+    }
+
+    fn write_range(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        if let Some(core) = self.core.clone() {
+            use std::os::unix::io::AsRawFd;
+            let op = SqOp {
+                write: true,
+                fd: self.file.as_raw_fd(),
+                offset,
+                ptr: data.as_ptr() as *mut u8,
+                len: data.len(),
+            };
+            let mut res = [-1i32; 1];
+            if core.run_batch(std::slice::from_ref(&op), &mut res).is_err() {
+                self.core = None;
+                pwrite_all(&self.file, offset, data)?;
+                return Ok(());
+            }
+            let n = res[0].max(0) as usize;
+            if n < data.len() {
+                // Per-op refusal or short write: complete positionally.
+                pwrite_all(&self.file, offset + n as u64, &data[n..])?;
+            }
+            return Ok(());
+        }
+        pwrite_all(&self.file, offset, data)?;
+        Ok(())
+    }
+}
+
+impl WriteStream for UringWrite {
+    fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.write_range(offset, data)?;
+        self.pos = self.pos.max(offset + data.len() as u64);
+        Ok(())
+    }
+
+    fn write_next(&mut self, data: &[u8]) -> Result<()> {
+        let pos = self.pos;
+        self.write_range(pos, data)?;
+        self.pos = pos + data.len() as u64;
+        Ok(())
+    }
+
+    fn write_at_vectored(&mut self, offset: u64, parts: &[&[u8]]) -> Result<()> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total == 0 {
+            self.pos = self.pos.max(offset);
+            return Ok(());
+        }
+        if let Some(core) = self.core.clone() {
+            use std::os::unix::io::AsRawFd;
+            let fd = self.file.as_raw_fd();
+            // One SQE per part, all under (at most parts/MAX_BATCH)
+            // enters — the coalesced Fix-batch analogue of pwritev.
+            // Repair is the cold path, so the op list may allocate.
+            let mut ops = Vec::with_capacity(parts.len());
+            let mut off = offset;
+            for p in parts.iter().filter(|p| !p.is_empty()) {
+                ops.push(SqOp {
+                    write: true,
+                    fd,
+                    offset: off,
+                    ptr: p.as_ptr() as *mut u8,
+                    len: p.len(),
+                });
+                off += p.len() as u64;
+            }
+            let mut results = vec![-1i32; ops.len()];
+            if core.run_batch(&ops, &mut results).is_ok() {
+                for (op, res) in ops.iter().zip(&results) {
+                    let n = (*res).max(0) as usize;
+                    if n < op.len {
+                        // SAFETY: ptr/len describe the caller's live part.
+                        let rest = unsafe {
+                            std::slice::from_raw_parts(op.ptr.add(n), op.len - n)
+                        };
+                        pwrite_all(&self.file, op.offset + n as u64, rest)?;
+                    }
+                }
+                self.pos = self.pos.max(offset + total as u64);
+                return Ok(());
+            }
+            self.core = None;
+        }
+        let mut off = offset;
+        for p in parts {
+            pwrite_all(&self.file, off, p)?;
+            off += p.len() as u64;
+        }
+        self.pos = self.pos.max(offset + total as u64);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        // Every batch completed before its call returned, so fdatasync
+        // covers all written bytes — data-before-watermark holds.
+        self.file.sync_data()?;
+        self.counters.syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{FsStorage, IoBackend, Storage};
+
+    #[test]
+    fn ring_setup_and_single_batch_roundtrip() {
+        // Exercise the raw ring directly when the kernel provides one
+        // (skip silently where it doesn't — the conformance suite covers
+        // the fallback shape).
+        let Ok(mut ring) = Ring::setup(8) else { return };
+        let dir = crate::util::tmpdir::unique_dir("fiver-uring-ring");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f");
+        std::fs::write(&path, vec![7u8; 8192]).unwrap();
+        let file = File::open(&path).unwrap();
+        use std::os::unix::io::AsRawFd;
+        let mut a = vec![0u8; 4096];
+        let mut b = vec![0u8; 4096];
+        let ops = [
+            SqOp { write: false, fd: file.as_raw_fd(), offset: 0, ptr: a.as_mut_ptr(), len: 4096 },
+            SqOp {
+                write: false,
+                fd: file.as_raw_fd(),
+                offset: 4096,
+                ptr: b.as_mut_ptr(),
+                len: 4096,
+            },
+        ];
+        let mut results = [-1i32; 2];
+        let enters =
+            ring.submit_wave(&ops, &mut results, &Shard::disabled()).expect("wave completes");
+        assert_eq!(results, [4096, 4096], "both SQEs complete fully");
+        assert_eq!(enters, 1, "two ops, one io_uring_enter");
+        assert!(a.iter().chain(b.iter()).all(|&x| x == 7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn forced_disable_counts_one_fallback_and_stays_buffered() {
+        let counters = IoCounters::new();
+        std::env::set_var("FIVER_URING_DISABLE", "1");
+        let core = UringCore::create(counters.clone(), Shard::disabled());
+        std::env::remove_var("FIVER_URING_DISABLE");
+        assert!(core.is_none());
+        assert_eq!(counters.uring_fallbacks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn uring_storage_roundtrips_with_registered_pool() {
+        let dir = crate::util::tmpdir::unique_dir("fiver-uring-rt");
+        let s = FsStorage::with_backend(&dir, IoBackend::Uring).unwrap();
+        let pool = BufferPool::with_options(64 * 1024, 4, crate::storage::DIRECT_ALIGN, 8);
+        s.register_pool(&pool);
+        let data: Vec<u8> = (0u8..=255).cycle().take(300_000).collect();
+        {
+            let mut w = s.open_write_sized("f", data.len() as u64).unwrap();
+            w.write_next(&data).unwrap();
+            w.flush().unwrap();
+            w.sync().unwrap();
+        }
+        let mut r = s.open_read("f").unwrap();
+        let mut got = Vec::new();
+        let mut off = 0u64;
+        loop {
+            let shared = r.read_shared(off, 64 * 1024, &pool).unwrap();
+            if shared.is_empty() {
+                break;
+            }
+            assert!(shared.len() <= 64 * 1024);
+            got.extend_from_slice(&shared[..]);
+            off += shared.len() as u64;
+        }
+        assert_eq!(got, data);
+        // Whether the kernel granted a ring or not, the op/enter
+        // accounting must be consistent: batched submissions never take
+        // more enters than ops.
+        assert!(s.uring_enters() <= s.uring_ops() || s.uring_ops() == 0);
+        if s.uring_fallbacks() == 0 && s.uring_ops() > 0 {
+            assert!(
+                s.uring_enters() < s.uring_ops(),
+                "readahead batching must amortize enters: {} enters / {} ops",
+                s.uring_enters(),
+                s.uring_ops()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn registered_buffers_survive_pool_growth() {
+        let dir = crate::util::tmpdir::unique_dir("fiver-uring-grow");
+        let s = FsStorage::with_backend(&dir, IoBackend::Uring).unwrap();
+        // Tiny pool with head-room to grow: capacity 2 -> up to 8.
+        let pool = BufferPool::with_options(8192, 2, crate::storage::DIRECT_ALIGN, 8);
+        s.register_pool(&pool);
+        let data: Vec<u8> = (0u8..=255).cycle().take(100_000).collect();
+        {
+            let mut w = s.open_write("f").unwrap();
+            w.write_next(&data).unwrap();
+            w.flush().unwrap();
+        }
+        // First read registers epoch 0's table.
+        {
+            let mut r = s.open_read("f").unwrap();
+            let shared = r.read_shared(0, 8192, &pool).unwrap();
+            assert_eq!(&shared[..], &data[..8192]);
+        }
+        // Force adaptive growth (registration epoch moves).
+        {
+            let held: Vec<_> = (0..pool.capacity()).map(|_| pool.get()).collect();
+            for _ in 0..=crate::coordinator::bufpool::GROW_FALLBACK_THRESHOLD {
+                let _ = pool.get_or_alloc(std::time::Duration::from_millis(1));
+            }
+            drop(held);
+        }
+        assert!(pool.grow_events() >= 1);
+        // Post-growth reads must re-register and stay byte-exact.
+        let mut r = s.open_read("f").unwrap();
+        let mut got = Vec::new();
+        let mut off = 0u64;
+        loop {
+            let shared = r.read_shared(off, 8192, &pool).unwrap();
+            if shared.is_empty() {
+                break;
+            }
+            got.extend_from_slice(&shared[..]);
+            off += shared.len() as u64;
+        }
+        assert_eq!(got, data, "registered-buffer path must survive pool growth");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -256,3 +256,39 @@ fn sync_file_while_writer_open_every_backend() {
         assert_eq!(back, vec![0x5Au8; 50_000], "{name}");
     }
 }
+
+/// Forcing the ring off (`FIVER_URING_DISABLE=1`) must degrade a whole
+/// uring-backend transfer to the buffered engine — counted exactly once
+/// per storage — while the delivered bytes stay bit-identical. This is
+/// the degradation path every kernel without io_uring takes implicitly;
+/// the env override makes it deterministic everywhere.
+#[test]
+fn uring_forced_fallback_transfer_is_buffered_and_counted() {
+    use fiver::coordinator::session::run_local_transfer;
+    use fiver::coordinator::{native_factory, RealAlgorithm, SessionConfig};
+    use fiver::faults::FaultPlan;
+    use fiver::hashes::HashAlgorithm;
+
+    std::env::set_var("FIVER_URING_DISABLE", "1");
+    let dir = TempDir::create("fiver-uringfb").expect("scratch dir");
+    let src = FsStorage::with_backend(&dir.join("src"), IoBackend::Uring).expect("src");
+    let mut rng = SplitMix64::new(7);
+    let data = rand_bytes(&mut rng, 300_000);
+    {
+        let mut w = src.open_write("f").expect("open");
+        w.write_next(&data).expect("write");
+        w.flush().expect("flush");
+    }
+    let src: Arc<dyn Storage> = Arc::new(src);
+    let dst: Arc<dyn Storage> =
+        Arc::new(FsStorage::with_backend(&dir.join("dst"), IoBackend::Uring).expect("dst"));
+    let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
+    cfg.io_backend = IoBackend::Uring;
+    let names = vec!["f".to_string()];
+    let (report, _) = run_local_transfer(&names, src, dst.clone(), &cfg, &FaultPlan::none())
+        .expect("transfer under forced fallback");
+    std::env::remove_var("FIVER_URING_DISABLE");
+    assert_eq!(report.uring_fallbacks, 1, "ring refusal is counted once per storage");
+    let back = read_all(&dst, "f").expect("read_all");
+    assert_eq!(back, data, "fallback delivery must stay bit-identical");
+}
