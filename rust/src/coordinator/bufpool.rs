@@ -916,6 +916,45 @@ mod tests {
         drop(held);
     }
 
+    #[test]
+    fn registration_epochs_stay_consistent_through_clamped_growth() {
+        // Odd capacity and ceiling: half-steps round down (5 -> 7) and
+        // the last grow clamps (7 -> 9, capped at 9). At every step the
+        // epoch equals grow_events, the table stays append-only, and it
+        // covers exactly the pooled backings.
+        let pool = BufferPool::with_options(16, 5, 1, 9);
+        let (mut epoch, mut table) = pool.registration_table();
+        assert_eq!((epoch, table.len()), (0, 5), "eager fill to the odd capacity");
+        let mut held: Vec<PoolBuf> = (0..5).map(|_| pool.get()).collect();
+        for expect_cap in [7usize, 9] {
+            for _ in 0..=GROW_FALLBACK_THRESHOLD {
+                let b = pool.get_or_alloc(Duration::from_millis(1));
+                held.push(b);
+            }
+            assert_eq!(pool.capacity(), expect_cap);
+            assert!(pool.capacity() <= pool.max_capacity());
+            let (e, t) = pool.registration_table();
+            assert_eq!(e, pool.grow_events(), "epoch is the grow count");
+            assert!(e > epoch, "every grow moves the epoch");
+            assert!(t.starts_with(&table), "registration is append-only");
+            assert_eq!(t.len(), expect_cap, "table covers every pooled backing");
+            epoch = e;
+            table = t;
+            // Drain the eager-filled free list plus any headroom so the
+            // next cycle starts exhausted again.
+            while let Some(b) = pool.try_get() {
+                held.push(b);
+            }
+        }
+        // At the ceiling the epoch freezes with the capacity.
+        for _ in 0..2 * GROW_FALLBACK_THRESHOLD {
+            assert!(!pool.get_or_alloc(Duration::from_millis(1)).is_pooled());
+        }
+        let (e, t) = pool.registration_table();
+        assert_eq!((e, t.len()), (epoch, 9), "no growth past max_capacity");
+        drop(held);
+    }
+
     struct Blob(Vec<u8>);
     impl ExternalBytes for Blob {
         fn as_bytes(&self) -> &[u8] {

@@ -50,6 +50,9 @@
 
 /// Pooled refcounted I/O buffers — the zero-copy data plane.
 pub mod bufpool;
+/// Adaptive concurrency controller: obs-plane feedback onto the hash
+/// pool and per-file stripe count (`--adaptive`).
+pub mod control;
 /// Rolling-checksum delta sync (rsync-style) over Merkle leaves.
 pub mod delta;
 /// Leaf-digest journal plus the resume and delta handshakes.
@@ -233,6 +236,10 @@ pub struct SessionConfig {
     /// draw per-worker [`crate::obs::Shard`]s from it; reports merge
     /// them into per-stage percentiles and a bottleneck label.
     pub obs: crate::obs::Recorder,
+    /// Adaptive concurrency controller knobs (`--adaptive`,
+    /// `--control-interval`, `--max-parallel`, `--max-hash-workers`).
+    /// Off by default; see [`control`].
+    pub control: control::ControlConfig,
     /// Factory producing the session's streaming hashers.
     pub hasher: HasherFactory,
 }
@@ -256,6 +263,7 @@ impl SessionConfig {
             delta: false,
             journal_checkpoint_leaves: 8,
             obs: crate::obs::Recorder::from_env(),
+            control: control::ControlConfig::from_env(),
             hasher,
         }
     }
@@ -404,11 +412,17 @@ pub struct TransferReport {
     /// (`hash-bound` / `read-bound` / `write-bound` / `net-bound`;
     /// empty when tracing is disabled).
     pub bottleneck: String,
-    /// Busiest stage group over the runner-up (>= 1; capped at 999).
+    /// Busiest stage group over the runner-up (>= 1;
+    /// [`f64::INFINITY`] when no other group recorded anything —
+    /// rendered as `sole` on the CLI and `null` in JSON).
     pub bottleneck_confidence: f64,
     /// Span events dropped by contended ring pushes (recording never
     /// blocks; nonzero here means the trace has gaps, not the run).
     pub trace_dropped: u64,
+    /// Adaptive-controller decision trail (`--adaptive`): every
+    /// grow/shrink/restore of the hash pool or stripe count, in order.
+    /// Empty when the controller is off.
+    pub adaptations: Vec<control::ControlEvent>,
     /// Wall-clock duration of the run in seconds.
     pub elapsed_secs: f64,
 }

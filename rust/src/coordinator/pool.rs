@@ -6,8 +6,8 @@
 //! single slow hash could not borrow an idle core. The engine instead
 //! owns one [`HashPool`] per endpoint: sessions submit one job per
 //! queue-mode file (drain that file's [`super::queue::ByteQueue`] into a
-//! digest or digest tree), and a fixed set of workers executes them.
-//! FIVER's per-file queue sharing is untouched — the queue is still the
+//! digest or digest tree), and a set of workers executes them. FIVER's
+//! per-file queue sharing is untouched — the queue is still the
 //! rendezvous between the transfer thread and the checksum computation;
 //! only *who runs* the computation changed.
 //!
@@ -21,17 +21,85 @@
 //! [`super::queue::ByteQueue::try_add`]); its only blocking adds happen
 //! after end-of-stream, oldest file first, and the earliest unfinished
 //! job is exactly some session's oldest open file.
+//!
+//! Dynamic resizing (the adaptive controller's actuator) preserves that
+//! argument:
+//!
+//! * [`HashPool::grow`] spawns workers onto the *same* shared channel,
+//!   so submission order — and therefore the FIFO earliest-unfinished
+//!   invariant — is unchanged; more workers only means more jobs run
+//!   concurrently.
+//! * [`HashPool::retire`] never kills a worker mid-job. It publishes N
+//!   retire tokens and N no-op wake jobs; each worker checks for a
+//!   token only *after completing a job*, so a retiring worker drains
+//!   its current job first, and a parked worker is woken by a no-op to
+//!   observe the token. Exactly N workers exit (each token is consumed
+//!   at most once), and the live count is clamped to >= 1, so there is
+//!   always a worker to occupy the earliest unfinished job.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A fixed-size worker pool for checksum jobs. Dropping the pool joins
-/// the workers after all outstanding [`PoolHandle`]s are gone.
+/// Retire tokens + live-worker target, shared with the worker threads.
+/// Workers hold only this (and the receiver) — never the pool itself —
+/// so the pool's drop (which joins the workers) can actually run.
+struct WorkerCtl {
+    /// Outstanding drain-retire requests; a worker that wins a token
+    /// (after finishing a job) exits.
+    pending_retire: AtomicUsize,
+    /// Intended live worker count — what [`HashPool::workers`] reports.
+    target: AtomicUsize,
+}
+
+struct PoolShared {
+    /// The pool's own submission end; `None` once shutdown began.
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    /// Shared FIFO all workers dequeue from (lock held only for the
+    /// dequeue, never while a job runs).
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    ctl: Arc<WorkerCtl>,
+    next_id: AtomicUsize,
+}
+
+/// A worker pool for checksum jobs, resizable at run time by the
+/// adaptive controller. Cloning shares the pool; when the last clone
+/// drops (after all outstanding [`PoolHandle`]s are gone) the workers
+/// drain the queue and are joined.
+#[derive(Clone)]
 pub struct HashPool {
-    tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+    inner: Arc<PoolShared>,
+}
+
+fn spawn_worker(
+    id: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    ctl: Arc<WorkerCtl>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("fiver-hash-{id}"))
+        .spawn(move || loop {
+            // Hold the lock only for the dequeue, not the job.
+            let job = { rx.lock().unwrap().recv() };
+            match job {
+                Ok(job) => {
+                    job();
+                    // Drain-retire: only ever exit *between* jobs.
+                    let won_token = ctl
+                        .pending_retire
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                        .is_ok();
+                    if won_token {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        })
+        .expect("spawn hash worker")
 }
 
 impl HashPool {
@@ -40,41 +108,79 @@ impl HashPool {
         let n = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n)
-            .map(|i| {
-                let rx = rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("fiver-hash-{i}"))
-                    .spawn(move || loop {
-                        // Hold the lock only for the dequeue, not the job.
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
-                        }
-                    })
-                    .expect("spawn hash worker")
-            })
-            .collect();
-        HashPool { tx: Some(tx), workers }
+        let ctl = Arc::new(WorkerCtl {
+            pending_retire: AtomicUsize::new(0),
+            target: AtomicUsize::new(n),
+        });
+        let handles = (0..n).map(|i| spawn_worker(i, rx.clone(), ctl.clone())).collect();
+        HashPool {
+            inner: Arc::new(PoolShared {
+                tx: Mutex::new(Some(tx)),
+                rx,
+                workers: Mutex::new(handles),
+                ctl,
+                next_id: AtomicUsize::new(n),
+            }),
+        }
     }
 
     /// A submit handle for sessions. All handles must drop before the
-    /// pool's `Drop` can join its workers.
+    /// last pool clone's `Drop` can join its workers.
     pub fn handle(&self) -> PoolHandle {
-        PoolHandle { tx: self.tx.as_ref().expect("pool already shut down").clone() }
+        let tx = self.inner.tx.lock().unwrap();
+        PoolHandle { tx: tx.as_ref().expect("pool already shut down").clone() }
     }
 
-    /// Number of worker threads in the pool.
+    /// Live worker count (the retire target; a drain-retiring worker
+    /// still finishing its last job is already excluded).
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.inner.ctl.target.load(Ordering::SeqCst)
+    }
+
+    /// Add `n` workers on the shared FIFO. Safe at any time: new
+    /// workers only change how many queued jobs run concurrently, not
+    /// their order.
+    pub fn grow(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut workers = self.inner.workers.lock().unwrap();
+        for _ in 0..n {
+            let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+            workers.push(spawn_worker(id, self.inner.rx.clone(), self.inner.ctl.clone()));
+        }
+        self.inner.ctl.target.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Retire up to `n` workers by drain: each exits only after
+    /// completing a job, and the pool never shrinks below one worker.
+    /// Returns how many retirements were actually issued.
+    pub fn retire(&self, n: usize) -> usize {
+        let mut eff = 0;
+        let _ = self.inner.ctl.target.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |t| {
+            eff = n.min(t.saturating_sub(1));
+            Some(t - eff)
+        });
+        if eff == 0 {
+            return 0;
+        }
+        self.inner.ctl.pending_retire.fetch_add(eff, Ordering::SeqCst);
+        // No-op wake jobs so parked workers observe their tokens; if a
+        // busy worker consumes the token first, the no-op is harmless.
+        let tx = self.inner.tx.lock().unwrap();
+        if let Some(tx) = tx.as_ref() {
+            for _ in 0..eff {
+                let _ = tx.send(Box::new(|| {}));
+            }
+        }
+        eff
     }
 }
 
-impl Drop for HashPool {
+impl Drop for PoolShared {
     fn drop(&mut self) {
-        self.tx.take(); // close the channel; workers drain then exit
-        for w in self.workers.drain(..) {
+        self.tx.get_mut().unwrap().take(); // close the channel; workers drain then exit
+        for w in self.workers.get_mut().unwrap().drain(..) {
             w.join().expect("hash worker panicked");
         }
     }
@@ -141,5 +247,78 @@ mod tests {
     fn clamps_to_one_worker() {
         let pool = HashPool::new(0);
         assert_eq!(pool.workers(), 1);
+    }
+
+    #[test]
+    fn grow_unblocks_a_saturated_pool() {
+        // One worker wedged on a gate job: a second job cannot run until
+        // grow() adds a worker sharing the same FIFO.
+        let pool = HashPool::new(1);
+        let q = crate::coordinator::queue::ByteQueue::new(64);
+        let q2 = q.clone();
+        pool.handle().submit(move || while q2.remove().is_some() {});
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        pool.handle().submit(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.workers(), 1);
+        pool.grow(1);
+        assert_eq!(pool.workers(), 2);
+        // The new worker picks up the queued job while the first stays
+        // wedged on the open queue.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while ran.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "grown worker never ran the job");
+            std::thread::yield_now();
+        }
+        q.close();
+    }
+
+    #[test]
+    fn retire_drains_and_never_kills_mid_job() {
+        // Three workers, a long FIFO of jobs, a retire(2) issued while
+        // they run: every job still executes exactly once (drain
+        // semantics — no job is lost with its worker) and the pool
+        // settles at one worker.
+        let pool = HashPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let h = pool.handle();
+        for _ in 0..200 {
+            let c = counter.clone();
+            h.submit(move || {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(pool.retire(2), 2);
+        assert_eq!(pool.workers(), 1);
+        drop(h);
+        let pool2 = pool.clone();
+        drop(pool); // pool2 still holds the shared state
+        // More work after the retire still runs on the surviving worker.
+        let c = counter.clone();
+        pool2.handle().submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool2); // joins: every submitted job ran
+        assert_eq!(counter.load(Ordering::SeqCst), 201);
+    }
+
+    #[test]
+    fn retire_clamps_to_one_worker() {
+        let pool = HashPool::new(2);
+        assert_eq!(pool.retire(10), 1, "only one retirement available above the floor");
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.retire(1), 0, "floor of one worker holds");
+        assert_eq!(pool.workers(), 1);
+        // The floor worker still serves jobs.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = ran.clone();
+        pool.handle().submit(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
     }
 }

@@ -209,6 +209,9 @@ pub struct EngineReport {
     /// Bytes not re-sent thanks to the checkpoint journal (sum of agreed
     /// resume offsets).
     pub bytes_skipped: u64,
+    /// Adaptive-controller decision trail (engine-level: one controller
+    /// per engine run; empty when `--adaptive` is off).
+    pub adaptations: Vec<super::control::ControlEvent>,
     /// Wall-clock of the engine run (sessions overlap, so this is less
     /// than the sum of per-session elapsed times whenever concurrency
     /// helps).
@@ -227,6 +230,7 @@ impl EngineReport {
             elapsed_secs: self.elapsed_secs,
             files_skipped: self.files_skipped,
             bytes_skipped: self.bytes_skipped,
+            adaptations: self.adaptations.clone(),
             ..Default::default()
         };
         for r in &self.per_session {

@@ -26,7 +26,7 @@
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -243,6 +243,12 @@ pub struct SenderSession {
     data_outs: Vec<DataOut>,
     /// Round-robin stripe cursor for Data frames.
     rr: usize,
+    /// Stripe-count target shared with the adaptive controller; latched
+    /// into `active_lanes` at each file boundary, never mid-file.
+    lanes: Arc<AtomicUsize>,
+    /// How many of the provisioned data channels this *file* stripes
+    /// across (the first `active_lanes` of `data_outs`).
+    active_lanes: usize,
     pool: PoolHandle,
     /// Data-plane buffer pool: one pooled buffer per read, shared by
     /// refcount between the socket write and the hash queue.
@@ -293,6 +299,7 @@ impl SenderSession {
         bufs: BufferPool,
         resume: Arc<ResumePlan>,
         delta: Arc<DeltaPlan>,
+        lanes: Arc<AtomicUsize>,
     ) -> Result<SenderSession> {
         anyhow::ensure!(!datas.is_empty(), "session needs at least one data channel");
         let shared = Shared::new();
@@ -369,6 +376,8 @@ impl SenderSession {
             shared,
             data_outs,
             rr: 0,
+            active_lanes: lanes.load(Ordering::Relaxed).max(1),
+            lanes,
             pool,
             bufs,
             ck_tx,
@@ -397,6 +406,11 @@ impl SenderSession {
         if self.resume.is_complete(name) {
             return Ok(()); // verified at handshake; accounted engine-level
         }
+        // Latch the controller's stripe target at the file boundary: the
+        // stripe count is renegotiated *per file* only, so every Data
+        // frame of this file round-robins over a fixed lane prefix.
+        self.active_lanes =
+            self.lanes.load(Ordering::Relaxed).clamp(1, self.data_outs.len());
         let size = self.storage.size_of(name)?;
         let resumed: Option<ResumedFile> = self.resume.partial_for(name, size).cloned();
         // Delta path: the receiver offered a signature basis for this file
@@ -704,7 +718,7 @@ impl SenderSession {
                 }
             }
             let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
-            let lane = self.rr % self.data_outs.len();
+            let lane = self.rr % self.active_lanes;
             self.rr += 1;
             // One ranged read serves socket, hash queue and journal. The
             // clean path is zero-copy: `read_shared` fills a pooled
@@ -886,6 +900,7 @@ pub fn run_sender(
         cfg.make_pool(1),
         Arc::new(ResumePlan::default()),
         Arc::new(DeltaPlan::default()),
+        Arc::new(AtomicUsize::new(1)),
     )?;
     for (i, name) in names.iter().enumerate() {
         session.send_file(i as u32, name)?;

@@ -4,11 +4,13 @@
 //! work-stealing file scheduler, shared hash pools).
 
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::AtomicUsize;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::control::Controller;
 use super::delta::DeltaPlan;
 use super::journal::{self, ResumePlan};
 use super::pool::HashPool;
@@ -67,12 +69,17 @@ impl ReceiverEndpoint {
     }
 
     /// Accept and serve a full engine run: `concurrency` sessions, each
-    /// one control connection plus `parallel` data stripes, routed by the
+    /// one control connection plus its data stripes, routed by the
     /// `Hello` handshake and served concurrently over one shared hash
     /// pool. Returns the per-session reports in session-id order.
     ///
-    /// The total connection count (`concurrency * (parallel + 1)`) must
-    /// stay within the listen backlog (128).
+    /// Each session's ctrl `Hello` announces how many data lanes that
+    /// session provisions (an adaptive sender provisions up to its
+    /// `--max-parallel` ceiling; a fixed sender announces exactly its
+    /// `--parallel`), so the two endpoints no longer need to agree on a
+    /// global stripe count — the receiver's merger reads whatever lanes
+    /// carry frames. The total connection count must stay within the
+    /// listen backlog (128).
     pub fn serve_engine(
         &self,
         storage: Arc<dyn Storage>,
@@ -88,12 +95,14 @@ impl ReceiverEndpoint {
         // the negotiation from our checkpoint journal, then keep routing.
         let mut resume_plan = Arc::new(ResumePlan::default());
         let mut ctrls: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        // Per-session provisioned lane count, read from each ctrl Hello.
+        let mut lane_counts: Vec<usize> = vec![p; n];
         let mut routed = 0usize;
         while routed < n {
             let (mut c, _) = self.ctrl_listener.accept().context("accept ctrl")?;
             c.set_nodelay(true).ok();
             let hello = Frame::read_from(&mut c)?.context("ctrl closed before Hello")?;
-            let Frame::Hello { session_id, .. } = hello else {
+            let Frame::Hello { session_id, stripes, .. } = hello else {
                 bail!("expected Hello on ctrl, got {hello:?}");
             };
             if session_id == RESUME_SESSION {
@@ -112,13 +121,17 @@ impl ReceiverEndpoint {
             let sid = session_id as usize;
             anyhow::ensure!(sid < n, "session id {sid} out of range");
             anyhow::ensure!(ctrls[sid].is_none(), "duplicate ctrl for session {sid}");
+            lane_counts[sid] = (stripes as usize).max(1);
             ctrls[sid] = Some(c);
             routed += 1;
         }
-        // Route data connections by (session, stripe).
+        let total_lanes: usize = lane_counts.iter().sum();
+        anyhow::ensure!(total_lanes + n <= 128, "connection count exceeds the listen backlog");
+        // Route data connections by (session, stripe): each session owes
+        // exactly the lane count its ctrl Hello announced.
         let mut datas: Vec<Vec<Option<TcpStream>>> =
-            (0..n).map(|_| (0..p).map(|_| None).collect()).collect();
-        for _ in 0..n * p {
+            lane_counts.iter().map(|&s| (0..s).map(|_| None).collect()).collect();
+        for _ in 0..total_lanes {
             let (mut d, _) = self.data_listener.accept().context("accept data")?;
             d.set_nodelay(true).ok();
             let hello = Frame::read_from(&mut d)?.context("data closed before Hello")?;
@@ -126,12 +139,14 @@ impl ReceiverEndpoint {
                 bail!("expected Hello on data, got {hello:?}");
             };
             let (sid, stripe) = (session_id as usize, stripe_id as usize);
+            anyhow::ensure!(sid < n, "session id {sid} out of range");
             anyhow::ensure!(
-                stripes as usize == p,
-                "stripe count mismatch: sender {stripes} vs receiver {p} — \
-                 both endpoints must agree on --parallel"
+                stripes as usize == lane_counts[sid],
+                "stripe count mismatch: data Hello {stripes} vs the {} lanes \
+                 session {sid}'s ctrl Hello announced",
+                lane_counts[sid]
             );
-            anyhow::ensure!(sid < n && stripe < p, "stripe ({sid},{stripe}) out of range");
+            anyhow::ensure!(stripe < lane_counts[sid], "stripe ({sid},{stripe}) out of range");
             anyhow::ensure!(datas[sid][stripe].is_none(), "duplicate stripe ({sid},{stripe})");
             datas[sid][stripe] = Some(d);
         }
@@ -207,6 +222,14 @@ pub fn connect_and_send_engine(
 ) -> Result<EngineReport> {
     let n = eng.concurrency.max(1);
     let p = eng.parallel.max(1);
+    // Adaptive runs provision data lanes up front to the controller's
+    // `--max-parallel` ceiling (announced in every Hello) and start the
+    // stripe target at `--parallel`; the controller then moves the
+    // target between file boundaries while idle lanes simply carry no
+    // frames. Fixed runs provision exactly `p`.
+    let adaptive = cfg.control.adaptive;
+    let lanes_cap = if adaptive { cfg.control.max_parallel.max(p) } else { p };
+    let lanes = Arc::new(AtomicUsize::new(p));
     let names: Arc<Vec<String>> = Arc::new(files.to_vec());
     let mut sizes = Vec::with_capacity(names.len());
     for name in names.iter() {
@@ -279,21 +302,22 @@ pub fn connect_and_send_engine(
         let bufs = bufs.clone();
         let plan = resume_plan.clone();
         let dplan = delta_plan.clone();
+        let lanes = lanes.clone();
         let data_addr = data_addr.to_string();
         let ctrl_addr = ctrl_addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<TransferReport> {
             let mut ctrl = TcpStream::connect(&ctrl_addr).context("connect ctrl")?;
             ctrl.set_nodelay(true).ok();
-            Frame::Hello { session_id: sid as u32, stripe_id: 0, stripes: p as u64 }
+            Frame::Hello { session_id: sid as u32, stripe_id: 0, stripes: lanes_cap as u64 }
                 .write_to(&mut ctrl)?;
-            let mut stripes = Vec::with_capacity(p);
-            for stripe in 0..p {
+            let mut stripes = Vec::with_capacity(lanes_cap);
+            for stripe in 0..lanes_cap {
                 let mut d = TcpStream::connect(&data_addr).context("connect data")?;
                 d.set_nodelay(true).ok();
                 Frame::Hello {
                     session_id: sid as u32,
                     stripe_id: stripe as u64,
-                    stripes: p as u64,
+                    stripes: lanes_cap as u64,
                 }
                 .write_to(&mut d)?;
                 stripes.push(d);
@@ -309,6 +333,7 @@ pub fn connect_and_send_engine(
                 bufs,
                 plan,
                 dplan,
+                lanes,
             )?;
             while let Some(item) = queue.next(sid) {
                 sched_obs.gauge_depth(queue.remaining() as u64);
@@ -319,9 +344,25 @@ pub fn connect_and_send_engine(
             session.finish()
         }));
     }
+    // The feedback controller samples the live recorder and actuates the
+    // shared hash pool + stripe target until the sessions drain. Without
+    // tracing enabled it would see only zeros, so the CLI force-enables
+    // the recorder whenever `--adaptive` is on.
+    let controller = if adaptive {
+        Some(Controller::spawn(
+            cfg.control.clone(),
+            cfg.obs.clone(),
+            pool.clone(),
+            lanes.clone(),
+            lanes_cap,
+        ))
+    } else {
+        None
+    };
     // Join every session before surfacing an error (see serve_engine).
     let results: Vec<Result<TransferReport>> =
         handles.into_iter().map(|h| h.join().expect("sender session panicked")).collect();
+    let adaptations = controller.map(|c| c.stop()).unwrap_or_default();
     let mut per_session = Vec::with_capacity(n);
     for r in results {
         per_session.push(r?);
@@ -332,6 +373,7 @@ pub fn connect_and_send_engine(
     }
     Ok(EngineReport {
         per_session,
+        adaptations,
         files_skipped,
         bytes_skipped,
         elapsed_secs: start.elapsed().as_secs_f64(),

@@ -8,6 +8,8 @@
 
 /// Design-ablation sweep.
 pub mod ablations;
+/// Adaptive-controller convergence from misconfigured starts.
+pub mod adaptive;
 /// Concurrency/parallelism sweep.
 pub mod concurrency;
 /// Delta-sync sweep plus a real loopback check.
@@ -103,6 +105,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
         "resume" => resume::resume_sweep(),
         "delta" => delta::delta_sweep(),
         "io_backend" => io_backend::io_backend_sweep(),
+        "adaptive" => adaptive::adaptive_convergence(),
         "all" => {
             let mut out = String::new();
             for n in ALL {
@@ -118,7 +121,7 @@ pub fn run_by_name(name: &str) -> Option<String> {
 /// All experiment names in paper order.
 pub const ALL: &[&str] = &[
     "tables", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table3",
-    "ablations", "concurrency", "resume", "delta", "io_backend",
+    "ablations", "concurrency", "resume", "delta", "io_backend", "adaptive",
 ];
 
 #[cfg(test)]

@@ -64,6 +64,22 @@
 //!   aggregate into work items of ~T bytes so small-file control
 //!   round-trips amortize.
 //!
+//! Adaptive concurrency control (see `fiver::coordinator::control`;
+//! forces the engine path and turns the tracing plane on — the
+//! controller samples its live counters):
+//!
+//! * `--adaptive` — run the AIMD feedback controller: every
+//!   `--control-interval` it labels the window hash-/read-/write-/
+//!   net-bound from the live per-stage busy counters and moves the hash
+//!   pool (grow by one on a sustained hash bottleneck, halve when the
+//!   pool overshoots) and the per-file stripe count (probe-halve on a
+//!   saturated wire, restore on a >10% throughput regression). Every
+//!   decision lands in the report's `adaptive control:` trail.
+//! * `--control-interval MS` — sample-window length (default 200).
+//! * `--max-parallel P` — stripe-count ceiling; data lanes are
+//!   provisioned up front to max(P, `--parallel`) (default 8).
+//! * `--max-hash-workers W` — hash-pool growth ceiling (default 8).
+//!
 //! Crash recovery (see `fiver::coordinator::journal`):
 //!
 //! * `--journal-dir PATH` — checkpoint journal for this endpoint (each
@@ -162,12 +178,22 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
     cfg.delta = args.flag("delta");
+    // `|=`: FIVER_ADAPTIVE=1 (via ControlConfig::from_env) stays on
+    // without the flag — the CI lever for whole-suite adaptive runs.
+    cfg.control.adaptive |= args.flag("adaptive");
+    cfg.control.interval_ms = args.opt_u64("control-interval", cfg.control.interval_ms).max(1);
+    cfg.control.max_parallel =
+        (args.opt_u64("max-parallel", cfg.control.max_parallel as u64).max(1)) as usize;
+    cfg.control.max_hash_workers =
+        (args.opt_u64("max-hash-workers", cfg.control.max_hash_workers as u64).max(1)) as usize;
     // Any observability flag turns the tracing plane on (FIVER_TRACE=1
-    // already did via SessionConfig::new).
+    // already did via SessionConfig::new). `--adaptive` needs it too:
+    // the controller's signal is the recorder's live busy counters.
     if !cfg.obs.is_enabled()
         && (args.opt("trace-out").is_some()
             || args.opt("metrics-json").is_some()
-            || args.flag("progress"))
+            || args.flag("progress")
+            || cfg.control.adaptive)
     {
         cfg.obs = fiver::obs::Recorder::enabled();
     }
@@ -194,9 +220,11 @@ fn engine_config(args: &Args) -> EngineConfig {
 
 /// Does this invocation use the parallel engine (vs the classic
 /// single-session protocol without the Hello handshake)? `--resume` and
-/// `--delta` force it: both handshakes ride the engine's Hello routing.
+/// `--delta` force it (both handshakes ride the engine's Hello routing),
+/// and so does `--adaptive` (the controller actuates the engine's shared
+/// hash pool and per-session stripe lanes).
 fn uses_engine(eng: &EngineConfig, cfg: &SessionConfig) -> bool {
-    eng.concurrency > 1 || eng.parallel > 1 || cfg.resume || cfg.delta
+    eng.concurrency > 1 || eng.parallel > 1 || cfg.resume || cfg.delta || cfg.control.adaptive
 }
 
 /// Engine-only tuning knobs do nothing on the classic path; warn instead
@@ -257,7 +285,7 @@ fn main() -> Result<()> {
         "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "pool-max-buffers",
         "io-backend", "direct-threshold", "files", "size", "faults", "seed", "concurrency",
         "parallel", "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
-        "trace-out", "metrics-json",
+        "trace-out", "metrics-json", "control-interval", "max-parallel", "max-hash-workers",
     ]);
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         eprintln!("usage: fiver <serve|send|local|hash|experiment> [options]");
@@ -524,6 +552,15 @@ fn print_engine_report(e: &fiver::coordinator::scheduler::EngineReport) {
             fmt::bytes(r.bytes_resent),
         );
     }
+    if !e.adaptations.is_empty() {
+        println!("adaptive control: {} decisions", e.adaptations.len());
+        for ev in &e.adaptations {
+            println!(
+                "  t+{:>6.2}s {:<12} {:<7} {} -> {}  [{}]",
+                ev.t_secs, ev.actuator, ev.action, ev.before, ev.after, ev.signal,
+            );
+        }
+    }
     // Aggregate throughput is computed over the engine wall-clock
     // (EngineReport::aggregate carries it into elapsed_secs).
     print_report(&e.aggregate());
@@ -596,8 +633,9 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
             String::new()
         };
         println!(
-            "bottleneck: {} (confidence {:.1}x{dropped})",
-            r.bottleneck, r.bottleneck_confidence,
+            "bottleneck: {} (confidence {}{dropped})",
+            r.bottleneck,
+            fiver::obs::cli_confidence(r.bottleneck_confidence),
         );
     }
     if r.files_skipped > 0 || r.bytes_skipped > 0 {

@@ -221,7 +221,9 @@ pub struct RunSummary {
     /// (`hash-bound` / `read-bound` / `write-bound` / `net-bound`;
     /// empty when unknown).
     pub bottleneck: String,
-    /// Busiest stage group over the runner-up (>= 1; capped at 999).
+    /// Busiest stage group over the runner-up (>= 1;
+    /// [`f64::INFINITY`] when no other group recorded anything —
+    /// rendered as `sole` / JSON `null`).
     pub bottleneck_confidence: f64,
     /// Files the resume handshake verified from the journal and skipped.
     pub files_skipped: u64,

@@ -299,8 +299,9 @@ pub struct ObsReport {
     /// `hash-bound` / `read-bound` / `write-bound` / `net-bound`, or
     /// empty when nothing was recorded.
     pub bottleneck: String,
-    /// Busiest stage group over the runner-up (>= 1, capped at 999;
-    /// higher = more clear-cut).
+    /// Busiest stage group over the runner-up (>= 1; higher = more
+    /// clear-cut). [`f64::INFINITY`] when no other group recorded
+    /// anything — rendered as `sole` on the CLI and `null` in JSON.
     pub confidence: f64,
     /// Span events dropped because a recorder found its ring contended
     /// (recording never blocks).
@@ -311,30 +312,58 @@ pub struct ObsReport {
 /// stage *group* — the per-stage analogue of Eq. 1's
 /// `max(t_chksum, t_transfer)`. `groups` maps a label stem ("hash") to
 /// cumulative busy seconds; returns `("hash-bound", confidence)` where
-/// confidence = busiest / runner-up (capped at 999.0), or `("", 0.0)`
-/// when nothing was busy.
+/// confidence = busiest / runner-up, or `("", 0.0)` when nothing was
+/// busy.
+///
+/// When no runner-up group recorded anything the ratio is undefined and
+/// the confidence is [`f64::INFINITY`] — renderers treat it as null
+/// (`"confidence":null` in JSON, `sole` on the CLI) rather than a
+/// numeric ratio. Equal-busy groups tie-break deterministically by
+/// group name (lexicographically smallest wins), independent of slice
+/// order.
 pub fn attribute(groups: &[(&str, f64)]) -> (String, f64) {
     let mut best: Option<(usize, f64)> = None;
     let mut second = 0.0f64;
-    for (i, &(_, v)) in groups.iter().enumerate() {
-        match best {
-            Some((_, bv)) if v <= bv => second = second.max(v),
-            _ => {
-                if let Some((_, bv)) = best {
-                    second = second.max(bv);
-                }
-                best = Some((i, v));
+    for (i, &(name, v)) in groups.iter().enumerate() {
+        let wins = match best {
+            None => true,
+            Some((bi, bv)) => v > bv || (v == bv && name < groups[bi].0),
+        };
+        if wins {
+            if let Some((_, bv)) = best {
+                second = second.max(bv);
             }
+            best = Some((i, v));
+        } else {
+            second = second.max(v);
         }
     }
     match best {
         Some((i, v)) if v > 0.0 => {
-            let confidence =
-                if second > 0.0 { (v / second).min(999.0) } else { 999.0 };
+            let confidence = if second > 0.0 { v / second } else { f64::INFINITY };
             (format!("{}-bound", groups[i].0), confidence)
         }
         _ => (String::new(), 0.0),
     }
+}
+
+/// Group per-stage busy nanoseconds into the four bottleneck
+/// candidates: queue_wait is backpressure from a slow checksum consumer
+/// (hash), journal rides the destination write path; verify/repair are
+/// control-plane and excluded. Submit/Complete are excluded too: they
+/// are sub-spans of the io_uring engine's Read/Write work, which the
+/// calling stream already records under Read/Write — counting them here
+/// would double-bill the storage time. They still appear in the
+/// per-stage percentiles, with the Submit depth gauge carrying the SQE
+/// batch size.
+fn busy_groups(busy: &[u64; Stage::COUNT]) -> [(&'static str, f64); 4] {
+    let secs = |st: Stage| busy[st.index()] as f64 / 1e9;
+    [
+        ("read", secs(Stage::Read)),
+        ("hash", secs(Stage::Hash) + secs(Stage::QueueWait)),
+        ("write", secs(Stage::Write) + secs(Stage::Journal)),
+        ("net", secs(Stage::Send) + secs(Stage::Recv)),
+    ]
 }
 
 struct ShardInner {
@@ -594,24 +623,24 @@ impl Recorder {
                 p99_us: hists[i].percentile(99.0) as f64 / 1e3,
             });
         }
-        let secs = |st: Stage| busy[st.index()] as f64 / 1e9;
-        // Group spans into the four bottleneck candidates: queue_wait is
-        // backpressure from a slow checksum consumer (hash), journal
-        // rides the destination write path; verify/repair are
-        // control-plane and excluded. Submit/Complete are excluded too:
-        // they are sub-spans of the io_uring engine's Read/Write work,
-        // which the calling stream already records under Read/Write —
-        // counting them here would double-bill the storage time. They
-        // still appear in the per-stage percentiles, with the Submit
-        // depth gauge carrying the SQE batch size.
-        let groups = [
-            ("read", secs(Stage::Read)),
-            ("hash", secs(Stage::Hash) + secs(Stage::QueueWait)),
-            ("write", secs(Stage::Write) + secs(Stage::Journal)),
-            ("net", secs(Stage::Send) + secs(Stage::Recv)),
-        ];
+        let groups = busy_groups(&busy);
         let (bottleneck, confidence) = attribute(&groups);
         ObsReport { stages, bottleneck, confidence, dropped_events: self.dropped() }
+    }
+
+    /// Cheap live per-group busy snapshot for the adaptive controller:
+    /// sums the four attribution groups straight from the shards'
+    /// atomic busy counters — no histogram merges, no per-call
+    /// allocation beyond the fixed array. Values are cumulative; the
+    /// controller diffs consecutive snapshots to get per-window ratios.
+    pub fn stage_busy_snapshot(&self) -> [(&'static str, f64); 4] {
+        let busy = self.for_shards([0u64; Stage::COUNT], |mut acc, s| {
+            for st in Stage::ALL {
+                acc[st.index()] += s.stage_busy_ns[st.index()].load(Ordering::Relaxed);
+            }
+            acc
+        });
+        busy_groups(&busy)
     }
 
     /// Write the span timeline as Chrome/Perfetto `trace_event` JSON:
@@ -689,12 +718,12 @@ impl Recorder {
         }
         out.push_str(&format!(
             "],\"queue_depth\":{{\"count\":{},\"buckets\":{}}},\
-             \"dropped\":{},\"bottleneck\":\"{}\",\"confidence\":{:.3}}}",
+             \"dropped\":{},\"bottleneck\":\"{}\",\"confidence\":{}}}",
             depth.count(),
             json_buckets(&depth),
             rep.dropped_events,
             esc(&rep.bottleneck),
-            rep.confidence,
+            json_confidence(rep.confidence),
         ));
         out
     }
@@ -721,6 +750,27 @@ fn json_buckets(h: &HistSnapshot) -> String {
 
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render an attribution confidence for JSON: a finite ratio as a
+/// number, the [`f64::INFINITY`] "sole nonzero group" sentinel as
+/// `null` (infinity is not representable in JSON).
+pub fn json_confidence(c: f64) -> String {
+    if c.is_finite() {
+        format!("{c:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render an attribution confidence for the CLI: `"4.0x"` for a finite
+/// ratio, `"sole"` when no other group recorded anything.
+pub fn cli_confidence(c: f64) -> String {
+    if c.is_finite() {
+        format!("{c:.1}x")
+    } else {
+        "sole".to_string()
+    }
 }
 
 /// Live progress line: a background thread samples the recorder's byte
@@ -843,8 +893,27 @@ mod tests {
         assert!((conf - 2.0).abs() < 1e-9, "{conf}");
         let (label, conf) = attribute(&[("read", 0.0), ("net", 3.0)]);
         assert_eq!(label, "net-bound");
-        assert_eq!(conf, 999.0, "no runner-up caps out");
+        assert!(conf.is_infinite(), "no runner-up is the sole sentinel, got {conf}");
         assert_eq!(attribute(&[("read", 0.0), ("net", 0.0)]).0, "");
+    }
+
+    #[test]
+    fn attribute_ties_break_by_name_not_order() {
+        // Equal busy values: the lexicographically smallest name wins,
+        // regardless of slice order, and the tie is confidence 1.0.
+        let (label, conf) = attribute(&[("write", 2.0), ("hash", 2.0), ("read", 1.0)]);
+        assert_eq!(label, "hash-bound");
+        assert!((conf - 1.0).abs() < 1e-9, "{conf}");
+        let (label, _) = attribute(&[("hash", 2.0), ("write", 2.0), ("read", 1.0)]);
+        assert_eq!(label, "hash-bound", "order must not matter");
+    }
+
+    #[test]
+    fn confidence_renderers_treat_infinity_as_null() {
+        assert_eq!(json_confidence(2.5), "2.500");
+        assert_eq!(json_confidence(f64::INFINITY), "null");
+        assert_eq!(cli_confidence(4.0), "4.0x");
+        assert_eq!(cli_confidence(f64::INFINITY), "sole");
     }
 
     #[test]
@@ -912,5 +981,27 @@ mod tests {
         assert!(j.contains("\"stage\":\"write\""));
         assert!(j.contains("\"queue_depth\""));
         assert!(j.contains("\"bottleneck\":\"write-bound\""));
+        // Only one group recorded: the sole-group confidence renders as
+        // JSON null, never as an unparseable "inf".
+        assert!(j.contains("\"confidence\":null"), "{j}");
+    }
+
+    #[test]
+    fn stage_busy_snapshot_matches_report_groups() {
+        let rec = Recorder::enabled();
+        let a = rec.shard("a");
+        let b = rec.shard("b");
+        a.record_ns(Stage::Hash, 0, 2_000_000_000);
+        a.record_ns(Stage::QueueWait, 0, 1_000_000_000);
+        b.record_ns(Stage::Send, 0, 500_000_000);
+        b.record_ns(Stage::Write, 0, 250_000_000);
+        let snap = rec.stage_busy_snapshot();
+        let get = |n: &str| snap.iter().find(|(g, _)| *g == n).unwrap().1;
+        assert!((get("hash") - 3.0).abs() < 1e-9, "hash folds queue_wait in");
+        assert!((get("net") - 0.5).abs() < 1e-9);
+        assert!((get("write") - 0.25).abs() < 1e-9);
+        assert_eq!(get("read"), 0.0);
+        // Disabled recorder: all zeros, no panic.
+        assert!(Recorder::disabled().stage_busy_snapshot().iter().all(|(_, v)| *v == 0.0));
     }
 }

@@ -95,6 +95,19 @@ impl FluidSim {
         ResourceId(self.resources.len() - 1)
     }
 
+    /// Change a resource's capacity mid-run — the adaptive controller's
+    /// sim-side actuation path (e.g. widening the hash pool scales the
+    /// hash station linearly). Rates are recomputed on the next step;
+    /// busy accounting for elapsed intervals keeps the capacity that was
+    /// in force when they accrued.
+    pub fn set_capacity(&mut self, r: ResourceId, capacity_bytes_per_sec: f64) {
+        assert!(capacity_bytes_per_sec > 0.0, "capacity must be positive");
+        if self.resources[r.0].capacity != capacity_bytes_per_sec {
+            self.resources[r.0].capacity = capacity_bytes_per_sec;
+            self.rates_dirty = true;
+        }
+    }
+
     /// Utilization-weighted busy time accumulated by a resource so far:
     /// each step contributes `dt * consumed_rate / capacity` (clamped to
     /// `dt` — a saturated resource is 100% busy). Infinite-capacity
@@ -449,6 +462,20 @@ mod tests {
         assert!((s.dt - 2.0).abs() < 1e-9);
         assert!(!sim.is_done(f));
         assert!((sim.remaining(f) - 80.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capacity_change_mid_flight_rescales_rates() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource("hash", 100.0);
+        let f = sim.start_flow(1000.0, vec![(r, 1.0)], None);
+        sim.step(5.0); // 500 bytes at 100 B/s
+        assert!((sim.remaining(f) - 500.0).abs() < 1e-6);
+        sim.set_capacity(r, 250.0); // grow the pool: 2.5x capacity
+        let t = sim.run_until_done(f);
+        assert!((t - 7.0).abs() < 1e-6, "remaining 500 at 250 B/s: t=7, got {t}");
+        // Busy time: saturated both before and after the change.
+        assert!((sim.busy_seconds(r) - 7.0).abs() < 1e-6);
     }
 
     #[test]

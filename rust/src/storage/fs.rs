@@ -73,8 +73,11 @@ impl IoCounters {
     }
 }
 
-/// File-size floor (bytes) above which `--io-backend auto` leaves the
-/// page-cache-friendly buffered engine for uring/direct.
+/// File-size floor (bytes) at which `--io-backend auto` leaves the
+/// page-cache-friendly buffered engine for uring/direct. The boundary
+/// is **inclusive**: a file of exactly `--direct-threshold` bytes takes
+/// the uring/direct engine, one byte less stays buffered, and a
+/// threshold of 0 routes every file (even empty ones) to uring/direct.
 pub const DEFAULT_DIRECT_THRESHOLD: u64 = 256 << 20;
 
 /// Minimum verified-span width before a coalesced `POSIX_FADV_DONTNEED`
@@ -142,6 +145,8 @@ impl FsStorage {
     }
 
     /// Set the `auto` engine's size threshold (`--direct-threshold`).
+    /// Inclusive boundary: `size >= threshold` routes uring/direct, so 0
+    /// means "always" (see [`DEFAULT_DIRECT_THRESHOLD`]).
     pub fn with_threshold(mut self, threshold: u64) -> FsStorage {
         self.threshold = threshold;
         self
@@ -211,8 +216,10 @@ impl FsStorage {
     }
 
     /// Resolve the engine for one file: `auto` picks by size (uring when
-    /// the ring is up, direct otherwise, buffered below the threshold);
-    /// explicit backends pass through.
+    /// the ring is up, direct otherwise, buffered strictly below the
+    /// threshold — `size >= threshold` is the pinned boundary, so a file
+    /// of exactly the threshold is never buffered and threshold 0 sends
+    /// everything to uring/direct); explicit backends pass through.
     fn resolve(&self, size: u64) -> IoBackend {
         match self.backend {
             IoBackend::Auto => {

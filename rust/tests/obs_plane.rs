@@ -89,6 +89,27 @@ fn chrome_trace_and_metrics_exports_are_valid_json() {
         .unwrap_or_else(|e| panic!("invalid metrics JSON: {e:?}\n{metrics}"));
     assert!(mdoc.get("stages").is_some(), "metrics carry per-stage histograms");
     assert!(mdoc.get("bottleneck").is_some(), "metrics carry the attribution");
+    assert!(
+        mdoc.get("confidence").and_then(|c| c.as_f64()).is_some(),
+        "multi-group run renders a numeric confidence: {metrics}"
+    );
+}
+
+/// A run where only one stage group recorded anything has no runner-up
+/// to ratio against: the metrics export must emit `"confidence":null`
+/// (valid JSON), never a bare `inf` or the old `999.0` sentinel.
+#[test]
+fn sole_group_confidence_exports_as_json_null() {
+    let rec = Recorder::enabled();
+    let shard = rec.shard("hash-worker");
+    shard.record_ns(Stage::Hash, 0, 1_000_000);
+    let rep = rec.report();
+    assert_eq!(rep.bottleneck, "hash-bound");
+    assert!(rep.confidence.is_infinite(), "sole group: {}", rep.confidence);
+    let metrics = rec.metrics_json();
+    let mdoc = Json::parse(&metrics)
+        .unwrap_or_else(|e| panic!("invalid metrics JSON: {e:?}\n{metrics}"));
+    assert_eq!(mdoc.get("confidence"), Some(&Json::Null), "{metrics}");
 }
 
 /// A SHA1-heavy loopback transfer is hash-bound: both endpoints digest

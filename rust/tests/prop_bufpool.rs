@@ -289,3 +289,57 @@ fn prop_pool_steady_state_through_queue() {
         assert_eq!(pool.free_buffers(), pool.allocated(), "seed {seed}: all returned");
     }
 }
+
+/// PROPERTY: the adaptive sizer driven to its ceiling from random (often
+/// odd) starting capacities always clamps `capacity <= max_capacity`,
+/// grows by half-steps of `(capacity / 2).max(1)`, and resets its miss
+/// counter on every grow — so each grow costs exactly
+/// `GROW_FALLBACK_THRESHOLD` fallback allocations, never fewer.
+#[test]
+fn prop_growth_to_ceiling_clamps_odd_capacities() {
+    use fiver::coordinator::bufpool::GROW_FALLBACK_THRESHOLD;
+    for seed in 0..12u64 {
+        let mut rng = SplitMix64::new(seed * 31 + 0x60DD);
+        let cap0 = rng.range(1, 8) as usize;
+        let pool = BufferPool::with_options(32, cap0, 1, cap0 + rng.range(0, 9) as usize);
+        assert_eq!(pool.capacity(), cap0, "seed {seed}");
+        let max = pool.max_capacity();
+        let mut held: Vec<_> = (0..cap0).map(|_| pool.get()).collect();
+        let mut expect_cap = cap0;
+        let mut expect_grows = 0u64;
+        while pool.capacity() < max {
+            // The miss counter starts at zero (construction / the last
+            // grow reset it): exactly GROW_FALLBACK_THRESHOLD misses
+            // fall back before the sizer reacts.
+            for m in 0..GROW_FALLBACK_THRESHOLD {
+                let b = pool.get_or_alloc(Duration::from_millis(1));
+                assert!(!b.is_pooled(), "seed {seed}: miss {m} must fall back");
+                assert_eq!(pool.grow_events(), expect_grows, "seed {seed}: premature grow");
+                assert_eq!(pool.capacity(), expect_cap, "seed {seed}");
+            }
+            // ...then the next exhausted call grows by the half-step,
+            // clamped to the ceiling, and serves a pooled buffer.
+            let grown = pool.get_or_alloc(Duration::from_millis(1));
+            assert!(grown.is_pooled(), "seed {seed}: sustained exhaustion must grow");
+            expect_cap = (expect_cap + (expect_cap / 2).max(1)).min(max);
+            expect_grows += 1;
+            assert_eq!(pool.capacity(), expect_cap, "seed {seed}");
+            assert!(pool.capacity() <= pool.max_capacity(), "seed {seed}: ceiling breached");
+            assert_eq!(pool.grow_events(), expect_grows, "seed {seed}");
+            held.push(grown);
+            // Occupy the fresh headroom so the next round starts exhausted.
+            while pool.allocated() < pool.capacity() {
+                held.push(pool.get());
+            }
+        }
+        // At the ceiling, exhaustion can only fall back — capacity and
+        // the grow count never move again.
+        for _ in 0..2 * GROW_FALLBACK_THRESHOLD {
+            assert!(!pool.get_or_alloc(Duration::from_millis(1)).is_pooled(), "seed {seed}");
+            assert_eq!(pool.capacity(), max, "seed {seed}: capacity moved at the cap");
+        }
+        assert_eq!(pool.grow_events(), expect_grows, "seed {seed}");
+        drop(held);
+        assert_eq!(pool.in_flight(), 0, "seed {seed}: every pooled buffer returned");
+    }
+}

@@ -257,6 +257,11 @@ fn sync_file_while_writer_open_every_backend() {
     }
 }
 
+/// Serializes the tests that toggle `FIVER_URING_DISABLE`: the variable
+/// is process-global, so concurrently running env-sensitive tests would
+/// observe each other's settings.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Forcing the ring off (`FIVER_URING_DISABLE=1`) must degrade a whole
 /// uring-backend transfer to the buffered engine — counted exactly once
 /// per storage — while the delivered bytes stay bit-identical. This is
@@ -269,6 +274,7 @@ fn uring_forced_fallback_transfer_is_buffered_and_counted() {
     use fiver::faults::FaultPlan;
     use fiver::hashes::HashAlgorithm;
 
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     std::env::set_var("FIVER_URING_DISABLE", "1");
     let dir = TempDir::create("fiver-uringfb").expect("scratch dir");
     let src = FsStorage::with_backend(&dir.join("src"), IoBackend::Uring).expect("src");
@@ -285,10 +291,99 @@ fn uring_forced_fallback_transfer_is_buffered_and_counted() {
     let mut cfg = SessionConfig::new(RealAlgorithm::Fiver, native_factory(HashAlgorithm::Fvr256));
     cfg.io_backend = IoBackend::Uring;
     let names = vec!["f".to_string()];
-    let (report, _) = run_local_transfer(&names, src, dst.clone(), &cfg, &FaultPlan::none())
-        .expect("transfer under forced fallback");
-    std::env::remove_var("FIVER_URING_DISABLE");
+    let (report, _) =
+        run_local_transfer(&names, src.clone(), dst.clone(), &cfg, &FaultPlan::none())
+            .expect("transfer under forced fallback");
     assert_eq!(report.uring_fallbacks, 1, "ring refusal is counted once per storage");
     let back = read_all(&dst, "f").expect("read_all");
     assert_eq!(back, data, "fallback delivery must stay bit-identical");
+
+    // Second wave over the *same* storages, ring still forced off: the
+    // setup refusal was already counted and cached, so streaming three
+    // more files must not move the counter — it is once per storage,
+    // never per file, per stream, or per transfer wave.
+    let mut rng2 = SplitMix64::new(8);
+    let more: Vec<(String, Vec<u8>)> =
+        (0..3).map(|i| (format!("g{i}"), rand_bytes(&mut rng2, 120_000))).collect();
+    for (name, bytes) in &more {
+        let mut w = src.open_write(name).expect("open wave 2");
+        w.write_next(bytes).expect("write wave 2");
+        w.flush().expect("flush wave 2");
+    }
+    let names2: Vec<String> = more.iter().map(|(n, _)| n.clone()).collect();
+    let (report2, _) = run_local_transfer(&names2, src, dst.clone(), &cfg, &FaultPlan::none())
+        .expect("second wave under forced fallback");
+    std::env::remove_var("FIVER_URING_DISABLE");
+    assert_eq!(
+        report2.uring_fallbacks, 1,
+        "multi-wave, multi-file reuse must never re-count the refusal"
+    );
+    for (name, bytes) in &more {
+        assert_eq!(&read_all(&dst, name).expect("read_all"), bytes, "{name} bit-identical");
+    }
+}
+
+/// `auto` under a disabled ring degrades to the direct engine for every
+/// file at/above the threshold, and the refused ring setup still counts
+/// exactly one uring fallback for the storage no matter how many files
+/// resolve through it.
+#[cfg(target_os = "linux")]
+#[test]
+fn uring_disable_under_auto_counts_one_fallback_per_storage() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("FIVER_URING_DISABLE", "1");
+    let dir = TempDir::create("fiver-autodisable").expect("scratch dir");
+    let fs = FsStorage::with_backend(&dir.join("root"), IoBackend::Auto)
+        .expect("auto storage")
+        .with_threshold(0);
+    for name in ["a", "b"] {
+        let mut w = fs.open_write(name).expect("open");
+        w.write_next(&[7u8; 4096]).expect("write");
+        w.flush().expect("flush");
+    }
+    assert_eq!(fs.backend_for("a"), "direct", "ringless auto degrades to direct");
+    assert_eq!(fs.backend_for("b"), "direct");
+    assert_eq!(fs.backend_for("a"), "direct", "re-resolving stays direct");
+    std::env::remove_var("FIVER_URING_DISABLE");
+    assert_eq!(fs.uring_fallbacks(), 1, "one refused ring setup, one fallback");
+}
+
+/// `--io-backend auto`'s boundary is pinned at exactly
+/// `--direct-threshold`: a file of the threshold size routes to
+/// uring/direct, one byte less stays buffered. (Regression: the boundary
+/// must be `size >= threshold`, not `>`.)
+#[test]
+fn auto_backend_boundary_is_pinned_at_the_threshold() {
+    const T: u64 = 8192;
+    let dir = TempDir::create("fiver-autoboundary").expect("scratch dir");
+    let fs = FsStorage::with_backend(&dir.join("root"), IoBackend::Auto)
+        .expect("auto storage")
+        .with_threshold(T);
+    for (name, size) in [("below", T - 1), ("at", T), ("above", T + 1)] {
+        let mut w = fs.open_write(name).expect("open");
+        w.write_next(&vec![0x3Cu8; size as usize]).expect("write");
+        w.flush().expect("flush");
+    }
+    assert_eq!(fs.backend_for("below"), "buffered", "one byte under the threshold");
+    if cfg!(target_os = "linux") {
+        assert_ne!(fs.backend_for("at"), "buffered", "exactly the threshold is inclusive");
+        assert_ne!(fs.backend_for("above"), "buffered");
+    }
+}
+
+/// `--direct-threshold 0` means *always* uring/direct under `auto` —
+/// even a zero-byte (or not-yet-written) file satisfies `size >= 0`.
+#[cfg(target_os = "linux")]
+#[test]
+fn auto_threshold_zero_always_routes_past_buffered() {
+    let dir = TempDir::create("fiver-autozero").expect("scratch dir");
+    let fs = FsStorage::with_backend(&dir.join("root"), IoBackend::Auto)
+        .expect("auto storage")
+        .with_threshold(0);
+    let mut w = fs.open_write("tiny").expect("open");
+    w.write_next(&[1u8; 16]).expect("write");
+    w.flush().expect("flush");
+    drop(w);
+    assert_ne!(fs.backend_for("tiny"), "buffered", "threshold 0 never buffers");
+    assert_ne!(fs.backend_for("missing"), "buffered", "size 0 >= threshold 0");
 }
