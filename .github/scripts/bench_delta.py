@@ -103,18 +103,23 @@ def metric_of(obj):
     return obj.get("median_secs", 0.0) * 1e3, "ms", False
 
 
-def backend_of(obj):
-    """The io-backend a result was measured under (results predating the
-    backend matrix count as buffered — they were)."""
-    return obj.get("io_backend") or "buffered"
+def config_of(obj):
+    """The (io-backend, hash-tier) pair a result was measured under
+    (results predating those matrix axes count as buffered/cryptographic
+    — they were)."""
+    return (
+        obj.get("io_backend") or "buffered",
+        obj.get("hash_tier") or "cryptographic",
+    )
 
 
 def regression_of(cur_obj, prev_obj):
     """Fractional regression of `cur` vs `prev` (positive = worse), or
     None when not comparable — including when the two results were
-    measured under different io-backends (like-for-like only: a backend
-    switch is a configuration change, not a regression)."""
-    if backend_of(cur_obj) != backend_of(prev_obj):
+    measured under different io-backends or hash tiers (like-for-like
+    only: a backend or tier switch is a configuration change, not a
+    regression)."""
+    if config_of(cur_obj) != config_of(prev_obj):
         return None
     cur_v, _, higher = metric_of(cur_obj)
     prev_v, _, _ = metric_of(prev_obj)
@@ -176,8 +181,10 @@ def render(current, previous, prev_run):
             lines.append(f"| `{name}` | — | {fmt_val(cur_v, unit)} | new |")
             continue
         prev_v, _, _ = metric_of(prev)
-        if backend_of(prev) != backend_of(current[name]):
-            delta = f"backend changed ({backend_of(prev)} → {backend_of(current[name])})"
+        if config_of(prev) != config_of(current[name]):
+            prev_cfg = "/".join(config_of(prev))
+            cur_cfg = "/".join(config_of(current[name]))
+            delta = f"config changed ({prev_cfg} → {cur_cfg})"
         elif prev_v == 0:
             delta = "n/a"
         else:

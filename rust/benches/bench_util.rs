@@ -88,15 +88,18 @@ impl BenchResult {
 
     /// One JSON object per result; bench names are plain ASCII so no
     /// escaping is needed. Every line records the environment's I/O
-    /// backend (`FIVER_IO_BACKEND`, `buffered` default) so the CI delta
+    /// backend (`FIVER_IO_BACKEND`, `buffered` default) and hash tier
+    /// (`FIVER_HASH_TIER`, `cryptographic` default) so the CI delta
     /// gate only ever compares like-for-like baselines across the
-    /// io-backend matrix legs.
+    /// io-backend and hash-tier matrix legs.
     fn emit_json(&self, extra: &str) {
         // Canonical parse (not the raw env string): alias spellings and
         // unknown values must not defeat the like-for-like comparison.
         let backend = fiver::storage::IoBackend::from_env().name();
+        let tier = fiver::hashes::HashTier::from_env().name();
         append_json(&format!(
-            "{{\"name\":\"{}\",\"io_backend\":\"{backend}\",\"median_secs\":{:.9},\
+            "{{\"name\":\"{}\",\"io_backend\":\"{backend}\",\"hash_tier\":\"{tier}\",\
+             \"median_secs\":{:.9},\
              \"mean_secs\":{:.9},\"min_secs\":{:.9}{extra}}}",
             self.name,
             self.median_secs,

@@ -7,8 +7,11 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
+use std::sync::Arc;
+
 use bench_util::{bench, black_box, pick};
-use fiver::hashes::HashAlgorithm;
+use fiver::hashes::{DigestFactory, HashAlgorithm};
+use fiver::merkle::MerkleBuilder;
 use fiver::util::rng::SplitMix64;
 
 fn main() {
@@ -24,6 +27,28 @@ fn main() {
             let mut h = alg.hasher();
             h.update(&data);
             black_box(h.finalize());
+        });
+        r.report_bytes(size as u64);
+    }
+
+    // Tiered-FIVER composition (`--hash-tier`): 64 KiB leaf digests
+    // folded under a root, cryptographic-everything vs xxh3-128 leaves
+    // under a sha1 root vs fast-everything. The tiered row is the
+    // engine's verified-transfer hot path; the acceptance bar is >= 2x
+    // the sha1 leaf rate.
+    println!("\n== tiered FIVER: 64 KiB leaves + root fold ({} MiB) ==", size / mb);
+    let factory = |alg: HashAlgorithm| -> DigestFactory { Arc::new(move || alg.hasher()) };
+    let tiers: [(&str, HashAlgorithm, HashAlgorithm, bool); 3] = [
+        ("fiver/leaves+root sha1 (cryptographic)", HashAlgorithm::Sha1, HashAlgorithm::Sha1, false),
+        ("fiver/leaves xxh3-128, root sha1 (tiered)", HashAlgorithm::Xxh3128, HashAlgorithm::Sha1, true),
+        ("fiver/leaves+root xxh3-128 (fast)", HashAlgorithm::Xxh3128, HashAlgorithm::Xxh3128, false),
+    ];
+    for (label, leaf_alg, node_alg, rooted) in tiers {
+        let r = bench(label, 1, iters, || {
+            let mut b = MerkleBuilder::new(64 * 1024, factory(leaf_alg))
+                .with_tree_hasher(factory(node_alg), rooted);
+            b.update(&data);
+            black_box(b.finish());
         });
         r.report_bytes(size as u64);
     }

@@ -14,7 +14,7 @@
 //! * HPCLab-40G: NVMe SSDs, 40 Gbps link, E5-2623 MD5 ~3 Gbps (paper: "the
 //!   speed of transfer is faster than the speed of checksum").
 
-use crate::hashes::HashAlgorithm;
+use crate::hashes::{HashAlgorithm, HashTier};
 use crate::net::TcpParams;
 use crate::storage::IoBackend;
 
@@ -208,6 +208,45 @@ pub struct AlgoParams {
     /// fraction, and charges the receiver local copy + re-hash of the
     /// reconstructed file (see `sim::algorithms::run_delta`).
     pub delta_fraction: f64,
+    /// Hash tiering (the real engine's `--hash-tier`): which digest
+    /// family the per-byte leaf hashing uses. `Cryptographic` (the
+    /// default) charges every byte at `hash`'s rate — the pre-tiering
+    /// model, bit-identical outputs. `Fast` charges everything at
+    /// XXH3-128's rate. `Tiered` charges leaf bytes at XXH3-128's rate
+    /// plus the cryptographic fold over interior digest bytes — see
+    /// [`AlgoParams::leaf_hash_rate`].
+    pub hash_tier: HashTier,
+}
+
+impl AlgoParams {
+    /// Effective per-byte hash throughput of `host` under this run's
+    /// tier. For `Tiered`, leaf bytes hash at XXH3's rate and the
+    /// cryptographic algorithm only folds interior nodes: a binary fold
+    /// over `leaf_size`-spaced leaves touches ~`2 * dlen` digest bytes
+    /// per leaf (the geometric sum over levels), so per data byte the
+    /// crypto share is `2 * dlen / leaf_size` — the Eq. 1 cost table's
+    /// tiered row.
+    pub fn leaf_hash_rate(&self, host: &HostSpec) -> f64 {
+        let fast = host.hash_rate(HashAlgorithm::Xxh3128);
+        match self.hash_tier {
+            HashTier::Cryptographic => host.hash_rate(self.hash),
+            HashTier::Fast => fast,
+            HashTier::Tiered => {
+                let fold_frac =
+                    2.0 * self.leaf_digest_len() as f64 / self.leaf_size.max(1) as f64;
+                1.0 / (1.0 / fast + fold_frac / host.hash_rate(self.hash))
+            }
+        }
+    }
+
+    /// Per-leaf digest width under this run's tier (bytes): XXH3-128's
+    /// 16 for fast-tier leaves, else the cryptographic algorithm's.
+    pub fn leaf_digest_len(&self) -> usize {
+        match self.hash_tier {
+            HashTier::Cryptographic => self.hash.hasher().digest_len(),
+            HashTier::Fast | HashTier::Tiered => 16,
+        }
+    }
 }
 
 /// The sim's per-backend storage cost model (dimensionless weights on the
@@ -303,6 +342,7 @@ impl Default for AlgoParams {
             io_buf_size: 256 * KB,
             io_backend: IoBackend::Buffered,
             delta_fraction: 1.0,
+            hash_tier: HashTier::Cryptographic,
         }
     }
 }
@@ -332,6 +372,23 @@ mod tests {
         let checksum = size / t.src.hash_md5;
         assert!((transfer - 140.0).abs() < 25.0, "transfer {transfer}");
         assert!((checksum - 273.0).abs() < 30.0, "checksum {checksum}");
+    }
+
+    #[test]
+    fn tiered_leaf_rate_tracks_fast_tier() {
+        let t = Testbed::esnet_lan();
+        let crypto = AlgoParams { hash: HashAlgorithm::Sha1, ..Default::default() };
+        let tiered = AlgoParams { hash_tier: HashTier::Tiered, ..crypto };
+        let fast = AlgoParams { hash_tier: HashTier::Fast, ..crypto };
+        // Tiered leaves must be at least 2x the cryptographic rate (the
+        // acceptance bar) and within a few percent of pure-fast: the
+        // crypto fold only touches ~2*dlen/leaf_size of the bytes.
+        assert!(tiered.leaf_hash_rate(&t.src) > 2.0 * crypto.leaf_hash_rate(&t.src));
+        assert!(tiered.leaf_hash_rate(&t.src) > 0.95 * fast.leaf_hash_rate(&t.src));
+        assert!(tiered.leaf_hash_rate(&t.src) < fast.leaf_hash_rate(&t.src));
+        // Widths follow the tier's leaf family.
+        assert_eq!(crypto.leaf_digest_len(), 20);
+        assert_eq!(tiered.leaf_digest_len(), 16);
     }
 
     #[test]

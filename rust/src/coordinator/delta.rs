@@ -181,6 +181,18 @@ impl DeltaBasis {
         self.by_weak.contains_key(&weak)
     }
 
+    /// Exact-position membership: does the basis hold *this* `(weak,
+    /// strong)` signature for the leaf at `old_off`? The sender-side
+    /// signature cache compares its own journaled leaves against the
+    /// basis this way — a full-file match proves both endpoints hold
+    /// identical data and the rolling scan can be skipped outright.
+    pub fn contains_at(&self, weak: u32, strong: &[u8], old_off: u64) -> bool {
+        self.by_weak
+            .get(&weak)
+            .map(|v| v.iter().any(|(o, s)| *o == old_off && s.as_slice() == strong))
+            .unwrap_or(false)
+    }
+
     /// Second-pass confirmation: does any old leaf with this weak sum
     /// also match the window's strong digest? Returns its old byte
     /// offset.

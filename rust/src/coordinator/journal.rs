@@ -364,8 +364,7 @@ impl Journal {
         if start_at > 0 {
             self.open_resumed(name, start_at / cfg.leaf_size)
         } else {
-            let dlen = (cfg.hasher)().digest_len();
-            self.create(name, size, cfg.leaf_size, dlen)
+            self.create(name, size, cfg.leaf_size, cfg.leaf_len())
         }
     }
 
@@ -380,10 +379,11 @@ impl Journal {
         cfg: &SessionConfig,
     ) -> Result<(FileJournal, LeafTracker)> {
         let fj = self.begin_record(name, size, start_at, cfg)?;
+        let leaf = cfg.leaf_factory();
         let tracker = if start_at > 0 {
-            LeafTracker::resume(cfg.leaf_size, &cfg.hasher, start_at / cfg.leaf_size)
+            LeafTracker::resume(cfg.leaf_size, &leaf, start_at / cfg.leaf_size)
         } else {
-            LeafTracker::new(cfg.leaf_size, &cfg.hasher)
+            LeafTracker::new(cfg.leaf_size, &leaf)
         };
         Ok((fj, tracker))
     }
@@ -439,7 +439,16 @@ impl Journal {
             let loff = l * rec.leaf_size;
             let llen = rec.leaf_size.min(rec.size.saturating_sub(loff));
             let (d, w) = recompute(loff, llen)?;
-            anyhow::ensure!(d.len() == rec.digest_len, "digest width mismatch in patch");
+            if d.len() != rec.digest_len {
+                // The record was written under a different hash tier (its
+                // digest stride no longer matches the session's). Patching
+                // in place would corrupt every later entry's offset, so
+                // decline: drop the stale record — the next transfer simply
+                // re-journals from scratch instead of resuming.
+                drop(file);
+                self.remove(name);
+                return Ok(());
+            }
             file.seek(SeekFrom::Start(header_len + l * stride))?;
             if v2 {
                 file.write_all(&w.to_le_bytes())?;
@@ -762,12 +771,16 @@ impl JournalRecord {
 
     /// Merkle root over the first `k_leaves` digests (a tree over a
     /// `prefix_bytes`-byte virtual file) — the handshake's prefix proof.
-    /// Pure digest folding: no file bytes are read.
+    /// Pure digest folding: no file bytes are read. `node_factory` and
+    /// `rooted` describe the session's tree shape (see
+    /// [`SessionConfig::node_factory`] and [`SessionConfig::tree_rooted`])
+    /// so prefix roots match what the live pipeline would build.
     pub fn prefix_root(
         &self,
         k_leaves: u64,
         prefix_bytes: u64,
-        factory: &HasherFactory,
+        node_factory: &HasherFactory,
+        rooted: bool,
     ) -> Vec<u8> {
         let k = k_leaves as usize;
         assert!(k >= 1 && k * self.digest_len <= self.leaves.len(), "prefix out of range");
@@ -776,7 +789,8 @@ impl JournalRecord {
             prefix_bytes,
             self.digest_len,
             self.leaves[..k * self.digest_len].to_vec(),
-            factory,
+            node_factory,
+            rooted,
         );
         tree.root().to_vec()
     }
@@ -996,7 +1010,7 @@ pub fn negotiate_receiver<S: Read + Write>(
     cfg: &SessionConfig,
     storage: &Arc<dyn Storage>,
 ) -> Result<ResumePlan> {
-    let dlen = (cfg.hasher)().digest_len();
+    let dlen = cfg.leaf_len();
     let records = match journal {
         Some(j) => j.load_all()?,
         None => BTreeMap::new(),
@@ -1036,6 +1050,7 @@ pub fn negotiate_receiver<S: Read + Write>(
         }
     }
 
+    let node_factory = cfg.node_factory();
     let mut plan = ResumePlan::default();
     for (ord, offset, digest) in acks {
         let Some((name, rec, wm)) = offered.get(ord as usize) else {
@@ -1051,7 +1066,8 @@ pub fn negotiate_receiver<S: Read + Write>(
         let mut divergent = false;
         let ok = match k {
             Some(k) if !digest.is_empty() => {
-                let equal = rec.prefix_root(k, offset, &cfg.hasher) == digest;
+                let equal =
+                    rec.prefix_root(k, offset, &node_factory, cfg.tree_rooted()) == digest;
                 divergent = !equal;
                 equal
             }
@@ -1091,7 +1107,7 @@ pub fn negotiate_sender<S: Read + Write>(
     names: &[String],
     sizes: &[u64],
 ) -> Result<ResumePlan> {
-    let dlen = (cfg.hasher)().digest_len();
+    let dlen = cfg.leaf_len();
     let records = match journal {
         Some(j) => j.load_all()?,
         None => BTreeMap::new(),
@@ -1112,6 +1128,7 @@ pub fn negotiate_sender<S: Read + Write>(
         }
     }
 
+    let node_factory = cfg.node_factory();
     let mut candidates: HashMap<u32, (String, ResumedFile)> = HashMap::new();
     for (ord, watermark, leaf_size, name) in offers {
         let mut ack_offset = 0u64;
@@ -1119,7 +1136,15 @@ pub fn negotiate_sender<S: Read + Write>(
         if leaf_size == cfg.leaf_size {
             if let Some(&idx) = by_name.get(name.as_str()) {
                 if let Some(c) = records.get(&name).and_then(|rec| {
-                    resume_candidate(rec, sizes[idx], watermark, leaf_size, dlen, &cfg.hasher)
+                    resume_candidate(
+                        rec,
+                        sizes[idx],
+                        watermark,
+                        leaf_size,
+                        dlen,
+                        &node_factory,
+                        cfg.tree_rooted(),
+                    )
                 }) {
                     let (offset, root, rf) = c;
                     ack_offset = offset;
@@ -1166,7 +1191,8 @@ fn resume_candidate(
     watermark: u64,
     leaf_size: u64,
     dlen: usize,
-    factory: &HasherFactory,
+    node_factory: &HasherFactory,
+    rooted: bool,
 ) -> Option<(u64, Vec<u8>, ResumedFile)> {
     let compatible = rec.size == size
         && rec.leaf_size == leaf_size
@@ -1187,7 +1213,7 @@ fn resume_candidate(
     if !valid {
         return None;
     }
-    let digest = rec.prefix_root(k, offset, factory);
+    let digest = rec.prefix_root(k, offset, node_factory, rooted);
     let leaves = rec.leaves[..k as usize * rec.digest_len].to_vec();
     Some((offset, digest, ResumedFile { offset, size, leaves }))
 }
@@ -1212,7 +1238,7 @@ pub fn negotiate_delta_receiver<S: Read + Write>(
     cfg: &SessionConfig,
     storage: &Arc<dyn Storage>,
 ) -> Result<()> {
-    let dlen = (cfg.hasher)().digest_len();
+    let dlen = cfg.leaf_len();
     let max_leaves = (MAX_SIG_BYTES / (WEAK_LEN + dlen)) as u64;
     let records = match journal {
         Some(j) => j.load_all()?,
@@ -1268,7 +1294,7 @@ fn delta_sigs_for(
             }
         }
     }
-    match sigs_from_storage(storage, name, old_size, leaf, &cfg.hasher, max_leaves) {
+    match sigs_from_storage(storage, name, old_size, leaf, &cfg.leaf_factory(), max_leaves) {
         Ok(sigs) => (old_size, sigs),
         Err(_) => (old_size, Vec::new()), // unreadable basis: decline
     }
@@ -1318,7 +1344,7 @@ pub fn negotiate_delta_sender<S: Read + Write>(
     names: &[String],
     sizes: &[u64],
 ) -> Result<DeltaPlan> {
-    let dlen = (cfg.hasher)().digest_len();
+    let dlen = cfg.leaf_len();
     let mut asked = vec![false; names.len()];
     for (i, name) in names.iter().enumerate() {
         if sizes[i] < cfg.leaf_size {
@@ -1572,7 +1598,7 @@ mod tests {
         });
         assert_eq!(tr.completed_leaves() as usize, tree.leaf_count());
         let rebuilt =
-            MerkleTree::from_leaves(512, data.len() as u64, tree.digest_len(), leaves, &f);
+            MerkleTree::from_leaves(512, data.len() as u64, tree.leaf_len(), leaves, &f, false);
         assert_eq!(rebuilt.root(), tree.root());
         // Weak sums match a one-shot rolling sum over each leaf,
         // regardless of how the stream was chunked.
@@ -1660,6 +1686,20 @@ mod tests {
     }
 
     #[test]
+    fn patch_declines_on_digest_width_mismatch() {
+        let dir = TempDir::create("fiver-jrnl").unwrap();
+        let j = Journal::open(dir.path()).unwrap();
+        let data = vec![1u8; 3000];
+        record_stream(&j, "p", &data, 1000, true); // md5-width record
+        // A session running a different hash tier recomputes at another
+        // width: the record must be dropped (decline), never an error and
+        // never an in-place write that would shear later entries.
+        j.patch_record("p", &[(1500, 10)], |_, _| Ok((vec![0u8; 16 + 1], 0)))
+            .expect("width mismatch declines instead of erroring");
+        assert!(j.load("p").unwrap().is_none(), "stale record is dropped");
+    }
+
+    #[test]
     fn prefix_root_matches_stream_tree() {
         let dir = TempDir::create("fiver-jrnl").unwrap();
         let j = Journal::open(dir.path()).unwrap();
@@ -1668,7 +1708,7 @@ mod tests {
         record_stream(&j, "x", &data, 1000, false);
         let rec = j.load("x").unwrap().unwrap();
         // Root over the first 3 leaves == a builder over the first 3000 B.
-        let got = rec.prefix_root(3, 3000, &f);
+        let got = rec.prefix_root(3, 3000, &f, false);
         let mut b = MerkleBuilder::new(1000, f.clone());
         b.update(&data[..3000]);
         assert_eq!(got, b.finish().root());

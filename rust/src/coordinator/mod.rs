@@ -74,6 +74,8 @@ pub mod sender;
 
 use std::sync::Arc;
 
+pub use crate::hashes::HashTier;
+
 /// Real-mode algorithm selector (mirrors [`crate::sim::algorithms::Algorithm`]
 /// plus a transfer-only baseline for Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -240,8 +242,18 @@ pub struct SessionConfig {
     /// `--control-interval`, `--max-parallel`, `--max-hash-workers`).
     /// Off by default; see [`control`].
     pub control: control::ControlConfig,
-    /// Factory producing the session's streaming hashers.
+    /// Factory producing the session's streaming hashers — the
+    /// *cryptographic* family (`--hash`). How it is actually applied
+    /// depends on `hash_tier`; data-plane code must draw hashers through
+    /// [`SessionConfig::leaf_factory`] / [`SessionConfig::node_factory`]
+    /// rather than using this field directly.
     pub hasher: HasherFactory,
+    /// Tier composition (`--hash-tier`, env `FIVER_HASH_TIER`): which
+    /// digests come from the fast XXH3 family and which from `hasher`.
+    /// Both endpoints of a session must agree (like `leaf_size`); the
+    /// journal declines records whose leaf width doesn't match, so a
+    /// tier switch between runs costs a clean re-verify, never an error.
+    pub hash_tier: HashTier,
 }
 
 impl SessionConfig {
@@ -265,7 +277,47 @@ impl SessionConfig {
             obs: crate::obs::Recorder::from_env(),
             control: control::ControlConfig::from_env(),
             hasher,
+            hash_tier: HashTier::from_env(),
         }
+    }
+
+    /// Factory for *leaf-tier* digests: leaf/unit/transport checksums,
+    /// journal leaf records and delta strong-confirms. The fast XXH3-128
+    /// under `fast`/`tiered`, the cryptographic `hasher` otherwise. Leaf
+    /// hashing is O(file bytes) — this is where the tier saves its time.
+    pub fn leaf_factory(&self) -> HasherFactory {
+        match self.hash_tier {
+            HashTier::Cryptographic => self.hasher.clone(),
+            HashTier::Fast | HashTier::Tiered => {
+                native_factory(crate::hashes::HashAlgorithm::Xxh3128)
+            }
+        }
+    }
+
+    /// Factory for *node-tier* digests: Merkle interior nodes and roots
+    /// (including the resume handshake's prefix roots). Cryptographic
+    /// under `cryptographic`/`tiered` — interior hashing is O(leaves x
+    /// digest width), so the trust anchor costs next to nothing — and
+    /// XXH3-128 under `fast`, where the caller has explicitly traded the
+    /// anchor away.
+    pub fn node_factory(&self) -> HasherFactory {
+        match self.hash_tier {
+            HashTier::Fast => native_factory(crate::hashes::HashAlgorithm::Xxh3128),
+            HashTier::Cryptographic | HashTier::Tiered => self.hasher.clone(),
+        }
+    }
+
+    /// Leaf-tier digest width in bytes (the journal's record width and the
+    /// wire width of leaf/unit digests).
+    pub fn leaf_len(&self) -> usize {
+        self.leaf_factory()().digest_len()
+    }
+
+    /// Whether Merkle trees must fold even a single leaf into a node-tier
+    /// root: true exactly when the two tiers differ, so small files keep
+    /// the cryptographic anchor.
+    pub fn tree_rooted(&self) -> bool {
+        self.hash_tier == HashTier::Tiered
     }
 
     /// Effective buffer pool size for an endpoint running `sessions`
@@ -371,6 +423,15 @@ pub struct TransferReport {
     /// Delta mode: leaves satisfied from the receiver's basis without
     /// sending data.
     pub leaves_clean: u64,
+    /// Delta mode: files whose rolling scan was skipped entirely because
+    /// the sender's own journaled signatures for the file still describe
+    /// the source *and* match the receiver's offered basis (the
+    /// sender-side signature cache; the Merkle verify pass backstops a
+    /// stale journal).
+    pub delta_scans_skipped: u64,
+    /// Tier composition this session ran under
+    /// ([`crate::hashes::HashTier::name`]).
+    pub hash_tier: String,
     /// Data-plane pool telemetry: grace-expired unpooled allocations
     /// (nonzero = the pool was exhausted; consider a larger
     /// `--pool-buffers`).
@@ -488,6 +549,24 @@ mod tests {
         let pool = cfg.make_pool(2);
         assert_eq!(pool.buf_size(), cfg.buf_size);
         assert_eq!(pool.capacity(), cfg.pool_buffers_for(2));
+    }
+
+    #[test]
+    fn tier_factories_compose() {
+        let mut cfg =
+            SessionConfig::new(RealAlgorithm::FiverMerkle, native_factory(HashAlgorithm::Sha1));
+        cfg.hash_tier = HashTier::Cryptographic;
+        assert_eq!(cfg.leaf_len(), 20);
+        assert_eq!(cfg.node_factory()().digest_len(), 20);
+        assert!(!cfg.tree_rooted());
+        cfg.hash_tier = HashTier::Tiered;
+        assert_eq!(cfg.leaf_len(), 16, "fast xxh3-128 leaves");
+        assert_eq!(cfg.node_factory()().digest_len(), 20, "crypto root");
+        assert!(cfg.tree_rooted());
+        cfg.hash_tier = HashTier::Fast;
+        assert_eq!(cfg.leaf_len(), 16);
+        assert_eq!(cfg.node_factory()().digest_len(), 16);
+        assert!(!cfg.tree_rooted());
     }
 
     #[test]

@@ -366,8 +366,9 @@ fn merge_frames(
                 if let Some(st) = open.get_mut(&file_idx) {
                     st.jrn_patch(&ranges, storage)?;
                 } else if let (Some(j), Some(name)) = (journal, names.get(&file_idx)) {
+                    let leaf_factory = cfg.leaf_factory();
                     j.patch_record(name, &ranges, |off, len| {
-                        hash_leaf_sig(storage, name, off, len, &cfg.hasher)
+                        hash_leaf_sig(storage, name, off, len, &leaf_factory)
                     })?;
                 }
                 tx.send(Event::Repaired { file_idx, unit, ranges }).ok();
@@ -421,7 +422,9 @@ fn merge_frames(
                             // the failure through the normal verdict path
                             // instead of hanging the sender.
                             let tree = rehash.unwrap_or_else(|_| {
-                                MerkleBuilder::new(cfg2.leaf_size, cfg2.hasher.clone()).finish()
+                                MerkleBuilder::new(cfg2.leaf_size, cfg2.leaf_factory())
+                                    .with_tree_hasher(cfg2.node_factory(), cfg2.tree_rooted())
+                                    .finish()
                             });
                             tx2.send(Event::VerifyTree { file_idx, name, tree }).ok();
                         }
@@ -626,7 +629,7 @@ fn delta_rehash(
     journal: Option<&Journal>,
     obs: &Shard,
 ) -> Result<MerkleTree> {
-    let factory = &cfg.hasher;
+    let factory = &cfg.leaf_factory();
     let dlen = factory().digest_len();
     let leaf_size = cfg.leaf_size;
     let mut fj = match journal {
@@ -666,7 +669,14 @@ fn delta_rehash(
         fj.checkpoint()?;
         obs.record(Stage::Journal, t);
     }
-    Ok(MerkleTree::from_leaves(leaf_size, size, dlen, leaves, factory))
+    Ok(MerkleTree::from_leaves(
+        leaf_size,
+        size,
+        dlen,
+        leaves,
+        &cfg.node_factory(),
+        cfg.tree_rooted(),
+    ))
 }
 
 /// Per-file receive state. Bytes may arrive out of order across stripes;
@@ -756,7 +766,7 @@ impl FileState {
         let queue = if uses_queue && verify {
             let q = ByteQueue::new(cfg.queue_capacity);
             let q2 = q.clone();
-            let hasher_factory = cfg.hasher.clone();
+            let hasher_factory = cfg.leaf_factory();
             let tx2 = tx.clone();
             let name2 = name.to_string();
             let hobs = cfg.obs.shard("recv-hash");
@@ -772,6 +782,8 @@ impl FileState {
                 };
                 let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = cfg.leaf_size;
+                let node_factory = cfg.node_factory();
+                let rooted = cfg.tree_rooted();
                 pool.submit(move || {
                     let tree = queue_build_tree_fold(
                         q2,
@@ -779,6 +791,8 @@ impl FileState {
                         size,
                         prefix,
                         hasher_factory,
+                        node_factory,
+                        rooted,
                         fold,
                         hobs,
                     );
@@ -834,7 +848,7 @@ impl FileState {
             queue,
             jrn,
             jrn_checkpoint: cfg.journal_checkpoint_leaves.max(1),
-            hasher: cfg.hasher.clone(),
+            hasher: cfg.leaf_factory(),
             pending_units: if verify && !uses_queue && resumed.is_none() {
                 units
             } else {
@@ -1127,6 +1141,8 @@ pub(crate) fn queue_build_tree_fold(
     size: u64,
     prefix: Option<(Vec<u8>, u64)>,
     hasher_factory: super::HasherFactory,
+    node_factory: super::HasherFactory,
+    rooted: bool,
     mut journal: Option<JournalFold>,
     obs: Shard,
 ) -> MerkleTree {
@@ -1168,11 +1184,15 @@ pub(crate) fn queue_build_tree_fold(
         obs.record(Stage::Journal, t);
     }
     if !complete {
-        return MerkleBuilder::new(leaf_size, hasher_factory).finish();
+        return MerkleBuilder::new(leaf_size, hasher_factory)
+            .with_tree_hasher(node_factory, rooted)
+            .finish();
     }
+    // Interior/root folding is the tier's cryptographic anchor; attribute
+    // it to its own stage so per-tier reports can split leaf vs tree cost.
     let t = obs.start();
-    let tree = MerkleTree::from_leaves(leaf_size, size, dlen, leaves, &hasher_factory);
-    obs.record(Stage::Hash, t);
+    let tree = MerkleTree::from_leaves(leaf_size, size, dlen, leaves, &node_factory, rooted);
+    obs.record(Stage::TreeHash, t);
     tree
 }
 
@@ -1227,7 +1247,7 @@ fn verify_worker(
             Some(d) => d,
             None => {
                 let t = obs.start();
-                let d = hash_range(&storage, &name, offset, len, &cfg.hasher)?;
+                let d = hash_range(&storage, &name, offset, len, &cfg.leaf_factory())?;
                 obs.record(Stage::Hash, t);
                 d
             }
@@ -1269,7 +1289,7 @@ fn verify_worker(
                         }
                     }
                     let t = obs.start();
-                    digest = hash_range(&storage, &name, offset, len, &cfg.hasher)?;
+                    digest = hash_range(&storage, &name, offset, len, &cfg.leaf_factory())?;
                     obs.record(Stage::Repair, t);
                 }
                 other => bail!("expected Verdict, got {other:?}"),
@@ -1365,11 +1385,12 @@ fn verify_tree_exchange(
         dirty.sort_unstable();
         dirty.dedup();
         let t = obs.start();
+        let leaf_factory = cfg.leaf_factory();
         for &leaf in &dirty {
             let (off, len) = tree.leaf_range(leaf);
-            tree.set_leaf(leaf, hash_range(storage, name, off, len, &cfg.hasher)?);
+            tree.set_leaf(leaf, hash_range(storage, name, off, len, &leaf_factory)?);
         }
-        tree.recompute_paths(&dirty, &cfg.hasher);
+        tree.recompute_paths(&dirty, &cfg.node_factory());
         obs.record(Stage::Repair, t);
     }
 }

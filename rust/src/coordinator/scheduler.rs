@@ -227,6 +227,7 @@ impl EngineReport {
         let mut total = TransferReport {
             algorithm: self.per_session.first().map(|r| r.algorithm.clone()).unwrap_or_default(),
             io_backend: self.per_session.first().map(|r| r.io_backend.clone()).unwrap_or_default(),
+            hash_tier: self.per_session.first().map(|r| r.hash_tier.clone()).unwrap_or_default(),
             elapsed_secs: self.elapsed_secs,
             files_skipped: self.files_skipped,
             bytes_skipped: self.bytes_skipped,
@@ -243,6 +244,7 @@ impl EngineReport {
             total.bytes_skipped_delta += r.bytes_skipped_delta;
             total.leaves_dirty += r.leaves_dirty;
             total.leaves_clean += r.leaves_clean;
+            total.delta_scans_skipped += r.delta_scans_skipped;
             total.verify_rtts += r.verify_rtts;
             total.pool_fallback_allocs = total.pool_fallback_allocs.max(r.pool_fallback_allocs);
             total.pool_peak_in_flight = total.pool_peak_in_flight.max(r.pool_peak_in_flight);

@@ -33,8 +33,10 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::bufpool::{BufferPool, SharedBuf, POOL_GRACE};
-use super::delta::{DeltaOp, DeltaPlan, DeltaScanner};
-use super::journal::{FileJournal, Journal, LeafTracker, ResumePlan, ResumedFile};
+use super::delta::{DeltaBasis, DeltaOp, DeltaPlan, DeltaScanner};
+use super::journal::{
+    FileJournal, Journal, JournalRecord, LeafTracker, ResumePlan, ResumedFile,
+};
 use super::pool::{HashPool, PoolHandle};
 use super::protocol::Frame;
 use super::queue::ByteQueue;
@@ -348,7 +350,7 @@ impl SenderSession {
             let (tx, rx) = mpsc::sync_channel::<(u32, String, u64, u64, u64)>(1);
             let shared2 = shared.clone();
             let storage2 = storage.clone();
-            let hasher = cfg.hasher.clone();
+            let hasher = cfg.leaf_factory();
             let hobs = obs_hash.clone();
             let handle = std::thread::spawn(move || -> Result<()> {
                 while let Ok((file_idx, name, unit, offset, len)) = rx.recv() {
@@ -366,6 +368,7 @@ impl SenderSession {
 
         let report = TransferReport {
             algorithm: cfg.algorithm.name().to_string(),
+            hash_tier: cfg.hash_tier.name().to_string(),
             ..Default::default()
         };
         Ok(SenderSession {
@@ -458,7 +461,7 @@ impl SenderSession {
         let queue = if uses_queue && self.verify {
             let q = ByteQueue::new(self.cfg.queue_capacity);
             let q2 = q.clone();
-            let hasher = self.cfg.hasher.clone();
+            let hasher = self.cfg.leaf_factory();
             let shared2 = self.shared.clone();
             if tree_mode {
                 let fold = match &self.journal {
@@ -467,10 +470,21 @@ impl SenderSession {
                 };
                 let prefix = resumed.as_ref().map(|rf| (rf.leaves.clone(), rf.offset));
                 let leaf_size = self.cfg.leaf_size;
+                let node_factory = self.cfg.node_factory();
+                let rooted = self.cfg.tree_rooted();
                 let hobs = self.obs_hash.clone();
                 self.pool.submit(move || {
-                    let tree =
-                        queue_build_tree_fold(q2, leaf_size, size, prefix, hasher, fold, hobs);
+                    let tree = queue_build_tree_fold(
+                        q2,
+                        leaf_size,
+                        size,
+                        prefix,
+                        hasher,
+                        node_factory,
+                        rooted,
+                        fold,
+                        hobs,
+                    );
                     shared2.put_tree(file_idx, tree);
                 });
             } else {
@@ -579,46 +593,203 @@ impl SenderSession {
             size,
             name: name.to_string(),
         })?;
+        // Sender-side signature cache: when our own journaled record for
+        // this file matches the receiver's basis pair-for-pair (size,
+        // geometry, and every full-leaf `(weak, strong)` signature at the
+        // same offset), the receiver provably holds the journaled content
+        // at identical aligned offsets — the per-byte rolling scan is
+        // pure overhead. The read loop then only re-verifies each leaf's
+        // strong digest against the record (the bytes are read anyway for
+        // the verify tree), so a source mutated *after* journaling ships
+        // exactly its dirty leaves as literals rather than poisoning the
+        // copies. Decide *before* `begin_fold` below truncates the
+        // record.
+        let cached_rec = self
+            .journal
+            .as_ref()
+            .and_then(|j| j.load(name).ok().flatten())
+            .filter(|rec| delta_cache_hit(rec, basis, &self.cfg, size));
         // Tree verification + journaling ride the same hash queue as the
         // FIVER path: the pool job digests the exact bytes being scanned
         // and journals fresh v2 leaves for the *next* delta run.
         let queue = if self.verify {
             let q = ByteQueue::new(self.cfg.queue_capacity);
             let q2 = q.clone();
-            let hasher = self.cfg.hasher.clone();
+            let hasher = self.cfg.leaf_factory();
             let shared2 = self.shared.clone();
             let fold = match &self.journal {
                 Some(j) => Some(j.begin_fold(name, size, 0, &self.cfg, None)?),
                 None => None,
             };
             let leaf_size = self.cfg.leaf_size;
+            let node_factory = self.cfg.node_factory();
+            let rooted = self.cfg.tree_rooted();
             let hobs = self.obs_hash.clone();
             self.pool.submit(move || {
-                let tree = queue_build_tree_fold(q2, leaf_size, size, None, hasher, fold, hobs);
+                let tree = queue_build_tree_fold(
+                    q2,
+                    leaf_size,
+                    size,
+                    None,
+                    hasher,
+                    node_factory,
+                    rooted,
+                    fold,
+                    hobs,
+                );
                 shared2.put_tree(file_idx, tree);
             });
             Some(q)
         } else {
             None
         };
-        let mut scanner = DeltaScanner::new(basis, self.cfg.leaf_size, &self.cfg.hasher);
-        let streamed = self.stream_file_delta(file_idx, name, size, queue.as_ref(), &mut scanner);
-        if let Some(q) = &queue {
-            q.close();
+        if let Some(rec) = cached_rec {
+            let streamed = self.stream_file_delta_cached(file_idx, size, &rec, name, queue.as_ref());
+            if let Some(q) = &queue {
+                q.close();
+            }
+            let (copied, clean, literal) = streamed?;
+            self.data_outs[0].send(&Frame::DeltaEnd { file_idx })?;
+            self.data_outs[0].flush()?;
+            self.report.bytes_skipped_delta += copied;
+            self.report.leaves_clean += clean;
+            let leaf = self.cfg.leaf_size.max(1);
+            self.report.leaves_dirty += (literal + leaf - 1) / leaf;
+            self.report.delta_scans_skipped += 1;
+        } else {
+            let mut scanner =
+                DeltaScanner::new(basis, self.cfg.leaf_size, &self.cfg.leaf_factory());
+            let streamed =
+                self.stream_file_delta(file_idx, name, size, queue.as_ref(), &mut scanner);
+            if let Some(q) = &queue {
+                q.close();
+            }
+            streamed?;
+            self.data_outs[0].send(&Frame::DeltaEnd { file_idx })?;
+            self.data_outs[0].flush()?;
+            self.report.bytes_skipped_delta += scanner.copied_bytes;
+            self.report.leaves_clean += scanner.copies;
+            let leaf = self.cfg.leaf_size.max(1);
+            self.report.leaves_dirty += (scanner.literal_bytes + leaf - 1) / leaf;
         }
-        streamed?;
-        self.data_outs[0].send(&Frame::DeltaEnd { file_idx })?;
-        self.data_outs[0].flush()?;
-        self.report.bytes_skipped_delta += scanner.copied_bytes;
-        self.report.leaves_clean += scanner.copies;
-        let leaf = self.cfg.leaf_size.max(1);
-        self.report.leaves_dirty += (scanner.literal_bytes + leaf - 1) / leaf;
         if self.verify && matches!(self.cfg.algorithm, RealAlgorithm::Sequential) {
             // Sequential keeps its definitional pacing even in delta mode.
             self.shared.wait_file_verified(file_idx)?;
         }
         self.report.files += 1;
         Ok(())
+    }
+
+    /// Cache-hit variant of the delta read loop: the rolling scan is
+    /// skipped — the journal record already proves the receiver holds the
+    /// journaled leaves at identical aligned offsets — but each full
+    /// leaf's strong digest is still recomputed from the bytes streaming
+    /// past (the same read that feeds the tree-hash queue) and compared
+    /// against the record. Matching leaves coalesce into aligned
+    /// `DeltaCopy` runs; a leaf mutated since journaling hashes
+    /// differently and ships as literal bytes, so a stale cache costs
+    /// exactly its dirty leaves, not a repair round. Returns
+    /// `(copied_bytes, clean_leaves, literal_bytes)`.
+    fn stream_file_delta_cached(
+        &mut self,
+        file_idx: u32,
+        size: u64,
+        rec: &JournalRecord,
+        name: &str,
+        queue: Option<&ByteQueue>,
+    ) -> Result<(u64, u64, u64)> {
+        let dlen = rec.digest_len;
+        let leaf_size = self.cfg.leaf_size as usize;
+        let mut hasher = (self.cfg.leaf_factory())();
+        let mut leaf_buf: Vec<u8> = Vec::with_capacity(leaf_size);
+        let mut leaf_idx = 0usize;
+        let full_leaves = (size / self.cfg.leaf_size) as usize;
+        let mut run_start = 0u64;
+        let mut run_len = 0u64;
+        let (mut copied, mut clean, mut literal) = (0u64, 0u64, 0u64);
+        let mut reader = self.storage.open_read(name)?;
+        let mut offset = 0u64;
+        while offset < size {
+            if let Some(c) = &self.crash {
+                if c.tripped() {
+                    return Err(anyhow::Error::new(CrashError));
+                }
+            }
+            let want = self.cfg.buf_size.min((size - offset) as usize).min(self.bufs.buf_size());
+            let t = self.obs.start();
+            let chunk: SharedBuf = reader.read_shared(offset, want, &self.bufs)?;
+            anyhow::ensure!(!chunk.is_empty(), "short read of {name} at {offset}");
+            self.obs.record(Stage::Read, t);
+            // Classify the chunk leaf by leaf (a leaf may span chunks).
+            let mut pos = 0usize;
+            while pos < chunk.len() {
+                let take = (leaf_size - leaf_buf.len()).min(chunk.len() - pos);
+                leaf_buf.extend_from_slice(&chunk[pos..pos + take]);
+                pos += take;
+                if leaf_buf.len() < leaf_size || leaf_idx >= full_leaves {
+                    continue; // partial leaf, or the unaligned tail
+                }
+                let leaf_off = leaf_idx as u64 * leaf_size as u64;
+                hasher.reset();
+                hasher.update(&leaf_buf);
+                let digest = hasher.finalize();
+                if digest.as_slice() == &rec.leaves[leaf_idx * dlen..(leaf_idx + 1) * dlen] {
+                    if run_len == 0 {
+                        run_start = leaf_off;
+                    }
+                    run_len += leaf_size as u64;
+                    copied += leaf_size as u64;
+                    clean += 1;
+                } else {
+                    if run_len > 0 {
+                        self.data_outs[0].send(&Frame::DeltaCopy {
+                            file_idx,
+                            new_off: run_start,
+                            old_off: run_start,
+                            len: run_len,
+                        })?;
+                        run_len = 0;
+                    }
+                    let t = self.obs.start();
+                    self.data_outs[0].send_data(file_idx, leaf_off, &leaf_buf)?;
+                    self.obs.record(Stage::Send, t);
+                    self.report.bytes_sent += leaf_buf.len() as u64;
+                    literal += leaf_buf.len() as u64;
+                }
+                leaf_buf.clear();
+                leaf_idx += 1;
+            }
+            if let Some(c) = &self.crash {
+                c.consume(chunk.len() as u64);
+            }
+            offset += chunk.len() as u64;
+            self.obs.add_bytes(chunk.len() as u64);
+            if let Some(q) = queue {
+                let t = self.obs.start();
+                q.add(chunk);
+                self.obs.record(Stage::QueueWait, t);
+                self.obs.gauge_depth(q.len_bytes() as u64);
+            }
+        }
+        // Flush the pending copy run, then the unaligned tail (never in
+        // the record — always literal) in strict new-file order.
+        if run_len > 0 {
+            self.data_outs[0].send(&Frame::DeltaCopy {
+                file_idx,
+                new_off: run_start,
+                old_off: run_start,
+                len: run_len,
+            })?;
+        }
+        if !leaf_buf.is_empty() {
+            let tail_off = full_leaves as u64 * leaf_size as u64;
+            let t = self.obs.start();
+            self.data_outs[0].send_data(file_idx, tail_off, &leaf_buf)?;
+            self.obs.record(Stage::Send, t);
+            self.report.bytes_sent += leaf_buf.len() as u64;
+            literal += leaf_buf.len() as u64;
+        }
+        Ok((copied, clean, literal))
     }
 
     /// Read/scan loop of the delta path: sequential shared-buffer reads
@@ -1066,6 +1237,43 @@ fn run_verifier(
     Ok(())
 }
 
+/// Does the sender's journaled `rec` prove the receiver's `basis` holds
+/// byte-identical aligned data for the current `size`-byte source? True
+/// only when the record is complete, carries weak sums, matches the
+/// session geometry (leaf size and digest width — a record journaled
+/// under another hash tier never qualifies), covers every full source
+/// leaf, and each of its `(weak, strong)` leaf signatures appears at the
+/// same offset in the basis. The check is pure in-memory signature
+/// comparison: no source bytes are read.
+fn delta_cache_hit(
+    rec: &JournalRecord,
+    basis: &DeltaBasis,
+    cfg: &SessionConfig,
+    size: u64,
+) -> bool {
+    let full = size / cfg.leaf_size;
+    let eligible = rec.size == size
+        && rec.leaf_size == cfg.leaf_size
+        && rec.digest_len == cfg.leaf_len()
+        && rec.is_complete()
+        && rec.has_weaks()
+        && rec.aligned_leaves() == full
+        && basis.old_size == size
+        && basis.leaves == full
+        && full > 0;
+    if !eligible {
+        return false;
+    }
+    let dlen = rec.digest_len;
+    (0..full as usize).all(|i| {
+        basis.contains_at(
+            rec.weaks[i],
+            &rec.leaves[i * dlen..(i + 1) * dlen],
+            i as u64 * cfg.leaf_size,
+        )
+    })
+}
+
 /// Increment and return the repair-round counter for a (file, unit).
 fn bump_attempt(attempts: &mut HashMap<(u32, u64), u32>, file_idx: u32, unit: u64) -> u32 {
     let a = attempts.entry((file_idx, unit)).or_insert(0);
@@ -1135,9 +1343,11 @@ fn descend_tree(
     if tree.height() == 1 {
         return Ok(vec![0]); // the root *is* the only leaf
     }
-    let dlen = tree.digest_len();
     let mut suspects: Vec<usize> = vec![0]; // the root, at the top level
     for level in (0..tree.height() - 1).rev() {
+        // Leaf and interior digests may differ in width under tiered
+        // hashing — size comparisons by the level being queried.
+        let dlen = tree.level_len(level);
         let width = tree.level_width(level);
         let mut wanted: Vec<usize> = Vec::new();
         for &p in &suspects {

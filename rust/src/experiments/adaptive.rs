@@ -15,9 +15,9 @@
 //! framing/reassembly overhead on the wire, so a saturated link rewards
 //! walking P down.
 
-use crate::config::{gbps, Testbed, GB, MB};
+use crate::config::{gbps, AlgoParams, Testbed, GB, MB};
 use crate::coordinator::control::{Aimd, ControlConfig, ControlEvent, WindowSample};
-use crate::hashes::HashAlgorithm;
+use crate::hashes::{HashAlgorithm, HashTier};
 use crate::sim::{FlowId, FluidSim, ResourceId};
 use crate::util::fmt;
 
@@ -68,9 +68,20 @@ struct Leg {
 impl Rig {
     /// A rig over `tb`'s disk rates with an explicit link capacity
     /// (`net_cap` — the throttled leg overrides the testbed's wire).
-    fn new(tb: &Testbed, alg: HashAlgorithm, net_cap: f64, workers: usize, stripes: usize) -> Rig {
+    /// Hash capacity follows the run's tier via
+    /// [`AlgoParams::leaf_hash_rate`], so a `Tiered` rig hashes leaves
+    /// at XXH3's rate plus the cryptographic fold surcharge.
+    fn new(
+        tb: &Testbed,
+        alg: HashAlgorithm,
+        tier: HashTier,
+        net_cap: f64,
+        workers: usize,
+        stripes: usize,
+    ) -> Rig {
         let mut sim = FluidSim::new();
-        let hash_one = tb.src.hash_rate(alg).min(tb.dst.hash_rate(alg));
+        let params = AlgoParams { hash: alg, hash_tier: tier, ..Default::default() };
+        let hash_one = params.leaf_hash_rate(&tb.src).min(params.leaf_hash_rate(&tb.dst));
         let read = sim.add_resource("read", tb.src.disk_read);
         let write = sim.add_resource("write", tb.dst.disk_write);
         let net = sim.add_resource("net", net_cap);
@@ -188,7 +199,18 @@ impl Rig {
 /// let the controller grow the pool.
 fn hash_leg(aimd: Option<Aimd>, cfg: &ControlConfig, workers: usize) -> Leg {
     let tb = Testbed::hpclab_40g();
-    Rig::new(&tb, HashAlgorithm::Sha1, tb.bandwidth, workers, 1).run(aimd, cfg, 16, GB as f64)
+    Rig::new(&tb, HashAlgorithm::Sha1, HashTier::Cryptographic, tb.bandwidth, workers, 1)
+        .run(aimd, cfg, 16, GB as f64)
+}
+
+/// Leg 1b: the identical hash-bound rig under `--hash-tier tiered`.
+/// XXH3-128 leaves lift the single-worker hash rate past the 6 Gbps
+/// write path, so the run is no longer hash-bound: one worker already
+/// matches the hand-tuned pool and the controller has nothing to grow.
+fn tiered_leg(aimd: Option<Aimd>, cfg: &ControlConfig, workers: usize) -> Leg {
+    let tb = Testbed::hpclab_40g();
+    Rig::new(&tb, HashAlgorithm::Sha1, HashTier::Tiered, tb.bandwidth, workers, 1)
+        .run(aimd, cfg, 16, GB as f64)
 }
 
 /// Leg 2: the same rig throttled to a 1 Gbps wire, launched with eight
@@ -196,7 +218,8 @@ fn hash_leg(aimd: Option<Aimd>, cfg: &ControlConfig, workers: usize) -> Leg {
 /// controller probe-halves P down to one.
 fn net_leg(aimd: Option<Aimd>, cfg: &ControlConfig, stripes: usize) -> Leg {
     let tb = Testbed::hpclab_40g();
-    Rig::new(&tb, HashAlgorithm::Sha1, gbps(1.0), 1, stripes).run(aimd, cfg, 40, 128.0 * MB as f64)
+    Rig::new(&tb, HashAlgorithm::Sha1, HashTier::Cryptographic, gbps(1.0), 1, stripes)
+        .run(aimd, cfg, 40, 128.0 * MB as f64)
 }
 
 /// Render one leg's decision trail (same shape as the CLI report).
@@ -229,6 +252,18 @@ pub fn adaptive_convergence() -> String {
         format!("{:+.1}%", (h_ada.secs / h_hand.secs - 1.0) * 100.0),
         h_ada.events.len().to_string(),
         format!("{} workers", h_ada.workers),
+    ]);
+    let t_mis = tiered_leg(None, &cfg, 1);
+    let t_ada = tiered_leg(Some(Aimd::new(cfg.clone())), &cfg, 1);
+    let t_hand = tiered_leg(None, &cfg, cfg.max_hash_workers);
+    table.row(&[
+        "same rig, --hash-tier tiered".to_string(),
+        fmt::secs(t_mis.secs),
+        fmt::secs(t_ada.secs),
+        fmt::secs(t_hand.secs),
+        format!("{:+.1}%", (t_ada.secs / t_hand.secs - 1.0) * 100.0),
+        t_ada.events.len().to_string(),
+        format!("{} workers", t_ada.workers),
     ]);
     let n_mis = net_leg(None, &cfg, 8);
     let n_ada = net_leg(Some(Aimd::new(cfg.clone())), &cfg, 8);
@@ -294,6 +329,38 @@ mod tests {
     }
 
     #[test]
+    fn tiered_leg_is_no_longer_hash_bound() {
+        let cfg = control_cfg();
+        // Under the tiered model one worker already clears the 6 Gbps
+        // write path, so a "misconfigured" single-worker start matches
+        // the hand-tuned pool — the run is write-bound, not hash-bound.
+        let one = tiered_leg(None, &cfg, 1);
+        let hand = tiered_leg(None, &cfg, cfg.max_hash_workers);
+        assert!(
+            one.secs <= 1.02 * hand.secs,
+            "tiered single-worker must match hand-tuned: {:.1}s vs {:.1}s",
+            one.secs,
+            hand.secs
+        );
+        // And it beats the cryptographic single-worker leg outright.
+        let crypto_one = hash_leg(None, &cfg, 1);
+        assert!(
+            one.secs < 0.67 * crypto_one.secs,
+            "tiered must lift the hash-bound leg: {:.1}s vs {:.1}s",
+            one.secs,
+            crypto_one.secs
+        );
+        // The controller agrees: no hash-pool growth decisions fire.
+        let ada = tiered_leg(Some(Aimd::new(cfg.clone())), &cfg, 1);
+        assert!(
+            ada.events.iter().all(|e| !(e.actuator == "hash_workers" && e.action == "grow")),
+            "tiered leg must not be diagnosed hash-bound: {:?}",
+            ada.events
+        );
+        assert_eq!(ada.workers, 1);
+    }
+
+    #[test]
     fn net_leg_sheds_stripes_within_ten_percent() {
         let cfg = control_cfg();
         let mis = net_leg(None, &cfg, 8);
@@ -330,6 +397,7 @@ mod tests {
     fn report_renders_both_trails() {
         let out = adaptive_convergence();
         assert!(out.contains("hash-bound sha1"));
+        assert!(out.contains("--hash-tier tiered"));
         assert!(out.contains("net-bound 1G"));
         assert!(out.contains("hash_workers"));
         assert!(out.contains("stripes"));

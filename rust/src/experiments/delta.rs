@@ -65,7 +65,7 @@ pub fn delta_sweep() -> String {
                 let dirty = dirty_leaf_fraction(per_file_leaves, per_file_edits);
                 let p = AlgoParams { leaf_size: leaf, delta_fraction: dirty, ..Default::default() };
                 let s = run_delta(tb, p, &ds, false);
-                let dlen = p.hash.hasher().digest_len() as u64;
+                let dlen = p.leaf_digest_len() as u64;
                 let sig_bytes = per_file_leaves
                     * (crate::coordinator::delta::WEAK_LEN as u64 + dlen)
                     * ds.files.len() as u64;

@@ -8,9 +8,14 @@
 //!   normative definition is the Pallas kernel in
 //!   `python/compile/kernels/fvr_hash.py` (bit-exact; verified against
 //!   `artifacts/test_vectors.json`)
+//! * [`xxh3`] — XXH3-64/128, the non-cryptographic *fast tier* for leaf
+//!   and transport digests (canonical big-endian output, verified against
+//!   the reference implementation's vectors)
 //!
 //! All implement [`Hasher`]; [`HashAlgorithm`] is the runtime-selectable
-//! registry the coordinator and CLI use.
+//! registry the coordinator and CLI use, and [`HashTier`] selects how the
+//! fast and cryptographic families are composed (see DESIGN.md, "Tiered
+//! hashing").
 
 /// FVR-256: the 8-lane verification digest.
 pub mod fvr256;
@@ -20,6 +25,8 @@ pub mod md5;
 pub mod sha1;
 /// SHA-256 (FIPS 180-4), from scratch.
 pub mod sha256;
+/// XXH3-64/128: the non-cryptographic fast tier.
+pub mod xxh3;
 
 /// Factory producing fresh streaming hashers; shared across threads. The
 /// single definition behind [`crate::coordinator::HasherFactory`] and
@@ -53,13 +60,23 @@ pub enum HashAlgorithm {
     Sha256,
     /// FVR-256 (256-bit, 8 lanes).
     Fvr256,
+    /// XXH3-64 (64-bit, non-cryptographic fast tier).
+    Xxh364,
+    /// XXH3-128 (128-bit, non-cryptographic fast tier).
+    Xxh3128,
 }
 
 impl HashAlgorithm {
     /// Every hash backend, in registry order — the single source of truth
     /// for tests, benches, experiment drivers and CLI help.
-    pub const ALL: [HashAlgorithm; 4] =
-        [HashAlgorithm::Md5, HashAlgorithm::Sha1, HashAlgorithm::Sha256, HashAlgorithm::Fvr256];
+    pub const ALL: [HashAlgorithm; 6] = [
+        HashAlgorithm::Md5,
+        HashAlgorithm::Sha1,
+        HashAlgorithm::Sha256,
+        HashAlgorithm::Fvr256,
+        HashAlgorithm::Xxh364,
+        HashAlgorithm::Xxh3128,
+    ];
 
     /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
@@ -68,6 +85,8 @@ impl HashAlgorithm {
             HashAlgorithm::Sha1 => "sha1",
             HashAlgorithm::Sha256 => "sha256",
             HashAlgorithm::Fvr256 => "fvr256",
+            HashAlgorithm::Xxh364 => "xxh3-64",
+            HashAlgorithm::Xxh3128 => "xxh3-128",
         }
     }
 
@@ -78,6 +97,8 @@ impl HashAlgorithm {
             "sha1" | "sha-1" => Some(HashAlgorithm::Sha1),
             "sha256" | "sha-256" => Some(HashAlgorithm::Sha256),
             "fvr256" | "fvr-256" | "fvr" => Some(HashAlgorithm::Fvr256),
+            "xxh3-64" | "xxh3_64" | "xxh64" => Some(HashAlgorithm::Xxh364),
+            "xxh3-128" | "xxh3_128" | "xxh128" | "xxh3" => Some(HashAlgorithm::Xxh3128),
             _ => None,
         }
     }
@@ -89,7 +110,16 @@ impl HashAlgorithm {
             HashAlgorithm::Sha1 => Box::new(sha1::Sha1::new()),
             HashAlgorithm::Sha256 => Box::new(sha256::Sha256::new()),
             HashAlgorithm::Fvr256 => Box::new(fvr256::Fvr256::default()),
+            HashAlgorithm::Xxh364 => Box::new(xxh3::Xxh364::new()),
+            HashAlgorithm::Xxh3128 => Box::new(xxh3::Xxh3128::new()),
         }
+    }
+
+    /// True for the non-cryptographic fast-tier hashes: fine against
+    /// random corruption, useless against an adversary who can choose the
+    /// corruption (see the tiered-hashing threat model in DESIGN.md).
+    pub fn is_fast_tier(&self) -> bool {
+        matches!(self, HashAlgorithm::Xxh364 | HashAlgorithm::Xxh3128)
     }
 
     /// Relative checksum cost vs MD5, from the paper's Fig 10 measurements
@@ -97,18 +127,82 @@ impl HashAlgorithm {
     /// SHA256 1043 s). Used by the simulator to scale hash-core rates.
     /// FVR-256's block-parallel structure hashes at roughly memory speed on
     /// wide-vector hardware; we conservatively model it at MD5 cost on CPU.
+    /// XXH3 is a multiply-fold sponge with no cryptographic rounds and runs
+    /// an order of magnitude faster than MD5 even scalar (the whole point
+    /// of the fast tier); 0.05 ≈ the ~20x gap the xxHash reference
+    /// benchmarks report for large inputs.
     pub fn relative_cost(&self) -> f64 {
         match self {
             HashAlgorithm::Md5 => 1.0,
             HashAlgorithm::Sha1 => 713.0 / 476.0,
             HashAlgorithm::Sha256 => 1043.0 / 476.0,
             HashAlgorithm::Fvr256 => 1.0,
+            HashAlgorithm::Xxh364 => 0.05,
+            HashAlgorithm::Xxh3128 => 0.05,
         }
     }
 
-    /// `"md5|sha1|sha256|fvr256"` — for CLI usage strings.
+    /// `"md5|sha1|sha256|fvr256|xxh3-64|xxh3-128"` — for CLI usage strings.
     pub fn names_joined() -> String {
         Self::ALL.map(|a| a.name()).join("|")
+    }
+}
+
+/// How the fast and cryptographic hash families compose into the session's
+/// integrity plane (CLI `--hash-tier`, env `FIVER_HASH_TIER`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum HashTier {
+    /// Everything — leaves, units, roots — uses the fast tier (XXH3-128).
+    /// Fastest, but no cryptographic anchor anywhere: detects random
+    /// corruption only.
+    Fast,
+    /// Everything uses the session's cryptographic [`HashAlgorithm`]
+    /// (`--hash`). The pre-tiering behavior and the default.
+    #[default]
+    Cryptographic,
+    /// Leaf/unit/transport digests use XXH3-128; Merkle interior nodes and
+    /// roots use the cryptographic algorithm (BLAKE3-style composition:
+    /// fast leaves under a crypto root, end-to-end trust unchanged for
+    /// tree-verified transfers).
+    Tiered,
+}
+
+impl HashTier {
+    /// Every tier, in registry order.
+    pub const ALL: [HashTier; 3] = [HashTier::Fast, HashTier::Cryptographic, HashTier::Tiered];
+
+    /// Canonical display/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HashTier::Fast => "fast",
+            HashTier::Cryptographic => "cryptographic",
+            HashTier::Tiered => "tiered",
+        }
+    }
+
+    /// Parse a CLI/env tier name.
+    pub fn parse(s: &str) -> Option<HashTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "fast" | "xxh3" => Some(HashTier::Fast),
+            "cryptographic" | "crypto" => Some(HashTier::Cryptographic),
+            "tiered" | "tier" => Some(HashTier::Tiered),
+            _ => None,
+        }
+    }
+
+    /// Tier from `FIVER_HASH_TIER` (the CI matrix lever), defaulting to
+    /// [`HashTier::Cryptographic`]. Unknown values fall back to the
+    /// default rather than erroring, mirroring `IoBackend::from_env`.
+    pub fn from_env() -> HashTier {
+        std::env::var("FIVER_HASH_TIER")
+            .ok()
+            .and_then(|v| HashTier::parse(&v))
+            .unwrap_or_default()
+    }
+
+    /// `"fast|cryptographic|tiered"` — for CLI usage strings.
+    pub fn names_joined() -> String {
+        Self::ALL.map(|t| t.name()).join("|")
     }
 }
 
@@ -129,7 +223,7 @@ mod tests {
             assert_eq!(HashAlgorithm::parse(alg.name()), Some(alg));
         }
         assert_eq!(HashAlgorithm::parse("nope"), None);
-        assert_eq!(HashAlgorithm::names_joined(), "md5|sha1|sha256|fvr256");
+        assert_eq!(HashAlgorithm::names_joined(), "md5|sha1|sha256|fvr256|xxh3-64|xxh3-128");
     }
 
     #[test]
@@ -138,12 +232,35 @@ mod tests {
         assert_eq!(HashAlgorithm::Sha1.hasher().digest_len(), 20);
         assert_eq!(HashAlgorithm::Sha256.hasher().digest_len(), 32);
         assert_eq!(HashAlgorithm::Fvr256.hasher().digest_len(), 32);
+        assert_eq!(HashAlgorithm::Xxh364.hasher().digest_len(), 8);
+        assert_eq!(HashAlgorithm::Xxh3128.hasher().digest_len(), 16);
     }
 
     #[test]
     fn relative_costs_ordered() {
         assert!(HashAlgorithm::Md5.relative_cost() < HashAlgorithm::Sha1.relative_cost());
         assert!(HashAlgorithm::Sha1.relative_cost() < HashAlgorithm::Sha256.relative_cost());
+        // The fast tier must be meaningfully cheaper than every
+        // cryptographic backend, or tiering would be pointless.
+        for alg in HashAlgorithm::ALL {
+            if !alg.is_fast_tier() {
+                assert!(
+                    HashAlgorithm::Xxh3128.relative_cost() < alg.relative_cost() / 2.0,
+                    "{}",
+                    alg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier_registry_roundtrip() {
+        for tier in HashTier::ALL {
+            assert_eq!(HashTier::parse(tier.name()), Some(tier));
+        }
+        assert_eq!(HashTier::parse("nope"), None);
+        assert_eq!(HashTier::default(), HashTier::Cryptographic);
+        assert_eq!(HashTier::names_joined(), "fast|cryptographic|tiered");
     }
 
     #[test]

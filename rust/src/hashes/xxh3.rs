@@ -1,0 +1,625 @@
+//! XXH3-64 / XXH3-128 — from-scratch port of the xxHash3 specification
+//! (https://github.com/Cyan4973/xxHash, public-domain reference), same
+//! no-new-crates discipline as the MD5/SHA/FVR-256 siblings.
+//!
+//! XXH3 is the *fast tier* of the tiered integrity plane: a
+//! non-cryptographic checksum running at close to memory speed, used for
+//! leaf and transport digests while a cryptographic [`super::HashAlgorithm`]
+//! anchors the Merkle root (see DESIGN.md, "Tiered hashing"). Only the
+//! seedless (seed = 0, default-secret) variant is implemented — tier
+//! selection never needs seeding, and the seedless path is the fast one.
+//!
+//! The streaming state mirrors the reference: inputs ≤ 240 bytes are
+//! buffered whole and dispatched to the length-stratified short paths at
+//! finalize; longer streams run the 8-lane accumulator over 64-byte
+//! stripes (16 stripes per 1024-byte block, scramble between blocks) with
+//! a 64-byte lookback for the final stripe. Digest bytes are emitted in
+//! the canonical (big-endian) order, matching `XXH64_canonicalFromHash` /
+//! `XXH128_canonicalFromHash`, so hex digests agree with every other
+//! xxHash implementation.
+
+use super::Hasher;
+
+const P32_1: u64 = 0x9E3779B1;
+const P32_2: u64 = 0x85EBCA77;
+const P32_3: u64 = 0xC2B2AE3D;
+const P64_1: u64 = 0x9E3779B185EBCA87;
+const P64_2: u64 = 0xC2B2AE3D27D4EB4F;
+const P64_3: u64 = 0x165667B19E3779F9;
+const P64_4: u64 = 0x85EBCA77C2B2AE63;
+const P64_5: u64 = 0x27D4EB2F165667C5;
+const PMX1: u64 = 0x165667919E3779F9;
+const PMX2: u64 = 0x9FB21C651E98DF25;
+
+/// The 192-byte default secret (`XXH3_kSecret`).
+const SECRET: [u8; 192] = [
+    0xb8, 0xfe, 0x6c, 0x39, 0x23, 0xa4, 0x4b, 0xbe, 0x7c, 0x01, 0x81, 0x2c, 0xf7, 0x21, 0xad,
+    0x1c, 0xde, 0xd4, 0x6d, 0xe9, 0x83, 0x90, 0x97, 0xdb, 0x72, 0x40, 0xa4, 0xa4, 0xb7, 0xb3,
+    0x67, 0x1f, 0xcb, 0x79, 0xe6, 0x4e, 0xcc, 0xc0, 0xe5, 0x78, 0x82, 0x5a, 0xd0, 0x7d, 0xcc,
+    0xff, 0x72, 0x21, 0xb8, 0x08, 0x46, 0x74, 0xf7, 0x43, 0x24, 0x8e, 0xe0, 0x35, 0x90, 0xe6,
+    0x81, 0x3a, 0x26, 0x4c, 0x3c, 0x28, 0x52, 0xbb, 0x91, 0xc3, 0x00, 0xcb, 0x88, 0xd0, 0x65,
+    0x8b, 0x1b, 0x53, 0x2e, 0xa3, 0x71, 0x64, 0x48, 0x97, 0xa2, 0x0d, 0xf9, 0x4e, 0x38, 0x19,
+    0xef, 0x46, 0xa9, 0xde, 0xac, 0xd8, 0xa8, 0xfa, 0x76, 0x3f, 0xe3, 0x9c, 0x34, 0x3f, 0xf9,
+    0xdc, 0xbb, 0xc7, 0xc7, 0x0b, 0x4f, 0x1d, 0x8a, 0x51, 0xe0, 0x4b, 0xcd, 0xb4, 0x59, 0x31,
+    0xc8, 0x9f, 0x7e, 0xc9, 0xd9, 0x78, 0x73, 0x64, 0xea, 0xc5, 0xac, 0x83, 0x34, 0xd3, 0xeb,
+    0xc3, 0xc5, 0x81, 0xa0, 0xff, 0xfa, 0x13, 0x63, 0xeb, 0x17, 0x0d, 0xdd, 0x51, 0xb7, 0xf0,
+    0xda, 0x49, 0xd3, 0x16, 0x55, 0x26, 0x29, 0xd4, 0x68, 0x9e, 0x2b, 0x16, 0xbe, 0x58, 0x7d,
+    0x47, 0xa1, 0xfc, 0x8f, 0xf8, 0xb8, 0xd1, 0x7a, 0xd0, 0x31, 0xce, 0x45, 0xcb, 0x3a, 0x8f,
+    0x95, 0x16, 0x04, 0x28, 0xaf, 0xd7, 0xfb, 0xca, 0xbb, 0x4b, 0x40, 0x7e,
+];
+
+/// Stripes per block with the default secret: `(192 - 64) / 8`.
+const STRIPES_PER_BLOCK: usize = 16;
+/// Secret offset of the final-stripe key (`secretLimit - 7`).
+const LAST_STRIPE_SECRET: usize = 192 - 64 - 7;
+/// Secret offset where the low-half merge keys start.
+const MERGE_SECRET_LO: usize = 11;
+/// Secret offset where the high-half merge keys start (128-bit only).
+const MERGE_SECRET_HI: usize = 192 - 64 - 11;
+/// Secret offset of the 129..=240 "midsize" rounds past the first eight.
+const MIDSIZE_SECRET: usize = 3;
+/// Secret offset of the 129..=240 last mix (64-bit path).
+const MIDSIZE_LAST_SECRET: usize = 136 - 17;
+
+#[inline]
+fn r32(b: &[u8], i: usize) -> u64 {
+    u32::from_le_bytes(b[i..i + 4].try_into().unwrap()) as u64
+}
+
+#[inline]
+fn r64(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i..i + 8].try_into().unwrap())
+}
+
+/// Full 64x64→128 multiply folded to 64 bits by XOR of the halves.
+#[inline]
+fn fold64(a: u64, b: u64) -> u64 {
+    let p = (a as u128) * (b as u128);
+    (p as u64) ^ ((p >> 64) as u64)
+}
+
+#[inline]
+fn xorshift(v: u64, s: u32) -> u64 {
+    v ^ (v >> s)
+}
+
+/// `XXH3_avalanche`: the fast final mix for well-mixed inputs.
+#[inline]
+fn avalanche(mut h: u64) -> u64 {
+    h = xorshift(h, 37);
+    h = h.wrapping_mul(PMX1);
+    xorshift(h, 32)
+}
+
+/// `XXH64_avalanche`: the classic XXH64 finalizer, used by the tiny paths.
+#[inline]
+fn avalanche64(mut h: u64) -> u64 {
+    h = xorshift(h, 33);
+    h = h.wrapping_mul(P64_2);
+    h = xorshift(h, 29);
+    h = h.wrapping_mul(P64_3);
+    xorshift(h, 32)
+}
+
+/// `XXH3_rrmxmx`: stronger finalizer for the 4..=8 byte path.
+#[inline]
+fn rrmxmx(mut h: u64, len: u64) -> u64 {
+    h ^= h.rotate_left(49) ^ h.rotate_left(24);
+    h = h.wrapping_mul(PMX2);
+    h ^= (h >> 35).wrapping_add(len);
+    h = h.wrapping_mul(PMX2);
+    xorshift(h, 28)
+}
+
+/// Mix 16 input bytes with 16 secret bytes into one folded word.
+#[inline]
+fn mix16(b: &[u8], off: usize, soff: usize) -> u64 {
+    fold64(r64(b, off) ^ r64(&SECRET, soff), r64(b, off + 8) ^ r64(&SECRET, soff + 8))
+}
+
+// ---- 64-bit short paths (len <= 240) ----
+
+fn len_0to16_64(b: &[u8]) -> u64 {
+    let n = b.len();
+    if n > 8 {
+        let lo = r64(b, 0) ^ (r64(&SECRET, 24) ^ r64(&SECRET, 32));
+        let hi = r64(b, n - 8) ^ (r64(&SECRET, 40) ^ r64(&SECRET, 48));
+        let acc = (n as u64)
+            .wrapping_add(lo.swap_bytes())
+            .wrapping_add(hi)
+            .wrapping_add(fold64(lo, hi));
+        avalanche(acc)
+    } else if n >= 4 {
+        let keyed = (r32(b, n - 4) | (r32(b, 0) << 32)) ^ (r64(&SECRET, 8) ^ r64(&SECRET, 16));
+        rrmxmx(keyed, n as u64)
+    } else if n > 0 {
+        let combined = ((b[0] as u64) << 16)
+            | ((b[n >> 1] as u64) << 24)
+            | (b[n - 1] as u64)
+            | ((n as u64) << 8);
+        avalanche64(combined ^ (r32(&SECRET, 0) ^ r32(&SECRET, 4)))
+    } else {
+        avalanche64(r64(&SECRET, 56) ^ r64(&SECRET, 64))
+    }
+}
+
+fn len_17to128_64(b: &[u8]) -> u64 {
+    let n = b.len();
+    let mut acc = (n as u64).wrapping_mul(P64_1);
+    if n > 32 {
+        if n > 64 {
+            if n > 96 {
+                acc = acc.wrapping_add(mix16(b, 48, 96));
+                acc = acc.wrapping_add(mix16(b, n - 64, 112));
+            }
+            acc = acc.wrapping_add(mix16(b, 32, 64));
+            acc = acc.wrapping_add(mix16(b, n - 48, 80));
+        }
+        acc = acc.wrapping_add(mix16(b, 16, 32));
+        acc = acc.wrapping_add(mix16(b, n - 32, 48));
+    }
+    acc = acc.wrapping_add(mix16(b, 0, 0));
+    acc = acc.wrapping_add(mix16(b, n - 16, 16));
+    avalanche(acc)
+}
+
+fn len_129to240_64(b: &[u8]) -> u64 {
+    let n = b.len();
+    let mut acc = (n as u64).wrapping_mul(P64_1);
+    for i in 0..8 {
+        acc = acc.wrapping_add(mix16(b, 16 * i, 16 * i));
+    }
+    acc = avalanche(acc);
+    for i in 8..n / 16 {
+        acc = acc.wrapping_add(mix16(b, 16 * i, 16 * (i - 8) + MIDSIZE_SECRET));
+    }
+    acc = acc.wrapping_add(mix16(b, n - 16, MIDSIZE_LAST_SECRET));
+    avalanche(acc)
+}
+
+// ---- 128-bit short paths (len <= 240) ----
+
+fn len_0to16_128(b: &[u8]) -> (u64, u64) {
+    let n = b.len();
+    if n > 8 {
+        let inl = r64(b, 0);
+        let mut inh = r64(b, n - 8);
+        let p = (inl ^ inh ^ (r64(&SECRET, 32) ^ r64(&SECRET, 40))) as u128 * P64_1 as u128;
+        let mut mlo = (p as u64).wrapping_add(((n as u64) - 1) << 54);
+        inh ^= r64(&SECRET, 48) ^ r64(&SECRET, 56);
+        let mut mhi = ((p >> 64) as u64)
+            .wrapping_add(inh)
+            .wrapping_add((inh & 0xFFFF_FFFF).wrapping_mul(P32_2 - 1));
+        mlo ^= mhi.swap_bytes();
+        let h = (mlo as u128) * (P64_2 as u128);
+        let hlo = h as u64;
+        mhi = ((h >> 64) as u64).wrapping_add(mhi.wrapping_mul(P64_2));
+        (avalanche(hlo), avalanche(mhi))
+    } else if n >= 4 {
+        let keyed = (r32(b, 0) | (r32(b, n - 4) << 32)) ^ (r64(&SECRET, 16) ^ r64(&SECRET, 24));
+        let p = (keyed as u128) * (P64_1.wrapping_add((n as u64) << 2) as u128);
+        let mut lo = p as u64;
+        let mut hi = ((p >> 64) as u64).wrapping_add(lo << 1);
+        lo ^= hi >> 3;
+        lo = xorshift(lo, 35);
+        lo = lo.wrapping_mul(PMX2);
+        lo = xorshift(lo, 28);
+        hi = avalanche(hi);
+        (lo, hi)
+    } else if n > 0 {
+        let combl = (((b[0] as u32) << 16)
+            | ((b[n >> 1] as u32) << 24)
+            | (b[n - 1] as u32)
+            | ((n as u32) << 8)) as u64;
+        let combh = (combl as u32).swap_bytes().rotate_left(13) as u64;
+        let lo = avalanche64(combl ^ (r32(&SECRET, 0) ^ r32(&SECRET, 4)));
+        let hi = avalanche64(combh ^ (r32(&SECRET, 8) ^ r32(&SECRET, 12)));
+        (lo, hi)
+    } else {
+        let lo = avalanche64(r64(&SECRET, 64) ^ r64(&SECRET, 72));
+        let hi = avalanche64(r64(&SECRET, 80) ^ r64(&SECRET, 88));
+        (lo, hi)
+    }
+}
+
+/// `XXH128_mix32B`: one 32-byte round of the midsize 128-bit paths.
+#[inline]
+fn mix32(acc: (u64, u64), b: &[u8], off1: usize, off2: usize, soff: usize) -> (u64, u64) {
+    let (mut al, mut ah) = acc;
+    al = al.wrapping_add(mix16(b, off1, soff));
+    al ^= r64(b, off2).wrapping_add(r64(b, off2 + 8));
+    ah = ah.wrapping_add(mix16(b, off2, soff + 16));
+    ah ^= r64(b, off1).wrapping_add(r64(b, off1 + 8));
+    (al, ah)
+}
+
+#[inline]
+fn fin128(al: u64, ah: u64, n: u64) -> (u64, u64) {
+    let lo = al.wrapping_add(ah);
+    let hi = al
+        .wrapping_mul(P64_1)
+        .wrapping_add(ah.wrapping_mul(P64_4))
+        .wrapping_add(n.wrapping_mul(P64_2));
+    (avalanche(lo), avalanche(hi).wrapping_neg())
+}
+
+fn len_17to128_128(b: &[u8]) -> (u64, u64) {
+    let n = b.len();
+    let mut acc = ((n as u64).wrapping_mul(P64_1), 0u64);
+    if n > 32 {
+        if n > 64 {
+            if n > 96 {
+                acc = mix32(acc, b, 48, n - 64, 96);
+            }
+            acc = mix32(acc, b, 32, n - 48, 64);
+        }
+        acc = mix32(acc, b, 16, n - 32, 32);
+    }
+    acc = mix32(acc, b, 0, n - 16, 0);
+    fin128(acc.0, acc.1, n as u64)
+}
+
+fn len_129to240_128(b: &[u8]) -> (u64, u64) {
+    let n = b.len();
+    let mut acc = ((n as u64).wrapping_mul(P64_1), 0u64);
+    for i in 0..4 {
+        acc = mix32(acc, b, 32 * i, 32 * i + 16, 32 * i);
+    }
+    acc = (avalanche(acc.0), avalanche(acc.1));
+    for i in 4..n / 32 {
+        acc = mix32(acc, b, 32 * i, 32 * i + 16, MIDSIZE_SECRET + 32 * (i - 4));
+    }
+    acc = mix32(acc, b, n - 16, n - 32, MIDSIZE_LAST_SECRET - 16);
+    fin128(acc.0, acc.1, n as u64)
+}
+
+// ---- long path (len > 240) ----
+
+const ACC_INIT: [u64; 8] = [P32_3, P64_1, P64_2, P64_3, P64_4, P32_2, P64_5, P32_1];
+
+/// `XXH3_accumulate_512`: fold one 64-byte stripe into the accumulators
+/// using the secret slice starting at `soff`.
+#[inline]
+fn accumulate(acc: &mut [u64; 8], stripe: &[u8], soff: usize) {
+    for i in 0..8 {
+        let dv = r64(stripe, 8 * i);
+        let dk = dv ^ r64(&SECRET, soff + 8 * i);
+        acc[i ^ 1] = acc[i ^ 1].wrapping_add(dv);
+        acc[i] = acc[i].wrapping_add((dk & 0xFFFF_FFFF).wrapping_mul(dk >> 32));
+    }
+}
+
+/// `XXH3_scrambleAcc`: re-randomize the accumulators at block boundaries.
+#[inline]
+fn scramble(acc: &mut [u64; 8]) {
+    for (i, a) in acc.iter_mut().enumerate() {
+        let mut v = xorshift(*a, 47);
+        v ^= r64(&SECRET, 128 + 8 * i);
+        *a = v.wrapping_mul(P32_1);
+    }
+}
+
+/// One full stripe, advancing the in-block counter and scrambling at the
+/// block boundary. Free function so callers can borrow `buf` alongside.
+#[inline]
+fn stripe(acc: &mut [u64; 8], in_block: &mut usize, input: &[u8]) {
+    accumulate(acc, input, 8 * *in_block);
+    *in_block += 1;
+    if *in_block == STRIPES_PER_BLOCK {
+        scramble(acc);
+        *in_block = 0;
+    }
+}
+
+/// `XXH3_mergeAccs` over the four accumulator pairs.
+fn merge(acc: &[u64; 8], soff: usize, start: u64) -> u64 {
+    let mut r = start;
+    for i in 0..4 {
+        r = r.wrapping_add(fold64(
+            acc[2 * i] ^ r64(&SECRET, soff + 16 * i),
+            acc[2 * i + 1] ^ r64(&SECRET, soff + 16 * i + 8),
+        ));
+    }
+    avalanche(r)
+}
+
+/// Shared streaming core for both output widths.
+///
+/// Invariant: while `total <= 240` every byte seen so far sits in `buf`
+/// (short paths need the whole input). Beyond 240 bytes, stripes are
+/// consumed greedily but the last 1..=64 bytes always stay buffered so the
+/// stripe/scramble schedule matches the one-shot reference; `last64`
+/// tracks the trailing 64 bytes of the whole stream for the final stripe.
+#[derive(Clone)]
+struct Core {
+    buf: Vec<u8>,
+    total: u64,
+    acc: [u64; 8],
+    in_block: usize,
+    last64: [u8; 64],
+}
+
+impl Core {
+    fn new() -> Core {
+        Core { buf: Vec::new(), total: 0, acc: ACC_INIT, in_block: 0, last64: [0u8; 64] }
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+        self.total = 0;
+        self.acc = ACC_INIT;
+        self.in_block = 0;
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.total += data.len() as u64;
+        if self.total > 240 && self.buf.is_empty() && data.len() >= 65 {
+            // Fast path (typical one-shot leaf): stripe straight from the
+            // caller's slice, buffering only the 1..=64-byte tail.
+            let consumable = (data.len() - 1) / 64 * 64;
+            let mut off = 0;
+            while off < consumable {
+                stripe(&mut self.acc, &mut self.in_block, &data[off..off + 64]);
+                off += 64;
+            }
+            self.buf.extend_from_slice(&data[consumable..]);
+        } else {
+            self.buf.extend_from_slice(data);
+            if self.total > 240 && self.buf.len() >= 65 {
+                let n = self.buf.len();
+                let consumable = (n - 1) / 64 * 64;
+                let mut off = 0;
+                while off < consumable {
+                    stripe(&mut self.acc, &mut self.in_block, &self.buf[off..off + 64]);
+                    off += 64;
+                }
+                self.buf.copy_within(consumable.., 0);
+                self.buf.truncate(n - consumable);
+            }
+        }
+        if data.len() >= 64 {
+            self.last64.copy_from_slice(&data[data.len() - 64..]);
+        } else if !data.is_empty() {
+            let k = data.len();
+            self.last64.copy_within(k.., 0);
+            self.last64[64 - k..].copy_from_slice(data);
+        }
+    }
+
+    /// Long-path finalization: the last stripe over the trailing 64 bytes
+    /// with the dedicated secret offset, then the merge(s).
+    fn long_digest(&self, wide: bool) -> (u64, u64) {
+        debug_assert!(self.total > 240);
+        let mut acc = self.acc;
+        accumulate(&mut acc, &self.last64, LAST_STRIPE_SECRET);
+        let lo = merge(&acc, MERGE_SECRET_LO, self.total.wrapping_mul(P64_1));
+        if !wide {
+            return (lo, 0);
+        }
+        let hi = merge(&acc, MERGE_SECRET_HI, !(self.total.wrapping_mul(P64_2)));
+        (lo, hi)
+    }
+
+    fn digest64(&self) -> u64 {
+        if self.total <= 240 {
+            let b = &self.buf[..];
+            match b.len() {
+                0..=16 => len_0to16_64(b),
+                17..=128 => len_17to128_64(b),
+                _ => len_129to240_64(b),
+            }
+        } else {
+            self.long_digest(false).0
+        }
+    }
+
+    fn digest128(&self) -> (u64, u64) {
+        if self.total <= 240 {
+            let b = &self.buf[..];
+            match b.len() {
+                0..=16 => len_0to16_128(b),
+                17..=128 => len_17to128_128(b),
+                _ => len_129to240_128(b),
+            }
+        } else {
+            self.long_digest(true)
+        }
+    }
+}
+
+/// Streaming XXH3-64 (8-byte digest, canonical big-endian output).
+#[derive(Clone)]
+pub struct Xxh364 {
+    core: Core,
+}
+
+impl Xxh364 {
+    /// Fresh hasher (seed 0, default secret).
+    pub fn new() -> Xxh364 {
+        Xxh364 { core: Core::new() }
+    }
+}
+
+impl Default for Xxh364 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher for Xxh364 {
+    fn update(&mut self, data: &[u8]) {
+        self.core.update(data);
+    }
+
+    fn finalize(&mut self) -> Vec<u8> {
+        self.core.digest64().to_be_bytes().to_vec()
+    }
+
+    fn digest_len(&self) -> usize {
+        8
+    }
+
+    fn reset(&mut self) {
+        self.core.reset();
+    }
+}
+
+/// Streaming XXH3-128 (16-byte digest, canonical big-endian output).
+#[derive(Clone)]
+pub struct Xxh3128 {
+    core: Core,
+}
+
+impl Xxh3128 {
+    /// Fresh hasher (seed 0, default secret).
+    pub fn new() -> Xxh3128 {
+        Xxh3128 { core: Core::new() }
+    }
+}
+
+impl Default for Xxh3128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher for Xxh3128 {
+    fn update(&mut self, data: &[u8]) {
+        self.core.update(data);
+    }
+
+    fn finalize(&mut self) -> Vec<u8> {
+        let (lo, hi) = self.core.digest128();
+        let v = ((hi as u128) << 64) | lo as u128;
+        v.to_be_bytes().to_vec()
+    }
+
+    fn digest_len(&self) -> usize {
+        16
+    }
+
+    fn reset(&mut self) {
+        self.core.reset();
+    }
+}
+
+/// One-shot XXH3-64 of a byte slice.
+pub fn xxh3_64(data: &[u8]) -> u64 {
+    let mut c = Core::new();
+    c.update(data);
+    c.digest64()
+}
+
+/// One-shot XXH3-128 of a byte slice (canonical value: high half in the
+/// upper 64 bits).
+pub fn xxh3_128(data: &[u8]) -> u128 {
+    let mut c = Core::new();
+    c.update(data);
+    let (lo, hi) = c.digest128();
+    ((hi as u128) << 64) | lo as u128
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    /// Deterministic test pattern, independent of input length.
+    fn pat(n: usize) -> Vec<u8> {
+        (0..n).map(|i| ((i * 131 + 7) & 0xff) as u8).collect()
+    }
+
+    /// Reference vectors generated with python-xxhash 3.6.0 (the C
+    /// reference implementation) over `pat(n)`: (len, xxh3_64, xxh3_128).
+    const VECTORS: &[(usize, &str, &str)] = &[
+        (0, "2d06800538d394c2", "99aa06d3014798d86001c324468d497f"),
+        (1, "4c5cca45d0f4811f", "495b62073ef70ca44c5cca45d0f4811f"),
+        (2, "29c60963cbfa4e6e", "f1b5eec902a1eb5e29c60963cbfa4e6e"),
+        (3, "6e3e2670e61106ac", "390cdc5b4a895dd76e3e2670e61106ac"),
+        (4, "5c4c63133443d03f", "aa6e2f274640a3f43d668af6f2a44d77"),
+        (6, "71655f8cab99dd4e", "6003580bfd3c45e9536f7a3ebed5ff6f"),
+        (8, "f9fd4dd0b04d78f5", "6a86a3bda6af4e3d61ddbe7f31a6100d"),
+        (9, "7c20df9712c26edf", "664c7ca18afd62558c7b67fd458a936b"),
+        (12, "16d2dff54dc2ee45", "dab57051afe30b1dcdeba3d6707f8f04"),
+        (16, "86abf6baccea0858", "7f9a218b0425449ae2ce54a7c19c730d"),
+        (17, "b58bf5dc5022d071", "66fc23f6439dbd778d96ef110fcdebb4"),
+        (32, "e3712ed84c04a66e", "49a11ee743d6d342fd357cf6cb2dda18"),
+        (63, "30ca01f63dcc223b", "943c9c8db76d06239ede94f828604a13"),
+        (64, "1291d2d4042330dd", "e0faf20e0e0fe0ddba7e015a54f14be1"),
+        (96, "81296929fc063365", "fb78ac185ef554438b8720f565dcf40c"),
+        (100, "5da67eac6d4093d5", "76b536586de98b82580b061a98a5a9b4"),
+        (128, "10d17f72c0ccba41", "aec730751478556cff361dec1385710a"),
+        (129, "1648bdc3db49d1a2", "98cd36ccbb5579264545b3a09738e31a"),
+        (130, "c65f0f545fa96def", "7fa91940f13fed8f51f93bd2e6f2a3cb"),
+        (163, "a171128849a1676f", "699f85f564d11fafcd25509fe8f6209e"),
+        (192, "daf64f63dc7d5e36", "e9e3bb05b10df5c44079b989e727fb44"),
+        (240, "b6cfaf343fab81e6", "5293e17bf553903d3f2c53e72293711f"),
+        (241, "956cae592c67279e", "b53840fe3fedf161956cae592c67279e"),
+        (256, "b15e550733c5dfac", "d0d2829a226d0edbb15e550733c5dfac"),
+        (511, "5a17da924907228a", "b3324be14e173e725a17da924907228a"),
+        (512, "a0e9790eb93990d7", "7509d702d4519576a0e9790eb93990d7"),
+        (1023, "a94ffcd2254368e4", "0990de11f2b13621a94ffcd2254368e4"),
+        (1024, "70bd377d9574f4bb", "f69630613f24324d70bd377d9574f4bb"),
+        (1025, "66c4487c41e127a7", "621af7b8277effa466c4487c41e127a7"),
+        (2048, "8b46caa67dab3a30", "56b77f207158a2ba8b46caa67dab3a30"),
+        (4096, "9ddd66c14af0daff", "3e0ff38fa88a55ea9ddd66c14af0daff"),
+        (65536, "04404b28125b4786", "ed19e9be90ac5adc04404b28125b4786"),
+        (100000, "14ce8d6fc2c4868b", "e9e46da59b77e42314ce8d6fc2c4868b"),
+    ];
+
+    #[test]
+    fn reference_vectors_oneshot() {
+        for &(n, h64, h128) in VECTORS {
+            let data = pat(n);
+            assert_eq!(hex::encode(&xxh3_64(&data).to_be_bytes()), h64, "xxh3-64 len {n}");
+            assert_eq!(hex::encode(&xxh3_128(&data).to_be_bytes()), h128, "xxh3-128 len {n}");
+        }
+    }
+
+    #[test]
+    fn reference_vectors_streaming() {
+        // Chunk sizes chosen to cross every internal boundary: sub-stripe,
+        // stripe, short/long threshold, block.
+        for chunk in [1usize, 3, 37, 63, 64, 65, 240, 241, 1000] {
+            for &(n, h64, h128) in VECTORS {
+                let data = pat(n);
+                let mut a = Xxh364::new();
+                let mut b = Xxh3128::new();
+                for part in data.chunks(chunk) {
+                    a.update(part);
+                    b.update(part);
+                }
+                assert_eq!(hex::encode(&a.finalize()), h64, "xxh3-64 len {n} chunk {chunk}");
+                assert_eq!(hex::encode(&b.finalize()), h128, "xxh3-128 len {n} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_ascii_vectors() {
+        assert_eq!(xxh3_64(b""), 0x2d06800538d394c2);
+        assert_eq!(xxh3_64(b"abc"), 0x78af5f94892f3950);
+        assert_eq!(xxh3_128(b""), 0x99aa06d3014798d86001c324468d497f);
+        assert_eq!(xxh3_128(b"abc"), 0x06b05ab6733a618578af5f94892f3950);
+    }
+
+    #[test]
+    fn long_path_low_half_matches_xxh3_64() {
+        // Structural property of the spec: beyond 240 bytes the 128-bit
+        // digest's low half is exactly the 64-bit digest.
+        for n in [241usize, 1024, 1025, 4096, 100000] {
+            let data = pat(n);
+            assert_eq!(xxh3_128(&data) as u64, xxh3_64(&data), "len {n}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_all_state() {
+        let mut h = Xxh3128::new();
+        h.update(&pat(100000));
+        let _ = h.finalize();
+        h.reset();
+        h.update(b"abc");
+        assert_eq!(hex::encode(&h.finalize()), format!("{:032x}", xxh3_128(b"abc")));
+    }
+}

@@ -18,6 +18,22 @@
 //! sets its repair granularity (default 64 KiB). Both endpoints must
 //! agree on the algorithm and leaf size.
 //!
+//! Tiered hashing (see `fiver::hashes` and DESIGN.md §Tiered hashing):
+//!
+//! * `--hash-tier fast|cryptographic|tiered` — which hash family digests
+//!   what. `cryptographic` (default) uses the `--hash` algorithm
+//!   everywhere, as before. `tiered` computes leaf, unit and journal
+//!   digests with xxHash3-128 (~an order of magnitude faster than SHA)
+//!   while Merkle interior nodes and roots keep the cryptographic
+//!   `--hash` algorithm — transfers stop being hash-bound, yet every
+//!   exchanged root stays a cryptographic digest over the leaf tree
+//!   (single-leaf files fold once so even they anchor cryptographically).
+//!   `fast` uses xxHash3-128 for everything (integrity against line
+//!   errors only — no adversarial protection). Both endpoints must agree,
+//!   like `--leaf-size`; journals written under another tier decline
+//!   (re-journal) instead of erroring. The `FIVER_HASH_TIER` environment
+//!   variable sets the default.
+//!
 //! Data-plane knobs (zero-copy buffer pool; see
 //! `fiver::coordinator::bufpool`):
 //!
@@ -175,6 +191,12 @@ fn session_config(args: &Args) -> Result<SessionConfig> {
         None => fiver::storage::IoBackend::from_env(),
     };
     cfg.direct_threshold = args.opt_u64("direct-threshold", cfg.direct_threshold);
+    cfg.hash_tier = match args.opt("hash-tier") {
+        Some(s) => fiver::hashes::HashTier::parse(s).with_context(|| {
+            format!("unknown --hash-tier ({})", fiver::hashes::HashTier::names_joined())
+        })?,
+        None => fiver::hashes::HashTier::from_env(),
+    };
     cfg.journal_dir = args.opt("journal-dir").map(|d| Path::new(d).to_path_buf());
     cfg.resume = args.flag("resume");
     cfg.delta = args.flag("delta");
@@ -281,7 +303,7 @@ fn finish_obs(
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[
-        "data", "ctrl", "dir", "alg", "hash", "buf-size", "buffer-size", "block-size",
+        "data", "ctrl", "dir", "alg", "hash", "hash-tier", "buf-size", "buffer-size", "block-size",
         "queue-capacity", "hybrid-threshold", "leaf-size", "pool-buffers", "pool-max-buffers",
         "io-backend", "direct-threshold", "files", "size", "faults", "seed", "concurrency",
         "parallel", "hash-workers", "batch-threshold", "batch-bytes", "journal-dir", "crash-after",
@@ -568,6 +590,9 @@ fn print_engine_report(e: &fiver::coordinator::scheduler::EngineReport) {
 
 fn print_report(r: &fiver::coordinator::TransferReport) {
     let throughput = r.bytes_sent as f64 * 8.0 / r.elapsed_secs;
+    if !r.hash_tier.is_empty() && r.hash_tier != "cryptographic" {
+        println!("hash tier: {}", r.hash_tier);
+    }
     println!(
         "{}: {} files, {} in {} ({}); {} failures detected, {} resent",
         r.algorithm,
@@ -652,6 +677,12 @@ fn print_report(r: &fiver::coordinator::TransferReport) {
             fmt::bytes(r.bytes_skipped_delta),
             r.leaves_clean,
             r.leaves_dirty,
+        );
+    }
+    if r.delta_scans_skipped > 0 {
+        println!(
+            "delta: {} rolling scans skipped (sender signature cache)",
+            r.delta_scans_skipped,
         );
     }
 }

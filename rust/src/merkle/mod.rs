@@ -19,9 +19,19 @@
 //! backend the transfer session uses, so MD5/SHA-1/SHA-256/FVR-256 and the
 //! XLA-backed hasher all work unchanged.
 //!
-//! Each level stores its digests as one contiguous byte vec (fixed
-//! `digest_len` stride) — a 1 TB file at 64 KiB leaves holds ~32M nodes,
-//! and per-node `Vec`s would triple the memory and scatter the cache.
+//! Tiered composition (BLAKE3-style): the leaf level and the interior
+//! levels may use *different* hash backends — fast XXH3-128 leaves cut
+//! from the byte stream, folded under a cryptographic root. Leaf hashing
+//! is O(file bytes) while interior hashing is O(leaves x digest width), so
+//! the crypto root costs next to nothing and restores the trust anchor the
+//! fast tier alone lacks (DESIGN.md, "Tiered hashing"). Consequently a
+//! tree has two strides: [`MerkleTree::leaf_len`] for level 0 and
+//! [`MerkleTree::node_len`] for every level above; `rooted` trees fold
+//! even a single leaf once more so the root is always a node-tier digest.
+//!
+//! Each level stores its digests as one contiguous byte vec (fixed stride
+//! per level) — a 1 TB file at 64 KiB leaves holds ~32M nodes, and
+//! per-node `Vec`s would triple the memory and scatter the cache.
 
 use crate::hashes::Hasher;
 
@@ -59,36 +69,53 @@ pub fn descent_rounds(leaves: u64) -> u32 {
 pub struct MerkleTree {
     leaf_size: u64,
     file_size: u64,
-    digest_len: usize,
+    /// Digest stride of level 0 (the leaf tier).
+    leaf_len: usize,
+    /// Digest stride of every level above 0 (the node tier).
+    node_len: usize,
+    /// Whether a single-leaf tree still folds into a node-tier root.
+    rooted: bool,
     /// `levels[0]` = leaf digests, …, `levels.last()` = the root — each
-    /// level one contiguous byte vec with `digest_len` stride.
+    /// level one contiguous byte vec with `level_len(level)` stride.
     levels: Vec<Vec<u8>>,
 }
 
 impl MerkleTree {
     /// Build a tree from precomputed leaf digests (concatenated with
-    /// `digest_len` stride).
+    /// `leaf_len` stride). Interior nodes are hashed with `node_hasher`,
+    /// whose digest width becomes the node-tier stride — pass the same
+    /// backend that cut the leaves for a uniform tree, or the
+    /// cryptographic backend over fast leaves for a tiered one. `rooted`
+    /// forces at least one fold, so even a single-leaf tree's root is a
+    /// node-tier digest (required for the tiered trust anchor; uniform
+    /// callers pass `false` and keep the historical leaf-is-root shape).
     pub fn from_leaves(
         leaf_size: u64,
         file_size: u64,
-        digest_len: usize,
+        leaf_len: usize,
         leaves: Vec<u8>,
-        hasher: &DigestFactory,
+        node_hasher: &DigestFactory,
+        rooted: bool,
     ) -> MerkleTree {
-        assert!(digest_len > 0 && !leaves.is_empty(), "a tree needs at least one leaf");
-        assert!(leaves.len() % digest_len == 0, "ragged leaf digests");
-        let mut tree = MerkleTree { leaf_size, file_size, digest_len, levels: vec![leaves] };
-        tree.build_internal(hasher);
+        assert!(leaf_len > 0 && !leaves.is_empty(), "a tree needs at least one leaf");
+        assert!(leaves.len() % leaf_len == 0, "ragged leaf digests");
+        let node_len = node_hasher().digest_len();
+        let mut tree =
+            MerkleTree { leaf_size, file_size, leaf_len, node_len, rooted, levels: vec![leaves] };
+        tree.build_internal(node_hasher);
         tree
     }
 
     fn build_internal(&mut self, hasher: &DigestFactory) {
         self.levels.truncate(1);
-        let dlen = self.digest_len;
         let mut h = hasher();
-        while self.levels.last().unwrap().len() > dlen {
+        while self.level_width(self.levels.len() - 1) > 1
+            || (self.rooted && self.levels.len() == 1)
+        {
+            let dlen = self.level_len(self.levels.len() - 1);
             let below = self.levels.last().unwrap();
-            let mut above = Vec::with_capacity((below.len() / dlen).div_ceil(2) * dlen);
+            let mut above =
+                Vec::with_capacity((below.len() / dlen).div_ceil(2) * self.node_len);
             for pair in below.chunks(2 * dlen) {
                 h.reset();
                 h.update(pair);
@@ -98,14 +125,14 @@ impl MerkleTree {
         }
     }
 
-    /// Number of levels (1 for a single-leaf tree).
+    /// Number of levels (1 for a single-leaf unrooted tree).
     pub fn height(&self) -> usize {
         self.levels.len()
     }
 
     /// Number of leaves.
     pub fn leaf_count(&self) -> usize {
-        self.levels[0].len() / self.digest_len
+        self.levels[0].len() / self.leaf_len
     }
 
     /// Leaf size in bytes.
@@ -118,9 +145,25 @@ impl MerkleTree {
         self.file_size
     }
 
-    /// Digest width in bytes.
-    pub fn digest_len(&self) -> usize {
-        self.digest_len
+    /// Digest width of the leaf level (level 0).
+    pub fn leaf_len(&self) -> usize {
+        self.leaf_len
+    }
+
+    /// Digest width of the interior/root levels.
+    pub fn node_len(&self) -> usize {
+        self.node_len
+    }
+
+    /// Digest stride at `level` — `leaf_len` at level 0, `node_len`
+    /// above. Every consumer parsing node payloads must use the width of
+    /// the level it is reading; a tiered tree has two different ones.
+    pub fn level_len(&self, level: usize) -> usize {
+        if level == 0 {
+            self.leaf_len
+        } else {
+            self.node_len
+        }
     }
 
     /// The root digest.
@@ -130,22 +173,25 @@ impl MerkleTree {
 
     /// Node count at `level` (0 = leaves).
     pub fn level_width(&self, level: usize) -> usize {
-        self.levels.get(level).map_or(0, |l| l.len() / self.digest_len)
+        let stride = self.level_len(level);
+        self.levels.get(level).map_or(0, |l| l.len() / stride)
     }
 
     /// Digest of node `idx` at `level` (0 = leaves).
     pub fn node(&self, level: usize, idx: usize) -> &[u8] {
-        &self.levels[level][idx * self.digest_len..(idx + 1) * self.digest_len]
+        let stride = self.level_len(level);
+        &self.levels[level][idx * stride..(idx + 1) * stride]
     }
 
     /// Concatenated digests of `[start, start+count)` at `level`, clipped
     /// to the level width — the wire payload of a node-range response.
     pub fn nodes_concat(&self, level: usize, start: usize, count: usize) -> Vec<u8> {
         let Some(nodes) = self.levels.get(level) else { return Vec::new() };
-        let width = nodes.len() / self.digest_len;
+        let stride = self.level_len(level);
+        let width = nodes.len() / stride;
         let end = start.saturating_add(count).min(width);
         let start = start.min(end);
-        nodes[start * self.digest_len..end * self.digest_len].to_vec()
+        nodes[start * stride..end * stride].to_vec()
     }
 
     /// Byte range `(offset, len)` of leaf `idx` in the file.
@@ -167,32 +213,35 @@ impl MerkleTree {
     /// Replace leaf `idx`'s digest (call [`MerkleTree::recompute_paths`]
     /// afterwards to restore internal-node consistency).
     pub fn set_leaf(&mut self, idx: usize, digest: Vec<u8>) {
-        assert_eq!(digest.len(), self.digest_len, "digest width mismatch");
-        let dlen = self.digest_len;
+        assert_eq!(digest.len(), self.leaf_len, "digest width mismatch");
+        let dlen = self.leaf_len;
         self.levels[0][idx * dlen..(idx + 1) * dlen].copy_from_slice(&digest);
     }
 
     /// Recompute only the root-ward paths of `dirty` leaf indices —
-    /// O(k log n) combines instead of an O(n) rebuild.
+    /// O(k log n) combines instead of an O(n) rebuild. `hasher` must be
+    /// the node-tier backend (the one `from_leaves` folded with).
     pub fn recompute_paths(&mut self, dirty: &[usize], hasher: &DigestFactory) {
         if dirty.is_empty() {
             return;
         }
-        let dlen = self.digest_len;
         let mut h = hasher();
         let mut idxs: Vec<usize> = dirty.to_vec();
         idxs.sort_unstable();
         idxs.dedup();
         for level in 0..self.levels.len() - 1 {
+            let child_len = self.level_len(level);
+            let node_len = self.node_len;
             let mut parents: Vec<usize> = idxs.iter().map(|i| i / 2).collect();
             parents.dedup();
             for &p in &parents {
-                let lo = 2 * p * dlen;
-                let hi = (lo + 2 * dlen).min(self.levels[level].len());
+                let lo = 2 * p * child_len;
+                let hi = (lo + 2 * child_len).min(self.levels[level].len());
                 h.reset();
                 h.update(&self.levels[level][lo..hi]);
                 let parent = h.finalize();
-                self.levels[level + 1][p * dlen..(p + 1) * dlen].copy_from_slice(&parent);
+                self.levels[level + 1][p * node_len..(p + 1) * node_len]
+                    .copy_from_slice(&parent);
             }
             idxs = parents;
         }
@@ -201,7 +250,7 @@ impl MerkleTree {
     /// Leaf indices where the two trees disagree (helper for local diffing
     /// and tests; the wire protocol does the same search remotely).
     pub fn diff_leaves(&self, other: &MerkleTree) -> Vec<usize> {
-        let dlen = self.digest_len;
+        let dlen = self.leaf_len;
         (0..self.leaf_count())
             .filter(|&i| other.levels[0].get(i * dlen..(i + 1) * dlen) != Some(self.node(0, i)))
             .collect()
@@ -210,11 +259,18 @@ impl MerkleTree {
 
 /// Streaming tree builder: absorbs the byte stream in arbitrary buffer
 /// sizes (exactly as it drains from the FIVER shared queue), cutting leaf
-/// digests at `leaf_size` boundaries with a single reused hasher.
+/// digests at `leaf_size` boundaries with a single reused hasher. By
+/// default interior nodes fold with the same backend as the leaves; a
+/// tiered builder ([`MerkleBuilder::with_tree_hasher`]) folds them with a
+/// separate (cryptographic) backend instead.
 pub struct MerkleBuilder {
     leaf_size: u64,
     digest_len: usize,
     factory: DigestFactory,
+    /// Backend folding interior nodes; `None` = same as the leaf factory.
+    node_factory: Option<DigestFactory>,
+    /// Fold even a single leaf into a node-tier root (tiered trees).
+    rooted: bool,
     hasher: Box<dyn Hasher>,
     /// Bytes absorbed into the current (open) leaf.
     filled: u64,
@@ -258,11 +314,23 @@ impl MerkleBuilder {
             leaf_size,
             digest_len,
             factory,
+            node_factory: None,
+            rooted: false,
             hasher,
             filled: 0,
             total: 0,
             leaves: Vec::with_capacity(reserve),
         }
+    }
+
+    /// Fold interior nodes (and the root) with `node_factory` instead of
+    /// the leaf backend; `rooted` additionally forces single-leaf trees to
+    /// fold once, so the root is always a node-tier digest. This is the
+    /// tiered-hashing composition: fast leaves under a cryptographic root.
+    pub fn with_tree_hasher(mut self, node_factory: DigestFactory, rooted: bool) -> MerkleBuilder {
+        self.node_factory = Some(node_factory);
+        self.rooted = rooted;
+        self
     }
 
     /// A builder seeded with precomputed digests of the stream's first
@@ -289,6 +357,8 @@ impl MerkleBuilder {
             leaf_size,
             digest_len,
             factory,
+            node_factory: None,
+            rooted: false,
             hasher,
             filled: 0,
             total: prefix_bytes,
@@ -322,12 +392,14 @@ impl MerkleBuilder {
         if self.filled > 0 || self.leaves.is_empty() {
             self.leaves.extend_from_slice(&self.hasher.finalize());
         }
+        let node_factory = self.node_factory.as_ref().unwrap_or(&self.factory);
         MerkleTree::from_leaves(
             self.leaf_size,
             self.total,
             self.digest_len,
             self.leaves,
-            &self.factory,
+            node_factory,
+            self.rooted,
         )
     }
 }
@@ -456,8 +528,8 @@ mod tests {
         let t = build(&vec![1u8; 5000], 1000, HashAlgorithm::Md5, 500);
         assert_eq!(t.level_width(0), 5);
         let all = t.nodes_concat(0, 0, 100);
-        assert_eq!(all.len(), 5 * t.digest_len());
-        assert_eq!(t.nodes_concat(0, 4, 2).len(), t.digest_len());
+        assert_eq!(all.len(), 5 * t.leaf_len());
+        assert_eq!(t.nodes_concat(0, 4, 2).len(), t.leaf_len());
         assert!(t.nodes_concat(0, 9, 2).is_empty());
         assert!(t.nodes_concat(99, 0, 2).is_empty());
     }
@@ -473,7 +545,7 @@ mod tests {
         let full = build(&data, 4096, HashAlgorithm::Md5, 1234);
         for k in [1usize, 5, 11] {
             let cut = k * 4096;
-            let dlen = full.digest_len();
+            let dlen = full.leaf_len();
             let prefix = full.levels[0][..k * dlen].to_vec();
             let mut b = MerkleBuilder::with_prefix(4096, prefix, cut as u64, f.clone());
             for part in data[cut..].chunks(999) {
@@ -493,5 +565,75 @@ mod tests {
         // node is x would collide.
         let t = build(&vec![7u8; 3000], 1000, HashAlgorithm::Md5, 1000);
         assert_ne!(t.node(1, 1), t.node(0, 2));
+    }
+
+    fn build_tiered(data: &[u8], leaf: u64, chunk: usize) -> MerkleTree {
+        let mut b = MerkleBuilder::new(leaf, factory(HashAlgorithm::Xxh3128))
+            .with_tree_hasher(factory(HashAlgorithm::Sha256), true);
+        for part in data.chunks(chunk.max(1)) {
+            b.update(part);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn tiered_tree_has_two_strides_and_crypto_root() {
+        let mut data = vec![0u8; 9000];
+        SplitMix64::new(5).fill_bytes(&mut data);
+        let t = build_tiered(&data, 1000, 777);
+        assert_eq!(t.leaf_len(), 16, "xxh3-128 leaves");
+        assert_eq!(t.node_len(), 32, "sha256 interior");
+        assert_eq!(t.level_len(0), 16);
+        for level in 1..t.height() {
+            assert_eq!(t.level_len(level), 32);
+        }
+        assert_eq!(t.root().len(), 32);
+        assert_eq!(t.leaf_count(), 9);
+        // Same shape as a uniform tree over 9 leaves.
+        assert_eq!(t.level_width(1), 5);
+        assert_eq!(t.height(), 5);
+        // Building twice is deterministic and chunk-independent.
+        assert_eq!(t.root(), build_tiered(&data, 1000, 9000).root());
+    }
+
+    #[test]
+    fn tiered_single_leaf_still_gets_crypto_root() {
+        // A rooted tree folds even one leaf: the root must be node-tier,
+        // or small files would lose the cryptographic anchor entirely.
+        let t = build_tiered(b"tiny", 1024, 4);
+        assert_eq!(t.leaf_count(), 1);
+        assert_eq!(t.height(), 2);
+        assert_eq!(t.node(0, 0).len(), 16);
+        assert_eq!(t.root().len(), 32);
+        // An empty file folds the same way.
+        let e = build_tiered(&[], 1024, 1);
+        assert_eq!(e.height(), 2);
+        assert_eq!(e.root().len(), 32);
+        assert_ne!(e.root(), t.root());
+    }
+
+    #[test]
+    fn tiered_recompute_paths_matches_full_rebuild() {
+        let mut data = vec![0u8; 50_000];
+        SplitMix64::new(13).fill_bytes(&mut data);
+        let mut t = build_tiered(&data, 1000, 1234);
+        data[500] ^= 1;
+        data[25_250] ^= 2;
+        data[49_999] ^= 4;
+        let fresh = build_tiered(&data, 1000, 1234);
+        assert_eq!(t.diff_leaves(&fresh), vec![0, 25, 49]);
+        for leaf in [0usize, 25, 49] {
+            let (off, len) = t.leaf_range(leaf);
+            let mut h = HashAlgorithm::Xxh3128.hasher();
+            h.update(&data[off as usize..(off + len) as usize]);
+            t.set_leaf(leaf, h.finalize());
+        }
+        t.recompute_paths(&[0, 25, 49], &factory(HashAlgorithm::Sha256));
+        assert_eq!(t.root(), fresh.root());
+        for level in 0..t.height() {
+            for i in 0..t.level_width(level) {
+                assert_eq!(t.node(level, i), fresh.node(level, i), "level {level} node {i}");
+            }
+        }
     }
 }

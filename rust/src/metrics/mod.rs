@@ -236,6 +236,12 @@ pub struct RunSummary {
     pub leaves_dirty: u64,
     /// Leaves matched clean and copied from the receiver's own data.
     pub leaves_clean: u64,
+    /// Delta files whose rolling scan the sender-side signature cache
+    /// skipped (its journaled record matched the receiver's basis).
+    pub delta_scans_skipped: u64,
+    /// Hash tier of the run (`fast` / `cryptographic` / `tiered`; empty
+    /// for summaries that predate tiering).
+    pub hash_tier: String,
     /// Concurrent sessions used (1 for the serial drivers).
     pub concurrency: usize,
     /// Per-session accounting (empty for the serial drivers).
@@ -281,6 +287,8 @@ impl RunSummary {
             bytes_skipped_delta: report.bytes_skipped_delta,
             leaves_dirty: report.leaves_dirty,
             leaves_clean: report.leaves_clean,
+            delta_scans_skipped: report.delta_scans_skipped,
+            hash_tier: report.hash_tier.clone(),
             concurrency,
             ..Default::default()
         }

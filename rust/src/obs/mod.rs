@@ -69,11 +69,15 @@ pub enum Stage {
     Submit,
     /// io_uring completion-queue drain for a submitted batch.
     Complete,
+    /// Merkle interior/root folding over finished leaf digests — the
+    /// cryptographic-tier cost under tiered hashing, split from leaf
+    /// [`Stage::Hash`] so reports show each tier's share.
+    TreeHash,
 }
 
 impl Stage {
     /// Number of stages.
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 12;
     /// All stages, in pipeline order.
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::Read,
@@ -87,6 +91,7 @@ impl Stage {
         Stage::Repair,
         Stage::Submit,
         Stage::Complete,
+        Stage::TreeHash,
     ];
 
     /// Short stage label used in traces and reports.
@@ -103,6 +108,7 @@ impl Stage {
             Stage::Repair => "repair",
             Stage::Submit => "submit",
             Stage::Complete => "complete",
+            Stage::TreeHash => "tree_hash",
         }
     }
 
@@ -360,7 +366,7 @@ fn busy_groups(busy: &[u64; Stage::COUNT]) -> [(&'static str, f64); 4] {
     let secs = |st: Stage| busy[st.index()] as f64 / 1e9;
     [
         ("read", secs(Stage::Read)),
-        ("hash", secs(Stage::Hash) + secs(Stage::QueueWait)),
+        ("hash", secs(Stage::Hash) + secs(Stage::QueueWait) + secs(Stage::TreeHash)),
         ("write", secs(Stage::Write) + secs(Stage::Journal)),
         ("net", secs(Stage::Send) + secs(Stage::Recv)),
     ]

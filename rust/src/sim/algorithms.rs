@@ -174,10 +174,12 @@ pub fn run_delta(tb: Testbed, params: AlgoParams, ds: &Dataset, cold_receiver: b
         dataset: ds.name.clone(),
         testbed: tb.name.to_string(),
         io_backend: params.io_backend.name().to_string(),
+        hash_tier: params.hash_tier.name().to_string(),
         concurrency: 1,
         ..Default::default()
     };
-    let dlen = params.hash.hasher().digest_len() as u64;
+    // Signature bytes on the wire follow the tier's leaf digest width.
+    let dlen = params.leaf_digest_len() as u64;
     // One handshake round trip covers the whole session's DeltaReq/Sig
     // exchange (the real engine batches every file into one connection).
     let hs = env.start_timer(env.params.control_rtts * tb.rtt);
@@ -233,6 +235,7 @@ pub fn run(
         dataset: ds.name.clone(),
         testbed: tb.name.to_string(),
         io_backend: params.io_backend.name().to_string(),
+        hash_tier: params.hash_tier.name().to_string(),
         concurrency: 1,
         ..Default::default()
     };
@@ -651,6 +654,7 @@ pub fn run_concurrent(
         dataset: ds.name.clone(),
         testbed: tb.name.to_string(),
         io_backend: params.io_backend.name().to_string(),
+        hash_tier: params.hash_tier.name().to_string(),
         concurrency: n,
         ..Default::default()
     };

@@ -125,10 +125,10 @@ impl SimEnv {
             net: sim.add_resource("net", tb.bandwidth),
             src_mem: sim.add_resource("src_mem", tb.src.mem_read),
             dst_mem: sim.add_resource("dst_mem", tb.dst.mem_read),
-            src_hash: sim.add_resource("src_hash", tb.src.hash_rate(params.hash) * w),
-            dst_hash: sim.add_resource("dst_hash", tb.dst.hash_rate(params.hash) * w),
-            src_pool: sim.add_resource("src_pool", pool_rate(tb.src.hash_rate(params.hash))),
-            dst_pool: sim.add_resource("dst_pool", pool_rate(tb.dst.hash_rate(params.hash))),
+            src_hash: sim.add_resource("src_hash", params.leaf_hash_rate(&tb.src) * w),
+            dst_hash: sim.add_resource("dst_hash", params.leaf_hash_rate(&tb.dst) * w),
+            src_pool: sim.add_resource("src_pool", pool_rate(params.leaf_hash_rate(&tb.src))),
+            dst_pool: sim.add_resource("dst_pool", pool_rate(params.leaf_hash_rate(&tb.dst))),
         };
         let obs = Recorder::from_env();
         let obs_shard = obs.shard("sim");

@@ -133,6 +133,15 @@ fn delta_rerun_ships_only_dirty_leaves() {
     );
     assert!(second.bytes_skipped_delta > 0, "clean leaves must be matched in place");
     assert!(second.leaves_clean > second.leaves_dirty);
+    // Every unrenamed file's run-1 journal record matches the receiver's
+    // basis pair-for-pair, so the sender skips its rolling scan and ships
+    // the mutated leaf as a literal off the cached path; the renamed file
+    // has no sender record under its new name yet.
+    assert_eq!(
+        second.delta_scans_skipped,
+        files as u64 - 1,
+        "sender signature cache serves every unrenamed file"
+    );
     assert_eq!(
         second.bytes_sent + second.bytes_skipped_delta,
         total,
@@ -154,6 +163,9 @@ fn delta_rerun_ships_only_dirty_leaves() {
     assert_eq!(third.bytes_sent, 0, "unchanged re-run ships nothing");
     assert_eq!(third.bytes_skipped_delta, total);
     assert_eq!(third.leaves_dirty, 0);
+    // Run 2 re-journaled every file (renamed one included) on the sender,
+    // so run 3 skips the rolling scan across the board.
+    assert_eq!(third.delta_scans_skipped, files as u64);
 }
 
 /// A receiver without a journal still serves a delta basis by hashing

@@ -9,7 +9,7 @@ use fiver::coordinator::queue::ByteQueue;
 use fiver::coordinator::session::run_local_transfer;
 use fiver::coordinator::{native_factory, protocol, RealAlgorithm, SessionConfig};
 use fiver::faults::{Fault, FaultPlan};
-use fiver::hashes::HashAlgorithm;
+use fiver::hashes::{HashAlgorithm, HashTier};
 use fiver::storage::MemStorage;
 use fiver::util::rng::SplitMix64;
 
@@ -209,6 +209,76 @@ fn merkle_repair_loop_converges_on_corrupted_repair() {
         report.bytes_resent
     );
     assert_eq!(report.bytes_reread, report.bytes_resent);
+}
+
+/// PROPERTY (tiered hashing): a single flipped bit at a random offset is
+/// always detected and *leaf-localized* by the tiered pipeline (XXH3-128
+/// leaves under the cryptographic Merkle root) — and the detection and
+/// repair accounting matches a pure-cryptographic run of the same seed
+/// exactly. The fast leaf tier must not change what gets caught or how
+/// much gets re-sent, only how fast the leaves hash.
+#[test]
+fn prop_tiered_detects_and_localizes_bit_flips() {
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed * 6151 + 0x71E6);
+        let size = rng.range(100_000, 1_200_000) as usize;
+        // Bias toward the edges (first/last leaf) — the risky spots.
+        let offset = match rng.below(4) {
+            0 => 0,
+            1 => size as u64 - 1,
+            _ => rng.below(size as u64),
+        };
+        let bit = rng.below(8) as u8;
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+
+        let run = |tier: HashTier| {
+            let faults = FaultPlan::at(0, offset, bit);
+            let src = MemStorage::new();
+            src.put("t", data.clone());
+            let dst = MemStorage::new();
+            let mut cfg = SessionConfig::new(
+                RealAlgorithm::FiverMerkle,
+                native_factory(HashAlgorithm::Sha1),
+            );
+            cfg.leaf_size = 32_768;
+            cfg.hash_tier = tier;
+            let (report, _) = run_local_transfer(
+                &["t".into()],
+                Arc::new(src),
+                Arc::new(dst.clone()),
+                &cfg,
+                &faults,
+            )
+            .unwrap_or_else(|e| panic!("seed {seed} ({}): {e:#}", tier.name()));
+            assert_eq!(
+                dst.get("t").unwrap(),
+                data,
+                "seed {seed} ({}): delivered bytes differ",
+                tier.name()
+            );
+            assert_eq!(
+                report.failures_detected, 1,
+                "seed {seed} ({}): bit flip at {offset} not detected",
+                tier.name()
+            );
+            // Leaf localization: one flipped bit repairs one leaf, never
+            // the whole file.
+            assert!(
+                report.bytes_resent <= cfg.leaf_size,
+                "seed {seed} ({}): resent {} > one leaf",
+                tier.name(),
+                report.bytes_resent
+            );
+            (report.failures_detected, report.repair_rounds, report.bytes_resent)
+        };
+        let tiered = run(HashTier::Tiered);
+        let crypto = run(HashTier::Cryptographic);
+        assert_eq!(
+            tiered, crypto,
+            "seed {seed}: tiered and cryptographic repair accounting must match"
+        );
+    }
 }
 
 /// PROPERTY: the queue preserves the exact byte stream (order + content)
